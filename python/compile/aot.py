@@ -1,0 +1,104 @@
+"""AOT pipeline: lower the Layer-2 graphs to HLO text artifacts.
+
+Run once at build time (``make artifacts``); the rust runtime discovers
+the outputs through ``artifacts/manifest.json``. Python never runs on the
+request path.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--profile default|test]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+
+# (name, n, p, group_size) shape specializations.
+#   test:    tiny shapes exercised by the rust integration tests
+#   default: the reduced-profile synthetic benchmark shapes + e2e shape
+PROFILES = {
+    "test": [
+        ("tiny", 8, 32, 4),
+    ],
+    "default": [
+        ("tiny", 8, 32, 4),
+        ("e2e", 100, 1000, 10),
+        ("synth_reduced", 250, 2000, 10),
+    ],
+    "full": [
+        ("tiny", 8, 32, 4),
+        ("e2e", 100, 1000, 10),
+        ("synth_reduced", 250, 2000, 10),
+        ("synth_full", 250, 10000, 10),
+    ],
+}
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts(shapes, out_dir):
+    """Lower every graph for every shape; return manifest entries."""
+    entries = []
+
+    def emit(name, kind, fn, args, n, p, group_size):
+        text = model.lower_to_hlo_text(fn, args)
+        fname = f"{kind}_{name}_n{n}_p{p}_g{group_size}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": f"{kind}_{name}",
+                "file": fname,
+                "kind": kind,
+                "n": n,
+                "p": p,
+                "group_size": group_size,
+            }
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    for name, n, p, gs in shapes:
+        xt = _spec((p, n))
+        o = _spec((n,))
+        emit(name, "tlfre_screen", model.tlfre_screen_graph(gs), (xt, o), n, p, gs)
+        emit(name, "dpc_screen", model.dpc_screen_graph(), (xt, o), n, p, 0)
+        emit(
+            name,
+            "fista_step",
+            model.fista_step_graph(gs),
+            (xt, _spec((n,)), _spec((p,)), _spec((p,)), _spec((4,))),
+            n,
+            p,
+            gs,
+        )
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profile", default="default", choices=sorted(PROFILES))
+    # Back-compat single-file mode used by early scaffolding.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    shapes = PROFILES[args.profile]
+    print(f"AOT lowering {len(shapes)} shape specializations -> {out_dir}")
+    entries = build_artifacts(shapes, out_dir)
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"manifest: {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

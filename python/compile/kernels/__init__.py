@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels for the TLFre hot spots.
+
+* ``screen``   — the fused screening sweep (X^T o + shrink + group norms).
+* ``sgl_prox`` — the exact SGL proximal operator.
+* ``ref``      — pure-jnp oracles for both.
+"""
+
+from . import ref  # noqa: F401
+from .screen import pick_block_p, screen  # noqa: F401
+from .sgl_prox import sgl_prox  # noqa: F401

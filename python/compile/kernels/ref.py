@@ -1,0 +1,80 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an oracle here; pytest + hypothesis sweep
+shapes/dtypes and assert_allclose the kernel against these. They are also
+the "L2 fallback" semantics: the lowered HLO must be numerically equivalent
+whether the Pallas kernel or the oracle is used.
+
+Layout convention (matches the rust runtime): the design matrix is passed
+as ``xt`` of shape ``(p, n)`` — the transpose of the usual ``(n, p)`` —
+because the rust side stores X column-major, which reinterprets zero-copy
+as row-major ``(p, n)``.
+"""
+
+import jax.numpy as jnp
+
+
+def shrink(w, gamma):
+    """The paper's shrinkage operator S_gamma (eq. (1))."""
+    return jnp.sign(w) * jnp.maximum(jnp.abs(w) - gamma, 0.0)
+
+
+def screen_ref(xt, o, group_size):
+    """Fused TLFre screening sweep (reference).
+
+    Args:
+      xt: (p, n) design matrix transpose.
+      o:  (n,) dual-estimate ball center.
+      group_size: uniform group size (p % group_size == 0).
+
+    Returns:
+      c:    (p,)  correlations X^T o.
+      gsn:  (G,)  per-group ||S_1(c_g)||^2.
+      gmax: (G,)  per-group ||c_g||_inf.
+    """
+    p = xt.shape[0]
+    assert p % group_size == 0
+    c = xt @ o
+    s = shrink(c, 1.0).reshape(-1, group_size)
+    gsn = jnp.sum(s * s, axis=1)
+    gmax = jnp.max(jnp.abs(c).reshape(-1, group_size), axis=1)
+    return c, gsn, gmax
+
+
+def matvec_t_ref(xt, v):
+    """c = X^T v (the DPC screening sweep)."""
+    return xt @ v
+
+
+def sgl_prox_ref(w, t_l1, t_l2w, group_size):
+    """Exact SGL prox per uniform group (reference).
+
+    prox_{t(l2w*||.||_2 + l1*||.||_1)} = group-soft-threshold(S_{t*l1}(w)).
+
+    Args:
+      w:      (p,) gradient-step point.
+      t_l1:   scalar, step * lambda2.
+      t_l2w:  scalar, step * lambda1 * sqrt(group_size).
+      group_size: uniform group size.
+    """
+    s = shrink(w, t_l1).reshape(-1, group_size)
+    norms = jnp.linalg.norm(s, axis=1, keepdims=True)
+    scale = jnp.where(norms > t_l2w, (norms - t_l2w) / jnp.maximum(norms, 1e-30), 0.0)
+    return (s * scale).reshape(-1)
+
+
+def fista_step_ref(xt, y, beta, z, t_k, step, lam1, lam2, group_size):
+    """One full FISTA iteration on the SGL problem (reference).
+
+    Returns (beta_new, z_new, t_next).
+    """
+    xz = jnp.einsum("pn,p->n", xt, z)
+    grad = xt @ (xz - y)
+    w = z - step * grad
+    beta_new = sgl_prox_ref(
+        w, step * lam2, step * lam1 * jnp.sqrt(float(group_size)), group_size
+    )
+    t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t_k * t_k))
+    omega = (t_k - 1.0) / t_next
+    z_new = beta_new + omega * (beta_new - beta)
+    return beta_new, z_new, t_next

@@ -1,0 +1,92 @@
+"""Layer-1 Pallas kernel: the fused TLFre screening sweep.
+
+One pass over the design matrix computes, per column block,
+
+    c      = X^T o            (the correlation sweep)
+    gsn_g  = ||S_1(c_g)||^2   (group shrink-norms, (L1) rule input)
+    gmax_g = ||c_g||_inf      (group sup-norms, Theorem 15 case split)
+
+fused so X is streamed exactly once. On TPU this is the HBM-bandwidth-bound
+schedule: column blocks of X tile into VMEM (BlockSpec over the p axis,
+block boundaries aligned to group boundaries so each group's reduction
+completes inside one block), the (block_p × n)·(n,) product runs on the
+MXU, and the shrink/square/segment-sum epilogue on the VPU. DESIGN.md §8
+carries the VMEM/roofline estimate.
+
+``interpret=True`` is required on CPU: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Numerics are validated
+against ``ref.screen_ref`` by pytest/hypothesis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _screen_kernel(x_ref, o_ref, c_ref, gsn_ref, gmax_ref, *, group_size):
+    """Kernel body for one (block_p, n) tile of X^T."""
+    xt = x_ref[...]                      # (block_p, n)
+    o = o_ref[...]                       # (n,)
+    c = xt @ o                           # (block_p,)  MXU
+    c_ref[...] = c
+    a = jnp.abs(c)
+    s = jnp.maximum(a - 1.0, 0.0)        # |S_1(c)| elementwise (VPU)
+    s2 = (s * s).reshape(-1, group_size)
+    gsn_ref[...] = jnp.sum(s2, axis=1)
+    gmax_ref[...] = jnp.max(a.reshape(-1, group_size), axis=1)
+
+
+def pick_block_p(p, group_size, target=1024):
+    """Largest group-aligned block size <= target that divides p."""
+    best = group_size
+    g_total = p // group_size
+    for k in range(1, g_total + 1):
+        bp = k * group_size
+        if p % bp == 0 and bp <= target:
+            best = bp
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "block_p"))
+def screen(xt, o, *, group_size, block_p=None):
+    """Fused screening sweep via the Pallas kernel.
+
+    Args:
+      xt: (p, n) float32 design-matrix transpose.
+      o:  (n,)  float32 ball center.
+      group_size: uniform group size dividing p.
+      block_p: columns-of-X per grid step (group-aligned); default
+        auto-picked for a ~1 MiB VMEM tile.
+
+    Returns:
+      (c, gsn, gmax) — see ``ref.screen_ref``.
+    """
+    p, n = xt.shape
+    assert p % group_size == 0, f"p={p} not divisible by group_size={group_size}"
+    if block_p is None:
+        block_p = pick_block_p(p, group_size)
+    assert p % block_p == 0 and block_p % group_size == 0
+    grid = (p // block_p,)
+    bg = block_p // group_size
+    kernel = functools.partial(_screen_kernel, group_size=group_size)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+            pl.BlockSpec((bg,), lambda i: (i,)),
+            pl.BlockSpec((bg,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((p // group_size,), jnp.float32),
+            jax.ShapeDtypeStruct((p // group_size,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xt, o)

@@ -1,0 +1,116 @@
+"""Layer-2 JAX compute graphs (build-time only — never on the request path).
+
+Each graph composes the Layer-1 Pallas kernels into the computation the
+rust coordinator offloads per path step:
+
+* ``tlfre_screen_graph`` — the fused screening sweep: given the staged
+  design matrix transpose and the Theorem-12 ball center, produce the
+  correlation vector and the per-group reductions the (L1)/(L2) rules
+  consume. This is the request-path hot spot.
+* ``dpc_screen_graph``  — the DPC sweep (correlations only).
+* ``fista_step_graph``  — one full-matrix FISTA iteration (gradient via
+  XLA dot ops + the Pallas prox kernel); the no-screening baseline's
+  inner loop, used by the e2e example and the L2 perf benches.
+
+All graphs are shape-specialized at lowering time by ``aot.py`` and
+exported as HLO text.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, screen, sgl_prox
+
+
+def tlfre_screen_graph(group_size):
+    """Build the screening graph for a fixed uniform group size.
+
+    Returns a function (xt(p,n), o(n,)) -> (c(p,), gsn(G,), gmax(G,)).
+    """
+
+    def fn(xt, o):
+        return screen(xt, o, group_size=group_size)
+
+    return fn
+
+
+def dpc_screen_graph():
+    """DPC sweep: (xt(p,n), o(n,)) -> (c(p,),)."""
+
+    def fn(xt, o):
+        # Reuse the fused kernel with trivial groups of 1 would waste the
+        # reduction outputs; a plain dot keeps the HLO minimal and XLA
+        # fuses it into a single sweep.
+        return (ref.matvec_t_ref(xt, o),)
+
+    return fn
+
+
+def fista_step_graph(group_size):
+    """One FISTA iteration on the full matrix.
+
+    Returns a function
+      (xt(p,n), y(n,), beta(p,), z(p,), scalars(4,)) ->
+          (beta_new(p,), z_new(p,), t_next(1,))
+    where scalars = [t_k, step, lambda1, lambda2].
+    """
+
+    def fn(xt, y, beta, z, scalars):
+        t_k = scalars[0]
+        step = scalars[1]
+        lam1 = scalars[2]
+        lam2 = scalars[3]
+        xz = jnp.einsum("pn,p->n", xt, z)
+        grad = xt @ (xz - y)
+        w = z - step * grad
+        beta_new = sgl_prox(
+            w,
+            step * lam2,
+            step * lam1 * jnp.sqrt(jnp.float32(group_size)),
+            group_size=group_size,
+        )
+        t_next = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t_k * t_k))
+        omega = (t_k - 1.0) / t_next
+        z_new = beta_new + omega * (beta_new - beta)
+        return beta_new, z_new, jnp.reshape(t_next, (1,))
+
+    return fn
+
+
+def objective_graph(group_size):
+    """SGL primal objective (diagnostics graph used by tests).
+
+    (xt, y, beta, scalars[lam1, lam2]) -> (obj(1,),)
+    """
+
+    def fn(xt, y, beta, scalars):
+        lam1 = scalars[0]
+        lam2 = scalars[1]
+        r = y - jnp.einsum("pn,p->n", xt, beta)
+        loss = 0.5 * jnp.sum(r * r)
+        bg = beta.reshape(-1, group_size)
+        gp = jnp.sum(jnp.sqrt(jnp.sum(bg * bg, axis=1))) * jnp.sqrt(
+            jnp.float32(group_size)
+        )
+        l1 = jnp.sum(jnp.abs(beta))
+        return (jnp.reshape(loss + lam1 * gp + lam2 * l1, (1,)),)
+
+    return fn
+
+
+def lower_to_hlo_text(fn, example_args):
+    """Lower a jitted function to HLO text (the rust interchange format).
+
+    jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+    crate's XLA (xla_extension 0.5.1) rejects; HLO *text* round-trips
+    because the parser reassigns ids. ``return_tuple=True`` so the rust
+    side always unwraps a tuple.
+    """
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,107 @@
+"""Pallas kernels vs pure-jnp oracles, swept with hypothesis."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pick_block_p, ref, screen, sgl_prox
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+
+def rand_arrays(seed, p, n):
+    rng = np.random.default_rng(seed)
+    xt = rng.normal(scale=1.5, size=(p, n)).astype(np.float32)
+    o = rng.normal(size=(n,)).astype(np.float32)
+    return xt, o
+
+
+@given(
+    n=st.integers(1, 24),
+    g_total=st.integers(1, 12),
+    gs=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_screen_matches_ref(n, g_total, gs, seed):
+    p = g_total * gs
+    xt, o = rand_arrays(seed, p, n)
+    c, gsn, gmax = screen(xt, o, group_size=gs)
+    cr, gsnr, gmaxr = ref.screen_ref(xt, o, gs)
+    np.testing.assert_allclose(c, cr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gsn, gsnr, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gmax, gmaxr, rtol=1e-5, atol=1e-6)
+
+
+@given(
+    g_total=st.integers(2, 10),
+    gs=st.integers(1, 6),
+    block_groups=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_screen_block_size_invariance(g_total, gs, block_groups, seed):
+    """The result must not depend on the BlockSpec tiling."""
+    from hypothesis import assume
+
+    p = g_total * gs
+    bp = block_groups * gs
+    assume(p % bp == 0)
+    xt, o = rand_arrays(seed, p, 8)
+    a = screen(xt, o, group_size=gs)
+    b = screen(xt, o, group_size=gs, block_p=bp)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x, y, rtol=1e-6, atol=1e-6)
+
+
+@given(
+    g_total=st.integers(1, 16),
+    gs=st.integers(1, 8),
+    t_l1=st.floats(0.0, 2.0),
+    t_l2w=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_sgl_prox_matches_ref(g_total, gs, t_l1, t_l2w, seed):
+    p = g_total * gs
+    rng = np.random.default_rng(seed)
+    w = rng.normal(scale=2.0, size=(p,)).astype(np.float32)
+    k = sgl_prox(w, t_l1, t_l2w, group_size=gs)
+    r = ref.sgl_prox_ref(w, t_l1, t_l2w, gs)
+    np.testing.assert_allclose(k, r, rtol=1e-5, atol=1e-6)
+
+
+def test_prox_zero_thresholds_is_identity():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(24,)).astype(np.float32)
+    out = sgl_prox(w, 0.0, 0.0, group_size=4)
+    np.testing.assert_allclose(out, w, rtol=1e-6)
+
+
+def test_prox_huge_threshold_zeroes():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(24,)).astype(np.float32)
+    out = np.asarray(sgl_prox(w, 100.0, 0.0, group_size=4))
+    assert np.all(out == 0.0)
+    out2 = np.asarray(sgl_prox(w, 0.0, 100.0, group_size=4))
+    assert np.all(out2 == 0.0)
+
+
+def test_pick_block_p_properties():
+    for p, gs in [(10000, 10), (32, 4), (1000, 10), (7 * 3, 3)]:
+        bp = pick_block_p(p, gs)
+        assert p % bp == 0
+        assert bp % gs == 0
+        assert bp <= max(1024, gs)
+
+
+def test_screen_decomposition_property():
+    """Remark 2: xi = P_Binf(xi) + S_1(xi), parts in the right sets."""
+    rng = np.random.default_rng(2)
+    xi = rng.normal(scale=2.0, size=(64,)).astype(np.float32)
+    s = np.asarray(ref.shrink(xi, 1.0))
+    proj = xi - s
+    assert np.all(np.abs(proj) <= 1.0 + 1e-6)  # P_Binf part in the box
+    np.testing.assert_allclose(proj + s, xi, rtol=1e-6)
+    # shrink moves toward zero and never overshoots
+    assert np.all(np.abs(s) <= np.abs(xi) + 1e-6)

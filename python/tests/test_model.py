@@ -1,0 +1,142 @@
+"""Layer-2 graph tests: FISTA-step convergence, screening-graph semantics,
+and numpy cross-checks independent of jax."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_problem(seed, n=12, p=40, gs=4):
+    rng = np.random.default_rng(seed)
+    xt = rng.normal(size=(p, n)).astype(np.float32)
+    beta_true = np.zeros(p, dtype=np.float32)
+    beta_true[rng.choice(p, size=4, replace=False)] = rng.normal(size=4)
+    y = (xt.T @ beta_true + 0.01 * rng.normal(size=n)).astype(np.float32)
+    return xt, y, gs
+
+
+def np_objective(xt, y, beta, lam1, lam2, gs):
+    r = y - xt.T @ beta
+    group_norms = np.linalg.norm(beta.reshape(-1, gs), axis=1)
+    return (
+        0.5 * float(r @ r)
+        + lam1 * np.sqrt(gs) * float(group_norms.sum())
+        + lam2 * float(np.abs(beta).sum())
+    )
+
+
+def test_fista_step_graph_converges():
+    xt, y, gs = make_problem(0)
+    p, n = xt.shape
+    step_fn = model.fista_step_graph(gs)
+    lip = float(np.linalg.norm(xt.T @ xt, 2)) * 1.01
+    lam1 = lam2 = 0.05
+    beta = np.zeros(p, dtype=np.float32)
+    z = beta.copy()
+    t_k = 1.0
+    objs = [np_objective(xt, y, beta, lam1, lam2, gs)]
+    for _ in range(200):
+        scalars = np.array([t_k, 1.0 / lip, lam1, lam2], dtype=np.float32)
+        beta, z, t_next = step_fn(xt, y, beta, z, scalars)
+        beta, z = np.asarray(beta), np.asarray(z)
+        t_k = float(np.asarray(t_next)[0])
+        objs.append(np_objective(xt, y, beta, lam1, lam2, gs))
+    assert objs[-1] < objs[0]
+    # FISTA is non-monotone (momentum), but after 200 steps the final
+    # objective must be within a whisker of the best seen.
+    assert objs[-1] <= min(objs) * 1.001 + 1e-6
+
+    # KKT check: active features satisfy |x^T r| boundary conditions loosely
+    r = y - xt.T @ beta
+    c = xt @ r
+    for j in range(p):
+        if abs(beta[j]) < 1e-7:
+            continue
+        g = j // gs
+        seg = beta[g * gs : (g + 1) * gs]
+        expect = lam1 * np.sqrt(gs) * beta[j] / np.linalg.norm(seg) + lam2 * np.sign(beta[j])
+        assert abs(c[j] - expect) < 5e-2, f"KKT residual at {j}: {c[j]} vs {expect}"
+
+
+def test_fista_step_matches_pure_ref():
+    xt, y, gs = make_problem(1)
+    p, n = xt.shape
+    step_fn = model.fista_step_graph(gs)
+    rng = np.random.default_rng(3)
+    beta = rng.normal(size=p).astype(np.float32)
+    z = rng.normal(size=p).astype(np.float32)
+    scalars = np.array([1.7, 0.01, 0.3, 0.2], dtype=np.float32)
+    b1, z1, t1 = step_fn(xt, y, beta, z, scalars)
+    b2, z2, t2 = ref.fista_step_ref(xt, y, beta, z, 1.7, 0.01, 0.3, 0.2, gs)
+    np.testing.assert_allclose(b1, b2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(z1, z2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(t1)[0], t2, rtol=1e-6)
+
+
+def test_screen_graph_numpy_crosscheck():
+    """The L2 screen graph must agree with a from-scratch numpy version."""
+    xt, y, gs = make_problem(2)
+    rng = np.random.default_rng(4)
+    o = rng.normal(size=xt.shape[1]).astype(np.float32)
+    fn = model.tlfre_screen_graph(gs)
+    c, gsn, gmax = (np.asarray(v) for v in fn(xt, o))
+    c_np = xt.astype(np.float64) @ o.astype(np.float64)
+    s_np = np.sign(c_np) * np.maximum(np.abs(c_np) - 1.0, 0.0)
+    gsn_np = (s_np.reshape(-1, gs) ** 2).sum(axis=1)
+    gmax_np = np.abs(c_np).reshape(-1, gs).max(axis=1)
+    np.testing.assert_allclose(c, c_np, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gsn, gsn_np, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gmax, gmax_np, rtol=1e-4, atol=1e-5)
+
+
+def test_dpc_graph_is_matvec():
+    xt, y, gs = make_problem(3)
+    rng = np.random.default_rng(5)
+    o = rng.normal(size=xt.shape[1]).astype(np.float32)
+    (c,) = model.dpc_screen_graph()(xt, o)
+    np.testing.assert_allclose(np.asarray(c), xt @ o, rtol=1e-5, atol=1e-5)
+
+
+def test_objective_graph_matches_numpy():
+    xt, y, gs = make_problem(4)
+    rng = np.random.default_rng(6)
+    beta = rng.normal(size=xt.shape[0]).astype(np.float32)
+    (obj,) = model.objective_graph(gs)(xt, y, beta, np.array([0.3, 0.7], np.float32))
+    want = np_objective(xt, y, beta, 0.3, 0.7, gs)
+    assert abs(float(np.asarray(obj)[0]) - want) < 1e-2 * (1.0 + abs(want))
+
+
+def test_lowering_produces_parseable_hlo():
+    import jax
+
+    xt = jax.ShapeDtypeStruct((32, 8), np.float32)
+    o = jax.ShapeDtypeStruct((8,), np.float32)
+    text = model.lower_to_hlo_text(model.tlfre_screen_graph(4), (xt, o))
+    assert "HloModule" in text
+    assert "f32[32,8]" in text
+    # return_tuple=True => tuple root
+    assert "(f32[32]" in text
+
+
+def test_lowered_hlo_matches_eager():
+    """Execute the lowered computation through jax's own runtime and compare
+    with eager execution — validates the AOT path end to end on the python
+    side (the rust side has its own integration test)."""
+    import jax
+    from jax._src.lib import xla_client as xc
+
+    rng = np.random.default_rng(7)
+    xt = rng.normal(size=(32, 8)).astype(np.float32)
+    o = rng.normal(size=(8,)).astype(np.float32)
+    fn = model.tlfre_screen_graph(4)
+    eager = [np.asarray(v) for v in fn(xt, o)]
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct(xt.shape, xt.dtype), jax.ShapeDtypeStruct(o.shape, o.dtype)
+    )
+    compiled = lowered.compile()
+    out = [np.asarray(v) for v in compiled(xt, o)]
+    for a, b in zip(eager, out):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)

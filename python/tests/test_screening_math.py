@@ -1,0 +1,160 @@
+"""Cross-language validation of the screening mathematics in pure numpy.
+
+Independent re-derivation of λmax (Lemma 9), the Theorem 12 ball, the
+Theorem 15 closed form and the (L1)/(L2) rules — then the safety property
+is asserted against a from-scratch numpy proximal-gradient SGL solver.
+This duplicates (on purpose) what the rust test suite proves, guarding
+against a shared-misreading of the paper between the two implementations.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+
+# ---------------------------------------------------------------------------
+# numpy reference implementation (no jax)
+
+def shrink(w, g):
+    return np.sign(w) * np.maximum(np.abs(w) - g, 0.0)
+
+
+def sgl_prox(v, t_l1, t_l2w, gs):
+    s = shrink(v, t_l1).reshape(-1, gs)
+    nrm = np.linalg.norm(s, axis=1, keepdims=True)
+    scale = np.where(nrm > t_l2w, (nrm - t_l2w) / np.maximum(nrm, 1e-300), 0.0)
+    return (s * scale).reshape(-1)
+
+
+def solve_sgl(x, y, lam1, lam2, gs, iters=6000):
+    """Plain proximal gradient (slow, exact enough for tiny problems)."""
+    n, p = x.shape
+    lip = np.linalg.norm(x, 2) ** 2
+    beta = np.zeros(p)
+    step = 1.0 / lip
+    for _ in range(iters):
+        grad = x.T @ (x @ beta - y)
+        beta = sgl_prox(beta - step * grad, step * lam2, step * lam1 * np.sqrt(gs), gs)
+    return beta
+
+
+def rho_group(z_desc, alpha, n_g):
+    """Bisection on ||S_1(z/rho)|| = alpha*sqrt(n_g)."""
+    a2n = alpha * alpha * n_g
+    f = lambda rho: float(np.sum(np.maximum(z_desc / rho - 1.0, 0.0) ** 2)) - a2n
+    hi = float(z_desc[0])
+    lo = hi / 2
+    while f(lo) <= 0:
+        lo /= 2
+        if lo < 1e-280:
+            return 0.0
+    for _ in range(200):
+        mid = (lo + hi) / 2
+        if f(mid) > 0:
+            lo = mid
+        else:
+            hi = mid
+    return (lo + hi) / 2
+
+
+def lambda_max(x, y, alpha, gs):
+    c = x.T @ y
+    rhos = []
+    for g in range(x.shape[1] // gs):
+        z = np.sort(np.abs(c[g * gs : (g + 1) * gs]))[::-1]
+        rhos.append(rho_group(z, alpha, gs) if z[0] > 0 else 0.0)
+    return max(rhos), int(np.argmax(rhos)), c
+
+
+def tlfre_screen(x, y, alpha, lam, lam_bar, beta_bar, lmax, gstar, gs):
+    """Theorem 17 in numpy. Returns keep mask."""
+    n, p = x.shape
+    theta_bar = (y - x @ beta_bar) / lam_bar
+    if lam_bar >= lmax * (1 - 1e-12):
+        cg = x[:, gstar * gs : (gstar + 1) * gs].T @ (y / lmax)
+        nvec = x[:, gstar * gs : (gstar + 1) * gs] @ shrink(cg, 1.0)
+    else:
+        nvec = y / lam_bar - theta_bar
+    v = y / lam - theta_bar
+    nn = float(nvec @ nvec)
+    vperp = v - (float(v @ nvec) / nn) * nvec if nn > 1e-30 else v
+    o = theta_bar + 0.5 * vperp
+    radius = 0.5 * float(np.linalg.norm(vperp))
+    c = x.T @ o
+    keep = np.ones(p, dtype=bool)
+    col_norms = np.linalg.norm(x, axis=0)
+    for g in range(p // gs):
+        seg = c[g * gs : (g + 1) * gs]
+        rg = radius * np.linalg.norm(x[:, g * gs : (g + 1) * gs], 2)
+        cinf = float(np.max(np.abs(seg)))
+        if cinf > 1.0:
+            s_star = float(np.linalg.norm(shrink(seg, 1.0))) + rg
+        else:
+            s_star = max(cinf + rg - 1.0, 0.0)
+        if s_star < alpha * np.sqrt(gs):
+            keep[g * gs : (g + 1) * gs] = False
+        else:
+            for j in range(g * gs, (g + 1) * gs):
+                if abs(c[j]) + radius * col_norms[j] <= 1.0:
+                    keep[j] = False
+    return keep
+
+
+# ---------------------------------------------------------------------------
+
+def make_problem(seed, n=15, p=24, gs=4):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, p))
+    beta = np.zeros(p)
+    beta[rng.choice(p, size=3, replace=False)] = rng.normal(size=3)
+    y = x @ beta + 0.01 * rng.normal(size=n)
+    return x, y, gs
+
+
+@given(seed=st.integers(0, 10_000), alpha=st.floats(0.2, 3.0))
+@settings(max_examples=15, deadline=None)
+def test_lambda_max_boundary(seed, alpha):
+    x, y, gs = make_problem(seed)
+    lmax, gstar, c = lambda_max(x, y, alpha, gs)
+    # at lambda just above lmax the solution is 0
+    b = solve_sgl(x, y, alpha * lmax * 1.01, lmax * 1.01, gs, iters=3000)
+    assert np.all(b == 0.0), f"nonzero at lambda > lmax: {np.abs(b).max()}"
+    # just below, nonzero
+    b2 = solve_sgl(x, y, alpha * lmax * 0.97, lmax * 0.97, gs, iters=3000)
+    assert np.any(b2 != 0.0)
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    alpha=st.floats(0.3, 2.5),
+    frac1=st.floats(0.55, 0.98),
+    ratio=st.floats(0.5, 0.95),
+)
+@settings(max_examples=15, deadline=None)
+def test_tlfre_safety_numpy(seed, alpha, frac1, ratio):
+    """The central claim, fully in numpy: screened => zero at optimum."""
+    x, y, gs = make_problem(seed)
+    lmax, gstar, _ = lambda_max(x, y, alpha, gs)
+    if lmax <= 0:
+        pytest.skip("degenerate problem")
+    lam1 = lmax * frac1
+    lam2 = lam1 * ratio
+    beta1 = solve_sgl(x, y, alpha * lam1, lam1, gs)
+    keep = tlfre_screen(x, y, alpha, lam2, lam1, beta1, lmax, gstar, gs)
+    beta2 = solve_sgl(x, y, alpha * lam2, lam2, gs)
+    for j in range(x.shape[1]):
+        if not keep[j]:
+            assert abs(beta2[j]) < 1e-6, (
+                f"seed={seed} alpha={alpha}: feature {j} screened, beta={beta2[j]}"
+            )
+
+
+def test_screening_from_lambda_max_rejects_everything_near_boundary():
+    x, y, gs = make_problem(123)
+    alpha = 1.0
+    lmax, gstar, _ = lambda_max(x, y, alpha, gs)
+    keep = tlfre_screen(
+        x, y, alpha, lmax * 0.995, lmax, np.zeros(x.shape[1]), lmax, gstar, gs
+    )
+    # extremely close to lambda_max, only (at most) the argmax group survives
+    assert keep.sum() <= gs, f"{keep.sum()} survivors"

@@ -1,0 +1,58 @@
+//! Figures 1 and 2 — TLFre rejection-ratio series (r₁ stacked with r₂ per
+//! λ) on Synthetic 1 and Synthetic 2, one panel per α, plus the λ₁^max(λ₂)
+//! boundary curve of the upper-left panels (Corollary 10).
+
+use tlfre::bench_harness::tables::{render_rejection_series, series_to_json};
+use tlfre::bench_harness::BenchArgs;
+use tlfre::coordinator::{run_tlfre_path, PathConfig};
+use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
+use tlfre::screening::lambda_max::lambda1_max;
+use tlfre::sgl::SglProblem;
+use tlfre::util::json::Json;
+
+fn main() {
+    tlfre::util::logger::init();
+    let args = BenchArgs::from_env();
+    let (n, p, g) = args.synthetic_dims();
+    let alphas = args.alphas();
+    let labels = args.alpha_labels();
+
+    let mut report = Json::obj().set("bench", "fig1_2");
+    for (fig, spec) in [
+        ("Figure 1", SyntheticSpec::synthetic1_scaled(n, p, g)),
+        ("Figure 2", SyntheticSpec::synthetic2_scaled(n, p, g)),
+    ] {
+        let ds = generate_synthetic(&spec, args.seed);
+        println!("==== {fig}: {} ====", ds.describe());
+
+        // Upper-left panel: the λ₁max(λ₂) boundary (Corollary 10).
+        let prob = SglProblem::new(&ds.x, &ds.y, &ds.groups);
+        println!("λ₁^max(λ₂) boundary (Corollary 10):");
+        let l2max = {
+            let mut c = vec![0.0f32; ds.p()];
+            ds.x.matvec_t(&ds.y, &mut c);
+            c.iter().fold(0.0f64, |m, &v| m.max((v as f64).abs()))
+        };
+        for k in 0..=8 {
+            let l2 = l2max * k as f64 / 8.0;
+            println!("  λ₂ = {l2:9.3} → λ₁max = {:9.3}", lambda1_max(&prob, l2));
+        }
+
+        let mut fig_json = Json::obj();
+        for (alpha, label) in alphas.iter().zip(&labels) {
+            let cfg = PathConfig {
+                alpha: *alpha,
+                n_lambda: args.n_lambda(),
+                lambda_min_ratio: 0.01,
+                tol: 1e-5,
+                max_iter: 3000,
+                ..Default::default()
+            };
+            let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+            println!("{}", render_rejection_series(&format!("{} α={label}", ds.name), &out));
+            fig_json = fig_json.set(label, series_to_json(&out));
+        }
+        report = report.set(fig, fig_json);
+    }
+    args.maybe_write_json(&report);
+}

@@ -1,0 +1,57 @@
+//! Figures 3 and 4 — TLFre rejection-ratio series on the (simulated) ADNI
+//! data set with GMV (Fig. 3) and WMV (Fig. 4) responses, plus the
+//! Corollary-10 boundary panel.
+
+use tlfre::bench_harness::tables::{render_rejection_series, series_to_json};
+use tlfre::bench_harness::BenchArgs;
+use tlfre::coordinator::{run_tlfre_path, PathConfig};
+use tlfre::data::registry::RealDataset;
+use tlfre::screening::lambda_max::lambda1_max;
+use tlfre::sgl::SglProblem;
+use tlfre::util::json::Json;
+
+fn main() {
+    tlfre::util::logger::init();
+    let mut args = BenchArgs::from_env();
+    if args.scale.is_none() && !args.full {
+        args.scale = Some(0.005);
+    }
+    if args.n_lambda.is_none() && !args.full {
+        args.n_lambda = Some(30);
+    }
+    let alphas = args.alphas();
+    let labels = args.alpha_labels();
+
+    let mut report = Json::obj().set("bench", "fig3_4");
+    for (fig, set) in [("Figure 3", RealDataset::AdniGmv), ("Figure 4", RealDataset::AdniWmv)] {
+        let ds = set.generate(args.scale(), args.seed);
+        println!("==== {fig}: {} ====", ds.describe());
+        let prob = SglProblem::new(&ds.x, &ds.y, &ds.groups);
+        println!("λ₁^max(λ₂) boundary (Corollary 10):");
+        let l2max = {
+            let mut c = vec![0.0f32; ds.p()];
+            ds.x.matvec_t(&ds.y, &mut c);
+            c.iter().fold(0.0f64, |m, &v| m.max((v as f64).abs()))
+        };
+        for k in 0..=6 {
+            let l2 = l2max * k as f64 / 6.0;
+            println!("  λ₂ = {l2:9.3} → λ₁max = {:9.3}", lambda1_max(&prob, l2));
+        }
+        let mut fig_json = Json::obj();
+        for (alpha, label) in alphas.iter().zip(&labels) {
+            let cfg = PathConfig {
+                alpha: *alpha,
+                n_lambda: args.n_lambda(),
+                lambda_min_ratio: 0.01,
+                tol: 1e-4,
+                max_iter: 2500,
+                ..Default::default()
+            };
+            let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+            println!("{}", render_rejection_series(&format!("{} α={label}", ds.name), &out));
+            fig_json = fig_json.set(label, series_to_json(&out));
+        }
+        report = report.set(fig, fig_json);
+    }
+    args.maybe_write_json(&report);
+}

@@ -1,0 +1,70 @@
+//! Figure 5 — DPC rejection-ratio series on the eight data sets
+//! (Synthetic 1/2 + six simulated real sets).
+
+use tlfre::bench_harness::tables::render_dpc_series;
+use tlfre::bench_harness::BenchArgs;
+use tlfre::coordinator::{run_dpc_path, DpcPathConfig};
+use tlfre::data::registry::RealDataset;
+use tlfre::data::synthetic::SyntheticSpec;
+use tlfre::data::Dataset;
+use tlfre::util::json::Json;
+use tlfre::util::Rng;
+
+fn nonneg_synthetic(spec: &SyntheticSpec, seed: u64) -> Dataset {
+    let mut ds = tlfre::data::synthetic::generate_synthetic(spec, seed);
+    let mut rng = Rng::seed_from_u64(seed ^ 0x99);
+    let p = ds.p();
+    let mut beta = vec![0.0f32; p];
+    for &j in &rng.sample_indices(p, p / 10) {
+        beta[j] = rng.gaussian().abs() as f32;
+    }
+    let mut y = vec![0.0f32; ds.n()];
+    ds.x.matvec(&beta, &mut y);
+    for v in y.iter_mut() {
+        *v += (0.01 * rng.gaussian()) as f32;
+    }
+    ds.y = y;
+    ds
+}
+
+fn main() {
+    tlfre::util::logger::init();
+    let args = BenchArgs::from_env();
+    let (n, p, g) = args.synthetic_dims();
+    let mut sets: Vec<(Dataset, usize)> = vec![
+        (nonneg_synthetic(&SyntheticSpec::synthetic1_scaled(n, p, g), args.seed), 50),
+        (nonneg_synthetic(&SyntheticSpec::synthetic2_scaled(n, p, g), args.seed), 50),
+    ];
+    for set in RealDataset::dpc_sets() {
+        let nl = match set {
+            RealDataset::Svhn => 15,
+            RealDataset::Pie | RealDataset::Mnist => 30,
+            _ => 50,
+        };
+        sets.push((set.generate(args.scale(), args.seed), nl));
+    }
+    let mut report = Json::obj().set("bench", "fig5");
+    for (ds, nl_default) in sets {
+        let nl = if args.full { 100 } else { args.n_lambda.unwrap_or(nl_default) };
+        let cfg = DpcPathConfig {
+            n_lambda: nl,
+            lambda_min_ratio: if args.full { 0.01 } else { 0.1 },
+            tol: 1e-4,
+            max_iter: 2000,
+            ..Default::default()
+        };
+        let out = run_dpc_path(&ds.x, &ds.y, &cfg);
+        println!("{}", render_dpc_series(&ds.name, &out));
+        report = report.set(
+            &ds.name,
+            Json::obj()
+                .set("mean_rejection", out.mean_rejection())
+                .set("lambda_max", out.lambda_max)
+                .set(
+                    "rejection",
+                    out.steps.iter().map(|s| s.rejection).collect::<Vec<_>>(),
+                ),
+        );
+    }
+    args.maybe_write_json(&report);
+}

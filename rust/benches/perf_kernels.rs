@@ -1,0 +1,119 @@
+//! Performance microbenches for the §Perf pass (EXPERIMENTS.md):
+//!
+//! * the L3 screening sweep — fused single-pass vs naive two-pass,
+//!   plus effective memory bandwidth;
+//! * the dot-product kernel — unrolled vs naive (the before/after of the
+//!   L3 hot-loop optimization);
+//! * the XLA engine sweep vs the native sweep (runtime dispatch overhead);
+//! * FISTA vs BCD on a reduced problem (solver ablation).
+
+use tlfre::bench_harness::BenchArgs;
+use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
+use tlfre::linalg::ops;
+use tlfre::prox::shrink_norm_sq;
+use tlfre::screening::tlfre::{apply_rules, TlfreContext};
+use tlfre::sgl::bcd::{solve_bcd, BcdOptions};
+use tlfre::sgl::{solve_fista, FistaOptions, SglParams, SglProblem};
+use tlfre::screening::lambda_max::sgl_lambda_max;
+use tlfre::util::harness::{bench, black_box, BenchConfig};
+use tlfre::util::Rng;
+
+fn naive_dot(a: &[f32], b: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for i in 0..a.len() {
+        s += (a[i] * b[i]) as f64;
+    }
+    s
+}
+
+fn main() {
+    tlfre::util::logger::init();
+    let args = BenchArgs::from_env();
+    let (n, p, g) = args.synthetic_dims();
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(n, p, g), args.seed);
+    let prob = SglProblem::new(&ds.x, &ds.y, &ds.groups);
+    let cfg = BenchConfig { warmup: 2, runs: 10, max_seconds: 60.0 };
+
+    println!("== dot kernel (length {n}) ==");
+    let mut rng = Rng::seed_from_u64(1);
+    let a: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+    let reps = 200_000;
+    for (label, f) in [
+        ("naive", &naive_dot as &dyn Fn(&[f32], &[f32]) -> f64),
+        ("unrolled-f64", &(|x: &[f32], y: &[f32]| ops::dot(x, y)) as &dyn Fn(&[f32], &[f32]) -> f64),
+        ("unrolled-f32", &(|x: &[f32], y: &[f32]| ops::dot_f32(x, y) as f64) as &dyn Fn(&[f32], &[f32]) -> f64),
+    ] {
+        let r = bench(label, &cfg, || {
+            let mut acc = 0.0f64;
+            for _ in 0..reps {
+                acc += f(black_box(&a), black_box(&b));
+            }
+            black_box(acc);
+        });
+        let flops = 2.0 * n as f64 * reps as f64 / r.seconds.median;
+        println!("  {:14} {:8.2} ms   {:6.2} Gflop/s", r.label, r.seconds.median * 1e3, flops / 1e9);
+    }
+
+    println!("\n== screening sweep (X {n}×{p}) ==");
+    let o: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+    let mut c = vec![0.0f32; p];
+    // (a) two-pass: full matvec_t, then separate group reductions
+    let two_pass = bench("two-pass", &cfg, || {
+        prob.x.matvec_t(black_box(&o), &mut c);
+        let mut acc = 0.0f64;
+        for (gi, s, e) in prob.groups.iter() {
+            acc += shrink_norm_sq(&c[s..e], 1.0) + gi as f64;
+        }
+        black_box(acc);
+    });
+    // (b) fused rule application (what the coordinator runs)
+    let ctx = TlfreContext::precompute(&prob);
+    let fused = bench("fused rules", &cfg, || {
+        prob.x.matvec_t(black_box(&o), &mut c);
+        black_box(apply_rules(&prob, 1.0, &c, 0.1, &ctx));
+    });
+    let bytes = (n * p * 4) as f64;
+    for r in [&two_pass, &fused] {
+        println!(
+            "  {:14} {:8.2} ms   {:6.2} GB/s effective",
+            r.label,
+            r.seconds.median * 1e3,
+            bytes / r.seconds.median / 1e9
+        );
+    }
+
+    // XLA engine sweep (if artifacts are available for this shape).
+    if let Ok(manifest) = tlfre::runtime::ArtifactManifest::load(&tlfre::runtime::artifacts_dir()) {
+        if manifest.find("tlfre_screen", n, p).is_some() {
+            let mut rt = tlfre::runtime::Runtime::cpu().expect("pjrt");
+            let engine =
+                tlfre::runtime::ScreenEngine::for_matrix(&mut rt, &manifest, &ds.x).expect("engine");
+            let r = bench("xla engine", &cfg, || {
+                black_box(engine.run(&rt, black_box(&o)).expect("run"));
+            });
+            println!(
+                "  {:14} {:8.2} ms   {:6.2} GB/s effective (PJRT dispatch included)",
+                r.label,
+                r.seconds.median * 1e3,
+                bytes / r.seconds.median / 1e9
+            );
+        } else {
+            println!("  (no tlfre_screen artifact for {n}×{p}; run `make artifacts`)");
+        }
+    }
+
+    println!("\n== solver ablation (single λ, reduced-size problem) ==");
+    let small = generate_synthetic(&SyntheticSpec::synthetic1_scaled(100, 500, 50), args.seed);
+    let sp = SglProblem::new(&small.x, &small.y, &small.groups);
+    let lmax = sgl_lambda_max(&sp, 1.0);
+    let params = SglParams::from_alpha_lambda(1.0, 0.2 * lmax.lambda_max);
+    let scfg = BenchConfig { warmup: 1, runs: 5, max_seconds: 60.0 };
+    let rf = bench("fista", &scfg, || {
+        black_box(solve_fista(&sp, &params, None, &FistaOptions { tol: 1e-6, ..Default::default() }));
+    });
+    let rb = bench("bcd", &scfg, || {
+        black_box(solve_bcd(&sp, &params, None, &BcdOptions { tol: 1e-6, ..Default::default() }));
+    });
+    println!("  fista {:8.2} ms   bcd {:8.2} ms", rf.seconds.median * 1e3, rb.seconds.median * 1e3);
+}

@@ -1,0 +1,59 @@
+//! Table 1 — running time for solving SGL along the λ path on Synthetic 1
+//! and Synthetic 2, by (a) the solver without screening, (b) TLFre alone,
+//! (c) TLFre + solver, plus the speedup row. Columns are the paper's α
+//! grid (`tan ψ`).
+//!
+//! Default profile: 250×2000 (1/5 width), 3 α values, 50 λ points.
+//! `cargo bench --bench table1_synthetic -- --full` reproduces the paper's
+//! exact 250×10000 / 7 α / 100 λ grid (hours on one core).
+
+use tlfre::bench_harness::tables::{render_speedup_table, speedup_to_json, SpeedupColumn};
+use tlfre::bench_harness::BenchArgs;
+use tlfre::coordinator::{run_baseline_path, run_tlfre_path, PathConfig};
+use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
+use tlfre::util::json::Json;
+
+fn main() {
+    tlfre::util::logger::init();
+    let args = BenchArgs::from_env();
+    let (n, p, g) = args.synthetic_dims();
+    let alphas = args.alphas();
+    let labels = args.alpha_labels();
+
+    let mut report = Json::obj().set("bench", "table1");
+    for spec in [
+        SyntheticSpec::synthetic1_scaled(n, p, g),
+        SyntheticSpec::synthetic2_scaled(n, p, g),
+    ] {
+        let ds = generate_synthetic(&spec, args.seed);
+        eprintln!("[table1] {}", ds.describe());
+        let mut cols = Vec::new();
+        for (alpha, label) in alphas.iter().zip(&labels) {
+            let cfg = PathConfig {
+                alpha: *alpha,
+                n_lambda: args.n_lambda(),
+                lambda_min_ratio: 0.01,
+                tol: 1e-6,
+                max_iter: 20_000,
+                ..Default::default()
+            };
+            let screened = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+            let baseline = run_baseline_path(&ds.x, &ds.y, &ds.groups, &cfg);
+            eprintln!(
+                "[table1]   α={label}: baseline {:.2}s screened {:.2}s (rejection {:.3})",
+                baseline.total_s(),
+                screened.total_s(),
+                screened.mean_total_rejection()
+            );
+            cols.push(SpeedupColumn {
+                label: label.clone(),
+                solver_s: baseline.total_s(),
+                screen_s: screened.screen_total_s,
+                combined_s: screened.total_s(),
+            });
+        }
+        println!("\n{}", render_speedup_table(&ds.name, &cols));
+        report = report.set(&ds.name, speedup_to_json(&ds.name, &cols));
+    }
+    args.maybe_write_json(&report);
+}

@@ -1,0 +1,62 @@
+//! Table 2 — running time on the (simulated) ADNI SNP data set with GMV
+//! and WMV responses: solver / TLFre / TLFre+solver / speedup per α.
+//!
+//! Default profile: 1/200-scale feature dimension (747×~2130, ragged gene
+//! groups), 2 α values, 25 λ points. `--full` uses the paper's 426040-SNP
+//! width (memory: ~1.2 GB; wall time: hours).
+
+use tlfre::bench_harness::tables::{render_speedup_table, speedup_to_json, SpeedupColumn};
+use tlfre::bench_harness::BenchArgs;
+use tlfre::coordinator::{run_baseline_path, run_tlfre_path, PathConfig};
+use tlfre::data::registry::RealDataset;
+use tlfre::util::json::Json;
+
+fn main() {
+    tlfre::util::logger::init();
+    let mut args = BenchArgs::from_env();
+    if args.scale.is_none() && !args.full {
+        args.scale = Some(0.004); // ADNI default: ~1/250 width
+    }
+    if args.n_alpha.is_none() && !args.full {
+        args.n_alpha = Some(2);
+    }
+    if args.n_lambda.is_none() && !args.full {
+        args.n_lambda = Some(25);
+    }
+    let alphas = args.alphas();
+    let labels = args.alpha_labels();
+
+    let mut report = Json::obj().set("bench", "table2");
+    for set in [RealDataset::AdniGmv, RealDataset::AdniWmv] {
+        let ds = set.generate(args.scale(), args.seed);
+        eprintln!("[table2] {}", ds.describe());
+        let mut cols = Vec::new();
+        for (alpha, label) in alphas.iter().zip(&labels) {
+            let cfg = PathConfig {
+                alpha: *alpha,
+                n_lambda: args.n_lambda(),
+                lambda_min_ratio: 0.01,
+                tol: 1e-5,
+                max_iter: 10_000,
+                ..Default::default()
+            };
+            let screened = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+            let baseline = run_baseline_path(&ds.x, &ds.y, &ds.groups, &cfg);
+            eprintln!(
+                "[table2]   α={label}: baseline {:.2}s screened {:.2}s (rejection {:.3})",
+                baseline.total_s(),
+                screened.total_s(),
+                screened.mean_total_rejection()
+            );
+            cols.push(SpeedupColumn {
+                label: label.clone(),
+                solver_s: baseline.total_s(),
+                screen_s: screened.screen_total_s,
+                combined_s: screened.total_s(),
+            });
+        }
+        println!("\n{}", render_speedup_table(&ds.name, &cols));
+        report = report.set(&ds.name, speedup_to_json(&ds.name, &cols));
+    }
+    args.maybe_write_json(&report);
+}

@@ -1,0 +1,98 @@
+//! Table 3 — nonnegative Lasso with/without DPC on the eight data sets:
+//! solver / DPC / DPC+solver / speedup per data set.
+//!
+//! Default profile uses the simulated sets at reduced feature scale and a
+//! per-set λ-grid sized so the whole table completes on one core.
+
+use tlfre::bench_harness::BenchArgs;
+use tlfre::coordinator::{run_dpc_path, run_nonneg_baseline, DpcPathConfig};
+use tlfre::data::registry::RealDataset;
+use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
+use tlfre::data::Dataset;
+use tlfre::util::harness::Table;
+use tlfre::util::json::Json;
+use tlfre::util::Rng;
+
+/// Nonnegative Synthetic 1/2 (Section 6.2: same matrices, β* from 10% of
+/// features, values |N(0,1)| so the nonneg model is well-specified).
+fn nonneg_synthetic(spec: &SyntheticSpec, seed: u64) -> Dataset {
+    let mut ds = generate_synthetic(spec, seed);
+    let mut rng = Rng::seed_from_u64(seed ^ 0x99);
+    let p = ds.p();
+    let mut beta = vec![0.0f32; p];
+    for &j in &rng.sample_indices(p, p / 10) {
+        beta[j] = rng.gaussian().abs() as f32;
+    }
+    let mut y = vec![0.0f32; ds.n()];
+    ds.x.matvec(&beta, &mut y);
+    for v in y.iter_mut() {
+        *v += (0.01 * rng.gaussian()) as f32;
+    }
+    ds.y = y;
+    ds.beta_star = Some(beta);
+    ds
+}
+
+fn main() {
+    tlfre::util::logger::init();
+    let args = BenchArgs::from_env();
+    let (n, p, g) = args.synthetic_dims();
+
+    // (dataset, n_lambda, max_iter): biggest sets get shorter grids in the
+    // default profile; --full restores 100 points everywhere.
+    let mut jobs: Vec<(Dataset, usize, usize)> = vec![
+        (nonneg_synthetic(&SyntheticSpec::synthetic1_scaled(n, p, g), args.seed), 50, 3000),
+        (nonneg_synthetic(&SyntheticSpec::synthetic2_scaled(n, p, g), args.seed), 50, 3000),
+    ];
+    for set in RealDataset::dpc_sets() {
+        let (nl, mi) = match set {
+            RealDataset::Svhn => (12, 2000),
+            RealDataset::Pie | RealDataset::Mnist => (25, 4000),
+            _ => (50, 10_000),
+        };
+        jobs.push((set.generate(args.scale(), args.seed), nl, mi));
+    }
+
+    let mut table = Table::new(&["", "solver", "DPC", "DPC+solver", "speedup", "rejection"]);
+    let mut report = Json::obj().set("bench", "table3");
+    for (ds, nl_default, mi) in jobs {
+        let nl = if args.full { 100 } else { args.n_lambda.unwrap_or(nl_default) };
+        let cfg = DpcPathConfig {
+            n_lambda: nl,
+            lambda_min_ratio: if args.full { 0.01 } else { 0.1 },
+            tol: 1e-5,
+            max_iter: mi,
+            ..Default::default()
+        };
+        eprintln!("[table3] {} ({} λ values)", ds.describe(), nl);
+        let screened = run_dpc_path(&ds.x, &ds.y, &cfg);
+        let baseline = run_nonneg_baseline(&ds.x, &ds.y, &cfg);
+        let speedup = baseline.total_s() / screened.total_s().max(1e-12);
+        eprintln!(
+            "[table3]   baseline {:.2}s screened {:.2}s speedup {:.2} rejection {:.3}",
+            baseline.total_s(),
+            screened.total_s(),
+            speedup,
+            screened.mean_rejection()
+        );
+        table.row(vec![
+            ds.name.clone(),
+            format!("{:.2}", baseline.total_s()),
+            format!("{:.2}", screened.screen_total_s),
+            format!("{:.2}", screened.total_s()),
+            format!("{:.2}", speedup),
+            format!("{:.3}", screened.mean_rejection()),
+        ]);
+        report = report.set(
+            &ds.name,
+            Json::obj()
+                .set("solver_s", baseline.total_s())
+                .set("dpc_s", screened.screen_total_s)
+                .set("combined_s", screened.total_s())
+                .set("speedup", speedup)
+                .set("rejection", screened.mean_rejection()),
+        );
+    }
+    println!("\nTable 3 — nonnegative Lasso, 8 data sets\n{}", table.render());
+    args.maybe_write_json(&report);
+}

@@ -1,0 +1,150 @@
+//! Experiment harness shared by `rust/benches/*` — runs the paper's
+//! workloads and prints tables/series in the paper's own format.
+//!
+//! Each bench binary (one per table/figure) parses a common set of flags
+//! ([`BenchArgs`]), builds its data sets, calls into the coordinator, and
+//! renders through [`tables`].
+
+pub mod tables;
+
+/// Common command-line arguments for bench binaries.
+///
+/// Default profile is reduced for the single-core CI box; `--full`
+/// reproduces the paper's exact grid (7 α × 100 λ, full dimensions).
+#[derive(Debug, Clone)]
+pub struct BenchArgs {
+    /// Paper-scale run.
+    pub full: bool,
+    /// Dataset seed.
+    pub seed: u64,
+    /// Override λ-grid size.
+    pub n_lambda: Option<usize>,
+    /// Override α count (first k of the paper's grid).
+    pub n_alpha: Option<usize>,
+    /// Override the simulated-real-data feature scale.
+    pub scale: Option<f64>,
+    /// Emit a machine-readable JSON report to this path.
+    pub json_out: Option<String>,
+}
+
+impl Default for BenchArgs {
+    fn default() -> Self {
+        BenchArgs { full: false, seed: 42, n_lambda: None, n_alpha: None, scale: None, json_out: None }
+    }
+}
+
+impl BenchArgs {
+    /// Parse from `std::env::args` (ignores unknown flags that cargo-bench
+    /// passes, e.g. `--bench`).
+    pub fn from_env() -> BenchArgs {
+        let mut a = BenchArgs::default();
+        let mut args = std::env::args().skip(1);
+        while let Some(arg) = args.next() {
+            match arg.as_str() {
+                "--full" => a.full = true,
+                "--seed" => a.seed = args.next().and_then(|v| v.parse().ok()).unwrap_or(a.seed),
+                "--n-lambda" => a.n_lambda = args.next().and_then(|v| v.parse().ok()),
+                "--n-alpha" => a.n_alpha = args.next().and_then(|v| v.parse().ok()),
+                "--scale" => a.scale = args.next().and_then(|v| v.parse().ok()),
+                "--json-out" => a.json_out = args.next(),
+                _ => {} // cargo bench passes --bench etc.
+            }
+        }
+        a
+    }
+
+    /// λ-grid size for this profile (paper: 100).
+    pub fn n_lambda(&self) -> usize {
+        self.n_lambda.unwrap_or(if self.full { 100 } else { 50 })
+    }
+
+    /// α values for this profile (paper: all seven tan(ψ)).
+    pub fn alphas(&self) -> Vec<f64> {
+        let all = crate::coordinator::path::alpha_grid_from_angles(
+            &crate::coordinator::path::PAPER_ALPHA_ANGLES,
+        );
+        let k = self.n_alpha.unwrap_or(if self.full { 7 } else { 3 });
+        // reduced default: a spread (tan 5°, tan 45°, tan 85°)
+        if k >= all.len() {
+            all
+        } else if k == 3 && self.n_alpha.is_none() {
+            vec![all[0], all[3], all[6]]
+        } else {
+            all.into_iter().take(k.max(1)).collect()
+        }
+    }
+
+    /// Angle labels matching [`Self::alphas`].
+    pub fn alpha_labels(&self) -> Vec<String> {
+        let angles = crate::coordinator::path::PAPER_ALPHA_ANGLES;
+        let k = self.n_alpha.unwrap_or(if self.full { 7 } else { 3 });
+        let idx: Vec<usize> = if k >= 7 {
+            (0..7).collect()
+        } else if k == 3 && self.n_alpha.is_none() {
+            vec![0, 3, 6]
+        } else {
+            (0..k.max(1).min(7)).collect()
+        };
+        idx.iter().map(|&i| format!("tan({}°)", angles[i])).collect()
+    }
+
+    /// Simulated-real-set feature scale.
+    pub fn scale(&self) -> f64 {
+        self.scale.unwrap_or(if self.full { 1.0 } else { 0.02 })
+    }
+
+    /// Synthetic data set dimensions `(n, p, groups)` for this profile.
+    pub fn synthetic_dims(&self) -> (usize, usize, usize) {
+        if self.full {
+            (250, 10_000, 1000)
+        } else {
+            (250, 2_000, 200)
+        }
+    }
+
+    /// Write the JSON report if `--json-out` was given.
+    pub fn maybe_write_json(&self, report: &crate::util::json::Json) {
+        if let Some(path) = &self.json_out {
+            if let Err(e) = std::fs::write(path, report.to_string_pretty()) {
+                eprintln!("warning: could not write {path}: {e}");
+            } else {
+                println!("json report written to {path}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_profile_reduced() {
+        let a = BenchArgs::default();
+        assert_eq!(a.n_lambda(), 50);
+        assert_eq!(a.alphas().len(), 3);
+        assert_eq!(a.alpha_labels().len(), 3);
+        assert!(a.scale() < 1.0);
+        assert_eq!(a.synthetic_dims().0, 250);
+    }
+
+    #[test]
+    fn full_profile_matches_paper() {
+        let a = BenchArgs { full: true, ..Default::default() };
+        assert_eq!(a.n_lambda(), 100);
+        assert_eq!(a.alphas().len(), 7);
+        assert_eq!(a.scale(), 1.0);
+        assert_eq!(a.synthetic_dims(), (250, 10_000, 1000));
+        // α grid endpoints: tan 5° ≈ 0.0875, tan 85° ≈ 11.43
+        let al = a.alphas();
+        assert!((al[0] - 0.0875).abs() < 1e-3);
+        assert!((al[6] - 11.43).abs() < 0.01);
+    }
+
+    #[test]
+    fn labels_align_with_alphas() {
+        let a = BenchArgs { n_alpha: Some(2), ..Default::default() };
+        assert_eq!(a.alphas().len(), 2);
+        assert_eq!(a.alpha_labels(), vec!["tan(5°)", "tan(15°)"]);
+    }
+}

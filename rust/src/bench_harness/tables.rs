@@ -1,0 +1,150 @@
+//! Paper-format table and series rendering.
+
+use crate::coordinator::runner::PathOutput;
+use crate::coordinator::dpc_runner::DpcPathOutput;
+use crate::util::harness::Table;
+use crate::util::json::Json;
+
+/// One α-column of a Table-1/2-style timing comparison.
+#[derive(Debug, Clone)]
+pub struct SpeedupColumn {
+    pub label: String,
+    /// Baseline: solver without screening (seconds, whole path).
+    pub solver_s: f64,
+    /// Screening-only time (seconds, whole path).
+    pub screen_s: f64,
+    /// Screening + reduced solves (seconds, whole path).
+    pub combined_s: f64,
+}
+
+impl SpeedupColumn {
+    pub fn speedup(&self) -> f64 {
+        if self.combined_s > 0.0 {
+            self.solver_s / self.combined_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Render the paper's Table 1/2 layout:
+/// rows = solver / TLFre / TLFre+solver / speedup, columns = α.
+pub fn render_speedup_table(dataset: &str, cols: &[SpeedupColumn]) -> String {
+    let mut header = vec![dataset];
+    let labels: Vec<&str> = cols.iter().map(|c| c.label.as_str()).collect();
+    header.extend(labels);
+    let mut t = Table::new(&header);
+    let row = |name: &str, f: &dyn Fn(&SpeedupColumn) -> f64| -> Vec<String> {
+        let mut cells = vec![name.to_string()];
+        cells.extend(cols.iter().map(|c| format!("{:.2}", f(c))));
+        cells
+    };
+    t.row(row("solver", &|c| c.solver_s));
+    t.row(row("screen", &|c| c.screen_s));
+    t.row(row("screen+solver", &|c| c.combined_s));
+    t.row(row("speedup", &|c| c.speedup()));
+    t.render()
+}
+
+/// Render a rejection-ratio series (one figure panel) as text:
+/// `λ/λmax  r1  r2  r1+r2` rows, plus a coarse text sparkline.
+pub fn render_rejection_series(title: &str, out: &PathOutput) -> String {
+    let mut s = format!("-- {title} (λmax = {:.4}) --\n", out.lambda_max);
+    s.push_str("  λ/λmax      r1      r2   r1+r2  active\n");
+    for st in &out.steps {
+        s.push_str(&format!(
+            "  {:8.4}  {:6.3}  {:6.3}  {:6.3}  {:6}\n",
+            st.lambda / out.lambda_max,
+            st.r1,
+            st.r2,
+            st.r1 + st.r2,
+            st.active_features
+        ));
+    }
+    s.push_str(&format!(
+        "  mean r1 = {:.3}, mean r1+r2 = {:.3}\n",
+        out.mean_r1(),
+        out.mean_total_rejection()
+    ));
+    s
+}
+
+/// Render a DPC rejection series (Fig. 5 panel).
+pub fn render_dpc_series(title: &str, out: &DpcPathOutput) -> String {
+    let mut s = format!("-- {title} (λmax = {:.4}) --\n", out.lambda_max);
+    s.push_str("  λ/λmax  rejection  active\n");
+    for st in &out.steps {
+        s.push_str(&format!(
+            "  {:8.4}  {:9.3}  {:6}\n",
+            st.lambda / out.lambda_max,
+            st.rejection,
+            st.active_features
+        ));
+    }
+    s.push_str(&format!("  mean rejection = {:.3}\n", out.mean_rejection()));
+    s
+}
+
+/// JSON form of a rejection series (consumed by plotting scripts).
+pub fn series_to_json(out: &PathOutput) -> Json {
+    Json::obj()
+        .set("lambda_max", out.lambda_max)
+        .set("lambda", out.steps.iter().map(|s| s.lambda).collect::<Vec<_>>())
+        .set("r1", out.steps.iter().map(|s| s.r1).collect::<Vec<_>>())
+        .set("r2", out.steps.iter().map(|s| s.r2).collect::<Vec<_>>())
+        .set("active", out.steps.iter().map(|s| s.active_features as f64).collect::<Vec<_>>())
+        .set("screen_total_s", out.screen_total_s)
+        .set("solve_total_s", out.solve_total_s)
+}
+
+/// JSON form of a speedup table.
+pub fn speedup_to_json(dataset: &str, cols: &[SpeedupColumn]) -> Json {
+    Json::obj().set("dataset", dataset).set(
+        "columns",
+        Json::Arr(
+            cols.iter()
+                .map(|c| {
+                    Json::obj()
+                        .set("alpha", c.label.as_str())
+                        .set("solver_s", c.solver_s)
+                        .set("screen_s", c.screen_s)
+                        .set("combined_s", c.combined_s)
+                        .set("speedup", c.speedup())
+                })
+                .collect(),
+        ),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn col(label: &str) -> SpeedupColumn {
+        SpeedupColumn { label: label.into(), solver_s: 100.0, screen_s: 0.5, combined_s: 5.0 }
+    }
+
+    #[test]
+    fn speedup_math() {
+        assert!((col("a").speedup() - 20.0).abs() < 1e-12);
+        let z = SpeedupColumn { combined_s: 0.0, ..col("z") };
+        assert!(z.speedup().is_infinite());
+    }
+
+    #[test]
+    fn table_renders_rows() {
+        let s = render_speedup_table("Synthetic 1", &[col("tan(5°)"), col("tan(45°)")]);
+        assert!(s.contains("solver"));
+        assert!(s.contains("speedup"));
+        assert!(s.contains("20.00"));
+        assert!(s.lines().count() >= 6);
+    }
+
+    #[test]
+    fn speedup_json_shape() {
+        let j = speedup_to_json("ds", &[col("a")]);
+        let cols = j.get("columns").unwrap().as_arr().unwrap();
+        assert_eq!(cols.len(), 1);
+        assert_eq!(cols[0].get("speedup").unwrap().as_f64(), Some(20.0));
+    }
+}

@@ -1,0 +1,366 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! ```text
+//! tlfre generate  --dataset synthetic1 --out ds.bin [--seed 42] [--scale 0.1]
+//! tlfre solve-path --dataset synthetic1|synthetic2|adni-gmv|... [--alpha 1.0]
+//!                  [--n-lambda 100] [--no-screening] [--verify] [--config cfg.json]
+//! tlfre dpc-path   --dataset mnist|pie|... [--n-lambda 100] [--no-screening]
+//! tlfre lambda-max --dataset ... [--alpha 1.0]
+//! tlfre runtime-info
+//! ```
+
+use crate::config::Config;
+use crate::coordinator::{run_baseline_path, run_dpc_path, run_nonneg_baseline, run_tlfre_path, DpcPathConfig};
+use crate::data::registry::RealDataset;
+use crate::data::synthetic::{generate_synthetic, SyntheticSpec};
+use crate::data::Dataset;
+use crate::util::{fmt_duration, Timer};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand + flag map.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `--key value` flags and bare `--switch`es after a subcommand.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        if argv.is_empty() {
+            bail!("no subcommand; try `tlfre help`");
+        }
+        let command = argv[0].clone();
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare switch
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    switches.push(key.to_string());
+                }
+            } else {
+                bail!("unexpected positional argument '{a}'");
+            }
+            i += 1;
+        }
+        Ok(Args { command, flags, switches })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse '{v}'")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+/// Resolve a dataset name to a generated [`Dataset`].
+pub fn resolve_dataset(name: &str, seed: u64, scale: f64) -> Result<Dataset> {
+    let ds = match name {
+        "synthetic1" => generate_synthetic(
+            &SyntheticSpec::synthetic1_scaled(
+                250,
+                scaled(10_000, scale),
+                scaled(10_000, scale) / 10,
+            ),
+            seed,
+        ),
+        "synthetic2" => generate_synthetic(
+            &SyntheticSpec::synthetic2_scaled(
+                250,
+                scaled(10_000, scale),
+                scaled(10_000, scale) / 10,
+            ),
+            seed,
+        ),
+        "adni-gmv" => RealDataset::AdniGmv.generate(scale, seed),
+        "adni-wmv" => RealDataset::AdniWmv.generate(scale, seed),
+        "breast-cancer" => RealDataset::BreastCancer.generate(scale, seed),
+        "leukemia" => RealDataset::Leukemia.generate(scale, seed),
+        "prostate" => RealDataset::Prostate.generate(scale, seed),
+        "pie" => RealDataset::Pie.generate(scale, seed),
+        "mnist" => RealDataset::Mnist.generate(scale, seed),
+        "svhn" => RealDataset::Svhn.generate(scale, seed),
+        other => bail!(
+            "unknown dataset '{other}' (synthetic1|synthetic2|adni-gmv|adni-wmv|breast-cancer|leukemia|prostate|pie|mnist|svhn)"
+        ),
+    };
+    Ok(ds)
+}
+
+/// Round `p·scale` to a multiple of 10 (keeps uniform groups divisible).
+fn scaled(p: usize, scale: f64) -> usize {
+    (((p as f64 * scale) / 10.0).round() as usize * 10).max(20)
+}
+
+const HELP: &str = "\
+tlfre — Two-Layer Feature Reduction for Sparse-Group Lasso (NIPS 2014 reproduction)
+
+USAGE: tlfre <command> [flags]
+
+COMMANDS:
+  solve-path    run a TLFre-screened SGL λ-path on a dataset
+  dpc-path      run a DPC-screened nonnegative-Lasso λ-path
+  generate      generate a dataset and save it to disk
+  lambda-max    print λmax^α and the Corollary 10 curve sample
+  runtime-info  probe the PJRT runtime and list artifacts
+  help          this text
+
+COMMON FLAGS:
+  --dataset <name>     synthetic1|synthetic2|adni-gmv|adni-wmv|breast-cancer|
+                       leukemia|prostate|pie|mnist|svhn
+  --seed <u64>         dataset seed (default 42)
+  --scale <f64>        feature-dimension scale for simulated sets (default 0.1)
+  --alpha <f64>        SGL α (default 1.0)
+  --n-lambda <usize>   λ grid size (default 100)
+  --min-ratio <f64>    λmin/λmax (default 0.01)
+  --tol <f64>          relative duality-gap tolerance (default 1e-6)
+  --config <path>      JSON config (overridden by explicit flags)
+  --no-screening       baseline path without screening
+  --verify             re-solve unscreened each step and assert safety
+  --out <path>         output file (generate / JSON reports)
+";
+
+/// Entry point used by `main.rs`.
+pub fn run(argv: &[String]) -> Result<i32> {
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n\n{HELP}");
+            return Ok(2);
+        }
+    };
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(0)
+        }
+        "generate" => cmd_generate(&args),
+        "solve-path" => cmd_solve_path(&args),
+        "dpc-path" => cmd_dpc_path(&args),
+        "lambda-max" => cmd_lambda_max(&args),
+        "runtime-info" => cmd_runtime_info(),
+        other => {
+            eprintln!("unknown command '{other}'\n\n{HELP}");
+            Ok(2)
+        }
+    }
+}
+
+fn common_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(p) => Config::from_file(std::path::Path::new(p))?,
+        None => Config::default(),
+    };
+    if let Some(v) = args.get_parsed::<usize>("n-lambda")? {
+        cfg.n_lambda = v;
+    }
+    if let Some(v) = args.get_parsed::<f64>("min-ratio")? {
+        cfg.lambda_min_ratio = v;
+    }
+    if let Some(v) = args.get_parsed::<f64>("tol")? {
+        cfg.tol = v;
+    }
+    if let Some(v) = args.get_parsed::<u64>("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.get_parsed::<f64>("scale")? {
+        cfg.scale = v;
+    }
+    Ok(cfg)
+}
+
+fn cmd_generate(args: &Args) -> Result<i32> {
+    let cfg = common_config(args)?;
+    let name = args.get("dataset").context("--dataset is required")?;
+    let out = args.get("out").context("--out is required")?;
+    let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
+    crate::data::io::save(&ds, std::path::Path::new(out))?;
+    println!("wrote {} to {out}", ds.describe());
+    Ok(0)
+}
+
+fn cmd_solve_path(args: &Args) -> Result<i32> {
+    let cfg = common_config(args)?;
+    let name = args.get("dataset").context("--dataset is required")?;
+    let alpha: f64 = args.get_parsed("alpha")?.unwrap_or(1.0);
+    let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
+    println!("{}", ds.describe());
+    let mut pc = cfg.path_config(alpha);
+    pc.verify_safety = args.has("verify");
+    let t = Timer::start();
+    let out = if args.has("no-screening") {
+        run_baseline_path(&ds.x, &ds.y, &ds.groups, &pc)
+    } else {
+        run_tlfre_path(&ds.x, &ds.y, &ds.groups, &pc)
+    };
+    let wall = t.elapsed_s();
+    println!(
+        "{}",
+        crate::bench_harness::tables::render_rejection_series(
+            &format!("{} α={alpha}", ds.name),
+            &out
+        )
+    );
+    println!(
+        "screen {}  solve {}  wall {}",
+        fmt_duration(out.screen_total_s),
+        fmt_duration(out.solve_total_s),
+        fmt_duration(wall)
+    );
+    if let Some(path) = args.get("out") {
+        std::fs::write(
+            path,
+            crate::bench_harness::tables::series_to_json(&out).to_string_pretty(),
+        )?;
+        println!("json written to {path}");
+    }
+    Ok(0)
+}
+
+fn cmd_dpc_path(args: &Args) -> Result<i32> {
+    let cfg = common_config(args)?;
+    let name = args.get("dataset").context("--dataset is required")?;
+    let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
+    println!("{}", ds.describe());
+    let pc = DpcPathConfig {
+        n_lambda: cfg.n_lambda,
+        lambda_min_ratio: cfg.lambda_min_ratio,
+        tol: cfg.tol,
+        max_iter: cfg.max_iter,
+        verify_safety: args.has("verify"),
+        gap_inflation: 0.0,
+    };
+    let out = if args.has("no-screening") {
+        run_nonneg_baseline(&ds.x, &ds.y, &pc)
+    } else {
+        run_dpc_path(&ds.x, &ds.y, &pc)
+    };
+    println!("{}", crate::bench_harness::tables::render_dpc_series(&ds.name, &out));
+    println!(
+        "screen {}  solve {}",
+        fmt_duration(out.screen_total_s),
+        fmt_duration(out.solve_total_s)
+    );
+    Ok(0)
+}
+
+fn cmd_lambda_max(args: &Args) -> Result<i32> {
+    let cfg = common_config(args)?;
+    let name = args.get("dataset").context("--dataset is required")?;
+    let alpha: f64 = args.get_parsed("alpha")?.unwrap_or(1.0);
+    let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
+    let prob = crate::sgl::SglProblem::new(&ds.x, &ds.y, &ds.groups);
+    let lm = crate::screening::sgl_lambda_max(&prob, alpha);
+    println!("{}", ds.describe());
+    println!("λmax^α(α={alpha}) = {:.6} (argmax group {})", lm.lambda_max, lm.argmax_group);
+    // Corollary 10 curve sample.
+    println!("Corollary 10 boundary λ₁max(λ₂):");
+    for frac in [0.0, 0.25, 0.5, 0.75, 1.0] {
+        let l2 = lm.lambda_max * frac;
+        let l1 = crate::screening::lambda_max::lambda1_max(&prob, l2);
+        println!("  λ₂ = {l2:10.4} → λ₁max = {l1:10.4}");
+    }
+    Ok(0)
+}
+
+fn cmd_runtime_info() -> Result<i32> {
+    let mut rt = crate::runtime::Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let dir = crate::runtime::artifacts_dir();
+    match crate::runtime::ArtifactManifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts in {:?}:", dir);
+            for a in &m.artifacts {
+                let path = m.path_of(a);
+                let status = match rt.load(&path) {
+                    Ok(_) => "compiles OK",
+                    Err(_) => "FAILED to compile",
+                };
+                println!(
+                    "  {:24} kind={:14} n={:6} p={:7} gs={:4}  {}",
+                    a.name, a.kind, a.n, a.p, a.group_size, status
+                );
+            }
+        }
+        Err(e) => println!("no artifact manifest: {e:#}"),
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_switches() {
+        let a = Args::parse(&sv(&[
+            "solve-path",
+            "--dataset",
+            "synthetic1",
+            "--alpha=2.5",
+            "--verify",
+            "--n-lambda",
+            "10",
+        ]))
+        .unwrap();
+        assert_eq!(a.command, "solve-path");
+        assert_eq!(a.get("dataset"), Some("synthetic1"));
+        assert_eq!(a.get_parsed::<f64>("alpha").unwrap(), Some(2.5));
+        assert_eq!(a.get_parsed::<usize>("n-lambda").unwrap(), Some(10));
+        assert!(a.has("verify"));
+        assert!(!a.has("no-screening"));
+    }
+
+    #[test]
+    fn parse_rejects_positional() {
+        assert!(Args::parse(&sv(&["solve-path", "oops"])).is_err());
+        assert!(Args::parse(&sv(&[])).is_err());
+    }
+
+    #[test]
+    fn bad_parse_value_errors() {
+        let a = Args::parse(&sv(&["x", "--alpha", "abc"])).unwrap();
+        assert!(a.get_parsed::<f64>("alpha").is_err());
+    }
+
+    #[test]
+    fn resolve_known_datasets() {
+        let ds = resolve_dataset("synthetic1", 1, 0.01).unwrap();
+        assert_eq!(ds.n(), 250);
+        assert!(resolve_dataset("nope", 1, 0.01).is_err());
+    }
+
+    #[test]
+    fn scaled_is_divisible_by_ten() {
+        for s in [0.01, 0.037, 0.1, 1.0] {
+            assert_eq!(scaled(10_000, s) % 10, 0);
+        }
+        assert_eq!(scaled(10_000, 1.0), 10_000);
+    }
+}

@@ -1,0 +1,181 @@
+//! Experiment configuration.
+//!
+//! JSON-backed (via [`crate::util::json`]; serde is unavailable offline) so
+//! experiment definitions can be versioned and passed to the CLI with
+//! `--config`. All fields have defaults — an empty object is a valid
+//! config — and unknown keys are rejected to catch typos.
+
+use crate::coordinator::runner::SolverKind;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    /// α values (problem (3)); default = paper's seven tan(ψ) values.
+    pub alphas: Vec<f64>,
+    /// Number of λ grid points.
+    pub n_lambda: usize,
+    /// λ_min/λ_max.
+    pub lambda_min_ratio: f64,
+    /// Solver: "fista" | "bcd".
+    pub solver: SolverKind,
+    /// Relative duality-gap tolerance.
+    pub tol: f64,
+    /// Iteration cap per solve.
+    pub max_iter: usize,
+    /// Dataset seed.
+    pub seed: u64,
+    /// Feature-dimension scale for simulated real data sets.
+    pub scale: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            alphas: crate::coordinator::path::alpha_grid_from_angles(
+                &crate::coordinator::path::PAPER_ALPHA_ANGLES,
+            ),
+            n_lambda: 100,
+            lambda_min_ratio: 0.01,
+            solver: SolverKind::Fista,
+            tol: 1e-6,
+            max_iter: 20_000,
+            seed: 42,
+            scale: 0.1,
+        }
+    }
+}
+
+impl Config {
+    /// Parse from JSON text; unknown keys are errors.
+    pub fn from_json(text: &str) -> Result<Config> {
+        let v = Json::parse(text).context("config is not valid JSON")?;
+        let obj = v.as_obj().context("config must be a JSON object")?;
+        let mut cfg = Config::default();
+        for (k, val) in obj {
+            match k.as_str() {
+                "alphas" => {
+                    let arr = val.as_arr().context("alphas must be an array")?;
+                    cfg.alphas = arr
+                        .iter()
+                        .map(|x| x.as_f64().context("alpha must be a number"))
+                        .collect::<Result<_>>()?;
+                    if cfg.alphas.iter().any(|&a| a <= 0.0) {
+                        bail!("alphas must be positive");
+                    }
+                }
+                "n_lambda" => cfg.n_lambda = val.as_usize().context("n_lambda must be a nonnegative integer")?,
+                "lambda_min_ratio" => {
+                    cfg.lambda_min_ratio = val.as_f64().context("lambda_min_ratio must be a number")?;
+                    if !(cfg.lambda_min_ratio > 0.0 && cfg.lambda_min_ratio < 1.0) {
+                        bail!("lambda_min_ratio must be in (0, 1)");
+                    }
+                }
+                "solver" => {
+                    cfg.solver = match val.as_str() {
+                        Some("fista") => SolverKind::Fista,
+                        Some("bcd") => SolverKind::Bcd,
+                        other => bail!("unknown solver {other:?} (want \"fista\" or \"bcd\")"),
+                    }
+                }
+                "tol" => cfg.tol = val.as_f64().context("tol must be a number")?,
+                "max_iter" => cfg.max_iter = val.as_usize().context("max_iter must be an integer")?,
+                "seed" => cfg.seed = val.as_usize().context("seed must be an integer")? as u64,
+                "scale" => {
+                    cfg.scale = val.as_f64().context("scale must be a number")?;
+                    if !(cfg.scale > 0.0 && cfg.scale <= 1.0) {
+                        bail!("scale must be in (0, 1]");
+                    }
+                }
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        if cfg.n_lambda < 2 {
+            bail!("n_lambda must be ≥ 2");
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &std::path::Path) -> Result<Config> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path:?}"))?;
+        Self::from_json(&text)
+    }
+
+    /// Serialize back to JSON (for run manifests).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("alphas", self.alphas.clone())
+            .set("n_lambda", self.n_lambda)
+            .set("lambda_min_ratio", self.lambda_min_ratio)
+            .set(
+                "solver",
+                match self.solver {
+                    SolverKind::Fista => "fista",
+                    SolverKind::Bcd => "bcd",
+                },
+            )
+            .set("tol", self.tol)
+            .set("max_iter", self.max_iter)
+            .set("seed", self.seed as usize)
+            .set("scale", self.scale)
+    }
+
+    /// Per-α path configuration.
+    pub fn path_config(&self, alpha: f64) -> crate::coordinator::runner::PathConfig {
+        crate::coordinator::runner::PathConfig {
+            alpha,
+            n_lambda: self.n_lambda,
+            lambda_min_ratio: self.lambda_min_ratio,
+            solver: self.solver,
+            tol: self.tol,
+            max_iter: self.max_iter,
+            verify_safety: false,
+            gap_inflation: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_object_is_default() {
+        let cfg = Config::from_json("{}").unwrap();
+        assert_eq!(cfg, Config::default());
+        assert_eq!(cfg.alphas.len(), 7);
+    }
+
+    #[test]
+    fn roundtrip_through_json() {
+        let mut cfg = Config::default();
+        cfg.n_lambda = 50;
+        cfg.solver = SolverKind::Bcd;
+        cfg.tol = 1e-8;
+        let text = cfg.to_json().to_string_pretty();
+        let back = Config::from_json(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(Config::from_json(r#"{"n_lamda": 10}"#).is_err()); // typo
+        assert!(Config::from_json(r#"{"solver": "adam"}"#).is_err());
+        assert!(Config::from_json(r#"{"lambda_min_ratio": 2.0}"#).is_err());
+        assert!(Config::from_json(r#"{"alphas": [1.0, -2.0]}"#).is_err());
+        assert!(Config::from_json(r#"{"n_lambda": 1}"#).is_err());
+        assert!(Config::from_json(r#"{"scale": 0.0}"#).is_err());
+        assert!(Config::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn partial_overrides() {
+        let cfg = Config::from_json(r#"{"n_lambda": 25, "alphas": [1.0]}"#).unwrap();
+        assert_eq!(cfg.n_lambda, 25);
+        assert_eq!(cfg.alphas, vec![1.0]);
+        assert_eq!(cfg.tol, Config::default().tol);
+    }
+}

@@ -1,0 +1,254 @@
+//! Cross-validation driver over the (α, λ) grid.
+//!
+//! The paper's Remark 3 motivates TLFre with exactly this workload:
+//! "commonly used approaches such as cross validation and stability
+//! selection involve solving SGL many times over a grid of parameter
+//! values". This module runs k-fold CV where every fold×α path is a
+//! TLFre-screened path — the end-to-end setting in which screening's
+//! speedup multiplies across the whole model-selection procedure.
+
+use super::runner::{run_tlfre_path, PathConfig};
+use crate::groups::GroupStructure;
+use crate::linalg::ops;
+use crate::linalg::DenseMatrix;
+use crate::util::Rng;
+
+/// One grid point's cross-validated error.
+#[derive(Debug, Clone)]
+pub struct CvPoint {
+    pub alpha: f64,
+    /// λ/λmax^α position on the path (grids differ per α, so positions are
+    /// compared by normalized index).
+    pub lambda_ratio: f64,
+    /// Mean held-out MSE across folds.
+    pub mse: f64,
+    /// Nonzero count (averaged over folds).
+    pub mean_nnz: f64,
+}
+
+/// Cross-validation output.
+#[derive(Debug, Clone)]
+pub struct CvOutput {
+    pub points: Vec<CvPoint>,
+    pub best: CvPoint,
+    /// Total screening / solving time across all folds (seconds).
+    pub screen_total_s: f64,
+    pub solve_total_s: f64,
+}
+
+/// Split `n` samples into `k` folds (seeded permutation).
+pub fn make_folds(n: usize, k: usize, seed: u64) -> Vec<Vec<usize>> {
+    assert!(k >= 2 && k <= n, "need 2 ≤ k ≤ n");
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::seed_from_u64(seed);
+    rng.shuffle(&mut idx);
+    let mut folds = vec![Vec::new(); k];
+    for (i, &s) in idx.iter().enumerate() {
+        folds[i % k].push(s);
+    }
+    folds
+}
+
+fn gather_rows(x: &DenseMatrix, rows: &[usize]) -> DenseMatrix {
+    let mut out = DenseMatrix::zeros(rows.len(), x.cols());
+    for j in 0..x.cols() {
+        let src = x.col(j);
+        let dst = out.col_mut(j);
+        for (k, &i) in rows.iter().enumerate() {
+            dst[k] = src[i];
+        }
+    }
+    out
+}
+
+/// Run k-fold CV over `alphas` with TLFre-screened paths.
+pub fn cross_validate(
+    x: &DenseMatrix,
+    y: &[f32],
+    groups: &GroupStructure,
+    alphas: &[f64],
+    k_folds: usize,
+    base_cfg: &PathConfig,
+    seed: u64,
+) -> CvOutput {
+    let n = x.rows();
+    let folds = make_folds(n, k_folds, seed);
+    let n_lambda = base_cfg.n_lambda;
+
+    // mse[alpha_idx][lambda_idx] accumulated over folds
+    let mut mse = vec![vec![0.0f64; n_lambda]; alphas.len()];
+    let mut nnz = vec![vec![0.0f64; n_lambda]; alphas.len()];
+    let mut screen_total = 0.0;
+    let mut solve_total = 0.0;
+
+    for fold in &folds {
+        // Train rows = complement of the fold.
+        let in_fold: std::collections::BTreeSet<usize> = fold.iter().copied().collect();
+        let train_rows: Vec<usize> = (0..n).filter(|i| !in_fold.contains(i)).collect();
+        let x_train = gather_rows(x, &train_rows);
+        let y_train: Vec<f32> = train_rows.iter().map(|&i| y[i]).collect();
+        let x_test = gather_rows(x, fold);
+        let y_test: Vec<f32> = fold.iter().map(|&i| y[i]).collect();
+
+        for (ai, &alpha) in alphas.iter().enumerate() {
+            let cfg = PathConfig { alpha, ..base_cfg.clone() };
+            let out = run_tlfre_path(&x_train, &y_train, groups, &cfg);
+            screen_total += out.screen_total_s;
+            solve_total += out.solve_total_s;
+            // Held-out MSE per path step requires β per step; the runner
+            // reports stats only, so re-walk the path cheaply: we re-run
+            // predictions from the final coefficients of each step by
+            // recomputing them here. To keep the runner lean we instead
+            // evaluate only the *reported* sparsity and recompute β via a
+            // second screened pass storing coefficients.
+            let betas = path_coefficients(&x_train, &y_train, groups, &cfg);
+            for (li, beta) in betas.iter().enumerate() {
+                let mut pred = vec![0.0f32; fold.len()];
+                x_test.matvec(beta, &mut pred);
+                let mut e = 0.0f64;
+                for (p, t) in pred.iter().zip(&y_test) {
+                    let d = (p - t) as f64;
+                    e += d * d;
+                }
+                mse[ai][li] += e / fold.len() as f64;
+                nnz[ai][li] += (beta.len() - ops::count_zeros(beta)) as f64;
+            }
+        }
+    }
+
+    let kf = folds.len() as f64;
+    let mut points = Vec::new();
+    for (ai, &alpha) in alphas.iter().enumerate() {
+        for li in 0..n_lambda {
+            points.push(CvPoint {
+                alpha,
+                lambda_ratio: ratio_at(li, n_lambda, base_cfg.lambda_min_ratio),
+                mse: mse[ai][li] / kf,
+                mean_nnz: nnz[ai][li] / kf,
+            });
+        }
+    }
+    let best = points
+        .iter()
+        .min_by(|a, b| a.mse.partial_cmp(&b.mse).unwrap())
+        .expect("nonempty grid")
+        .clone();
+    CvOutput { points, best, screen_total_s: screen_total, solve_total_s: solve_total }
+}
+
+/// λ/λmax at grid index `i` for a log grid with the given floor.
+fn ratio_at(i: usize, k: usize, min_ratio: f64) -> f64 {
+    (min_ratio.ln() * i as f64 / (k - 1) as f64).exp()
+}
+
+/// Re-run a screened path, returning the coefficient vector at every λ.
+pub fn path_coefficients(
+    x: &DenseMatrix,
+    y: &[f32],
+    groups: &GroupStructure,
+    cfg: &PathConfig,
+) -> Vec<Vec<f32>> {
+    use crate::coordinator::path::log_lambda_grid;
+    use crate::coordinator::reduce::ReducedProblem;
+    use crate::screening::lambda_max::sgl_lambda_max;
+    use crate::screening::tlfre::{tlfre_screen_inexact, TlfreContext};
+    use crate::sgl::fista::{solve_fista, FistaOptions};
+    use crate::sgl::problem::{SglParams, SglProblem};
+
+    let prob = SglProblem::new(x, y, groups);
+    let p = prob.n_features();
+    let lmax = sgl_lambda_max(&prob, cfg.alpha);
+    let ctx = TlfreContext::precompute(&prob);
+    let grid = log_lambda_grid(lmax.lambda_max, cfg.lambda_min_ratio, cfg.n_lambda);
+    let opts = FistaOptions { tol: cfg.tol, max_iter: cfg.max_iter, ..Default::default() };
+
+    let mut betas = Vec::with_capacity(grid.len());
+    let mut beta = vec![0.0f32; p];
+    betas.push(beta.clone());
+    let mut lambda_bar = grid[0];
+    let mut resid = vec![0.0f32; prob.n_samples()];
+    let mut corr = vec![0.0f32; p];
+    for &lambda in &grid[1..] {
+        crate::sgl::objective::residual(&prob, &beta, &mut resid);
+        let params_bar = SglParams::from_alpha_lambda(cfg.alpha, lambda_bar);
+        prob.x.matvec_t(&resid, &mut corr);
+        let (gap, s_feas) =
+            crate::sgl::dual::duality_gap(&prob, &params_bar, &beta, &resid, &corr);
+        let theta_bar: Vec<f32> =
+            resid.iter().map(|&v| (v as f64 * s_feas / lambda_bar) as f32).collect();
+        let outcome = tlfre_screen_inexact(
+            &prob,
+            cfg.alpha,
+            lambda,
+            lambda_bar,
+            &theta_bar,
+            gap * cfg.gap_inflation,
+            &lmax,
+            &ctx,
+        );
+        let params = SglParams::from_alpha_lambda(cfg.alpha, lambda);
+        match ReducedProblem::build(x, groups, &outcome) {
+            None => beta.fill(0.0),
+            Some(red) => {
+                let rp = SglProblem::new(&red.x, y, &red.groups);
+                let warm = red.gather(&beta);
+                let res = solve_fista(&rp, &params, Some(&warm), &opts);
+                red.scatter(&res.beta, &mut beta);
+            }
+        }
+        betas.push(beta.clone());
+        lambda_bar = lambda;
+    }
+    betas
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_synthetic, SyntheticSpec};
+
+    #[test]
+    fn folds_partition_samples() {
+        let folds = make_folds(23, 4, 1);
+        assert_eq!(folds.len(), 4);
+        let mut all: Vec<usize> = folds.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..23).collect::<Vec<_>>());
+        // balanced within 1
+        let sizes: Vec<usize> = folds.iter().map(|f| f.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn cv_picks_sensible_lambda() {
+        // Planted sparse model: CV should prefer an interior λ (not the
+        // densest end with overfitting noise, not λmax with β = 0).
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(60, 200, 20), 401);
+        let cfg = PathConfig {
+            n_lambda: 12,
+            lambda_min_ratio: 0.01,
+            tol: 1e-5,
+            ..Default::default()
+        };
+        let out = cross_validate(&ds.x, &ds.y, &ds.groups, &[0.5, 1.0], 3, &cfg, 7);
+        assert_eq!(out.points.len(), 2 * 12);
+        assert!(out.best.lambda_ratio < 1.0, "best at λmax (underfit)");
+        assert!(out.best.mse.is_finite());
+        // The best model recovers roughly the planted sparsity order.
+        assert!(out.best.mean_nnz >= 1.0);
+        assert!(out.best.mean_nnz < 150.0);
+    }
+
+    #[test]
+    fn path_coefficients_matches_runner_sparsity() {
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 120, 12), 402);
+        let cfg = PathConfig { n_lambda: 8, lambda_min_ratio: 0.05, tol: 1e-6, ..Default::default() };
+        let betas = path_coefficients(&ds.x, &ds.y, &ds.groups, &cfg);
+        let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+        assert_eq!(betas.len(), out.steps.len());
+        for (b, s) in betas.iter().zip(&out.steps) {
+            let nnz = b.len() - ops::count_zeros(b);
+            assert_eq!(nnz, s.nonzeros, "λ={}", s.lambda);
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! DPC pathwise runner for nonnegative Lasso (Section 6.2's protocol).
+
+use super::path::log_lambda_grid;
+use crate::linalg::ops;
+use crate::linalg::DenseMatrix;
+use crate::nonneg::{lambda_max, solve_nonneg, NonnegOptions, NonnegProblem};
+use crate::linalg::power::spectral_norm;
+use crate::util::{Rng, Timer};
+
+/// Configuration for a DPC path run.
+#[derive(Debug, Clone)]
+pub struct DpcPathConfig {
+    pub n_lambda: usize,
+    pub lambda_min_ratio: f64,
+    pub tol: f64,
+    pub max_iter: usize,
+    pub verify_safety: bool,
+    /// See [`super::runner::PathConfig::gap_inflation`].
+    pub gap_inflation: f64,
+}
+
+impl Default for DpcPathConfig {
+    fn default() -> Self {
+        DpcPathConfig {
+            n_lambda: 100,
+            lambda_min_ratio: 0.01,
+            tol: 1e-6,
+            max_iter: 20_000,
+            verify_safety: false,
+            gap_inflation: 0.0,
+        }
+    }
+}
+
+/// Per-λ statistics of the DPC path.
+#[derive(Debug, Clone)]
+pub struct DpcStep {
+    pub lambda: f64,
+    /// Rejection ratio: screened features / actual inactive features.
+    pub rejection: f64,
+    pub screen_s: f64,
+    pub solve_s: f64,
+    pub active_features: usize,
+    pub iters: usize,
+    pub zeros: usize,
+}
+
+/// Whole-path output.
+#[derive(Debug, Clone)]
+pub struct DpcPathOutput {
+    pub lambda_max: f64,
+    pub steps: Vec<DpcStep>,
+    pub screen_total_s: f64,
+    pub solve_total_s: f64,
+}
+
+impl DpcPathOutput {
+    pub fn mean_rejection(&self) -> f64 {
+        let xs: Vec<f64> =
+            self.steps.iter().filter(|s| s.zeros > 0).map(|s| s.rejection).collect();
+        if xs.is_empty() {
+            0.0
+        } else {
+            xs.iter().sum::<f64>() / xs.len() as f64
+        }
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.screen_total_s + self.solve_total_s
+    }
+}
+
+/// Run the DPC-screened nonnegative-Lasso path.
+pub fn run_dpc_path(x: &DenseMatrix, y: &[f32], cfg: &DpcPathConfig) -> DpcPathOutput {
+    let prob = NonnegProblem::new(x, y);
+    let p = x.cols();
+    let n = x.rows();
+
+    let mut screen_total = 0.0f64;
+    let t = Timer::start();
+    let col_norms = x.col_norms();
+    let (lmax, argmax_col) = lambda_max(&prob);
+    screen_total += t.elapsed_s();
+
+    let grid = log_lambda_grid(lmax, cfg.lambda_min_ratio, cfg.n_lambda);
+    let mut steps = Vec::with_capacity(grid.len());
+    steps.push(DpcStep {
+        lambda: grid[0],
+        rejection: 1.0,
+        screen_s: 0.0,
+        solve_s: 0.0,
+        active_features: 0,
+        iters: 0,
+        zeros: p,
+    });
+
+    let mut beta = vec![0.0f32; p];
+    let mut lambda_bar = lmax;
+    let mut solve_total = 0.0f64;
+    let mut resid = vec![0.0f32; n];
+
+    let mut corr = vec![0.0f32; p];
+    for &lambda in &grid[1..] {
+        // Feasibility-scaled dual point + gap-based radius inflation (see
+        // the SGL runner for the rationale).
+        let ts = Timer::start();
+        x.matvec(&beta, &mut resid);
+        for i in 0..n {
+            resid[i] = y[i] - resid[i];
+        }
+        x.matvec_t(&resid, &mut corr);
+        let (gap_raw, s_feas) =
+            crate::nonneg::duality_gap(&prob, lambda_bar, &beta, &resid, &corr);
+        let gap_bar = gap_raw * cfg.gap_inflation;
+        let theta_bar: Vec<f32> =
+            resid.iter().map(|&v| (v as f64 * s_feas / lambda_bar) as f32).collect();
+        let out = crate::screening::dpc::dpc_screen_inexact(
+            &prob, lambda, lambda_bar, &theta_bar, gap_bar, lmax, argmax_col, &col_norms,
+        );
+        let active: Vec<usize> = out.active_features();
+        let screen_s = ts.elapsed_s();
+        screen_total += screen_s;
+
+        let ts = Timer::start();
+        let (iters, active_n) = if active.is_empty() {
+            beta.fill(0.0);
+            (0usize, 0usize)
+        } else {
+            let xr = x.select_cols(&active);
+            let rp = NonnegProblem::new(&xr, y);
+            let warm: Vec<f32> = active.iter().map(|&j| beta[j]).collect();
+            let res = solve_nonneg(
+                &rp,
+                lambda,
+                Some(&warm),
+                &NonnegOptions { tol: cfg.tol, max_iter: cfg.max_iter, ..Default::default() },
+            );
+            beta.fill(0.0);
+            for (k, &j) in active.iter().enumerate() {
+                beta[j] = res.beta[k];
+            }
+            (res.iters, active.len())
+        };
+        let solve_s = ts.elapsed_s();
+        solve_total += solve_s;
+
+        if cfg.verify_safety {
+            let full = solve_nonneg(
+                &prob,
+                lambda,
+                None,
+                &NonnegOptions { tol: cfg.tol, max_iter: cfg.max_iter, ..Default::default() },
+            );
+            for j in 0..p {
+                if !out.feature_kept[j] {
+                    assert!(
+                        full.beta[j].abs() < 1e-4,
+                        "DPC SAFETY VIOLATION at λ={lambda}: feature {j} β={}",
+                        full.beta[j]
+                    );
+                }
+            }
+        }
+
+        let zeros = ops::count_zeros(&beta);
+        steps.push(DpcStep {
+            lambda,
+            rejection: out.rejected as f64 / zeros.max(1) as f64,
+            screen_s,
+            solve_s,
+            active_features: active_n,
+            iters,
+            zeros,
+        });
+        lambda_bar = lambda;
+    }
+
+    DpcPathOutput { lambda_max: lmax, steps, screen_total_s: screen_total, solve_total_s: solve_total }
+}
+
+/// The no-screening nonnegative-Lasso baseline path (Table 3's "solver").
+pub fn run_nonneg_baseline(x: &DenseMatrix, y: &[f32], cfg: &DpcPathConfig) -> DpcPathOutput {
+    let prob = NonnegProblem::new(x, y);
+    let p = x.cols();
+    let (lmax, _) = lambda_max(&prob);
+    let grid = log_lambda_grid(lmax, cfg.lambda_min_ratio, cfg.n_lambda);
+
+    // 2% inflation: power iteration approaches σmax from below.
+    let mut rng = Rng::seed_from_u64(0xD9C);
+    let sig = spectral_norm(x, 1e-6, 500, &mut rng).sigma * 1.02;
+    let lip = (sig * sig).max(f64::MIN_POSITIVE);
+
+    let mut steps = Vec::with_capacity(grid.len());
+    steps.push(DpcStep {
+        lambda: grid[0],
+        rejection: 0.0,
+        screen_s: 0.0,
+        solve_s: 0.0,
+        active_features: p,
+        iters: 0,
+        zeros: p,
+    });
+    let mut beta = vec![0.0f32; p];
+    let mut solve_total = 0.0f64;
+    for &lambda in &grid[1..] {
+        let ts = Timer::start();
+        let res = solve_nonneg(
+            &prob,
+            lambda,
+            Some(&beta),
+            &NonnegOptions {
+                tol: cfg.tol,
+                max_iter: cfg.max_iter,
+                lipschitz: Some(lip),
+                ..Default::default()
+            },
+        );
+        let solve_s = ts.elapsed_s();
+        solve_total += solve_s;
+        beta = res.beta;
+        steps.push(DpcStep {
+            lambda,
+            rejection: 0.0,
+            screen_s: 0.0,
+            solve_s,
+            active_features: p,
+            iters: res.iters,
+            zeros: ops::count_zeros(&beta),
+        });
+    }
+    DpcPathOutput { lambda_max: lmax, steps, screen_total_s: 0.0, solve_total_s: solve_total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn nonneg_dataset(seed: u64, n: usize, p: usize) -> (DenseMatrix, Vec<f32>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut x = DenseMatrix::from_fn(n, p, |_, _| rng.gaussian().abs() as f32);
+        x.normalize_cols();
+        let picks = rng.sample_indices(p, p / 10 + 1);
+        let mut y = vec![0.0f32; n];
+        for &j in &picks {
+            ops::axpy(rng.uniform_range(0.2, 1.0) as f32, x.col(j), &mut y);
+        }
+        (x, y)
+    }
+
+    fn cfg() -> DpcPathConfig {
+        DpcPathConfig { n_lambda: 12, lambda_min_ratio: 0.05, tol: 1e-7, ..Default::default() }
+    }
+
+    #[test]
+    fn dpc_path_matches_baseline_sparsity() {
+        let (x, y) = nonneg_dataset(201, 25, 120);
+        let a = run_dpc_path(&x, &y, &cfg());
+        let b = run_nonneg_baseline(&x, &y, &cfg());
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            let diff = (sa.zeros as i64 - sb.zeros as i64).abs();
+            assert!(diff <= 2, "λ={}: zeros {} vs {}", sa.lambda, sa.zeros, sb.zeros);
+        }
+    }
+
+    #[test]
+    fn dpc_path_safe() {
+        let (x, y) = nonneg_dataset(202, 20, 80);
+        let out = run_dpc_path(&x, &y, &DpcPathConfig { verify_safety: true, ..cfg() });
+        assert!(out.mean_rejection() > 0.5, "rejection {}", out.mean_rejection());
+    }
+
+    #[test]
+    fn screening_reduces_work() {
+        let (x, y) = nonneg_dataset(203, 25, 150);
+        let out = run_dpc_path(&x, &y, &cfg());
+        // The solver should essentially never see the full matrix.
+        let max_active = out.steps.iter().map(|s| s.active_features).max().unwrap();
+        assert!(max_active < 150, "screening never reduced the problem");
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 coordinator: the pathwise regularization driver.
+//!
+//! This is the system the paper's evaluation actually runs: for each α,
+//! solve SGL over a descending log-spaced λ grid (100 points from λmax to
+//! 0.01·λmax), warm-starting each solve from the previous solution, with
+//! TLFre screening interposed between path steps to shrink the design
+//! matrix handed to the solver. The coordinator owns:
+//!
+//! * grid construction ([`path`]),
+//! * the screening ↔ solver interlock and reduced-problem extraction
+//!   ([`runner`], [`reduce`]),
+//! * the nonnegative-Lasso / DPC equivalent ([`dpc_runner`]),
+//! * per-step statistics — the paper's rejection ratios r₁/r₂, timings and
+//!   speedups consumed by the bench harness.
+
+pub mod cv;
+pub mod dpc_runner;
+pub mod path;
+pub mod reduce;
+pub mod runner;
+
+pub use dpc_runner::{run_dpc_path, run_nonneg_baseline, DpcPathConfig, DpcPathOutput};
+pub use path::{alpha_grid_from_angles, log_lambda_grid, PAPER_ALPHA_ANGLES};
+pub use runner::{run_baseline_path, run_tlfre_path, PathConfig, PathOutput, PathStep, SolverKind};

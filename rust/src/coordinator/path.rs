@@ -1,0 +1,63 @@
+//! Parameter grids.
+//!
+//! The paper samples 100 λ values equally spaced on the *logarithmic* scale
+//! of λ/λmax from 1.0 down to 0.01, and seven α values
+//! `tan(ψ), ψ ∈ {5°, 15°, 30°, 45°, 60°, 75°, 85°}` (Section 6.1).
+
+/// The paper's seven α angles in degrees.
+pub const PAPER_ALPHA_ANGLES: [f64; 7] = [5.0, 15.0, 30.0, 45.0, 60.0, 75.0, 85.0];
+
+/// `α = tan(ψ°)` grid.
+pub fn alpha_grid_from_angles(angles_deg: &[f64]) -> Vec<f64> {
+    angles_deg.iter().map(|&a| (a * std::f64::consts::PI / 180.0).tan()).collect()
+}
+
+/// Descending log-spaced grid of `k` values from `lambda_max` to
+/// `min_ratio·lambda_max` (inclusive on both ends).
+pub fn log_lambda_grid(lambda_max: f64, min_ratio: f64, k: usize) -> Vec<f64> {
+    assert!(k >= 2, "need at least the two endpoints");
+    assert!(lambda_max > 0.0 && min_ratio > 0.0 && min_ratio < 1.0);
+    let log_min = min_ratio.ln();
+    (0..k)
+        .map(|i| {
+            let t = i as f64 / (k - 1) as f64;
+            lambda_max * (t * log_min).exp()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_endpoints_and_monotone() {
+        let g = log_lambda_grid(2.0, 0.01, 100);
+        assert_eq!(g.len(), 100);
+        assert!((g[0] - 2.0).abs() < 1e-12);
+        assert!((g[99] - 0.02).abs() < 1e-12);
+        for w in g.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+
+    #[test]
+    fn grid_log_spacing_constant_ratio() {
+        let g = log_lambda_grid(1.0, 0.01, 5);
+        let r0 = g[1] / g[0];
+        for w in g.windows(2) {
+            assert!((w[1] / w[0] - r0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn alpha_grid_matches_tan() {
+        let a = alpha_grid_from_angles(&PAPER_ALPHA_ANGLES);
+        assert_eq!(a.len(), 7);
+        assert!((a[3] - 1.0).abs() < 1e-12); // tan 45° = 1
+        assert!(a[0] < 0.1 && a[6] > 11.0);
+        for w in a.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Reduced-problem extraction and solution scatter.
+//!
+//! After a TLFre screening pass, the solver only sees the surviving
+//! features: a column-gathered copy of `X` (contiguous, cache-friendly)
+//! and a recomputed group structure over the survivors. Solutions are
+//! scattered back into the full coefficient vector — screened positions
+//! are exactly zero by the safety guarantee.
+
+use crate::groups::GroupStructure;
+use crate::linalg::DenseMatrix;
+use crate::screening::tlfre::TlfreOutcome;
+
+/// A reduced SGL problem, with the bookkeeping to go back to full space.
+#[derive(Debug, Clone)]
+pub struct ReducedProblem {
+    /// Gathered design matrix over surviving features.
+    pub x: DenseMatrix,
+    /// Group structure over surviving features (groups that lost all
+    /// features to (L₂) are dropped entirely).
+    pub groups: GroupStructure,
+    /// For each reduced column, its index in the full feature space.
+    pub feature_map: Vec<usize>,
+}
+
+impl ReducedProblem {
+    /// Build from a screening outcome. Returns `None` when nothing
+    /// survives (the solution is identically zero).
+    ///
+    /// The reduced groups carry the **original** penalty weights `√n_g`:
+    /// screened features are certified zero at the optimum, so the group
+    /// norm over the survivors equals the norm over the full group — the
+    /// reduced problem with original weights is *exactly* the restricted
+    /// full problem. Recomputing `√(kept)` would silently under-penalize.
+    pub fn build(x: &DenseMatrix, groups: &GroupStructure, out: &TlfreOutcome) -> Option<ReducedProblem> {
+        let mut sizes = Vec::new();
+        let mut weights = Vec::new();
+        let mut feature_map = Vec::new();
+        for (g, s, e) in groups.iter() {
+            if !out.group_kept[g] {
+                continue;
+            }
+            let before = feature_map.len();
+            for i in s..e {
+                if out.feature_kept[i] {
+                    feature_map.push(i);
+                }
+            }
+            let kept = feature_map.len() - before;
+            if kept > 0 {
+                sizes.push(kept);
+                weights.push(groups.weight(g));
+            }
+        }
+        if feature_map.is_empty() {
+            return None;
+        }
+        Some(ReducedProblem {
+            x: x.select_cols(&feature_map),
+            groups: GroupStructure::from_sizes_weighted(&sizes, &weights),
+            feature_map,
+        })
+    }
+
+    /// Restrict a full coefficient vector to the reduced space (warm start).
+    pub fn gather(&self, full: &[f32]) -> Vec<f32> {
+        self.feature_map.iter().map(|&j| full[j]).collect()
+    }
+
+    /// Scatter a reduced solution into a zeroed full-space vector.
+    pub fn scatter(&self, reduced: &[f32], full_out: &mut [f32]) {
+        assert_eq!(reduced.len(), self.feature_map.len());
+        full_out.fill(0.0);
+        for (k, &j) in self.feature_map.iter().enumerate() {
+            full_out[j] = reduced[k];
+        }
+    }
+
+    #[inline]
+    pub fn n_features(&self) -> usize {
+        self.feature_map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::screening::tlfre::{ScreenStats, TlfreOutcome};
+
+    fn outcome(group_kept: Vec<bool>, feature_kept: Vec<bool>) -> TlfreOutcome {
+        TlfreOutcome { group_kept, feature_kept, stats: ScreenStats::default() }
+    }
+
+    #[test]
+    fn build_gather_scatter_roundtrip() {
+        let x = DenseMatrix::from_fn(3, 6, |i, j| (i * 6 + j) as f32);
+        let groups = GroupStructure::from_sizes(&[2, 2, 2]);
+        // Reject group 1 entirely; reject feature 5 inside group 2.
+        let out = outcome(
+            vec![true, false, true],
+            vec![true, true, false, false, true, false],
+        );
+        let red = ReducedProblem::build(&x, &groups, &out).unwrap();
+        assert_eq!(red.feature_map, vec![0, 1, 4]);
+        assert_eq!(red.groups.n_groups(), 2);
+        assert_eq!(red.groups.size(0), 2);
+        assert_eq!(red.groups.size(1), 1);
+        assert_eq!(red.x.col(2), x.col(4));
+
+        let full = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let g = red.gather(&full);
+        assert_eq!(g, vec![1.0, 2.0, 5.0]);
+        let mut back = vec![9.0f32; 6];
+        red.scatter(&g, &mut back);
+        assert_eq!(back, vec![1.0, 2.0, 0.0, 0.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn group_emptied_by_l2_is_dropped() {
+        let x = DenseMatrix::from_fn(2, 4, |_, j| j as f32 + 1.0);
+        let groups = GroupStructure::from_sizes(&[2, 2]);
+        // group 0 kept by L1 but both features rejected by L2
+        let out = outcome(vec![true, true], vec![false, false, true, true]);
+        let red = ReducedProblem::build(&x, &groups, &out).unwrap();
+        assert_eq!(red.groups.n_groups(), 1);
+        assert_eq!(red.feature_map, vec![2, 3]);
+    }
+
+    #[test]
+    fn nothing_survives_returns_none() {
+        let x = DenseMatrix::from_fn(2, 4, |_, j| j as f32);
+        let groups = GroupStructure::from_sizes(&[2, 2]);
+        let out = outcome(vec![false, false], vec![false; 4]);
+        assert!(ReducedProblem::build(&x, &groups, &out).is_none());
+    }
+}

@@ -1,0 +1,176 @@
+//! Binary data set serialization.
+//!
+//! Simple little-endian container (magic `TLFREDS1`) so generated sets can
+//! be cached on disk by the CLI (`tlfre generate`) and reloaded by benches
+//! without regeneration cost. Layout:
+//!
+//! ```text
+//! magic[8] | name_len u32 | name utf-8 | n u64 | p u64 | g u64
+//! | group sizes u64×g | has_beta u8 | X f32×(n·p) col-major
+//! | y f32×n | beta f32×p (if has_beta)
+//! ```
+
+use super::Dataset;
+use crate::groups::GroupStructure;
+use crate::linalg::DenseMatrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"TLFREDS1";
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    // bulk-copy through a byte view for speed
+    let bytes = unsafe {
+        std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
+    };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut out = vec![0.0f32; n];
+    let bytes = unsafe {
+        std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, n * 4)
+    };
+    r.read_exact(bytes)?;
+    // On a big-endian host we'd need a swap; this codebase targets LE
+    // (x86-64 / aarch64 LE), assert it at compile time.
+    #[cfg(target_endian = "big")]
+    compile_error!("dataset IO assumes a little-endian target");
+    Ok(out)
+}
+
+/// Save a data set to `path`.
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    let name = ds.name.as_bytes();
+    write_u32(&mut w, name.len() as u32)?;
+    w.write_all(name)?;
+    write_u64(&mut w, ds.n() as u64)?;
+    write_u64(&mut w, ds.p() as u64)?;
+    write_u64(&mut w, ds.groups.n_groups() as u64)?;
+    for g in 0..ds.groups.n_groups() {
+        write_u64(&mut w, ds.groups.size(g) as u64)?;
+    }
+    w.write_all(&[ds.beta_star.is_some() as u8])?;
+    write_f32s(&mut w, ds.x.data())?;
+    write_f32s(&mut w, &ds.y)?;
+    if let Some(b) = &ds.beta_star {
+        write_f32s(&mut w, b)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a data set from `path`.
+pub fn load(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a TLFre dataset (bad magic)");
+    }
+    let name_len = read_u32(&mut r)? as usize;
+    if name_len > 4096 {
+        bail!("{path:?}: corrupt header (name length {name_len})");
+    }
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let name = String::from_utf8(name).context("dataset name not utf-8")?;
+    let n = read_u64(&mut r)? as usize;
+    let p = read_u64(&mut r)? as usize;
+    let g = read_u64(&mut r)? as usize;
+    if n == 0 || p == 0 || g == 0 || n > 1 << 24 || p > 1 << 28 {
+        bail!("{path:?}: implausible dimensions {n}×{p} ({g} groups)");
+    }
+    let mut sizes = Vec::with_capacity(g);
+    for _ in 0..g {
+        sizes.push(read_u64(&mut r)? as usize);
+    }
+    if sizes.iter().sum::<usize>() != p {
+        bail!("{path:?}: group sizes do not sum to p");
+    }
+    let mut has_beta = [0u8; 1];
+    r.read_exact(&mut has_beta)?;
+    let xdata = read_f32s(&mut r, n * p)?;
+    let y = read_f32s(&mut r, n)?;
+    let beta_star = if has_beta[0] != 0 { Some(read_f32s(&mut r, p)?) } else { None };
+    Ok(Dataset {
+        name,
+        x: DenseMatrix::from_col_major(n, p, xdata),
+        y,
+        groups: GroupStructure::from_sizes(&sizes),
+        beta_star,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_synthetic, SyntheticSpec};
+
+    #[test]
+    fn roundtrip() {
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(10, 40, 8), 5);
+        let dir = std::env::temp_dir().join("tlfre_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.bin");
+        save(&ds, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.name, ds.name);
+        assert_eq!(back.x.data(), ds.x.data());
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.beta_star, ds.beta_star);
+        assert_eq!(back.groups, ds.groups);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("tlfre_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bin");
+        std::fs::write(&path, b"not a dataset at all").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(8, 16, 4), 6);
+        let dir = std::env::temp_dir().join("tlfre_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.bin");
+        save(&ds, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,234 @@
+//! Synthetic designs — exactly the paper's Section 6.1.1 recipe.
+//!
+//! True model: `y = Xβ* + 0.01ε`, `ε ~ N(0, I)`.
+//!
+//! * **Synthetic 1** — `X` entries i.i.d. N(0,1), 250 × 10000 in 1000
+//!   groups; γ₁ = γ₂ = 10%.
+//! * **Synthetic 2** — columns follow an AR(1) process with
+//!   `corr(x_i, x_j) = 0.5^{|i−j|}`; γ₁ = γ₂ = 20%.
+//!
+//! β* construction: pick γ₁ percent of the groups at random, then γ₂
+//! percent of the features in each picked group; populate the picked
+//! entries from N(0,1), the rest are 0.
+
+use super::Dataset;
+use crate::groups::GroupStructure;
+use crate::linalg::DenseMatrix;
+use crate::util::Rng;
+
+/// Column correlation structure.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Correlation {
+    /// i.i.d. N(0, 1) entries (Synthetic 1).
+    Iid,
+    /// AR(1) across the feature index: `corr(x_i, x_j) = ρ^{|i−j|}`
+    /// (Synthetic 2 uses ρ = 0.5).
+    Ar(f64),
+}
+
+/// Generator specification.
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    pub name: String,
+    pub n: usize,
+    pub p: usize,
+    pub n_groups: usize,
+    pub correlation: Correlation,
+    /// Percent of groups carrying signal (the paper's γ₁), in [0, 100].
+    pub gamma1: f64,
+    /// Percent of features carrying signal inside a signal group (γ₂).
+    pub gamma2: f64,
+    /// Noise standard deviation (paper: 0.01).
+    pub noise: f64,
+}
+
+impl SyntheticSpec {
+    /// Paper's Synthetic 1 at full scale (250 × 10000, 1000 groups).
+    pub fn synthetic1() -> SyntheticSpec {
+        SyntheticSpec {
+            name: "Synthetic 1".into(),
+            n: 250,
+            p: 10_000,
+            n_groups: 1000,
+            correlation: Correlation::Iid,
+            gamma1: 10.0,
+            gamma2: 10.0,
+            noise: 0.01,
+        }
+    }
+
+    /// Paper's Synthetic 2 at full scale.
+    pub fn synthetic2() -> SyntheticSpec {
+        SyntheticSpec {
+            name: "Synthetic 2".into(),
+            n: 250,
+            p: 10_000,
+            n_groups: 1000,
+            correlation: Correlation::Ar(0.5),
+            gamma1: 20.0,
+            gamma2: 20.0,
+            noise: 0.01,
+        }
+    }
+
+    /// Synthetic 1 recipe at custom dimensions (tests / reduced benches).
+    pub fn synthetic1_scaled(n: usize, p: usize, n_groups: usize) -> SyntheticSpec {
+        SyntheticSpec { n, p, n_groups, name: format!("Synthetic 1 ({n}x{p})"), ..Self::synthetic1() }
+    }
+
+    /// Synthetic 2 recipe at custom dimensions.
+    pub fn synthetic2_scaled(n: usize, p: usize, n_groups: usize) -> SyntheticSpec {
+        SyntheticSpec { n, p, n_groups, name: format!("Synthetic 2 ({n}x{p})"), ..Self::synthetic2() }
+    }
+}
+
+/// Fill the design matrix per the correlation spec.
+fn fill_design(spec: &SyntheticSpec, rng: &mut Rng) -> DenseMatrix {
+    let (n, p) = (spec.n, spec.p);
+    let mut x = DenseMatrix::zeros(n, p);
+    match spec.correlation {
+        Correlation::Iid => {
+            rng.fill_gaussian_f32(x.data_mut());
+        }
+        Correlation::Ar(rho) => {
+            // Per sample (row), an AR(1) walk across the feature index:
+            // x_{i,0} ~ N(0,1); x_{i,j} = ρ x_{i,j−1} + √(1−ρ²) ε.
+            // This yields corr(x_i, x_j) = ρ^{|i−j|} exactly.
+            let w = (1.0 - rho * rho).sqrt();
+            let mut prev = vec![0.0f64; n];
+            for v in prev.iter_mut() {
+                *v = rng.gaussian();
+            }
+            for i in 0..n {
+                x.set(i, 0, prev[i] as f32);
+            }
+            for j in 1..p {
+                for i in 0..n {
+                    let v = rho * prev[i] + w * rng.gaussian();
+                    prev[i] = v;
+                    x.set(i, j, v as f32);
+                }
+            }
+        }
+    }
+    x
+}
+
+/// Build β* per the paper's γ₁/γ₂ recipe.
+fn build_beta(spec: &SyntheticSpec, groups: &GroupStructure, rng: &mut Rng) -> Vec<f32> {
+    let g_cnt = groups.n_groups();
+    let k_groups = ((spec.gamma1 / 100.0 * g_cnt as f64).round() as usize).clamp(1, g_cnt);
+    let chosen = rng.sample_indices(g_cnt, k_groups);
+    let mut beta = vec![0.0f32; groups.n_features()];
+    for &g in &chosen {
+        let (s, e) = groups.range(g);
+        let m = e - s;
+        let k_feat = ((spec.gamma2 / 100.0 * m as f64).round() as usize).clamp(1, m);
+        for &off in &rng.sample_indices(m, k_feat) {
+            beta[s + off] = rng.gaussian() as f32;
+        }
+    }
+    beta
+}
+
+/// Generate a data set from the spec (deterministic in `seed`).
+pub fn generate_synthetic(spec: &SyntheticSpec, seed: u64) -> Dataset {
+    assert!(spec.p % spec.n_groups == 0, "p must split into equal groups (paper setup)");
+    let mut rng = Rng::seed_from_u64(seed);
+    let x = fill_design(spec, &mut rng);
+    let groups = GroupStructure::uniform(spec.p, spec.n_groups);
+    let beta = build_beta(spec, &groups, &mut rng);
+    let mut y = vec![0.0f32; spec.n];
+    x.matvec(&beta, &mut y);
+    for v in y.iter_mut() {
+        *v += (spec.noise * rng.gaussian()) as f32;
+    }
+    Dataset { name: spec.name.clone(), x, y, groups, beta_star: Some(beta) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops;
+
+    #[test]
+    fn dims_and_determinism() {
+        let spec = SyntheticSpec::synthetic1_scaled(30, 200, 20);
+        let a = generate_synthetic(&spec, 7);
+        let b = generate_synthetic(&spec, 7);
+        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.n(), 30);
+        assert_eq!(a.p(), 200);
+        assert_eq!(a.groups.n_groups(), 20);
+        let c = generate_synthetic(&spec, 8);
+        assert_ne!(a.y, c.y);
+    }
+
+    #[test]
+    fn beta_sparsity_matches_gammas() {
+        let spec = SyntheticSpec::synthetic1_scaled(10, 1000, 100);
+        let ds = generate_synthetic(&spec, 1);
+        let beta = ds.beta_star.unwrap();
+        // 10% of 100 groups = 10 groups; 10% of 10 features each = 1 →
+        // exactly 10 nonzeros.
+        let nnz = beta.iter().filter(|&&b| b != 0.0).count();
+        assert_eq!(nnz, 10);
+        // They sit in exactly 10 distinct groups.
+        let mut gset = std::collections::BTreeSet::new();
+        for (j, &b) in beta.iter().enumerate() {
+            if b != 0.0 {
+                gset.insert(ds.groups.group_of(j));
+            }
+        }
+        assert_eq!(gset.len(), 10);
+    }
+
+    #[test]
+    fn iid_moments() {
+        let spec = SyntheticSpec::synthetic1_scaled(50, 400, 40);
+        let ds = generate_synthetic(&spec, 2);
+        let data = ds.x.data();
+        let mean: f64 = data.iter().map(|&v| v as f64).sum::<f64>() / data.len() as f64;
+        let var: f64 =
+            data.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / data.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn ar_correlation_structure() {
+        let spec = SyntheticSpec::synthetic2_scaled(2000, 50, 10);
+        let ds = generate_synthetic(&spec, 3);
+        let corr = |a: &[f32], b: &[f32]| -> f64 {
+            let d = ops::dot(a, b);
+            d / (ops::nrm2(a) * ops::nrm2(b))
+        };
+        // lag-1 ≈ 0.5, lag-2 ≈ 0.25, lag-4 ≈ 0.0625
+        let c1 = corr(ds.x.col(10), ds.x.col(11));
+        let c2 = corr(ds.x.col(10), ds.x.col(12));
+        let c4 = corr(ds.x.col(10), ds.x.col(14));
+        assert!((c1 - 0.5).abs() < 0.07, "lag1={c1}");
+        assert!((c2 - 0.25).abs() < 0.07, "lag2={c2}");
+        assert!(c4.abs() < 0.15, "lag4={c4}");
+    }
+
+    #[test]
+    fn response_is_signal_plus_small_noise() {
+        let spec = SyntheticSpec::synthetic1_scaled(40, 200, 20);
+        let ds = generate_synthetic(&spec, 4);
+        let beta = ds.beta_star.as_ref().unwrap();
+        let mut xb = vec![0.0f32; 40];
+        ds.x.matvec(beta, &mut xb);
+        let resid: f64 = ds
+            .y
+            .iter()
+            .zip(&xb)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        // noise sd 0.01 over 40 samples → ‖noise‖ ≈ 0.063
+        assert!(resid < 0.2, "residual norm {resid}");
+        assert!(ops::nrm2(&ds.y) > 1.0);
+    }
+}

@@ -1,0 +1,197 @@
+//! Group structure over the feature dimension.
+//!
+//! SGL partitions the `p` features into `G` contiguous groups
+//! `X = [X_1 … X_G]` with `n_g` features each (the paper's eq. (2)).
+//! Contiguity is without loss of generality — any partition can be made
+//! contiguous by permuting columns, which the data generators do up front.
+
+/// Immutable group partition of `0..p` into contiguous ranges.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GroupStructure {
+    /// `offsets[g]..offsets[g+1]` are the feature indices of group `g`;
+    /// length `G + 1`, `offsets[0] == 0`, strictly increasing.
+    offsets: Vec<usize>,
+    /// Map feature index -> group index (for O(1) lookups in the
+    /// feature-layer rule).
+    feature_group: Vec<u32>,
+    /// Penalty weight per group; `√n_g` by default. Reduced problems carry
+    /// the *original* group's weight — the penalty `λ₁√n_g‖β_g‖` keeps the
+    /// full-problem `n_g` even after screened (certified-zero) features
+    /// are dropped from the group, otherwise the reduced problem is not
+    /// equivalent to the restricted full problem.
+    weights: Vec<f64>,
+}
+
+impl GroupStructure {
+    /// Build from per-group sizes with the standard `√n_g` weights.
+    /// Panics on empty groups.
+    pub fn from_sizes(sizes: &[usize]) -> GroupStructure {
+        let weights: Vec<f64> = sizes.iter().map(|&s| (s as f64).sqrt()).collect();
+        GroupStructure::from_sizes_weighted(sizes, &weights)
+    }
+
+    /// Build with explicit penalty weights (used for reduced problems).
+    pub fn from_sizes_weighted(sizes: &[usize], weights: &[f64]) -> GroupStructure {
+        assert!(!sizes.is_empty(), "at least one group required");
+        assert_eq!(sizes.len(), weights.len(), "one weight per group");
+        let mut offsets = Vec::with_capacity(sizes.len() + 1);
+        offsets.push(0usize);
+        for (g, &s) in sizes.iter().enumerate() {
+            assert!(s > 0, "group {g} is empty");
+            assert!(weights[g] > 0.0, "group {g} has nonpositive weight");
+            offsets.push(offsets.last().unwrap() + s);
+        }
+        let p = *offsets.last().unwrap();
+        let mut feature_group = vec![0u32; p];
+        for g in 0..sizes.len() {
+            for f in offsets[g]..offsets[g + 1] {
+                feature_group[f] = g as u32;
+            }
+        }
+        GroupStructure { offsets, feature_group, weights: weights.to_vec() }
+    }
+
+    /// `G` equal groups of size `p / n_groups` (requires divisibility).
+    pub fn uniform(p: usize, n_groups: usize) -> GroupStructure {
+        assert!(n_groups > 0 && p % n_groups == 0, "p={p} not divisible into {n_groups} groups");
+        GroupStructure::from_sizes(&vec![p / n_groups; n_groups])
+    }
+
+    /// Trivial structure: every feature its own group (reduces SGL to
+    /// (1+α)-scaled Lasso; used in tests).
+    pub fn singletons(p: usize) -> GroupStructure {
+        GroupStructure::from_sizes(&vec![1; p])
+    }
+
+    #[inline]
+    pub fn n_groups(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn n_features(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    /// Feature range `[start, end)` of group `g`.
+    #[inline]
+    pub fn range(&self, g: usize) -> (usize, usize) {
+        (self.offsets[g], self.offsets[g + 1])
+    }
+
+    /// Size `n_g` of group `g`.
+    #[inline]
+    pub fn size(&self, g: usize) -> usize {
+        self.offsets[g + 1] - self.offsets[g]
+    }
+
+    /// The group's penalty weight (`√n_g` unless explicitly overridden for
+    /// a reduced problem).
+    #[inline]
+    pub fn weight(&self, g: usize) -> f64 {
+        self.weights[g]
+    }
+
+    /// Group containing feature `f`.
+    #[inline]
+    pub fn group_of(&self, f: usize) -> usize {
+        self.feature_group[f] as usize
+    }
+
+    /// All `(start, end)` ranges.
+    pub fn ranges(&self) -> Vec<(usize, usize)> {
+        (0..self.n_groups()).map(|g| self.range(g)).collect()
+    }
+
+    /// Iterator over `(g, start, end)`.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, usize)> + '_ {
+        (0..self.n_groups()).map(move |g| {
+            let (s, e) = self.range(g);
+            (g, s, e)
+        })
+    }
+
+    /// Whether all groups have the same size (enables the uniform-group AOT
+    /// kernels).
+    pub fn is_uniform(&self) -> Option<usize> {
+        let s = self.size(0);
+        if (0..self.n_groups()).all(|g| self.size(g) == s) {
+            Some(s)
+        } else {
+            None
+        }
+    }
+
+    /// Restrict to a subset of groups, producing the reduced structure
+    /// (carrying the original weights) and the flat feature indices it
+    /// came from (reduced-problem extraction).
+    pub fn select_groups(&self, keep: &[usize]) -> (GroupStructure, Vec<usize>) {
+        assert!(!keep.is_empty(), "cannot build an empty group structure");
+        let sizes: Vec<usize> = keep.iter().map(|&g| self.size(g)).collect();
+        let weights: Vec<f64> = keep.iter().map(|&g| self.weight(g)).collect();
+        let mut features = Vec::with_capacity(sizes.iter().sum());
+        for &g in keep {
+            let (s, e) = self.range(g);
+            features.extend(s..e);
+        }
+        (GroupStructure::from_sizes_weighted(&sizes, &weights), features)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_sizes_basic() {
+        let g = GroupStructure::from_sizes(&[2, 3, 1]);
+        assert_eq!(g.n_groups(), 3);
+        assert_eq!(g.n_features(), 6);
+        assert_eq!(g.range(1), (2, 5));
+        assert_eq!(g.size(2), 1);
+        assert!((g.weight(1) - 3f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn group_of_consistent() {
+        let g = GroupStructure::from_sizes(&[2, 3, 1]);
+        for f in 0..g.n_features() {
+            let gr = g.group_of(f);
+            let (s, e) = g.range(gr);
+            assert!(f >= s && f < e);
+        }
+    }
+
+    #[test]
+    fn uniform_and_singletons() {
+        let u = GroupStructure::uniform(10, 5);
+        assert_eq!(u.is_uniform(), Some(2));
+        let s = GroupStructure::singletons(4);
+        assert_eq!(s.n_groups(), 4);
+        assert_eq!(s.is_uniform(), Some(1));
+        let r = GroupStructure::from_sizes(&[1, 2]);
+        assert_eq!(r.is_uniform(), None);
+    }
+
+    #[test]
+    fn select_groups_reduced() {
+        let g = GroupStructure::from_sizes(&[2, 3, 1, 4]);
+        let (red, feats) = g.select_groups(&[0, 2, 3]);
+        assert_eq!(red.n_groups(), 3);
+        assert_eq!(red.n_features(), 7);
+        assert_eq!(feats, vec![0, 1, 5, 6, 7, 8, 9]);
+        assert_eq!(red.range(1), (2, 3));
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_group_panics() {
+        GroupStructure::from_sizes(&[2, 0, 1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_divisible_uniform_panics() {
+        GroupStructure::uniform(10, 3);
+    }
+}

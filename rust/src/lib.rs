@@ -1,0 +1,38 @@
+//! # TLFre — Two-Layer Feature Reduction for Sparse-Group Lasso
+//!
+//! A production-quality reproduction of *"Two-Layer Feature Reduction for
+//! Sparse-Group Lasso via Decomposition of Convex Sets"* (Wang & Ye,
+//! NIPS 2014), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the pathwise coordinator: a warm-started
+//!   regularization-path driver that interleaves exact (safe) screening with
+//!   SGL / nonnegative-Lasso solvers, plus every substrate the paper's
+//!   evaluation depends on (dense linear algebra, data generators, solvers,
+//!   a PJRT runtime for AOT-compiled artifacts, metrics, CLI, bench harness).
+//! * **Layer 2 (python/compile/model.py)** — the full-matrix screening graph
+//!   in JAX, lowered once to HLO text via `python/compile/aot.py`.
+//! * **Layer 1 (python/compile/kernels/)** — the fused screening kernel
+//!   (`Xᵀθ` → shrink `S₁` → per-group norm reduction) as a Pallas kernel.
+//!
+//! Python never runs on the request path: `make artifacts` produces
+//! `artifacts/*.hlo.txt` which [`runtime`] loads through the PJRT C API.
+//!
+//! See `examples/` for full workloads and `rust/benches/` for the
+//! reproduction of every table and figure in the paper.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod groups;
+pub mod linalg;
+pub mod nonneg;
+pub mod prox;
+pub mod runtime;
+pub mod screening;
+pub mod sgl;
+pub mod util;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,248 @@
+//! Column-major dense matrix.
+//!
+//! Column-major is the right layout for this workload: both hot sweeps —
+//! `Xᵀv` (one dot per column) and `Xβ` (one axpy per *nonzero* column of β)
+//! — walk contiguous column slices, and extracting the reduced matrix after
+//! screening is a straight `memcpy` per surviving column.
+
+use super::ops;
+use crate::groups::GroupStructure;
+
+/// Dense `rows × cols` matrix, column-major, `f32` storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> DenseMatrix {
+        DenseMatrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a column-major buffer (length must be `rows*cols`).
+    pub fn from_col_major(rows: usize, cols: usize, data: Vec<f32>) -> DenseMatrix {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        DenseMatrix { rows, cols, data }
+    }
+
+    /// Build from a generator `f(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> DenseMatrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                data.push(f(i, j));
+            }
+        }
+        DenseMatrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Raw column-major buffer.
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Contiguous column slice.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f32] {
+        debug_assert!(j < self.cols);
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f32] {
+        debug_assert!(j < self.cols);
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[j * self.rows + i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[j * self.rows + i] = v;
+    }
+
+    /// Contiguous view of a group block `X_g` (columns `[start, end)`).
+    #[inline]
+    pub fn col_range(&self, start: usize, end: usize) -> &[f32] {
+        debug_assert!(start <= end && end <= self.cols);
+        &self.data[start * self.rows..end * self.rows]
+    }
+
+    // ----- products ---------------------------------------------------------
+
+    /// `out = X β` — accumulates only over columns with nonzero coefficient,
+    /// which is what makes warm-started sparse iterates cheap.
+    pub fn matvec(&self, beta: &[f32], out: &mut [f32]) {
+        assert_eq!(beta.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        out.fill(0.0);
+        for (j, &bj) in beta.iter().enumerate() {
+            if bj != 0.0 {
+                ops::axpy(bj, self.col(j), out);
+            }
+        }
+    }
+
+    /// `out = Xᵀ v` — one dot product per column (the screening sweep).
+    pub fn matvec_t(&self, v: &[f32], out: &mut [f32]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        for j in 0..self.cols {
+            out[j] = ops::dot_f32(self.col(j), v);
+        }
+    }
+
+    /// `Xᵀ v` restricted to the columns in `idx` (active-set solver sweeps).
+    pub fn matvec_t_subset(&self, v: &[f32], idx: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), idx.len());
+        for (k, &j) in idx.iter().enumerate() {
+            out[k] = ops::dot_f32(self.col(j), v);
+        }
+    }
+
+    /// Per-column euclidean norms `‖x_j‖₂`.
+    pub fn col_norms(&self) -> Vec<f64> {
+        (0..self.cols).map(|j| ops::nrm2(self.col(j))).collect()
+    }
+
+    /// Extract the submatrix with the given columns (kept order).
+    pub fn select_cols(&self, idx: &[usize]) -> DenseMatrix {
+        let mut data = Vec::with_capacity(self.rows * idx.len());
+        for &j in idx {
+            data.extend_from_slice(self.col(j));
+        }
+        DenseMatrix { rows: self.rows, cols: idx.len(), data }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        ops::nrm2(&self.data)
+    }
+
+    /// Normalize every column to unit ℓ₂ norm (standard preprocessing for
+    /// screening experiments; zero columns are left untouched).
+    pub fn normalize_cols(&mut self) {
+        for j in 0..self.cols {
+            let n = ops::nrm2(self.col(j)) as f32;
+            if n > 0.0 {
+                ops::scale(1.0 / n, self.col_mut(j));
+            }
+        }
+    }
+
+    /// Validate that a group structure covers this matrix's columns.
+    pub fn check_groups(&self, groups: &GroupStructure) {
+        assert_eq!(
+            groups.n_features(),
+            self.cols,
+            "group structure covers {} features but matrix has {} columns",
+            groups.n_features(),
+            self.cols
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DenseMatrix {
+        // 2x3 matrix [[1,2,3],[4,5,6]]
+        DenseMatrix::from_col_major(2, 3, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0])
+    }
+
+    #[test]
+    fn indexing_and_cols() {
+        let m = sample();
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(1, 2), 6.0);
+        assert_eq!(m.col(1), &[2.0, 5.0]);
+        assert_eq!(m.col_range(1, 3), &[2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn from_fn_matches_set() {
+        let m = DenseMatrix::from_fn(3, 2, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.get(2, 1), 21.0);
+        assert_eq!(m.col(0), &[0.0, 10.0, 20.0]);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = sample();
+        let mut out = vec![0.0; 2];
+        m.matvec(&[1.0, 0.0, 2.0], &mut out);
+        assert_eq!(out, vec![1.0 + 6.0, 4.0 + 12.0]);
+    }
+
+    #[test]
+    fn matvec_t_known() {
+        let m = sample();
+        let mut out = vec![0.0; 3];
+        m.matvec_t(&[1.0, 1.0], &mut out);
+        assert_eq!(out, vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn matvec_t_subset_matches_full() {
+        let m = sample();
+        let mut full = vec![0.0; 3];
+        m.matvec_t(&[0.5, -1.0], &mut full);
+        let idx = vec![2usize, 0];
+        let mut sub = vec![0.0; 2];
+        m.matvec_t_subset(&[0.5, -1.0], &idx, &mut sub);
+        assert_eq!(sub, vec![full[2], full[0]]);
+    }
+
+    #[test]
+    fn select_and_norms() {
+        let m = sample();
+        let s = m.select_cols(&[2, 0]);
+        assert_eq!(s.cols(), 2);
+        assert_eq!(s.col(0), &[3.0, 6.0]);
+        assert_eq!(s.col(1), &[1.0, 4.0]);
+        let norms = m.col_norms();
+        assert!((norms[0] - (17.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn normalize_cols_unit() {
+        let mut m = sample();
+        m.normalize_cols();
+        for n in m.col_norms() {
+            assert!((n - 1.0).abs() < 1e-6);
+        }
+        // zero column stays zero
+        let mut z = DenseMatrix::zeros(3, 1);
+        z.normalize_cols();
+        assert_eq!(z.col(0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_col_major_length_mismatch_panics() {
+        DenseMatrix::from_col_major(2, 2, vec![1.0; 3]);
+    }
+}

@@ -1,0 +1,19 @@
+//! Dense linear algebra substrate.
+//!
+//! The paper's entire compute profile is dense level-1/level-2 BLAS over a
+//! tall-skinny design matrix `X ∈ R^{N×p}` (N ≪ p): the solver needs `Xβ`
+//! and `Xᵀr` every iteration, and the screening rules need one `Xᵀo` sweep
+//! per path step plus per-column and per-group-block norms. No BLAS is
+//! available offline, so the kernels here are hand-written, column-major,
+//! unroll-friendly loops (compiled with `target-cpu=native`).
+//!
+//! * [`dense`] — [`dense::DenseMatrix`], column-major storage with
+//!   group-block views.
+//! * [`ops`] — vector kernels: dot, axpy, nrm2, scale, …
+//! * [`power`] — power iteration for spectral norms `‖X_g‖₂`.
+
+pub mod dense;
+pub mod ops;
+pub mod power;
+
+pub use dense::DenseMatrix;

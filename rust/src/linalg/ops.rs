@@ -1,0 +1,188 @@
+//! Level-1 vector kernels (f64 accumulation over f32 data where it matters).
+//!
+//! All hot loops are written to autovectorize under `target-cpu=native`:
+//! straight-line indexed loops over slices with bounds hoisted by
+//! `chunks_exact`.
+
+/// Dot product with 4-lane partial sums (f32 in, f64 out for stability on
+/// long vectors).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s0 = 0.0f64;
+    let mut s1 = 0.0f64;
+    let mut s2 = 0.0f64;
+    let mut s3 = 0.0f64;
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let ra = ca.remainder();
+    let rb = cb.remainder();
+    for (x, y) in ca.zip(cb) {
+        s0 += (x[0] * y[0]) as f64;
+        s1 += (x[1] * y[1]) as f64;
+        s2 += (x[2] * y[2]) as f64;
+        s3 += (x[3] * y[3]) as f64;
+    }
+    let mut tail = 0.0f64;
+    for (x, y) in ra.iter().zip(rb) {
+        tail += (x * y) as f64;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Single-precision dot (used inside the innermost solver loops where the
+/// vectors are short — length N ≤ a few thousand).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = [0.0f32; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (x, y) in ca.zip(cb) {
+        for k in 0..8 {
+            s[k] += x[k] * y[k];
+        }
+    }
+    let mut acc = ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]));
+    for (x, y) in ra.iter().zip(rb) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Euclidean norm ‖x‖₂ (f64 accumulation).
+#[inline]
+pub fn nrm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Squared euclidean norm.
+#[inline]
+pub fn nrm2_sq(x: &[f32]) -> f64 {
+    dot(x, x)
+}
+
+/// ℓ∞ norm.
+#[inline]
+pub fn nrm_inf(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// ℓ₁ norm.
+#[inline]
+pub fn nrm1(x: &[f32]) -> f64 {
+    x.iter().map(|&v| v.abs() as f64).sum()
+}
+
+/// In-place scale `x *= alpha`.
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// `out = a - b`.
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..out.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// `out = a + alpha*b` (FISTA extrapolation).
+#[inline]
+pub fn add_scaled(a: &[f32], alpha: f32, b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..out.len() {
+        out[i] = a[i] + alpha * b[i];
+    }
+}
+
+/// ‖a − b‖₂ without materializing the difference.
+#[inline]
+pub fn dist2(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        s += d * d;
+    }
+    s.sqrt()
+}
+
+/// Count of exact zeros (used for sparsity/rejection accounting).
+#[inline]
+pub fn count_zeros(x: &[f32]) -> usize {
+    x.iter().filter(|&&v| v == 0.0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_dot(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x * y) as f64).sum()
+    }
+
+    #[test]
+    fn dot_matches_naive_various_lengths() {
+        for n in [0, 1, 3, 4, 7, 8, 17, 100, 255] {
+            let a: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos()).collect();
+            assert!((dot(&a, &b) - naive_dot(&a, &b)).abs() < 1e-4, "n={n}");
+            assert!((dot_f32(&a, &b) as f64 - naive_dot(&a, &b)).abs() < 1e-3, "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut y = vec![10.0f32, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, vec![6.0, 12.0, 18.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let x = vec![3.0f32, -4.0];
+        assert!((nrm2(&x) - 5.0).abs() < 1e-9);
+        assert!((nrm2_sq(&x) - 25.0).abs() < 1e-9);
+        assert_eq!(nrm_inf(&x), 4.0);
+        assert!((nrm1(&x) - 7.0).abs() < 1e-9);
+        assert_eq!(nrm_inf(&[]), 0.0);
+    }
+
+    #[test]
+    fn sub_add_dist() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![0.5f32, 1.0, 1.5];
+        let mut out = vec![0.0f32; 3];
+        sub(&a, &b, &mut out);
+        assert_eq!(out, vec![0.5, 1.0, 1.5]);
+        add_scaled(&a, 2.0, &b, &mut out);
+        assert_eq!(out, vec![2.0, 4.0, 6.0]);
+        assert!((dist2(&a, &b) - nrm2(&[0.5, 1.0, 1.5])).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_counting() {
+        assert_eq!(count_zeros(&[0.0, 1.0, 0.0, -0.0]), 3);
+        assert_eq!(count_zeros(&[]), 0);
+    }
+}

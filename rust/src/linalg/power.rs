@@ -1,0 +1,156 @@
+//! Power iteration for spectral norms.
+//!
+//! TLFre's group rule needs `‖X_g‖₂` (Theorem 15's radius `r‖X_g‖₂`) and the
+//! solvers need the Lipschitz constant `L = ‖X‖₂²`. The paper computes these
+//! with the power method ([8] in the paper) once per data set; this module
+//! does the same, operating directly on column blocks so no submatrix copy
+//! is needed.
+
+use super::dense::DenseMatrix;
+use super::ops;
+use crate::util::Rng;
+
+/// Result of a spectral-norm estimation.
+#[derive(Debug, Clone, Copy)]
+pub struct SpectralNorm {
+    /// Estimated largest singular value.
+    pub sigma: f64,
+    /// Iterations used.
+    pub iters: usize,
+    /// Relative change in the last iteration (convergence measure).
+    pub rel_change: f64,
+}
+
+/// Power iteration on `AᵀA` for the columns `[col_start, col_end)` of `x`.
+///
+/// Returns `σ_max` of the block. `tol` is the relative eigenvalue change
+/// stopping threshold; the estimate is a lower bound that converges to
+/// `σ_max` geometrically in `(σ₂/σ₁)²`.
+pub fn spectral_norm_block(
+    x: &DenseMatrix,
+    col_start: usize,
+    col_end: usize,
+    tol: f64,
+    max_iter: usize,
+    rng: &mut Rng,
+) -> SpectralNorm {
+    let n = x.rows();
+    let m = col_end - col_start;
+    assert!(m > 0, "empty column block");
+    // v ∈ R^m (feature space), u ∈ R^n (sample space)
+    let mut v: Vec<f32> = (0..m).map(|_| rng.gaussian() as f32).collect();
+    let nv = ops::nrm2(&v).max(f64::MIN_POSITIVE) as f32;
+    ops::scale(1.0 / nv, &mut v);
+    let mut u = vec![0.0f32; n];
+    let mut sigma_sq_prev = 0.0f64;
+    let mut rel = f64::INFINITY;
+    let mut it = 0;
+    while it < max_iter {
+        it += 1;
+        // u = A v
+        u.fill(0.0);
+        for (k, &vk) in v.iter().enumerate() {
+            if vk != 0.0 {
+                ops::axpy(vk, x.col(col_start + k), &mut u);
+            }
+        }
+        // w = Aᵀ u ; σ² estimate = ‖w‖ (since v normalized, ‖AᵀAv‖ → σ²)
+        for (k, vk) in v.iter_mut().enumerate() {
+            *vk = ops::dot_f32(x.col(col_start + k), &u);
+        }
+        let sigma_sq = ops::nrm2(&v);
+        if sigma_sq <= 0.0 {
+            // Zero block.
+            return SpectralNorm { sigma: 0.0, iters: it, rel_change: 0.0 };
+        }
+        ops::scale(1.0 / sigma_sq as f32, &mut v);
+        rel = (sigma_sq - sigma_sq_prev).abs() / sigma_sq.max(f64::MIN_POSITIVE);
+        if rel < tol {
+            sigma_sq_prev = sigma_sq;
+            break;
+        }
+        sigma_sq_prev = sigma_sq;
+    }
+    SpectralNorm { sigma: sigma_sq_prev.sqrt(), iters: it, rel_change: rel }
+}
+
+/// Spectral norm of the whole matrix.
+pub fn spectral_norm(x: &DenseMatrix, tol: f64, max_iter: usize, rng: &mut Rng) -> SpectralNorm {
+    spectral_norm_block(x, 0, x.cols(), tol, max_iter, rng)
+}
+
+/// Per-group spectral norms `‖X_g‖₂` for a group structure given as
+/// `(start, end)` column ranges.
+pub fn group_spectral_norms(
+    x: &DenseMatrix,
+    ranges: &[(usize, usize)],
+    tol: f64,
+    max_iter: usize,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    ranges
+        .iter()
+        .map(|&(s, e)| {
+            if e - s == 1 {
+                // Single column: σ = ‖x_j‖₂ exactly.
+                ops::nrm2(x.col(s))
+            } else {
+                spectral_norm_block(x, s, e, tol, max_iter, rng).sigma
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix_sigma_max() {
+        // diag(3, 1) embedded in 2x2
+        let x = DenseMatrix::from_col_major(2, 2, vec![3.0, 0.0, 0.0, 1.0]);
+        let mut rng = Rng::seed_from_u64(1);
+        let s = spectral_norm(&x, 1e-12, 500, &mut rng);
+        assert!((s.sigma - 3.0).abs() < 1e-6, "sigma={}", s.sigma);
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        // X = u vᵀ with ‖u‖=√(1+4)=√5, ‖v‖=√(9+16)=5 → σ = 5√5
+        let u = [1.0f32, 2.0];
+        let v = [3.0f32, 4.0];
+        let x = DenseMatrix::from_fn(2, 2, |i, j| u[i] * v[j]);
+        let mut rng = Rng::seed_from_u64(2);
+        let s = spectral_norm(&x, 1e-12, 500, &mut rng);
+        assert!((s.sigma - 5.0 * 5f64.sqrt()).abs() < 1e-4, "sigma={}", s.sigma);
+    }
+
+    #[test]
+    fn single_column_is_exact_norm() {
+        let x = DenseMatrix::from_col_major(3, 2, vec![1.0, 2.0, 2.0, 0.5, 0.5, 0.5]);
+        let mut rng = Rng::seed_from_u64(3);
+        let norms = group_spectral_norms(&x, &[(0, 1), (1, 2)], 1e-10, 200, &mut rng);
+        assert!((norms[0] - 3.0).abs() < 1e-9);
+        assert!((norms[1] - (0.75f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_block() {
+        let x = DenseMatrix::zeros(4, 3);
+        let mut rng = Rng::seed_from_u64(4);
+        let s = spectral_norm(&x, 1e-10, 100, &mut rng);
+        assert_eq!(s.sigma, 0.0);
+    }
+
+    #[test]
+    fn block_norm_bounded_by_frobenius_and_ge_col_norm() {
+        let mut rng = Rng::seed_from_u64(5);
+        let x = DenseMatrix::from_fn(10, 8, |_, _| rng.gaussian() as f32);
+        let s = spectral_norm_block(&x, 2, 7, 1e-10, 1000, &mut rng).sigma;
+        let sub = x.select_cols(&[2, 3, 4, 5, 6]);
+        let fro = sub.fro_norm();
+        let max_col = sub.col_norms().into_iter().fold(0.0f64, f64::max);
+        assert!(s <= fro + 1e-6, "sigma {s} > fro {fro}");
+        assert!(s >= max_col - 1e-6, "sigma {s} < max col norm {max_col}");
+    }
+}

@@ -1,0 +1,13 @@
+//! `tlfre` — CLI entry point for the TLFre reproduction.
+
+fn main() {
+    tlfre::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match tlfre::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

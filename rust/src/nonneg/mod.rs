@@ -1,0 +1,264 @@
+//! Nonnegative Lasso (Section 5 of the paper).
+//!
+//! ```text
+//! min_{β ≥ 0} ½‖y − Xβ‖² + λ‖β‖₁                    (80)
+//! ```
+//!
+//! The Fenchel dual (82) is `inf_θ ½‖y/λ − θ‖² − ½‖y‖²` over the polytope
+//! `{θ : ⟨x_i, θ⟩ ≤ 1}`, with KKT `λθ* = y − Xβ*`. The solver is projected
+//! FISTA with the closed-form prox `max(0, v − tλ)` and a duality-gap stop
+//! using the radial feasibility scaling of `θ̂ = (y − Xβ)/λ`.
+
+use crate::linalg::ops;
+use crate::linalg::power::spectral_norm;
+use crate::linalg::DenseMatrix;
+use crate::prox::nonneg_l1_prox;
+use crate::util::Rng;
+
+/// A borrowed nonnegative-Lasso problem instance.
+#[derive(Debug, Clone, Copy)]
+pub struct NonnegProblem<'a> {
+    pub x: &'a DenseMatrix,
+    pub y: &'a [f32],
+}
+
+impl<'a> NonnegProblem<'a> {
+    pub fn new(x: &'a DenseMatrix, y: &'a [f32]) -> Self {
+        assert_eq!(x.rows(), y.len());
+        NonnegProblem { x, y }
+    }
+}
+
+/// Options (same semantics as the SGL FISTA options).
+#[derive(Debug, Clone)]
+pub struct NonnegOptions {
+    pub max_iter: usize,
+    pub tol: f64,
+    pub check_every: usize,
+    pub lipschitz: Option<f64>,
+}
+
+impl Default for NonnegOptions {
+    fn default() -> Self {
+        NonnegOptions { max_iter: 20_000, tol: 1e-6, check_every: 10, lipschitz: None }
+    }
+}
+
+/// Solver output.
+#[derive(Debug, Clone)]
+pub struct NonnegResult {
+    pub beta: Vec<f32>,
+    pub iters: usize,
+    pub gap: f64,
+    pub objective: f64,
+    pub converged: bool,
+}
+
+/// Primal objective ½‖y−Xβ‖² + λ‖β‖₁ (β assumed ≥ 0).
+pub fn objective(_prob: &NonnegProblem<'_>, lambda: f64, beta: &[f32], r: &[f32]) -> f64 {
+    0.5 * ops::nrm2_sq(r) + lambda * ops::nrm1(beta)
+}
+
+/// λmax = max_i ⟨x_i, y⟩ (Theorem 20) and its argmax column.
+pub fn lambda_max(prob: &NonnegProblem<'_>) -> (f64, usize) {
+    let mut best = f64::NEG_INFINITY;
+    let mut arg = 0;
+    for j in 0..prob.x.cols() {
+        let v = ops::dot(prob.x.col(j), prob.y);
+        if v > best {
+            best = v;
+            arg = j;
+        }
+    }
+    (best, arg)
+}
+
+/// Duality gap at β. `r` is the residual `y − Xβ`, `c = Xᵀr`.
+///
+/// The dual candidate is `θ = s·r/λ` with the largest `s ∈ [0,1]` making it
+/// feasible for (82): `s = min(1, λ / max_i c_i)` (only *positive*
+/// correlations constrain — the feasible set is one-sided).
+/// Gap = P(β) − D(θ) with `D(θ) = ½‖y‖² − ½‖y − λθ‖²`.
+pub fn duality_gap(
+    prob: &NonnegProblem<'_>,
+    lambda: f64,
+    beta: &[f32],
+    r: &[f32],
+    c: &[f32],
+) -> (f64, f64) {
+    let p = objective(prob, lambda, beta, r);
+    let cmax = c.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v as f64));
+    let s = if cmax <= lambda { 1.0 } else { lambda / cmax };
+    // λθ = s·r  →  D = ½‖y‖² − ½‖y − s·r‖².
+    let mut ynsq = 0.0f64;
+    let mut dn = 0.0f64;
+    for i in 0..prob.y.len() {
+        let yi = prob.y[i] as f64;
+        ynsq += yi * yi;
+        let d = yi - s * r[i] as f64;
+        dn += d * d;
+    }
+    let dual = 0.5 * ynsq - 0.5 * dn;
+    ((p - dual).max(0.0), s)
+}
+
+/// Solve nonnegative Lasso by projected FISTA.
+pub fn solve_nonneg(
+    prob: &NonnegProblem<'_>,
+    lambda: f64,
+    warm_start: Option<&[f32]>,
+    opts: &NonnegOptions,
+) -> NonnegResult {
+    let n = prob.x.rows();
+    let p = prob.x.cols();
+    let l = opts.lipschitz.unwrap_or_else(|| {
+        // 2% inflation: power iteration approaches σmax from below.
+        let mut rng = Rng::seed_from_u64(0x22_57FA);
+        let s = spectral_norm(prob.x, 1e-6, 500, &mut rng).sigma * 1.02;
+        (s * s).max(f64::MIN_POSITIVE)
+    });
+    let step = 1.0 / l;
+    let scale_ref = (0.5 * ops::nrm2_sq(prob.y)).max(1e-10);
+
+    let mut beta: Vec<f32> = warm_start.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p]);
+    let mut beta_prev = beta.clone();
+    let mut z = beta.clone();
+    let mut t_k = 1.0f64;
+
+    let mut xz = vec![0.0f32; n];
+    let mut grad = vec![0.0f32; p];
+    let mut w = vec![0.0f32; p];
+    let mut r = vec![0.0f32; n];
+    let mut c = vec![0.0f32; p];
+
+    let mut gap = f64::INFINITY;
+    let mut converged = false;
+    let mut iters = 0;
+    let mut last_obj = f64::INFINITY;
+
+    for k in 0..opts.max_iter {
+        iters = k + 1;
+        prob.x.matvec(&z, &mut xz);
+        for i in 0..n {
+            xz[i] -= prob.y[i];
+        }
+        prob.x.matvec_t(&xz, &mut grad);
+        ops::add_scaled(&z, -(step as f32), &grad, &mut w);
+        std::mem::swap(&mut beta, &mut beta_prev);
+        nonneg_l1_prox(&w, step * lambda, &mut beta);
+
+        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t_k * t_k).sqrt());
+        let omega = ((t_k - 1.0) / t_next) as f32;
+        for j in 0..p {
+            z[j] = beta[j] + omega * (beta[j] - beta_prev[j]);
+        }
+        t_k = t_next;
+
+        if (k + 1) % opts.check_every == 0 || k + 1 == opts.max_iter {
+            prob.x.matvec(&beta, &mut r);
+            for i in 0..n {
+                r[i] = prob.y[i] - r[i];
+            }
+            prob.x.matvec_t(&r, &mut c);
+            let obj = objective(prob, lambda, &beta, &r);
+            if obj > last_obj {
+                t_k = 1.0;
+                z.copy_from_slice(&beta);
+            }
+            last_obj = obj;
+            let (g, _) = duality_gap(prob, lambda, &beta, &r, &c);
+            gap = g;
+            if gap <= opts.tol * scale_ref {
+                converged = true;
+                break;
+            }
+        }
+    }
+
+    prob.x.matvec(&beta, &mut r);
+    for i in 0..n {
+        r[i] = prob.y[i] - r[i];
+    }
+    let objective = objective(prob, lambda, &beta, &r);
+    NonnegResult { beta, iters, gap, objective, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn problem(seed: u64, n: usize, p: usize) -> (DenseMatrix, Vec<f32>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let x = DenseMatrix::from_fn(n, p, |_, _| rng.gaussian().abs() as f32);
+        let mut beta = vec![0.0f32; p];
+        for j in 0..p / 10 + 1 {
+            beta[j * 7 % p] = rng.uniform_range(0.2, 1.5) as f32;
+        }
+        let mut y = vec![0.0f32; n];
+        x.matvec(&beta, &mut y);
+        for v in y.iter_mut() {
+            *v += rng.normal(0.0, 0.01) as f32;
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn solution_nonnegative_and_converged() {
+        let (x, y) = problem(41, 20, 50);
+        let prob = NonnegProblem::new(&x, &y);
+        let (lmax, _) = lambda_max(&prob);
+        let res = solve_nonneg(&prob, 0.2 * lmax, None, &NonnegOptions::default());
+        assert!(res.converged, "gap={}", res.gap);
+        assert!(res.beta.iter().all(|&b| b >= 0.0));
+        assert!(res.beta.iter().any(|&b| b > 0.0));
+    }
+
+    #[test]
+    fn zero_solution_at_lambda_max() {
+        let (x, y) = problem(42, 15, 30);
+        let prob = NonnegProblem::new(&x, &y);
+        let (lmax, _) = lambda_max(&prob);
+        let res = solve_nonneg(&prob, lmax * 1.0001, None, &NonnegOptions::default());
+        assert!(res.beta.iter().all(|&b| b == 0.0));
+        // Just below λmax the solution must be nonzero.
+        let res2 = solve_nonneg(&prob, lmax * 0.95, None, &NonnegOptions::default());
+        assert!(res2.beta.iter().any(|&b| b > 0.0));
+    }
+
+    #[test]
+    fn kkt_at_optimum() {
+        // Theorem 19(ii)/(85): active coords have ⟨x_i, θ*⟩ = 1, all ≤ 1.
+        let (x, y) = problem(43, 25, 40);
+        let prob = NonnegProblem::new(&x, &y);
+        let (lmax, _) = lambda_max(&prob);
+        let lambda = 0.3 * lmax;
+        let res =
+            solve_nonneg(&prob, lambda, None, &NonnegOptions { tol: 1e-10, ..Default::default() });
+        let mut r = vec![0.0f32; x.rows()];
+        x.matvec(&res.beta, &mut r);
+        for i in 0..r.len() {
+            r[i] = y[i] - r[i];
+        }
+        for j in 0..x.cols() {
+            let corr = ops::dot(x.col(j), &r) / lambda;
+            assert!(corr <= 1.0 + 1e-3, "dual infeasible at {j}: {corr}");
+            if res.beta[j] > 1e-4 {
+                assert!((corr - 1.0).abs() < 1e-2, "active {j} corr={corr}");
+            }
+        }
+    }
+
+    #[test]
+    fn gap_scale_bounds() {
+        let (x, y) = problem(44, 10, 20);
+        let prob = NonnegProblem::new(&x, &y);
+        let beta = vec![0.0f32; 20];
+        let r = y.clone();
+        let mut c = vec![0.0f32; 20];
+        x.matvec_t(&r, &mut c);
+        let (lmax, _) = lambda_max(&prob);
+        let (gap, s) = duality_gap(&prob, lmax, &beta, &r, &c);
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!(gap.abs() < 1e-6);
+    }
+}

@@ -1,0 +1,258 @@
+//! Proximal / shrinkage operators.
+//!
+//! * [`shrink`] — the paper's shrinkage operator `S_γ` (eq. (1)), which is
+//!   also `w − P_{γB∞}(w)` (eq. (19), Remark 1) — the decomposition at the
+//!   heart of TLFre.
+//! * [`proj_linf`] — projection onto `γB∞`.
+//! * [`sgl_prox_group`] — the exact prox of `t(c₂‖·‖₂ + c₁‖·‖₁)`:
+//!   soft-threshold then group soft-threshold (Friedman et al. 2010).
+//! * [`nonneg_l1_prox`] — prox of `tλ‖·‖₁ + I_{R₊}` for nonnegative Lasso.
+
+/// Scalar soft-threshold `(|w|−γ)₊ sgn(w)`.
+#[inline]
+pub fn soft_threshold(w: f64, gamma: f64) -> f64 {
+    if w > gamma {
+        w - gamma
+    } else if w < -gamma {
+        w + gamma
+    } else {
+        0.0
+    }
+}
+
+/// Vector shrinkage `S_γ(w)` into `out`.
+pub fn shrink(w: &[f32], gamma: f64, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), out.len());
+    let g = gamma as f32;
+    for i in 0..w.len() {
+        let v = w[i];
+        out[i] = if v > g {
+            v - g
+        } else if v < -g {
+            v + g
+        } else {
+            0.0
+        };
+    }
+}
+
+/// In-place shrinkage.
+pub fn shrink_inplace(w: &mut [f32], gamma: f64) {
+    let g = gamma as f32;
+    for v in w.iter_mut() {
+        *v = if *v > g {
+            *v - g
+        } else if *v < -g {
+            *v + g
+        } else {
+            0.0
+        };
+    }
+}
+
+/// `‖S_γ(w)‖₂` without materializing the shrunk vector (screening hot path).
+#[inline]
+pub fn shrink_norm(w: &[f32], gamma: f64) -> f64 {
+    shrink_norm_sq(w, gamma).sqrt()
+}
+
+/// `‖S_γ(w)‖₂²` (f64 accumulation).
+#[inline]
+pub fn shrink_norm_sq(w: &[f32], gamma: f64) -> f64 {
+    let g = gamma;
+    let mut acc = 0.0f64;
+    for &v in w {
+        let a = (v.abs() as f64 - g).max(0.0);
+        acc += a * a;
+    }
+    acc
+}
+
+/// Projection onto the ℓ∞ ball of radius `gamma`: `P_{γB∞}(w)`.
+pub fn proj_linf(w: &[f32], gamma: f64, out: &mut [f32]) {
+    debug_assert_eq!(w.len(), out.len());
+    let g = gamma as f32;
+    for i in 0..w.len() {
+        out[i] = w[i].clamp(-g, g);
+    }
+}
+
+/// Group soft-threshold: `max(0, 1 − s/‖u‖₂)·u` in place.
+/// Returns the post-threshold group norm.
+pub fn group_soft_threshold_inplace(u: &mut [f32], s: f64) -> f64 {
+    let norm = crate::linalg::ops::nrm2(u);
+    if norm <= s {
+        u.fill(0.0);
+        0.0
+    } else {
+        let scale = ((norm - s) / norm) as f32;
+        for v in u.iter_mut() {
+            *v *= scale;
+        }
+        norm - s
+    }
+}
+
+/// Exact prox of the SGL composite penalty restricted to one group:
+///
+/// `prox_{t(c₂‖·‖₂ + c₁‖·‖₁)}(v) = GST(S_{t c₁}(v), t c₂)`
+///
+/// where `GST` is the group soft-threshold. The composition is exact for
+/// this penalty pair (prox decomposition of ℓ₁ inside ℓ₂, Friedman et al.).
+/// Writes the result into `out`; returns true iff the group is zeroed.
+pub fn sgl_prox_group(v: &[f32], t_l1: f64, t_l2: f64, out: &mut [f32]) -> bool {
+    shrink(v, t_l1, out);
+    group_soft_threshold_inplace(out, t_l2) == 0.0
+}
+
+/// Prox of `tλ‖·‖₁ + I_{R₊^p}`: `max(0, v − tλ)` elementwise.
+pub fn nonneg_l1_prox(v: &[f32], t_l1: f64, out: &mut [f32]) {
+    debug_assert_eq!(v.len(), out.len());
+    let g = t_l1 as f32;
+    for i in 0..v.len() {
+        out[i] = (v[i] - g).max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::nrm2;
+    use crate::util::Rng;
+
+    #[test]
+    fn scalar_soft_threshold() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn shrink_matches_scalar_and_identity_at_zero() {
+        let w = vec![2.0f32, -0.5, 0.0, 1.5, -3.0];
+        let mut out = vec![0.0f32; 5];
+        shrink(&w, 1.0, &mut out);
+        assert_eq!(out, vec![1.0, 0.0, 0.0, 0.5, -2.0]);
+        shrink(&w, 0.0, &mut out);
+        assert_eq!(out, w);
+    }
+
+    #[test]
+    fn shrink_is_w_minus_projection() {
+        // Remark 1 / eq. (19): S_γ(w) = w − P_{γB∞}(w).
+        let mut rng = Rng::seed_from_u64(11);
+        for _ in 0..100 {
+            let w: Vec<f32> = (0..8).map(|_| rng.normal(0.0, 2.0) as f32).collect();
+            let gamma = rng.uniform_range(0.0, 3.0);
+            let mut s = vec![0.0f32; 8];
+            let mut p = vec![0.0f32; 8];
+            shrink(&w, gamma, &mut s);
+            proj_linf(&w, gamma, &mut p);
+            for i in 0..8 {
+                assert!((s[i] + p[i] - w[i]).abs() < 1e-6);
+                assert!(p[i].abs() <= gamma as f32 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn shrink_norm_consistent() {
+        let mut rng = Rng::seed_from_u64(12);
+        for _ in 0..50 {
+            let w: Vec<f32> = (0..13).map(|_| rng.normal(0.0, 1.5) as f32).collect();
+            let gamma = rng.uniform_range(0.0, 2.0);
+            let mut s = vec![0.0f32; 13];
+            shrink(&w, gamma, &mut s);
+            assert!((shrink_norm(&w, gamma) - nrm2(&s)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn group_soft_threshold_cases() {
+        let mut u = vec![3.0f32, 4.0]; // norm 5
+        let n = group_soft_threshold_inplace(&mut u, 1.0);
+        assert!((n - 4.0).abs() < 1e-6);
+        assert!((u[0] - 3.0 * 0.8).abs() < 1e-6);
+        let mut z = vec![0.3f32, 0.4]; // norm 0.5 <= 1
+        assert_eq!(group_soft_threshold_inplace(&mut z, 1.0), 0.0);
+        assert_eq!(z, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn sgl_prox_optimality_vs_grid() {
+        // prox output must minimize ½‖b−v‖² + t_l2‖b‖ + t_l1‖b‖₁ —
+        // verify against random perturbations.
+        let mut rng = Rng::seed_from_u64(13);
+        let obj = |b: &[f32], v: &[f32], c1: f64, c2: f64| -> f64 {
+            let d: f64 = b.iter().zip(v).map(|(x, y)| ((x - y) as f64).powi(2)).sum();
+            let l2 = nrm2(b);
+            let l1: f64 = b.iter().map(|x| x.abs() as f64).sum();
+            0.5 * d + c2 * l2 + c1 * l1
+        };
+        for _ in 0..50 {
+            let v: Vec<f32> = (0..5).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            let c1 = rng.uniform_range(0.0, 0.8);
+            let c2 = rng.uniform_range(0.0, 0.8);
+            let mut b = vec![0.0f32; 5];
+            sgl_prox_group(&v, c1, c2, &mut b);
+            let fb = obj(&b, &v, c1, c2);
+            for _ in 0..200 {
+                let pert: Vec<f32> =
+                    b.iter().map(|x| x + rng.normal(0.0, 0.05) as f32).collect();
+                assert!(
+                    obj(&pert, &v, c1, c2) >= fb - 1e-6,
+                    "prox not optimal: {} < {}",
+                    obj(&pert, &v, c1, c2),
+                    fb
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nonneg_prox_cases() {
+        let v = vec![2.0f32, 0.5, -1.0, 1.0];
+        let mut out = vec![0.0f32; 4];
+        nonneg_l1_prox(&v, 1.0, &mut out);
+        assert_eq!(out, vec![1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn nonneg_prox_optimality_vs_grid() {
+        let mut rng = Rng::seed_from_u64(14);
+        let obj = |b: f64, v: f64, c: f64| 0.5 * (b - v) * (b - v) + c * b;
+        for _ in 0..200 {
+            let v = rng.normal(0.0, 2.0);
+            let c = rng.uniform_range(0.0, 1.5);
+            let mut out = [0.0f32];
+            nonneg_l1_prox(&[v as f32], c, &mut out);
+            let b = out[0] as f64;
+            assert!(b >= 0.0);
+            let fb = obj(b, v, c);
+            for k in 0..100 {
+                let cand = k as f64 * 0.05;
+                assert!(obj(cand, v, c) >= fb - 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn prox_nonexpansive() {
+        // ‖prox(u) − prox(v)‖ ≤ ‖u − v‖ for the SGL group prox.
+        let mut rng = Rng::seed_from_u64(15);
+        for _ in 0..100 {
+            let u: Vec<f32> = (0..6).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            let v: Vec<f32> = (0..6).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            let (c1, c2) = (rng.uniform_range(0.0, 1.0), rng.uniform_range(0.0, 1.0));
+            let mut pu = vec![0.0f32; 6];
+            let mut pv = vec![0.0f32; 6];
+            sgl_prox_group(&u, c1, c2, &mut pu);
+            sgl_prox_group(&v, c1, c2, &mut pv);
+            let d_in = crate::linalg::ops::dist2(&u, &v);
+            let d_out = crate::linalg::ops::dist2(&pu, &pv);
+            assert!(d_out <= d_in + 1e-5, "{d_out} > {d_in}");
+        }
+    }
+}

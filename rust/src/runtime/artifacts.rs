@@ -1,0 +1,131 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the rust runtime.
+//!
+//! `artifacts/manifest.json` layout (written by the AOT pipeline):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "artifacts": [
+//!     {"name": "screen", "file": "screen_n250_p10000_g10.hlo.txt",
+//!      "kind": "tlfre_screen", "n": 250, "p": 10000, "group_size": 10}
+//!   ]
+//! }
+//! ```
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// Kind tag: `tlfre_screen`, `dpc_screen`, `fista_step`, …
+    pub kind: String,
+    /// Sample dimension the artifact was specialized for.
+    pub n: usize,
+    /// Feature dimension.
+    pub p: usize,
+    /// Uniform group size (0 when not applicable).
+    pub group_size: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str, dir: &Path) -> Result<ArtifactManifest> {
+        let v = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let version = v.get("version").and_then(|x| x.as_usize()).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let arr = v
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("manifest missing 'artifacts' array")?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for (i, a) in arr.iter().enumerate() {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(a.get(k)
+                    .and_then(|x| x.as_str())
+                    .with_context(|| format!("artifact[{i}] missing '{k}'"))?
+                    .to_string())
+            };
+            let get_num =
+                |k: &str| -> usize { a.get(k).and_then(|x| x.as_usize()).unwrap_or(0) };
+            artifacts.push(ArtifactSpec {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                kind: get_str("kind")?,
+                n: get_num("n"),
+                p: get_num("p"),
+                group_size: get_num("group_size"),
+            });
+        }
+        Ok(ArtifactManifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// Find an artifact by kind and exact shape.
+    pub fn find(&self, kind: &str, n: usize, p: usize) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.kind == kind && a.n == n && a.p == p)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "screen_small", "file": "screen_n8_p32_g4.hlo.txt",
+             "kind": "tlfre_screen", "n": 8, "p": 32, "group_size": 4},
+            {"name": "dpc_small", "file": "dpc_n8_p32.hlo.txt",
+             "kind": "dpc_screen", "n": 8, "p": 32}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_and_find() {
+        let m = ArtifactManifest::parse(SAMPLE, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find("tlfre_screen", 8, 32).unwrap();
+        assert_eq!(a.group_size, 4);
+        assert_eq!(m.path_of(a), PathBuf::from("/tmp/artifacts/screen_n8_p32_g4.hlo.txt"));
+        assert!(m.find("tlfre_screen", 9, 32).is_none());
+        let d = m.find("dpc_screen", 8, 32).unwrap();
+        assert_eq!(d.group_size, 0);
+    }
+
+    #[test]
+    fn rejects_bad_version_and_shape() {
+        assert!(ArtifactManifest::parse(r#"{"version": 2, "artifacts": []}"#, Path::new(".")).is_err());
+        assert!(ArtifactManifest::parse(r#"{"artifacts": []}"#, Path::new(".")).is_err());
+        assert!(ArtifactManifest::parse("[]", Path::new(".")).is_err());
+        assert!(ArtifactManifest::parse("{garbage", Path::new(".")).is_err());
+        // missing required name
+        let bad = r#"{"version":1,"artifacts":[{"file":"x","kind":"k"}]}"#;
+        assert!(ArtifactManifest::parse(bad, Path::new(".")).is_err());
+    }
+}

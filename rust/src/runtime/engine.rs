@@ -1,0 +1,111 @@
+//! The screening engine: executes the AOT-compiled fused screening kernel
+//! on a pre-staged design matrix.
+//!
+//! Layout note: [`crate::linalg::DenseMatrix`] stores `X (N×p)` column-
+//! major, which is byte-identical to a row-major `(p, N)` array — exactly
+//! the `Xᵀ` the artifact expects as its first parameter. Staging is
+//! therefore a zero-copy reinterpretation; it happens once per data set,
+//! and each per-λ call only uploads the `o ∈ R^N` ball center.
+
+use super::artifacts::{ArtifactManifest, ArtifactSpec};
+use super::Runtime;
+use crate::linalg::DenseMatrix;
+use anyhow::{Context, Result};
+
+/// Output of one fused screening-kernel execution.
+#[derive(Debug, Clone)]
+pub struct ScreenKernelOut {
+    /// `c = Xᵀ o`, length p.
+    pub c: Vec<f32>,
+    /// Per-group `‖S₁(c_g)‖²`, length G (uniform groups).
+    pub group_shrink_sq: Vec<f32>,
+    /// Per-group `‖c_g‖∞`, length G.
+    pub group_cinf: Vec<f32>,
+}
+
+/// A data-set-bound handle: staged `Xᵀ` buffer + compiled screen artifact.
+pub struct ScreenEngine {
+    exe: xla::PjRtLoadedExecutable,
+    x_buf: xla::PjRtBuffer,
+    n: usize,
+    p: usize,
+    pub group_size: usize,
+}
+
+impl ScreenEngine {
+    /// Build from a manifest: finds the `tlfre_screen` artifact matching
+    /// the matrix shape, compiles it, stages `Xᵀ`.
+    pub fn for_matrix(
+        rt: &mut Runtime,
+        manifest: &ArtifactManifest,
+        x: &DenseMatrix,
+    ) -> Result<ScreenEngine> {
+        let spec = manifest
+            .find("tlfre_screen", x.rows(), x.cols())
+            .with_context(|| {
+                format!(
+                    "no tlfre_screen artifact for {}×{} — regenerate with `make artifacts`",
+                    x.rows(),
+                    x.cols()
+                )
+            })?
+            .clone();
+        Self::from_spec(rt, manifest, &spec, x)
+    }
+
+    /// Build from an explicit artifact spec.
+    pub fn from_spec(
+        rt: &mut Runtime,
+        manifest: &ArtifactManifest,
+        spec: &ArtifactSpec,
+        x: &DenseMatrix,
+    ) -> Result<ScreenEngine> {
+        anyhow::ensure!(
+            spec.n == x.rows() && spec.p == x.cols(),
+            "artifact shape {}×{} does not match matrix {}×{}",
+            spec.n,
+            spec.p,
+            x.rows(),
+            x.cols()
+        );
+        // Compile an engine-owned executable (PjRtLoadedExecutable is not
+        // Clone, so the Runtime cache can't hand out copies).
+        let path = manifest.path_of(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = rt.client().compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+        // Col-major (N×p) == row-major (p×N): stage as Xᵀ.
+        let x_buf = rt
+            .client()
+            .buffer_from_host_buffer::<f32>(x.data(), &[x.cols(), x.rows()], None)
+            .context("staging design matrix")?;
+        Ok(ScreenEngine { exe, x_buf, n: x.rows(), p: x.cols(), group_size: spec.group_size })
+    }
+
+    /// Execute the fused kernel for a ball center `o` (length N).
+    pub fn run(&self, rt: &Runtime, o: &[f32]) -> Result<ScreenKernelOut> {
+        anyhow::ensure!(o.len() == self.n, "o has length {} ≠ N={}", o.len(), self.n);
+        let o_buf = rt.client().buffer_from_host_buffer::<f32>(o, &[self.n], None)?;
+        let result = self.exe.execute_b(&[&self.x_buf, &o_buf])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 3, "screen artifact returned {} outputs", parts.len());
+        let c = parts[0].to_vec::<f32>()?;
+        let group_shrink_sq = parts[1].to_vec::<f32>()?;
+        let group_cinf = parts[2].to_vec::<f32>()?;
+        anyhow::ensure!(c.len() == self.p, "c length mismatch");
+        Ok(ScreenKernelOut { c, group_shrink_sq, group_cinf })
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.p
+    }
+}

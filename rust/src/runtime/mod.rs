@@ -1,0 +1,92 @@
+//! PJRT runtime — loads and executes the AOT-compiled Layer-1/Layer-2
+//! artifacts produced by `python/compile/aot.py`.
+//!
+//! Interchange format is **HLO text** (`artifacts/*.hlo.txt`): jax ≥ 0.5
+//! serializes `HloModuleProto`s with 64-bit instruction ids that the
+//! crate's bundled XLA (xla_extension 0.5.1) rejects; the text parser
+//! reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+//!
+//! Python never runs at request time: the rust binary discovers artifacts
+//! through `artifacts/manifest.json`, compiles each once per process
+//! ([`Runtime`] caches the loaded executables) and executes them through
+//! the PJRT C API. The design matrix is staged into a device buffer once
+//! per data set ([`ScreenEngine`]) so the per-λ hot call only uploads the
+//! small `θ`-side inputs.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec};
+pub use engine::ScreenEngine;
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A process-wide PJRT client with a compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: HashMap::new() })
+    }
+
+    /// Backend platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load an HLO-text artifact, compiling it on first use.
+    pub fn load(&mut self, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(path) {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path:?}"))?;
+            self.cache.insert(path.to_path_buf(), exe);
+        }
+        Ok(&self.cache[path])
+    }
+
+    /// Execute an artifact on f32 literal inputs, returning the flat f32
+    /// contents of every output in the result tuple.
+    pub fn execute_f32(
+        &mut self,
+        path: &Path,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.load(path)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| -> Result<xla::Literal> {
+                let l = xla::Literal::vec1(data);
+                Ok(if dims.len() == 1 { l } else { l.reshape(dims)? })
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+/// Default artifacts directory: `$TLFRE_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("TLFRE_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,246 @@
+//! DPC — screening for nonnegative Lasso (Section 5, Theorems 20–22).
+//!
+//! Same normal-cone geometry as TLFre, instantiated for the polytope dual
+//! feasible set `F = {θ : ⟨x_i, θ⟩ ≤ 1}`. The rule (Theorem 22):
+//!
+//! ```text
+//! ⟨x_i, o⟩ + radius·‖x_i‖ < 1  ⇒  [β*(λ)]_i = 0,
+//! ```
+//!
+//! with `o, radius` from the Theorem 21 ball. Note the rule is one-sided —
+//! only *positive* correlation can activate a nonnegative coefficient.
+
+use super::dual_est::{estimate_ball, normal_interior, Ball};
+use crate::linalg::ops;
+use crate::nonneg::NonnegProblem;
+
+/// Outcome of one DPC screening.
+#[derive(Debug, Clone)]
+pub struct DpcOutcome {
+    /// Per-feature survival (false ⇒ coefficient certified zero).
+    pub feature_kept: Vec<bool>,
+    /// Number rejected.
+    pub rejected: usize,
+    /// Ball radius used.
+    pub radius: f64,
+}
+
+impl DpcOutcome {
+    pub fn active_features(&self) -> Vec<usize> {
+        self.feature_kept
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &k)| if k { Some(i) } else { None })
+            .collect()
+    }
+}
+
+/// Theorem 21's normal vector.
+///
+/// * λ̄ < λmax: `n = y/λ̄ − θ̄`;
+/// * λ̄ = λmax: `n = x_*`, the column attaining `λmax = max_i ⟨x_i, y⟩`.
+pub fn normal_vector(
+    prob: &NonnegProblem<'_>,
+    lambda_bar: f64,
+    theta_bar: &[f32],
+    lambda_max: f64,
+    argmax_col: usize,
+) -> Vec<f32> {
+    if lambda_bar >= lambda_max * (1.0 - 1e-12) {
+        prob.x.col(argmax_col).to_vec()
+    } else {
+        let y_over: Vec<f32> = prob.y.iter().map(|&v| (v as f64 / lambda_bar) as f32).collect();
+        normal_interior(theta_bar, &y_over)
+    }
+}
+
+/// The Theorem 21 ball for a step λ̄ → λ.
+pub fn screen_ball(
+    prob: &NonnegProblem<'_>,
+    lambda: f64,
+    lambda_bar: f64,
+    theta_bar: &[f32],
+    lambda_max: f64,
+    argmax_col: usize,
+) -> Ball {
+    let n_vec = normal_vector(prob, lambda_bar, theta_bar, lambda_max, argmax_col);
+    let y_over: Vec<f32> = prob.y.iter().map(|&v| (v as f64 / lambda) as f32).collect();
+    estimate_ball(theta_bar, &n_vec, &y_over)
+}
+
+/// Apply the DPC rule (89) given `c = Xᵀo` and the radius.
+pub fn apply_rule(c: &[f32], radius: f64, col_norms: &[f64]) -> DpcOutcome {
+    let p = c.len();
+    let mut feature_kept = vec![true; p];
+    let mut rejected = 0usize;
+    for i in 0..p {
+        if (c[i] as f64) + radius * col_norms[i] < 1.0 {
+            feature_kept[i] = false;
+            rejected += 1;
+        }
+    }
+    DpcOutcome { feature_kept, rejected, radius }
+}
+
+/// One full DPC screening step (Theorem 22).
+///
+/// `theta_bar` must be the dual optimum at λ̄: `(y − Xβ̄)/λ̄`.
+pub fn dpc_screen(
+    prob: &NonnegProblem<'_>,
+    lambda: f64,
+    lambda_bar: f64,
+    theta_bar: &[f32],
+    lambda_max: f64,
+    argmax_col: usize,
+    col_norms: &[f64],
+) -> DpcOutcome {
+    dpc_screen_inexact(prob, lambda, lambda_bar, theta_bar, 0.0, lambda_max, argmax_col, col_norms)
+}
+
+/// DPC step robust to an inexact previous solve: the estimate-ball radius
+/// is inflated by `2·√(2·gap_bar)/λ̄` (strong-convexity bound on the
+/// distance from the feasible dual point to the true optimum; same
+/// reasoning as [`crate::screening::tlfre::tlfre_screen_inexact`]).
+#[allow(clippy::too_many_arguments)]
+pub fn dpc_screen_inexact(
+    prob: &NonnegProblem<'_>,
+    lambda: f64,
+    lambda_bar: f64,
+    theta_bar: &[f32],
+    gap_bar: f64,
+    lambda_max: f64,
+    argmax_col: usize,
+    col_norms: &[f64],
+) -> DpcOutcome {
+    assert!(lambda > 0.0 && lambda < lambda_bar * (1.0 + 1e-12));
+    let mut ball = screen_ball(prob, lambda, lambda_bar, theta_bar, lambda_max, argmax_col);
+    if gap_bar > 0.0 {
+        ball.radius += 2.0 * (2.0 * gap_bar).sqrt() / lambda_bar;
+    }
+    let mut c = vec![0.0f32; prob.x.cols()];
+    prob.x.matvec_t(&ball.center, &mut c);
+    apply_rule(&c, ball.radius, col_norms)
+}
+
+/// Normal-cone membership check used by tests: `⟨n, θ − θ̄⟩ ≤ 0` ∀θ ∈ F.
+pub fn normal_cone_margin(
+    prob: &NonnegProblem<'_>,
+    n_vec: &[f32],
+    theta_bar: &[f32],
+    probe: &[f32],
+) -> f64 {
+    // Scale the probe into F: ⟨x_i, sθ⟩ ≤ 1.
+    let mut c = vec![0.0f32; prob.x.cols()];
+    prob.x.matvec_t(probe, &mut c);
+    let cmax = c.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v as f64));
+    let s = if cmax <= 1.0 { 1.0 } else { 1.0 / cmax };
+    let mut diff = vec![0.0f32; probe.len()];
+    for i in 0..probe.len() {
+        diff[i] = (probe[i] as f64 * s) as f32 - theta_bar[i];
+    }
+    ops::dot(n_vec, &diff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+    use crate::nonneg::{lambda_max, solve_nonneg, NonnegOptions};
+    use crate::util::Rng;
+
+    fn make_problem(seed: u64, n: usize, p: usize) -> (DenseMatrix, Vec<f32>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let x = DenseMatrix::from_fn(n, p, |_, _| rng.gaussian().abs() as f32);
+        let mut beta = vec![0.0f32; p];
+        for k in 0..p / 8 + 1 {
+            beta[(k * 11) % p] = rng.uniform_range(0.3, 1.2) as f32;
+        }
+        let mut y = vec![0.0f32; n];
+        x.matvec(&beta, &mut y);
+        for v in y.iter_mut() {
+            *v += rng.normal(0.0, 0.01) as f32;
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn dpc_safe_from_lambda_max() {
+        let (x, y) = make_problem(81, 20, 60);
+        let prob = NonnegProblem::new(&x, &y);
+        let (lmax, arg) = lambda_max(&prob);
+        let col_norms = x.col_norms();
+        let theta_bar: Vec<f32> = y.iter().map(|&v| (v as f64 / lmax) as f32).collect();
+        let lambda = 0.85 * lmax;
+        let out = dpc_screen(&prob, lambda, lmax, &theta_bar, lmax, arg, &col_norms);
+        let sol = solve_nonneg(&prob, lambda, None, &NonnegOptions { tol: 1e-10, ..Default::default() });
+        for j in 0..x.cols() {
+            if !out.feature_kept[j] {
+                assert!(sol.beta[j].abs() < 1e-5, "feature {j} screened but β={}", sol.beta[j]);
+            }
+        }
+        assert!(out.rejected > x.cols() / 2, "rejected only {}", out.rejected);
+    }
+
+    #[test]
+    fn dpc_safe_sequential() {
+        let (x, y) = make_problem(82, 15, 40);
+        let prob = NonnegProblem::new(&x, &y);
+        let (lmax, arg) = lambda_max(&prob);
+        let col_norms = x.col_norms();
+        let opts = NonnegOptions { tol: 1e-10, ..Default::default() };
+        let mut lambda_bar = lmax;
+        let mut beta_bar = vec![0.0f32; x.cols()];
+        for step in 1..=6 {
+            let lambda = lmax * (0.9f64).powi(step);
+            let mut r = vec![0.0f32; x.rows()];
+            x.matvec(&beta_bar, &mut r);
+            for i in 0..r.len() {
+                r[i] = y[i] - r[i];
+            }
+            let theta_bar: Vec<f32> = r.iter().map(|&v| (v as f64 / lambda_bar) as f32).collect();
+            let out = dpc_screen(&prob, lambda, lambda_bar, &theta_bar, lmax, arg, &col_norms);
+            let sol = solve_nonneg(&prob, lambda, Some(&beta_bar), &opts);
+            for j in 0..x.cols() {
+                if !out.feature_kept[j] {
+                    assert!(
+                        sol.beta[j].abs() < 1e-5,
+                        "step {step} feature {j}: screened but β={}",
+                        sol.beta[j]
+                    );
+                }
+            }
+            beta_bar = sol.beta;
+            lambda_bar = lambda;
+        }
+    }
+
+    #[test]
+    fn normal_vector_at_lambda_max_is_in_cone() {
+        // Theorem 21(i): n = x_* ∈ N_F(y/λmax).
+        let (x, y) = make_problem(83, 12, 25);
+        let prob = NonnegProblem::new(&x, &y);
+        let (lmax, arg) = lambda_max(&prob);
+        let theta_bar: Vec<f32> = y.iter().map(|&v| (v as f64 / lmax) as f32).collect();
+        let n_vec = normal_vector(&prob, lmax, &theta_bar, lmax, arg);
+        let mut rng = Rng::seed_from_u64(84);
+        for _ in 0..50 {
+            let probe: Vec<f32> = (0..x.rows()).map(|_| rng.gaussian() as f32).collect();
+            let m = normal_cone_margin(&prob, &n_vec, &theta_bar, &probe);
+            assert!(m <= 1e-3, "margin {m} > 0");
+        }
+    }
+
+    #[test]
+    fn negative_correlation_always_rejected() {
+        // Columns anti-correlated with the ball center are certified zero
+        // whenever radius·‖x_i‖ < 1.
+        let (x, y) = make_problem(85, 10, 20);
+        let prob = NonnegProblem::new(&x, &y);
+        let (lmax, arg) = lambda_max(&prob);
+        let col_norms = x.col_norms();
+        let theta_bar: Vec<f32> = y.iter().map(|&v| (v as f64 / lmax) as f32).collect();
+        let out = dpc_screen(&prob, 0.95 * lmax, lmax, &theta_bar, lmax, arg, &col_norms);
+        // the argmax column must never be rejected at λ close to λmax
+        assert!(out.feature_kept[arg], "argmax column rejected");
+    }
+}

@@ -1,0 +1,118 @@
+//! Dual-optimum estimation via normal cones (Theorem 12 / Theorem 21).
+//!
+//! Given the exact dual optimum `θ̄ = θ*(λ̄)` at a previous path point λ̄ and
+//! a vector `n ∈ N_F(θ̄)` in the normal cone of the dual feasible set at θ̄,
+//! the next dual optimum satisfies
+//!
+//! ```text
+//! ‖θ*(λ) − (θ̄ + ½v⊥)‖ ≤ ½‖v⊥‖,     v = y/λ − θ̄,
+//! v⊥ = v − (⟨v, n⟩/‖n‖²)·n.
+//! ```
+//!
+//! The geometry is shared between TLFre (SGL) and DPC (nonnegative Lasso);
+//! only the normal vector construction differs:
+//! * λ̄ < λmax: `n = y/λ̄ − θ̄` (projection residual, Prop. 11(iii));
+//! * λ̄ = λmax (SGL): `n = X_* S₁(X_*ᵀ y/λmax)` for the argmax group `X_*`;
+//! * λ̄ = λmax (DPC): `n = x_*`, the argmax column.
+
+use crate::linalg::ops;
+
+/// A ball `‖θ − o‖ ≤ radius` guaranteed to contain the dual optimum.
+#[derive(Debug, Clone)]
+pub struct Ball {
+    /// Center `o = θ̄ + ½ v⊥`.
+    pub center: Vec<f32>,
+    /// Radius `½‖v⊥‖`.
+    pub radius: f64,
+}
+
+/// Compute the Theorem 12(ii) ball from `θ̄`, the normal `n`, and `y/λ`.
+///
+/// `y_over_lambda` is the *new* λ's scaled response. Degenerate `n ≈ 0`
+/// (can happen with approximately-solved previous problems whose residual
+/// normal vanishes) falls back to the un-projected `v`, which is still a
+/// valid — just looser — bound (it is the plain SAFE-style ball).
+pub fn estimate_ball(theta_bar: &[f32], n_vec: &[f32], y_over_lambda: &[f32]) -> Ball {
+    let n = theta_bar.len();
+    debug_assert_eq!(n_vec.len(), n);
+    debug_assert_eq!(y_over_lambda.len(), n);
+    // v = y/λ − θ̄
+    let mut v = vec![0.0f32; n];
+    ops::sub(y_over_lambda, theta_bar, &mut v);
+    let nn = ops::nrm2_sq(n_vec);
+    let mut vperp = v.clone();
+    if nn > 1e-30 {
+        let coef = (ops::dot(&v, n_vec) / nn) as f32;
+        for i in 0..n {
+            vperp[i] -= coef * n_vec[i];
+        }
+    }
+    let radius = 0.5 * ops::nrm2(&vperp);
+    let mut center = vec![0.0f32; n];
+    for i in 0..n {
+        center[i] = theta_bar[i] + 0.5 * vperp[i];
+    }
+    Ball { center, radius }
+}
+
+/// The normal vector for an *interior* path step (λ̄ < λmax):
+/// `n = y/λ̄ − θ̄`.
+pub fn normal_interior(theta_bar: &[f32], y_over_lambda_bar: &[f32]) -> Vec<f32> {
+    let mut n = vec![0.0f32; theta_bar.len()];
+    ops::sub(y_over_lambda_bar, theta_bar, &mut n);
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perpendicular_component_orthogonal_to_n() {
+        let theta = vec![1.0f32, 0.0, 0.0];
+        let nvec = vec![0.0f32, 1.0, 0.0];
+        let yl = vec![2.0f32, 3.0, 4.0];
+        let ball = estimate_ball(&theta, &nvec, &yl);
+        // v = (1,3,4); v⊥ = (1,0,4); center = θ̄+½v⊥ = (1.5,0,2); r = ½√17
+        assert!((ball.radius - 0.5 * (17.0f64).sqrt()).abs() < 1e-6);
+        assert!((ball.center[0] - 1.5).abs() < 1e-6);
+        assert!((ball.center[1] - 0.0).abs() < 1e-6);
+        assert!((ball.center[2] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn projection_shrinks_radius() {
+        // ‖v⊥‖ ≤ ‖v‖ always — the two-layer estimate is at least as tight
+        // as the naive ball.
+        let theta = vec![0.5f32, -0.25, 1.0, 0.0];
+        let nvec = vec![1.0f32, 2.0, -1.0, 0.5];
+        let yl = vec![1.0f32, 1.0, 1.0, 1.0];
+        let ball = estimate_ball(&theta, &nvec, &yl);
+        let mut v = vec![0.0f32; 4];
+        ops::sub(&yl, &theta, &mut v);
+        assert!(ball.radius <= 0.5 * ops::nrm2(&v) + 1e-9);
+    }
+
+    #[test]
+    fn zero_normal_falls_back_to_v() {
+        let theta = vec![1.0f32, 1.0];
+        let nvec = vec![0.0f32, 0.0];
+        let yl = vec![3.0f32, 1.0];
+        let ball = estimate_ball(&theta, &nvec, &yl);
+        assert!((ball.radius - 1.0).abs() < 1e-6); // ½‖(2,0)‖
+        assert!((ball.center[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn same_lambda_gives_zero_radius_interior() {
+        // λ = λ̄ ⇒ v = n (interior case) ⇒ v⊥ = 0 ⇒ the ball is {θ̄}.
+        let theta = vec![0.3f32, -0.7, 0.2];
+        let yl_bar = vec![1.0f32, 0.5, -0.25];
+        let nvec = normal_interior(&theta, &yl_bar);
+        let ball = estimate_ball(&theta, &nvec, &yl_bar);
+        assert!(ball.radius < 1e-7);
+        for i in 0..3 {
+            assert!((ball.center[i] - theta[i]).abs() < 1e-6);
+        }
+    }
+}

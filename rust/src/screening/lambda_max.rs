@@ -1,0 +1,296 @@
+//! The zero-solution boundary of the parameter space.
+//!
+//! Theorem 8: `β*(λ, α) = 0 ⇔ λ ≥ λ_max^α = max_g ρ_g`, where ρ_g solves
+//! `‖S₁(X_gᵀ y / ρ)‖ = α√n_g`. Lemma 9 gives the closed form: on the
+//! interval where exactly the top-k magnitudes survive the shrink, the
+//! equation is the quadratic
+//!
+//! ```text
+//! (k − α²n_g) ρ² − 2ρ‖z^(k)‖₁ + ‖z^(k)‖² = 0,     z = sort desc |X_gᵀy|.
+//! ```
+//!
+//! A bisection fallback (the function is continuous and strictly monotone)
+//! guards the degenerate cases and is cross-checked against the closed form
+//! in the tests.
+//!
+//! Corollary 10 additionally gives the (λ₁, λ₂)-space boundary
+//! `λ₁^max(λ₂) = max_g ‖S_{λ₂}(X_gᵀy)‖ / √n_g` used in the upper-left
+//! panels of Figures 1–4.
+
+use crate::prox::shrink_norm_sq;
+use crate::sgl::problem::SglProblem;
+
+/// λ_max computation output.
+#[derive(Debug, Clone)]
+pub struct LambdaMaxInfo {
+    /// λ_max^α = max_g ρ_g.
+    pub lambda_max: f64,
+    /// The argmax group `g*` (the paper's `X_*`).
+    pub argmax_group: usize,
+    /// Every ρ_g.
+    pub rho: Vec<f64>,
+}
+
+/// `‖S₁(z/ρ)‖² − α²n_g` for a *nonnegative, descending* magnitude vector z.
+fn crit(z: &[f64], rho: f64, alpha_sq_ng: f64) -> f64 {
+    let mut acc = 0.0f64;
+    for &zi in z {
+        let t = zi / rho - 1.0;
+        if t <= 0.0 {
+            break; // z is descending — all later terms vanish
+        }
+        acc += t * t;
+    }
+    acc - alpha_sq_ng
+}
+
+/// Solve `‖S₁(z/ρ)‖ = α√n_g` for ρ via Lemma 9's piecewise quadratic.
+///
+/// `z` must be the descending-sorted magnitudes `|X_gᵀy|` with `z[0] > 0`.
+/// Returns `ρ_g ∈ (0, z[0])`.
+pub fn rho_group(z: &[f64], alpha: f64, n_g: usize) -> f64 {
+    debug_assert!(z[0] > 0.0, "rho_group requires X_gᵀy ≠ 0");
+    debug_assert!(z.windows(2).all(|w| w[0] >= w[1]), "z must be descending");
+    let a2n = alpha * alpha * (n_g as f64);
+    // Walk the knots ρ = z[k-1] downwards; in interval (z[k], z[k-1]) exactly
+    // the top-k entries are active.
+    for k in 1..=z.len() {
+        let lo = if k < z.len() { z[k] } else { 0.0 };
+        let hi = z[k - 1];
+        if hi <= lo {
+            continue; // ties — empty interval
+        }
+        // crit is decreasing in ρ; root lies in (lo, hi] iff
+        // crit(hi) ≤ 0 ≤ crit(lo⁺).
+        let s1: f64 = z[..k].iter().sum();
+        let s2: f64 = z[..k].iter().map(|v| v * v).sum();
+        let a = k as f64 - a2n;
+        let b = -2.0 * s1;
+        let c = s2;
+        // Quadratic a·ρ² + b·ρ + c = 0 (Lemma 9(ii)); also handles the
+        // boundary case Lemma 9(i) since hitting a knot exactly is a root.
+        let root = if a.abs() < 1e-12 {
+            // Linear: bρ + c = 0.
+            -c / b
+        } else {
+            let disc = b * b - 4.0 * a * c;
+            if disc < 0.0 {
+                continue;
+            }
+            let sq = disc.sqrt();
+            // Two candidate roots; pick the one in the interval.
+            let r1 = (-b - sq) / (2.0 * a);
+            let r2 = (-b + sq) / (2.0 * a);
+            let in_iv = |r: f64| r > lo * (1.0 - 1e-12) && r <= hi * (1.0 + 1e-12);
+            if in_iv(r1) && r1 > 0.0 {
+                r1
+            } else if in_iv(r2) && r2 > 0.0 {
+                r2
+            } else {
+                continue;
+            }
+        };
+        if root > lo * (1.0 - 1e-12) && root <= hi * (1.0 + 1e-12) && root > 0.0 {
+            return root.min(hi).max(lo.max(f64::MIN_POSITIVE));
+        }
+    }
+    // Fallback: bisection on the continuous monotone criterion.
+    rho_group_bisect(z, alpha, n_g)
+}
+
+/// Bisection solver for the same root (robust fallback + test oracle).
+pub fn rho_group_bisect(z: &[f64], alpha: f64, n_g: usize) -> f64 {
+    let a2n = alpha * alpha * (n_g as f64);
+    let mut hi = z[0];
+    // crit(hi) = −a2n < 0; find lo with crit(lo) > 0.
+    let mut lo = hi * 0.5;
+    while crit(z, lo, a2n) <= 0.0 {
+        lo *= 0.5;
+        if lo < 1e-300 {
+            return 0.0;
+        }
+    }
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if crit(z, mid, a2n) > 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if (hi - lo) / hi < 1e-15 {
+            break;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// λ_max^α for the full SGL problem (Theorem 8): one `Xᵀy` sweep, then a
+/// per-group root solve.
+pub fn sgl_lambda_max(prob: &SglProblem<'_>, alpha: f64) -> LambdaMaxInfo {
+    let p = prob.n_features();
+    let mut c = vec![0.0f32; p];
+    prob.x.matvec_t(prob.y, &mut c);
+    lambda_max_from_correlations(&c, prob, alpha)
+}
+
+/// λ_max^α given a precomputed correlation vector `c = Xᵀy`.
+pub fn lambda_max_from_correlations(
+    c: &[f32],
+    prob: &SglProblem<'_>,
+    alpha: f64,
+) -> LambdaMaxInfo {
+    let g_cnt = prob.n_groups();
+    let mut rho = Vec::with_capacity(g_cnt);
+    let mut best = f64::NEG_INFINITY;
+    let mut arg = 0usize;
+    for (g, s, e) in prob.groups.iter() {
+        let mut z: Vec<f64> = c[s..e].iter().map(|&v| (v as f64).abs()).collect();
+        z.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let r = if z[0] <= 0.0 { 0.0 } else { rho_group(&z, alpha, e - s) };
+        if r > best {
+            best = r;
+            arg = g;
+        }
+        rho.push(r);
+    }
+    LambdaMaxInfo { lambda_max: best, argmax_group: arg, rho }
+}
+
+/// Corollary 10's boundary `λ₁^max(λ₂) = max_g ‖S_{λ₂}(X_gᵀy)‖/√n_g`.
+pub fn lambda1_max(prob: &SglProblem<'_>, lambda2: f64) -> f64 {
+    let mut c = vec![0.0f32; prob.n_features()];
+    prob.x.matvec_t(prob.y, &mut c);
+    let mut best = 0.0f64;
+    for (g, s, e) in prob.groups.iter() {
+        let v = shrink_norm_sq(&c[s..e], lambda2).sqrt() / prob.groups.weight(g);
+        best = best.max(v);
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::groups::GroupStructure;
+    use crate::linalg::DenseMatrix;
+    use crate::prox::shrink_norm;
+    use crate::util::Rng;
+
+    #[test]
+    fn closed_form_matches_bisection() {
+        let mut rng = Rng::seed_from_u64(51);
+        for trial in 0..200 {
+            let n_g = 1 + rng.below(12);
+            let mut z: Vec<f64> = (0..n_g).map(|_| rng.uniform_range(0.01, 5.0)).collect();
+            z.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let alpha = rng.uniform_range(0.05, 12.0);
+            let r1 = rho_group(&z, alpha, n_g);
+            let r2 = rho_group_bisect(&z, alpha, n_g);
+            assert!(
+                (r1 - r2).abs() < 1e-8 * r2.max(1.0),
+                "trial {trial}: closed={r1} bisect={r2} z={z:?} alpha={alpha}"
+            );
+        }
+    }
+
+    #[test]
+    fn rho_satisfies_defining_equation() {
+        let mut rng = Rng::seed_from_u64(52);
+        for _ in 0..100 {
+            let n_g = 2 + rng.below(8);
+            let zf: Vec<f32> = (0..n_g).map(|_| rng.normal(0.0, 2.0) as f32).collect();
+            let mut z: Vec<f64> = zf.iter().map(|&v| (v as f64).abs()).collect();
+            z.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            if z[0] <= 0.0 {
+                continue;
+            }
+            let alpha = rng.uniform_range(0.1, 4.0);
+            let rho = rho_group(&z, alpha, n_g);
+            // ‖S₁(c/ρ)‖ must equal α√n_g
+            let scaled: Vec<f32> = zf.iter().map(|&v| (v as f64 / rho) as f32).collect();
+            let lhs = shrink_norm(&scaled, 1.0);
+            let rhs = alpha * (n_g as f64).sqrt();
+            assert!((lhs - rhs).abs() < 1e-5 * rhs, "lhs={lhs} rhs={rhs}");
+        }
+    }
+
+    #[test]
+    fn lambda_max_boundary_behaviour() {
+        // ‖S₁(X_gᵀ y/λ)‖ ≤ α√n_g for all g at λ = λmax, with equality at g*.
+        let mut rng = Rng::seed_from_u64(53);
+        let x = DenseMatrix::from_fn(15, 24, |_, _| rng.gaussian() as f32);
+        let y: Vec<f32> = (0..15).map(|_| rng.gaussian() as f32).collect();
+        let g = GroupStructure::from_sizes(&[3, 5, 4, 6, 2, 4]);
+        let prob = SglProblem::new(&x, &y, &g);
+        for alpha in [0.2, 1.0, 3.0] {
+            let lm = sgl_lambda_max(&prob, alpha);
+            let mut c = vec![0.0f32; 24];
+            let th: Vec<f32> = y.iter().map(|&v| v / lm.lambda_max as f32).collect();
+            prob.x.matvec_t(&th, &mut c);
+            for (gi, s, e) in prob.groups.iter() {
+                let norm = shrink_norm(&c[s..e], 1.0);
+                let lim = alpha * prob.groups.weight(gi);
+                assert!(norm <= lim * (1.0 + 1e-4), "group {gi} violates at λmax");
+                if gi == lm.argmax_group {
+                    assert!((norm - lim).abs() < 1e-4 * lim, "argmax group not tight");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lambda1_max_consistent_with_rho() {
+        // In (λ₁,λ₂) space: λ₂ = λmax^α, λ₁ = αλmax^α must sit on the
+        // boundary curve λ₁ = λ₁^max(λ₂).
+        let mut rng = Rng::seed_from_u64(54);
+        let x = DenseMatrix::from_fn(10, 12, |_, _| rng.gaussian() as f32);
+        let y: Vec<f32> = (0..10).map(|_| rng.gaussian() as f32).collect();
+        let g = GroupStructure::uniform(12, 4);
+        let prob = SglProblem::new(&x, &y, &g);
+        let alpha = 1.5;
+        let lm = sgl_lambda_max(&prob, alpha);
+        let l1m = lambda1_max(&prob, lm.lambda_max);
+        assert!(
+            (l1m - alpha * lm.lambda_max).abs() < 1e-6 * l1m.max(1e-12),
+            "λ₁max({})={} vs αλmax={}",
+            lm.lambda_max,
+            l1m,
+            alpha * lm.lambda_max
+        );
+    }
+
+    #[test]
+    fn corollary10_limits() {
+        // λ₂ ≥ ‖Xᵀy‖∞ ⇒ λ₁^max(λ₂) = 0 (any λ₁ gives zero solution).
+        let mut rng = Rng::seed_from_u64(55);
+        let x = DenseMatrix::from_fn(8, 6, |_, _| rng.gaussian() as f32);
+        let y: Vec<f32> = (0..8).map(|_| rng.gaussian() as f32).collect();
+        let g = GroupStructure::uniform(6, 2);
+        let prob = SglProblem::new(&x, &y, &g);
+        let mut c = vec![0.0f32; 6];
+        prob.x.matvec_t(&y, &mut c);
+        let linf = c.iter().fold(0.0f64, |m, &v| m.max((v as f64).abs()));
+        assert_eq!(lambda1_max(&prob, linf * 1.001), 0.0);
+        assert!(lambda1_max(&prob, linf * 0.9) > 0.0);
+    }
+
+    #[test]
+    fn single_feature_groups_reduce_to_soft_threshold() {
+        // n_g = 1: ρ solves (|c|/ρ − 1) = α → ρ = |c|/(1+α).
+        let z = [2.0f64];
+        for alpha in [0.5, 1.0, 2.0] {
+            let rho = rho_group(&z, alpha, 1);
+            assert!((rho - 2.0 / (1.0 + alpha)).abs() < 1e-10, "alpha={alpha} rho={rho}");
+        }
+    }
+
+    #[test]
+    fn ties_in_z_handled() {
+        let z = [1.0f64, 1.0, 1.0];
+        let rho = rho_group(&z, 1.0, 3);
+        let rb = rho_group_bisect(&z, 1.0, 3);
+        assert!((rho - rb).abs() < 1e-9, "{rho} vs {rb}");
+        // Defining equation: 3(1/ρ−1)² = 3 → 1/ρ − 1 = 1 → ρ = ½.
+        assert!((rho - 0.5).abs() < 1e-9);
+    }
+}

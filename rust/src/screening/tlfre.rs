@@ -1,0 +1,459 @@
+//! The TLFre two-layer screening rule (Theorem 17).
+//!
+//! One path step: given the (exact) solution at the previous parameter λ̄
+//! (through its dual point `θ̄ = (y − Xβ̄)/λ̄`), screen the problem at λ < λ̄:
+//!
+//! 1. Build the dual-estimate ball (Theorem 12).
+//! 2. Sweep `c = Xᵀo` — the hot kernel, also available as an AOT-compiled
+//!    Pallas/XLA artifact through [`crate::runtime`].
+//! 3. **(L₁)** reject group g if `s*_g < α√n_g` (Theorem 15 closed form).
+//! 4. **(L₂)** in surviving groups, reject feature i if
+//!    `|x_iᵀo| + radius·‖x_i‖ ≤ 1` (Theorem 16).
+//!
+//! Rejected groups/features are *guaranteed* zero at the optimum of the
+//! λ-problem — the safety property tests verify this end to end.
+
+use super::dual_est::{estimate_ball, normal_interior, Ball};
+use super::lambda_max::LambdaMaxInfo;
+use super::supremum::{s_star_fused, t_star};
+use crate::linalg::power::group_spectral_norms;
+use crate::linalg::ops;
+use crate::prox::shrink_inplace;
+use crate::sgl::problem::SglProblem;
+use crate::util::Rng;
+
+/// Per-data-set precomputation shared across all (α, λ) screenings:
+/// column norms `‖x_i‖` and group spectral norms `‖X_g‖₂`.
+/// The paper notes this cost is shared across the whole grid (power
+/// method, [8]); we compute it once per data set.
+#[derive(Debug, Clone)]
+pub struct TlfreContext {
+    pub col_norms: Vec<f64>,
+    pub group_spectral: Vec<f64>,
+}
+
+impl TlfreContext {
+    /// Precompute from the problem (one power iteration per group).
+    pub fn precompute(prob: &SglProblem<'_>) -> TlfreContext {
+        let mut rng = Rng::seed_from_u64(0x7_1F4E);
+        let col_norms = prob.x.col_norms();
+        let ranges = prob.groups.ranges();
+        let group_spectral = group_spectral_norms(prob.x, &ranges, 1e-6, 500, &mut rng);
+        TlfreContext { col_norms, group_spectral }
+    }
+}
+
+/// Screening statistics for one path step.
+#[derive(Debug, Clone, Default)]
+pub struct ScreenStats {
+    /// Groups discarded by (L₁).
+    pub groups_rejected: usize,
+    /// Features inside (L₁)-discarded groups (numerator of the paper's r₁).
+    pub features_in_rejected_groups: usize,
+    /// Features discarded by (L₂) in surviving groups (numerator of r₂).
+    pub features_rejected_l2: usize,
+    /// Ball radius used.
+    pub radius: f64,
+}
+
+/// Outcome of one TLFre screening.
+#[derive(Debug, Clone)]
+pub struct TlfreOutcome {
+    /// Per-group survival (false ⇒ whole group certified zero).
+    pub group_kept: Vec<bool>,
+    /// Per-feature survival (false ⇒ coefficient certified zero).
+    pub feature_kept: Vec<bool>,
+    pub stats: ScreenStats,
+}
+
+impl TlfreOutcome {
+    /// Indices of surviving features.
+    pub fn active_features(&self) -> Vec<usize> {
+        self.feature_kept
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &k)| if k { Some(i) } else { None })
+            .collect()
+    }
+
+    /// Indices of surviving groups.
+    pub fn active_groups(&self) -> Vec<usize> {
+        self.group_kept
+            .iter()
+            .enumerate()
+            .filter_map(|(g, &k)| if k { Some(g) } else { None })
+            .collect()
+    }
+
+    /// Total features rejected by either layer.
+    pub fn total_rejected(&self) -> usize {
+        self.stats.features_in_rejected_groups + self.stats.features_rejected_l2
+    }
+}
+
+/// The normal-cone vector `n_α(λ̄)` of Theorem 12.
+///
+/// * λ̄ < λmax: `n = y/λ̄ − θ̄`.
+/// * λ̄ = λmax: `n = X_* S₁(X_*ᵀ y/λmax)` with `X_*` the argmax group.
+pub fn normal_vector(
+    prob: &SglProblem<'_>,
+    lambda_bar: f64,
+    theta_bar: &[f32],
+    lmax: &LambdaMaxInfo,
+) -> Vec<f32> {
+    let n = prob.n_samples();
+    let at_max = lambda_bar >= lmax.lambda_max * (1.0 - 1e-12);
+    if !at_max {
+        let y_over: Vec<f32> = prob.y.iter().map(|&v| (v as f64 / lambda_bar) as f32).collect();
+        return normal_interior(theta_bar, &y_over);
+    }
+    // n = X_* S₁(X_*ᵀ y/λmax)
+    let g = lmax.argmax_group;
+    let (s, e) = prob.groups.range(g);
+    let y_over: Vec<f32> =
+        prob.y.iter().map(|&v| (v as f64 / lmax.lambda_max) as f32).collect();
+    let mut cg = vec![0.0f32; e - s];
+    for (k, c) in cg.iter_mut().enumerate() {
+        *c = ops::dot_f32(prob.x.col(s + k), &y_over);
+    }
+    shrink_inplace(&mut cg, 1.0);
+    let mut out = vec![0.0f32; n];
+    for (k, &ck) in cg.iter().enumerate() {
+        if ck != 0.0 {
+            ops::axpy(ck, prob.x.col(s + k), &mut out);
+        }
+    }
+    out
+}
+
+/// Apply the (L₁)/(L₂) rules given the already-computed correlation sweep
+/// `c = Xᵀo` and the ball radius. Split out so the XLA runtime path (which
+/// produces `c` and the per-group reductions on-device) reuses the exact
+/// same rule logic.
+pub fn apply_rules(
+    prob: &SglProblem<'_>,
+    alpha: f64,
+    c: &[f32],
+    radius: f64,
+    ctx: &TlfreContext,
+) -> TlfreOutcome {
+    let g_cnt = prob.n_groups();
+    let p = prob.n_features();
+    let mut group_kept = vec![true; g_cnt];
+    let mut feature_kept = vec![true; p];
+    let mut stats = ScreenStats { radius, ..Default::default() };
+
+    for (g, s, e) in prob.groups.iter() {
+        let r_g = radius * ctx.group_spectral[g];
+        let (s_g, _cinf, _shrunk) = s_star_fused(&c[s..e], r_g);
+        if s_g < alpha * prob.groups.weight(g) {
+            // (L₁): whole group certified zero.
+            group_kept[g] = false;
+            feature_kept[s..e].iter_mut().for_each(|k| *k = false);
+            stats.groups_rejected += 1;
+            stats.features_in_rejected_groups += e - s;
+        } else {
+            // (L₂): feature-level rule inside the surviving group.
+            for i in s..e {
+                if t_star(c[i] as f64, radius, ctx.col_norms[i]) <= 1.0 {
+                    feature_kept[i] = false;
+                    stats.features_rejected_l2 += 1;
+                }
+            }
+        }
+    }
+    TlfreOutcome { group_kept, feature_kept, stats }
+}
+
+/// Apply the rules from *device-computed reductions* — the variant used
+/// when the sweep ran through the AOT/PJRT screening engine, which returns
+/// `c = Xᵀo` plus per-group `‖S₁(c_g)‖²` and `‖c_g‖∞` (uniform groups).
+/// Must agree exactly with [`apply_rules`]; a unit test enforces it.
+pub fn apply_rules_from_reductions(
+    prob: &SglProblem<'_>,
+    alpha: f64,
+    c: &[f32],
+    group_shrink_sq: &[f32],
+    group_cinf: &[f32],
+    radius: f64,
+    ctx: &TlfreContext,
+) -> TlfreOutcome {
+    let g_cnt = prob.n_groups();
+    assert_eq!(group_shrink_sq.len(), g_cnt);
+    assert_eq!(group_cinf.len(), g_cnt);
+    let p = prob.n_features();
+    let mut group_kept = vec![true; g_cnt];
+    let mut feature_kept = vec![true; p];
+    let mut stats = ScreenStats { radius, ..Default::default() };
+    for (g, s, e) in prob.groups.iter() {
+        let r_g = radius * ctx.group_spectral[g];
+        let cinf = group_cinf[g] as f64;
+        let s_g = if cinf > 1.0 {
+            (group_shrink_sq[g] as f64).sqrt() + r_g
+        } else {
+            (cinf + r_g - 1.0).max(0.0)
+        };
+        if s_g < alpha * prob.groups.weight(g) {
+            group_kept[g] = false;
+            feature_kept[s..e].iter_mut().for_each(|k| *k = false);
+            stats.groups_rejected += 1;
+            stats.features_in_rejected_groups += e - s;
+        } else {
+            for i in s..e {
+                if t_star(c[i] as f64, radius, ctx.col_norms[i]) <= 1.0 {
+                    feature_kept[i] = false;
+                    stats.features_rejected_l2 += 1;
+                }
+            }
+        }
+    }
+    TlfreOutcome { group_kept, feature_kept, stats }
+}
+
+/// One full TLFre screening step (Theorem 17).
+///
+/// * `lambda` — target λ^{(j+1)};
+/// * `lambda_bar` — previous λ^{(j)} (may equal `lmax.lambda_max`);
+/// * `theta_bar` — exact dual optimum at λ̄, i.e. `(y − Xβ̄)/λ̄`.
+pub fn tlfre_screen(
+    prob: &SglProblem<'_>,
+    alpha: f64,
+    lambda: f64,
+    lambda_bar: f64,
+    theta_bar: &[f32],
+    lmax: &LambdaMaxInfo,
+    ctx: &TlfreContext,
+) -> TlfreOutcome {
+    tlfre_screen_inexact(prob, alpha, lambda, lambda_bar, theta_bar, 0.0, lmax, ctx)
+}
+
+/// TLFre step that is robust to an *inexact* previous solve.
+///
+/// The paper's Theorem 12 assumes the exact dual optimum at λ̄. A solver
+/// stopped at duality gap `gap_bar` (absolute, in the (λ₁,λ₂)
+/// parameterization where θ = y − Xβ) yields a *feasible* dual point within
+/// `δ = √(2·gap_bar)` of the true optimum (1-strong convexity of the dual
+/// objective), i.e. within `δ/λ̄` in the problem-(3) θ-space used here.
+/// Inflating the estimate-ball radius by `2δ/λ̄` absorbs both the center
+/// shift and the normal-cone perturbation, preserving the safety guarantee
+/// at practical tolerances. `gap_bar = 0` recovers the paper's exact rule.
+#[allow(clippy::too_many_arguments)]
+pub fn tlfre_screen_inexact(
+    prob: &SglProblem<'_>,
+    alpha: f64,
+    lambda: f64,
+    lambda_bar: f64,
+    theta_bar: &[f32],
+    gap_bar: f64,
+    lmax: &LambdaMaxInfo,
+    ctx: &TlfreContext,
+) -> TlfreOutcome {
+    assert!(lambda > 0.0 && lambda < lambda_bar * (1.0 + 1e-12), "need 0 < λ ≤ λ̄");
+    let mut ball = screen_ball(prob, lambda, lambda_bar, theta_bar, lmax);
+    if gap_bar > 0.0 {
+        ball.radius += 2.0 * (2.0 * gap_bar).sqrt() / lambda_bar;
+    }
+    let mut c = vec![0.0f32; prob.n_features()];
+    prob.x.matvec_t(&ball.center, &mut c);
+    apply_rules(prob, alpha, &c, ball.radius, ctx)
+}
+
+/// The Theorem 12 ball for a step λ̄ → λ.
+pub fn screen_ball(
+    prob: &SglProblem<'_>,
+    lambda: f64,
+    lambda_bar: f64,
+    theta_bar: &[f32],
+    lmax: &LambdaMaxInfo,
+) -> Ball {
+    let n_vec = normal_vector(prob, lambda_bar, theta_bar, lmax);
+    let y_over: Vec<f32> = prob.y.iter().map(|&v| (v as f64 / lambda) as f32).collect();
+    estimate_ball(theta_bar, &n_vec, &y_over)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::groups::GroupStructure;
+    use crate::linalg::DenseMatrix;
+    use crate::screening::lambda_max::sgl_lambda_max;
+    use crate::sgl::fista::{solve_fista, FistaOptions};
+    use crate::sgl::problem::SglParams;
+    use crate::util::Rng;
+
+    fn make_problem(seed: u64, n: usize, p: usize, g: usize) -> (DenseMatrix, Vec<f32>, GroupStructure) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let x = DenseMatrix::from_fn(n, p, |_, _| rng.gaussian() as f32);
+        let groups = GroupStructure::uniform(p, g);
+        let mut beta = vec![0.0f32; p];
+        let per = p / g;
+        for gi in 0..g / 3 {
+            for k in 0..per / 2 + 1 {
+                beta[gi * 3 * per + k] = rng.normal(0.0, 1.0) as f32;
+            }
+        }
+        let mut y = vec![0.0f32; n];
+        x.matvec(&beta, &mut y);
+        for v in y.iter_mut() {
+            *v += rng.normal(0.0, 0.01) as f32;
+        }
+        (x, y, groups)
+    }
+
+    #[test]
+    fn screening_from_lambda_max_is_safe() {
+        // Screen at λ = 0.9λmax starting from (λmax, β=0); every rejection
+        // must be zero in a tight solve.
+        let (x, y, groups) = make_problem(71, 25, 40, 8);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let alpha = 1.0;
+        let lmax = sgl_lambda_max(&prob, alpha);
+        let ctx = TlfreContext::precompute(&prob);
+        let theta_bar: Vec<f32> =
+            y.iter().map(|&v| (v as f64 / lmax.lambda_max) as f32).collect();
+        let lambda = 0.9 * lmax.lambda_max;
+        let out =
+            tlfre_screen(&prob, alpha, lambda, lmax.lambda_max, &theta_bar, &lmax, &ctx);
+        let params = SglParams::from_alpha_lambda(alpha, lambda);
+        let sol = solve_fista(&prob, &params, None, &FistaOptions { tol: 1e-10, ..Default::default() });
+        for j in 0..prob.n_features() {
+            if !out.feature_kept[j] {
+                assert!(
+                    sol.beta[j].abs() < 1e-5,
+                    "feature {j} screened but β={}",
+                    sol.beta[j]
+                );
+            }
+        }
+        // Near λmax nearly everything should be rejected.
+        assert!(out.total_rejected() > prob.n_features() / 2);
+    }
+
+    #[test]
+    fn sequential_screening_is_safe_along_path() {
+        let (x, y, groups) = make_problem(72, 20, 36, 6);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let alpha = 0.8;
+        let lmax = sgl_lambda_max(&prob, alpha);
+        let ctx = TlfreContext::precompute(&prob);
+        let opts = FistaOptions { tol: 1e-10, ..Default::default() };
+
+        let mut lambda_bar = lmax.lambda_max;
+        let mut beta_bar = vec![0.0f32; prob.n_features()];
+        for step in 1..=6 {
+            let lambda = lmax.lambda_max * (0.95f64).powi(step * 2);
+            // θ̄ from the previous solution.
+            let mut r = vec![0.0f32; prob.n_samples()];
+            crate::sgl::objective::residual(&prob, &beta_bar, &mut r);
+            let theta_bar: Vec<f32> =
+                r.iter().map(|&v| (v as f64 / lambda_bar) as f32).collect();
+            let out = tlfre_screen(&prob, alpha, lambda, lambda_bar, &theta_bar, &lmax, &ctx);
+            let params = SglParams::from_alpha_lambda(alpha, lambda);
+            let sol = solve_fista(&prob, &params, Some(&beta_bar), &opts);
+            for j in 0..prob.n_features() {
+                if !out.feature_kept[j] {
+                    assert!(
+                        sol.beta[j].abs() < 1e-5,
+                        "step {step} feature {j}: screened but β={}",
+                        sol.beta[j]
+                    );
+                }
+            }
+            beta_bar = sol.beta;
+            lambda_bar = lambda;
+        }
+    }
+
+    #[test]
+    fn rejection_monotone_near_lambda_max() {
+        // As λ → λmax the ball shrinks to θ*(λmax)'s neighbourhood and
+        // everything inactive at λmax gets rejected.
+        let (x, y, groups) = make_problem(73, 15, 24, 6);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let alpha = 1.5;
+        let lmax = sgl_lambda_max(&prob, alpha);
+        let ctx = TlfreContext::precompute(&prob);
+        let theta_bar: Vec<f32> =
+            y.iter().map(|&v| (v as f64 / lmax.lambda_max) as f32).collect();
+        let r99 = tlfre_screen(&prob, alpha, 0.99 * lmax.lambda_max, lmax.lambda_max, &theta_bar, &lmax, &ctx);
+        let r50 = tlfre_screen(&prob, alpha, 0.50 * lmax.lambda_max, lmax.lambda_max, &theta_bar, &lmax, &ctx);
+        assert!(r99.total_rejected() >= r50.total_rejected());
+    }
+
+    #[test]
+    fn normal_vector_in_normal_cone_at_lambda_max() {
+        // Theorem 12(i), λ̄ = λmax case: ⟨n, θ − y/λmax⟩ ≤ 0 for dual
+        // feasible θ. Verify against the scaled-to-feasibility points.
+        let (x, y, groups) = make_problem(74, 12, 18, 6);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let alpha = 1.0;
+        let lmax = sgl_lambda_max(&prob, alpha);
+        let theta_star: Vec<f32> =
+            y.iter().map(|&v| (v as f64 / lmax.lambda_max) as f32).collect();
+        let n_vec = normal_vector(&prob, lmax.lambda_max, &theta_star, &lmax);
+        assert!(ops::nrm2(&n_vec) > 0.0);
+        let params = SglParams { lambda1: alpha, lambda2: 1.0 };
+        let mut rng = Rng::seed_from_u64(99);
+        for _ in 0..50 {
+            // Random direction scaled into the feasible set.
+            let cand: Vec<f32> = (0..prob.n_samples()).map(|_| rng.gaussian() as f32).collect();
+            let mut c = vec![0.0f32; prob.n_features()];
+            prob.x.matvec_t(&cand, &mut c);
+            let s = crate::sgl::dual::dual_feasible_scale(&prob, &params, &c);
+            let feas: Vec<f32> = cand.iter().map(|&v| (v as f64 * s) as f32).collect();
+            let mut diff = vec![0.0f32; prob.n_samples()];
+            ops::sub(&feas, &theta_star, &mut diff);
+            let ip = ops::dot(&n_vec, &diff);
+            assert!(ip <= 1e-3, "normal cone violated: ⟨n, θ−θ*⟩ = {ip}");
+        }
+    }
+
+    #[test]
+    fn reduction_variant_matches_apply_rules() {
+        // The device-reduction path must reproduce apply_rules bit-for-bit
+        // given consistent inputs.
+        let (x, y, groups) = make_problem(76, 14, 24, 6);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let ctx = TlfreContext::precompute(&prob);
+        let mut rng = Rng::seed_from_u64(77);
+        for _ in 0..20 {
+            let o: Vec<f32> = (0..14).map(|_| rng.normal(0.0, 0.7) as f32).collect();
+            let radius = rng.uniform_range(0.01, 0.5);
+            let alpha = rng.uniform_range(0.3, 2.0);
+            let mut c = vec![0.0f32; 24];
+            prob.x.matvec_t(&o, &mut c);
+            // emulate the device reductions
+            let mut gsn = vec![0.0f32; prob.n_groups()];
+            let mut gmax = vec![0.0f32; prob.n_groups()];
+            for (g, s, e) in prob.groups.iter() {
+                gsn[g] = crate::prox::shrink_norm_sq(&c[s..e], 1.0) as f32;
+                gmax[g] = c[s..e].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            }
+            let a = apply_rules(&prob, alpha, &c, radius, &ctx);
+            let b = apply_rules_from_reductions(&prob, alpha, &c, &gsn, &gmax, radius, &ctx);
+            assert_eq!(a.feature_kept, b.feature_kept);
+            assert_eq!(a.group_kept, b.group_kept);
+            assert_eq!(a.stats.groups_rejected, b.stats.groups_rejected);
+        }
+    }
+
+    #[test]
+    fn outcome_helpers() {
+        let (x, y, groups) = make_problem(75, 10, 12, 4);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let alpha = 1.0;
+        let lmax = sgl_lambda_max(&prob, alpha);
+        let ctx = TlfreContext::precompute(&prob);
+        let theta_bar: Vec<f32> =
+            y.iter().map(|&v| (v as f64 / lmax.lambda_max) as f32).collect();
+        let out = tlfre_screen(&prob, alpha, 0.8 * lmax.lambda_max, lmax.lambda_max, &theta_bar, &lmax, &ctx);
+        let af = out.active_features();
+        let ag = out.active_groups();
+        assert_eq!(af.len(), out.feature_kept.iter().filter(|&&k| k).count());
+        assert_eq!(ag.len(), out.group_kept.iter().filter(|&&k| k).count());
+        assert_eq!(
+            out.total_rejected(),
+            prob.n_features() - af.len()
+        );
+    }
+}

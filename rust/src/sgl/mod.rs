@@ -1,0 +1,27 @@
+//! The Sparse-Group Lasso problem and its solvers.
+//!
+//! Problem (2) of the paper:
+//!
+//! ```text
+//! min_β ½‖y − Σ_g X_g β_g‖² + λ₁ Σ_g √n_g ‖β_g‖₂ + λ₂ ‖β‖₁
+//! ```
+//!
+//! with the (λ, α) parameterization of problem (3) given by `λ₁ = αλ`,
+//! `λ₂ = λ`. Internally everything uses `(λ₁, λ₂)`; [`SglParams`] converts.
+//!
+//! Two solvers are provided:
+//! * [`fista`] — accelerated proximal gradient with the exact SGL prox and a
+//!   duality-gap stopping rule (the default, used on both the full and the
+//!   screened/reduced problem);
+//! * [`bcd`] — cyclic block coordinate descent in the style of SLEP [12]
+//!   (the solver the paper benchmarked), used as a cross-check and for the
+//!   ablation benches.
+
+pub mod bcd;
+pub mod dual;
+pub mod fista;
+pub mod objective;
+pub mod problem;
+
+pub use fista::{solve_fista, FistaOptions, SolveResult};
+pub use problem::{SglParams, SglProblem};

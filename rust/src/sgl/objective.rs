@@ -1,0 +1,113 @@
+//! Primal objective and residual bookkeeping.
+
+use super::problem::{SglParams, SglProblem};
+use crate::linalg::ops;
+
+/// Components of the primal objective at a point β.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objective {
+    /// ½‖y − Xβ‖².
+    pub loss: f64,
+    /// λ₁ Σ_g √n_g ‖β_g‖₂.
+    pub group_penalty: f64,
+    /// λ₂ ‖β‖₁.
+    pub l1_penalty: f64,
+}
+
+impl Objective {
+    #[inline]
+    pub fn total(&self) -> f64 {
+        self.loss + self.group_penalty + self.l1_penalty
+    }
+}
+
+/// Compute the residual `r = y − Xβ` into `r_out`.
+pub fn residual(prob: &SglProblem<'_>, beta: &[f32], r_out: &mut [f32]) {
+    prob.x.matvec(beta, r_out);
+    for i in 0..r_out.len() {
+        r_out[i] = prob.y[i] - r_out[i];
+    }
+}
+
+/// Penalty value `λ₁ Σ √n_g‖β_g‖ + λ₂‖β‖₁` of a coefficient vector.
+pub fn penalty(prob: &SglProblem<'_>, params: &SglParams, beta: &[f32]) -> (f64, f64) {
+    let mut group_pen = 0.0f64;
+    for (g, s, e) in prob.groups.iter() {
+        group_pen += prob.groups.weight(g) * ops::nrm2(&beta[s..e]);
+    }
+    let l1 = ops::nrm1(beta);
+    (params.lambda1 * group_pen, params.lambda2 * l1)
+}
+
+/// Full primal objective at β (computes the residual internally).
+pub fn objective(prob: &SglProblem<'_>, params: &SglParams, beta: &[f32]) -> Objective {
+    let mut r = vec![0.0f32; prob.n_samples()];
+    residual(prob, beta, &mut r);
+    objective_with_residual(prob, params, beta, &r)
+}
+
+/// Primal objective when the residual is already available (avoids the
+/// matvec — the solvers maintain `r` incrementally).
+pub fn objective_with_residual(
+    prob: &SglProblem<'_>,
+    params: &SglParams,
+    beta: &[f32],
+    r: &[f32],
+) -> Objective {
+    let loss = 0.5 * ops::nrm2_sq(r);
+    let (group_penalty, l1_penalty) = penalty(prob, params, beta);
+    Objective { loss, group_penalty, l1_penalty }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::groups::GroupStructure;
+    use crate::linalg::DenseMatrix;
+
+    #[test]
+    fn objective_zero_beta_is_half_ynorm() {
+        let x = DenseMatrix::from_fn(3, 4, |i, j| (i + j) as f32);
+        let y = vec![1.0f32, 2.0, 2.0];
+        let g = GroupStructure::uniform(4, 2);
+        let prob = SglProblem::new(&x, &y, &g);
+        let params = SglParams { lambda1: 0.3, lambda2: 0.7 };
+        let o = objective(&prob, &params, &[0.0; 4]);
+        assert!((o.loss - 4.5).abs() < 1e-9);
+        assert_eq!(o.group_penalty, 0.0);
+        assert_eq!(o.l1_penalty, 0.0);
+        assert!((o.total() - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn objective_known_value() {
+        // X = I (2x2), y = (1, 0), groups = singletons; β = (0.5, -0.25)
+        let x = DenseMatrix::from_col_major(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let y = vec![1.0f32, 0.0];
+        let g = GroupStructure::singletons(2);
+        let prob = SglProblem::new(&x, &y, &g);
+        let params = SglParams { lambda1: 2.0, lambda2: 3.0 };
+        let beta = vec![0.5f32, -0.25];
+        let o = objective(&prob, &params, &beta);
+        // loss = ½((1-0.5)² + (0.25)²) = ½(0.25+0.0625)
+        assert!((o.loss - 0.15625).abs() < 1e-9);
+        // group pen = 2(0.5 + 0.25), l1 = 3(0.75)
+        assert!((o.group_penalty - 1.5).abs() < 1e-9);
+        assert!((o.l1_penalty - 2.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn residual_and_with_residual_agree() {
+        let x = DenseMatrix::from_fn(3, 4, |i, j| ((i * 7 + j * 3) % 5) as f32 - 2.0);
+        let y = vec![0.5f32, -1.0, 2.0];
+        let g = GroupStructure::from_sizes(&[1, 3]);
+        let prob = SglProblem::new(&x, &y, &g);
+        let params = SglParams { lambda1: 0.1, lambda2: 0.2 };
+        let beta = vec![0.3f32, -0.2, 0.0, 0.1];
+        let mut r = vec![0.0f32; 3];
+        residual(&prob, &beta, &mut r);
+        let a = objective(&prob, &params, &beta);
+        let b = objective_with_residual(&prob, &params, &beta, &r);
+        assert!((a.total() - b.total()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,101 @@
+//! Problem container and parameterization.
+
+use crate::groups::GroupStructure;
+use crate::linalg::DenseMatrix;
+
+/// Regularization parameters of SGL.
+///
+/// The paper uses two equivalent forms: problem (2) with `(λ₁, λ₂)` and
+/// problem (3) with `(λ, α)` where `λ₁ = αλ, λ₂ = λ`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SglParams {
+    /// Group-lasso weight λ₁ (multiplies `√n_g ‖β_g‖₂`).
+    pub lambda1: f64,
+    /// Lasso weight λ₂ (multiplies `‖β‖₁`).
+    pub lambda2: f64,
+}
+
+impl SglParams {
+    /// From the `(λ, α)` parameterization of problem (3).
+    pub fn from_alpha_lambda(alpha: f64, lambda: f64) -> SglParams {
+        assert!(alpha > 0.0 && lambda > 0.0, "alpha and lambda must be positive");
+        SglParams { lambda1: alpha * lambda, lambda2: lambda }
+    }
+
+    /// Back to `(λ, α)`: `λ = λ₂`, `α = λ₁/λ₂`.
+    pub fn to_alpha_lambda(&self) -> (f64, f64) {
+        (self.lambda1 / self.lambda2, self.lambda2)
+    }
+}
+
+/// A borrowed SGL problem instance: design matrix, response, groups.
+#[derive(Debug, Clone, Copy)]
+pub struct SglProblem<'a> {
+    pub x: &'a DenseMatrix,
+    pub y: &'a [f32],
+    pub groups: &'a GroupStructure,
+}
+
+impl<'a> SglProblem<'a> {
+    pub fn new(x: &'a DenseMatrix, y: &'a [f32], groups: &'a GroupStructure) -> Self {
+        assert_eq!(x.rows(), y.len(), "X rows must match y length");
+        x.check_groups(groups);
+        SglProblem { x, y, groups }
+    }
+
+    #[inline]
+    pub fn n_samples(&self) -> usize {
+        self.x.rows()
+    }
+
+    #[inline]
+    pub fn n_features(&self) -> usize {
+        self.x.cols()
+    }
+
+    #[inline]
+    pub fn n_groups(&self) -> usize {
+        self.groups.n_groups()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_conversions_roundtrip() {
+        let p = SglParams::from_alpha_lambda(2.0, 0.5);
+        assert_eq!(p.lambda1, 1.0);
+        assert_eq!(p.lambda2, 0.5);
+        let (a, l) = p.to_alpha_lambda();
+        assert!((a - 2.0).abs() < 1e-12);
+        assert!((l - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nonpositive_params_panic() {
+        SglParams::from_alpha_lambda(0.0, 1.0);
+    }
+
+    #[test]
+    fn problem_dims() {
+        let x = DenseMatrix::zeros(4, 6);
+        let y = vec![0.0f32; 4];
+        let g = GroupStructure::uniform(6, 3);
+        let p = SglProblem::new(&x, &y, &g);
+        assert_eq!(p.n_samples(), 4);
+        assert_eq!(p.n_features(), 6);
+        assert_eq!(p.n_groups(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_y_panics() {
+        let x = DenseMatrix::zeros(4, 6);
+        let y = vec![0.0f32; 3];
+        let g = GroupStructure::uniform(6, 3);
+        SglProblem::new(&x, &y, &g);
+    }
+}

@@ -1,0 +1,188 @@
+//! Micro/macro benchmark harness.
+//!
+//! `criterion` is not in the offline crate set, so the `rust/benches/*`
+//! binaries (declared with `harness = false`) use this module: warmup,
+//! repeated timed runs, black-box value sinking, and aligned table output
+//! matching the paper's row format.
+
+use super::stats::Summary;
+use super::Timer;
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Number of warmup runs (not recorded).
+    pub warmup: usize,
+    /// Number of measured runs.
+    pub runs: usize,
+    /// Optional cap on total measurement wall time (seconds); measurement
+    /// stops early (but after ≥1 run) when exceeded.
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup: 1, runs: 5, max_seconds: 120.0 }
+    }
+}
+
+/// One benchmarked quantity: a label and its timing summary (seconds).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub label: String,
+    pub seconds: Summary,
+}
+
+/// Time `f` under `cfg`, returning a [`BenchResult`].
+pub fn bench<F: FnMut()>(label: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(cfg.runs);
+    let wall = Timer::start();
+    for _ in 0..cfg.runs {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_s());
+        if wall.elapsed_s() > cfg.max_seconds && !samples.is_empty() {
+            break;
+        }
+    }
+    BenchResult { label: label.to_string(), seconds: Summary::of(&samples) }
+}
+
+/// Time a single execution of `f` (for long end-to-end paths where repeats
+/// are too expensive); still returns a `Summary` with `n = 1`.
+pub fn bench_once<F: FnOnce()>(label: &str, f: F) -> BenchResult {
+    let t = Timer::start();
+    f();
+    BenchResult { label: label.to_string(), seconds: Summary::of(&[t.elapsed_s()]) }
+}
+
+// ---------------------------------------------------------------------------
+// Table rendering
+
+/// A simple aligned text table, used to print the paper's tables.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    /// Render with column alignment (first column left, rest right).
+    pub fn render(&self) -> String {
+        let ncol = self
+            .rows
+            .iter()
+            .map(|r| r.len())
+            .chain(std::iter::once(self.header.len()))
+            .max()
+            .unwrap_or(0);
+        let mut widths = vec![0usize; ncol];
+        let all = std::iter::once(&self.header).chain(self.rows.iter());
+        for row in all {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |row: &[String], out: &mut String| {
+            for (i, c) in row.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let pad = widths[i].saturating_sub(c.chars().count());
+                if i == 0 {
+                    out.push_str(c);
+                    out.push_str(&" ".repeat(pad));
+                } else {
+                    out.push_str(&" ".repeat(pad));
+                    out.push_str(c);
+                }
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol.saturating_sub(1));
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out
+    }
+}
+
+/// Format seconds for table cells (matches the paper's 2-decimal style).
+pub fn cell_secs(s: f64) -> String {
+    format!("{:.2}", s)
+}
+
+/// Format a speedup ratio for table cells.
+pub fn cell_speedup(s: f64) -> String {
+    format!("{:.2}", s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let cfg = BenchConfig { warmup: 1, runs: 3, max_seconds: 10.0 };
+        let r = bench("spin", &cfg, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(r.seconds.n, 3);
+        assert!(r.seconds.min >= 0.0);
+        assert!(r.seconds.mean > 0.0);
+    }
+
+    #[test]
+    fn bench_once_records_one_sample() {
+        let r = bench_once("one", || {
+            black_box(42);
+        });
+        assert_eq!(r.seconds.n, 1);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "a", "bb"]);
+        t.row(vec!["x".into(), "1.00".into(), "2.00".into()]);
+        t.row(vec!["longer".into(), "10.00".into(), "3.50".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all data lines same width
+        assert_eq!(lines[2].len(), lines[3].len());
+        assert!(lines[0].starts_with("name"));
+    }
+
+    #[test]
+    fn max_seconds_stops_early() {
+        let cfg = BenchConfig { warmup: 0, runs: 1000, max_seconds: 0.05 };
+        let r = bench("sleepy", &cfg, || std::thread::sleep(std::time::Duration::from_millis(20)));
+        assert!(r.seconds.n < 1000);
+        assert!(r.seconds.n >= 1);
+    }
+}

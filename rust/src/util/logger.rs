@@ -1,0 +1,80 @@
+//! Minimal `log`-facade backend.
+//!
+//! Filters by the `TLFRE_LOG` environment variable (`error|warn|info|debug|
+//! trace`, default `info`) and writes single-line records with elapsed time
+//! to stderr. Installed once via [`init`].
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::OnceCell;
+use std::time::Instant;
+
+struct Logger {
+    start: Instant,
+}
+
+static LOGGER: OnceCell<Logger> = OnceCell::new();
+
+impl log::Log for Logger {
+    fn enabled(&self, _metadata: &Metadata) -> bool {
+        true // filtering handled by max_level
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a level name; unknown names fall back to `Info`.
+fn parse_level(s: &str) -> LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => LevelFilter::Off,
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "info" => LevelFilter::Info,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    }
+}
+
+/// Install the logger (idempotent). Level from `TLFRE_LOG`, default `info`.
+pub fn init() {
+    let logger = LOGGER.get_or_init(|| Logger { start: Instant::now() });
+    let level = std::env::var("TLFRE_LOG").map(|v| parse_level(&v)).unwrap_or(LevelFilter::Info);
+    // set_logger fails if already set (e.g. by a test harness) — ignore.
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(parse_level("error"), LevelFilter::Error);
+        assert_eq!(parse_level("TRACE"), LevelFilter::Trace);
+        assert_eq!(parse_level("bogus"), LevelFilter::Info);
+        assert_eq!(parse_level("off"), LevelFilter::Off);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init();
+        log::info!("logger smoke test line");
+    }
+}

@@ -1,0 +1,93 @@
+//! Utility substrates.
+//!
+//! The build environment is fully offline with a small vendored crate set
+//! (no `rand`, `serde`, `clap`, `criterion`, `rayon`, `tokio`), so the
+//! pieces a production crate would normally pull in are implemented here
+//! from scratch:
+//!
+//! * [`rng`] — `xoshiro256++` PRNG with gaussian / permutation helpers.
+//! * [`json`] — a small JSON value type with parser and pretty-printer
+//!   (configs, experiment manifests, artifact metadata).
+//! * [`stats`] — descriptive statistics over timing samples.
+//! * [`harness`] — a micro-benchmark harness (warmup + repeated timing)
+//!   standing in for criterion; used by every `rust/benches/*` binary.
+//! * [`logger`] — a tiny `log`-facade backend with env-based filtering.
+//! * [`pool`] — scoped-thread parallel-for (sized to available cores).
+
+pub mod harness;
+pub mod json;
+pub mod logger;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+pub use stats::Summary;
+
+/// Wall-clock stopwatch with lap support.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: std::time::Instant,
+}
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Self {
+        Timer { start: std::time::Instant::now() }
+    }
+
+    /// Seconds elapsed since construction.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds elapsed since construction.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    /// Reset the stopwatch and return the elapsed seconds up to the reset.
+    pub fn lap_s(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = std::time::Instant::now();
+        e
+    }
+}
+
+/// Format a duration in seconds with sensible units for log lines.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2}s", secs)
+    } else {
+        format!("{:.1}min", secs / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(0.5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with('s'));
+        assert!(fmt_duration(600.0).ends_with("min"));
+    }
+}

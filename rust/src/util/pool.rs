@@ -1,0 +1,108 @@
+//! Scoped-thread parallelism.
+//!
+//! `rayon` is unavailable offline; this provides a `parallel_for_chunks`
+//! built on `std::thread::scope`. On the single-core benchmark box it
+//! degrades to a serial loop with zero thread overhead, but the coordinator
+//! uses it so multi-core deployments scale (e.g. running independent
+//! α-paths concurrently).
+
+/// Number of worker threads to use (respects `TLFRE_THREADS`, defaults to
+/// available parallelism).
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("TLFRE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_index, start, end)` over `n` items split into contiguous
+/// chunks, one per worker. `f` must be `Sync` (called from multiple threads).
+pub fn parallel_for_chunks<F>(n: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n == 0 {
+        f(0, 0, n);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let start = w * chunk;
+            let end = ((w + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(w, start, end));
+        }
+    });
+}
+
+/// Map a function over items in parallel, preserving order.
+pub fn parallel_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send + Default + Clone,
+    F: Fn(&T) -> U + Sync,
+{
+    let mut out = vec![U::default(); items.len()];
+    {
+        let out_ptr = SyncSlice(out.as_mut_ptr());
+        parallel_for_chunks(items.len(), |_, start, end| {
+            // Capture the whole wrapper (edition-2021 disjoint capture would
+            // otherwise move the raw pointer field, which is not Sync).
+            let ptr = &out_ptr;
+            for i in start..end {
+                // SAFETY: chunks are disjoint index ranges; each element is
+                // written by exactly one worker.
+                unsafe { *ptr.0.add(i) = f(&items[i]) };
+            }
+        });
+    }
+    out
+}
+
+/// Wrapper making a raw pointer Sync for disjoint-range writes.
+struct SyncSlice<U>(*mut U);
+unsafe impl<U> Sync for SyncSlice<U> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_all_indices_once() {
+        let n = 1000;
+        let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for_chunks(n, |_, s, e| {
+            for i in s..e {
+                counts[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let xs: Vec<usize> = (0..257).collect();
+        let ys = parallel_map(&xs, |&x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_items_ok() {
+        parallel_for_chunks(0, |_, s, e| assert_eq!(s, e));
+        let ys: Vec<usize> = parallel_map(&Vec::<usize>::new(), |&x| x);
+        assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn num_threads_at_least_one() {
+        assert!(num_threads() >= 1);
+    }
+}

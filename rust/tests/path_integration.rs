@@ -1,0 +1,110 @@
+//! End-to-end coordinator integration: full paths on the paper's synthetic
+//! recipes, screened vs baseline agreement, speedup sanity, and DPC paths
+//! on the simulated real data sets.
+
+use tlfre::coordinator::{
+    run_baseline_path, run_dpc_path, run_nonneg_baseline, run_tlfre_path, DpcPathConfig,
+    PathConfig,
+};
+use tlfre::data::registry::RealDataset;
+use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
+use tlfre::util::harness::black_box;
+
+fn cfg(alpha: f64, n_lambda: usize) -> PathConfig {
+    PathConfig { alpha, n_lambda, lambda_min_ratio: 0.05, tol: 1e-6, ..Default::default() }
+}
+
+#[test]
+fn synthetic1_path_screened_vs_baseline_objectives() {
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(60, 600, 60), 7);
+    let c = cfg(1.0, 30);
+    let screened = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &c);
+    let baseline = run_baseline_path(&ds.x, &ds.y, &ds.groups, &c);
+    // High rejection on the paper's own workload.
+    assert!(
+        screened.mean_total_rejection() > 0.8,
+        "rejection {}",
+        screened.mean_total_rejection()
+    );
+    // The screened path should touch far fewer features in total.
+    let screened_work: usize = screened.steps.iter().map(|s| s.active_features).sum();
+    let baseline_work: usize = baseline.steps.iter().map(|s| s.active_features).sum();
+    assert!(
+        screened_work * 3 < baseline_work,
+        "screened {screened_work} vs baseline {baseline_work}"
+    );
+}
+
+#[test]
+fn synthetic2_path_runs_with_correlated_design() {
+    // Paper-like per-step ratio needs a reasonably fine grid (100 points
+    // over two decades in the paper; 30 points over 1.3 decades here).
+    let ds = generate_synthetic(&SyntheticSpec::synthetic2_scaled(50, 400, 40), 8);
+    let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg(1.0, 30));
+    assert_eq!(out.steps.len(), 30);
+    assert!(out.mean_total_rejection() > 0.5);
+    for s in &out.steps {
+        assert!(s.gap.is_finite());
+        assert!(s.r1 + s.r2 <= 1.0 + 1e-9);
+    }
+}
+
+#[test]
+fn adni_sim_path_group_structure_respected() {
+    // Small-scale ADNI sim: ragged groups (2..=20 SNPs).
+    let ds = RealDataset::AdniGmv.generate(0.002, 9);
+    assert!(ds.groups.is_uniform().is_none(), "ADNI groups should be ragged");
+    let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg(1.0, 8));
+    assert!(out.mean_total_rejection() > 0.5, "rejection {}", out.mean_total_rejection());
+}
+
+#[test]
+fn dpc_path_on_image_dictionary() {
+    let ds = RealDataset::Mnist.generate(0.004, 10);
+    let c = DpcPathConfig { n_lambda: 30, lambda_min_ratio: 0.1, tol: 1e-5, ..Default::default() };
+    let screened = run_dpc_path(&ds.x, &ds.y, &c);
+    let baseline = run_nonneg_baseline(&ds.x, &ds.y, &c);
+    assert!(screened.mean_rejection() > 0.8, "rejection {}", screened.mean_rejection());
+    let s_work: usize = screened.steps.iter().map(|s| s.active_features).sum();
+    let b_work: usize = baseline.steps.iter().map(|s| s.active_features).sum();
+    assert!(s_work * 5 < b_work, "screened {s_work} vs baseline {b_work}");
+}
+
+#[test]
+fn screening_cost_is_negligible() {
+    // The paper's headline operational property: TLFre time ≪ solver time.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(80, 800, 80), 11);
+    let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg(1.0, 15));
+    black_box(&out);
+    assert!(
+        out.screen_total_s < out.solve_total_s.max(0.05),
+        "screening {}s vs solving {}s",
+        out.screen_total_s,
+        out.solve_total_s
+    );
+}
+
+#[test]
+fn verify_mode_full_paths_small() {
+    // verify_safety re-solves unscreened every step and asserts internally.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 150, 15), 12);
+    for alpha in [0.3, 1.0, 3.0] {
+        let c = PathConfig { verify_safety: true, tol: 1e-8, ..cfg(alpha, 10) };
+        let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &c);
+        assert!(out.steps.len() == 10);
+    }
+}
+
+#[test]
+fn dpc_verify_mode_small() {
+    let ds = RealDataset::Pie.generate(0.01, 13);
+    let c = DpcPathConfig {
+        n_lambda: 8,
+        lambda_min_ratio: 0.05,
+        tol: 1e-8,
+        verify_safety: true,
+        ..Default::default()
+    };
+    let out = run_dpc_path(&ds.x, &ds.y, &c);
+    assert!(out.steps.len() == 8);
+}

@@ -1,0 +1,169 @@
+//! Integration tests over the PJRT runtime: the AOT artifacts produced by
+//! `python/compile/aot.py` must load, compile, execute, and agree with the
+//! native rust implementation to f32 tolerance.
+//!
+//! Requires `make artifacts` to have run (skips gracefully otherwise so
+//! `cargo test` works in a fresh checkout).
+
+use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
+use tlfre::linalg::DenseMatrix;
+use tlfre::prox::shrink_norm_sq;
+use tlfre::runtime::{artifacts_dir, ArtifactManifest, Runtime, ScreenEngine};
+use tlfre::util::Rng;
+
+fn manifest_or_skip() -> Option<ArtifactManifest> {
+    let dir = artifacts_dir();
+    match ArtifactManifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn screen_artifact_matches_native_tiny() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let mut rt = Runtime::cpu().expect("PJRT cpu client");
+    let (n, p, gs) = (8usize, 32usize, 4usize);
+    let mut rng = Rng::seed_from_u64(7);
+    let x = DenseMatrix::from_fn(n, p, |_, _| rng.normal(0.0, 1.2) as f32);
+    let o: Vec<f32> = (0..n).map(|_| rng.normal(0.0, 0.8) as f32).collect();
+
+    let engine = ScreenEngine::for_matrix(&mut rt, &manifest, &x).expect("engine");
+    assert_eq!(engine.group_size, gs);
+    let out = engine.run(&rt, &o).expect("screen run");
+
+    // Native reference.
+    let mut c = vec![0.0f32; p];
+    x.matvec_t(&o, &mut c);
+    for j in 0..p {
+        assert!(
+            (out.c[j] - c[j]).abs() < 1e-4 * (1.0 + c[j].abs()),
+            "c[{j}]: hlo={} native={}",
+            out.c[j],
+            c[j]
+        );
+    }
+    for g in 0..p / gs {
+        let seg = &c[g * gs..(g + 1) * gs];
+        let gsn = shrink_norm_sq(seg, 1.0);
+        let gmax = seg.iter().fold(0.0f64, |m, &v| m.max((v as f64).abs()));
+        assert!(
+            (out.group_shrink_sq[g] as f64 - gsn).abs() < 1e-4 * (1.0 + gsn),
+            "gsn[{g}]: hlo={} native={}",
+            out.group_shrink_sq[g],
+            gsn
+        );
+        assert!(
+            (out.group_cinf[g] as f64 - gmax).abs() < 1e-5 * (1.0 + gmax),
+            "gmax[{g}]"
+        );
+    }
+}
+
+#[test]
+fn screen_artifact_matches_native_e2e_shape() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    if manifest.find("tlfre_screen", 100, 1000).is_none() {
+        eprintln!("SKIP: e2e artifact not built");
+        return;
+    }
+    let mut rt = Runtime::cpu().expect("PJRT cpu client");
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(100, 1000, 100), 11);
+    let engine = ScreenEngine::for_matrix(&mut rt, &manifest, &ds.x).expect("engine");
+    let mut rng = Rng::seed_from_u64(12);
+    for _ in 0..3 {
+        let o: Vec<f32> = (0..100).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        let out = engine.run(&rt, &o).expect("run");
+        let mut c = vec![0.0f32; 1000];
+        ds.x.matvec_t(&o, &mut c);
+        let max_err = out
+            .c
+            .iter()
+            .zip(&c)
+            .map(|(a, b)| (a - b).abs() as f64 / (1.0 + b.abs() as f64))
+            .fold(0.0f64, f64::max);
+        assert!(max_err < 1e-4, "max relative error {max_err}");
+    }
+}
+
+#[test]
+fn dpc_artifact_executes() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let Some(spec) = manifest.find("dpc_screen", 8, 32) else {
+        eprintln!("SKIP: dpc tiny artifact missing");
+        return;
+    };
+    let mut rt = Runtime::cpu().expect("PJRT cpu client");
+    let mut rng = Rng::seed_from_u64(13);
+    let xt: Vec<f32> = (0..8 * 32).map(|_| rng.gaussian() as f32).collect();
+    let o: Vec<f32> = (0..8).map(|_| rng.gaussian() as f32).collect();
+    let outs = rt
+        .execute_f32(&manifest.path_of(spec), &[(&xt, &[32, 8]), (&o, &[8])])
+        .expect("execute dpc");
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].len(), 32);
+    // Native check: row-major (32, 8) => column j of X is xt[j*8..(j+1)*8].
+    for j in 0..32 {
+        let dot: f32 = (0..8).map(|i| xt[j * 8 + i] * o[i]).sum();
+        assert!((outs[0][j] - dot).abs() < 1e-4 * (1.0 + dot.abs()), "col {j}");
+    }
+}
+
+#[test]
+fn fista_step_artifact_reduces_objective() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let Some(spec) = manifest.find("fista_step", 8, 32) else {
+        eprintln!("SKIP: fista tiny artifact missing");
+        return;
+    };
+    let mut rt = Runtime::cpu().expect("PJRT cpu client");
+    let mut rng = Rng::seed_from_u64(14);
+    let (n, p) = (8usize, 32usize);
+    let x = DenseMatrix::from_fn(n, p, |_, _| rng.gaussian() as f32);
+    let y: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+    let groups = tlfre::groups::GroupStructure::uniform(p, 8);
+    let prob = tlfre::sgl::SglProblem::new(&x, &y, &groups);
+    let params = tlfre::sgl::SglParams { lambda1: 0.05, lambda2: 0.05 };
+    let lip = tlfre::sgl::fista::lipschitz(&prob);
+
+    let mut beta = vec![0.0f32; p];
+    let mut z = beta.clone();
+    let mut t_k = 1.0f32;
+    let path = manifest.path_of(spec);
+    let obj0 = tlfre::sgl::objective::objective(&prob, &params, &beta).total();
+    for _ in 0..50 {
+        let scalars = [t_k, (1.0 / lip) as f32, params.lambda1 as f32, params.lambda2 as f32];
+        let outs = rt
+            .execute_f32(
+                &path,
+                &[
+                    (x.data(), &[p as i64, n as i64]),
+                    (&y, &[n as i64]),
+                    (&beta, &[p as i64]),
+                    (&z, &[p as i64]),
+                    (&scalars, &[4]),
+                ],
+            )
+            .expect("fista step");
+        beta = outs[0].clone();
+        z = outs[1].clone();
+        t_k = outs[2][0];
+    }
+    let obj1 = tlfre::sgl::objective::objective(&prob, &params, &beta).total();
+    assert!(obj1 < obj0, "objective did not decrease: {obj0} -> {obj1}");
+    // Cross-check against the native solver's optimum.
+    let res = tlfre::sgl::solve_fista(
+        &prob,
+        &params,
+        None,
+        &tlfre::sgl::FistaOptions { tol: 1e-9, ..Default::default() },
+    );
+    assert!(
+        obj1 <= res.objective * 1.05 + 1e-6,
+        "HLO FISTA far from optimum: {obj1} vs {}",
+        res.objective
+    );
+}

@@ -1,0 +1,233 @@
+//! Property tests for the paper's central claim: TLFre and DPC are *exact*
+//! (safe) rules — every discarded group/feature is zero at the optimum.
+//!
+//! proptest is unavailable offline, so these run a seeded-trial loop over
+//! randomized problem families (dimensions, group layouts, α, λ steps,
+//! correlation structures), solving to tight duality gaps and asserting
+//! the safety property for each screening outcome.
+
+use tlfre::data::synthetic::{generate_synthetic, Correlation, SyntheticSpec};
+use tlfre::groups::GroupStructure;
+use tlfre::linalg::DenseMatrix;
+use tlfre::nonneg::{lambda_max as nn_lambda_max, solve_nonneg, NonnegOptions, NonnegProblem};
+use tlfre::screening::dpc::dpc_screen;
+use tlfre::screening::lambda_max::sgl_lambda_max;
+use tlfre::screening::tlfre::{tlfre_screen, TlfreContext};
+use tlfre::sgl::{solve_fista, FistaOptions, SglParams, SglProblem};
+use tlfre::util::Rng;
+
+/// One randomized TLFre safety trial.
+fn tlfre_trial(seed: u64) -> (usize, usize) {
+    let mut rng = Rng::seed_from_u64(seed);
+    // Random problem family.
+    let n = 10 + rng.below(30);
+    let g_cnt = 3 + rng.below(10);
+    let sizes: Vec<usize> = (0..g_cnt).map(|_| 1 + rng.below(8)).collect();
+    let p: usize = sizes.iter().sum();
+    let correlated = rng.below(2) == 1;
+    let x = if correlated {
+        // AR columns
+        let rho = 0.5;
+        let w = (1.0 - rho * rho as f64).sqrt();
+        let mut prev: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        DenseMatrix::from_fn(n, p, |i, j| {
+            if j == 0 {
+                prev[i] as f32
+            } else {
+                if i == 0 { /* advance row-wise per column visit */ }
+                let v = rho * prev[i] + w * rng.gaussian();
+                prev[i] = v;
+                v as f32
+            }
+        })
+    } else {
+        DenseMatrix::from_fn(n, p, |_, _| rng.gaussian() as f32)
+    };
+    let groups = GroupStructure::from_sizes(&sizes);
+    // Sparse planted signal.
+    let mut beta = vec![0.0f32; p];
+    for _ in 0..1 + p / 6 {
+        beta[rng.below(p)] = rng.normal(0.0, 1.0) as f32;
+    }
+    let mut y = vec![0.0f32; n];
+    x.matvec(&beta, &mut y);
+    for v in y.iter_mut() {
+        *v += rng.normal(0.0, 0.02) as f32;
+    }
+
+    let prob = SglProblem::new(&x, &y, &groups);
+    let alpha = rng.uniform_range(0.1, 4.0);
+    let lmax = sgl_lambda_max(&prob, alpha);
+    if lmax.lambda_max <= 0.0 {
+        return (0, 0);
+    }
+    let ctx = TlfreContext::precompute(&prob);
+    let opts = FistaOptions { tol: 1e-11, ..Default::default() };
+
+    // Two-step path with a random step ratio.
+    let ratio = rng.uniform_range(0.3, 0.98);
+    let lambda1 = lmax.lambda_max * rng.uniform_range(0.5, 0.999);
+    let lambda2 = lambda1 * ratio;
+
+    // Exact solve at λ₁, then screen λ₂ from it.
+    let params1 = SglParams::from_alpha_lambda(alpha, lambda1);
+    let sol1 = solve_fista(&prob, &params1, None, &opts);
+    let mut r = vec![0.0f32; n];
+    tlfre::sgl::objective::residual(&prob, &sol1.beta, &mut r);
+    let theta_bar: Vec<f32> = r.iter().map(|&v| (v as f64 / lambda1) as f32).collect();
+
+    let out = tlfre_screen(&prob, alpha, lambda2, lambda1, &theta_bar, &lmax, &ctx);
+    let params2 = SglParams::from_alpha_lambda(alpha, lambda2);
+    let sol2 = solve_fista(&prob, &params2, None, &opts);
+    let mut violations = 0usize;
+    for j in 0..p {
+        if !out.feature_kept[j] && sol2.beta[j].abs() > 1e-4 {
+            eprintln!(
+                "seed {seed}: feature {j} screened, |β|={} (α={alpha}, λ̄={lambda1}, λ={lambda2})",
+                sol2.beta[j]
+            );
+            violations += 1;
+        }
+    }
+    (violations, out.total_rejected())
+}
+
+#[test]
+fn tlfre_safety_randomized_families() {
+    let mut total_rejected = 0usize;
+    for seed in 0..40 {
+        let (violations, rejected) = tlfre_trial(1000 + seed);
+        assert_eq!(violations, 0, "safety violated for seed {}", 1000 + seed);
+        total_rejected += rejected;
+    }
+    // The rules must actually do something across the family.
+    assert!(total_rejected > 100, "screening rejected almost nothing: {total_rejected}");
+}
+
+/// Screening directly from λmax (the path entry case, Theorem 12's
+/// λ̄ = λmax branch) across random problems.
+#[test]
+fn tlfre_safety_from_lambda_max() {
+    for seed in 0..25 {
+        let mut rng = Rng::seed_from_u64(2000 + seed);
+        let n = 12 + rng.below(20);
+        let g_cnt = 4 + rng.below(6);
+        let gs = 1 + rng.below(5);
+        let p = g_cnt * gs;
+        let x = DenseMatrix::from_fn(n, p, |_, _| rng.gaussian() as f32);
+        let groups = GroupStructure::uniform(p, g_cnt);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+        let prob = SglProblem::new(&x, &y, &groups);
+        let alpha = rng.uniform_range(0.2, 3.0);
+        let lmax = sgl_lambda_max(&prob, alpha);
+        let ctx = TlfreContext::precompute(&prob);
+        let theta: Vec<f32> = y.iter().map(|&v| (v as f64 / lmax.lambda_max) as f32).collect();
+        let lambda = lmax.lambda_max * rng.uniform_range(0.5, 0.99);
+        let out = tlfre_screen(&prob, alpha, lambda, lmax.lambda_max, &theta, &lmax, &ctx);
+        let sol = solve_fista(
+            &prob,
+            &SglParams::from_alpha_lambda(alpha, lambda),
+            None,
+            &FistaOptions { tol: 1e-11, ..Default::default() },
+        );
+        for j in 0..p {
+            if !out.feature_kept[j] {
+                assert!(
+                    sol.beta[j].abs() < 1e-4,
+                    "seed {}: feature {j} screened but β={}",
+                    2000 + seed,
+                    sol.beta[j]
+                );
+            }
+        }
+    }
+}
+
+/// DPC safety across random nonnegative problems.
+#[test]
+fn dpc_safety_randomized() {
+    for seed in 0..30 {
+        let mut rng = Rng::seed_from_u64(3000 + seed);
+        let n = 10 + rng.below(25);
+        let p = 20 + rng.below(80);
+        let x = DenseMatrix::from_fn(n, p, |_, _| rng.gaussian().abs() as f32);
+        let mut y = vec![0.0f32; n];
+        for _ in 0..3 {
+            let j = rng.below(p);
+            tlfre::linalg::ops::axpy(rng.uniform_range(0.2, 1.0) as f32, x.col(j), &mut y);
+        }
+        let prob = NonnegProblem::new(&x, &y);
+        let (lmax, arg) = nn_lambda_max(&prob);
+        if lmax <= 0.0 {
+            continue;
+        }
+        let col_norms = x.col_norms();
+        let lambda1 = lmax * rng.uniform_range(0.4, 0.99);
+        let lambda2 = lambda1 * rng.uniform_range(0.4, 0.95);
+        let o1 = solve_nonneg(
+            &prob,
+            lambda1,
+            None,
+            &NonnegOptions { tol: 1e-11, ..Default::default() },
+        );
+        let mut r = vec![0.0f32; n];
+        x.matvec(&o1.beta, &mut r);
+        for i in 0..n {
+            r[i] = y[i] - r[i];
+        }
+        let theta: Vec<f32> = r.iter().map(|&v| (v as f64 / lambda1) as f32).collect();
+        let out = dpc_screen(&prob, lambda2, lambda1, &theta, lmax, arg, &col_norms);
+        let sol = solve_nonneg(
+            &prob,
+            lambda2,
+            None,
+            &NonnegOptions { tol: 1e-11, ..Default::default() },
+        );
+        for j in 0..p {
+            if !out.feature_kept[j] {
+                assert!(
+                    sol.beta[j].abs() < 1e-4,
+                    "seed {}: feature {j} screened but β={}",
+                    3000 + seed,
+                    sol.beta[j]
+                );
+            }
+        }
+    }
+}
+
+/// Theorem 8 equivalences on the paper's own synthetic recipe.
+#[test]
+fn theorem8_equivalences_on_synthetic() {
+    for (spec, seed) in [
+        (SyntheticSpec::synthetic1_scaled(30, 120, 12), 1u64),
+        (SyntheticSpec::synthetic2_scaled(30, 120, 12), 2u64),
+    ] {
+        assert!(matches!(
+            spec.correlation,
+            Correlation::Iid | Correlation::Ar(_)
+        ));
+        let ds = generate_synthetic(&spec, seed);
+        let prob = SglProblem::new(&ds.x, &ds.y, &ds.groups);
+        for alpha in [0.3, 1.0, 2.5] {
+            let lmax = sgl_lambda_max(&prob, alpha);
+            let opts = FistaOptions { tol: 1e-10, ..Default::default() };
+            // (iv) ⇒ (iii): λ ≥ λmax gives β* = 0.
+            let above = solve_fista(
+                &prob,
+                &SglParams::from_alpha_lambda(alpha, lmax.lambda_max * 1.01),
+                None,
+                &opts,
+            );
+            assert!(above.beta.iter().all(|&b| b == 0.0));
+            // ¬(iv) ⇒ ¬(iii): λ < λmax gives β* ≠ 0.
+            let below = solve_fista(
+                &prob,
+                &SglParams::from_alpha_lambda(alpha, lmax.lambda_max * 0.95),
+                None,
+                &opts,
+            );
+            assert!(below.beta.iter().any(|&b| b != 0.0), "α={alpha}");
+        }
+    }
+}
