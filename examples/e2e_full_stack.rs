@@ -25,7 +25,7 @@ use tlfre::screening::tlfre::{apply_rules_from_reductions, screen_ball, TlfreCon
 use tlfre::sgl::{solve_fista, FistaOptions, SglParams, SglProblem};
 use tlfre::util::{fmt_duration, Timer};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> tlfre::error::Result<()> {
     tlfre::util::logger::init();
     let (n, p, g_cnt) = (100usize, 1000usize, 100usize);
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(n, p, g_cnt), 2024);
@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
 
     // ---- Layers 1+2: load the AOT artifact through PJRT -----------------
     let manifest = ArtifactManifest::load(&artifacts_dir())
-        .map_err(|e| anyhow::anyhow!("{e:#}\nrun `make artifacts` first"))?;
+        .map_err(|e| tlfre::anyhow!("{e:#}\nrun `make artifacts` first"))?;
     let mut rt = Runtime::cpu()?;
     println!("PJRT platform: {}", rt.platform());
     let t = Timer::start();
@@ -117,7 +117,7 @@ fn main() -> anyhow::Result<()> {
     println!("  mean rejection ratio = {:.3}", total_rejected as f64 / total_zero as f64);
     println!("  max XLA↔native sweep deviation = {max_xla_native_err:.2e}");
     println!("  screen {}  solve {}", fmt_duration(screen_s), fmt_duration(solve_s));
-    anyhow::ensure!(max_xla_native_err < 1e-4, "XLA and native sweeps disagree");
+    tlfre::ensure!(max_xla_native_err < 1e-4, "XLA and native sweeps disagree");
 
     // ---- Baseline -------------------------------------------------------
     let cfg = PathConfig { alpha, n_lambda: 40, lambda_min_ratio: 0.01, tol: 1e-6, ..Default::default() };

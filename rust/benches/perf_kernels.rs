@@ -4,18 +4,25 @@
 //!   plus effective memory bandwidth;
 //! * the dot-product kernel — unrolled vs naive (the before/after of the
 //!   L3 hot-loop optimization);
+//! * the design-matrix backends — dense vs CSC vs ScreenedView `Xᵀv`
+//!   sweeps at 1 %, 5 % and 100 % density (written to
+//!   `BENCH_backends.json`);
 //! * the XLA engine sweep vs the native sweep (runtime dispatch overhead);
 //! * FISTA vs BCD on a reduced problem (solver ablation).
 
 use tlfre::bench_harness::BenchArgs;
-use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
+use tlfre::data::synthetic::{
+    generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec,
+};
 use tlfre::linalg::ops;
+use tlfre::linalg::{CscMatrix, DesignMatrix, ScreenedView};
 use tlfre::prox::shrink_norm_sq;
 use tlfre::screening::tlfre::{apply_rules, TlfreContext};
 use tlfre::sgl::bcd::{solve_bcd, BcdOptions};
 use tlfre::sgl::{solve_fista, FistaOptions, SglParams, SglProblem};
 use tlfre::screening::lambda_max::sgl_lambda_max;
 use tlfre::util::harness::{bench, black_box, BenchConfig};
+use tlfre::util::json::Json;
 use tlfre::util::Rng;
 
 fn naive_dot(a: &[f32], b: &[f32]) -> f64 {
@@ -81,6 +88,75 @@ fn main() {
             r.seconds.median * 1e3,
             bytes / r.seconds.median / 1e9
         );
+    }
+
+    // Backend comparison: dense vs CSC vs ScreenedView matvec_t at several
+    // densities. CSC cost scales with nnz; the view adds one indirection
+    // over its base backend. Results land in BENCH_backends.json.
+    println!("\n== backend matvec_t (X {n}×{p}) ==");
+    let mut backend_rows: Vec<Json> = Vec::new();
+    for &density in &[0.01f64, 0.05, 1.0] {
+        let sds = generate_sparse_synthetic(
+            &SparseSyntheticSpec::new(n, p, p / 10, density),
+            args.seed,
+        );
+        let csc = &sds.x;
+        let dense = csc.to_dense();
+        // Survivor view over the dense backend: every other column (a
+        // mid-path screening outcome shape).
+        let keep: Vec<usize> = (0..p).step_by(2).collect();
+        let view = ScreenedView::new(&dense, keep.clone());
+        let gathered = dense.select_cols(&keep);
+
+        let mut out_p = vec![0.0f32; p];
+        let mut out_k = vec![0.0f32; keep.len()];
+        let r_dense = bench("dense", &cfg, || {
+            DesignMatrix::matvec_t(&dense, black_box(&o), &mut out_p);
+            black_box(&out_p);
+        });
+        let r_csc = bench("csc", &cfg, || {
+            DesignMatrix::matvec_t(csc, black_box(&o), &mut out_p);
+            black_box(&out_p);
+        });
+        let r_view = bench("view", &cfg, || {
+            DesignMatrix::matvec_t(&view, black_box(&o), &mut out_k);
+            black_box(&out_k);
+        });
+        let r_gathered = bench("gathered", &cfg, || {
+            DesignMatrix::matvec_t(&gathered, black_box(&o), &mut out_k);
+            black_box(&out_k);
+        });
+        println!(
+            "  density {:5.1}%  nnz {:9}  dense {:8.3} ms  csc {:8.3} ms ({:4.2}x)  view/half {:8.3} ms  gathered/half {:8.3} ms",
+            density * 100.0,
+            csc.nnz(),
+            r_dense.seconds.median * 1e3,
+            r_csc.seconds.median * 1e3,
+            r_dense.seconds.median / r_csc.seconds.median.max(1e-12),
+            r_view.seconds.median * 1e3,
+            r_gathered.seconds.median * 1e3,
+        );
+        backend_rows.push(
+            Json::obj()
+                .set("density", density)
+                .set("nnz", csc.nnz())
+                .set("dense_ms", r_dense.seconds.median * 1e3)
+                .set("csc_ms", r_csc.seconds.median * 1e3)
+                .set("csc_speedup_vs_dense", r_dense.seconds.median / r_csc.seconds.median.max(1e-12))
+                .set("view_half_ms", r_view.seconds.median * 1e3)
+                .set("gathered_half_ms", r_gathered.seconds.median * 1e3),
+        );
+    }
+    let report = Json::obj()
+        .set("bench", "perf_kernels/backend_matvec_t")
+        .set("n", n)
+        .set("p", p)
+        .set("threads", tlfre::util::pool::num_threads())
+        .set("rows", Json::Arr(backend_rows));
+    let backend_json = "BENCH_backends.json";
+    match std::fs::write(backend_json, report.to_string_pretty()) {
+        Ok(()) => println!("  backend results written to {backend_json}"),
+        Err(e) => eprintln!("  warning: could not write {backend_json}: {e}"),
     }
 
     // XLA engine sweep (if artifacts are available for this shape).

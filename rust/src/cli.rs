@@ -2,20 +2,25 @@
 //!
 //! ```text
 //! tlfre generate  --dataset synthetic1 --out ds.bin [--seed 42] [--scale 0.1]
-//! tlfre solve-path --dataset synthetic1|synthetic2|adni-gmv|... [--alpha 1.0]
+//! tlfre solve-path --dataset synthetic1|synthetic2|sparse1|adni-gmv|... [--alpha 1.0]
 //!                  [--n-lambda 100] [--no-screening] [--verify] [--config cfg.json]
+//!                  [--backend dense|csc] [--density 0.05]
 //! tlfre dpc-path   --dataset mnist|pie|... [--n-lambda 100] [--no-screening]
 //! tlfre lambda-max --dataset ... [--alpha 1.0]
 //! tlfre runtime-info
 //! ```
 
+use crate::bail;
 use crate::config::Config;
+use crate::coordinator::runner::{PathConfig, PathOutput};
 use crate::coordinator::{run_baseline_path, run_dpc_path, run_nonneg_baseline, run_tlfre_path, DpcPathConfig};
 use crate::data::registry::RealDataset;
-use crate::data::synthetic::{generate_synthetic, SyntheticSpec};
+use crate::data::synthetic::{generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec};
 use crate::data::Dataset;
+use crate::error::{Context, Result};
+use crate::groups::GroupStructure;
+use crate::linalg::{CscMatrix, DesignMatrix};
 use crate::util::{fmt_duration, Timer};
-use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
 /// Parsed command line: subcommand + flag map.
@@ -66,7 +71,7 @@ impl Args {
             Some(v) => v
                 .parse::<T>()
                 .map(Some)
-                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse '{v}'")),
+                .map_err(|_| crate::anyhow!("--{key}: cannot parse '{v}'")),
         }
     }
 
@@ -103,7 +108,7 @@ pub fn resolve_dataset(name: &str, seed: u64, scale: f64) -> Result<Dataset> {
         "mnist" => RealDataset::Mnist.generate(scale, seed),
         "svhn" => RealDataset::Svhn.generate(scale, seed),
         other => bail!(
-            "unknown dataset '{other}' (synthetic1|synthetic2|adni-gmv|adni-wmv|breast-cancer|leukemia|prostate|pie|mnist|svhn)"
+            "unknown dataset '{other}' (synthetic1|synthetic2|adni-gmv|adni-wmv|breast-cancer|leukemia|prostate|pie|mnist|svhn; 'sparse1' is handled by solve-path directly)"
         ),
     };
     Ok(ds)
@@ -128,8 +133,11 @@ COMMANDS:
   help          this text
 
 COMMON FLAGS:
-  --dataset <name>     synthetic1|synthetic2|adni-gmv|adni-wmv|breast-cancer|
-                       leukemia|prostate|pie|mnist|svhn
+  --dataset <name>     synthetic1|synthetic2|sparse1|adni-gmv|adni-wmv|
+                       breast-cancer|leukemia|prostate|pie|mnist|svhn
+  --backend <name>     design-matrix backend: dense (default) | csc
+                       (csc converts dense sets; sparse1 is CSC-native)
+  --density <f64>      nonzero fraction for the sparse1 generator (default 0.05)
   --seed <u64>         dataset seed (default 42)
   --scale <f64>        feature-dimension scale for simulated sets (default 0.1)
   --alpha <f64>        SGL α (default 1.0)
@@ -205,23 +213,60 @@ fn cmd_solve_path(args: &Args) -> Result<i32> {
     let cfg = common_config(args)?;
     let name = args.get("dataset").context("--dataset is required")?;
     let alpha: f64 = args.get_parsed("alpha")?.unwrap_or(1.0);
-    let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
-    println!("{}", ds.describe());
+    let backend = args.get("backend").unwrap_or("dense");
     let mut pc = cfg.path_config(alpha);
     pc.verify_safety = args.has("verify");
+
+    if name == "sparse1" || name == "sparse" {
+        // CSC-native sparse synthetic workload.
+        let density: f64 = args.get_parsed("density")?.unwrap_or(0.05);
+        let p = scaled(10_000, cfg.scale);
+        let spec = SparseSyntheticSpec::new(250, p, p / 10, density);
+        let ds = generate_sparse_synthetic(&spec, cfg.seed);
+        println!("{}", ds.describe());
+        return match backend {
+            "csc" => run_sgl_path(args, &ds.x, &ds.y, &ds.groups, &pc, &ds.name, alpha),
+            "dense" => {
+                let xd = ds.x.to_dense();
+                run_sgl_path(args, &xd, &ds.y, &ds.groups, &pc, &ds.name, alpha)
+            }
+            other => bail!("unknown backend '{other}' (dense|csc)"),
+        };
+    }
+
+    let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
+    println!("{}", ds.describe());
+    match backend {
+        "dense" => run_sgl_path(args, &ds.x, &ds.y, &ds.groups, &pc, &ds.name, alpha),
+        "csc" => {
+            let xs = CscMatrix::from_dense(&ds.x);
+            println!("csc backend: nnz {} ({:.2}% dense)", xs.nnz(), xs.density() * 100.0);
+            run_sgl_path(args, &xs, &ds.y, &ds.groups, &pc, &ds.name, alpha)
+        }
+        other => bail!("unknown backend '{other}' (dense|csc)"),
+    }
+}
+
+/// Run a (screened or baseline) SGL path on any backend and render output.
+fn run_sgl_path<M: DesignMatrix>(
+    args: &Args,
+    x: &M,
+    y: &[f32],
+    groups: &GroupStructure,
+    pc: &PathConfig,
+    name: &str,
+    alpha: f64,
+) -> Result<i32> {
     let t = Timer::start();
-    let out = if args.has("no-screening") {
-        run_baseline_path(&ds.x, &ds.y, &ds.groups, &pc)
+    let out: PathOutput = if args.has("no-screening") {
+        run_baseline_path(x, y, groups, pc)
     } else {
-        run_tlfre_path(&ds.x, &ds.y, &ds.groups, &pc)
+        run_tlfre_path(x, y, groups, pc)
     };
     let wall = t.elapsed_s();
     println!(
         "{}",
-        crate::bench_harness::tables::render_rejection_series(
-            &format!("{} α={alpha}", ds.name),
-            &out
-        )
+        crate::bench_harness::tables::render_rejection_series(&format!("{name} α={alpha}"), &out)
     );
     println!(
         "screen {}  solve {}  wall {}",
@@ -252,10 +297,25 @@ fn cmd_dpc_path(args: &Args) -> Result<i32> {
         verify_safety: args.has("verify"),
         gap_inflation: 0.0,
     };
-    let out = if args.has("no-screening") {
-        run_nonneg_baseline(&ds.x, &ds.y, &pc)
-    } else {
-        run_dpc_path(&ds.x, &ds.y, &pc)
+    let backend = args.get("backend").unwrap_or("dense");
+    let out = match backend {
+        "dense" => {
+            if args.has("no-screening") {
+                run_nonneg_baseline(&ds.x, &ds.y, &pc)
+            } else {
+                run_dpc_path(&ds.x, &ds.y, &pc)
+            }
+        }
+        "csc" => {
+            let xs = CscMatrix::from_dense(&ds.x);
+            println!("csc backend: nnz {} ({:.2}% dense)", xs.nnz(), xs.density() * 100.0);
+            if args.has("no-screening") {
+                run_nonneg_baseline(&xs, &ds.y, &pc)
+            } else {
+                run_dpc_path(&xs, &ds.y, &pc)
+            }
+        }
+        other => bail!("unknown backend '{other}' (dense|csc)"),
     };
     println!("{}", crate::bench_harness::tables::render_dpc_series(&ds.name, &out));
     println!(
@@ -286,7 +346,14 @@ fn cmd_lambda_max(args: &Args) -> Result<i32> {
 }
 
 fn cmd_runtime_info() -> Result<i32> {
-    let mut rt = crate::runtime::Runtime::cpu()?;
+    let mut rt = match crate::runtime::Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("PJRT runtime unavailable: {e:#}");
+            println!("(pjrt compiled in: {})", crate::runtime::pjrt_available());
+            return Ok(0);
+        }
+    };
     println!("PJRT platform: {}", rt.platform());
     let dir = crate::runtime::artifacts_dir();
     match crate::runtime::ArtifactManifest::load(&dir) {

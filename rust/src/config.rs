@@ -7,7 +7,8 @@
 
 use crate::coordinator::runner::SolverKind;
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 /// Top-level experiment configuration.
 #[derive(Debug, Clone, PartialEq)]
@@ -133,6 +134,7 @@ impl Config {
             tol: self.tol,
             max_iter: self.max_iter,
             verify_safety: false,
+            materialize_reduced: false,
             gap_inflation: 0.0,
         }
     }

@@ -10,7 +10,7 @@
 use super::runner::{run_tlfre_path, PathConfig};
 use crate::groups::GroupStructure;
 use crate::linalg::ops;
-use crate::linalg::DenseMatrix;
+use crate::linalg::{DesignMatrix, SelectRows};
 use crate::util::Rng;
 
 /// One grid point's cross-validated error.
@@ -49,21 +49,10 @@ pub fn make_folds(n: usize, k: usize, seed: u64) -> Vec<Vec<usize>> {
     folds
 }
 
-fn gather_rows(x: &DenseMatrix, rows: &[usize]) -> DenseMatrix {
-    let mut out = DenseMatrix::zeros(rows.len(), x.cols());
-    for j in 0..x.cols() {
-        let src = x.col(j);
-        let dst = out.col_mut(j);
-        for (k, &i) in rows.iter().enumerate() {
-            dst[k] = src[i];
-        }
-    }
-    out
-}
-
-/// Run k-fold CV over `alphas` with TLFre-screened paths.
-pub fn cross_validate(
-    x: &DenseMatrix,
+/// Run k-fold CV over `alphas` with TLFre-screened paths. Works over any
+/// backend that supports fold extraction ([`SelectRows`]: dense and CSC).
+pub fn cross_validate<M: DesignMatrix + SelectRows>(
+    x: &M,
     y: &[f32],
     groups: &GroupStructure,
     alphas: &[f64],
@@ -85,9 +74,9 @@ pub fn cross_validate(
         // Train rows = complement of the fold.
         let in_fold: std::collections::BTreeSet<usize> = fold.iter().copied().collect();
         let train_rows: Vec<usize> = (0..n).filter(|i| !in_fold.contains(i)).collect();
-        let x_train = gather_rows(x, &train_rows);
+        let x_train = x.select_rows(&train_rows);
         let y_train: Vec<f32> = train_rows.iter().map(|&i| y[i]).collect();
-        let x_test = gather_rows(x, fold);
+        let x_test = x.select_rows(fold);
         let y_test: Vec<f32> = fold.iter().map(|&i| y[i]).collect();
 
         for (ai, &alpha) in alphas.iter().enumerate() {
@@ -142,8 +131,8 @@ fn ratio_at(i: usize, k: usize, min_ratio: f64) -> f64 {
 }
 
 /// Re-run a screened path, returning the coefficient vector at every λ.
-pub fn path_coefficients(
-    x: &DenseMatrix,
+pub fn path_coefficients<M: DesignMatrix>(
+    x: &M,
     y: &[f32],
     groups: &GroupStructure,
     cfg: &PathConfig,

@@ -2,9 +2,9 @@
 
 use super::path::log_lambda_grid;
 use crate::linalg::ops;
-use crate::linalg::DenseMatrix;
-use crate::nonneg::{lambda_max, solve_nonneg, NonnegOptions, NonnegProblem};
 use crate::linalg::power::spectral_norm;
+use crate::linalg::{DesignMatrix, ScreenedView};
+use crate::nonneg::{lambda_max, solve_nonneg, NonnegOptions, NonnegProblem};
 use crate::util::{Rng, Timer};
 
 /// Configuration for a DPC path run.
@@ -71,7 +71,7 @@ impl DpcPathOutput {
 }
 
 /// Run the DPC-screened nonnegative-Lasso path.
-pub fn run_dpc_path(x: &DenseMatrix, y: &[f32], cfg: &DpcPathConfig) -> DpcPathOutput {
+pub fn run_dpc_path<M: DesignMatrix>(x: &M, y: &[f32], cfg: &DpcPathConfig) -> DpcPathOutput {
     let prob = NonnegProblem::new(x, y);
     let p = x.cols();
     let n = x.rows();
@@ -126,7 +126,8 @@ pub fn run_dpc_path(x: &DenseMatrix, y: &[f32], cfg: &DpcPathConfig) -> DpcPathO
             beta.fill(0.0);
             (0usize, 0usize)
         } else {
-            let xr = x.select_cols(&active);
+            // Zero-copy survivor view — no per-λ column gather.
+            let xr = ScreenedView::new(x, active.clone());
             let rp = NonnegProblem::new(&xr, y);
             let warm: Vec<f32> = active.iter().map(|&j| beta[j]).collect();
             let res = solve_nonneg(
@@ -179,7 +180,7 @@ pub fn run_dpc_path(x: &DenseMatrix, y: &[f32], cfg: &DpcPathConfig) -> DpcPathO
 }
 
 /// The no-screening nonnegative-Lasso baseline path (Table 3's "solver").
-pub fn run_nonneg_baseline(x: &DenseMatrix, y: &[f32], cfg: &DpcPathConfig) -> DpcPathOutput {
+pub fn run_nonneg_baseline<M: DesignMatrix>(x: &M, y: &[f32], cfg: &DpcPathConfig) -> DpcPathOutput {
     let prob = NonnegProblem::new(x, y);
     let p = x.cols();
     let (lmax, _) = lambda_max(&prob);
@@ -234,6 +235,7 @@ pub fn run_nonneg_baseline(x: &DenseMatrix, y: &[f32], cfg: &DpcPathConfig) -> D
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::DenseMatrix;
     use crate::util::Rng;
 
     fn nonneg_dataset(seed: u64, n: usize, p: usize) -> (DenseMatrix, Vec<f32>) {

@@ -1,28 +1,28 @@
 //! Reduced-problem extraction and solution scatter.
 //!
 //! After a TLFre screening pass, the solver only sees the surviving
-//! features: a column-gathered copy of `X` (contiguous, cache-friendly)
-//! and a recomputed group structure over the survivors. Solutions are
-//! scattered back into the full coefficient vector — screened positions
-//! are exactly zero by the safety guarantee.
+//! features. The reduced design is a **zero-copy** [`ScreenedView`] over
+//! the full backend matrix — a survivor-index indirection instead of the
+//! seed's per-λ column-gathered copy — plus a recomputed group structure
+//! over the survivors. Solutions are scattered back into the full
+//! coefficient vector; screened positions are exactly zero by the safety
+//! guarantee.
 
 use crate::groups::GroupStructure;
-use crate::linalg::DenseMatrix;
+use crate::linalg::{DenseMatrix, DesignMatrix, ScreenedView};
 use crate::screening::tlfre::TlfreOutcome;
 
 /// A reduced SGL problem, with the bookkeeping to go back to full space.
 #[derive(Debug, Clone)]
-pub struct ReducedProblem {
-    /// Gathered design matrix over surviving features.
-    pub x: DenseMatrix,
+pub struct ReducedProblem<'a, M: DesignMatrix> {
+    /// Zero-copy view of the surviving columns of the full design matrix.
+    pub x: ScreenedView<'a, M>,
     /// Group structure over surviving features (groups that lost all
     /// features to (L₂) are dropped entirely).
     pub groups: GroupStructure,
-    /// For each reduced column, its index in the full feature space.
-    pub feature_map: Vec<usize>,
 }
 
-impl ReducedProblem {
+impl<'a, M: DesignMatrix> ReducedProblem<'a, M> {
     /// Build from a screening outcome. Returns `None` when nothing
     /// survives (the solution is identically zero).
     ///
@@ -31,7 +31,11 @@ impl ReducedProblem {
     /// norm over the survivors equals the norm over the full group — the
     /// reduced problem with original weights is *exactly* the restricted
     /// full problem. Recomputing `√(kept)` would silently under-penalize.
-    pub fn build(x: &DenseMatrix, groups: &GroupStructure, out: &TlfreOutcome) -> Option<ReducedProblem> {
+    pub fn build(
+        x: &'a M,
+        groups: &GroupStructure,
+        out: &TlfreOutcome,
+    ) -> Option<ReducedProblem<'a, M>> {
         let mut sizes = Vec::new();
         let mut weights = Vec::new();
         let mut feature_map = Vec::new();
@@ -55,29 +59,41 @@ impl ReducedProblem {
             return None;
         }
         Some(ReducedProblem {
-            x: x.select_cols(&feature_map),
+            x: ScreenedView::new(x, feature_map),
             groups: GroupStructure::from_sizes_weighted(&sizes, &weights),
-            feature_map,
         })
+    }
+
+    /// For each reduced column, its index in the full feature space.
+    #[inline]
+    pub fn feature_map(&self) -> &[usize] {
+        self.x.col_map()
     }
 
     /// Restrict a full coefficient vector to the reduced space (warm start).
     pub fn gather(&self, full: &[f32]) -> Vec<f32> {
-        self.feature_map.iter().map(|&j| full[j]).collect()
+        self.feature_map().iter().map(|&j| full[j]).collect()
     }
 
     /// Scatter a reduced solution into a zeroed full-space vector.
     pub fn scatter(&self, reduced: &[f32], full_out: &mut [f32]) {
-        assert_eq!(reduced.len(), self.feature_map.len());
+        assert_eq!(reduced.len(), self.feature_map().len());
         full_out.fill(0.0);
-        for (k, &j) in self.feature_map.iter().enumerate() {
+        for (k, &j) in self.feature_map().iter().enumerate() {
             full_out[j] = reduced[k];
         }
     }
 
     #[inline]
     pub fn n_features(&self) -> usize {
-        self.feature_map.len()
+        self.feature_map().len()
+    }
+
+    /// Materialize the reduced design as a gathered dense copy (the seed
+    /// behaviour; kept behind `PathConfig::materialize_reduced` and for the
+    /// view-vs-copy equivalence tests).
+    pub fn materialize(&self) -> DenseMatrix {
+        self.x.to_dense()
     }
 }
 
@@ -100,11 +116,13 @@ mod tests {
             vec![true, true, false, false, true, false],
         );
         let red = ReducedProblem::build(&x, &groups, &out).unwrap();
-        assert_eq!(red.feature_map, vec![0, 1, 4]);
+        assert_eq!(red.feature_map(), &[0, 1, 4]);
         assert_eq!(red.groups.n_groups(), 2);
         assert_eq!(red.groups.size(0), 2);
         assert_eq!(red.groups.size(1), 1);
-        assert_eq!(red.x.col(2), x.col(4));
+        // Reduced column 2 is full column 4 — zero-copy, so compare through
+        // the materialized view.
+        assert_eq!(red.materialize().col(2), x.col(4));
 
         let full = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
         let g = red.gather(&full);
@@ -122,7 +140,7 @@ mod tests {
         let out = outcome(vec![true, true], vec![false, false, true, true]);
         let red = ReducedProblem::build(&x, &groups, &out).unwrap();
         assert_eq!(red.groups.n_groups(), 1);
-        assert_eq!(red.feature_map, vec![2, 3]);
+        assert_eq!(red.feature_map(), &[2, 3]);
     }
 
     #[test]
@@ -131,5 +149,16 @@ mod tests {
         let groups = GroupStructure::from_sizes(&[2, 2]);
         let out = outcome(vec![false, false], vec![false; 4]);
         assert!(ReducedProblem::build(&x, &groups, &out).is_none());
+    }
+
+    #[test]
+    fn builds_over_csc_backend() {
+        let xd = DenseMatrix::from_fn(3, 4, |i, j| ((i + j) % 2) as f32);
+        let xs = crate::linalg::CscMatrix::from_dense(&xd);
+        let groups = GroupStructure::from_sizes(&[2, 2]);
+        let out = outcome(vec![true, false], vec![true, true, false, false]);
+        let red = ReducedProblem::build(&xs, &groups, &out).unwrap();
+        assert_eq!(red.n_features(), 2);
+        assert_eq!(red.materialize().col(0), xd.col(0));
     }
 }

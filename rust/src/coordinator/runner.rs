@@ -16,7 +16,7 @@ use super::path::log_lambda_grid;
 use super::reduce::ReducedProblem;
 use crate::groups::GroupStructure;
 use crate::linalg::ops;
-use crate::linalg::DenseMatrix;
+use crate::linalg::DesignMatrix;
 use crate::screening::lambda_max::sgl_lambda_max;
 use crate::screening::tlfre::TlfreContext;
 use crate::sgl::bcd::{solve_bcd, BcdOptions};
@@ -49,6 +49,12 @@ pub struct PathConfig {
     /// Panic if a screened coefficient is nonzero in the solve
     /// (diagnostics; adds one full solve per step — off by default).
     pub verify_safety: bool,
+    /// Solve reduced problems on a gathered dense copy instead of the
+    /// zero-copy [`crate::linalg::ScreenedView`]. The view is the default
+    /// (no per-λ `X` copy); the copy path is kept for A/B equivalence
+    /// testing and for cache-sensitivity experiments. Both produce bitwise
+    /// identical solutions (see `tests/backend_parity.rs`).
+    pub materialize_reduced: bool,
     /// Multiplier on the duality gap fed to the robust radius inflation
     /// (`tlfre_screen_inexact`'s `2√(2·gap)/λ̄` term). `0.0` (default)
     /// reproduces the paper's exact rule on the feasibility-scaled dual
@@ -69,6 +75,7 @@ impl Default for PathConfig {
             tol: 1e-6,
             max_iter: 20_000,
             verify_safety: false,
+            materialize_reduced: false,
             gap_inflation: 0.0,
         }
     }
@@ -133,8 +140,8 @@ impl PathOutput {
     }
 }
 
-fn solve(
-    prob: &SglProblem<'_>,
+fn solve<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     params: &SglParams,
     warm: Option<&[f32]>,
     cfg: &PathConfig,
@@ -162,8 +169,8 @@ fn solve(
 }
 
 /// Run the full TLFre-screened path.
-pub fn run_tlfre_path(
-    x: &DenseMatrix,
+pub fn run_tlfre_path<M: DesignMatrix>(
+    x: &M,
     y: &[f32],
     groups: &GroupStructure,
     cfg: &PathConfig,
@@ -233,9 +240,17 @@ pub fn run_tlfre_path(
                 (0usize, 0usize, 0.0f64)
             }
             Some(red) => {
-                let rp = SglProblem::new(&red.x, y, &red.groups);
                 let warm = red.gather(&beta);
-                let res = solve(&rp, &params, Some(&warm), cfg, None);
+                let res = if cfg.materialize_reduced {
+                    // Seed behaviour: physical column gather per λ.
+                    let xd = red.materialize();
+                    let rp = SglProblem::new(&xd, y, &red.groups);
+                    solve(&rp, &params, Some(&warm), cfg, None)
+                } else {
+                    // Zero-copy: the solver runs on the survivor view.
+                    let rp = SglProblem::new(&red.x, y, &red.groups);
+                    solve(&rp, &params, Some(&warm), cfg, None)
+                };
                 red.scatter(&res.beta, &mut beta);
                 (red.n_features(), res.iters, res.gap)
             }
@@ -279,8 +294,8 @@ pub fn run_tlfre_path(
 
 /// The no-screening baseline: identical grid and warm starts, full matrix
 /// every step (this is the paper's "solver" row in Tables 1–2).
-pub fn run_baseline_path(
-    x: &DenseMatrix,
+pub fn run_baseline_path<M: DesignMatrix>(
+    x: &M,
     y: &[f32],
     groups: &GroupStructure,
     cfg: &PathConfig,

@@ -13,7 +13,8 @@
 use super::Dataset;
 use crate::groups::GroupStructure;
 use crate::linalg::DenseMatrix;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 

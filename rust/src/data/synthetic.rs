@@ -13,7 +13,7 @@
 
 use super::Dataset;
 use crate::groups::GroupStructure;
-use crate::linalg::DenseMatrix;
+use crate::linalg::{CscMatrix, DenseMatrix, DesignMatrix};
 use crate::util::Rng;
 
 /// Column correlation structure.
@@ -114,21 +114,30 @@ fn fill_design(spec: &SyntheticSpec, rng: &mut Rng) -> DenseMatrix {
     x
 }
 
-/// Build β* per the paper's γ₁/γ₂ recipe.
-fn build_beta(spec: &SyntheticSpec, groups: &GroupStructure, rng: &mut Rng) -> Vec<f32> {
+/// Build β* per the paper's γ₁/γ₂ recipe (γ values in percent).
+fn build_beta_gammas(
+    gamma1: f64,
+    gamma2: f64,
+    groups: &GroupStructure,
+    rng: &mut Rng,
+) -> Vec<f32> {
     let g_cnt = groups.n_groups();
-    let k_groups = ((spec.gamma1 / 100.0 * g_cnt as f64).round() as usize).clamp(1, g_cnt);
+    let k_groups = ((gamma1 / 100.0 * g_cnt as f64).round() as usize).clamp(1, g_cnt);
     let chosen = rng.sample_indices(g_cnt, k_groups);
     let mut beta = vec![0.0f32; groups.n_features()];
     for &g in &chosen {
         let (s, e) = groups.range(g);
         let m = e - s;
-        let k_feat = ((spec.gamma2 / 100.0 * m as f64).round() as usize).clamp(1, m);
+        let k_feat = ((gamma2 / 100.0 * m as f64).round() as usize).clamp(1, m);
         for &off in &rng.sample_indices(m, k_feat) {
             beta[s + off] = rng.gaussian() as f32;
         }
     }
     beta
+}
+
+fn build_beta(spec: &SyntheticSpec, groups: &GroupStructure, rng: &mut Rng) -> Vec<f32> {
+    build_beta_gammas(spec.gamma1, spec.gamma2, groups, rng)
 }
 
 /// Generate a data set from the spec (deterministic in `seed`).
@@ -144,6 +153,105 @@ pub fn generate_synthetic(spec: &SyntheticSpec, seed: u64) -> Dataset {
         *v += (spec.noise * rng.gaussian()) as f32;
     }
     Dataset { name: spec.name.clone(), x, y, groups, beta_star: Some(beta) }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse synthetic designs (CSC-native)
+
+/// Specification for a sparse synthetic design: the Synthetic-1 recipe with
+/// the dense gaussian design replaced by a Bernoulli(density)·N(0,1) sparse
+/// design, built directly in CSC form. This is the one-hot-genomics /
+/// text-n-gram regime where safe screening plus sparse storage compound.
+#[derive(Debug, Clone)]
+pub struct SparseSyntheticSpec {
+    pub name: String,
+    pub n: usize,
+    pub p: usize,
+    pub n_groups: usize,
+    /// Expected fraction of nonzero entries, in (0, 1].
+    pub density: f64,
+    /// Percent of groups carrying signal (γ₁).
+    pub gamma1: f64,
+    /// Percent of features carrying signal inside a signal group (γ₂).
+    pub gamma2: f64,
+    /// Noise standard deviation.
+    pub noise: f64,
+}
+
+impl SparseSyntheticSpec {
+    /// Synthetic-1-style recipe at the given dimensions and density.
+    pub fn new(n: usize, p: usize, n_groups: usize, density: f64) -> SparseSyntheticSpec {
+        assert!(density > 0.0 && density <= 1.0, "density must be in (0, 1]");
+        SparseSyntheticSpec {
+            name: format!("Sparse synthetic ({n}x{p}, {:.1}% dense)", density * 100.0),
+            n,
+            p,
+            n_groups,
+            density,
+            gamma1: 10.0,
+            gamma2: 10.0,
+            noise: 0.01,
+        }
+    }
+}
+
+/// A sparse data set: identical to [`Dataset`] but with CSC design storage.
+#[derive(Debug, Clone)]
+pub struct SparseDataset {
+    pub name: String,
+    pub x: CscMatrix,
+    pub y: Vec<f32>,
+    pub groups: GroupStructure,
+    pub beta_star: Vec<f32>,
+}
+
+impl SparseDataset {
+    /// Short description line for logs and reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: {}×{} ({} groups, nnz {} = {:.2}%)",
+            self.name,
+            self.x.rows(),
+            self.x.cols(),
+            self.groups.n_groups(),
+            self.x.nnz(),
+            self.x.density() * 100.0
+        )
+    }
+}
+
+/// Generate a sparse data set from the spec (deterministic in `seed`).
+///
+/// Entries are iid `Bernoulli(density) · N(0, 1)`, scaled by `1/√density`
+/// so columns have unit-variance rows and `E‖x_j‖² = n` matches the dense
+/// Synthetic-1 geometry (keeps λmax and the screening radii comparable
+/// across densities).
+pub fn generate_sparse_synthetic(spec: &SparseSyntheticSpec, seed: u64) -> SparseDataset {
+    assert!(spec.p % spec.n_groups == 0, "p must split into equal groups (paper setup)");
+    let mut rng = Rng::seed_from_u64(seed);
+    let scale = (1.0 / spec.density).sqrt() as f32;
+    let mut indptr = Vec::with_capacity(spec.p + 1);
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f32> = Vec::new();
+    indptr.push(0usize);
+    for _ in 0..spec.p {
+        for i in 0..spec.n {
+            if rng.uniform_range(0.0, 1.0) < spec.density {
+                indices.push(i as u32);
+                values.push(rng.gaussian() as f32 * scale);
+            }
+        }
+        indptr.push(indices.len());
+    }
+    let x = CscMatrix::from_parts(spec.n, spec.p, indptr, indices, values);
+    let groups = GroupStructure::uniform(spec.p, spec.n_groups);
+    let beta = build_beta_gammas(spec.gamma1, spec.gamma2, &groups, &mut rng);
+    let mut y = vec![0.0f32; spec.n];
+    x.matvec(&beta, &mut y);
+    for v in y.iter_mut() {
+        *v += (spec.noise * rng.gaussian()) as f32;
+    }
+    SparseDataset { name: spec.name.clone(), x, y, groups, beta_star: beta }
 }
 
 #[cfg(test)]
@@ -211,6 +319,25 @@ mod tests {
         assert!((c1 - 0.5).abs() < 0.07, "lag1={c1}");
         assert!((c2 - 0.25).abs() < 0.07, "lag2={c2}");
         assert!(c4.abs() < 0.15, "lag4={c4}");
+    }
+
+    #[test]
+    fn sparse_generator_density_and_determinism() {
+        let spec = SparseSyntheticSpec::new(40, 400, 40, 0.05);
+        let a = generate_sparse_synthetic(&spec, 5);
+        let b = generate_sparse_synthetic(&spec, 5);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        // Realized density within 30% of nominal (binomial concentration).
+        let d = a.x.density();
+        assert!((d - 0.05).abs() < 0.015, "density {d}");
+        // Column second moments ≈ n thanks to the 1/√density scaling.
+        let norms = a.x.col_norms();
+        let mean_sq: f64 = norms.iter().map(|&v| v * v).sum::<f64>() / norms.len() as f64;
+        assert!((mean_sq - 40.0).abs() < 8.0, "mean ‖x_j‖² = {mean_sq}");
+        // Signal present.
+        assert!(a.beta_star.iter().any(|&v| v != 0.0));
+        assert!(ops::nrm2(&a.y) > 0.0);
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Minimal `anyhow`-compatible error handling.
+//!
+//! The offline crate set has no `anyhow`; this module provides the small
+//! slice of its API the crate uses: an opaque [`Error`] carrying a context
+//! chain, the [`Result`] alias with a defaulted error type, a [`Context`]
+//! extension trait for `Result`/`Option`, and the [`anyhow!`]/[`bail!`]/
+//! [`ensure!`] macros. `{e}` prints the outermost message, `{e:#}` the full
+//! chain joined with `: ` — matching anyhow's formatting contract, which
+//! the CLI and tests rely on.
+
+use std::fmt;
+
+/// An opaque error: a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { chain: vec![msg.into()] }
+    }
+
+    /// Prepend a context message (the new outermost layer).
+    pub fn context(mut self, msg: impl Into<String>) -> Error {
+        self.chain.insert(0, msg.into());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or("unknown error"))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug prints the whole chain (what `.expect()`/`.unwrap()` show).
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that is
+// what makes the blanket `From` below coherent (same trick as anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Fold the source chain into the message chain.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with the crate error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+// `E: Into<Error>` covers both foreign errors (via the blanket `From` above,
+// which folds their `source()` chain) and our own `Error` (via the reflexive
+// `From<T> for T`, preserving its existing chain) — so nested `.context(...)`
+// calls accumulate the full chain instead of flattening to one message.
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Bail unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: no such file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(format!("{e}").contains("no such file"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        assert_eq!(Some(1u32).context("x").unwrap(), 1);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 7);
+        assert_eq!(format!("{e}"), "bad value 7");
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("x too large");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert!(f(-1).is_err());
+        assert!(f(200).is_err());
+    }
+
+    #[test]
+    fn nested_context_preserves_full_chain() {
+        fn inner() -> Result<()> {
+            Err(io_err()).context("parsing HLO text")
+        }
+        let e = inner().context("loading artifact").unwrap_err();
+        assert_eq!(format!("{e}"), "loading artifact");
+        assert_eq!(format!("{e:#}"), "loading artifact: parsing HLO text: no such file");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let e: Error = Err::<(), _>(io_err()).with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e}"), "step 3");
+    }
+}

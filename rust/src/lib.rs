@@ -7,24 +7,58 @@
 //! * **Layer 3 (this crate)** — the pathwise coordinator: a warm-started
 //!   regularization-path driver that interleaves exact (safe) screening with
 //!   SGL / nonnegative-Lasso solvers, plus every substrate the paper's
-//!   evaluation depends on (dense linear algebra, data generators, solvers,
-//!   a PJRT runtime for AOT-compiled artifacts, metrics, CLI, bench harness).
+//!   evaluation depends on (multi-backend linear algebra, data generators,
+//!   solvers, an optional PJRT runtime for AOT-compiled artifacts, metrics,
+//!   CLI, bench harness).
 //! * **Layer 2 (python/compile/model.py)** — the full-matrix screening graph
 //!   in JAX, lowered once to HLO text via `python/compile/aot.py`.
 //! * **Layer 1 (python/compile/kernels/)** — the fused screening kernel
 //!   (`Xᵀθ` → shrink `S₁` → per-group norm reduction) as a Pallas kernel.
 //!
-//! Python never runs on the request path: `make artifacts` produces
-//! `artifacts/*.hlo.txt` which [`runtime`] loads through the PJRT C API.
+//! ## The `DesignMatrix` backend abstraction
+//!
+//! Everything above the linalg layer — both solvers ([`sgl::fista`],
+//! [`sgl::bcd`]), every screening rule ([`screening::tlfre`],
+//! [`screening::dpc`], [`screening::strong_rule`], [`screening::lambda_max`]),
+//! the nonnegative-Lasso solver ([`nonneg`]) and the whole coordinator
+//! ([`coordinator`]) — is generic over [`linalg::DesignMatrix`], the
+//! column-oriented backend trait. Three backends ship:
+//!
+//! | backend | storage | when it wins |
+//! |---|---|---|
+//! | [`linalg::DenseMatrix`] | column-major `f32` | dense designs (the paper's synthetic/ADNI recipes) |
+//! | [`linalg::CscMatrix`] | compressed sparse column | sparse workloads (one-hot genomics, n-grams, dictionaries): sweeps scale with nnz |
+//! | [`linalg::ScreenedView`] | zero-copy survivor view | reduced problems after screening — no per-λ column gather |
+//!
+//! The hot `Xᵀv` screening sweep is parallelized over column chunks on every
+//! backend (`TLFRE_THREADS` bounds the workers; the result is bitwise
+//! independent of the worker count). Path steps build reduced problems as
+//! [`linalg::ScreenedView`]s, so as λ descends the solver's view of `X`
+//! shrinks without the O(N·p) copy tax the paper's protocol would otherwise
+//! pay at every grid point. See `rust/src/linalg/README.md` for backend
+//! selection guidance.
+//!
+//! ## Offline, dependency-free build
+//!
+//! The crate builds with **zero external dependencies**: vendored stand-ins
+//! live in [`util`] (rng, json, logging, thread pool, bench harness) and
+//! [`error`] (anyhow-style error chains). The PJRT/XLA runtime ([`runtime`])
+//! is gated behind the `pjrt` cargo feature and compiles to an
+//! API-compatible stub by default; python never runs on the request path —
+//! `make artifacts` produces `artifacts/*.hlo.txt` which the `pjrt`-enabled
+//! build loads through the PJRT C API.
 //!
 //! See `examples/` for full workloads and `rust/benches/` for the
-//! reproduction of every table and figure in the paper.
+//! reproduction of every table and figure in the paper (plus
+//! `perf_kernels`, which includes the dense/CSC/view backend comparison
+//! recorded in `BENCH_backends.json`).
 
 pub mod bench_harness;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod groups;
 pub mod linalg;
 pub mod nonneg;

@@ -6,6 +6,7 @@
 //! screening is a straight `memcpy` per surviving column.
 
 use super::ops;
+use super::traits::{DesignMatrix, SelectRows};
 use crate::groups::GroupStructure;
 
 /// Dense `rows × cols` matrix, column-major, `f32` storage.
@@ -91,40 +92,32 @@ impl DenseMatrix {
     }
 
     // ----- products ---------------------------------------------------------
+    //
+    // The kernels live in the `DesignMatrix` trait impl below (single source
+    // of truth); these inherent wrappers only exist so concretely-typed
+    // callers (tests, data generators, examples) don't need the trait in
+    // scope — and they get the identical code path, including the
+    // column-chunk parallel sweep.
 
     /// `out = X β` — accumulates only over columns with nonzero coefficient,
     /// which is what makes warm-started sparse iterates cheap.
     pub fn matvec(&self, beta: &[f32], out: &mut [f32]) {
-        assert_eq!(beta.len(), self.cols);
-        assert_eq!(out.len(), self.rows);
-        out.fill(0.0);
-        for (j, &bj) in beta.iter().enumerate() {
-            if bj != 0.0 {
-                ops::axpy(bj, self.col(j), out);
-            }
-        }
+        DesignMatrix::matvec(self, beta, out);
     }
 
     /// `out = Xᵀ v` — one dot product per column (the screening sweep).
     pub fn matvec_t(&self, v: &[f32], out: &mut [f32]) {
-        assert_eq!(v.len(), self.rows);
-        assert_eq!(out.len(), self.cols);
-        for j in 0..self.cols {
-            out[j] = ops::dot_f32(self.col(j), v);
-        }
+        DesignMatrix::matvec_t(self, v, out);
     }
 
     /// `Xᵀ v` restricted to the columns in `idx` (active-set solver sweeps).
     pub fn matvec_t_subset(&self, v: &[f32], idx: &[usize], out: &mut [f32]) {
-        assert_eq!(out.len(), idx.len());
-        for (k, &j) in idx.iter().enumerate() {
-            out[k] = ops::dot_f32(self.col(j), v);
-        }
+        DesignMatrix::matvec_t_subset(self, v, idx, out);
     }
 
     /// Per-column euclidean norms `‖x_j‖₂`.
     pub fn col_norms(&self) -> Vec<f64> {
-        (0..self.cols).map(|j| ops::nrm2(self.col(j))).collect()
+        DesignMatrix::col_norms(self)
     }
 
     /// Extract the submatrix with the given columns (kept order).
@@ -161,6 +154,61 @@ impl DenseMatrix {
             groups.n_features(),
             self.cols
         );
+    }
+}
+
+impl DesignMatrix for DenseMatrix {
+    #[inline]
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    fn col_dot(&self, j: usize, v: &[f32]) -> f32 {
+        ops::dot_f32(self.col(j), v)
+    }
+
+    #[inline]
+    fn col_dot_f64(&self, j: usize, v: &[f32]) -> f64 {
+        ops::dot(self.col(j), v)
+    }
+
+    #[inline]
+    fn col_axpy(&self, j: usize, alpha: f32, out: &mut [f32]) {
+        ops::axpy(alpha, self.col(j), out);
+    }
+
+    #[inline]
+    fn col_norm(&self, j: usize) -> f64 {
+        ops::nrm2(self.col(j))
+    }
+
+    fn col_to_dense(&self, j: usize, out: &mut [f32]) {
+        out.copy_from_slice(self.col(j));
+    }
+
+    // The trait defaults for matvec/matvec_t/col_norms produce exactly the
+    // same arithmetic as the inherent methods above (same slices, same
+    // kernels, per-column independence), with matvec_t additionally fanned
+    // out over column chunks.
+}
+
+impl SelectRows for DenseMatrix {
+    fn select_rows(&self, rows: &[usize]) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(rows.len(), self.cols);
+        for j in 0..self.cols {
+            let src = self.col(j);
+            let dst = out.col_mut(j);
+            for (k, &i) in rows.iter().enumerate() {
+                dst[k] = src[i];
+            }
+        }
+        out
     }
 }
 
@@ -244,5 +292,36 @@ mod tests {
     #[should_panic]
     fn from_col_major_length_mismatch_panics() {
         DenseMatrix::from_col_major(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn trait_kernels_match_inherent() {
+        let m = sample();
+        let v = [0.5f32, -1.0];
+        let beta = [1.0f32, 0.0, 2.0];
+        // trait matvec_t (parallel default) vs inherent (serial)
+        let mut a = vec![0.0f32; 3];
+        let mut b = vec![0.0f32; 3];
+        m.matvec_t(&v, &mut a);
+        DesignMatrix::matvec_t(&m, &v, &mut b);
+        assert_eq!(a, b);
+        let mut ma = vec![0.0f32; 2];
+        let mut mb = vec![0.0f32; 2];
+        m.matvec(&beta, &mut ma);
+        DesignMatrix::matvec(&m, &beta, &mut mb);
+        assert_eq!(ma, mb);
+        assert_eq!(m.col_norms(), DesignMatrix::col_norms(&m));
+        let mut buf = vec![0.0f32; 2];
+        m.col_to_dense(1, &mut buf);
+        assert_eq!(&buf[..], m.col(1));
+    }
+
+    #[test]
+    fn select_rows_gathers() {
+        let m = sample();
+        let r = m.select_rows(&[1, 0]);
+        assert_eq!(DesignMatrix::rows(&r), 2);
+        assert_eq!(r.col(0), &[4.0, 1.0]);
+        assert_eq!(r.col(2), &[6.0, 3.0]);
     }
 }

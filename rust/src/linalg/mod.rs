@@ -1,19 +1,35 @@
-//! Dense linear algebra substrate.
+//! Linear-algebra substrate: the design-matrix backends and vector kernels.
 //!
-//! The paper's entire compute profile is dense level-1/level-2 BLAS over a
-//! tall-skinny design matrix `X ∈ R^{N×p}` (N ≪ p): the solver needs `Xβ`
+//! The paper's entire compute profile is level-1/level-2 operations over a
+//! tall-skinny design matrix `X ∈ R^{N×p}` (N ≪ p): the solvers need `Xβ`
 //! and `Xᵀr` every iteration, and the screening rules need one `Xᵀo` sweep
 //! per path step plus per-column and per-group-block norms. No BLAS is
-//! available offline, so the kernels here are hand-written, column-major,
-//! unroll-friendly loops (compiled with `target-cpu=native`).
+//! available offline, so the kernels are hand-written loops (compiled with
+//! `target-cpu=native`), organized around the [`DesignMatrix`] backend
+//! trait:
 //!
-//! * [`dense`] — [`dense::DenseMatrix`], column-major storage with
-//!   group-block views.
+//! * [`traits`] — [`DesignMatrix`] (the backend contract every solver,
+//!   screening rule and coordinator is generic over) and [`SelectRows`].
+//! * [`dense`] — [`DenseMatrix`], column-major dense storage.
+//! * [`sparse`] — [`CscMatrix`], compressed sparse column storage for
+//!   one-hot / n-gram / dictionary workloads.
+//! * [`view`] — [`ScreenedView`], the zero-copy survivor-column view that
+//!   reduced problems are built on after screening.
 //! * [`ops`] — vector kernels: dot, axpy, nrm2, scale, …
-//! * [`power`] — power iteration for spectral norms `‖X_g‖₂`.
+//! * [`power`] — power iteration for spectral norms `‖X_g‖₂` (generic over
+//!   the backend).
+//!
+//! See `rust/src/linalg/README.md` for backend selection guidance and the
+//! `TLFRE_THREADS` parallelism knob.
 
 pub mod dense;
 pub mod ops;
 pub mod power;
+pub mod sparse;
+pub mod traits;
+pub mod view;
 
 pub use dense::DenseMatrix;
+pub use sparse::CscMatrix;
+pub use traits::{DesignMatrix, SelectRows};
+pub use view::ScreenedView;

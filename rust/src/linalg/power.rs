@@ -3,11 +3,11 @@
 //! TLFre's group rule needs `‖X_g‖₂` (Theorem 15's radius `r‖X_g‖₂`) and the
 //! solvers need the Lipschitz constant `L = ‖X‖₂²`. The paper computes these
 //! with the power method ([8] in the paper) once per data set; this module
-//! does the same, operating directly on column blocks so no submatrix copy
-//! is needed.
+//! does the same, operating directly on column blocks through the
+//! [`DesignMatrix`] per-column kernels — no submatrix copy, any backend.
 
-use super::dense::DenseMatrix;
 use super::ops;
+use super::traits::DesignMatrix;
 use crate::util::Rng;
 
 /// Result of a spectral-norm estimation.
@@ -26,8 +26,8 @@ pub struct SpectralNorm {
 /// Returns `σ_max` of the block. `tol` is the relative eigenvalue change
 /// stopping threshold; the estimate is a lower bound that converges to
 /// `σ_max` geometrically in `(σ₂/σ₁)²`.
-pub fn spectral_norm_block(
-    x: &DenseMatrix,
+pub fn spectral_norm_block<M: DesignMatrix>(
+    x: &M,
     col_start: usize,
     col_end: usize,
     tol: f64,
@@ -51,12 +51,12 @@ pub fn spectral_norm_block(
         u.fill(0.0);
         for (k, &vk) in v.iter().enumerate() {
             if vk != 0.0 {
-                ops::axpy(vk, x.col(col_start + k), &mut u);
+                x.col_axpy(col_start + k, vk, &mut u);
             }
         }
         // w = Aᵀ u ; σ² estimate = ‖w‖ (since v normalized, ‖AᵀAv‖ → σ²)
         for (k, vk) in v.iter_mut().enumerate() {
-            *vk = ops::dot_f32(x.col(col_start + k), &u);
+            *vk = x.col_dot(col_start + k, &u);
         }
         let sigma_sq = ops::nrm2(&v);
         if sigma_sq <= 0.0 {
@@ -75,14 +75,19 @@ pub fn spectral_norm_block(
 }
 
 /// Spectral norm of the whole matrix.
-pub fn spectral_norm(x: &DenseMatrix, tol: f64, max_iter: usize, rng: &mut Rng) -> SpectralNorm {
+pub fn spectral_norm<M: DesignMatrix>(
+    x: &M,
+    tol: f64,
+    max_iter: usize,
+    rng: &mut Rng,
+) -> SpectralNorm {
     spectral_norm_block(x, 0, x.cols(), tol, max_iter, rng)
 }
 
 /// Per-group spectral norms `‖X_g‖₂` for a group structure given as
 /// `(start, end)` column ranges.
-pub fn group_spectral_norms(
-    x: &DenseMatrix,
+pub fn group_spectral_norms<M: DesignMatrix>(
+    x: &M,
     ranges: &[(usize, usize)],
     tol: f64,
     max_iter: usize,
@@ -93,7 +98,7 @@ pub fn group_spectral_norms(
         .map(|&(s, e)| {
             if e - s == 1 {
                 // Single column: σ = ‖x_j‖₂ exactly.
-                ops::nrm2(x.col(s))
+                x.col_norm(s)
             } else {
                 spectral_norm_block(x, s, e, tol, max_iter, rng).sigma
             }
@@ -104,6 +109,8 @@ pub fn group_spectral_norms(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::dense::DenseMatrix;
+    use super::super::sparse::CscMatrix;
 
     #[test]
     fn diagonal_matrix_sigma_max() {
@@ -152,5 +159,23 @@ mod tests {
         let max_col = sub.col_norms().into_iter().fold(0.0f64, f64::max);
         assert!(s <= fro + 1e-6, "sigma {s} > fro {fro}");
         assert!(s >= max_col - 1e-6, "sigma {s} < max col norm {max_col}");
+    }
+
+    #[test]
+    fn csc_backend_agrees_with_dense() {
+        let mut rng = Rng::seed_from_u64(6);
+        let x = DenseMatrix::from_fn(12, 9, |_, _| {
+            if rng.below(2) == 0 {
+                rng.gaussian() as f32
+            } else {
+                0.0
+            }
+        });
+        let sp = CscMatrix::from_dense(&x);
+        let mut r1 = Rng::seed_from_u64(7);
+        let mut r2 = Rng::seed_from_u64(7);
+        let a = spectral_norm(&x, 1e-10, 500, &mut r1).sigma;
+        let b = spectral_norm(&sp, 1e-10, 500, &mut r2).sigma;
+        assert!((a - b).abs() < 1e-4 * a.max(1.0), "dense {a} vs csc {b}");
     }
 }

@@ -1,0 +1,129 @@
+//! The design-matrix backend abstraction.
+//!
+//! Every layer above linalg — solvers, screening rules, the pathwise
+//! coordinator, the CLI — is generic over [`DesignMatrix`], which captures
+//! the small operation set the whole paper needs:
+//!
+//! * the two hot sweeps `Xβ` ([`DesignMatrix::matvec`]) and `Xᵀv`
+//!   ([`DesignMatrix::matvec_t`], parallelized over column chunks via
+//!   [`crate::util::pool`] — set `TLFRE_THREADS` to bound the workers);
+//! * per-column primitives ([`DesignMatrix::col_dot`],
+//!   [`DesignMatrix::col_axpy`], [`DesignMatrix::col_norm`]) used by the
+//!   BCD group loops, power iteration and the screening rules;
+//! * subset sweeps for active-set solvers.
+//!
+//! Three backends implement it: [`super::DenseMatrix`] (column-major dense),
+//! [`super::CscMatrix`] (compressed sparse column) and
+//! [`super::ScreenedView`] (a zero-copy survivor-column view used for
+//! reduced problems after screening — no per-λ gather copy).
+
+use crate::groups::GroupStructure;
+use crate::util::pool;
+
+/// Minimum `rows·cols` product before the default [`DesignMatrix::matvec_t`]
+/// fans out over threads. Below this, a serial sweep wins (thread spawn is
+/// tens of microseconds; a 256k-op sweep is ~0.1 ms). The parallel and
+/// serial sweeps are bitwise identical, so the threshold never affects
+/// results — only wall-clock. `TLFRE_THREADS=1` forces serial regardless.
+pub const PAR_MIN_WORK: usize = 1 << 18;
+
+/// Column-oriented design-matrix backend.
+///
+/// `Sync` is part of the contract: the default `matvec_t` fans the
+/// per-column dot products out across threads.
+pub trait DesignMatrix: Sync {
+    /// Sample dimension `N`.
+    fn rows(&self) -> usize;
+
+    /// Feature dimension `p`.
+    fn cols(&self) -> usize;
+
+    /// `x_jᵀ v` (f32 accumulation — the solvers' inner-loop dot).
+    fn col_dot(&self, j: usize, v: &[f32]) -> f32;
+
+    /// `x_jᵀ v` with f64 accumulation (λmax boundary computations, where
+    /// the argmax over columns is sensitive to rounding).
+    fn col_dot_f64(&self, j: usize, v: &[f32]) -> f64;
+
+    /// `out += alpha · x_j`.
+    fn col_axpy(&self, j: usize, alpha: f32, out: &mut [f32]);
+
+    /// `‖x_j‖₂` (f64 accumulation).
+    fn col_norm(&self, j: usize) -> f64;
+
+    /// Materialize column `j` into a dense buffer of length `rows()`.
+    fn col_to_dense(&self, j: usize, out: &mut [f32]);
+
+    /// Approximate scalar-op count of one full `Xᵀv` sweep — the quantity
+    /// the parallel-dispatch threshold compares against [`PAR_MIN_WORK`].
+    /// Dense backends do `rows·cols` work; sparse backends override this
+    /// with their nonzero count so low-density sweeps stay serial instead
+    /// of paying thread-spawn overhead for microseconds of work.
+    fn sweep_work(&self) -> usize {
+        self.rows().saturating_mul(self.cols())
+    }
+
+    /// `out = X β` — accumulates only over columns with nonzero coefficient,
+    /// which is what makes warm-started sparse iterates cheap.
+    fn matvec(&self, beta: &[f32], out: &mut [f32]) {
+        assert_eq!(beta.len(), self.cols());
+        assert_eq!(out.len(), self.rows());
+        out.fill(0.0);
+        for (j, &bj) in beta.iter().enumerate() {
+            if bj != 0.0 {
+                self.col_axpy(j, bj, out);
+            }
+        }
+    }
+
+    /// `out = Xᵀ v` — the screening sweep. The default implementation
+    /// parallelizes over contiguous column chunks; each `out[j]` is an
+    /// independent dot product, so the result is bitwise identical to the
+    /// serial sweep regardless of the worker count. Small sweeps (under
+    /// [`PAR_MIN_WORK`] scalar ops) stay serial: scoped-thread spawn costs
+    /// tens of microseconds, which would dominate the solvers' inner loops
+    /// on small reduced problems.
+    fn matvec_t(&self, v: &[f32], out: &mut [f32]) {
+        assert_eq!(v.len(), self.rows());
+        assert_eq!(out.len(), self.cols());
+        if self.sweep_work() < PAR_MIN_WORK {
+            for (j, o) in out.iter_mut().enumerate() {
+                *o = self.col_dot(j, v);
+            }
+        } else {
+            pool::parallel_fill(out, |j| self.col_dot(j, v));
+        }
+    }
+
+    /// `Xᵀ v` restricted to the columns in `idx` (active-set solver sweeps).
+    fn matvec_t_subset(&self, v: &[f32], idx: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), idx.len());
+        for (k, &j) in idx.iter().enumerate() {
+            out[k] = self.col_dot(j, v);
+        }
+    }
+
+    /// Per-column euclidean norms `‖x_j‖₂`.
+    fn col_norms(&self) -> Vec<f64> {
+        (0..self.cols()).map(|j| self.col_norm(j)).collect()
+    }
+
+    /// Validate that a group structure covers this matrix's columns.
+    fn check_groups(&self, groups: &GroupStructure) {
+        assert_eq!(
+            groups.n_features(),
+            self.cols(),
+            "group structure covers {} features but matrix has {} columns",
+            groups.n_features(),
+            self.cols()
+        );
+    }
+}
+
+/// Row subsetting — needed by cross-validation fold extraction. Implemented
+/// by the owning backends ([`super::DenseMatrix`], [`super::CscMatrix`]);
+/// views re-run screening on the fold instead.
+pub trait SelectRows: Sized {
+    /// Extract the submatrix with the given rows (kept order).
+    fn select_rows(&self, rows: &[usize]) -> Self;
+}

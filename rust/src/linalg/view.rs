@@ -1,0 +1,171 @@
+//! Zero-copy screened-column views.
+//!
+//! After a TLFre/DPC screening pass, the solver only needs the surviving
+//! columns of `X`. The seed implementation materialized a column-gathered
+//! copy per path step — an O(N·|survivors|) memcpy at *every* λ.
+//! [`ScreenedView`] replaces that with an index indirection: it borrows the
+//! full backend matrix and remaps column `j` to `col_map[j]`, so building a
+//! reduced problem is O(|survivors|) bookkeeping and the solver's kernels
+//! run directly on the original storage.
+//!
+//! Because every per-column kernel delegates to the base backend on the
+//! *same* underlying buffers, solves on a view are bitwise identical to
+//! solves on the gathered copy (verified by `tests/backend_parity.rs`).
+
+use super::dense::DenseMatrix;
+use super::traits::DesignMatrix;
+
+/// A column-subset view over any [`DesignMatrix`] backend.
+#[derive(Debug, Clone)]
+pub struct ScreenedView<'a, M: DesignMatrix> {
+    base: &'a M,
+    /// View column `j` is base column `col_map[j]`.
+    col_map: Vec<usize>,
+}
+
+impl<'a, M: DesignMatrix> ScreenedView<'a, M> {
+    /// Build from the base matrix and the surviving column indices
+    /// (kept order). Panics on out-of-bounds indices.
+    pub fn new(base: &'a M, col_map: Vec<usize>) -> ScreenedView<'a, M> {
+        let p = base.cols();
+        assert!(col_map.iter().all(|&j| j < p), "survivor index out of bounds");
+        ScreenedView { base, col_map }
+    }
+
+    /// The survivor index map (view column → base column).
+    #[inline]
+    pub fn col_map(&self) -> &[usize] {
+        &self.col_map
+    }
+
+    /// The borrowed base matrix.
+    #[inline]
+    pub fn base(&self) -> &'a M {
+        self.base
+    }
+
+    /// Materialize the view as a dense gathered copy (the seed behaviour;
+    /// kept for the equivalence tests and for callers that will iterate
+    /// over one reduced problem many times on a cold cache).
+    pub fn to_dense(&self) -> DenseMatrix {
+        let n = self.base.rows();
+        let mut out = DenseMatrix::zeros(n, self.col_map.len());
+        for (j, &bj) in self.col_map.iter().enumerate() {
+            self.base.col_to_dense(bj, out.col_mut(j));
+        }
+        out
+    }
+}
+
+impl<M: DesignMatrix> DesignMatrix for ScreenedView<'_, M> {
+    #[inline]
+    fn rows(&self) -> usize {
+        self.base.rows()
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        self.col_map.len()
+    }
+
+    #[inline]
+    fn col_dot(&self, j: usize, v: &[f32]) -> f32 {
+        self.base.col_dot(self.col_map[j], v)
+    }
+
+    #[inline]
+    fn col_dot_f64(&self, j: usize, v: &[f32]) -> f64 {
+        self.base.col_dot_f64(self.col_map[j], v)
+    }
+
+    #[inline]
+    fn col_axpy(&self, j: usize, alpha: f32, out: &mut [f32]) {
+        self.base.col_axpy(self.col_map[j], alpha, out);
+    }
+
+    #[inline]
+    fn col_norm(&self, j: usize) -> f64 {
+        self.base.col_norm(self.col_map[j])
+    }
+
+    #[inline]
+    fn col_to_dense(&self, j: usize, out: &mut [f32]) {
+        self.base.col_to_dense(self.col_map[j], out);
+    }
+
+    fn sweep_work(&self) -> usize {
+        // Average per-column work of the base backend, over our columns.
+        let base_cols = self.base.cols().max(1);
+        (self.base.sweep_work() / base_cols).saturating_mul(self.col_map.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sparse::CscMatrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn view_matches_gathered_copy() {
+        let mut rng = Rng::seed_from_u64(11);
+        let d = DenseMatrix::from_fn(8, 12, |_, _| rng.gaussian() as f32);
+        let keep = vec![0usize, 3, 4, 9, 11];
+        let view = ScreenedView::new(&d, keep.clone());
+        let gathered = d.select_cols(&keep);
+
+        assert_eq!(view.cols(), 5);
+        assert_eq!(view.rows(), 8);
+        assert_eq!(view.to_dense(), gathered);
+
+        let v: Vec<f32> = (0..8).map(|_| rng.gaussian() as f32).collect();
+        let beta: Vec<f32> = (0..5).map(|_| rng.gaussian() as f32).collect();
+
+        let mut a = vec![0.0f32; 5];
+        let mut b = vec![0.0f32; 5];
+        view.matvec_t(&v, &mut a);
+        gathered.matvec_t(&v, &mut b);
+        assert_eq!(a, b, "matvec_t must be bitwise identical");
+
+        let mut ma = vec![0.0f32; 8];
+        let mut mb = vec![0.0f32; 8];
+        view.matvec(&beta, &mut ma);
+        gathered.matvec(&beta, &mut mb);
+        assert_eq!(ma, mb, "matvec must be bitwise identical");
+
+        for j in 0..5 {
+            assert_eq!(view.col_norm(j), gathered.col_norm(j));
+        }
+    }
+
+    #[test]
+    fn view_over_csc() {
+        let mut rng = Rng::seed_from_u64(12);
+        let d = DenseMatrix::from_fn(6, 10, |_, _| {
+            if rng.below(2) == 0 {
+                rng.gaussian() as f32
+            } else {
+                0.0
+            }
+        });
+        let s = CscMatrix::from_dense(&d);
+        let keep = vec![1usize, 2, 7];
+        let vd = ScreenedView::new(&d, keep.clone());
+        let vs = ScreenedView::new(&s, keep);
+        let v: Vec<f32> = (0..6).map(|_| rng.gaussian() as f32).collect();
+        let mut a = vec![0.0f32; 3];
+        let mut b = vec![0.0f32; 3];
+        vd.matvec_t(&v, &mut a);
+        vs.matvec_t(&v, &mut b);
+        for j in 0..3 {
+            assert!((a[j] - b[j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_survivor_panics() {
+        let d = DenseMatrix::zeros(2, 3);
+        ScreenedView::new(&d, vec![0, 3]);
+    }
+}

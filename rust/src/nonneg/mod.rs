@@ -11,21 +11,40 @@
 
 use crate::linalg::ops;
 use crate::linalg::power::spectral_norm;
-use crate::linalg::DenseMatrix;
+use crate::linalg::{DenseMatrix, DesignMatrix};
 use crate::prox::nonneg_l1_prox;
 use crate::util::Rng;
 
-/// A borrowed nonnegative-Lasso problem instance.
-#[derive(Debug, Clone, Copy)]
-pub struct NonnegProblem<'a> {
-    pub x: &'a DenseMatrix,
+/// A borrowed nonnegative-Lasso problem instance, generic over the
+/// [`DesignMatrix`] backend (defaults to [`DenseMatrix`]).
+pub struct NonnegProblem<'a, M: DesignMatrix = DenseMatrix> {
+    pub x: &'a M,
     pub y: &'a [f32],
 }
 
-impl<'a> NonnegProblem<'a> {
-    pub fn new(x: &'a DenseMatrix, y: &'a [f32]) -> Self {
+impl<'a, M: DesignMatrix> NonnegProblem<'a, M> {
+    pub fn new(x: &'a M, y: &'a [f32]) -> Self {
         assert_eq!(x.rows(), y.len());
         NonnegProblem { x, y }
+    }
+}
+
+// Manual Clone/Copy/Debug: the derives would demand bounds on `M` even
+// though only references are stored.
+impl<M: DesignMatrix> Clone for NonnegProblem<'_, M> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<M: DesignMatrix> Copy for NonnegProblem<'_, M> {}
+
+impl<M: DesignMatrix> std::fmt::Debug for NonnegProblem<'_, M> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("NonnegProblem")
+            .field("n_samples", &self.x.rows())
+            .field("n_features", &self.x.cols())
+            .finish()
     }
 }
 
@@ -55,16 +74,16 @@ pub struct NonnegResult {
 }
 
 /// Primal objective ½‖y−Xβ‖² + λ‖β‖₁ (β assumed ≥ 0).
-pub fn objective(_prob: &NonnegProblem<'_>, lambda: f64, beta: &[f32], r: &[f32]) -> f64 {
+pub fn objective<M: DesignMatrix>(_prob: &NonnegProblem<'_, M>, lambda: f64, beta: &[f32], r: &[f32]) -> f64 {
     0.5 * ops::nrm2_sq(r) + lambda * ops::nrm1(beta)
 }
 
 /// λmax = max_i ⟨x_i, y⟩ (Theorem 20) and its argmax column.
-pub fn lambda_max(prob: &NonnegProblem<'_>) -> (f64, usize) {
+pub fn lambda_max<M: DesignMatrix>(prob: &NonnegProblem<'_, M>) -> (f64, usize) {
     let mut best = f64::NEG_INFINITY;
     let mut arg = 0;
     for j in 0..prob.x.cols() {
-        let v = ops::dot(prob.x.col(j), prob.y);
+        let v = prob.x.col_dot_f64(j, prob.y);
         if v > best {
             best = v;
             arg = j;
@@ -79,8 +98,8 @@ pub fn lambda_max(prob: &NonnegProblem<'_>) -> (f64, usize) {
 /// feasible for (82): `s = min(1, λ / max_i c_i)` (only *positive*
 /// correlations constrain — the feasible set is one-sided).
 /// Gap = P(β) − D(θ) with `D(θ) = ½‖y‖² − ½‖y − λθ‖²`.
-pub fn duality_gap(
-    prob: &NonnegProblem<'_>,
+pub fn duality_gap<M: DesignMatrix>(
+    prob: &NonnegProblem<'_, M>,
     lambda: f64,
     beta: &[f32],
     r: &[f32],
@@ -103,8 +122,8 @@ pub fn duality_gap(
 }
 
 /// Solve nonnegative Lasso by projected FISTA.
-pub fn solve_nonneg(
-    prob: &NonnegProblem<'_>,
+pub fn solve_nonneg<M: DesignMatrix>(
+    prob: &NonnegProblem<'_, M>,
     lambda: f64,
     warm_start: Option<&[f32]>,
     opts: &NonnegOptions,

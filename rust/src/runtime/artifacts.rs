@@ -14,7 +14,8 @@
 //! ```
 
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One AOT-compiled computation.

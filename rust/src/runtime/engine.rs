@@ -6,11 +6,15 @@
 //! the `Xᵀ` the artifact expects as its first parameter. Staging is
 //! therefore a zero-copy reinterpretation; it happens once per data set,
 //! and each per-λ call only uploads the `o ∈ R^N` ball center.
+//!
+//! Like [`super::Runtime`], the real implementation requires the vendored
+//! `xla` crate and is compiled only under `--features pjrt`; the default
+//! build ships an API-compatible stub whose constructors error.
 
 use super::artifacts::{ArtifactManifest, ArtifactSpec};
 use super::Runtime;
+use crate::error::Result;
 use crate::linalg::DenseMatrix;
-use anyhow::{Context, Result};
 
 /// Output of one fused screening-kernel execution.
 #[derive(Debug, Clone)]
@@ -23,89 +27,147 @@ pub struct ScreenKernelOut {
     pub group_cinf: Vec<f32>,
 }
 
-/// A data-set-bound handle: staged `Xᵀ` buffer + compiled screen artifact.
-pub struct ScreenEngine {
-    exe: xla::PjRtLoadedExecutable,
-    x_buf: xla::PjRtBuffer,
-    n: usize,
-    p: usize,
-    pub group_size: usize,
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::*;
+    use crate::error::Context;
+
+    /// A data-set-bound handle: staged `Xᵀ` buffer + compiled screen artifact.
+    pub struct ScreenEngine {
+        exe: xla::PjRtLoadedExecutable,
+        x_buf: xla::PjRtBuffer,
+        n: usize,
+        p: usize,
+        pub group_size: usize,
+    }
+
+    impl ScreenEngine {
+        /// Build from a manifest: finds the `tlfre_screen` artifact matching
+        /// the matrix shape, compiles it, stages `Xᵀ`.
+        pub fn for_matrix(
+            rt: &mut Runtime,
+            manifest: &ArtifactManifest,
+            x: &DenseMatrix,
+        ) -> Result<ScreenEngine> {
+            let spec = manifest
+                .find("tlfre_screen", x.rows(), x.cols())
+                .with_context(|| {
+                    format!(
+                        "no tlfre_screen artifact for {}×{} — regenerate with `make artifacts`",
+                        x.rows(),
+                        x.cols()
+                    )
+                })?
+                .clone();
+            Self::from_spec(rt, manifest, &spec, x)
+        }
+
+        /// Build from an explicit artifact spec.
+        pub fn from_spec(
+            rt: &mut Runtime,
+            manifest: &ArtifactManifest,
+            spec: &ArtifactSpec,
+            x: &DenseMatrix,
+        ) -> Result<ScreenEngine> {
+            crate::ensure!(
+                spec.n == x.rows() && spec.p == x.cols(),
+                "artifact shape {}×{} does not match matrix {}×{}",
+                spec.n,
+                spec.p,
+                x.rows(),
+                x.cols()
+            );
+            // Compile an engine-owned executable (PjRtLoadedExecutable is not
+            // Clone, so the Runtime cache can't hand out copies).
+            let path = manifest.path_of(spec);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = rt.client().compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+            // Col-major (N×p) == row-major (p×N): stage as Xᵀ.
+            let x_buf = rt
+                .client()
+                .buffer_from_host_buffer::<f32>(x.data(), &[x.cols(), x.rows()], None)
+                .context("staging design matrix")?;
+            Ok(ScreenEngine { exe, x_buf, n: x.rows(), p: x.cols(), group_size: spec.group_size })
+        }
+
+        /// Execute the fused kernel for a ball center `o` (length N).
+        pub fn run(&self, rt: &Runtime, o: &[f32]) -> Result<ScreenKernelOut> {
+            crate::ensure!(o.len() == self.n, "o has length {} ≠ N={}", o.len(), self.n);
+            let o_buf = rt.client().buffer_from_host_buffer::<f32>(o, &[self.n], None)?;
+            let result = self.exe.execute_b(&[&self.x_buf, &o_buf])?[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            crate::ensure!(parts.len() == 3, "screen artifact returned {} outputs", parts.len());
+            let c = parts[0].to_vec::<f32>()?;
+            let group_shrink_sq = parts[1].to_vec::<f32>()?;
+            let group_cinf = parts[2].to_vec::<f32>()?;
+            crate::ensure!(c.len() == self.p, "c length mismatch");
+            Ok(ScreenKernelOut { c, group_shrink_sq, group_cinf })
+        }
+
+        #[inline]
+        pub fn n(&self) -> usize {
+            self.n
+        }
+
+        #[inline]
+        pub fn p(&self) -> usize {
+            self.p
+        }
+    }
 }
 
-impl ScreenEngine {
-    /// Build from a manifest: finds the `tlfre_screen` artifact matching
-    /// the matrix shape, compiles it, stages `Xᵀ`.
-    pub fn for_matrix(
-        rt: &mut Runtime,
-        manifest: &ArtifactManifest,
-        x: &DenseMatrix,
-    ) -> Result<ScreenEngine> {
-        let spec = manifest
-            .find("tlfre_screen", x.rows(), x.cols())
-            .with_context(|| {
-                format!(
-                    "no tlfre_screen artifact for {}×{} — regenerate with `make artifacts`",
-                    x.rows(),
-                    x.cols()
-                )
-            })?
-            .clone();
-        Self::from_spec(rt, manifest, &spec, x)
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::*;
+
+    /// Stub engine compiled without `--features pjrt`; constructors error,
+    /// so the fields exist only to keep the API shape (never constructed).
+    #[allow(dead_code)]
+    pub struct ScreenEngine {
+        n: usize,
+        p: usize,
+        pub group_size: usize,
     }
 
-    /// Build from an explicit artifact spec.
-    pub fn from_spec(
-        rt: &mut Runtime,
-        manifest: &ArtifactManifest,
-        spec: &ArtifactSpec,
-        x: &DenseMatrix,
-    ) -> Result<ScreenEngine> {
-        anyhow::ensure!(
-            spec.n == x.rows() && spec.p == x.cols(),
-            "artifact shape {}×{} does not match matrix {}×{}",
-            spec.n,
-            spec.p,
-            x.rows(),
-            x.cols()
-        );
-        // Compile an engine-owned executable (PjRtLoadedExecutable is not
-        // Clone, so the Runtime cache can't hand out copies).
-        let path = manifest.path_of(spec);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = rt.client().compile(&comp).with_context(|| format!("compiling {path:?}"))?;
-        // Col-major (N×p) == row-major (p×N): stage as Xᵀ.
-        let x_buf = rt
-            .client()
-            .buffer_from_host_buffer::<f32>(x.data(), &[x.cols(), x.rows()], None)
-            .context("staging design matrix")?;
-        Ok(ScreenEngine { exe, x_buf, n: x.rows(), p: x.cols(), group_size: spec.group_size })
-    }
+    impl ScreenEngine {
+        /// Always errors: the PJRT backend is not compiled in.
+        pub fn for_matrix(
+            _rt: &mut Runtime,
+            _manifest: &ArtifactManifest,
+            _x: &DenseMatrix,
+        ) -> Result<ScreenEngine> {
+            Err(crate::anyhow!("ScreenEngine requires the `pjrt` feature"))
+        }
 
-    /// Execute the fused kernel for a ball center `o` (length N).
-    pub fn run(&self, rt: &Runtime, o: &[f32]) -> Result<ScreenKernelOut> {
-        anyhow::ensure!(o.len() == self.n, "o has length {} ≠ N={}", o.len(), self.n);
-        let o_buf = rt.client().buffer_from_host_buffer::<f32>(o, &[self.n], None)?;
-        let result = self.exe.execute_b(&[&self.x_buf, &o_buf])?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        anyhow::ensure!(parts.len() == 3, "screen artifact returned {} outputs", parts.len());
-        let c = parts[0].to_vec::<f32>()?;
-        let group_shrink_sq = parts[1].to_vec::<f32>()?;
-        let group_cinf = parts[2].to_vec::<f32>()?;
-        anyhow::ensure!(c.len() == self.p, "c length mismatch");
-        Ok(ScreenKernelOut { c, group_shrink_sq, group_cinf })
-    }
+        /// Always errors: the PJRT backend is not compiled in.
+        pub fn from_spec(
+            _rt: &mut Runtime,
+            _manifest: &ArtifactManifest,
+            _spec: &ArtifactSpec,
+            _x: &DenseMatrix,
+        ) -> Result<ScreenEngine> {
+            Err(crate::anyhow!("ScreenEngine requires the `pjrt` feature"))
+        }
 
-    #[inline]
-    pub fn n(&self) -> usize {
-        self.n
-    }
+        /// Unreachable in practice — construction never succeeds.
+        pub fn run(&self, _rt: &Runtime, _o: &[f32]) -> Result<ScreenKernelOut> {
+            Err(crate::anyhow!("ScreenEngine requires the `pjrt` feature"))
+        }
 
-    #[inline]
-    pub fn p(&self) -> usize {
-        self.p
+        #[inline]
+        pub fn n(&self) -> usize {
+            self.n
+        }
+
+        #[inline]
+        pub fn p(&self) -> usize {
+            self.p
+        }
     }
 }
+
+pub use imp::ScreenEngine;

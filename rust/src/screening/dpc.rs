@@ -12,6 +12,7 @@
 
 use super::dual_est::{estimate_ball, normal_interior, Ball};
 use crate::linalg::ops;
+use crate::linalg::DesignMatrix;
 use crate::nonneg::NonnegProblem;
 
 /// Outcome of one DPC screening.
@@ -39,15 +40,17 @@ impl DpcOutcome {
 ///
 /// * λ̄ < λmax: `n = y/λ̄ − θ̄`;
 /// * λ̄ = λmax: `n = x_*`, the column attaining `λmax = max_i ⟨x_i, y⟩`.
-pub fn normal_vector(
-    prob: &NonnegProblem<'_>,
+pub fn normal_vector<M: DesignMatrix>(
+    prob: &NonnegProblem<'_, M>,
     lambda_bar: f64,
     theta_bar: &[f32],
     lambda_max: f64,
     argmax_col: usize,
 ) -> Vec<f32> {
     if lambda_bar >= lambda_max * (1.0 - 1e-12) {
-        prob.x.col(argmax_col).to_vec()
+        let mut n = vec![0.0f32; prob.x.rows()];
+        prob.x.col_to_dense(argmax_col, &mut n);
+        n
     } else {
         let y_over: Vec<f32> = prob.y.iter().map(|&v| (v as f64 / lambda_bar) as f32).collect();
         normal_interior(theta_bar, &y_over)
@@ -55,8 +58,8 @@ pub fn normal_vector(
 }
 
 /// The Theorem 21 ball for a step λ̄ → λ.
-pub fn screen_ball(
-    prob: &NonnegProblem<'_>,
+pub fn screen_ball<M: DesignMatrix>(
+    prob: &NonnegProblem<'_, M>,
     lambda: f64,
     lambda_bar: f64,
     theta_bar: &[f32],
@@ -85,8 +88,8 @@ pub fn apply_rule(c: &[f32], radius: f64, col_norms: &[f64]) -> DpcOutcome {
 /// One full DPC screening step (Theorem 22).
 ///
 /// `theta_bar` must be the dual optimum at λ̄: `(y − Xβ̄)/λ̄`.
-pub fn dpc_screen(
-    prob: &NonnegProblem<'_>,
+pub fn dpc_screen<M: DesignMatrix>(
+    prob: &NonnegProblem<'_, M>,
     lambda: f64,
     lambda_bar: f64,
     theta_bar: &[f32],
@@ -102,8 +105,8 @@ pub fn dpc_screen(
 /// distance from the feasible dual point to the true optimum; same
 /// reasoning as [`crate::screening::tlfre::tlfre_screen_inexact`]).
 #[allow(clippy::too_many_arguments)]
-pub fn dpc_screen_inexact(
-    prob: &NonnegProblem<'_>,
+pub fn dpc_screen_inexact<M: DesignMatrix>(
+    prob: &NonnegProblem<'_, M>,
     lambda: f64,
     lambda_bar: f64,
     theta_bar: &[f32],
@@ -123,8 +126,8 @@ pub fn dpc_screen_inexact(
 }
 
 /// Normal-cone membership check used by tests: `⟨n, θ − θ̄⟩ ≤ 0` ∀θ ∈ F.
-pub fn normal_cone_margin(
-    prob: &NonnegProblem<'_>,
+pub fn normal_cone_margin<M: DesignMatrix>(
+    prob: &NonnegProblem<'_, M>,
     n_vec: &[f32],
     theta_bar: &[f32],
     probe: &[f32],

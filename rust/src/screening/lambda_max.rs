@@ -17,6 +17,7 @@
 //! `λ₁^max(λ₂) = max_g ‖S_{λ₂}(X_gᵀy)‖ / √n_g` used in the upper-left
 //! panels of Figures 1–4.
 
+use crate::linalg::DesignMatrix;
 use crate::prox::shrink_norm_sq;
 use crate::sgl::problem::SglProblem;
 
@@ -126,7 +127,7 @@ pub fn rho_group_bisect(z: &[f64], alpha: f64, n_g: usize) -> f64 {
 
 /// λ_max^α for the full SGL problem (Theorem 8): one `Xᵀy` sweep, then a
 /// per-group root solve.
-pub fn sgl_lambda_max(prob: &SglProblem<'_>, alpha: f64) -> LambdaMaxInfo {
+pub fn sgl_lambda_max<M: DesignMatrix>(prob: &SglProblem<'_, M>, alpha: f64) -> LambdaMaxInfo {
     let p = prob.n_features();
     let mut c = vec![0.0f32; p];
     prob.x.matvec_t(prob.y, &mut c);
@@ -134,9 +135,9 @@ pub fn sgl_lambda_max(prob: &SglProblem<'_>, alpha: f64) -> LambdaMaxInfo {
 }
 
 /// λ_max^α given a precomputed correlation vector `c = Xᵀy`.
-pub fn lambda_max_from_correlations(
+pub fn lambda_max_from_correlations<M: DesignMatrix>(
     c: &[f32],
-    prob: &SglProblem<'_>,
+    prob: &SglProblem<'_, M>,
     alpha: f64,
 ) -> LambdaMaxInfo {
     let g_cnt = prob.n_groups();
@@ -157,7 +158,7 @@ pub fn lambda_max_from_correlations(
 }
 
 /// Corollary 10's boundary `λ₁^max(λ₂) = max_g ‖S_{λ₂}(X_gᵀy)‖/√n_g`.
-pub fn lambda1_max(prob: &SglProblem<'_>, lambda2: f64) -> f64 {
+pub fn lambda1_max<M: DesignMatrix>(prob: &SglProblem<'_, M>, lambda2: f64) -> f64 {
     let mut c = vec![0.0f32; prob.n_features()];
     prob.x.matvec_t(prob.y, &mut c);
     let mut best = 0.0f64;

@@ -17,14 +17,15 @@
 //! bench.
 
 use crate::coordinator::reduce::ReducedProblem;
+use crate::linalg::DesignMatrix;
 use crate::prox::shrink_norm;
 use crate::screening::tlfre::{ScreenStats, TlfreOutcome};
 use crate::sgl::fista::{solve_fista, FistaOptions, SolveResult};
 use crate::sgl::problem::{SglParams, SglProblem};
 
 /// Apply the heuristic rule. `c` must be `Xᵀ(y − Xβ̄)` at the previous λ̄.
-pub fn strong_rule_screen(
-    prob: &SglProblem<'_>,
+pub fn strong_rule_screen<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     alpha: f64,
     lambda: f64,
     lambda_bar: f64,
@@ -61,8 +62,8 @@ pub fn strong_rule_screen(
 /// re-admitted). For feature i of group g the inactive-coordinate condition
 /// is `|c_i| ≤ λ₁√n_g·u_i + λ₂` relaxed to the sufficient check
 /// `|c_i| ≤ λ₂` for zero groups and `|c_i| ≤ λ₂ + λ₁√n_g` otherwise.
-pub fn kkt_violations(
-    prob: &SglProblem<'_>,
+pub fn kkt_violations<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     params: &SglParams,
     beta: &[f32],
     screened: &TlfreOutcome,
@@ -97,8 +98,8 @@ pub fn kkt_violations(
 /// Solve at λ using the strong rule with the KKT-correction loop: screen,
 /// solve reduced, check discarded coordinates, re-admit violators, repeat.
 /// Returns the exact solution plus the number of correction rounds.
-pub fn solve_with_strong_rule(
-    prob: &SglProblem<'_>,
+pub fn solve_with_strong_rule<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     alpha: f64,
     lambda: f64,
     lambda_bar: f64,

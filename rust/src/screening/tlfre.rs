@@ -17,7 +17,7 @@ use super::dual_est::{estimate_ball, normal_interior, Ball};
 use super::lambda_max::LambdaMaxInfo;
 use super::supremum::{s_star_fused, t_star};
 use crate::linalg::power::group_spectral_norms;
-use crate::linalg::ops;
+use crate::linalg::DesignMatrix;
 use crate::prox::shrink_inplace;
 use crate::sgl::problem::SglProblem;
 use crate::util::Rng;
@@ -34,7 +34,7 @@ pub struct TlfreContext {
 
 impl TlfreContext {
     /// Precompute from the problem (one power iteration per group).
-    pub fn precompute(prob: &SglProblem<'_>) -> TlfreContext {
+    pub fn precompute<M: DesignMatrix>(prob: &SglProblem<'_, M>) -> TlfreContext {
         let mut rng = Rng::seed_from_u64(0x7_1F4E);
         let col_norms = prob.x.col_norms();
         let ranges = prob.groups.ranges();
@@ -95,8 +95,8 @@ impl TlfreOutcome {
 ///
 /// * λ̄ < λmax: `n = y/λ̄ − θ̄`.
 /// * λ̄ = λmax: `n = X_* S₁(X_*ᵀ y/λmax)` with `X_*` the argmax group.
-pub fn normal_vector(
-    prob: &SglProblem<'_>,
+pub fn normal_vector<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     lambda_bar: f64,
     theta_bar: &[f32],
     lmax: &LambdaMaxInfo,
@@ -114,13 +114,13 @@ pub fn normal_vector(
         prob.y.iter().map(|&v| (v as f64 / lmax.lambda_max) as f32).collect();
     let mut cg = vec![0.0f32; e - s];
     for (k, c) in cg.iter_mut().enumerate() {
-        *c = ops::dot_f32(prob.x.col(s + k), &y_over);
+        *c = prob.x.col_dot(s + k, &y_over);
     }
     shrink_inplace(&mut cg, 1.0);
     let mut out = vec![0.0f32; n];
     for (k, &ck) in cg.iter().enumerate() {
         if ck != 0.0 {
-            ops::axpy(ck, prob.x.col(s + k), &mut out);
+            prob.x.col_axpy(s + k, ck, &mut out);
         }
     }
     out
@@ -130,8 +130,8 @@ pub fn normal_vector(
 /// `c = Xᵀo` and the ball radius. Split out so the XLA runtime path (which
 /// produces `c` and the per-group reductions on-device) reuses the exact
 /// same rule logic.
-pub fn apply_rules(
-    prob: &SglProblem<'_>,
+pub fn apply_rules<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     alpha: f64,
     c: &[f32],
     radius: f64,
@@ -169,8 +169,8 @@ pub fn apply_rules(
 /// when the sweep ran through the AOT/PJRT screening engine, which returns
 /// `c = Xᵀo` plus per-group `‖S₁(c_g)‖²` and `‖c_g‖∞` (uniform groups).
 /// Must agree exactly with [`apply_rules`]; a unit test enforces it.
-pub fn apply_rules_from_reductions(
-    prob: &SglProblem<'_>,
+pub fn apply_rules_from_reductions<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     alpha: f64,
     c: &[f32],
     group_shrink_sq: &[f32],
@@ -215,8 +215,8 @@ pub fn apply_rules_from_reductions(
 /// * `lambda` — target λ^{(j+1)};
 /// * `lambda_bar` — previous λ^{(j)} (may equal `lmax.lambda_max`);
 /// * `theta_bar` — exact dual optimum at λ̄, i.e. `(y − Xβ̄)/λ̄`.
-pub fn tlfre_screen(
-    prob: &SglProblem<'_>,
+pub fn tlfre_screen<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     alpha: f64,
     lambda: f64,
     lambda_bar: f64,
@@ -238,8 +238,8 @@ pub fn tlfre_screen(
 /// shift and the normal-cone perturbation, preserving the safety guarantee
 /// at practical tolerances. `gap_bar = 0` recovers the paper's exact rule.
 #[allow(clippy::too_many_arguments)]
-pub fn tlfre_screen_inexact(
-    prob: &SglProblem<'_>,
+pub fn tlfre_screen_inexact<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     alpha: f64,
     lambda: f64,
     lambda_bar: f64,
@@ -259,8 +259,8 @@ pub fn tlfre_screen_inexact(
 }
 
 /// The Theorem 12 ball for a step λ̄ → λ.
-pub fn screen_ball(
-    prob: &SglProblem<'_>,
+pub fn screen_ball<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     lambda: f64,
     lambda_bar: f64,
     theta_bar: &[f32],
@@ -275,6 +275,7 @@ pub fn screen_ball(
 mod tests {
     use super::*;
     use crate::groups::GroupStructure;
+    use crate::linalg::ops;
     use crate::linalg::DenseMatrix;
     use crate::screening::lambda_max::sgl_lambda_max;
     use crate::sgl::fista::{solve_fista, FistaOptions};

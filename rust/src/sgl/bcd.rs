@@ -13,8 +13,8 @@
 use super::dual::{duality_gap, null_objective};
 use super::objective::{objective_with_residual, residual};
 use super::problem::{SglParams, SglProblem};
-use crate::linalg::ops;
 use crate::linalg::power::group_spectral_norms;
+use crate::linalg::DesignMatrix;
 use crate::prox::{sgl_prox_group, shrink_norm};
 use crate::util::Rng;
 
@@ -38,8 +38,8 @@ impl Default for BcdOptions {
 }
 
 /// Solve SGL by cyclic block coordinate descent.
-pub fn solve_bcd(
-    prob: &SglProblem<'_>,
+pub fn solve_bcd<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     params: &SglParams,
     warm_start: Option<&[f32]>,
     opts: &BcdOptions,
@@ -82,13 +82,13 @@ pub fn solve_bcd(
             if has_nonzero {
                 for (k, &bj) in bg.iter().enumerate() {
                     if bj != 0.0 {
-                        ops::axpy(bj, prob.x.col(s_idx + k), &mut r);
+                        prob.x.col_axpy(s_idx + k, bj, &mut r);
                     }
                 }
             }
             // c_g = X_gᵀ r̃_g
             for k in 0..m {
-                cg[k] = ops::dot_f32(prob.x.col(s_idx + k), &r);
+                cg[k] = prob.x.col_dot(s_idx + k, &r);
             }
             // Group-level zero test (KKT / eq. (30)).
             let lim = params.lambda1 * prob.groups.weight(g);
@@ -107,11 +107,11 @@ pub fn solve_bcd(
                 let mut xb = vec![0.0f32; n];
                 for (k, &bj) in bg.iter().enumerate() {
                     if bj != 0.0 {
-                        ops::axpy(bj, prob.x.col(s_idx + k), &mut xb);
+                        prob.x.col_axpy(s_idx + k, bj, &mut xb);
                     }
                 }
                 for k in 0..m {
-                    let grad_k = ops::dot_f32(prob.x.col(s_idx + k), &xb) - cg[k];
+                    let grad_k = prob.x.col_dot(s_idx + k, &xb) - cg[k];
                     wg[k] = bg[k] - (step as f32) * grad_k;
                 }
                 sgl_prox_group(
@@ -125,7 +125,7 @@ pub fn solve_bcd(
             // Put the group's contribution back into the residual.
             for (k, &bj) in bg.iter().enumerate() {
                 if bj != 0.0 {
-                    ops::axpy(-bj, prob.x.col(s_idx + k), &mut r);
+                    prob.x.col_axpy(s_idx + k, -bj, &mut r);
                 }
             }
         }

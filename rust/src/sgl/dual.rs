@@ -14,10 +14,11 @@
 
 use super::problem::{SglParams, SglProblem};
 use crate::linalg::ops;
+use crate::linalg::DesignMatrix;
 use crate::prox::shrink_norm_sq;
 
 /// Maximum infeasibility `max_g (‖S_{λ₂}(s c_g)‖² − (λ₁√n_g)²)` at scale `s`.
-fn max_violation(prob: &SglProblem<'_>, params: &SglParams, c: &[f32], s: f64) -> f64 {
+fn max_violation<M: DesignMatrix>(prob: &SglProblem<'_, M>, params: &SglParams, c: &[f32], s: f64) -> f64 {
     let mut worst = f64::NEG_INFINITY;
     // ‖S_λ₂(s·c_g)‖ = s·‖S_{λ₂/s}(c_g)‖ for s>0; evaluate directly on a
     // scaled copy-free pass instead.
@@ -41,7 +42,7 @@ fn max_violation(prob: &SglProblem<'_>, params: &SglParams, c: &[f32], s: f64) -
 /// Largest `s ∈ [0, 1]` such that `s·θ̂` is dual feasible.
 ///
 /// `c` must be `Xᵀθ̂`. Returns 1.0 when θ̂ itself is feasible.
-pub fn dual_feasible_scale(prob: &SglProblem<'_>, params: &SglParams, c: &[f32]) -> f64 {
+pub fn dual_feasible_scale<M: DesignMatrix>(prob: &SglProblem<'_, M>, params: &SglParams, c: &[f32]) -> f64 {
     if max_violation(prob, params, c, 1.0) <= 0.0 {
         return 1.0;
     }
@@ -77,8 +78,8 @@ pub fn dual_value(y: &[f32], theta_hat: &[f32], s: f64) -> f64 {
 /// Duality gap at β given its residual `r = y − Xβ` and `c = Xᵀr`.
 ///
 /// Returns `(gap, scale)` with `gap = P(β) − D(s·r) ≥ 0` up to numerics.
-pub fn duality_gap(
-    prob: &SglProblem<'_>,
+pub fn duality_gap<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     params: &SglParams,
     beta: &[f32],
     r: &[f32],
@@ -92,7 +93,7 @@ pub fn duality_gap(
 
 /// Check dual feasibility of an explicit θ (used in tests and the safety
 /// verifier): `max_g ‖S_{λ₂}(X_gᵀθ)‖ − λ₁√n_g`.
-pub fn feasibility_margin(prob: &SglProblem<'_>, params: &SglParams, theta: &[f32]) -> f64 {
+pub fn feasibility_margin<M: DesignMatrix>(prob: &SglProblem<'_, M>, params: &SglParams, theta: &[f32]) -> f64 {
     let mut c = vec![0.0f32; prob.n_features()];
     prob.x.matvec_t(theta, &mut c);
     let mut worst = f64::NEG_INFINITY;

@@ -11,6 +11,7 @@ use super::objective::objective_with_residual;
 use super::problem::{SglParams, SglProblem};
 use crate::linalg::power::spectral_norm;
 use crate::linalg::ops;
+use crate::linalg::DesignMatrix;
 use crate::prox::sgl_prox_group;
 use crate::util::Rng;
 
@@ -64,15 +65,15 @@ pub struct SolveResult {
 /// Power iteration converges to σmax *from below*, so the estimate is
 /// inflated by 2% — an overestimate only shrinks the step slightly, while
 /// an underestimate can destabilize FISTA.
-pub fn lipschitz(prob: &SglProblem<'_>) -> f64 {
+pub fn lipschitz<M: DesignMatrix>(prob: &SglProblem<'_, M>) -> f64 {
     let mut rng = Rng::seed_from_u64(0x11_57FA);
     let s = spectral_norm(prob.x, 1e-6, 500, &mut rng).sigma * 1.02;
     (s * s).max(f64::MIN_POSITIVE)
 }
 
 /// Solve SGL with FISTA. `warm_start` (if given) initializes β.
-pub fn solve_fista(
-    prob: &SglProblem<'_>,
+pub fn solve_fista<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     params: &SglParams,
     warm_start: Option<&[f32]>,
     opts: &FistaOptions,

@@ -2,6 +2,7 @@
 
 use super::problem::{SglParams, SglProblem};
 use crate::linalg::ops;
+use crate::linalg::DesignMatrix;
 
 /// Components of the primal objective at a point β.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -22,7 +23,7 @@ impl Objective {
 }
 
 /// Compute the residual `r = y − Xβ` into `r_out`.
-pub fn residual(prob: &SglProblem<'_>, beta: &[f32], r_out: &mut [f32]) {
+pub fn residual<M: DesignMatrix>(prob: &SglProblem<'_, M>, beta: &[f32], r_out: &mut [f32]) {
     prob.x.matvec(beta, r_out);
     for i in 0..r_out.len() {
         r_out[i] = prob.y[i] - r_out[i];
@@ -30,7 +31,7 @@ pub fn residual(prob: &SglProblem<'_>, beta: &[f32], r_out: &mut [f32]) {
 }
 
 /// Penalty value `λ₁ Σ √n_g‖β_g‖ + λ₂‖β‖₁` of a coefficient vector.
-pub fn penalty(prob: &SglProblem<'_>, params: &SglParams, beta: &[f32]) -> (f64, f64) {
+pub fn penalty<M: DesignMatrix>(prob: &SglProblem<'_, M>, params: &SglParams, beta: &[f32]) -> (f64, f64) {
     let mut group_pen = 0.0f64;
     for (g, s, e) in prob.groups.iter() {
         group_pen += prob.groups.weight(g) * ops::nrm2(&beta[s..e]);
@@ -40,7 +41,7 @@ pub fn penalty(prob: &SglProblem<'_>, params: &SglParams, beta: &[f32]) -> (f64,
 }
 
 /// Full primal objective at β (computes the residual internally).
-pub fn objective(prob: &SglProblem<'_>, params: &SglParams, beta: &[f32]) -> Objective {
+pub fn objective<M: DesignMatrix>(prob: &SglProblem<'_, M>, params: &SglParams, beta: &[f32]) -> Objective {
     let mut r = vec![0.0f32; prob.n_samples()];
     residual(prob, beta, &mut r);
     objective_with_residual(prob, params, beta, &r)
@@ -48,8 +49,8 @@ pub fn objective(prob: &SglProblem<'_>, params: &SglParams, beta: &[f32]) -> Obj
 
 /// Primal objective when the residual is already available (avoids the
 /// matvec — the solvers maintain `r` incrementally).
-pub fn objective_with_residual(
-    prob: &SglProblem<'_>,
+pub fn objective_with_residual<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
     params: &SglParams,
     beta: &[f32],
     r: &[f32],

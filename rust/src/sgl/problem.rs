@@ -1,7 +1,7 @@
 //! Problem container and parameterization.
 
 use crate::groups::GroupStructure;
-use crate::linalg::DenseMatrix;
+use crate::linalg::{DenseMatrix, DesignMatrix};
 
 /// Regularization parameters of SGL.
 ///
@@ -29,15 +29,18 @@ impl SglParams {
 }
 
 /// A borrowed SGL problem instance: design matrix, response, groups.
-#[derive(Debug, Clone, Copy)]
-pub struct SglProblem<'a> {
-    pub x: &'a DenseMatrix,
+///
+/// Generic over the [`DesignMatrix`] backend (dense, CSC, or a screened
+/// view); defaults to [`DenseMatrix`] so existing dense call sites read
+/// unchanged.
+pub struct SglProblem<'a, M: DesignMatrix = DenseMatrix> {
+    pub x: &'a M,
     pub y: &'a [f32],
     pub groups: &'a GroupStructure,
 }
 
-impl<'a> SglProblem<'a> {
-    pub fn new(x: &'a DenseMatrix, y: &'a [f32], groups: &'a GroupStructure) -> Self {
+impl<'a, M: DesignMatrix> SglProblem<'a, M> {
+    pub fn new(x: &'a M, y: &'a [f32], groups: &'a GroupStructure) -> Self {
         assert_eq!(x.rows(), y.len(), "X rows must match y length");
         x.check_groups(groups);
         SglProblem { x, y, groups }
@@ -56,6 +59,26 @@ impl<'a> SglProblem<'a> {
     #[inline]
     pub fn n_groups(&self) -> usize {
         self.groups.n_groups()
+    }
+}
+
+// Manual Clone/Copy/Debug: the derives would demand `M: Clone/Copy/Debug`
+// even though only references are stored.
+impl<M: DesignMatrix> Clone for SglProblem<'_, M> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<M: DesignMatrix> Copy for SglProblem<'_, M> {}
+
+impl<M: DesignMatrix> std::fmt::Debug for SglProblem<'_, M> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SglProblem")
+            .field("n_samples", &self.n_samples())
+            .field("n_features", &self.n_features())
+            .field("n_groups", &self.n_groups())
+            .finish()
     }
 }
 
@@ -88,6 +111,16 @@ mod tests {
         assert_eq!(p.n_samples(), 4);
         assert_eq!(p.n_features(), 6);
         assert_eq!(p.n_groups(), 3);
+    }
+
+    #[test]
+    fn problem_over_csc_backend() {
+        let x = DenseMatrix::zeros(4, 6);
+        let s = crate::linalg::CscMatrix::from_dense(&x);
+        let y = vec![0.0f32; 4];
+        let g = GroupStructure::uniform(6, 3);
+        let p = SglProblem::new(&s, &y, &g);
+        assert_eq!(p.n_features(), 6);
     }
 
     #[test]

@@ -1,62 +1,92 @@
-//! Minimal `log`-facade backend.
+//! Minimal self-contained logger (no `log`/`once_cell` in the offline
+//! crate set).
 //!
-//! Filters by the `TLFRE_LOG` environment variable (`error|warn|info|debug|
-//! trace`, default `info`) and writes single-line records with elapsed time
-//! to stderr. Installed once via [`init`].
+//! Filters by the `TLFRE_LOG` environment variable (`off|error|warn|info|
+//! debug|trace`, default `info`) and writes single-line records with
+//! elapsed time to stderr. Installed once via [`init`]; [`log`] is the
+//! low-level entry point, with the [`info`]/[`warn`]/[`debug`] helpers for
+//! the common levels.
 
-use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::OnceCell;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-struct Logger {
-    start: Instant,
+/// Log severities, in increasing verbosity order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-static LOGGER: OnceCell<Logger> = OnceCell::new();
-
-impl log::Log for Logger {
-    fn enabled(&self, _metadata: &Metadata) -> bool {
-        true // filtering handled by max_level
-    }
-
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = self.start.elapsed().as_secs_f64();
-        let lvl = match record.level() {
+impl Level {
+    fn label(self) -> &'static str {
+        match self {
+            Level::Off => "OFF  ",
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+        }
     }
-
-    fn flush(&self) {}
 }
 
+static START: OnceLock<Instant> = OnceLock::new();
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
 /// Parse a level name; unknown names fall back to `Info`.
-fn parse_level(s: &str) -> LevelFilter {
+fn parse_level(s: &str) -> Level {
     match s.to_ascii_lowercase().as_str() {
-        "off" => LevelFilter::Off,
-        "error" => LevelFilter::Error,
-        "warn" => LevelFilter::Warn,
-        "info" => LevelFilter::Info,
-        "debug" => LevelFilter::Debug,
-        "trace" => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+        "off" => Level::Off,
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "info" => Level::Info,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        _ => Level::Info,
     }
 }
 
 /// Install the logger (idempotent). Level from `TLFRE_LOG`, default `info`.
 pub fn init() {
-    let logger = LOGGER.get_or_init(|| Logger { start: Instant::now() });
-    let level = std::env::var("TLFRE_LOG").map(|v| parse_level(&v)).unwrap_or(LevelFilter::Info);
-    // set_logger fails if already set (e.g. by a test harness) — ignore.
-    let _ = log::set_logger(logger);
-    log::set_max_level(level);
+    START.get_or_init(Instant::now);
+    let level =
+        std::env::var("TLFRE_LOG").map(|v| parse_level(&v)).unwrap_or(Level::Info);
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Whether records at `level` are currently emitted.
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= MAX_LEVEL.load(Ordering::Relaxed) && level != Level::Off
+}
+
+/// Emit one record (no-op when filtered out).
+pub fn log(level: Level, target: &str, msg: &str) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {} {target}] {msg}", level.label());
+}
+
+/// Info-level record.
+pub fn info(target: &str, msg: &str) {
+    log(Level::Info, target, msg);
+}
+
+/// Warn-level record.
+pub fn warn(target: &str, msg: &str) {
+    log(Level::Warn, target, msg);
+}
+
+/// Debug-level record.
+pub fn debug(target: &str, msg: &str) {
+    log(Level::Debug, target, msg);
 }
 
 #[cfg(test)]
@@ -65,16 +95,24 @@ mod tests {
 
     #[test]
     fn parse_levels() {
-        assert_eq!(parse_level("error"), LevelFilter::Error);
-        assert_eq!(parse_level("TRACE"), LevelFilter::Trace);
-        assert_eq!(parse_level("bogus"), LevelFilter::Info);
-        assert_eq!(parse_level("off"), LevelFilter::Off);
+        assert_eq!(parse_level("error"), Level::Error);
+        assert_eq!(parse_level("TRACE"), Level::Trace);
+        assert_eq!(parse_level("bogus"), Level::Info);
+        assert_eq!(parse_level("off"), Level::Off);
     }
 
     #[test]
     fn init_is_idempotent() {
         init();
         init();
-        log::info!("logger smoke test line");
+        info("logger", "smoke test line");
+    }
+
+    #[test]
+    fn off_filters_everything() {
+        assert!(!enabled(Level::Off));
+        // Error is the least verbose real level, always ≤ info default.
+        init();
+        assert!(enabled(Level::Error));
     }
 }

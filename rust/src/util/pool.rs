@@ -1,20 +1,28 @@
 //! Scoped-thread parallelism.
 //!
-//! `rayon` is unavailable offline; this provides a `parallel_for_chunks`
-//! built on `std::thread::scope`. On the single-core benchmark box it
-//! degrades to a serial loop with zero thread overhead, but the coordinator
-//! uses it so multi-core deployments scale (e.g. running independent
-//! α-paths concurrently).
+//! `rayon` is unavailable offline; this provides chunked parallel primitives
+//! built on `std::thread::scope`. On a single-core box every entry point
+//! degrades to a serial loop with zero thread overhead; on multi-core boxes
+//! the linalg backends use [`parallel_fill`] to scale the dominant `Xᵀv`
+//! sweep and the coordinator uses [`parallel_map`] for independent α-paths.
+//!
+//! Worker count comes from `TLFRE_THREADS` (default: available parallelism).
 
 /// Number of worker threads to use (respects `TLFRE_THREADS`, defaults to
-/// available parallelism).
+/// available parallelism). Resolved once per process and cached —
+/// `parallel_fill` sits on the solvers' per-iteration sweep path, where an
+/// env-map read plus an `available_parallelism` syscall per call would be
+/// measurable; changing `TLFRE_THREADS` mid-process therefore has no effect.
 pub fn num_threads() -> usize {
-    if let Ok(v) = std::env::var("TLFRE_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("TLFRE_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
 }
 
 /// Run `f(chunk_index, start, end)` over `n` items split into contiguous
@@ -42,37 +50,75 @@ where
     });
 }
 
+/// Fill `out[i] = f(i)` in parallel over contiguous chunks.
+///
+/// This is the hot-sweep primitive: the `DesignMatrix::matvec_t` default
+/// implementation calls it with `f = |j| x_jᵀv`. Entirely safe — each worker
+/// receives a disjoint `&mut` sub-slice via `chunks_mut`.
+pub fn parallel_fill<U, F>(out: &mut [U], f: F)
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    let n = out.len();
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n == 0 {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = f(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (w, slice) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                let base = w * chunk;
+                for (k, o) in slice.iter_mut().enumerate() {
+                    *o = f(base + k);
+                }
+            });
+        }
+    });
+}
+
 /// Map a function over items in parallel, preserving order.
+///
+/// Results are collected per worker chunk and concatenated, so `U` needs no
+/// `Default + Clone` bound (and no placeholder zero-fill pass happens).
 pub fn parallel_map<T, U, F>(items: &[T], f: F) -> Vec<U>
 where
     T: Sync,
-    U: Send + Default + Clone,
+    U: Send,
     F: Fn(&T) -> U + Sync,
 {
-    let mut out = vec![U::default(); items.len()];
-    {
-        let out_ptr = SyncSlice(out.as_mut_ptr());
-        parallel_for_chunks(items.len(), |_, start, end| {
-            // Capture the whole wrapper (edition-2021 disjoint capture would
-            // otherwise move the raw pointer field, which is not Sync).
-            let ptr = &out_ptr;
-            for i in start..end {
-                // SAFETY: chunks are disjoint index ranges; each element is
-                // written by exactly one worker.
-                unsafe { *ptr.0.add(i) = f(&items[i]) };
-            }
-        });
+    let n = items.len();
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n == 0 {
+        return items.iter().map(f).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let parts: Vec<Vec<U>> = std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .map(|part| {
+                let f = &f;
+                s.spawn(move || part.iter().map(f).collect::<Vec<U>>())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("parallel_map worker panicked")).collect()
+    });
+    let mut out = Vec::with_capacity(n);
+    for p in parts {
+        out.extend(p);
     }
     out
 }
 
-/// Wrapper making a raw pointer Sync for disjoint-range writes.
-struct SyncSlice<U>(*mut U);
-unsafe impl<U> Sync for SyncSlice<U> {}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::num::NonZeroUsize;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
@@ -92,6 +138,27 @@ mod tests {
         let xs: Vec<usize> = (0..257).collect();
         let ys = parallel_map(&xs, |&x| x * 2);
         assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_non_default_type() {
+        // NonZeroUsize has no Default impl — the old bound rejected this.
+        let xs: Vec<usize> = (0..100).collect();
+        let ys = parallel_map(&xs, |&x| NonZeroUsize::new(x + 1).unwrap());
+        assert_eq!(ys.len(), 100);
+        assert_eq!(ys[41].get(), 42);
+    }
+
+    #[test]
+    fn parallel_fill_matches_serial() {
+        let mut out = vec![0usize; 513];
+        parallel_fill(&mut out, |i| i * i);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i * i);
+        }
+        // empty slice is fine
+        let mut empty: Vec<usize> = Vec::new();
+        parallel_fill(&mut empty, |i| i);
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Backend parity: the dense, CSC and screened-view backends must agree.
+//!
+//! * kernel parity — `matvec`, `matvec_t`, `matvec_t_subset`, `col_norms`
+//!   agree between dense and CSC to f32 accumulation tolerance on random
+//!   matrices (several shapes/densities);
+//! * screening parity — TLFre outcomes computed over the CSC backend match
+//!   the dense backend (identical masks up to borderline-margin cases, and
+//!   both are *safe* against a tight reference solve);
+//! * view-vs-copy equivalence — a full TLFre path solved on zero-copy
+//!   [`ScreenedView`] reduced problems is **bitwise identical** (per-step
+//!   r₁/r₂, sparsity, iteration counts) to the same path solved on
+//!   materialized gathered copies (the seed behaviour).
+
+use tlfre::coordinator::{run_tlfre_path, PathConfig};
+use tlfre::data::synthetic::{
+    generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec,
+};
+use tlfre::linalg::{CscMatrix, DenseMatrix, DesignMatrix, ScreenedView};
+use tlfre::screening::lambda_max::sgl_lambda_max;
+use tlfre::screening::tlfre::{tlfre_screen, TlfreContext};
+use tlfre::sgl::{solve_fista, FistaOptions, SglParams, SglProblem};
+use tlfre::util::Rng;
+
+fn random_sparse_dense(n: usize, p: usize, density: f64, seed: u64) -> DenseMatrix {
+    let mut rng = Rng::seed_from_u64(seed);
+    DenseMatrix::from_fn(n, p, |_, _| {
+        if rng.uniform_range(0.0, 1.0) < density {
+            rng.gaussian() as f32
+        } else {
+            0.0
+        }
+    })
+}
+
+#[test]
+fn dense_csc_kernel_parity() {
+    for (n, p, density, seed) in [
+        (17usize, 29usize, 1.0f64, 1u64),
+        (40, 120, 0.3, 2),
+        (64, 200, 0.05, 3),
+        (8, 5, 0.5, 4),
+    ] {
+        let d = random_sparse_dense(n, p, density, seed);
+        let s = CscMatrix::from_dense(&d);
+        let mut rng = Rng::seed_from_u64(seed ^ 0xFF);
+        let v: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+        let beta: Vec<f32> = (0..p)
+            .map(|_| if rng.below(3) == 0 { rng.gaussian() as f32 } else { 0.0 })
+            .collect();
+
+        // matvec
+        let mut md = vec![0.0f32; n];
+        let mut ms = vec![0.0f32; n];
+        d.matvec(&beta, &mut md);
+        DesignMatrix::matvec(&s, &beta, &mut ms);
+        for i in 0..n {
+            let tol = 1e-4 * (1.0 + md[i].abs());
+            assert!((md[i] - ms[i]).abs() < tol, "matvec[{i}] {} vs {}", md[i], ms[i]);
+        }
+
+        // matvec_t
+        let mut td = vec![0.0f32; p];
+        let mut ts = vec![0.0f32; p];
+        d.matvec_t(&v, &mut td);
+        DesignMatrix::matvec_t(&s, &v, &mut ts);
+        for j in 0..p {
+            let tol = 1e-4 * (1.0 + td[j].abs());
+            assert!((td[j] - ts[j]).abs() < tol, "matvec_t[{j}] {} vs {}", td[j], ts[j]);
+        }
+
+        // matvec_t_subset
+        let idx: Vec<usize> = (0..p).step_by(3).collect();
+        let mut sd = vec![0.0f32; idx.len()];
+        let mut ss = vec![0.0f32; idx.len()];
+        d.matvec_t_subset(&v, &idx, &mut sd);
+        DesignMatrix::matvec_t_subset(&s, &v, &idx, &mut ss);
+        for k in 0..idx.len() {
+            assert!((sd[k] - ss[k]).abs() < 1e-4 * (1.0 + sd[k].abs()), "subset[{k}]");
+        }
+
+        // col_norms (f64 accumulation on both sides — tight tolerance)
+        let nd = d.col_norms();
+        let ns = DesignMatrix::col_norms(&s);
+        for j in 0..p {
+            assert!((nd[j] - ns[j]).abs() < 1e-9 * (1.0 + nd[j]), "col_norms[{j}]");
+        }
+    }
+}
+
+#[test]
+fn dense_csc_screening_parity_and_safety() {
+    // Same numerical inputs through both backends: outcomes must agree up
+    // to borderline f32-margin cases, and every rejection must be safe.
+    let spec = SparseSyntheticSpec::new(30, 200, 20, 0.2);
+    let ds = generate_sparse_synthetic(&spec, 77);
+    let xd = ds.x.to_dense();
+
+    let alpha = 1.0;
+    let pd = SglProblem::new(&xd, &ds.y, &ds.groups);
+    let ps = SglProblem::new(&ds.x, &ds.y, &ds.groups);
+
+    let lmd = sgl_lambda_max(&pd, alpha);
+    let lms = sgl_lambda_max(&ps, alpha);
+    assert!(
+        (lmd.lambda_max - lms.lambda_max).abs() < 1e-6 * lmd.lambda_max,
+        "λmax dense {} vs csc {}",
+        lmd.lambda_max,
+        lms.lambda_max
+    );
+
+    let ctxd = TlfreContext::precompute(&pd);
+    let ctxs = TlfreContext::precompute(&ps);
+
+    let theta: Vec<f32> =
+        ds.y.iter().map(|&v| (v as f64 / lmd.lambda_max) as f32).collect();
+    let lambda = 0.8 * lmd.lambda_max;
+    let od = tlfre_screen(&pd, alpha, lambda, lmd.lambda_max, &theta, &lmd, &ctxd);
+    let os = tlfre_screen(&ps, alpha, lambda, lms.lambda_max, &theta, &lms, &ctxs);
+
+    // Masks agree except possibly at f32-borderline margins: allow a tiny
+    // disagreement budget, and require the bulk to match exactly.
+    let p = pd.n_features();
+    let diffs = (0..p).filter(|&j| od.feature_kept[j] != os.feature_kept[j]).count();
+    assert!(diffs <= p / 50, "{diffs} of {p} screening decisions differ");
+    assert!(od.total_rejected() > 0, "dense rejected nothing");
+    assert!(os.total_rejected() > 0, "csc rejected nothing");
+
+    // Safety of BOTH outcomes against a tight dense reference solve.
+    let params = SglParams::from_alpha_lambda(alpha, lambda);
+    let sol = solve_fista(&pd, &params, None, &FistaOptions { tol: 1e-10, ..Default::default() });
+    for j in 0..p {
+        for (name, out) in [("dense", &od), ("csc", &os)] {
+            if !out.feature_kept[j] {
+                assert!(
+                    sol.beta[j].abs() < 1e-5,
+                    "{name}: feature {j} screened but β={}",
+                    sol.beta[j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn csc_end_to_end_path_matches_dense() {
+    // Full TLFre-screened λ-path over the CSC backend vs the dense backend:
+    // sparsity trajectories must agree closely (identical data, f32
+    // accumulation-order differences only).
+    let spec = SparseSyntheticSpec::new(30, 200, 20, 0.1);
+    let ds = generate_sparse_synthetic(&spec, 99);
+    let xd = ds.x.to_dense();
+    let cfg = PathConfig {
+        alpha: 1.0,
+        n_lambda: 10,
+        lambda_min_ratio: 0.05,
+        tol: 1e-7,
+        ..Default::default()
+    };
+    let a = run_tlfre_path(&xd, &ds.y, &ds.groups, &cfg);
+    let b = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+    assert_eq!(a.steps.len(), b.steps.len());
+    for (sa, sb) in a.steps.iter().zip(&b.steps) {
+        assert!((sa.lambda - sb.lambda).abs() < 1e-9 * sa.lambda.max(1e-300));
+        let diff = (sa.nonzeros as i64 - sb.nonzeros as i64).abs();
+        assert!(diff <= 2, "λ={}: nnz {} vs {}", sa.lambda, sa.nonzeros, sb.nonzeros);
+    }
+    assert!(b.mean_total_rejection() > 0.3, "csc path rejection {}", b.mean_total_rejection());
+}
+
+#[test]
+fn screened_view_path_bitwise_matches_gathered_copy_path() {
+    // The acceptance-criterion test: the zero-copy ScreenedView path must
+    // produce bitwise-identical per-step statistics (r₁, r₂ as f64, exact
+    // sparsity, iteration counts, duality gaps) to the gathered-copy path
+    // on the Table-1 synthetic config.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(40, 400, 40), 2014);
+    let base = PathConfig {
+        alpha: 1.0,
+        n_lambda: 15,
+        lambda_min_ratio: 0.05,
+        tol: 1e-7,
+        ..Default::default()
+    };
+    let view_path = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &base);
+    let copy_cfg = PathConfig { materialize_reduced: true, ..base };
+    let copy_path = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &copy_cfg);
+
+    assert_eq!(view_path.steps.len(), copy_path.steps.len());
+    for (sv, sc) in view_path.steps.iter().zip(&copy_path.steps) {
+        assert_eq!(sv.lambda.to_bits(), sc.lambda.to_bits(), "λ grids diverged");
+        assert_eq!(sv.r1.to_bits(), sc.r1.to_bits(), "r1 not bitwise equal at λ={}", sv.lambda);
+        assert_eq!(sv.r2.to_bits(), sc.r2.to_bits(), "r2 not bitwise equal at λ={}", sv.lambda);
+        assert_eq!(sv.zeros, sc.zeros, "zeros differ at λ={}", sv.lambda);
+        assert_eq!(sv.nonzeros, sc.nonzeros, "nonzeros differ at λ={}", sv.lambda);
+        assert_eq!(sv.active_features, sc.active_features, "active differ at λ={}", sv.lambda);
+        assert_eq!(sv.iters, sc.iters, "solver iters differ at λ={}", sv.lambda);
+        assert_eq!(sv.gap.to_bits(), sc.gap.to_bits(), "gap not bitwise equal at λ={}", sv.lambda);
+    }
+}
+
+#[test]
+fn view_solver_bitwise_matches_gathered_solver() {
+    // Direct single-solve check (stronger localization than the path test):
+    // FISTA on a ScreenedView vs FISTA on the gathered dense copy.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 120, 12), 5);
+    let keep: Vec<usize> = (0..120).filter(|j| j % 3 != 0).collect();
+    let view = ScreenedView::new(&ds.x, keep.clone());
+    let gathered = ds.x.select_cols(&keep);
+    let groups = tlfre::groups::GroupStructure::uniform(keep.len(), 8);
+
+    let pv = SglProblem::new(&view, &ds.y, &groups);
+    let pg = SglProblem::new(&gathered, &ds.y, &groups);
+    let lm = sgl_lambda_max(&pg, 1.0);
+    let params = SglParams::from_alpha_lambda(1.0, 0.4 * lm.lambda_max);
+    let opts = FistaOptions { tol: 1e-8, ..Default::default() };
+    let rv = solve_fista(&pv, &params, None, &opts);
+    let rg = solve_fista(&pg, &params, None, &opts);
+    assert_eq!(rv.iters, rg.iters);
+    for j in 0..keep.len() {
+        assert_eq!(
+            rv.beta[j].to_bits(),
+            rg.beta[j].to_bits(),
+            "β[{j}] view {} vs gathered {}",
+            rv.beta[j],
+            rg.beta[j]
+        );
+    }
+}

@@ -11,6 +11,16 @@ use tlfre::prox::shrink_norm_sq;
 use tlfre::runtime::{artifacts_dir, ArtifactManifest, Runtime, ScreenEngine};
 use tlfre::util::Rng;
 
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::cpu() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime tests: {e:#}");
+            None
+        }
+    }
+}
+
 fn manifest_or_skip() -> Option<ArtifactManifest> {
     let dir = artifacts_dir();
     match ArtifactManifest::load(&dir) {
@@ -25,7 +35,7 @@ fn manifest_or_skip() -> Option<ArtifactManifest> {
 #[test]
 fn screen_artifact_matches_native_tiny() {
     let Some(manifest) = manifest_or_skip() else { return };
-    let mut rt = Runtime::cpu().expect("PJRT cpu client");
+    let Some(mut rt) = runtime_or_skip() else { return };
     let (n, p, gs) = (8usize, 32usize, 4usize);
     let mut rng = Rng::seed_from_u64(7);
     let x = DenseMatrix::from_fn(n, p, |_, _| rng.normal(0.0, 1.2) as f32);
@@ -70,7 +80,7 @@ fn screen_artifact_matches_native_e2e_shape() {
         eprintln!("SKIP: e2e artifact not built");
         return;
     }
-    let mut rt = Runtime::cpu().expect("PJRT cpu client");
+    let Some(mut rt) = runtime_or_skip() else { return };
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(100, 1000, 100), 11);
     let engine = ScreenEngine::for_matrix(&mut rt, &manifest, &ds.x).expect("engine");
     let mut rng = Rng::seed_from_u64(12);
@@ -96,7 +106,7 @@ fn dpc_artifact_executes() {
         eprintln!("SKIP: dpc tiny artifact missing");
         return;
     };
-    let mut rt = Runtime::cpu().expect("PJRT cpu client");
+    let Some(mut rt) = runtime_or_skip() else { return };
     let mut rng = Rng::seed_from_u64(13);
     let xt: Vec<f32> = (0..8 * 32).map(|_| rng.gaussian() as f32).collect();
     let o: Vec<f32> = (0..8).map(|_| rng.gaussian() as f32).collect();
@@ -119,7 +129,7 @@ fn fista_step_artifact_reduces_objective() {
         eprintln!("SKIP: fista tiny artifact missing");
         return;
     };
-    let mut rt = Runtime::cpu().expect("PJRT cpu client");
+    let Some(mut rt) = runtime_or_skip() else { return };
     let mut rng = Rng::seed_from_u64(14);
     let (n, p) = (8usize, 32usize);
     let x = DenseMatrix::from_fn(n, p, |_, _| rng.gaussian() as f32);
