@@ -8,9 +8,15 @@
 //!   sweeps at 1 %, 5 % and 100 % density (written to
 //!   `BENCH_backends.json`);
 //! * the XLA engine sweep vs the native sweep (runtime dispatch overhead);
-//! * FISTA vs BCD on a reduced problem (solver ablation).
+//! * FISTA vs BCD on a reduced problem (solver ablation);
+//! * the persistent worker pool vs the legacy per-call scoped threads
+//!   (dispatch overhead of the hot `parallel_fill` sweep);
+//! * the whole-path before/after of the spectral cache — `run_tlfre_path`
+//!   with cached full-matrix Lipschitz constants vs exact per-view power
+//!   iteration (written to `BENCH_solver_path.json`).
 
 use tlfre::bench_harness::BenchArgs;
+use tlfre::coordinator::{run_tlfre_path, PathConfig};
 use tlfre::data::synthetic::{
     generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec,
 };
@@ -22,6 +28,7 @@ use tlfre::sgl::bcd::{solve_bcd, BcdOptions};
 use tlfre::sgl::{solve_fista, FistaOptions, SglParams, SglProblem};
 use tlfre::screening::lambda_max::sgl_lambda_max;
 use tlfre::util::harness::{bench, black_box, BenchConfig};
+use tlfre::util::pool;
 use tlfre::util::json::Json;
 use tlfre::util::Rng;
 
@@ -153,7 +160,10 @@ fn main() {
         .set("p", p)
         .set("threads", tlfre::util::pool::num_threads())
         .set("rows", Json::Arr(backend_rows));
-    let backend_json = "BENCH_backends.json";
+    // Cargo runs bench binaries with CWD = the package root (rust/); pin
+    // the report next to the checked-in copy at the workspace root so CI's
+    // schema check reads the fresh run, not the placeholder.
+    let backend_json = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_backends.json");
     match std::fs::write(backend_json, report.to_string_pretty()) {
         Ok(()) => println!("  backend results written to {backend_json}"),
         Err(e) => eprintln!("  warning: could not write {backend_json}: {e}"),
@@ -192,4 +202,139 @@ fn main() {
         black_box(solve_bcd(&sp, &params, None, &BcdOptions { tol: 1e-6, ..Default::default() }));
     });
     println!("  fista {:8.2} ms   bcd {:8.2} ms", rf.seconds.median * 1e3, rb.seconds.median * 1e3);
+
+    // Pool dispatch overhead: the persistent parked-worker pool vs the
+    // legacy per-call std::thread::scope (the before/after of the
+    // spawn-free rework). Same chunking, bitwise-identical output; only
+    // dispatch cost differs — and it's paid once per solver iteration.
+    println!(
+        "\n== pool dispatch (parallel_fill over {p} column dots, {} workers) ==",
+        pool::num_threads()
+    );
+    // Honest comparison: use the real process worker count. With 1 worker
+    // the pool never spawns and all three rows legitimately measure the
+    // serial loop (speedup ≈ 1); `pool_enabled` records which case ran.
+    let workers = pool::num_threads();
+    if workers <= 1 {
+        println!("  (TLFRE_THREADS=1 / single core: pool disabled, rows below are all serial)");
+    }
+    let mut fill = vec![0.0f32; p];
+    let sweep_reps = 50;
+    let r_fill_serial = bench("serial", &cfg, || {
+        for _ in 0..sweep_reps {
+            for (j, slot) in fill.iter_mut().enumerate() {
+                *slot = ds.x.col_dot(j, black_box(&o));
+            }
+        }
+        black_box(&fill);
+    });
+    let r_fill_scoped = bench("scoped", &cfg, || {
+        for _ in 0..sweep_reps {
+            let dot = |j: usize| ds.x.col_dot(j, black_box(&o));
+            pool::scoped_fill_with_workers(&mut fill, workers, dot);
+        }
+        black_box(&fill);
+    });
+    let r_fill_pool = bench("persistent", &cfg, || {
+        for _ in 0..sweep_reps {
+            let dot = |j: usize| ds.x.col_dot(j, black_box(&o));
+            pool::parallel_fill_with_workers(&mut fill, workers, dot);
+        }
+        black_box(&fill);
+    });
+    for r in [&r_fill_serial, &r_fill_scoped, &r_fill_pool] {
+        println!(
+            "  {:14} {:8.3} ms / sweep",
+            r.label,
+            r.seconds.median * 1e3 / sweep_reps as f64
+        );
+    }
+
+    // Whole-path before/after of the spectral cache: default mode reuses
+    // the full-matrix Lipschitz data across every λ (zero power iterations
+    // in the loop); exact mode re-estimates per survivor view (the old
+    // behaviour). Written to BENCH_solver_path.json for the CI schema check.
+    println!("\n== solver path: cached vs exact per-view Lipschitz ==");
+    let path_n_lambda = args.n_lambda().min(16);
+    let cached_cfg = PathConfig {
+        alpha: 1.0,
+        n_lambda: path_n_lambda,
+        lambda_min_ratio: 0.05,
+        tol: 1e-5,
+        ..Default::default()
+    };
+    let exact_cfg = PathConfig { exact_view_lipschitz: true, ..cached_cfg.clone() };
+    // Warmed multi-run medians: the first path run also pays the lazy pool
+    // spawn and cold page faults, which must not bias the published
+    // before/after ratio.
+    let pcfg = BenchConfig { warmup: 1, runs: 3, max_seconds: 300.0 };
+    let mut cached_path = None;
+    let r_cached = bench("cached", &pcfg, || {
+        cached_path = Some(run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cached_cfg));
+    });
+    let mut exact_path = None;
+    let r_exact = bench("exact", &pcfg, || {
+        exact_path = Some(run_tlfre_path(&ds.x, &ds.y, &ds.groups, &exact_cfg));
+    });
+    let cached_path = cached_path.expect("cached path ran");
+    let exact_path = exact_path.expect("exact path ran");
+    for (r, out) in [(&r_cached, &cached_path), (&r_exact, &exact_path)] {
+        println!(
+            "  {:8} wall {:8.2} ms   screen {:8.2} ms   solve {:8.2} ms   rejection {:.3}",
+            r.label,
+            r.seconds.median * 1e3,
+            out.screen_total_s * 1e3,
+            out.solve_total_s * 1e3,
+            out.mean_total_rejection(),
+        );
+    }
+
+    let path_json = |out: &tlfre::coordinator::PathOutput, wall_s: f64| {
+        Json::obj()
+            .set("wall_s", wall_s)
+            .set("screen_s", out.screen_total_s)
+            .set("solve_s", out.solve_total_s)
+            .set("total_s", out.total_s())
+            .set("mean_rejection", out.mean_total_rejection())
+    };
+    let report = Json::obj()
+        .set("bench", "perf_kernels/solver_path")
+        .set("n", n)
+        .set("p", p)
+        .set("n_groups", g)
+        .set("n_lambda", path_n_lambda)
+        .set("threads", pool::num_threads())
+        .set(
+            "pool",
+            Json::obj()
+                .set("fill_len", p)
+                .set("workers", workers)
+                .set("pool_enabled", workers > 1)
+                .set("serial_ms_per_sweep", r_fill_serial.seconds.median * 1e3 / sweep_reps as f64)
+                .set("scoped_ms_per_sweep", r_fill_scoped.seconds.median * 1e3 / sweep_reps as f64)
+                .set(
+                    "persistent_ms_per_sweep",
+                    r_fill_pool.seconds.median * 1e3 / sweep_reps as f64,
+                )
+                .set(
+                    "persistent_speedup_vs_scoped",
+                    r_fill_scoped.seconds.median / r_fill_pool.seconds.median.max(1e-12),
+                ),
+        )
+        .set(
+            "path",
+            Json::obj()
+                .set("cached", path_json(&cached_path, r_cached.seconds.median))
+                .set("exact", path_json(&exact_path, r_exact.seconds.median))
+                .set(
+                    "exact_over_cached_solve",
+                    exact_path.solve_total_s / cached_path.solve_total_s.max(1e-12),
+                ),
+        );
+    // Workspace root for the same reason as BENCH_backends.json above.
+    let path_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_solver_path.json");
+    match std::fs::write(path_out, report.to_string_pretty()) {
+        Ok(()) => println!("  solver-path results written to {path_out}"),
+        Err(e) => eprintln!("  warning: could not write {path_out}: {e}"),
+    }
 }

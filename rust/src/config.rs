@@ -136,6 +136,7 @@ impl Config {
             verify_safety: false,
             materialize_reduced: false,
             gap_inflation: 0.0,
+            exact_view_lipschitz: false,
         }
     }
 }

@@ -141,7 +141,7 @@ pub fn path_coefficients<M: DesignMatrix>(
     use crate::coordinator::reduce::ReducedProblem;
     use crate::screening::lambda_max::sgl_lambda_max;
     use crate::screening::tlfre::{tlfre_screen_inexact, TlfreContext};
-    use crate::sgl::fista::{solve_fista, FistaOptions};
+    use crate::sgl::fista::{lipschitz, solve_fista, FistaOptions};
     use crate::sgl::problem::{SglParams, SglProblem};
 
     let prob = SglProblem::new(x, y, groups);
@@ -149,7 +149,16 @@ pub fn path_coefficients<M: DesignMatrix>(
     let lmax = sgl_lambda_max(&prob, cfg.alpha);
     let ctx = TlfreContext::precompute(&prob);
     let grid = log_lambda_grid(lmax.lambda_max, cfg.lambda_min_ratio, cfg.n_lambda);
-    let opts = FistaOptions { tol: cfg.tol, max_iter: cfg.max_iter, ..Default::default() };
+    // Same path-level Lipschitz cache as `run_tlfre_path` — the two walks
+    // must stay in numerical lockstep (the integration tests compare their
+    // per-step sparsity exactly).
+    let path_lip = if cfg.exact_view_lipschitz { None } else { Some(lipschitz(&prob)) };
+    let opts = FistaOptions {
+        tol: cfg.tol,
+        max_iter: cfg.max_iter,
+        lipschitz: path_lip,
+        ..Default::default()
+    };
 
     let mut betas = Vec::with_capacity(grid.len());
     let mut beta = vec![0.0f32; p];

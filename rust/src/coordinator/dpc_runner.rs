@@ -2,10 +2,9 @@
 
 use super::path::log_lambda_grid;
 use crate::linalg::ops;
-use crate::linalg::power::spectral_norm;
 use crate::linalg::{DesignMatrix, ScreenedView};
 use crate::nonneg::{lambda_max, solve_nonneg, NonnegOptions, NonnegProblem};
-use crate::util::{Rng, Timer};
+use crate::util::Timer;
 
 /// Configuration for a DPC path run.
 #[derive(Debug, Clone)]
@@ -80,6 +79,11 @@ pub fn run_dpc_path<M: DesignMatrix>(x: &M, y: &[f32], cfg: &DpcPathConfig) -> D
     let t = Timer::start();
     let col_norms = x.col_norms();
     let (lmax, argmax_col) = lambda_max(&prob);
+    // Path-level Lipschitz cache (counted as screening time): `‖X‖₂²` is a
+    // valid step bound for every survivor view (`σmax(X[:,S]) ≤ σmax(X)`),
+    // so no reduced solve re-runs power iteration. `nonneg_lipschitz` is
+    // the solver's own recipe — exact for the full problem.
+    let path_lip = crate::nonneg::nonneg_lipschitz(x);
     screen_total += t.elapsed_s();
 
     let grid = log_lambda_grid(lmax, cfg.lambda_min_ratio, cfg.n_lambda);
@@ -104,10 +108,7 @@ pub fn run_dpc_path<M: DesignMatrix>(x: &M, y: &[f32], cfg: &DpcPathConfig) -> D
         // Feasibility-scaled dual point + gap-based radius inflation (see
         // the SGL runner for the rationale).
         let ts = Timer::start();
-        x.matvec(&beta, &mut resid);
-        for i in 0..n {
-            resid[i] = y[i] - resid[i];
-        }
+        x.residual(&beta, y, &mut resid);
         x.matvec_t(&resid, &mut corr);
         let (gap_raw, s_feas) =
             crate::nonneg::duality_gap(&prob, lambda_bar, &beta, &resid, &corr);
@@ -134,7 +135,12 @@ pub fn run_dpc_path<M: DesignMatrix>(x: &M, y: &[f32], cfg: &DpcPathConfig) -> D
                 &rp,
                 lambda,
                 Some(&warm),
-                &NonnegOptions { tol: cfg.tol, max_iter: cfg.max_iter, ..Default::default() },
+                &NonnegOptions {
+                    tol: cfg.tol,
+                    max_iter: cfg.max_iter,
+                    lipschitz: Some(path_lip),
+                    ..Default::default()
+                },
             );
             beta.fill(0.0);
             for (k, &j) in active.iter().enumerate() {
@@ -146,11 +152,17 @@ pub fn run_dpc_path<M: DesignMatrix>(x: &M, y: &[f32], cfg: &DpcPathConfig) -> D
         solve_total += solve_s;
 
         if cfg.verify_safety {
+            // Exact cached constant for the full problem.
             let full = solve_nonneg(
                 &prob,
                 lambda,
                 None,
-                &NonnegOptions { tol: cfg.tol, max_iter: cfg.max_iter, ..Default::default() },
+                &NonnegOptions {
+                    tol: cfg.tol,
+                    max_iter: cfg.max_iter,
+                    lipschitz: Some(path_lip),
+                    ..Default::default()
+                },
             );
             for j in 0..p {
                 if !out.feature_kept[j] {
@@ -186,10 +198,8 @@ pub fn run_nonneg_baseline<M: DesignMatrix>(x: &M, y: &[f32], cfg: &DpcPathConfi
     let (lmax, _) = lambda_max(&prob);
     let grid = log_lambda_grid(lmax, cfg.lambda_min_ratio, cfg.n_lambda);
 
-    // 2% inflation: power iteration approaches σmax from below.
-    let mut rng = Rng::seed_from_u64(0xD9C);
-    let sig = spectral_norm(x, 1e-6, 500, &mut rng).sigma * 1.02;
-    let lip = (sig * sig).max(f64::MIN_POSITIVE);
+    // The solver's canonical step-bound recipe (2% from-below inflation).
+    let lip = crate::nonneg::nonneg_lipschitz(x);
 
     let mut steps = Vec::with_capacity(grid.len());
     steps.push(DpcStep {

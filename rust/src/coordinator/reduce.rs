@@ -20,6 +20,11 @@ pub struct ReducedProblem<'a, M: DesignMatrix> {
     /// Group structure over surviving features (groups that lost all
     /// features to (L₂) are dropped entirely).
     pub groups: GroupStructure,
+    /// For each reduced group, its index in the original group structure.
+    /// Lets the runner project per-group quantities cached on the full
+    /// matrix (e.g. the BCD Lipschitz constants `‖X_g‖₂²`) onto the
+    /// reduced problem without recomputation.
+    pub group_map: Vec<usize>,
 }
 
 impl<'a, M: DesignMatrix> ReducedProblem<'a, M> {
@@ -39,6 +44,7 @@ impl<'a, M: DesignMatrix> ReducedProblem<'a, M> {
         let mut sizes = Vec::new();
         let mut weights = Vec::new();
         let mut feature_map = Vec::new();
+        let mut group_map = Vec::new();
         for (g, s, e) in groups.iter() {
             if !out.group_kept[g] {
                 continue;
@@ -53,6 +59,7 @@ impl<'a, M: DesignMatrix> ReducedProblem<'a, M> {
             if kept > 0 {
                 sizes.push(kept);
                 weights.push(groups.weight(g));
+                group_map.push(g);
             }
         }
         if feature_map.is_empty() {
@@ -61,6 +68,7 @@ impl<'a, M: DesignMatrix> ReducedProblem<'a, M> {
         Some(ReducedProblem {
             x: ScreenedView::new(x, feature_map),
             groups: GroupStructure::from_sizes_weighted(&sizes, &weights),
+            group_map,
         })
     }
 
@@ -117,6 +125,7 @@ mod tests {
         );
         let red = ReducedProblem::build(&x, &groups, &out).unwrap();
         assert_eq!(red.feature_map(), &[0, 1, 4]);
+        assert_eq!(red.group_map, vec![0, 2]);
         assert_eq!(red.groups.n_groups(), 2);
         assert_eq!(red.groups.size(0), 2);
         assert_eq!(red.groups.size(1), 1);
@@ -141,6 +150,7 @@ mod tests {
         let red = ReducedProblem::build(&x, &groups, &out).unwrap();
         assert_eq!(red.groups.n_groups(), 1);
         assert_eq!(red.feature_map(), &[2, 3]);
+        assert_eq!(red.group_map, vec![1], "emptied group must not appear in group_map");
     }
 
     #[test]

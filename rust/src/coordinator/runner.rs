@@ -19,7 +19,7 @@ use crate::linalg::ops;
 use crate::linalg::DesignMatrix;
 use crate::screening::lambda_max::sgl_lambda_max;
 use crate::screening::tlfre::TlfreContext;
-use crate::sgl::bcd::{solve_bcd, BcdOptions};
+use crate::sgl::bcd::{bcd_group_lipschitz, solve_bcd, BcdOptions};
 use crate::sgl::fista::{lipschitz, solve_fista, FistaOptions};
 use crate::sgl::problem::{SglParams, SglProblem};
 use crate::util::Timer;
@@ -63,6 +63,16 @@ pub struct PathConfig {
     /// (catastrophic cancellation in P−D at ~1e-4·‖y‖² relative), so
     /// inflation ≥ 1 visibly weakens screening at small λ.
     pub gap_inflation: f64,
+    /// Recompute the reduced problem's Lipschitz data exactly per λ (power
+    /// iteration on each survivor view) instead of reusing the full-matrix
+    /// constants cached once per path. A screened problem's columns are a
+    /// subset of `X`, so `σmax(X[:,S]) ≤ σmax(X)` and (per group)
+    /// `σmax(X_g[:,S]) ≤ σmax(X_g)` — the cached values are always valid
+    /// step bounds. The default (`false`) therefore performs **zero** power
+    /// iterations inside the per-λ loop; this flag is the A/B switch for
+    /// the exact-per-view behaviour (tighter steps, ≤500 matvec pairs of
+    /// setup per λ). See `tests/lipschitz_cache.rs` for the equivalence.
+    pub exact_view_lipschitz: bool,
 }
 
 impl Default for PathConfig {
@@ -77,6 +87,7 @@ impl Default for PathConfig {
             verify_safety: false,
             materialize_reduced: false,
             gap_inflation: 0.0,
+            exact_view_lipschitz: false,
         }
     }
 }
@@ -115,23 +126,25 @@ pub struct PathOutput {
 
 impl PathOutput {
     /// Mean of r₁+r₂ across steps that have any zero coefficient.
+    /// Allocation-free fold — this sits on the bench reporting path.
     pub fn mean_total_rejection(&self) -> f64 {
-        let xs: Vec<f64> =
-            self.steps.iter().filter(|s| s.zeros > 0).map(|s| s.r1 + s.r2).collect();
-        if xs.is_empty() {
-            0.0
-        } else {
-            xs.iter().sum::<f64>() / xs.len() as f64
-        }
+        Self::mean_over_sparse_steps(&self.steps, |s| s.r1 + s.r2)
     }
 
     /// Mean r₁ (group-layer share).
     pub fn mean_r1(&self) -> f64 {
-        let xs: Vec<f64> = self.steps.iter().filter(|s| s.zeros > 0).map(|s| s.r1).collect();
-        if xs.is_empty() {
+        Self::mean_over_sparse_steps(&self.steps, |s| s.r1)
+    }
+
+    fn mean_over_sparse_steps(steps: &[PathStep], f: impl Fn(&PathStep) -> f64) -> f64 {
+        let (sum, count) = steps
+            .iter()
+            .filter(|s| s.zeros > 0)
+            .fold((0.0f64, 0usize), |(a, c), s| (a + f(s), c + 1));
+        if count == 0 {
             0.0
         } else {
-            xs.iter().sum::<f64>() / xs.len() as f64
+            sum / count as f64
         }
     }
 
@@ -146,6 +159,7 @@ fn solve<M: DesignMatrix>(
     warm: Option<&[f32]>,
     cfg: &PathConfig,
     lip: Option<f64>,
+    group_lip: Option<&[f64]>,
 ) -> crate::sgl::fista::SolveResult {
     match cfg.solver {
         SolverKind::Fista => solve_fista(
@@ -163,8 +177,51 @@ fn solve<M: DesignMatrix>(
             prob,
             params,
             warm,
-            &BcdOptions { tol: cfg.tol, max_sweeps: cfg.max_iter, ..Default::default() },
+            &BcdOptions {
+                tol: cfg.tol,
+                max_sweeps: cfg.max_iter,
+                group_lipschitz: group_lip,
+                ..Default::default()
+            },
         ),
+    }
+}
+
+/// The path-level spectral cache: Lipschitz data computed **once** per path
+/// from the full matrix and reused (as valid upper bounds) for every
+/// screened subproblem — by default no power iteration runs inside the
+/// per-λ loop. Its construction cost is counted as screening time, exactly
+/// like the paper's one-off `‖X_g‖₂` power-method accounting.
+struct SpectralCache {
+    /// `‖X‖₂²·1.02²` — the FISTA step bound (see [`lipschitz`]).
+    lip: Option<f64>,
+    /// Per-group `‖X_g‖₂²` in original group order — the BCD step bounds.
+    group_l: Option<Vec<f64>>,
+}
+
+impl SpectralCache {
+    /// Build for a TLFre path run. Each solver only pays for the constants
+    /// it uses: FISTA the full-matrix `‖X‖₂²` ([`lipschitz`]'s recipe), BCD
+    /// the per-group `‖X_g‖₂²` via [`bcd_group_lipschitz`] — the solver's
+    /// own recipe, so the cached constants are identical to what
+    /// `solve_bcd` would self-compute for the full problem (and what
+    /// `run_baseline_path` supplies).
+    fn for_path<M: DesignMatrix>(prob: &SglProblem<'_, M>, cfg: &PathConfig) -> SpectralCache {
+        if cfg.exact_view_lipschitz {
+            return SpectralCache { lip: None, group_l: None };
+        }
+        match cfg.solver {
+            SolverKind::Fista => SpectralCache { lip: Some(lipschitz(prob)), group_l: None },
+            SolverKind::Bcd => SpectralCache {
+                lip: None,
+                group_l: Some(bcd_group_lipschitz(prob.x, &prob.groups.ranges())),
+            },
+        }
+    }
+
+    /// Project the per-group constants onto a reduced problem's groups.
+    fn reduced_group_l<M: DesignMatrix>(&self, red: &ReducedProblem<'_, M>) -> Option<Vec<f64>> {
+        self.group_l.as_ref().map(|gl| red.group_map.iter().map(|&g| gl[g]).collect())
     }
 }
 
@@ -180,11 +237,14 @@ pub fn run_tlfre_path<M: DesignMatrix>(
     let n = prob.n_samples();
 
     // Screening-side precomputation (counted as screening time, like the
-    // paper's ‖X_g‖₂ power-method accounting).
+    // paper's ‖X_g‖₂ power-method accounting). The spectral cache lives
+    // here too: after this block the per-λ loop runs zero power iterations
+    // unless `cfg.exact_view_lipschitz` opts back into per-view estimates.
     let mut screen_total = 0.0f64;
     let t = Timer::start();
     let ctx = TlfreContext::precompute(&prob);
     let lmax = sgl_lambda_max(&prob, cfg.alpha);
+    let spectral = SpectralCache::for_path(&prob, cfg);
     screen_total += t.elapsed_s();
 
     let grid = log_lambda_grid(lmax.lambda_max, cfg.lambda_min_ratio, cfg.n_lambda);
@@ -241,15 +301,20 @@ pub fn run_tlfre_path<M: DesignMatrix>(
             }
             Some(red) => {
                 let warm = red.gather(&beta);
+                // Cached full-matrix Lipschitz data: σmax over a column
+                // subset never exceeds σmax over the full matrix, so the
+                // path-level constants are valid steps for every reduced
+                // problem — no per-λ power iteration.
+                let gl = spectral.reduced_group_l(red);
                 let res = if cfg.materialize_reduced {
                     // Seed behaviour: physical column gather per λ.
                     let xd = red.materialize();
                     let rp = SglProblem::new(&xd, y, &red.groups);
-                    solve(&rp, &params, Some(&warm), cfg, None)
+                    solve(&rp, &params, Some(&warm), cfg, spectral.lip, gl.as_deref())
                 } else {
                     // Zero-copy: the solver runs on the survivor view.
                     let rp = SglProblem::new(&red.x, y, &red.groups);
-                    solve(&rp, &params, Some(&warm), cfg, None)
+                    solve(&rp, &params, Some(&warm), cfg, spectral.lip, gl.as_deref())
                 };
                 red.scatter(&res.beta, &mut beta);
                 (red.n_features(), res.iters, res.gap)
@@ -260,7 +325,8 @@ pub fn run_tlfre_path<M: DesignMatrix>(
 
         if cfg.verify_safety {
             // Independent full solve; every screened coordinate must be 0.
-            let full = solve(&prob, &params, None, cfg, None);
+            // The cached constants are exact for the full problem.
+            let full = solve(&prob, &params, None, cfg, spectral.lip, spectral.group_l.as_deref());
             for j in 0..p {
                 if !outcome.feature_kept[j] {
                     assert!(
@@ -305,9 +371,18 @@ pub fn run_baseline_path<M: DesignMatrix>(
     let lmax = sgl_lambda_max(&prob, cfg.alpha);
     let grid = log_lambda_grid(lmax.lambda_max, cfg.lambda_min_ratio, cfg.n_lambda);
 
-    // One Lipschitz constant reused across the path (the full matrix never
-    // changes — big saving the reduced path can't reuse).
-    let lip = lipschitz(&prob);
+    // One set of Lipschitz constants reused across the path — the full
+    // matrix never changes. Each solver pays only for its own: the
+    // recipes match the solvers' self-computing fallbacks exactly, so the
+    // baseline's steps are identical to the seed behaviour.
+    let lip: Option<f64> = match cfg.solver {
+        SolverKind::Fista => Some(lipschitz(&prob)),
+        SolverKind::Bcd => None,
+    };
+    let group_l: Option<Vec<f64>> = match cfg.solver {
+        SolverKind::Bcd => Some(bcd_group_lipschitz(x, &groups.ranges())),
+        SolverKind::Fista => None,
+    };
 
     let mut steps = Vec::with_capacity(grid.len());
     steps.push(PathStep {
@@ -328,7 +403,7 @@ pub fn run_baseline_path<M: DesignMatrix>(
     for &lambda in &grid[1..] {
         let params = SglParams::from_alpha_lambda(cfg.alpha, lambda);
         let ts = Timer::start();
-        let res = solve(&prob, &params, Some(&beta), cfg, Some(lip));
+        let res = solve(&prob, &params, Some(&beta), cfg, lip, group_l.as_deref());
         let solve_s = ts.elapsed_s();
         solve_total += solve_s;
         beta = res.beta;

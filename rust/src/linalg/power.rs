@@ -10,6 +10,26 @@ use super::ops;
 use super::traits::DesignMatrix;
 use crate::util::Rng;
 
+thread_local! {
+    /// Per-thread count of power-iteration invocations (see
+    /// [`spectral_call_count`]).
+    static SPECTRAL_CALLS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of power-iteration invocations ([`spectral_norm_block`] entries)
+/// made **by the calling thread** since process start. Thread-local so
+/// concurrently running tests don't perturb each other's deltas.
+///
+/// This is the observability hook behind the path-level spectral-caching
+/// guarantee: `run_tlfre_path`'s per-λ loop performs *zero* power
+/// iterations by default, so the delta across a path run is independent of
+/// the λ-grid length (asserted in `tests/lipschitz_cache.rs`). The exact
+/// single-column shortcut in [`group_spectral_norms`] is not counted — it
+/// is a plain column norm, not an iteration.
+pub fn spectral_call_count() -> u64 {
+    SPECTRAL_CALLS.get()
+}
+
 /// Result of a spectral-norm estimation.
 #[derive(Debug, Clone, Copy)]
 pub struct SpectralNorm {
@@ -37,6 +57,7 @@ pub fn spectral_norm_block<M: DesignMatrix>(
     let n = x.rows();
     let m = col_end - col_start;
     assert!(m > 0, "empty column block");
+    SPECTRAL_CALLS.set(SPECTRAL_CALLS.get() + 1);
     // v ∈ R^m (feature space), u ∈ R^n (sample space)
     let mut v: Vec<f32> = (0..m).map(|_| rng.gaussian() as f32).collect();
     let nv = ops::nrm2(&v).max(f64::MIN_POSITIVE) as f32;

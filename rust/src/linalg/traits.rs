@@ -21,10 +21,13 @@ use crate::groups::GroupStructure;
 use crate::util::pool;
 
 /// Minimum `rows·cols` product before the default [`DesignMatrix::matvec_t`]
-/// fans out over threads. Below this, a serial sweep wins (thread spawn is
-/// tens of microseconds; a 256k-op sweep is ~0.1 ms). The parallel and
-/// serial sweeps are bitwise identical, so the threshold never affects
-/// results — only wall-clock. `TLFRE_THREADS=1` forces serial regardless.
+/// fans out over threads. Below this, a serial sweep wins: even with the
+/// persistent pool (no per-call thread spawn) a dispatch still costs a
+/// channel send plus a wake/latch round-trip per worker — microseconds,
+/// which would dominate a sub-0.1 ms sweep on a small reduced problem.
+/// The parallel and serial sweeps are bitwise identical, so the threshold
+/// never affects results — only wall-clock. `TLFRE_THREADS=1` forces
+/// serial regardless.
 pub const PAR_MIN_WORK: usize = 1 << 18;
 
 /// Column-oriented design-matrix backend.
@@ -92,6 +95,45 @@ pub trait DesignMatrix: Sync {
             }
         } else {
             pool::parallel_fill(out, |j| self.col_dot(j, v));
+        }
+    }
+
+    /// `out = Xβ − y` in one fused pass — the FISTA gradient residual.
+    ///
+    /// `out` is initialized to `−y` and the nonzero columns of β are
+    /// accumulated on top, which removes the separate full-`N` subtraction
+    /// sweep the solvers used to pay on every iteration after `matvec`.
+    /// (Accumulation starts from `−y` instead of `0`, so the result can
+    /// differ from `matvec`-then-subtract in the last bit of rounding —
+    /// both orderings are valid f32 evaluations of the same sum.)
+    fn residual_matvec(&self, beta: &[f32], y: &[f32], out: &mut [f32]) {
+        assert_eq!(beta.len(), self.cols());
+        assert_eq!(y.len(), self.rows());
+        assert_eq!(out.len(), self.rows());
+        for (o, &yi) in out.iter_mut().zip(y) {
+            *o = -yi;
+        }
+        for (j, &bj) in beta.iter().enumerate() {
+            if bj != 0.0 {
+                self.col_axpy(j, bj, out);
+            }
+        }
+    }
+
+    /// `out = y − Xβ` in one fused pass — the reporting/screening residual,
+    /// the mirror image of [`Self::residual_matvec`]: `out` starts from `y`
+    /// and each nonzero column's contribution is subtracted via
+    /// [`Self::col_axpy`]. Single source of truth for every `y − Xβ` in the
+    /// solvers and path runners.
+    fn residual(&self, beta: &[f32], y: &[f32], out: &mut [f32]) {
+        assert_eq!(beta.len(), self.cols());
+        assert_eq!(y.len(), self.rows());
+        assert_eq!(out.len(), self.rows());
+        out.copy_from_slice(y);
+        for (j, &bj) in beta.iter().enumerate() {
+            if bj != 0.0 {
+                self.col_axpy(j, -bj, out);
+            }
         }
     }
 

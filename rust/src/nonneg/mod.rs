@@ -78,6 +78,17 @@ pub fn objective<M: DesignMatrix>(_prob: &NonnegProblem<'_, M>, lambda: f64, bet
     0.5 * ops::nrm2_sq(r) + lambda * ops::nrm1(beta)
 }
 
+/// The solver's step bound `L = (1.02·σmax(X))²` — 2% inflation because
+/// power iteration approaches σmax from below. The single source of truth
+/// for the seed/tolerance recipe, shared by [`solve_nonneg`]'s fallback and
+/// the DPC path runners' once-per-path caches (which rely on producing the
+/// *same* constant the solver would compute for the full problem).
+pub fn nonneg_lipschitz<M: DesignMatrix>(x: &M) -> f64 {
+    let mut rng = Rng::seed_from_u64(0x22_57FA);
+    let s = spectral_norm(x, 1e-6, 500, &mut rng).sigma * 1.02;
+    (s * s).max(f64::MIN_POSITIVE)
+}
+
 /// λmax = max_i ⟨x_i, y⟩ (Theorem 20) and its argmax column.
 pub fn lambda_max<M: DesignMatrix>(prob: &NonnegProblem<'_, M>) -> (f64, usize) {
     let mut best = f64::NEG_INFINITY;
@@ -130,12 +141,7 @@ pub fn solve_nonneg<M: DesignMatrix>(
 ) -> NonnegResult {
     let n = prob.x.rows();
     let p = prob.x.cols();
-    let l = opts.lipschitz.unwrap_or_else(|| {
-        // 2% inflation: power iteration approaches σmax from below.
-        let mut rng = Rng::seed_from_u64(0x22_57FA);
-        let s = spectral_norm(prob.x, 1e-6, 500, &mut rng).sigma * 1.02;
-        (s * s).max(f64::MIN_POSITIVE)
-    });
+    let l = opts.lipschitz.unwrap_or_else(|| nonneg_lipschitz(prob.x));
     let step = 1.0 / l;
     let scale_ref = (0.5 * ops::nrm2_sq(prob.y)).max(1e-10);
 
@@ -154,13 +160,15 @@ pub fn solve_nonneg<M: DesignMatrix>(
     let mut converged = false;
     let mut iters = 0;
     let mut last_obj = f64::INFINITY;
+    // Objective from a gap check at the current β, reused on exit (see
+    // `sgl::fista::solve_fista` — same skip of the duplicated recompute).
+    let mut checked_obj: Option<f64> = None;
 
     for k in 0..opts.max_iter {
         iters = k + 1;
-        prob.x.matvec(&z, &mut xz);
-        for i in 0..n {
-            xz[i] -= prob.y[i];
-        }
+        checked_obj = None;
+        // ∇ = Xᵀ(Xz − y), residual fused into the matvec.
+        prob.x.residual_matvec(&z, prob.y, &mut xz);
         prob.x.matvec_t(&xz, &mut grad);
         ops::add_scaled(&z, -(step as f32), &grad, &mut w);
         std::mem::swap(&mut beta, &mut beta_prev);
@@ -174,10 +182,7 @@ pub fn solve_nonneg<M: DesignMatrix>(
         t_k = t_next;
 
         if (k + 1) % opts.check_every == 0 || k + 1 == opts.max_iter {
-            prob.x.matvec(&beta, &mut r);
-            for i in 0..n {
-                r[i] = prob.y[i] - r[i];
-            }
+            prob.x.residual(&beta, prob.y, &mut r);
             prob.x.matvec_t(&r, &mut c);
             let obj = objective(prob, lambda, &beta, &r);
             if obj > last_obj {
@@ -185,6 +190,7 @@ pub fn solve_nonneg<M: DesignMatrix>(
                 z.copy_from_slice(&beta);
             }
             last_obj = obj;
+            checked_obj = Some(obj);
             let (g, _) = duality_gap(prob, lambda, &beta, &r, &c);
             gap = g;
             if gap <= opts.tol * scale_ref {
@@ -194,11 +200,15 @@ pub fn solve_nonneg<M: DesignMatrix>(
         }
     }
 
-    prob.x.matvec(&beta, &mut r);
-    for i in 0..n {
-        r[i] = prob.y[i] - r[i];
-    }
-    let objective = objective(prob, lambda, &beta, &r);
+    // Both loop exits (converged break, forced check at max_iter) leave
+    // `checked_obj` fresh at the final β; only max_iter == 0 recomputes.
+    let objective = match checked_obj {
+        Some(o) => o,
+        None => {
+            prob.x.residual(&beta, prob.y, &mut r);
+            objective(prob, lambda, &beta, &r)
+        }
+    };
     NonnegResult { beta, iters, gap, objective, converged }
 }
 

@@ -20,7 +20,7 @@ use crate::util::Rng;
 
 /// Options for the BCD solver.
 #[derive(Debug, Clone)]
-pub struct BcdOptions {
+pub struct BcdOptions<'a> {
     /// Max full sweeps over all groups.
     pub max_sweeps: usize,
     /// Relative duality-gap tolerance (same semantics as FISTA's).
@@ -29,12 +29,39 @@ pub struct BcdOptions {
     pub inner_steps: usize,
     /// Gap-check cadence in sweeps.
     pub check_every: usize,
+    /// Pre-computed per-group Lipschitz constants `L_g = ‖X_g‖₂²` (one per
+    /// group, in group order). When `None` (the default, and the behaviour
+    /// of standalone calls) they are computed by power iteration per call.
+    /// The path runners supply the full-matrix values cached once per path:
+    /// for a screened subproblem `σmax(X_g[:,S]) ≤ σmax(X_g)`, so the
+    /// cached constants are valid (conservative) upper bounds.
+    pub group_lipschitz: Option<&'a [f64]>,
 }
 
-impl Default for BcdOptions {
+impl Default for BcdOptions<'_> {
     fn default() -> Self {
-        BcdOptions { max_sweeps: 2000, tol: 1e-6, inner_steps: 4, check_every: 5 }
+        BcdOptions {
+            max_sweeps: 2000,
+            tol: 1e-6,
+            inner_steps: 4,
+            check_every: 5,
+            group_lipschitz: None,
+        }
     }
+}
+
+/// Per-group Lipschitz constants `L_g = ‖X_g‖₂²` with the solver's
+/// canonical power-iteration recipe (seed `0xBCD`, tol `1e-6`, ≤500
+/// iterations). The single source of truth shared by [`solve_bcd`]'s
+/// self-computing fallback and the path runners' once-per-path caches —
+/// keeping both sites on one recipe guarantees the cached constants match
+/// what the solver would compute for the full problem.
+pub fn bcd_group_lipschitz<M: DesignMatrix>(x: &M, ranges: &[(usize, usize)]) -> Vec<f64> {
+    let mut rng = Rng::seed_from_u64(0xBCD);
+    group_spectral_norms(x, ranges, 1e-6, 500, &mut rng)
+        .into_iter()
+        .map(|s| (s * s).max(f64::MIN_POSITIVE))
+        .collect()
 }
 
 /// Solve SGL by cyclic block coordinate descent.
@@ -42,19 +69,33 @@ pub fn solve_bcd<M: DesignMatrix>(
     prob: &SglProblem<'_, M>,
     params: &SglParams,
     warm_start: Option<&[f32]>,
-    opts: &BcdOptions,
+    opts: &BcdOptions<'_>,
 ) -> super::fista::SolveResult {
     let n = prob.n_samples();
     let p = prob.n_features();
     let scale_ref = null_objective(prob.y).max(1e-10);
 
-    // Group-local Lipschitz constants ‖X_g‖₂².
-    let mut rng = Rng::seed_from_u64(0xBCD);
+    // Group-local Lipschitz constants ‖X_g‖₂² — taken from the caller's
+    // path-level cache when provided, otherwise computed here (one power
+    // iteration per group, per call).
     let ranges = prob.groups.ranges();
-    let group_l: Vec<f64> = group_spectral_norms(prob.x, &ranges, 1e-6, 500, &mut rng)
-        .into_iter()
-        .map(|s| (s * s).max(f64::MIN_POSITIVE))
-        .collect();
+    let computed_l: Vec<f64>;
+    let group_l: &[f64] = match opts.group_lipschitz {
+        Some(gl) => {
+            assert_eq!(
+                gl.len(),
+                ranges.len(),
+                "group_lipschitz has {} entries for {} groups",
+                gl.len(),
+                ranges.len()
+            );
+            gl
+        }
+        None => {
+            computed_l = bcd_group_lipschitz(prob.x, &ranges);
+            &computed_l
+        }
+    };
 
     let mut beta: Vec<f32> = match warm_start {
         Some(b) => b.to_vec(),
@@ -67,6 +108,10 @@ pub fn solve_bcd<M: DesignMatrix>(
     let mut cg = vec![0.0f32; max_group];
     let mut wg = vec![0.0f32; max_group];
     let mut bg_new = vec![0.0f32; max_group];
+    // Work buffers hoisted out of the sweep loop — the hot solve is
+    // allocation-free after this point.
+    let mut xb = vec![0.0f32; n];
+    let mut c = vec![0.0f32; p];
 
     let mut gap = f64::INFINITY;
     let mut converged = false;
@@ -104,7 +149,7 @@ pub fn solve_bcd<M: DesignMatrix>(
                 // Compute X_g β_g then dot per column (m is small).
                 // u = β_g − step * grad
                 // Using: grad_k = dot(x_k, X_g β_g) − c_k.
-                let mut xb = vec![0.0f32; n];
+                xb.fill(0.0);
                 for (k, &bj) in bg.iter().enumerate() {
                     if bj != 0.0 {
                         prob.x.col_axpy(s_idx + k, bj, &mut xb);
@@ -131,7 +176,6 @@ pub fn solve_bcd<M: DesignMatrix>(
         }
 
         if (sweep + 1) % opts.check_every == 0 || sweep + 1 == opts.max_sweeps {
-            let mut c = vec![0.0f32; p];
             prob.x.matvec_t(&r, &mut c);
             let (g, _) = duality_gap(prob, params, &beta, &r, &c);
             gap = g;

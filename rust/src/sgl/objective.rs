@@ -22,12 +22,10 @@ impl Objective {
     }
 }
 
-/// Compute the residual `r = y − Xβ` into `r_out`.
+/// Compute the residual `r = y − Xβ` into `r_out` (fused single pass via
+/// [`DesignMatrix::residual`] — no separate subtraction sweep).
 pub fn residual<M: DesignMatrix>(prob: &SglProblem<'_, M>, beta: &[f32], r_out: &mut [f32]) {
-    prob.x.matvec(beta, r_out);
-    for i in 0..r_out.len() {
-        r_out[i] = prob.y[i] - r_out[i];
-    }
+    prob.x.residual(beta, prob.y, r_out);
 }
 
 /// Penalty value `λ₁ Σ √n_g‖β_g‖ + λ₂‖β‖₁` of a coefficient vector.

@@ -12,7 +12,8 @@
 //! * [`harness`] — a micro-benchmark harness (warmup + repeated timing)
 //!   standing in for criterion; used by every `rust/benches/*` binary.
 //! * [`logger`] — a tiny `log`-facade backend with env-based filtering.
-//! * [`pool`] — scoped-thread parallel-for (sized to available cores).
+//! * [`pool`] — persistent parked-worker pool for chunked parallel-for
+//!   (sized to available cores, spawn-free after first use).
 
 pub mod harness;
 pub mod json;

@@ -1,12 +1,55 @@
-//! Scoped-thread parallelism.
+//! Spawn-free parallelism: a persistent, parked worker pool.
 //!
 //! `rayon` is unavailable offline; this provides chunked parallel primitives
-//! built on `std::thread::scope`. On a single-core box every entry point
-//! degrades to a serial loop with zero thread overhead; on multi-core boxes
-//! the linalg backends use [`parallel_fill`] to scale the dominant `Xᵀv`
-//! sweep and the coordinator uses [`parallel_map`] for independent α-paths.
+//! built on a **process-lifetime worker pool** instead of the former
+//! per-call `std::thread::scope`. The scoped design paid a thread
+//! spawn+join (tens of microseconds) on *every* dispatch — and the hot
+//! caller, [`crate::linalg::DesignMatrix::matvec_t`], dispatches once per
+//! FISTA/BCD iteration, so the spawn tax was paid thousands of times per
+//! solve. The persistent pool pays it once per process.
 //!
-//! Worker count comes from `TLFRE_THREADS` (default: available parallelism).
+//! ## Lifecycle
+//!
+//! * Workers are spawned **lazily** on the first parallel dispatch —
+//!   `num_threads() − 1` of them (the dispatching thread always executes
+//!   chunk 0 itself, so total concurrency equals `num_threads()`).
+//! * Between dispatches the workers are **parked** in a blocking channel
+//!   `recv` — zero CPU while idle.
+//! * Workers live for the remainder of the process; there is no shutdown
+//!   (the pool is a `'static` singleton, and the OS reclaims the threads
+//!   at exit).
+//!
+//! ## Worker count: `TLFRE_THREADS`
+//!
+//! Worker count comes from `TLFRE_THREADS` (default: available
+//! parallelism), resolved once per process and cached. `TLFRE_THREADS=1`
+//! disables the pool entirely — every entry point degrades to a serial
+//! loop with zero thread overhead and no worker is ever spawned.
+//!
+//! ## Determinism guarantee
+//!
+//! Chunk boundaries are computed exactly as the scoped implementation
+//! computed them (`chunk = n.div_ceil(workers)`, worker `w` owns
+//! `[w·chunk, min((w+1)·chunk, n))`), and every chunk writes a disjoint
+//! output region from independent inputs — so results are **bitwise
+//! identical** to the serial loop and to the old per-call-scope
+//! implementation for every worker count. `tests/backend_parity.rs`
+//! enforces this for the `matvec_t` sweep at multiple worker counts;
+//! [`scoped_fill_with_workers`] is kept as the legacy reference
+//! implementation for those tests and for the before/after bench in
+//! `benches/perf_kernels.rs`.
+//!
+//! ## Nesting
+//!
+//! A dispatch issued *from a pool worker* (e.g. a `matvec_t` inside a task
+//! that itself runs on the pool) falls back to the serial loop instead of
+//! re-entering the pool — identical results, and no possibility of the
+//! pool waiting on itself.
+
+use std::any::Any;
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use (respects `TLFRE_THREADS`, defaults to
 /// available parallelism). Resolved once per process and cached —
@@ -14,7 +57,7 @@
 /// env-map read plus an `available_parallelism` syscall per call would be
 /// measurable; changing `TLFRE_THREADS` mid-process therefore has no effect.
 pub fn num_threads() -> usize {
-    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    static THREADS: OnceLock<usize> = OnceLock::new();
     *THREADS.get_or_init(|| {
         if let Ok(v) = std::env::var("TLFRE_THREADS") {
             if let Ok(n) = v.parse::<usize>() {
@@ -25,6 +68,162 @@ pub fn num_threads() -> usize {
     })
 }
 
+/// A unit of work shipped to a pool worker. The `'static` bound is a lie
+/// told through [`erase`]: tasks borrow the dispatcher's stack, and the
+/// dispatch functions below block on the round's latch before returning,
+/// which is what makes the lie sound.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Erase a task's borrow lifetimes so it can cross the channel.
+///
+/// # Safety
+///
+/// The caller must not return (or otherwise invalidate the task's borrows)
+/// until the task has finished executing — in this module, every dispatcher
+/// blocks on [`Round::wait`] before its borrowed data goes out of scope.
+unsafe fn erase<'a>(task: Box<dyn FnOnce() + Send + 'a>) -> Task {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Task>(task)
+}
+
+/// Count-down latch for one dispatch round, carrying any worker panic back
+/// to the dispatcher.
+struct Round {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+impl Round {
+    fn new(count: usize) -> Arc<Round> {
+        Arc::new(Round {
+            remaining: Mutex::new(count),
+            done: Condvar::new(),
+            panic: Mutex::new(None),
+        })
+    }
+
+    /// Record one finished task (with its panic payload, if it panicked).
+    fn finish_one(&self, panicked: Option<Box<dyn Any + Send>>) {
+        if let Some(p) = panicked {
+            *self.panic.lock().unwrap() = Some(p);
+        }
+        let mut left = self.remaining.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every task in the round has finished.
+    fn wait(&self) {
+        let mut left = self.remaining.lock().unwrap();
+        while *left > 0 {
+            left = self.done.wait(left).unwrap();
+        }
+    }
+
+    fn take_panic(&self) -> Option<Box<dyn Any + Send>> {
+        self.panic.lock().unwrap().take()
+    }
+}
+
+/// The process-wide pool: one task channel per persistent worker. Senders
+/// are wrapped in a `Mutex` so concurrent dispatchers (e.g. parallel CV
+/// folds each sweeping `matvec_t`) can share the pool; each round's latch
+/// counts only its own tasks, so interleaved rounds never cross-talk.
+struct Pool {
+    senders: Vec<Mutex<mpsc::Sender<Task>>>,
+}
+
+impl Pool {
+    /// Hand a task to a worker. **Never panics** — this is load-bearing for
+    /// the lifetime-erasure safety contract: a panic between the first send
+    /// of a round and its `wait` would unwind the dispatcher while workers
+    /// still hold borrows into its stack. Sender-mutex poisoning is
+    /// absorbed (`Sender` has no invariant a poisoned lock could break) and
+    /// a closed channel (unreachable: workers never exit) degrades to
+    /// running the task inline, which settles the round's latch correctly.
+    fn send(&self, worker: usize, task: Task) {
+        let slot = &self.senders[worker % self.senders.len()];
+        let sender = match slot.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Err(mpsc::SendError(task)) = sender.send(task) {
+            drop(sender);
+            task();
+        }
+    }
+}
+
+/// One dispatch round: ship `tasks` (chunks 1..) to the pool workers, run
+/// `own` (chunk 0) on the calling thread, block until every task finished,
+/// then re-raise the first recorded panic. This is the **single** home of
+/// the lifetime-erasure machinery shared by [`parallel_for_chunks`] and
+/// [`parallel_fill_with_workers`].
+fn dispatch_round<'a>(
+    p: &'static Pool,
+    tasks: Vec<Box<dyn FnOnce() + Send + 'a>>,
+    own: impl FnOnce(),
+) {
+    let round = Round::new(tasks.len());
+    for (i, task) in tasks.into_iter().enumerate() {
+        let round_c = Arc::clone(&round);
+        let wrapped: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+            let res = catch_unwind(AssertUnwindSafe(task));
+            round_c.finish_one(res.err());
+        });
+        // SAFETY: `round.wait()` below runs before this function returns,
+        // and nothing on the path from here to it can unwind (`Pool::send`
+        // is panic-free by construction; the own-chunk closure is caught),
+        // so every borrow the task carries outlives its execution.
+        p.send(i, unsafe { erase(wrapped) });
+    }
+    let own_res = catch_unwind(AssertUnwindSafe(own));
+    round.wait();
+    if let Some(payload) = round.take_panic() {
+        resume_unwind(payload);
+    }
+    if let Err(payload) = own_res {
+        resume_unwind(payload);
+    }
+}
+
+thread_local! {
+    /// Set on pool-worker threads; dispatches from a worker run serially.
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_pool_worker() -> bool {
+    IS_POOL_WORKER.get()
+}
+
+/// The lazily-initialized singleton. Spawns `num_threads() − 1` parked
+/// workers on first use (zero if the process is single-threaded).
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let spawn = num_threads().saturating_sub(1);
+        let mut senders = Vec::with_capacity(spawn);
+        for w in 0..spawn {
+            let (tx, rx) = mpsc::channel::<Task>();
+            std::thread::Builder::new()
+                .name(format!("tlfre-pool-{w}"))
+                .spawn(move || {
+                    IS_POOL_WORKER.set(true);
+                    // Tasks arrive pre-wrapped in catch_unwind; the loop
+                    // itself cannot panic, so a worker never dies.
+                    while let Ok(task) = rx.recv() {
+                        task();
+                    }
+                })
+                .expect("failed to spawn pool worker");
+            senders.push(Mutex::new(tx));
+        }
+        Pool { senders }
+    })
+}
+
 /// Run `f(chunk_index, start, end)` over `n` items split into contiguous
 /// chunks, one per worker. `f` must be `Sync` (called from multiple threads).
 pub fn parallel_for_chunks<F>(n: usize, f: F)
@@ -32,36 +231,105 @@ where
     F: Fn(usize, usize, usize) + Sync,
 {
     let workers = num_threads().min(n.max(1));
-    if workers <= 1 || n == 0 {
+    if workers <= 1 || n == 0 || in_pool_worker() {
+        f(0, 0, n);
+        return;
+    }
+    let p = pool();
+    if p.senders.is_empty() {
         f(0, 0, n);
         return;
     }
     let chunk = n.div_ceil(workers);
-    std::thread::scope(|s| {
-        for w in 0..workers {
+    let n_chunks = n.div_ceil(chunk);
+    let f_ref = &f;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (1..n_chunks)
+        .map(|w| {
             let start = w * chunk;
             let end = ((w + 1) * chunk).min(n);
-            if start >= end {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || f(w, start, end));
-        }
-    });
+            Box::new(move || f_ref(w, start, end)) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    dispatch_round(p, tasks, || f(0, 0, chunk.min(n)));
 }
 
 /// Fill `out[i] = f(i)` in parallel over contiguous chunks.
 ///
 /// This is the hot-sweep primitive: the `DesignMatrix::matvec_t` default
-/// implementation calls it with `f = |j| x_jᵀv`. Entirely safe — each worker
-/// receives a disjoint `&mut` sub-slice via `chunks_mut`.
+/// implementation calls it with `f = |j| x_jᵀv`, once per solver iteration.
+/// Each chunk is a disjoint `&mut` sub-slice; the dispatching thread
+/// executes chunk 0 while the persistent workers execute the rest, so the
+/// per-call cost is one channel send per worker instead of a thread
+/// spawn+join.
 pub fn parallel_fill<U, F>(out: &mut [U], f: F)
 where
     U: Send,
     F: Fn(usize) -> U + Sync,
 {
+    parallel_fill_with_workers(out, num_threads(), f);
+}
+
+/// [`parallel_fill`] with an explicit chunking worker count.
+///
+/// Chunk boundaries are derived from `workers` exactly as the legacy scoped
+/// implementation derived them, so results are bitwise identical to
+/// [`scoped_fill_with_workers`] and to the serial loop for any `workers`.
+/// Exposed for the parity tests and the dispatch-overhead bench; production
+/// callers use [`parallel_fill`]. If `workers` exceeds the number of
+/// persistent workers + 1, the extra chunks are queued round-robin — same
+/// results, bounded concurrency.
+pub fn parallel_fill_with_workers<U, F>(out: &mut [U], workers: usize, f: F)
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
     let n = out.len();
-    let workers = num_threads().min(n.max(1));
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n == 0 || in_pool_worker() {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = f(i);
+        }
+        return;
+    }
+    let p = pool();
+    if p.senders.is_empty() {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = f(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    let mut chunks = out.chunks_mut(chunk).enumerate();
+    let (_, first) = chunks.next().expect("n > 0");
+    let f_ref = &f;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+        .map(|(w, slice)| {
+            Box::new(move || {
+                let base = w * chunk;
+                for (k, o) in slice.iter_mut().enumerate() {
+                    *o = f_ref(base + k);
+                }
+            }) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    dispatch_round(p, tasks, || {
+        for (k, o) in first.iter_mut().enumerate() {
+            *o = f(k);
+        }
+    });
+}
+
+/// The legacy per-call `std::thread::scope` fill, kept as the reference
+/// implementation for the bitwise-parity tests (`tests/backend_parity.rs`)
+/// and the spawn-vs-dispatch overhead comparison in `benches/perf_kernels.rs`.
+/// Production code paths all use the persistent pool.
+pub fn scoped_fill_with_workers<U, F>(out: &mut [U], workers: usize, f: F)
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    let n = out.len();
+    let workers = workers.max(1).min(n.max(1));
     if workers <= 1 || n == 0 {
         for (i, o) in out.iter_mut().enumerate() {
             *o = f(i);
@@ -86,6 +354,13 @@ where
 ///
 /// Results are collected per worker chunk and concatenated, so `U` needs no
 /// `Default + Clone` bound (and no placeholder zero-fill pass happens).
+///
+/// Deliberately **not** routed through the persistent pool: this is the
+/// coarse-grained helper (whole α-paths, CV folds — milliseconds to seconds
+/// per item), where a per-call `std::thread::scope` spawn is noise and the
+/// scoped threads may themselves dispatch fine-grained sweeps to the pool.
+/// Keeping it on scoped threads avoids a second copy of the pool's
+/// lifetime-erasure machinery for a path that doesn't need it.
 pub fn parallel_map<T, U, F>(items: &[T], f: F) -> Vec<U>
 where
     T: Sync,
@@ -159,6 +434,82 @@ mod tests {
         // empty slice is fine
         let mut empty: Vec<usize> = Vec::new();
         parallel_fill(&mut empty, |i| i);
+    }
+
+    #[test]
+    fn explicit_worker_counts_match_serial_and_scoped() {
+        let n = 777;
+        let f = |i: usize| (i as f64 * 0.37).sin();
+        let mut serial = vec![0.0f64; n];
+        for (i, o) in serial.iter_mut().enumerate() {
+            *o = f(i);
+        }
+        for workers in [1usize, 2, 3, 5, 8, 16] {
+            let mut pooled = vec![0.0f64; n];
+            parallel_fill_with_workers(&mut pooled, workers, f);
+            assert_eq!(pooled, serial, "pool workers={workers}");
+            let mut scoped = vec![0.0f64; n];
+            scoped_fill_with_workers(&mut scoped, workers, f);
+            assert_eq!(scoped, serial, "scoped workers={workers}");
+        }
+    }
+
+    #[test]
+    fn repeated_dispatch_reuses_pool() {
+        // Many small rounds back-to-back: exercises the parked-worker
+        // wake/finish cycle rather than any one-shot path.
+        let mut out = vec![0usize; 64];
+        for round in 0..200 {
+            parallel_fill_with_workers(&mut out, 4, |i| i + round);
+            assert_eq!(out[63], 63 + round);
+        }
+    }
+
+    #[test]
+    fn concurrent_dispatchers_do_not_cross_talk() {
+        // Two non-worker threads dispatching simultaneously: each round's
+        // latch must only count its own tasks.
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                s.spawn(move || {
+                    let mut out = vec![0usize; 301];
+                    for _ in 0..50 {
+                        parallel_fill_with_workers(&mut out, 3, |i| i * (t + 1));
+                        assert_eq!(out[300], 300 * (t + 1));
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let result = std::panic::catch_unwind(|| {
+            let mut out = vec![0usize; 100];
+            parallel_fill_with_workers(&mut out, 4, |i| {
+                assert!(i != 90, "injected failure");
+                i
+            });
+        });
+        assert!(result.is_err(), "panic must propagate to the dispatcher");
+        // The pool must still be usable after a panicked round.
+        let mut out = vec![0usize; 100];
+        parallel_fill_with_workers(&mut out, 4, |i| i + 1);
+        assert_eq!(out[99], 100);
+    }
+
+    #[test]
+    fn fills_nested_inside_map_tasks_are_correct() {
+        // parallel_map's scoped threads may dispatch fine-grained fills to
+        // the pool concurrently; every nested fill must still be exact.
+        let xs: Vec<usize> = (0..16).collect();
+        let ys = parallel_map(&xs, |&x| {
+            let mut inner = vec![0usize; 32];
+            parallel_fill(&mut inner, |i| i * x);
+            inner.iter().sum::<usize>()
+        });
+        let expect: Vec<usize> = xs.iter().map(|&x| (0..32).map(|i| i * x).sum()).collect();
+        assert_eq!(ys, expect);
     }
 
     #[test]

@@ -9,7 +9,10 @@
 //! * view-vs-copy equivalence — a full TLFre path solved on zero-copy
 //!   [`ScreenedView`] reduced problems is **bitwise identical** (per-step
 //!   r₁/r₂, sparsity, iteration counts) to the same path solved on
-//!   materialized gathered copies (the seed behaviour).
+//!   materialized gathered copies (the seed behaviour);
+//! * pool parity — the persistent worker pool's `matvec_t` sweep is
+//!   bitwise identical to the serial sweep and to the legacy per-call
+//!   `std::thread::scope` implementation at multiple worker counts.
 
 use tlfre::coordinator::{run_tlfre_path, PathConfig};
 use tlfre::data::synthetic::{
@@ -84,6 +87,90 @@ fn dense_csc_kernel_parity() {
         for j in 0..p {
             assert!((nd[j] - ns[j]).abs() < 1e-9 * (1.0 + nd[j]), "col_norms[{j}]");
         }
+    }
+}
+
+#[test]
+fn persistent_pool_matvec_t_bitwise_matches_serial_and_scoped() {
+    // The acceptance-criterion test for the spawn-free pool: the Xᵀv sweep
+    // dispatched through the persistent pool must be bitwise identical to
+    // the serial sweep AND to the legacy per-call `std::thread::scope`
+    // implementation, at several worker counts, on dense and CSC backends.
+    let d = random_sparse_dense(48, 311, 0.6, 9);
+    let s = CscMatrix::from_dense(&d);
+    let mut rng = Rng::seed_from_u64(0x900);
+    let v: Vec<f32> = (0..48).map(|_| rng.gaussian() as f32).collect();
+
+    let p = d.cols();
+    let mut serial_d = vec![0.0f32; p];
+    let mut serial_s = vec![0.0f32; p];
+    for j in 0..p {
+        serial_d[j] = d.col_dot(j, &v);
+        serial_s[j] = DesignMatrix::col_dot(&s, j, &v);
+    }
+
+    for workers in [2usize, 3, 4, 8] {
+        let mut pool_d = vec![0.0f32; p];
+        tlfre::util::pool::parallel_fill_with_workers(&mut pool_d, workers, |j| d.col_dot(j, &v));
+        let mut scoped_d = vec![0.0f32; p];
+        tlfre::util::pool::scoped_fill_with_workers(&mut scoped_d, workers, |j| d.col_dot(j, &v));
+        for j in 0..p {
+            assert_eq!(
+                pool_d[j].to_bits(),
+                serial_d[j].to_bits(),
+                "dense pool≠serial at col {j}, workers={workers}"
+            );
+            assert_eq!(
+                pool_d[j].to_bits(),
+                scoped_d[j].to_bits(),
+                "dense pool≠scoped at col {j}, workers={workers}"
+            );
+        }
+
+        let mut pool_s = vec![0.0f32; p];
+        tlfre::util::pool::parallel_fill_with_workers(&mut pool_s, workers, |j| {
+            DesignMatrix::col_dot(&s, j, &v)
+        });
+        let mut scoped_s = vec![0.0f32; p];
+        tlfre::util::pool::scoped_fill_with_workers(&mut scoped_s, workers, |j| {
+            DesignMatrix::col_dot(&s, j, &v)
+        });
+        for j in 0..p {
+            assert_eq!(
+                pool_s[j].to_bits(),
+                serial_s[j].to_bits(),
+                "csc pool≠serial at col {j}, workers={workers}"
+            );
+            assert_eq!(
+                pool_s[j].to_bits(),
+                scoped_s[j].to_bits(),
+                "csc pool≠scoped at col {j}, workers={workers}"
+            );
+        }
+    }
+
+    // The production entry point (trait matvec_t → parallel_fill with the
+    // process worker count) agrees too — on a matrix big enough that
+    // rows·cols ≥ PAR_MIN_WORK, so the pooled branch actually runs when
+    // the process has >1 worker (the small matrix above stays serial).
+    let big = random_sparse_dense(96, 2800, 0.3, 10);
+    assert!(
+        96 * 2800 >= tlfre::linalg::traits::PAR_MIN_WORK,
+        "test matrix no longer crosses the parallel-dispatch threshold"
+    );
+    let vb: Vec<f32> = (0..96).map(|_| rng.gaussian() as f32).collect();
+    let mut serial_big = vec![0.0f32; 2800];
+    for (j, o) in serial_big.iter_mut().enumerate() {
+        *o = big.col_dot(j, &vb);
+    }
+    let mut trait_big = vec![0.0f32; 2800];
+    big.matvec_t(&vb, &mut trait_big);
+    for j in 0..2800 {
+        assert_eq!(
+            trait_big[j].to_bits(),
+            serial_big[j].to_bits(),
+            "trait matvec_t≠serial at col {j} (pooled sweep)"
+        );
     }
 }
 

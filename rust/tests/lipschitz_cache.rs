@@ -1,0 +1,189 @@
+//! Path-level spectral caching: correctness of the subset-Lipschitz bound
+//! and equivalence of the cached vs exact-per-view path modes.
+//!
+//! The cache rests on one inequality: for any survivor set `S`,
+//! `σmax(X[:,S]) ≤ σmax(X)` (and per group `σmax(X_g[:,S]) ≤ σmax(X_g)`),
+//! because a column-subset operator norm is a supremum over a smaller set
+//! of unit vectors (pad with zeros). So the full-matrix constants computed
+//! once per path are valid — merely conservative — FISTA/BCD step bounds
+//! for every reduced problem, and `run_tlfre_path` performs **zero** power
+//! iterations inside its per-λ loop by default.
+
+use tlfre::coordinator::cv::path_coefficients;
+use tlfre::coordinator::{run_tlfre_path, PathConfig};
+use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
+use tlfre::groups::GroupStructure;
+use tlfre::linalg::power::{spectral_call_count, spectral_norm, spectral_norm_block};
+use tlfre::linalg::{CscMatrix, DenseMatrix, ScreenedView};
+use tlfre::util::Rng;
+
+fn random_dense(n: usize, p: usize, seed: u64) -> DenseMatrix {
+    let mut rng = Rng::seed_from_u64(seed);
+    DenseMatrix::from_fn(n, p, |_, _| rng.gaussian() as f32)
+}
+
+/// Random survivor set keeping roughly `keep_frac` of `p` columns (always
+/// at least one).
+fn random_survivors(p: usize, keep_frac: f64, rng: &mut Rng) -> Vec<usize> {
+    let mut keep: Vec<usize> =
+        (0..p).filter(|_| rng.uniform_range(0.0, 1.0) < keep_frac).collect();
+    if keep.is_empty() {
+        keep.push(rng.below(p));
+    }
+    keep
+}
+
+#[test]
+fn subset_spectral_norm_bounded_by_full_all_backends() {
+    // Property test: σmax over random survivor subsets never exceeds the
+    // full-matrix σmax, on dense, CSC and view backends. Both sides are
+    // tight power-iteration estimates (tol 1e-10), so a small relative
+    // slack covers estimation error; the production cache additionally
+    // inflates the full-matrix value by 2%.
+    let tol = 1e-10;
+    let iters = 2000;
+    for seed in [1u64, 2, 3] {
+        let d = random_dense(24, 60, seed);
+        let csc = CscMatrix::from_dense(&d);
+        let mut rng = Rng::seed_from_u64(seed ^ 0xABCD);
+        let sig_full_d = spectral_norm(&d, tol, iters, &mut Rng::seed_from_u64(seed + 1)).sigma;
+        let sig_full_s = spectral_norm(&csc, tol, iters, &mut Rng::seed_from_u64(seed + 1)).sigma;
+
+        for keep_frac in [0.1, 0.4, 0.8] {
+            let keep = random_survivors(60, keep_frac, &mut rng);
+            let vd = ScreenedView::new(&d, keep.clone());
+            let vs = ScreenedView::new(&csc, keep.clone());
+            let sig_sub_d = spectral_norm(&vd, tol, iters, &mut Rng::seed_from_u64(seed + 2)).sigma;
+            let sig_sub_s = spectral_norm(&vs, tol, iters, &mut Rng::seed_from_u64(seed + 2)).sigma;
+            let slack = 1e-5 * sig_full_d.max(1.0);
+            assert!(
+                sig_sub_d <= sig_full_d + slack,
+                "dense: σ(S)={sig_sub_d} > σ(full)={sig_full_d} (|S|={})",
+                keep.len()
+            );
+            assert!(
+                sig_sub_s <= sig_full_s + slack,
+                "csc: σ(S)={sig_sub_s} > σ(full)={sig_full_s} (|S|={})",
+                keep.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn per_group_subset_norm_bounded_by_full_group_norm() {
+    // The BCD analogue: for each group, the norm of the surviving columns
+    // within the group is bounded by the full group's norm.
+    let d = random_dense(20, 48, 7);
+    let groups = GroupStructure::uniform(48, 8);
+    let mut rng = Rng::seed_from_u64(0x66);
+    for (g, s, e) in groups.iter() {
+        let sig_full =
+            spectral_norm_block(&d, s, e, 1e-10, 2000, &mut Rng::seed_from_u64(g as u64)).sigma;
+        // A random non-empty subset of the group's columns.
+        let keep = random_survivors(e - s, 0.5, &mut rng);
+        let cols: Vec<usize> = keep.iter().map(|&k| s + k).collect();
+        let view = ScreenedView::new(&d, cols);
+        let sig_sub =
+            spectral_norm(&view, 1e-10, 2000, &mut Rng::seed_from_u64(g as u64 + 100)).sigma;
+        assert!(
+            sig_sub <= sig_full + 1e-5 * sig_full.max(1.0),
+            "group {g}: σ(S∩g)={sig_sub} > σ(g)={sig_full}"
+        );
+    }
+}
+
+#[test]
+fn cached_and_exact_lipschitz_paths_reach_same_solutions() {
+    // A/B over the whole λ-path: the default cached-Lipschitz mode and the
+    // exact per-view mode (PathConfig::exact_view_lipschitz) must converge
+    // to the same solutions at every step — the cache changes step sizes,
+    // never optima.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 160, 16), 314);
+    let cached_cfg = PathConfig {
+        alpha: 1.0,
+        n_lambda: 10,
+        lambda_min_ratio: 0.05,
+        tol: 1e-7,
+        ..Default::default()
+    };
+    let exact_cfg = PathConfig { exact_view_lipschitz: true, ..cached_cfg.clone() };
+
+    let a = path_coefficients(&ds.x, &ds.y, &ds.groups, &cached_cfg);
+    let b = path_coefficients(&ds.x, &ds.y, &ds.groups, &exact_cfg);
+    assert_eq!(a.len(), b.len());
+    for (step, (ba, bb)) in a.iter().zip(&b).enumerate() {
+        let scale = ba
+            .iter()
+            .chain(bb.iter())
+            .fold(0.0f32, |m, &v| m.max(v.abs()))
+            .max(1e-3) as f64;
+        let mut max_diff = 0.0f64;
+        for (x, y) in ba.iter().zip(bb) {
+            max_diff = max_diff.max((x - y).abs() as f64);
+        }
+        assert!(
+            max_diff <= 0.02 * scale,
+            "step {step}: max |β_cached − β_exact| = {max_diff} (scale {scale})"
+        );
+        // Substantial supports agree exactly.
+        for (j, (x, y)) in ba.iter().zip(bb).enumerate() {
+            let za = (x.abs() as f64) < 1e-3 * scale;
+            let zb = (y.abs() as f64) < 1e-3 * scale;
+            if za != zb {
+                assert!(
+                    (x - y).abs() as f64 <= 5e-3 * scale,
+                    "step {step}, coord {j}: borderline support mismatch {x} vs {y}"
+                );
+            }
+        }
+    }
+
+    // The runner's per-step statistics agree too (nnz trajectories within
+    // a borderline-coordinate budget, same shape as the solver-A/B tests).
+    let ra = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cached_cfg);
+    let rb = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &exact_cfg);
+    for (sa, sb) in ra.steps.iter().zip(&rb.steps) {
+        let diff = (sa.nonzeros as i64 - sb.nonzeros as i64).abs();
+        assert!(diff <= 3, "λ={}: nnz {} vs {}", sa.lambda, sa.nonzeros, sb.nonzeros);
+    }
+}
+
+#[test]
+fn default_path_runs_zero_power_iterations_per_lambda() {
+    // The spectral-call counter is thread-local, so the deltas below see
+    // only this test's own work. If the per-λ loop ran any power
+    // iteration, a longer grid would cost more calls; by default the cost
+    // must be exactly grid-length-independent (the cache is built once, in
+    // the screening preamble).
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 120, 12), 2718);
+    let base = PathConfig { alpha: 1.0, lambda_min_ratio: 0.05, tol: 1e-6, ..Default::default() };
+
+    let short = PathConfig { n_lambda: 4, ..base.clone() };
+    let long = PathConfig { n_lambda: 16, ..base.clone() };
+
+    let c0 = spectral_call_count();
+    run_tlfre_path(&ds.x, &ds.y, &ds.groups, &short);
+    let short_calls = spectral_call_count() - c0;
+    let c1 = spectral_call_count();
+    run_tlfre_path(&ds.x, &ds.y, &ds.groups, &long);
+    let long_calls = spectral_call_count() - c1;
+    assert_eq!(
+        short_calls, long_calls,
+        "cached mode: power-iteration count must not depend on the λ-grid length"
+    );
+    assert!(short_calls > 0, "the once-per-path cache itself uses power iteration");
+
+    // Exact mode is the control: per-λ power iteration makes the longer
+    // grid strictly more expensive.
+    let c2 = spectral_call_count();
+    run_tlfre_path(&ds.x, &ds.y, &ds.groups, &PathConfig { exact_view_lipschitz: true, ..short });
+    let exact_short = spectral_call_count() - c2;
+    let c3 = spectral_call_count();
+    run_tlfre_path(&ds.x, &ds.y, &ds.groups, &PathConfig { exact_view_lipschitz: true, ..long });
+    let exact_long = spectral_call_count() - c3;
+    assert!(
+        exact_long > exact_short,
+        "exact mode control: expected per-λ power iterations ({exact_short} vs {exact_long})"
+    );
+}
