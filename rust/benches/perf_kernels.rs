@@ -11,6 +11,12 @@
 //! * FISTA vs BCD on a reduced problem (solver ablation);
 //! * the persistent worker pool vs the legacy per-call scoped threads
 //!   (dispatch overhead of the hot `parallel_fill` sweep);
+//! * the forward matvec `Xβ` — serial column-order accumulation vs the
+//!   row-blocked pool dispatch (bitwise-equal by construction, asserted
+//!   before publishing; feeds `parallel_matvec` in `BENCH_backends.json`);
+//! * red-black pool-parallel BCD vs the sequential sweep on a paired-block
+//!   CSC design (bitwise-equal, asserted; feeds `red_black_bcd` in
+//!   `BENCH_solver_path.json`);
 //! * the whole-path before/after of the spectral cache — `run_tlfre_path`
 //!   with cached full-matrix Lipschitz constants vs exact per-view power
 //!   iteration (written to `BENCH_solver_path.json`).
@@ -20,8 +26,10 @@ use tlfre::coordinator::{run_tlfre_path, PathConfig};
 use tlfre::data::synthetic::{
     generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec,
 };
+use tlfre::groups::GroupStructure;
 use tlfre::linalg::ops;
-use tlfre::linalg::{CscMatrix, DesignMatrix, ScreenedView};
+use tlfre::linalg::{CscMatrix, DenseMatrix, DesignMatrix, ScreenedView};
+use tlfre::sgl::GroupColoring;
 use tlfre::prox::shrink_norm_sq;
 use tlfre::screening::tlfre::{apply_rules, TlfreContext};
 use tlfre::sgl::bcd::{solve_bcd, BcdOptions};
@@ -154,11 +162,58 @@ fn main() {
                 .set("gathered_half_ms", r_gathered.seconds.median * 1e3),
         );
     }
+    // Forward sweep: serial column-order accumulation vs the row-blocked
+    // pool dispatch (bitwise identical; asserted below so the published
+    // speedup is of a *verified-equal* kernel). Dense β, the worst case
+    // for the nonzero-column skip.
+    println!("\n== forward matvec Xβ (X {n}×{p}, {} workers) ==", pool::num_threads());
+    let mv_workers = pool::num_threads();
+    let beta_full: Vec<f32> = (0..p).map(|_| rng.gaussian() as f32).collect();
+    let mut mv = vec![0.0f32; n];
+    let mv_reps = 50;
+    let r_mv_serial = bench("serial", &cfg, || {
+        for _ in 0..mv_reps {
+            ds.x.matvec_serial(black_box(&beta_full), &mut mv);
+        }
+        black_box(&mv);
+    });
+    let mut mv_serial_out = vec![0.0f32; n];
+    ds.x.matvec_serial(&beta_full, &mut mv_serial_out);
+    let r_mv_par = bench("row-blocked", &cfg, || {
+        for _ in 0..mv_reps {
+            ds.x.matvec_with_workers(black_box(&beta_full), &mut mv, mv_workers);
+        }
+        black_box(&mv);
+    });
+    assert!(
+        mv.iter().zip(&mv_serial_out).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "row-blocked matvec diverged from serial — bench numbers would be meaningless"
+    );
+    let parallel_matvec_speedup =
+        r_mv_serial.seconds.median / r_mv_par.seconds.median.max(1e-12);
+    println!(
+        "  serial {:8.3} ms / sweep   row-blocked {:8.3} ms / sweep   ({:4.2}x, bitwise equal)",
+        r_mv_serial.seconds.median * 1e3 / mv_reps as f64,
+        r_mv_par.seconds.median * 1e3 / mv_reps as f64,
+        parallel_matvec_speedup,
+    );
+
     let report = Json::obj()
         .set("bench", "perf_kernels/backend_matvec_t")
         .set("n", n)
         .set("p", p)
         .set("threads", tlfre::util::pool::num_threads())
+        .set(
+            "parallel_matvec",
+            Json::obj()
+                .set("workers", mv_workers)
+                .set("serial_ms_per_sweep", r_mv_serial.seconds.median * 1e3 / mv_reps as f64)
+                .set(
+                    "row_blocked_ms_per_sweep",
+                    r_mv_par.seconds.median * 1e3 / mv_reps as f64,
+                )
+                .set("parallel_matvec_speedup", parallel_matvec_speedup),
+        )
         .set("rows", Json::Arr(backend_rows));
     // Cargo runs bench binaries with CWD = the package root (rust/); pin
     // the report next to the checked-in copy at the workspace root so CI's
@@ -289,6 +344,82 @@ fn main() {
         );
     }
 
+    // Red-black pool-parallel BCD on the canonical paired-block sparse
+    // design (`sgl::coloring::paired_block_band`: groups 2k/2k+1 overlap
+    // inside row block k, blocks disjoint → 2 color classes — the same
+    // structure the coloring tests validate as 2-colorable). The colored
+    // sweep is bitwise identical to the sequential sweep — asserted below,
+    // and recorded in the JSON so CI gates on it.
+    println!("\n== red-black BCD sweep (paired-block CSC design) ==");
+    let rb_blocks = 32usize;
+    let rb_cols = 8usize;
+    let rb_n = 8 * rb_blocks;
+    let rb_groups_n = 2 * rb_blocks;
+    let rb_p = rb_groups_n * rb_cols;
+    let rb_groups = GroupStructure::uniform(rb_p, rb_groups_n);
+    let mut rb_rng = Rng::seed_from_u64(args.seed ^ 0xB1AC);
+    let rb_dense = DenseMatrix::from_fn(rb_n, rb_p, |i, j| {
+        let (lo, hi) = tlfre::sgl::coloring::paired_block_band(j / rb_cols);
+        if i >= lo && i < hi {
+            rb_rng.gaussian() as f32
+        } else {
+            0.0
+        }
+    });
+    let rb_x = CscMatrix::from_dense(&rb_dense);
+    let mut rb_beta = vec![0.0f32; rb_p];
+    for g in 0..rb_groups_n {
+        if g % 3 != 2 {
+            rb_beta[g * rb_cols] = rb_rng.gaussian() as f32;
+        }
+    }
+    let mut rb_y = vec![0.0f32; rb_n];
+    DesignMatrix::matvec(&rb_x, &rb_beta, &mut rb_y);
+    for v in rb_y.iter_mut() {
+        *v += (rb_rng.gaussian() * 0.01) as f32;
+    }
+    let rb_prob = SglProblem::new(&rb_x, &rb_y, &rb_groups);
+    let rb_lmax = sgl_lambda_max(&rb_prob, 1.0);
+    let rb_params = SglParams::from_alpha_lambda(1.0, 0.2 * rb_lmax.lambda_max);
+    let rb_coloring = GroupColoring::compute(&rb_x, &rb_groups);
+    let rb_opts = BcdOptions { tol: 1e-6, ..Default::default() };
+    let mut rb_seq = None;
+    let r_rb_seq = bench("sequential", &scfg, || {
+        rb_seq = Some(solve_bcd(&rb_prob, &rb_params, None, &rb_opts));
+    });
+    let mut rb_par = None;
+    let r_rb_par = bench("red-black", &scfg, || {
+        rb_par = Some(solve_bcd(
+            &rb_prob,
+            &rb_params,
+            None,
+            &BcdOptions {
+                parallel_groups: true,
+                coloring: Some(&rb_coloring),
+                ..rb_opts.clone()
+            },
+        ));
+    });
+    let rb_seq = rb_seq.expect("sequential BCD ran");
+    let rb_par = rb_par.expect("colored BCD ran");
+    let rb_bitwise_equal = rb_seq.iters == rb_par.iters
+        && rb_seq
+            .beta
+            .iter()
+            .zip(&rb_par.beta)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(rb_bitwise_equal, "colored BCD diverged from the sequential sweep");
+    let red_black_speedup = r_rb_seq.seconds.median / r_rb_par.seconds.median.max(1e-12);
+    println!(
+        "  {} groups, {} classes (largest {})   sequential {:8.2} ms   red-black {:8.2} ms   ({:4.2}x, bitwise equal)",
+        rb_groups_n,
+        rb_coloring.n_classes(),
+        rb_coloring.max_class_len(),
+        r_rb_seq.seconds.median * 1e3,
+        r_rb_par.seconds.median * 1e3,
+        red_black_speedup,
+    );
+
     let path_json = |out: &tlfre::coordinator::PathOutput, wall_s: f64| {
         Json::obj()
             .set("wall_s", wall_s)
@@ -330,6 +461,19 @@ fn main() {
                     "exact_over_cached_solve",
                     exact_path.solve_total_s / cached_path.solve_total_s.max(1e-12),
                 ),
+        )
+        .set(
+            "red_black_bcd",
+            Json::obj()
+                .set("n", rb_n)
+                .set("p", rb_p)
+                .set("n_groups", rb_groups_n)
+                .set("n_classes", rb_coloring.n_classes())
+                .set("max_class_len", rb_coloring.max_class_len())
+                .set("sequential_ms", r_rb_seq.seconds.median * 1e3)
+                .set("colored_ms", r_rb_par.seconds.median * 1e3)
+                .set("colored_speedup_vs_sequential", red_black_speedup)
+                .set("bitwise_equal", rb_bitwise_equal),
         );
     // Workspace root for the same reason as BENCH_backends.json above.
     let path_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_solver_path.json");

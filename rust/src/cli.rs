@@ -147,6 +147,12 @@ COMMON FLAGS:
   --config <path>      JSON config (overridden by explicit flags)
   --no-screening       baseline path without screening
   --verify             re-solve unscreened each step and assert safety
+  --refresh-every <K>  re-estimate survivor-view Lipschitz data every K
+                       path steps (0 = cached full-matrix constants, the
+                       default; counted as screening time)
+  --parallel-bcd       red-black pool-parallel BCD group sweeps (bcd
+                       solver, sparse backends; bitwise identical to the
+                       sequential sweep)
   --out <path>         output file (generate / JSON reports)
 ";
 
@@ -216,6 +222,12 @@ fn cmd_solve_path(args: &Args) -> Result<i32> {
     let backend = args.get("backend").unwrap_or("dense");
     let mut pc = cfg.path_config(alpha);
     pc.verify_safety = args.has("verify");
+    if let Some(k) = args.get_parsed::<usize>("refresh-every")? {
+        pc.lipschitz_refresh_every = if k == 0 { None } else { Some(k) };
+    }
+    if args.has("parallel-bcd") {
+        pc.parallel_bcd_groups = true;
+    }
 
     if name == "sparse1" || name == "sparse" {
         // CSC-native sparse synthetic workload.
@@ -296,6 +308,7 @@ fn cmd_dpc_path(args: &Args) -> Result<i32> {
         max_iter: cfg.max_iter,
         verify_safety: args.has("verify"),
         gap_inflation: 0.0,
+        lipschitz_refresh_every: args.get_parsed::<usize>("refresh-every")?.filter(|&k| k > 0),
     };
     let backend = args.get("backend").unwrap_or("dense");
     let out = match backend {

@@ -29,6 +29,13 @@ pub struct Config {
     pub seed: u64,
     /// Feature-dimension scale for simulated real data sets.
     pub scale: f64,
+    /// Amortized per-view Lipschitz refresh cadence (path steps); `None`
+    /// (default) reuses the full-matrix constants for the whole path. See
+    /// [`crate::coordinator::runner::PathConfig::lipschitz_refresh_every`].
+    pub lipschitz_refresh_every: Option<usize>,
+    /// Pool-parallel red-black BCD group sweeps (no effect under FISTA).
+    /// See [`crate::coordinator::runner::PathConfig::parallel_bcd_groups`].
+    pub parallel_bcd_groups: bool,
 }
 
 impl Default for Config {
@@ -44,6 +51,8 @@ impl Default for Config {
             max_iter: 20_000,
             seed: 42,
             scale: 0.1,
+            lipschitz_refresh_every: None,
+            parallel_bcd_groups: false,
         }
     }
 }
@@ -82,6 +91,25 @@ impl Config {
                 }
                 "tol" => cfg.tol = val.as_f64().context("tol must be a number")?,
                 "max_iter" => cfg.max_iter = val.as_usize().context("max_iter must be an integer")?,
+                "lipschitz_refresh_every" => {
+                    // null = cached mode (the default); K ≥ 1 = refresh cadence.
+                    cfg.lipschitz_refresh_every = match val {
+                        Json::Null => None,
+                        other => {
+                            let k = other
+                                .as_usize()
+                                .context("lipschitz_refresh_every must be a positive integer or null")?;
+                            if k == 0 {
+                                bail!("lipschitz_refresh_every must be ≥ 1 (or null to disable)");
+                            }
+                            Some(k)
+                        }
+                    };
+                }
+                "parallel_bcd_groups" => {
+                    cfg.parallel_bcd_groups =
+                        val.as_bool().context("parallel_bcd_groups must be a boolean")?;
+                }
                 "seed" => cfg.seed = val.as_usize().context("seed must be an integer")? as u64,
                 "scale" => {
                     cfg.scale = val.as_f64().context("scale must be a number")?;
@@ -122,6 +150,14 @@ impl Config {
             .set("max_iter", self.max_iter)
             .set("seed", self.seed as usize)
             .set("scale", self.scale)
+            .set(
+                "lipschitz_refresh_every",
+                match self.lipschitz_refresh_every {
+                    Some(k) => Json::from(k),
+                    None => Json::Null,
+                },
+            )
+            .set("parallel_bcd_groups", self.parallel_bcd_groups)
     }
 
     /// Per-α path configuration.
@@ -137,6 +173,8 @@ impl Config {
             materialize_reduced: false,
             gap_inflation: 0.0,
             exact_view_lipschitz: false,
+            lipschitz_refresh_every: self.lipschitz_refresh_every,
+            parallel_bcd_groups: self.parallel_bcd_groups,
         }
     }
 }
@@ -158,6 +196,8 @@ mod tests {
         cfg.n_lambda = 50;
         cfg.solver = SolverKind::Bcd;
         cfg.tol = 1e-8;
+        cfg.lipschitz_refresh_every = Some(5);
+        cfg.parallel_bcd_groups = true;
         let text = cfg.to_json().to_string_pretty();
         let back = Config::from_json(&text).unwrap();
         assert_eq!(cfg, back);
@@ -171,7 +211,26 @@ mod tests {
         assert!(Config::from_json(r#"{"alphas": [1.0, -2.0]}"#).is_err());
         assert!(Config::from_json(r#"{"n_lambda": 1}"#).is_err());
         assert!(Config::from_json(r#"{"scale": 0.0}"#).is_err());
+        assert!(Config::from_json(r#"{"lipschitz_refresh_every": 0}"#).is_err());
+        assert!(Config::from_json(r#"{"lipschitz_refresh_every": "often"}"#).is_err());
+        assert!(Config::from_json(r#"{"parallel_bcd_groups": 1}"#).is_err());
         assert!(Config::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn perf_knobs_parse_and_thread_into_path_config() {
+        let cfg = Config::from_json(
+            r#"{"lipschitz_refresh_every": 4, "parallel_bcd_groups": true, "solver": "bcd"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.lipschitz_refresh_every, Some(4));
+        assert!(cfg.parallel_bcd_groups);
+        let pc = cfg.path_config(1.0);
+        assert_eq!(pc.lipschitz_refresh_every, Some(4));
+        assert!(pc.parallel_bcd_groups);
+        // Explicit null disables the refresh.
+        let off = Config::from_json(r#"{"lipschitz_refresh_every": null}"#).unwrap();
+        assert_eq!(off.lipschitz_refresh_every, None);
     }
 
     #[test]

@@ -139,9 +139,10 @@ pub fn path_coefficients<M: DesignMatrix>(
 ) -> Vec<Vec<f32>> {
     use crate::coordinator::path::log_lambda_grid;
     use crate::coordinator::reduce::ReducedProblem;
+    use crate::coordinator::refresh::ScalarRefresher;
     use crate::screening::lambda_max::sgl_lambda_max;
     use crate::screening::tlfre::{tlfre_screen_inexact, TlfreContext};
-    use crate::sgl::fista::{lipschitz, solve_fista, FistaOptions};
+    use crate::sgl::fista::{lipschitz, lipschitz_of, solve_fista, FistaOptions};
     use crate::sgl::problem::{SglParams, SglProblem};
 
     let prob = SglProblem::new(x, y, groups);
@@ -149,10 +150,15 @@ pub fn path_coefficients<M: DesignMatrix>(
     let lmax = sgl_lambda_max(&prob, cfg.alpha);
     let ctx = TlfreContext::precompute(&prob);
     let grid = log_lambda_grid(lmax.lambda_max, cfg.lambda_min_ratio, cfg.n_lambda);
-    // Same path-level Lipschitz cache as `run_tlfre_path` — the two walks
-    // must stay in numerical lockstep (the integration tests compare their
-    // per-step sparsity exactly).
+    // Same path-level Lipschitz cache — and the same amortized per-view
+    // refresh schedule — as `run_tlfre_path`: the two walks must stay in
+    // numerical lockstep (the integration tests compare their per-step
+    // sparsity exactly), so every step-size decision is mirrored here.
     let path_lip = if cfg.exact_view_lipschitz { None } else { Some(lipschitz(&prob)) };
+    let mut refresher = match cfg.lipschitz_refresh_every {
+        Some(k) if !cfg.exact_view_lipschitz => Some(ScalarRefresher::new(k, p)),
+        _ => None,
+    };
     let opts = FistaOptions {
         tol: cfg.tol,
         max_iter: cfg.max_iter,
@@ -188,9 +194,22 @@ pub fn path_coefficients<M: DesignMatrix>(
         match ReducedProblem::build(x, groups, &outcome) {
             None => beta.fill(0.0),
             Some(red) => {
+                let step_lip = match &mut refresher {
+                    Some(rf) => Some(rf.step(
+                        red.feature_map(),
+                        path_lip.expect("cached full-matrix bound exists in refresh mode"),
+                        || lipschitz_of(&red.x),
+                    )),
+                    None => path_lip,
+                };
                 let rp = SglProblem::new(&red.x, y, &red.groups);
                 let warm = red.gather(&beta);
-                let res = solve_fista(&rp, &params, Some(&warm), &opts);
+                let res = solve_fista(
+                    &rp,
+                    &params,
+                    Some(&warm),
+                    &FistaOptions { lipschitz: step_lip, ..opts.clone() },
+                );
                 red.scatter(&res.beta, &mut beta);
             }
         }

@@ -17,6 +17,7 @@ pub mod cv;
 pub mod dpc_runner;
 pub mod path;
 pub mod reduce;
+pub(crate) mod refresh;
 pub mod runner;
 
 pub use dpc_runner::{run_dpc_path, run_nonneg_baseline, DpcPathConfig, DpcPathOutput};

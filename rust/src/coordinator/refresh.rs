@@ -1,0 +1,241 @@
+//! Amortized per-view Lipschitz refresh for the path runners.
+//!
+//! The path-level spectral cache (PR 2) reuses full-matrix constants for
+//! every reduced solve — always valid (`σmax(X[:,S]) ≤ σmax(X)`), never
+//! tight. The exact mode (`PathConfig::exact_view_lipschitz`) recomputes on
+//! every survivor view — tight, but pays power iteration at every λ.
+//! `PathConfig::lipschitz_refresh_every = Some(K)` is the amortized middle:
+//! recompute on the **current survivor view** every K path steps (cost
+//! counted as screening time, like the rest of the spectral preamble), and
+//! between refreshes reuse the refreshed value *only while it is provably
+//! an upper bound*.
+//!
+//! ## The subset-validity rule
+//!
+//! A value measured on survivor set `S_r` bounds the current step's
+//! operator norm iff the current survivors are a **subset** of `S_r`
+//! (column-subset operator norms only shrink). TLFre survivor sets usually
+//! *grow* as λ decreases, so the refreshers track the feature mask at the
+//! last refresh and, whenever new survivors appear before the next refresh
+//! is due, fall back to the full-matrix cached constant — conservative but
+//! always safe. An underestimated step bound could destabilize FISTA; this
+//! rule makes that impossible by construction (unit-tested below).
+//!
+//! Two trackers cover the three consumers: [`ScalarRefresher`] for the
+//! single `‖X[:,S]‖₂²` bound (SGL-FISTA, nonneg/DPC) and
+//! [`GroupRefresher`] for BCD's per-group `‖X_g[:,S]‖₂²` bounds (validity
+//! is then per *group*: a group whose surviving columns stayed inside the
+//! refresh-time mask keeps its tight value even if other groups grew).
+
+/// Amortized refresher for a single spectral bound.
+pub(crate) struct ScalarRefresher {
+    every: usize,
+    /// Steps since the last refresh; starts ≥ `every` so the first reduced
+    /// solve always refreshes (survivor sets are smallest — and refreshes
+    /// cheapest — at the top of the path).
+    since: usize,
+    /// Survivor-feature mask (full feature space) at the last refresh.
+    mask: Vec<bool>,
+    value: Option<f64>,
+}
+
+impl ScalarRefresher {
+    pub fn new(every: usize, p: usize) -> ScalarRefresher {
+        ScalarRefresher {
+            every: every.max(1),
+            since: usize::MAX,
+            mask: vec![false; p],
+            value: None,
+        }
+    }
+
+    /// The step bound for a solve over `survivors` (full-space column ids).
+    /// Calls `recompute` — the solver's own recipe on the current view —
+    /// when the refresh is due; the caller times it as screening work.
+    pub fn step(
+        &mut self,
+        survivors: &[usize],
+        fallback: f64,
+        recompute: impl FnOnce() -> f64,
+    ) -> f64 {
+        if self.since >= self.every {
+            let v = recompute();
+            self.value = Some(v);
+            self.mask.fill(false);
+            for &j in survivors {
+                self.mask[j] = true;
+            }
+            self.since = 1;
+            return v;
+        }
+        self.since += 1;
+        match self.value {
+            Some(v) if survivors.iter().all(|&j| self.mask[j]) => v,
+            _ => fallback,
+        }
+    }
+}
+
+/// Amortized refresher for per-group spectral bounds (BCD paths).
+pub(crate) struct GroupRefresher {
+    every: usize,
+    since: usize,
+    mask: Vec<bool>,
+    /// Refreshed `‖X_g[:,S_r]‖₂²` per **full** group id; NaN = never
+    /// computed. Staleness is impossible: a value is only consulted when
+    /// the group's current columns sit inside the *latest* mask, and any
+    /// group with a masked column was recomputed at that same refresh.
+    values: Vec<f64>,
+}
+
+impl GroupRefresher {
+    pub fn new(every: usize, p: usize, n_groups: usize) -> GroupRefresher {
+        GroupRefresher {
+            every: every.max(1),
+            since: usize::MAX,
+            mask: vec![false; p],
+            values: vec![f64::NAN; n_groups],
+        }
+    }
+
+    /// Per-reduced-group step bounds for this solve.
+    ///
+    /// * `feature_map` — reduced column → full column (ascending per group);
+    /// * `red_ranges` — reduced groups as `[start, end)` over `feature_map`;
+    /// * `group_map` — reduced group → full group id;
+    /// * `fallback` — the full-matrix per-group cache (indexed by full id);
+    /// * `recompute` — the solver's recipe on the current view, returning
+    ///   one value per reduced group (in reduced order).
+    pub fn step(
+        &mut self,
+        feature_map: &[usize],
+        red_ranges: &[(usize, usize)],
+        group_map: &[usize],
+        fallback: &[f64],
+        recompute: impl FnOnce() -> Vec<f64>,
+    ) -> Vec<f64> {
+        debug_assert_eq!(red_ranges.len(), group_map.len());
+        if self.since >= self.every {
+            let vals = recompute();
+            debug_assert_eq!(vals.len(), group_map.len());
+            self.mask.fill(false);
+            for &j in feature_map {
+                self.mask[j] = true;
+            }
+            for (i, &g) in group_map.iter().enumerate() {
+                self.values[g] = vals[i];
+            }
+            self.since = 1;
+            return vals;
+        }
+        self.since += 1;
+        red_ranges
+            .iter()
+            .zip(group_map)
+            .map(|(&(s, e), &g)| {
+                let inside = feature_map[s..e].iter().all(|&j| self.mask[j]);
+                if inside && self.values[g].is_finite() {
+                    self.values[g]
+                } else {
+                    fallback[g]
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_first_step_always_refreshes() {
+        let mut rf = ScalarRefresher::new(5, 8);
+        let v = rf.step(&[0, 3], 100.0, || 7.0);
+        assert_eq!(v, 7.0);
+    }
+
+    #[test]
+    fn scalar_subset_reuses_superset_falls_back() {
+        let mut rf = ScalarRefresher::new(10, 8);
+        assert_eq!(rf.step(&[1, 2, 5], 100.0, || 7.0), 7.0);
+        // Subset of the refresh-time survivors → refreshed value, and
+        // recompute must NOT run.
+        assert_eq!(rf.step(&[2, 5], 100.0, || panic!("off-cadence recompute")), 7.0);
+        // A new survivor appeared → conservative full-matrix fallback.
+        assert_eq!(rf.step(&[2, 6], 100.0, || panic!("off-cadence recompute")), 100.0);
+        // Back inside the mask → the refreshed value is valid again.
+        assert_eq!(rf.step(&[1], 100.0, || panic!("off-cadence recompute")), 7.0);
+    }
+
+    #[test]
+    fn scalar_cadence_recomputes_every_k() {
+        let mut rf = ScalarRefresher::new(3, 4);
+        let mut recomputes = 0;
+        for step in 0..9 {
+            let fresh = step % 3 == 0;
+            let v = rf.step(&[0], 100.0, || {
+                recomputes += 1;
+                recomputes as f64
+            });
+            if fresh {
+                assert_eq!(v, recomputes as f64, "step {step} must refresh");
+            }
+        }
+        assert_eq!(recomputes, 3, "9 steps at K=3 → 3 refreshes");
+    }
+
+    #[test]
+    fn scalar_every_one_recomputes_each_step() {
+        let mut rf = ScalarRefresher::new(1, 2);
+        let mut n = 0;
+        for _ in 0..4 {
+            rf.step(&[0], 100.0, || {
+                n += 1;
+                n as f64
+            });
+        }
+        assert_eq!(n, 4);
+    }
+
+    #[test]
+    fn group_per_group_validity_is_independent() {
+        let mut rf = GroupRefresher::new(10, 6, 3);
+        // Refresh over reduced problem: groups 0 and 2 survive with
+        // features {0,1} and {4}.
+        let vals = rf.step(&[0, 1, 4], &[(0, 2), (2, 3)], &[0, 2], &[9.0, 9.0, 9.0], || {
+            vec![1.0, 3.0]
+        });
+        assert_eq!(vals, vec![1.0, 3.0]);
+        // Next step: group 0 shrank to {1} (valid → tight value), group 1
+        // reappeared with {2} (not in mask → fallback), group 2 grew to
+        // {4, 5} (5 not in mask → fallback).
+        let vals = rf.step(
+            &[1, 2, 4, 5],
+            &[(0, 1), (1, 2), (2, 4)],
+            &[0, 1, 2],
+            &[9.0, 8.0, 7.0],
+            || panic!("off-cadence recompute"),
+        );
+        assert_eq!(vals, vec![1.0, 8.0, 7.0]);
+    }
+
+    #[test]
+    fn group_cadence_refresh_overwrites_mask_and_values() {
+        let mut rf = GroupRefresher::new(2, 4, 2);
+        assert_eq!(rf.step(&[0], &[(0, 1)], &[0], &[9.0, 9.0], || vec![1.0]), vec![1.0]);
+        // Off-cadence: group 1 unknown → fallback.
+        assert_eq!(
+            rf.step(&[2], &[(0, 1)], &[1], &[9.0, 8.0], || panic!("off-cadence")),
+            vec![8.0]
+        );
+        // Due again: refresh over group 1 only.
+        assert_eq!(rf.step(&[2, 3], &[(0, 2)], &[1], &[9.0, 8.0], || vec![2.0]), vec![2.0]);
+        // Group 0's old value is now invalid (feature 0 not in the latest
+        // mask) → fallback, even though a stale value exists.
+        assert_eq!(
+            rf.step(&[0, 2], &[(0, 1), (1, 2)], &[0, 1], &[9.0, 8.0], || panic!("off-cadence")),
+            vec![9.0, 2.0]
+        );
+    }
+}

@@ -14,14 +14,16 @@
 
 use super::path::log_lambda_grid;
 use super::reduce::ReducedProblem;
+use super::refresh::{GroupRefresher, ScalarRefresher};
 use crate::groups::GroupStructure;
 use crate::linalg::ops;
 use crate::linalg::DesignMatrix;
 use crate::screening::lambda_max::sgl_lambda_max;
 use crate::screening::tlfre::TlfreContext;
 use crate::sgl::bcd::{bcd_group_lipschitz, solve_bcd, BcdOptions};
-use crate::sgl::fista::{lipschitz, solve_fista, FistaOptions};
+use crate::sgl::fista::{lipschitz, lipschitz_of, solve_fista, FistaOptions};
 use crate::sgl::problem::{SglParams, SglProblem};
+use crate::sgl::GroupColoring;
 use crate::util::Timer;
 
 /// Which solver backs the path.
@@ -72,7 +74,28 @@ pub struct PathConfig {
     /// iterations inside the per-λ loop; this flag is the A/B switch for
     /// the exact-per-view behaviour (tighter steps, ≤500 matvec pairs of
     /// setup per λ). See `tests/lipschitz_cache.rs` for the equivalence.
+    /// Takes precedence over [`Self::lipschitz_refresh_every`].
     pub exact_view_lipschitz: bool,
+    /// Amortized middle ground between the cached (`None`, default) and
+    /// exact per-view Lipschitz modes: every K path steps, re-estimate the
+    /// survivor view's spectral constants (`σmax(X[:,S])`, and per
+    /// surviving group `σmax(X_g[:,S])` for BCD) with the solver's own
+    /// recipe, **counted as screening time** like the rest of the spectral
+    /// preamble. Between refreshes the refreshed values are used only
+    /// while the survivor set stays inside the refresh-time set (subset
+    /// operator norms only shrink); if new survivors appear, the runner
+    /// falls back to the always-valid full-matrix constants until the next
+    /// refresh. Tightens steps as the survivor set shrinks at ~1/K of the
+    /// exact mode's power-iteration cost. Ignored when
+    /// [`Self::exact_view_lipschitz`] is set.
+    pub lipschitz_refresh_every: Option<usize>,
+    /// Sweep independent BCD groups concurrently on the worker pool,
+    /// scheduled by a red-black conflict-graph coloring computed **once
+    /// per path** from the full matrix and projected onto each reduced
+    /// problem (see [`crate::sgl::GroupColoring`]). Bitwise identical to
+    /// the sequential sweep at every worker count; only sparse backends
+    /// have non-trivial colorings. No effect under [`SolverKind::Fista`].
+    pub parallel_bcd_groups: bool,
 }
 
 impl Default for PathConfig {
@@ -88,6 +111,8 @@ impl Default for PathConfig {
             materialize_reduced: false,
             gap_inflation: 0.0,
             exact_view_lipschitz: false,
+            lipschitz_refresh_every: None,
+            parallel_bcd_groups: false,
         }
     }
 }
@@ -160,6 +185,7 @@ fn solve<M: DesignMatrix>(
     cfg: &PathConfig,
     lip: Option<f64>,
     group_lip: Option<&[f64]>,
+    coloring: Option<&GroupColoring>,
 ) -> crate::sgl::fista::SolveResult {
     match cfg.solver {
         SolverKind::Fista => solve_fista(
@@ -181,6 +207,8 @@ fn solve<M: DesignMatrix>(
                 tol: cfg.tol,
                 max_sweeps: cfg.max_iter,
                 group_lipschitz: group_lip,
+                parallel_groups: cfg.parallel_bcd_groups,
+                coloring,
                 ..Default::default()
             },
         ),
@@ -197,6 +225,11 @@ struct SpectralCache {
     lip: Option<f64>,
     /// Per-group `‖X_g‖₂²` in original group order — the BCD step bounds.
     group_l: Option<Vec<f64>>,
+    /// Red-black group coloring for pool-parallel BCD sweeps, computed
+    /// once per path from the full matrix's storage pattern and projected
+    /// per reduced problem (reduced supports are subsets, so full-matrix
+    /// classes stay conflict-free on every survivor view).
+    coloring: Option<GroupColoring>,
 }
 
 impl SpectralCache {
@@ -205,16 +238,27 @@ impl SpectralCache {
     /// the per-group `‖X_g‖₂²` via [`bcd_group_lipschitz`] — the solver's
     /// own recipe, so the cached constants are identical to what
     /// `solve_bcd` would self-compute for the full problem (and what
-    /// `run_baseline_path` supplies).
+    /// `run_baseline_path` supplies). The BCD coloring rides along when
+    /// `cfg.parallel_bcd_groups` asks for it (orthogonal to the Lipschitz
+    /// mode, so it is cached even under `exact_view_lipschitz`).
     fn for_path<M: DesignMatrix>(prob: &SglProblem<'_, M>, cfg: &PathConfig) -> SpectralCache {
+        let coloring = match cfg.solver {
+            SolverKind::Bcd if cfg.parallel_bcd_groups => {
+                Some(GroupColoring::compute(prob.x, prob.groups))
+            }
+            _ => None,
+        };
         if cfg.exact_view_lipschitz {
-            return SpectralCache { lip: None, group_l: None };
+            return SpectralCache { lip: None, group_l: None, coloring };
         }
         match cfg.solver {
-            SolverKind::Fista => SpectralCache { lip: Some(lipschitz(prob)), group_l: None },
+            SolverKind::Fista => {
+                SpectralCache { lip: Some(lipschitz(prob)), group_l: None, coloring }
+            }
             SolverKind::Bcd => SpectralCache {
                 lip: None,
                 group_l: Some(bcd_group_lipschitz(prob.x, &prob.groups.ranges())),
+                coloring,
             },
         }
     }
@@ -222,6 +266,14 @@ impl SpectralCache {
     /// Project the per-group constants onto a reduced problem's groups.
     fn reduced_group_l<M: DesignMatrix>(&self, red: &ReducedProblem<'_, M>) -> Option<Vec<f64>> {
         self.group_l.as_ref().map(|gl| red.group_map.iter().map(|&g| gl[g]).collect())
+    }
+
+    /// Project the coloring onto a reduced problem's groups.
+    fn reduced_coloring<M: DesignMatrix>(
+        &self,
+        red: &ReducedProblem<'_, M>,
+    ) -> Option<GroupColoring> {
+        self.coloring.as_ref().map(|c| c.project(&red.group_map))
     }
 }
 
@@ -271,6 +323,18 @@ pub fn run_tlfre_path<M: DesignMatrix>(
     let mut resid = vec![0.0f32; n];
     let mut corr = vec![0.0f32; p];
 
+    // Amortized per-view Lipschitz refresh trackers (subset-validity rule
+    // in `coordinator::refresh`); the exact mode supersedes them.
+    let refresh_every = if cfg.exact_view_lipschitz { None } else { cfg.lipschitz_refresh_every };
+    let mut scalar_refresh = match (refresh_every, cfg.solver) {
+        (Some(k), SolverKind::Fista) => Some(ScalarRefresher::new(k, p)),
+        _ => None,
+    };
+    let mut group_refresh = match (refresh_every, cfg.solver) {
+        (Some(k), SolverKind::Bcd) => Some(GroupRefresher::new(k, p, groups.n_groups())),
+        _ => None,
+    };
+
     for &lambda in &grid[1..] {
         // θ̄ from the previous step: the *feasibility-scaled* residual
         // s·(y − Xβ̄)/λ̄ (guaranteed dual feasible even for an inexact β̄),
@@ -289,6 +353,37 @@ pub fn run_tlfre_path<M: DesignMatrix>(
             &prob, cfg.alpha, lambda, lambda_bar, &theta_bar, gap_bar, &lmax, &ctx,
         );
         let reduced = ReducedProblem::build(x, groups, &outcome);
+        // Amortized Lipschitz refresh runs inside the screening timer —
+        // the refresh is spectral preamble work, exactly like the
+        // once-per-path cache, so cached-vs-refreshed-vs-exact `solve_s`
+        // comparisons stay apples-to-apples.
+        let (step_lip, step_group_l) = match &reduced {
+            Some(red) => (
+                match &mut scalar_refresh {
+                    Some(rf) => Some(rf.step(
+                        red.feature_map(),
+                        spectral.lip.expect("cached full-matrix bound exists in refresh mode"),
+                        || lipschitz_of(&red.x),
+                    )),
+                    None => spectral.lip,
+                },
+                match &mut group_refresh {
+                    Some(rf) => Some(rf.step(
+                        red.feature_map(),
+                        &red.groups.ranges(),
+                        &red.group_map,
+                        spectral.group_l.as_deref().expect("cached full-matrix bounds exist"),
+                        || bcd_group_lipschitz(&red.x, &red.groups.ranges()),
+                    )),
+                    // Cached full-matrix Lipschitz data: σmax over a column
+                    // subset never exceeds σmax over the full matrix, so the
+                    // path-level constants are valid steps for every reduced
+                    // problem — no per-λ power iteration.
+                    None => spectral.reduced_group_l(red),
+                },
+            ),
+            None => (spectral.lip, None),
+        };
         let screen_s = ts.elapsed_s();
         screen_total += screen_s;
 
@@ -301,20 +396,29 @@ pub fn run_tlfre_path<M: DesignMatrix>(
             }
             Some(red) => {
                 let warm = red.gather(&beta);
-                // Cached full-matrix Lipschitz data: σmax over a column
-                // subset never exceeds σmax over the full matrix, so the
-                // path-level constants are valid steps for every reduced
-                // problem — no per-λ power iteration.
-                let gl = spectral.reduced_group_l(red);
                 let res = if cfg.materialize_reduced {
-                    // Seed behaviour: physical column gather per λ.
+                    // Seed behaviour: physical column gather per λ. The
+                    // projected coloring is NOT handed down here: its
+                    // conflict analysis saw the original backend's storage,
+                    // and a dense gathered copy touches every row — the
+                    // solver recomputes its own (trivially sequential)
+                    // schedule instead.
                     let xd = red.materialize();
                     let rp = SglProblem::new(&xd, y, &red.groups);
-                    solve(&rp, &params, Some(&warm), cfg, spectral.lip, gl.as_deref())
+                    solve(&rp, &params, Some(&warm), cfg, step_lip, step_group_l.as_deref(), None)
                 } else {
                     // Zero-copy: the solver runs on the survivor view.
+                    let red_coloring = spectral.reduced_coloring(red);
                     let rp = SglProblem::new(&red.x, y, &red.groups);
-                    solve(&rp, &params, Some(&warm), cfg, spectral.lip, gl.as_deref())
+                    solve(
+                        &rp,
+                        &params,
+                        Some(&warm),
+                        cfg,
+                        step_lip,
+                        step_group_l.as_deref(),
+                        red_coloring.as_ref(),
+                    )
                 };
                 red.scatter(&res.beta, &mut beta);
                 (red.n_features(), res.iters, res.gap)
@@ -326,7 +430,15 @@ pub fn run_tlfre_path<M: DesignMatrix>(
         if cfg.verify_safety {
             // Independent full solve; every screened coordinate must be 0.
             // The cached constants are exact for the full problem.
-            let full = solve(&prob, &params, None, cfg, spectral.lip, spectral.group_l.as_deref());
+            let full = solve(
+                &prob,
+                &params,
+                None,
+                cfg,
+                spectral.lip,
+                spectral.group_l.as_deref(),
+                spectral.coloring.as_ref(),
+            );
             for j in 0..p {
                 if !outcome.feature_kept[j] {
                     assert!(
@@ -383,6 +495,12 @@ pub fn run_baseline_path<M: DesignMatrix>(
         SolverKind::Bcd => Some(bcd_group_lipschitz(x, &groups.ranges())),
         SolverKind::Fista => None,
     };
+    // One coloring for the whole baseline path — the full matrix never
+    // changes, so neither does the conflict graph.
+    let coloring: Option<GroupColoring> = match cfg.solver {
+        SolverKind::Bcd if cfg.parallel_bcd_groups => Some(GroupColoring::compute(x, groups)),
+        _ => None,
+    };
 
     let mut steps = Vec::with_capacity(grid.len());
     steps.push(PathStep {
@@ -403,7 +521,8 @@ pub fn run_baseline_path<M: DesignMatrix>(
     for &lambda in &grid[1..] {
         let params = SglParams::from_alpha_lambda(cfg.alpha, lambda);
         let ts = Timer::start();
-        let res = solve(&prob, &params, Some(&beta), cfg, lip, group_l.as_deref());
+        let res =
+            solve(&prob, &params, Some(&beta), cfg, lip, group_l.as_deref(), coloring.as_ref());
         let solve_s = ts.elapsed_s();
         solve_total += solve_s;
         beta = res.beta;
@@ -509,6 +628,35 @@ mod tests {
                 out.mean_total_rejection()
             );
             assert!(out.mean_r1() > 0.0, "α={alpha}: group layer inert");
+        }
+    }
+
+    #[test]
+    fn refreshed_lipschitz_paths_match_cached_for_both_solvers() {
+        // Refresh changes step sizes (tighter on shrunk survivor sets),
+        // never optima: per-step sparsity must track the cached-constant
+        // path within the usual borderline-coordinate budget.
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 120, 12), 106);
+        for solver in [SolverKind::Fista, SolverKind::Bcd] {
+            let base = PathConfig { solver, ..small_cfg(1.0) };
+            let a = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &base);
+            let b = run_tlfre_path(
+                &ds.x,
+                &ds.y,
+                &ds.groups,
+                &PathConfig { lipschitz_refresh_every: Some(2), ..base.clone() },
+            );
+            assert_eq!(a.steps.len(), b.steps.len());
+            for (sa, sb) in a.steps.iter().zip(&b.steps) {
+                let diff = (sa.nonzeros as i64 - sb.nonzeros as i64).abs();
+                assert!(
+                    diff <= 3,
+                    "{solver:?} λ={}: nnz {} vs {}",
+                    sa.lambda,
+                    sa.nonzeros,
+                    sb.nonzeros
+                );
+            }
         }
     }
 

@@ -192,10 +192,18 @@ impl DesignMatrix for DenseMatrix {
         out.copy_from_slice(self.col(j));
     }
 
+    #[inline]
+    fn col_axpy_rows(&self, j: usize, alpha: f32, rs: usize, re: usize, out: &mut [f32]) {
+        ops::axpy(alpha, &self.col(j)[rs..re], out);
+    }
+
+    // col_touched_rows: the trait default (all rows) is exact for dense
+    // storage — col_axpy writes every row, zero values included.
+
     // The trait defaults for matvec/matvec_t/col_norms produce exactly the
     // same arithmetic as the inherent methods above (same slices, same
-    // kernels, per-column independence), with matvec_t additionally fanned
-    // out over column chunks.
+    // kernels, per-column independence), with matvec_t fanned out over
+    // column chunks and matvec row-blocked over the worker pool.
 }
 
 impl SelectRows for DenseMatrix {
@@ -314,6 +322,40 @@ mod tests {
         let mut buf = vec![0.0f32; 2];
         m.col_to_dense(1, &mut buf);
         assert_eq!(&buf[..], m.col(1));
+    }
+
+    #[test]
+    fn col_axpy_rows_matches_restricted_col_axpy() {
+        let m = DenseMatrix::from_fn(7, 3, |i, j| (i as f32 + 1.0) * (j as f32 - 0.5));
+        for j in 0..3 {
+            let mut full = vec![0.25f32; 7];
+            m.col_axpy(j, 1.5, &mut full);
+            for (s, e) in [(0usize, 7usize), (0, 3), (2, 7), (3, 3), (1, 6)] {
+                let mut part = vec![0.25f32; e - s];
+                m.col_axpy_rows(j, 1.5, s, e, &mut part);
+                for k in 0..e - s {
+                    assert_eq!(part[k].to_bits(), full[s + k].to_bits(), "j={j} rows {s}..{e}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matvec_matches_serial_reference() {
+        let m = DenseMatrix::from_fn(9, 6, |i, j| ((i * 5 + j * 3) % 7) as f32 - 3.0);
+        let beta = [0.7f32, 0.0, -1.2, 0.0, 0.3, 2.0];
+        let mut serial = vec![0.0f32; 9];
+        m.matvec_serial(&beta, &mut serial);
+        for workers in [1usize, 2, 3, 4, 8] {
+            let mut par = vec![0.0f32; 9];
+            m.matvec_with_workers(&beta, &mut par, workers);
+            for i in 0..9 {
+                assert_eq!(par[i].to_bits(), serial[i].to_bits(), "i={i} workers={workers}");
+            }
+        }
+        let mut default = vec![0.0f32; 9];
+        DesignMatrix::matvec(&m, &beta, &mut default);
+        assert_eq!(default, serial);
     }
 
     #[test]

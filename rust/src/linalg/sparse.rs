@@ -172,6 +172,36 @@ impl DesignMatrix for CscMatrix {
         }
     }
 
+    fn col_axpy_rows(
+        &self,
+        j: usize,
+        alpha: f32,
+        row_start: usize,
+        row_end: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(out.len(), row_end - row_start);
+        let (idx, val) = self.col(j);
+        // Row indices are strictly increasing within a column, so the
+        // entries falling in [row_start, row_end) form one contiguous
+        // sub-range, found by binary search. The entries are then visited
+        // in exactly the order the unrestricted `col_axpy` visits them —
+        // the row-blocked matvec stays bitwise identical to serial.
+        let lo = idx.partition_point(|&i| (i as usize) < row_start);
+        let hi = lo + idx[lo..].partition_point(|&i| (i as usize) < row_end);
+        for (&i, &x) in idx[lo..hi].iter().zip(&val[lo..hi]) {
+            out[i as usize - row_start] += alpha * x;
+        }
+    }
+
+    fn col_touched_rows(&self, j: usize, bits: &mut [u64]) {
+        debug_assert!(bits.len() >= self.rows.div_ceil(64));
+        let (idx, _) = self.col(j);
+        for &i in idx {
+            bits[i as usize / 64] |= 1u64 << (i as usize % 64);
+        }
+    }
+
     fn sweep_work(&self) -> usize {
         // A sweep touches each stored entry once.
         self.nnz()
@@ -304,5 +334,63 @@ mod tests {
     #[should_panic]
     fn bad_indptr_panics() {
         CscMatrix::from_parts(2, 2, vec![0, 1], vec![0], vec![1.0]);
+    }
+
+    #[test]
+    fn col_axpy_rows_matches_restricted_col_axpy() {
+        let s = CscMatrix::from_dense(&sample_dense());
+        for j in 0..4 {
+            let mut full = vec![0.5f32; 3];
+            s.col_axpy(j, -2.0, &mut full);
+            for (rs, re) in [(0usize, 3usize), (0, 1), (1, 3), (2, 2), (1, 2)] {
+                let mut part = vec![0.5f32; re - rs];
+                s.col_axpy_rows(j, -2.0, rs, re, &mut part);
+                for k in 0..re - rs {
+                    assert_eq!(part[k].to_bits(), full[rs + k].to_bits(), "j={j} rows {rs}..{re}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col_touched_rows_marks_exactly_stored_entries() {
+        let s = CscMatrix::from_dense(&sample_dense());
+        for j in 0..4 {
+            let mut bits = vec![0u64; 1];
+            s.col_touched_rows(j, &mut bits);
+            let (idx, _) = s.col(j);
+            for i in 0..3u32 {
+                let marked = bits[0] >> i & 1 == 1;
+                assert_eq!(marked, idx.contains(&i), "col {j} row {i}");
+            }
+        }
+        // Dense default: every row marked.
+        let d = sample_dense();
+        let mut bits = vec![0u64; 1];
+        d.col_touched_rows(1, &mut bits);
+        assert_eq!(bits[0], 0b111);
+    }
+
+    #[test]
+    fn parallel_matvec_matches_serial_reference() {
+        let mut rng = Rng::seed_from_u64(23);
+        let d = DenseMatrix::from_fn(13, 9, |_, _| {
+            if rng.below(2) == 0 {
+                rng.gaussian() as f32
+            } else {
+                0.0
+            }
+        });
+        let s = CscMatrix::from_dense(&d);
+        let beta: Vec<f32> = (0..9).map(|_| rng.gaussian() as f32).collect();
+        let mut serial = vec![0.0f32; 13];
+        s.matvec_serial(&beta, &mut serial);
+        for workers in [2usize, 3, 5, 8] {
+            let mut par = vec![0.0f32; 13];
+            s.matvec_with_workers(&beta, &mut par, workers);
+            for i in 0..13 {
+                assert_eq!(par[i].to_bits(), serial[i].to_bits(), "i={i} workers={workers}");
+            }
+        }
     }
 }

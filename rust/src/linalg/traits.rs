@@ -57,6 +57,46 @@ pub trait DesignMatrix: Sync {
     /// Materialize column `j` into a dense buffer of length `rows()`.
     fn col_to_dense(&self, j: usize, out: &mut [f32]);
 
+    /// The row-restricted form of [`Self::col_axpy`]: accumulate rows
+    /// `[row_start, row_end)` of `alpha · x_j` into `out`, where `out[k]`
+    /// holds row `row_start + k` (`out.len() == row_end − row_start`).
+    ///
+    /// This is the kernel the row-blocked parallel [`Self::matvec`] is
+    /// built on: each pool worker owns a disjoint row chunk of the output
+    /// and replays the same per-column accumulation order as the serial
+    /// sweep, so restricting a column to a row range must add **exactly**
+    /// the additions the unrestricted kernel would have performed on those
+    /// rows — nothing more (no touched-row set growth), nothing reordered.
+    fn col_axpy_rows(
+        &self,
+        j: usize,
+        alpha: f32,
+        row_start: usize,
+        row_end: usize,
+        out: &mut [f32],
+    );
+
+    /// OR the rows **touched** by column `j`'s storage into a `u64` bitset
+    /// (row `i` ↦ `bits[i / 64]`, bit `i % 64`; `bits` must hold
+    /// `rows().div_ceil(64)` words). "Touched" means the rows
+    /// [`Self::col_axpy`] reads or writes — *all* rows for dense storage
+    /// (an explicit `+ 0.0` is still a write), only the stored entries for
+    /// CSC. This is the conflict notion behind the red-black BCD group
+    /// coloring ([`crate::sgl::coloring`]): two groups whose touched-row
+    /// sets are disjoint commute exactly and may sweep concurrently.
+    fn col_touched_rows(&self, j: usize, bits: &mut [u64]) {
+        let _ = j;
+        debug_assert!(bits.len() >= self.rows().div_ceil(64));
+        // Default (dense storage): every row is touched.
+        let n = self.rows();
+        for word in bits.iter_mut().take(n / 64) {
+            *word = u64::MAX;
+        }
+        if n % 64 != 0 {
+            bits[n / 64] |= (1u64 << (n % 64)) - 1;
+        }
+    }
+
     /// Approximate scalar-op count of one full `Xᵀv` sweep — the quantity
     /// the parallel-dispatch threshold compares against [`PAR_MIN_WORK`].
     /// Dense backends do `rows·cols` work; sparse backends override this
@@ -68,7 +108,27 @@ pub trait DesignMatrix: Sync {
 
     /// `out = X β` — accumulates only over columns with nonzero coefficient,
     /// which is what makes warm-started sparse iterates cheap.
+    ///
+    /// Large sweeps are **row-blocked across the worker pool**: each worker
+    /// owns a disjoint row range of `out` and accumulates the nonzero
+    /// columns into it in the serial column order (via
+    /// [`Self::col_axpy_rows`]), so the result is bitwise identical to the
+    /// serial sweep at every worker count — row partitioning decides which
+    /// thread owns an output element, never the order of additions into it.
+    /// Sweeps under [`PAR_MIN_WORK`] estimated scalar ops stay serial.
     fn matvec(&self, beta: &[f32], out: &mut [f32]) {
+        assert_eq!(beta.len(), self.cols());
+        assert_eq!(out.len(), self.rows());
+        out.fill(0.0);
+        accumulate_cols(self, beta, 1.0, out);
+    }
+
+    /// The serial reference for [`Self::matvec`]: the plain column-order
+    /// accumulation loop, never dispatched to the pool. Kept public for the
+    /// bitwise-parity tests (`tests/backend_parity.rs`) and the
+    /// before/after bench in `benches/perf_kernels.rs`; production callers
+    /// use [`Self::matvec`].
+    fn matvec_serial(&self, beta: &[f32], out: &mut [f32]) {
         assert_eq!(beta.len(), self.cols());
         assert_eq!(out.len(), self.rows());
         out.fill(0.0);
@@ -77,6 +137,17 @@ pub trait DesignMatrix: Sync {
                 self.col_axpy(j, bj, out);
             }
         }
+    }
+
+    /// [`Self::matvec`] with an explicit row-chunking worker count,
+    /// bypassing the [`PAR_MIN_WORK`] threshold. Exposed for the parity
+    /// tests and the parallel-matvec bench; bitwise identical to
+    /// [`Self::matvec_serial`] for every `workers`.
+    fn matvec_with_workers(&self, beta: &[f32], out: &mut [f32], workers: usize) {
+        assert_eq!(beta.len(), self.cols());
+        assert_eq!(out.len(), self.rows());
+        out.fill(0.0);
+        accumulate_cols_with_workers(self, beta, 1.0, out, workers);
     }
 
     /// `out = Xᵀ v` — the screening sweep. The default implementation
@@ -106,6 +177,9 @@ pub trait DesignMatrix: Sync {
     /// (Accumulation starts from `−y` instead of `0`, so the result can
     /// differ from `matvec`-then-subtract in the last bit of rounding —
     /// both orderings are valid f32 evaluations of the same sum.)
+    /// Row-blocked across the pool exactly like [`Self::matvec`] — the
+    /// `−y` initialization is per-element, so parallelism stays bitwise
+    /// invisible.
     fn residual_matvec(&self, beta: &[f32], y: &[f32], out: &mut [f32]) {
         assert_eq!(beta.len(), self.cols());
         assert_eq!(y.len(), self.rows());
@@ -113,28 +187,20 @@ pub trait DesignMatrix: Sync {
         for (o, &yi) in out.iter_mut().zip(y) {
             *o = -yi;
         }
-        for (j, &bj) in beta.iter().enumerate() {
-            if bj != 0.0 {
-                self.col_axpy(j, bj, out);
-            }
-        }
+        accumulate_cols(self, beta, 1.0, out);
     }
 
     /// `out = y − Xβ` in one fused pass — the reporting/screening residual,
     /// the mirror image of [`Self::residual_matvec`]: `out` starts from `y`
-    /// and each nonzero column's contribution is subtracted via
-    /// [`Self::col_axpy`]. Single source of truth for every `y − Xβ` in the
-    /// solvers and path runners.
+    /// and each nonzero column's contribution is subtracted. Single source
+    /// of truth for every `y − Xβ` in the solvers and path runners;
+    /// row-blocked across the pool exactly like [`Self::matvec`].
     fn residual(&self, beta: &[f32], y: &[f32], out: &mut [f32]) {
         assert_eq!(beta.len(), self.cols());
         assert_eq!(y.len(), self.rows());
         assert_eq!(out.len(), self.rows());
         out.copy_from_slice(y);
-        for (j, &bj) in beta.iter().enumerate() {
-            if bj != 0.0 {
-                self.col_axpy(j, -bj, out);
-            }
-        }
+        accumulate_cols(self, beta, -1.0, out);
     }
 
     /// `Xᵀ v` restricted to the columns in `idx` (active-set solver sweeps).
@@ -160,6 +226,71 @@ pub trait DesignMatrix: Sync {
             self.cols()
         );
     }
+}
+
+/// `out[i] += sign · Σ_j β_j x_{ij}` — the shared accumulation core of
+/// [`DesignMatrix::matvec`] / [`DesignMatrix::residual_matvec`] /
+/// [`DesignMatrix::residual`] (which differ only in how `out` was
+/// initialized and in the sign). Fans out over row chunks when the
+/// estimated work (per-column sweep cost × nonzero coefficients) crosses
+/// [`PAR_MIN_WORK`]; otherwise runs the plain serial column loop. Both
+/// paths are bitwise identical (see [`accumulate_cols_with_workers`]).
+fn accumulate_cols<M: DesignMatrix + ?Sized>(x: &M, beta: &[f32], sign: f32, out: &mut [f32]) {
+    let nnz_b = beta.iter().filter(|&&b| b != 0.0).count();
+    let cols = x.cols().max(1);
+    let work = (x.sweep_work() / cols).saturating_mul(nnz_b);
+    let workers = if work < PAR_MIN_WORK { 1 } else { pool::num_threads() };
+    accumulate_cols_with_workers(x, beta, sign, out, workers);
+}
+
+/// [`accumulate_cols`] with an explicit row-chunking worker count.
+///
+/// ## Determinism contract
+///
+/// Each worker owns a disjoint contiguous row range of `out` and visits the
+/// nonzero columns **in the same ascending order as the serial loop**,
+/// restricted to its rows via [`DesignMatrix::col_axpy_rows`]. Every output
+/// element therefore receives exactly the serial sequence of additions, so
+/// the result is bitwise identical to the serial loop for every `workers`
+/// value and every chunk partition — there are no per-worker partial
+/// vectors and no merge step whose association order could differ. Exposed
+/// `pub` for the parity tests (`tests/backend_parity.rs`) and the
+/// parallel-matvec bench; production callers go through the trait defaults.
+pub fn accumulate_cols_with_workers<M: DesignMatrix + ?Sized>(
+    x: &M,
+    beta: &[f32],
+    sign: f32,
+    out: &mut [f32],
+    workers: usize,
+) {
+    assert_eq!(beta.len(), x.cols());
+    assert_eq!(out.len(), x.rows());
+    if workers <= 1 || out.is_empty() {
+        for (j, &bj) in beta.iter().enumerate() {
+            if bj != 0.0 {
+                x.col_axpy(j, sign * bj, out);
+            }
+        }
+        return;
+    }
+    pool::parallel_chunks_mut(out, workers, |start, chunk| {
+        let end = start + chunk.len();
+        if start == 0 && end == x.rows() {
+            // Serial fallback inside the pool primitive (1 effective
+            // worker / nested dispatch): identical full-range kernel.
+            for (j, &bj) in beta.iter().enumerate() {
+                if bj != 0.0 {
+                    x.col_axpy(j, sign * bj, chunk);
+                }
+            }
+        } else {
+            for (j, &bj) in beta.iter().enumerate() {
+                if bj != 0.0 {
+                    x.col_axpy_rows(j, sign * bj, start, end, chunk);
+                }
+            }
+        }
+    });
 }
 
 /// Row subsetting — needed by cross-validation fold extraction. Implemented

@@ -93,6 +93,23 @@ impl<M: DesignMatrix> DesignMatrix for ScreenedView<'_, M> {
         self.base.col_to_dense(self.col_map[j], out);
     }
 
+    #[inline]
+    fn col_axpy_rows(
+        &self,
+        j: usize,
+        alpha: f32,
+        row_start: usize,
+        row_end: usize,
+        out: &mut [f32],
+    ) {
+        self.base.col_axpy_rows(self.col_map[j], alpha, row_start, row_end, out);
+    }
+
+    #[inline]
+    fn col_touched_rows(&self, j: usize, bits: &mut [u64]) {
+        self.base.col_touched_rows(self.col_map[j], bits);
+    }
+
     fn sweep_work(&self) -> usize {
         // Average per-column work of the base backend, over our columns.
         let base_cols = self.base.cols().max(1);
@@ -159,6 +176,33 @@ mod tests {
         vs.matvec_t(&v, &mut b);
         for j in 0..3 {
             assert!((a[j] - b[j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn row_kernels_delegate_through_col_map() {
+        let mut rng = Rng::seed_from_u64(13);
+        let d = DenseMatrix::from_fn(5, 8, |_, _| {
+            if rng.below(2) == 0 {
+                rng.gaussian() as f32
+            } else {
+                0.0
+            }
+        });
+        let s = CscMatrix::from_dense(&d);
+        let keep = vec![6usize, 1, 4];
+        let v = ScreenedView::new(&s, keep.clone());
+        for (j, &bj) in keep.iter().enumerate() {
+            let mut a = vec![0.1f32; 3];
+            let mut b = vec![0.1f32; 3];
+            v.col_axpy_rows(j, 0.75, 1, 4, &mut a);
+            s.col_axpy_rows(bj, 0.75, 1, 4, &mut b);
+            assert_eq!(a, b, "col_axpy_rows view col {j}");
+            let mut wa = vec![0u64; 1];
+            let mut wb = vec![0u64; 1];
+            v.col_touched_rows(j, &mut wa);
+            s.col_touched_rows(bj, &mut wb);
+            assert_eq!(wa, wb, "col_touched_rows view col {j}");
         }
     }
 

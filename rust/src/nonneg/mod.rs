@@ -7,7 +7,10 @@
 //! The Fenchel dual (82) is `inf_θ ½‖y/λ − θ‖² − ½‖y‖²` over the polytope
 //! `{θ : ⟨x_i, θ⟩ ≤ 1}`, with KKT `λθ* = y − Xβ*`. The solver is projected
 //! FISTA with the closed-form prox `max(0, v − tλ)` and a duality-gap stop
-//! using the radial feasibility scaling of `θ̂ = (y − Xβ)/λ`.
+//! using the radial feasibility scaling of `θ̂ = (y − Xβ)/λ`. Both per-
+//! iteration sweeps run on the worker pool: `Xᵀv` column-chunked, the
+//! fused `Xz − y` forward pass row-blocked — each bitwise identical to its
+//! serial counterpart at every `TLFRE_THREADS`.
 
 use crate::linalg::ops;
 use crate::linalg::power::spectral_norm;

@@ -10,13 +10,15 @@
 //! This is the solver role SLEP [12] plays in the paper's experiments; the
 //! benches compare it against [`super::fista`] as an ablation.
 
+use super::coloring::GroupColoring;
 use super::dual::{duality_gap, null_objective};
 use super::objective::{objective_with_residual, residual};
 use super::problem::{SglParams, SglProblem};
 use crate::linalg::power::group_spectral_norms;
 use crate::linalg::DesignMatrix;
 use crate::prox::{sgl_prox_group, shrink_norm};
-use crate::util::Rng;
+use crate::util::{pool, Rng};
+use std::sync::Mutex;
 
 /// Options for the BCD solver.
 #[derive(Debug, Clone)]
@@ -36,6 +38,19 @@ pub struct BcdOptions<'a> {
     /// for a screened subproblem `σmax(X_g[:,S]) ≤ σmax(X_g)`, so the
     /// cached constants are valid (conservative) upper bounds.
     pub group_lipschitz: Option<&'a [f64]>,
+    /// Sweep independent groups concurrently on the worker pool, scheduled
+    /// by a red-black conflict-graph coloring ([`GroupColoring`]). Groups
+    /// whose columns touch disjoint row sets commute exactly, so the
+    /// colored sweep — at any `TLFRE_THREADS` — is **bitwise identical** to
+    /// the sequential sweep (`false`, the default, kept as the A/B parity
+    /// reference; `tests/backend_parity.rs` enforces the equality). Only
+    /// sparse backends have non-trivial colorings; on dense designs the
+    /// schedule degenerates to the sequential order and the pool is skipped.
+    pub parallel_groups: bool,
+    /// Pre-computed coloring for `parallel_groups` (the path runners cache
+    /// one per path and project it per reduced problem). Computed per call
+    /// when `None`.
+    pub coloring: Option<&'a GroupColoring>,
 }
 
 impl Default for BcdOptions<'_> {
@@ -46,9 +61,113 @@ impl Default for BcdOptions<'_> {
             inner_steps: 4,
             check_every: 5,
             group_lipschitz: None,
+            parallel_groups: false,
+            coloring: None,
         }
     }
 }
+
+/// Per-worker scratch for one group update (hoisted out of the sweep loop —
+/// the sequential hot path stays allocation-free, the colored path allocates
+/// one set per pool worker per solve).
+struct GroupScratch {
+    cg: Vec<f32>,
+    wg: Vec<f32>,
+    bg_new: Vec<f32>,
+    xb: Vec<f32>,
+}
+
+impl GroupScratch {
+    fn new(max_group: usize, n: usize) -> GroupScratch {
+        GroupScratch {
+            cg: vec![0.0f32; max_group],
+            wg: vec![0.0f32; max_group],
+            bg_new: vec![0.0f32; max_group],
+            xb: vec![0.0f32; n],
+        }
+    }
+}
+
+/// One BCD group update: zero-test, inner prox-gradient steps, residual
+/// maintenance. The **single** arithmetic home shared by the sequential and
+/// the colored sweeps — both execute byte-for-byte the same operations per
+/// group, which is what makes the schedules bitwise comparable.
+#[allow(clippy::too_many_arguments)]
+fn update_group<M: DesignMatrix>(
+    x: &M,
+    params: &SglParams,
+    inner_steps: usize,
+    lg: f64,
+    weight: f64,
+    s_idx: usize,
+    e_idx: usize,
+    bg: &mut [f32],
+    r: &mut [f32],
+    scratch: &mut GroupScratch,
+) {
+    let m = e_idx - s_idx;
+    let has_nonzero = bg.iter().any(|&v| v != 0.0);
+    // r̃_g = r + X_g β_g (residual with this group removed).
+    if has_nonzero {
+        for (k, &bj) in bg.iter().enumerate() {
+            if bj != 0.0 {
+                x.col_axpy(s_idx + k, bj, r);
+            }
+        }
+    }
+    // c_g = X_gᵀ r̃_g
+    for k in 0..m {
+        scratch.cg[k] = x.col_dot(s_idx + k, r);
+    }
+    // Group-level zero test (KKT / eq. (30)).
+    let lim = params.lambda1 * weight;
+    if shrink_norm(&scratch.cg[..m], params.lambda2) <= lim {
+        bg.fill(0.0);
+        return; // r already excludes the group
+    }
+    // Inner prox-gradient on the group subproblem.
+    let step = 1.0 / lg;
+    for _ in 0..inner_steps {
+        // grad = X_gᵀ(X_g β_g − r̃_g) = (X_gᵀ X_g β_g) − c_g.
+        // Compute X_g β_g then dot per column (m is small).
+        // u = β_g − step * grad
+        // Using: grad_k = dot(x_k, X_g β_g) − c_k.
+        scratch.xb.fill(0.0);
+        for (k, &bj) in bg.iter().enumerate() {
+            if bj != 0.0 {
+                x.col_axpy(s_idx + k, bj, &mut scratch.xb);
+            }
+        }
+        for k in 0..m {
+            let grad_k = x.col_dot(s_idx + k, &scratch.xb) - scratch.cg[k];
+            scratch.wg[k] = bg[k] - (step as f32) * grad_k;
+        }
+        sgl_prox_group(
+            &scratch.wg[..m],
+            step * params.lambda2,
+            step * lim,
+            &mut scratch.bg_new[..m],
+        );
+        bg.copy_from_slice(&scratch.bg_new[..m]);
+    }
+    // Put the group's contribution back into the residual.
+    for (k, &bj) in bg.iter().enumerate() {
+        if bj != 0.0 {
+            x.col_axpy(s_idx + k, -bj, r);
+        }
+    }
+}
+
+/// Raw handles to the sweep's shared state for the colored-class dispatch.
+/// `Sync` is sound only under the coloring invariant — see the SAFETY
+/// comment at the dispatch site.
+struct SweepShared {
+    beta: *mut f32,
+    r: *mut f32,
+    n: usize,
+}
+
+unsafe impl Sync for SweepShared {}
 
 /// Per-group Lipschitz constants `L_g = ‖X_g‖₂²` with the solver's
 /// canonical power-iteration recipe (seed `0xBCD`, tol `1e-6`, ≤500
@@ -97,6 +216,37 @@ pub fn solve_bcd<M: DesignMatrix>(
         }
     };
 
+    // Colored schedule for pool-parallel sweeps (see [`GroupColoring`]):
+    // taken from the caller's path-level cache when provided, otherwise
+    // computed here. `None` = the sequential reference sweep.
+    let computed_coloring: GroupColoring;
+    let coloring: Option<&GroupColoring> = if opts.parallel_groups {
+        match opts.coloring {
+            Some(c) => {
+                assert_eq!(
+                    c.n_groups(),
+                    ranges.len(),
+                    "coloring covers {} groups for {} groups",
+                    c.n_groups(),
+                    ranges.len()
+                );
+                Some(c)
+            }
+            None => {
+                computed_coloring = GroupColoring::compute(prob.x, prob.groups);
+                Some(&computed_coloring)
+            }
+        }
+    } else {
+        None
+    };
+    // An all-singleton coloring IS the sequential schedule (dense designs:
+    // every pair conflicts, so levels come out in index order) — drop to
+    // the plain sequential sweep instead of paying per-class bookkeeping
+    // for zero parallelism. Bitwise-neutral by the linear-extension
+    // argument in `sgl::coloring`.
+    let coloring = coloring.filter(|c| !c.is_trivially_sequential());
+
     let mut beta: Vec<f32> = match warm_start {
         Some(b) => b.to_vec(),
         None => vec![0.0; p],
@@ -105,12 +255,12 @@ pub fn solve_bcd<M: DesignMatrix>(
     residual(prob, &beta, &mut r);
 
     let max_group = ranges.iter().map(|&(s, e)| e - s).max().unwrap_or(0);
-    let mut cg = vec![0.0f32; max_group];
-    let mut wg = vec![0.0f32; max_group];
-    let mut bg_new = vec![0.0f32; max_group];
-    // Work buffers hoisted out of the sweep loop — the hot solve is
-    // allocation-free after this point.
-    let mut xb = vec![0.0f32; n];
+    // Work buffers hoisted out of the sweep loop — the sequential hot solve
+    // is allocation-free after this point. The colored sweep gets one
+    // scratch set per pool worker, lazily (only when a class is actually
+    // dispatched in parallel).
+    let mut scratch = GroupScratch::new(max_group, n);
+    let mut worker_scratch: Option<Vec<Mutex<GroupScratch>>> = None;
     let mut c = vec![0.0f32; p];
 
     let mut gap = f64::INFINITY;
@@ -119,58 +269,107 @@ pub fn solve_bcd<M: DesignMatrix>(
 
     for sweep in 0..opts.max_sweeps {
         sweeps = sweep + 1;
-        for (g, s_idx, e_idx) in prob.groups.iter() {
-            let m = e_idx - s_idx;
-            let bg = &mut beta[s_idx..e_idx];
-            let has_nonzero = bg.iter().any(|&v| v != 0.0);
-            // r̃_g = r + X_g β_g (residual with this group removed).
-            if has_nonzero {
-                for (k, &bj) in bg.iter().enumerate() {
-                    if bj != 0.0 {
-                        prob.x.col_axpy(s_idx + k, bj, &mut r);
+        match coloring {
+            None => {
+                // Sequential reference sweep: groups in index order.
+                for (g, s_idx, e_idx) in prob.groups.iter() {
+                    update_group(
+                        prob.x,
+                        params,
+                        opts.inner_steps,
+                        group_l[g],
+                        prob.groups.weight(g),
+                        s_idx,
+                        e_idx,
+                        &mut beta[s_idx..e_idx],
+                        &mut r,
+                        &mut scratch,
+                    );
+                }
+            }
+            Some(col) => {
+                // Colored sweep: classes in level order; groups inside a
+                // class commute exactly (disjoint touched rows), so the
+                // pool dispatch is bitwise identical to the sequential
+                // sweep at every worker count.
+                for class in col.classes() {
+                    if class.len() <= 1 || pool::num_threads() <= 1 {
+                        for &g in class {
+                            let (s_idx, e_idx) = ranges[g];
+                            update_group(
+                                prob.x,
+                                params,
+                                opts.inner_steps,
+                                group_l[g],
+                                prob.groups.weight(g),
+                                s_idx,
+                                e_idx,
+                                &mut beta[s_idx..e_idx],
+                                &mut r,
+                                &mut scratch,
+                            );
+                        }
+                        continue;
                     }
-                }
-            }
-            // c_g = X_gᵀ r̃_g
-            for k in 0..m {
-                cg[k] = prob.x.col_dot(s_idx + k, &r);
-            }
-            // Group-level zero test (KKT / eq. (30)).
-            let lim = params.lambda1 * prob.groups.weight(g);
-            if shrink_norm(&cg[..m], params.lambda2) <= lim {
-                bg.fill(0.0);
-                continue; // r already excludes the group
-            }
-            // Inner prox-gradient on the group subproblem.
-            let lg = group_l[g];
-            let step = 1.0 / lg;
-            for _ in 0..opts.inner_steps {
-                // grad = X_gᵀ(X_g β_g − r̃_g) = (X_gᵀ X_g β_g) − c_g.
-                // Compute X_g β_g then dot per column (m is small).
-                // u = β_g − step * grad
-                // Using: grad_k = dot(x_k, X_g β_g) − c_k.
-                xb.fill(0.0);
-                for (k, &bj) in bg.iter().enumerate() {
-                    if bj != 0.0 {
-                        prob.x.col_axpy(s_idx + k, bj, &mut xb);
-                    }
-                }
-                for k in 0..m {
-                    let grad_k = prob.x.col_dot(s_idx + k, &xb) - cg[k];
-                    wg[k] = bg[k] - (step as f32) * grad_k;
-                }
-                sgl_prox_group(
-                    &wg[..m],
-                    step * params.lambda2,
-                    step * lim,
-                    &mut bg_new[..m],
-                );
-                bg.copy_from_slice(&bg_new[..m]);
-            }
-            // Put the group's contribution back into the residual.
-            for (k, &bj) in bg.iter().enumerate() {
-                if bj != 0.0 {
-                    prob.x.col_axpy(s_idx + k, -bj, &mut r);
+                    let scratches = worker_scratch.get_or_insert_with(|| {
+                        (0..pool::num_threads())
+                            .map(|_| Mutex::new(GroupScratch::new(max_group, n)))
+                            .collect()
+                    });
+                    let shared = SweepShared { beta: beta.as_mut_ptr(), r: r.as_mut_ptr(), n };
+                    let shared_ref = &shared;
+                    pool::parallel_for_chunks(class.len(), |w, cs, ce| {
+                        let mut ws = scratches[w].lock().unwrap();
+                        for &g in &class[cs..ce] {
+                            let (s_idx, e_idx) = ranges[g];
+                            // SAFETY: groups within one color class have
+                            // pairwise-disjoint coefficient ranges and
+                            // pairwise-disjoint touched-row sets (the
+                            // GroupColoring invariant, property-tested in
+                            // sgl/coloring.rs), and `update_group` only
+                            // reads/writes β in `[s_idx, e_idx)` and `r` at
+                            // the group's touched rows. Every *dynamic*
+                            // access across concurrent tasks is therefore
+                            // disjoint, and the dispatch's latch blocks
+                            // until every task finishes before β/r are
+                            // touched again (release/acquire via the
+                            // round's mutex). Caveat, stated openly: the
+                            // `r` slices below span the full residual, so
+                            // concurrent tasks hold *overlapping* `&mut
+                            // [f32]` whose accessed elements never overlap.
+                            // LLVM `noalias` is not violated (each call's
+                            // accessed set is disjoint from every other
+                            // pointer's accesses during that call), but
+                            // strict aliasing checkers (Miri/Stacked
+                            // Borrows) reject overlapping `&mut` on
+                            // principle — the slice-based column kernels
+                            // leave no dependency-free way to hand each
+                            // task only its non-contiguous touched rows.
+                            // Confined to this block; the sequential sweep
+                            // shares none of it.
+                            let (bg, rr) = unsafe {
+                                (
+                                    std::slice::from_raw_parts_mut(
+                                        shared_ref.beta.add(s_idx),
+                                        e_idx - s_idx,
+                                    ),
+                                    std::slice::from_raw_parts_mut(shared_ref.r, shared_ref.n),
+                                )
+                            };
+                            update_group(
+                                prob.x,
+                                params,
+                                opts.inner_steps,
+                                group_l[g],
+                                prob.groups.weight(g),
+                                s_idx,
+                                e_idx,
+                                bg,
+                                rr,
+                                &mut ws,
+                            );
+                        }
+                    });
                 }
             }
         }
@@ -249,6 +448,106 @@ mod tests {
         let params = SglParams::from_alpha_lambda(0.8, lm.lambda_max * 1.001);
         let r = solve_bcd(&prob, &params, None, &BcdOptions::default());
         assert!(r.beta.iter().all(|&b| b == 0.0));
+    }
+
+    /// Paired-block sparse design on [`crate::sgl::coloring::paired_block_band`]
+    /// — the red/black 2-colorable structure the coloring tests validate,
+    /// here with random values and a planted signal.
+    fn paired_block_problem(
+        blocks: usize,
+        cols_per_group: usize,
+        seed: u64,
+    ) -> (crate::linalg::CscMatrix, Vec<f32>, GroupStructure) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n = 8 * blocks;
+        let g_count = 2 * blocks;
+        let p = g_count * cols_per_group;
+        let groups = GroupStructure::uniform(p, g_count);
+        let d = DenseMatrix::from_fn(n, p, |i, j| {
+            let (lo, hi) = crate::sgl::coloring::paired_block_band(j / cols_per_group);
+            if i >= lo && i < hi {
+                rng.gaussian() as f32
+            } else {
+                0.0
+            }
+        });
+        let x = crate::linalg::CscMatrix::from_dense(&d);
+        let mut beta = vec![0.0f32; p];
+        for g in 0..g_count {
+            if g % 3 != 2 {
+                beta[g * cols_per_group] = rng.normal(0.0, 1.0) as f32;
+            }
+        }
+        let mut y = vec![0.0f32; n];
+        DesignMatrix::matvec(&x, &beta, &mut y);
+        for v in y.iter_mut() {
+            *v += rng.normal(0.0, 0.01) as f32;
+        }
+        (x, y, groups)
+    }
+
+    #[test]
+    fn colored_sweep_bitwise_matches_sequential_on_sparse_blocks() {
+        let (x, y, g) = paired_block_problem(5, 3, 61);
+        let prob = SglProblem::new(&x, &y, &g);
+        let lm = sgl_lambda_max(&prob, 1.0);
+        let params = SglParams::from_alpha_lambda(1.0, 0.25 * lm.lambda_max);
+        let opts_seq = BcdOptions { tol: 1e-7, ..Default::default() };
+        let seq = solve_bcd(&prob, &params, None, &opts_seq);
+        // Self-computed coloring.
+        let par = solve_bcd(
+            &prob,
+            &params,
+            None,
+            &BcdOptions { parallel_groups: true, ..opts_seq.clone() },
+        );
+        // Caller-cached coloring (the path runners' mode).
+        let col = crate::sgl::GroupColoring::compute(&x, &g);
+        assert!(col.max_class_len() > 1, "design must actually be parallelizable");
+        let par_cached = solve_bcd(
+            &prob,
+            &params,
+            None,
+            &BcdOptions { parallel_groups: true, coloring: Some(&col), ..opts_seq.clone() },
+        );
+        for other in [&par, &par_cached] {
+            assert_eq!(seq.iters, other.iters, "sweep counts diverged");
+            assert_eq!(seq.gap.to_bits(), other.gap.to_bits(), "gap diverged");
+            assert_eq!(
+                seq.objective.to_bits(),
+                other.objective.to_bits(),
+                "objective diverged"
+            );
+            for j in 0..seq.beta.len() {
+                assert_eq!(
+                    seq.beta[j].to_bits(),
+                    other.beta[j].to_bits(),
+                    "β[{j}] colored ≠ sequential"
+                );
+            }
+        }
+        assert!(seq.converged);
+    }
+
+    #[test]
+    fn colored_sweep_on_dense_degenerates_to_sequential() {
+        // Dense columns touch every row → singleton classes in index order;
+        // parallel_groups must be a bitwise no-op.
+        let (x, y, g) = problem(35, 20, 24, 3);
+        let prob = SglProblem::new(&x, &y, &g);
+        let lm = sgl_lambda_max(&prob, 1.0);
+        let params = SglParams::from_alpha_lambda(1.0, 0.4 * lm.lambda_max);
+        let seq = solve_bcd(&prob, &params, None, &BcdOptions::default());
+        let par = solve_bcd(
+            &prob,
+            &params,
+            None,
+            &BcdOptions { parallel_groups: true, ..Default::default() },
+        );
+        assert_eq!(seq.iters, par.iters);
+        for j in 0..seq.beta.len() {
+            assert_eq!(seq.beta[j].to_bits(), par.beta[j].to_bits());
+        }
     }
 
     #[test]

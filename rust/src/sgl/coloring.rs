@@ -1,0 +1,367 @@
+//! Red-black (conflict-graph) group coloring for pool-parallel BCD sweeps.
+//!
+//! A BCD sweep updates groups one at a time because every update reads and
+//! writes the shared residual `r = y − Xβ`. But a group only touches `r` at
+//! the rows its columns' **storage** touches ([`DesignMatrix::col_touched_rows`]):
+//! all rows for dense columns, only the stored entries for CSC. Two groups
+//! whose touched-row sets are disjoint operate on disjoint memory — their
+//! updates commute *exactly* (bitwise), so they can sweep concurrently on
+//! the worker pool without changing a single bit of the result.
+//!
+//! ## The schedule and its determinism contract
+//!
+//! [`GroupColoring::compute`] assigns each group a **level** (color class):
+//!
+//! ```text
+//! level(g) = 1 + max{ level(h) : h < g, touched(h) ∩ touched(g) ≠ ∅ }
+//! ```
+//!
+//! (0 when no earlier group conflicts). Executing classes in level order,
+//! groups within a class in ascending index order, is a linear extension of
+//! the conflict DAG (edges `h → g` for conflicting `h < g`): conflicting
+//! pairs keep their sequential relative order, and non-conflicting pairs
+//! commute exactly. The colored sweep — serial *or* pool-parallel, at any
+//! worker count — is therefore **bitwise identical to the plain sequential
+//! index-order sweep**. This is a stronger guarantee than classic greedy
+//! smallest-free-color coloring, which can reorder *conflicting* groups
+//! across classes and thereby change the f32 trajectory.
+//!
+//! What the schedule buys depends on the conflict structure:
+//!
+//! * **disjoint row blocks** (one-hot / block-diagonal designs): every
+//!   group lands in class 0 — one dispatch sweeps them all concurrently;
+//! * **pairwise-overlapping blocks** (groups `2k` and `2k+1` sharing a row
+//!   band, blocks disjoint): levels alternate 0/1 — the classic red/black
+//!   schedule;
+//! * **an overlapping chain** (`g` overlaps `g+1` for all `g`): levels
+//!   escalate `0,1,2,…` — bitwise equivalence to the sequential sweep
+//!   genuinely forbids reordering conflicting neighbours, so a chain stays
+//!   sequential (a classic smallest-free-color greedy would 2-color it, at
+//!   the price of a different — still convergent, but not bitwise-equal —
+//!   f32 trajectory, which the acceptance contract here rules out);
+//! * **dense designs**: every group touches every row, classes degenerate
+//!   to singletons and the sweep stays sequential (correct, just without
+//!   speedup). `CscMatrix` workloads are where the parallelism lives.
+
+use crate::groups::GroupStructure;
+use crate::linalg::DesignMatrix;
+
+/// A partition of the groups into conflict-free classes (see module docs).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GroupColoring {
+    /// `classes[c]` = group indices at level `c`, ascending.
+    classes: Vec<Vec<usize>>,
+    n_groups: usize,
+}
+
+/// Row band of group `g` in the canonical **paired-block** red/black test
+/// design: block `k` owns rows `[8k, 8k+8)`, group `2k` sits on
+/// `[8k, 8k+5)` and group `2k+1` on `[8k+3, 8k+8)` — the pair overlaps,
+/// the blocks don't, so the coloring is exactly 2 classes (evens, odds).
+/// Single source of truth shared by this module's tests, the BCD
+/// colored-vs-sequential parity tests and `benches/perf_kernels.rs`'s
+/// `red_black_bcd` section, so the structure the bench measures is the
+/// same one the tests validate as 2-colorable. A design needs
+/// `8 · blocks` rows for `2 · blocks` groups.
+#[doc(hidden)]
+pub fn paired_block_band(g: usize) -> (usize, usize) {
+    let k = g / 2;
+    if g % 2 == 0 {
+        (8 * k, 8 * k + 5)
+    } else {
+        (8 * k + 3, 8 * k + 8)
+    }
+}
+
+/// OR `src` into `dst` (equal-length bitset words).
+fn or_into(dst: &mut [u64], src: &[u64]) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d |= s;
+    }
+}
+
+fn intersects(a: &[u64], b: &[u64]) -> bool {
+    a.iter().zip(b).any(|(x, y)| x & y != 0)
+}
+
+impl GroupColoring {
+    /// Compute the level schedule for `groups` over `x`'s storage pattern.
+    ///
+    /// Cost: one [`DesignMatrix::col_touched_rows`] pass per column plus
+    /// `O(G · classes · N/64)` bitset intersections — run once per path
+    /// (the path runners cache it next to the spectral constants) or once
+    /// per standalone [`crate::sgl::bcd::solve_bcd`] call.
+    pub fn compute<M: DesignMatrix>(x: &M, groups: &GroupStructure) -> GroupColoring {
+        x.check_groups(groups);
+        let words = x.rows().div_ceil(64).max(1);
+        let g_count = groups.n_groups();
+        // Per-group touched-row bitsets, flat.
+        let mut supports = vec![0u64; words * g_count];
+        for (g, s, e) in groups.iter() {
+            let bits = &mut supports[g * words..(g + 1) * words];
+            for j in s..e {
+                x.col_touched_rows(j, bits);
+            }
+        }
+        // unions[c] = OR of supports already assigned to level c.
+        let mut unions: Vec<Vec<u64>> = Vec::new();
+        let mut classes: Vec<Vec<usize>> = Vec::new();
+        for g in 0..g_count {
+            let sup = &supports[g * words..(g + 1) * words];
+            // level = 1 + highest level holding a conflicting earlier group
+            // (a class union intersects `sup` iff some member conflicts).
+            let mut level = 0usize;
+            for (c, u) in unions.iter().enumerate().rev() {
+                if intersects(sup, u) {
+                    level = c + 1;
+                    break;
+                }
+            }
+            if level == unions.len() {
+                unions.push(vec![0u64; words]);
+                classes.push(Vec::new());
+            }
+            or_into(&mut unions[level], sup);
+            classes[level].push(g);
+        }
+        GroupColoring { classes, n_groups: g_count }
+    }
+
+    /// The color classes, in execution order; each class's group indices
+    /// are ascending and pairwise conflict-free.
+    #[inline]
+    pub fn classes(&self) -> &[Vec<usize>] {
+        &self.classes
+    }
+
+    #[inline]
+    pub fn n_groups(&self) -> usize {
+        self.n_groups
+    }
+
+    #[inline]
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Size of the largest class — the available parallelism per dispatch.
+    pub fn max_class_len(&self) -> usize {
+        self.classes.iter().map(Vec::len).max().unwrap_or(0)
+    }
+
+    /// Whether every class is a singleton — the colored sweep would equal
+    /// the sequential sweep with pure dispatch overhead on top, so callers
+    /// skip the pool entirely (the dense-backend case).
+    pub fn is_trivially_sequential(&self) -> bool {
+        self.classes.iter().all(|c| c.len() <= 1)
+    }
+
+    /// Project onto a reduced problem: `group_map[i]` is reduced group `i`'s
+    /// index in the full structure (see
+    /// [`crate::coordinator::reduce::ReducedProblem::group_map`]). A reduced
+    /// group's columns are a subset of the full group's, so its touched-row
+    /// set shrinks — full-matrix classes stay conflict-free, and the level
+    /// order still linearly extends the (sparser) reduced conflict DAG.
+    /// Empty classes are dropped.
+    pub fn project(&self, group_map: &[usize]) -> GroupColoring {
+        // full group id -> reduced index (groups outside the map are gone).
+        let mut reduced_of = vec![usize::MAX; self.n_groups];
+        for (i, &g) in group_map.iter().enumerate() {
+            assert!(g < self.n_groups, "group_map entry {g} out of range");
+            reduced_of[g] = i;
+        }
+        let classes: Vec<Vec<usize>> = self
+            .classes
+            .iter()
+            .map(|class| {
+                class.iter().filter_map(|&g| {
+                    let i = reduced_of[g];
+                    (i != usize::MAX).then_some(i)
+                }).collect::<Vec<usize>>()
+            })
+            .filter(|c: &Vec<usize>| !c.is_empty())
+            .collect();
+        GroupColoring { classes, n_groups: group_map.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{CscMatrix, DenseMatrix, ScreenedView};
+    use crate::util::Rng;
+
+    fn touched(x: &impl DesignMatrix, groups: &GroupStructure, g: usize) -> Vec<u64> {
+        let words = x.rows().div_ceil(64).max(1);
+        let mut bits = vec![0u64; words];
+        let (s, e) = groups.range(g);
+        for j in s..e {
+            x.col_touched_rows(j, &mut bits);
+        }
+        bits
+    }
+
+    fn assert_valid_coloring(x: &impl DesignMatrix, groups: &GroupStructure, col: &GroupColoring) {
+        // Every group appears exactly once.
+        let mut seen = vec![false; groups.n_groups()];
+        for class in col.classes() {
+            for &g in class {
+                assert!(!seen[g], "group {g} colored twice");
+                seen[g] = true;
+            }
+            assert!(class.windows(2).all(|w| w[0] < w[1]), "class not ascending");
+        }
+        assert!(seen.iter().all(|&s| s), "missing group");
+        // Conflict-freedom within classes.
+        for class in col.classes() {
+            for (a_pos, &a) in class.iter().enumerate() {
+                for &b in &class[a_pos + 1..] {
+                    assert!(
+                        !intersects(&touched(x, groups, a), &touched(x, groups, b)),
+                        "groups {a} and {b} share a touched row inside one class"
+                    );
+                }
+            }
+        }
+        // Linear extension: conflicting g < h ⇒ level(g) < level(h).
+        let mut level = vec![0usize; groups.n_groups()];
+        for (c, class) in col.classes().iter().enumerate() {
+            for &g in class {
+                level[g] = c;
+            }
+        }
+        for g in 0..groups.n_groups() {
+            for h in g + 1..groups.n_groups() {
+                if intersects(&touched(x, groups, g), &touched(x, groups, h)) {
+                    assert!(
+                        level[g] < level[h],
+                        "conflicting pair ({g},{h}) not ordered by level"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_random_sparse_colorings_are_conflict_free_linear_extensions() {
+        // Property test over random CSC matrices and random group shapes.
+        for seed in 0..20u64 {
+            let mut rng = Rng::seed_from_u64(seed * 31 + 7);
+            let n = 8 + rng.below(120);
+            let mut sizes = Vec::new();
+            let mut p = 0usize;
+            while p < 30 {
+                let s = 1 + rng.below(6);
+                sizes.push(s);
+                p += s;
+            }
+            let groups = GroupStructure::from_sizes(&sizes);
+            let density = 0.02 + 0.3 * rng.uniform_range(0.0, 1.0);
+            let d = DenseMatrix::from_fn(n, p, |_, _| {
+                if rng.uniform_range(0.0, 1.0) < density {
+                    rng.gaussian() as f32
+                } else {
+                    0.0
+                }
+            });
+            let s = CscMatrix::from_dense(&d);
+            let col = GroupColoring::compute(&s, &groups);
+            assert_eq!(col.n_groups(), groups.n_groups());
+            assert_valid_coloring(&s, &groups, &col);
+        }
+    }
+
+    #[test]
+    fn dense_design_degenerates_to_singletons_in_index_order() {
+        let d = DenseMatrix::from_fn(6, 8, |i, j| (i + j) as f32 + 1.0);
+        let groups = GroupStructure::uniform(8, 4);
+        let col = GroupColoring::compute(&d, &groups);
+        assert!(col.is_trivially_sequential());
+        assert_eq!(col.n_classes(), 4);
+        let flat: Vec<usize> = col.classes().iter().flatten().copied().collect();
+        assert_eq!(flat, vec![0, 1, 2, 3], "dense schedule must be the sequential order");
+    }
+
+    /// Paired-block design via [`paired_block_band`] — the classic
+    /// red/black structure (pairs overlap, blocks don't).
+    fn paired_block_design(blocks: usize, cols_per_group: usize) -> (CscMatrix, GroupStructure) {
+        let n = 8 * blocks;
+        let g_count = 2 * blocks;
+        let groups = GroupStructure::uniform(g_count * cols_per_group, g_count);
+        let d = DenseMatrix::from_fn(n, g_count * cols_per_group, |i, j| {
+            let (lo, hi) = paired_block_band(j / cols_per_group);
+            if i >= lo && i < hi {
+                ((i * 3 + j * 7) % 5) as f32 + 1.0
+            } else {
+                0.0
+            }
+        });
+        (CscMatrix::from_dense(&d), groups)
+    }
+
+    #[test]
+    fn paired_blocks_are_red_black_two_colorable() {
+        let (s, groups) = paired_block_design(6, 2);
+        let col = GroupColoring::compute(&s, &groups);
+        assert_eq!(col.n_classes(), 2, "paired blocks must 2-color: {:?}", col.classes());
+        assert_eq!(col.classes()[0], vec![0, 2, 4, 6, 8, 10]);
+        assert_eq!(col.classes()[1], vec![1, 3, 5, 7, 9, 11]);
+        assert!(!col.is_trivially_sequential());
+        assert_eq!(col.max_class_len(), 6);
+        assert_valid_coloring(&s, &groups, &col);
+    }
+
+    #[test]
+    fn overlapping_chain_stays_sequential_by_design() {
+        // Group g on rows [4g, 4g+8): each band overlaps the next, so the
+        // bitwise-equivalence contract forbids any reordering — levels
+        // escalate instead of 2-coloring (see module docs).
+        let g_count = 5usize;
+        let n = 4 * g_count + 4;
+        let groups = GroupStructure::uniform(2 * g_count, g_count);
+        let d = DenseMatrix::from_fn(n, 2 * g_count, |i, j| {
+            let g = j / 2;
+            if i >= 4 * g && i < 4 * g + 8 {
+                1.0
+            } else {
+                0.0
+            }
+        });
+        let s = CscMatrix::from_dense(&d);
+        let col = GroupColoring::compute(&s, &groups);
+        assert!(col.is_trivially_sequential());
+        assert_eq!(col.n_classes(), g_count);
+        assert_valid_coloring(&s, &groups, &col);
+    }
+
+    #[test]
+    fn projection_keeps_order_and_drops_empty_classes() {
+        let (s, groups) = paired_block_design(3, 2);
+        let col = GroupColoring::compute(&s, &groups);
+        assert_eq!(col.classes(), &[vec![0, 2, 4], vec![1, 3, 5]]);
+        // Survivors: full groups 1, 2, 5 → reduced ids 0, 1, 2.
+        let proj = col.project(&[1, 2, 5]);
+        assert_eq!(proj.n_groups(), 3);
+        assert_eq!(proj.classes(), &[vec![1], vec![0, 2]]);
+        // Projecting onto a view's reduced structure stays conflict-free.
+        let keep: Vec<usize> = [1usize, 2, 5]
+            .iter()
+            .flat_map(|&g| {
+                let (s_idx, e_idx) = groups.range(g);
+                s_idx..e_idx
+            })
+            .collect();
+        let view = ScreenedView::new(&s, keep);
+        let red_groups = GroupStructure::uniform(6, 3);
+        for class in proj.classes() {
+            for (a_pos, &a) in class.iter().enumerate() {
+                for &b in &class[a_pos + 1..] {
+                    assert!(!intersects(
+                        &touched(&view, &red_groups, a),
+                        &touched(&view, &red_groups, b)
+                    ));
+                }
+            }
+        }
+    }
+}

@@ -65,8 +65,17 @@ pub struct SolveResult {
 /// inflated by 2% — an overestimate only shrinks the step slightly, while
 /// an underestimate can destabilize FISTA.
 pub fn lipschitz<M: DesignMatrix>(prob: &SglProblem<'_, M>) -> f64 {
+    lipschitz_of(prob.x)
+}
+
+/// [`lipschitz`] for a bare design matrix — the same seed/tolerance/2%
+/// recipe, callable on a survivor view without building an `SglProblem`.
+/// Used by the path runners' amortized per-view refresh
+/// (`PathConfig::lipschitz_refresh_every`), which must produce exactly the
+/// constant the solver would self-compute for that view.
+pub fn lipschitz_of<M: DesignMatrix>(x: &M) -> f64 {
     let mut rng = Rng::seed_from_u64(0x11_57FA);
-    let s = spectral_norm(prob.x, 1e-6, 500, &mut rng).sigma * 1.02;
+    let s = spectral_norm(x, 1e-6, 500, &mut rng).sigma * 1.02;
     (s * s).max(f64::MIN_POSITIVE)
 }
 

@@ -18,10 +18,12 @@
 //!   ablation benches.
 
 pub mod bcd;
+pub mod coloring;
 pub mod dual;
 pub mod fista;
 pub mod objective;
 pub mod problem;
 
+pub use coloring::GroupColoring;
 pub use fista::{solve_fista, FistaOptions, SolveResult};
 pub use problem::{SglParams, SglProblem};

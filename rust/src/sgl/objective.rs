@@ -23,7 +23,9 @@ impl Objective {
 }
 
 /// Compute the residual `r = y − Xβ` into `r_out` (fused single pass via
-/// [`DesignMatrix::residual`] — no separate subtraction sweep).
+/// [`DesignMatrix::residual`] — no separate subtraction sweep; large
+/// sweeps are row-blocked across the worker pool, bitwise identical to
+/// serial).
 pub fn residual<M: DesignMatrix>(prob: &SglProblem<'_, M>, beta: &[f32], r_out: &mut [f32]) {
     prob.x.residual(beta, prob.y, r_out);
 }

@@ -319,6 +319,51 @@ where
     });
 }
 
+/// Split `out` into `workers` contiguous chunks and run
+/// `f(chunk_start_index, chunk_slice)` on each, chunks 1.. on the pool and
+/// chunk 0 on the calling thread.
+///
+/// This is the **row-blocked forward-sweep primitive**: the
+/// `DesignMatrix::matvec` / `residual_matvec` / `residual` defaults call it
+/// with `f = accumulate the β-weighted columns into this row range`. Each
+/// chunk is a disjoint `&mut` sub-slice of the output, so there is no merge
+/// step and no per-worker partial vector to reduce — and because the
+/// accumulation inside a chunk visits columns in exactly the serial order,
+/// the result is bitwise identical to the serial sweep for **every**
+/// partition (the chunk boundaries only decide which thread owns a row,
+/// never the order of additions into it).
+///
+/// The serial fallbacks (1 worker, empty slice, dispatch from inside a pool
+/// worker) invoke `f(0, out)` once over the whole slice — callers must keep
+/// `f` partition-agnostic, which every accumulation kernel here is.
+pub fn parallel_chunks_mut<U, F>(out: &mut [U], workers: usize, f: F)
+where
+    U: Send,
+    F: Fn(usize, &mut [U]) + Sync,
+{
+    let n = out.len();
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n == 0 || in_pool_worker() {
+        f(0, out);
+        return;
+    }
+    let p = pool();
+    if p.senders.is_empty() {
+        f(0, out);
+        return;
+    }
+    let chunk = n.div_ceil(workers);
+    let mut chunks = out.chunks_mut(chunk).enumerate();
+    let (_, first) = chunks.next().expect("n > 0");
+    let f_ref = &f;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+        .map(|(w, slice)| {
+            Box::new(move || f_ref(w * chunk, slice)) as Box<dyn FnOnce() + Send + '_>
+        })
+        .collect();
+    dispatch_round(p, tasks, || f(0, first));
+}
+
 /// The legacy per-call `std::thread::scope` fill, kept as the reference
 /// implementation for the bitwise-parity tests (`tests/backend_parity.rs`)
 /// and the spawn-vs-dispatch overhead comparison in `benches/perf_kernels.rs`.
@@ -510,6 +555,50 @@ mod tests {
         });
         let expect: Vec<usize> = xs.iter().map(|&x| (0..32).map(|i| i * x).sum()).collect();
         assert_eq!(ys, expect);
+    }
+
+    #[test]
+    fn chunks_mut_covers_disjointly_with_correct_starts() {
+        for workers in [1usize, 2, 3, 5, 8, 40] {
+            let mut out = vec![usize::MAX; 1001];
+            parallel_chunks_mut(&mut out, workers, |start, chunk| {
+                for (k, o) in chunk.iter_mut().enumerate() {
+                    // Write the global index: proves the reported start
+                    // matches the chunk's true position in the slice.
+                    *o = start + k;
+                }
+            });
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, i, "workers={workers}");
+            }
+        }
+        let mut empty: Vec<usize> = Vec::new();
+        parallel_chunks_mut(&mut empty, 4, |_, _| panic!("no chunk for empty slice"));
+    }
+
+    #[test]
+    fn chunks_mut_accumulation_is_partition_invariant() {
+        // The forward-sweep usage pattern: accumulate a fixed sequence of
+        // additions into each element. Any partition must give bitwise the
+        // same floats as the serial whole-slice call.
+        let terms: Vec<f32> = (0..37).map(|t| (t as f32 * 0.713).sin()).collect();
+        let accumulate = |start: usize, chunk: &mut [f32]| {
+            for (k, o) in chunk.iter_mut().enumerate() {
+                let i = start + k;
+                for &t in &terms {
+                    *o += t * (i as f32 + 1.0);
+                }
+            }
+        };
+        let mut serial = vec![0.0f32; 513];
+        accumulate(0, &mut serial);
+        for workers in [2usize, 3, 4, 8] {
+            let mut par = vec![0.0f32; 513];
+            parallel_chunks_mut(&mut par, workers, accumulate);
+            for i in 0..513 {
+                assert_eq!(par[i].to_bits(), serial[i].to_bits(), "i={i} workers={workers}");
+            }
+        }
     }
 
     #[test]

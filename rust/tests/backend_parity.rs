@@ -175,6 +175,131 @@ fn persistent_pool_matvec_t_bitwise_matches_serial_and_scoped() {
 }
 
 #[test]
+fn row_blocked_matvec_bitwise_matches_serial_at_all_worker_counts() {
+    // The acceptance-criterion test for the row-blocked forward sweep: the
+    // Xβ accumulation dispatched over row chunks must be bitwise identical
+    // to the serial column-order loop, at several worker counts, on dense,
+    // CSC and view backends — and through all three trait entry points
+    // (matvec, residual_matvec, residual), which share one accumulation
+    // core and differ only in the output's initialization.
+    let d = random_sparse_dense(53, 90, 0.4, 21);
+    let s = CscMatrix::from_dense(&d);
+    let keep: Vec<usize> = (0..90).filter(|j| j % 4 != 1).collect();
+    let view = ScreenedView::new(&s, keep.clone());
+    let mut rng = Rng::seed_from_u64(0xA11);
+    let beta: Vec<f32> = (0..90)
+        .map(|_| if rng.below(3) != 0 { rng.gaussian() as f32 } else { 0.0 })
+        .collect();
+    let beta_view: Vec<f32> = keep.iter().map(|&j| beta[j]).collect();
+    let y: Vec<f32> = (0..53).map(|_| rng.gaussian() as f32).collect();
+
+    // matvec: explicit worker counts against the serial reference.
+    let mut serial_d = vec![0.0f32; 53];
+    d.matvec_serial(&beta, &mut serial_d);
+    let mut serial_s = vec![0.0f32; 53];
+    s.matvec_serial(&beta, &mut serial_s);
+    let mut serial_v = vec![0.0f32; 53];
+    view.matvec_serial(&beta_view, &mut serial_v);
+    for workers in [1usize, 2, 3, 4, 8] {
+        let mut out = vec![0.0f32; 53];
+        d.matvec_with_workers(&beta, &mut out, workers);
+        assert!(
+            out.iter().zip(&serial_d).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "dense matvec workers={workers}"
+        );
+        s.matvec_with_workers(&beta, &mut out, workers);
+        assert!(
+            out.iter().zip(&serial_s).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "csc matvec workers={workers}"
+        );
+        view.matvec_with_workers(&beta_view, &mut out, workers);
+        assert!(
+            out.iter().zip(&serial_v).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "view matvec workers={workers}"
+        );
+    }
+
+    // residual / residual_matvec: the production entry points (worker
+    // count = TLFRE_THREADS, exercised at 1/2/4/8 by the CI matrix)
+    // against serial recomputations of the same fused form.
+    let mut want = vec![0.0f32; 53];
+    for (o, &yi) in want.iter_mut().zip(&y) {
+        *o = -yi;
+    }
+    for (j, &bj) in beta.iter().enumerate() {
+        if bj != 0.0 {
+            d.col_axpy(j, bj, &mut want);
+        }
+    }
+    let mut got = vec![0.0f32; 53];
+    d.residual_matvec(&beta, &y, &mut got);
+    assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()), "residual_matvec");
+
+    want.copy_from_slice(&y);
+    for (j, &bj) in beta.iter().enumerate() {
+        if bj != 0.0 {
+            s.col_axpy(j, -bj, &mut want);
+        }
+    }
+    DesignMatrix::residual(&s, &beta, &y, &mut got);
+    assert!(got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()), "residual");
+
+    // Production matvec on a matrix big enough to cross the dispatch
+    // threshold, so the pooled branch actually runs when TLFRE_THREADS > 1.
+    let big = random_sparse_dense(640, 1200, 0.8, 22);
+    assert!(
+        640 * 1200 >= tlfre::linalg::traits::PAR_MIN_WORK,
+        "test matrix no longer crosses the parallel-dispatch threshold"
+    );
+    let beta_big: Vec<f32> = (0..1200).map(|_| rng.gaussian() as f32).collect();
+    let mut serial_big = vec![0.0f32; 640];
+    big.matvec_serial(&beta_big, &mut serial_big);
+    let mut par_big = vec![0.0f32; 640];
+    big.matvec(&beta_big, &mut par_big);
+    for i in 0..640 {
+        assert_eq!(
+            par_big[i].to_bits(),
+            serial_big[i].to_bits(),
+            "trait matvec≠serial at row {i} (pooled row-blocked sweep)"
+        );
+    }
+}
+
+#[test]
+fn colored_bcd_path_bitwise_matches_sequential_bcd_path() {
+    // Whole-path A/B over the CSC backend: `parallel_bcd_groups` must not
+    // move a single bit of any per-step statistic relative to the
+    // sequential sweep, at any worker count (the CI TLFRE_THREADS matrix
+    // covers 1/2/4/8). On this random sparse design most groups conflict,
+    // so the schedule is near-sequential — the group-level parallel
+    // machinery itself is exercised by the paired-block cases in
+    // sgl/bcd.rs and sgl/coloring.rs; this test pins the end-to-end
+    // runner plumbing (path-level coloring cache + per-λ projection).
+    let spec = SparseSyntheticSpec::new(30, 200, 20, 0.1);
+    let ds = generate_sparse_synthetic(&spec, 424);
+    let base = PathConfig {
+        alpha: 1.0,
+        n_lambda: 10,
+        lambda_min_ratio: 0.05,
+        tol: 1e-7,
+        solver: tlfre::coordinator::SolverKind::Bcd,
+        ..Default::default()
+    };
+    let seq = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &base);
+    let par_cfg = PathConfig { parallel_bcd_groups: true, ..base };
+    let par = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &par_cfg);
+    assert_eq!(seq.steps.len(), par.steps.len());
+    for (ss, sp) in seq.steps.iter().zip(&par.steps) {
+        assert_eq!(ss.lambda.to_bits(), sp.lambda.to_bits(), "λ grids diverged");
+        assert_eq!(ss.r1.to_bits(), sp.r1.to_bits(), "r1 diverged at λ={}", ss.lambda);
+        assert_eq!(ss.r2.to_bits(), sp.r2.to_bits(), "r2 diverged at λ={}", ss.lambda);
+        assert_eq!(ss.zeros, sp.zeros, "zeros diverged at λ={}", ss.lambda);
+        assert_eq!(ss.iters, sp.iters, "sweep counts diverged at λ={}", ss.lambda);
+        assert_eq!(ss.gap.to_bits(), sp.gap.to_bits(), "gap diverged at λ={}", ss.lambda);
+    }
+}
+
+#[test]
 fn dense_csc_screening_parity_and_safety() {
     // Same numerical inputs through both backends: outcomes must agree up
     // to borderline f32-margin cases, and every rejection must be safe.

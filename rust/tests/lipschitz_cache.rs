@@ -150,6 +150,104 @@ fn cached_and_exact_lipschitz_paths_reach_same_solutions() {
 }
 
 #[test]
+fn refreshed_lipschitz_path_matches_cached_and_exact_solutions() {
+    // Three-way A/B: cached (full-matrix constants), amortized refresh
+    // (every 2 steps, subset-validity fallback between refreshes) and
+    // exact per-view. All change step sizes only — coefficients must agree
+    // to the same tolerance the cached-vs-exact test uses.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 160, 16), 314);
+    let cached_cfg = PathConfig {
+        alpha: 1.0,
+        n_lambda: 10,
+        lambda_min_ratio: 0.05,
+        tol: 1e-7,
+        ..Default::default()
+    };
+    let refresh_cfg = PathConfig { lipschitz_refresh_every: Some(2), ..cached_cfg.clone() };
+
+    let a = path_coefficients(&ds.x, &ds.y, &ds.groups, &cached_cfg);
+    let b = path_coefficients(&ds.x, &ds.y, &ds.groups, &refresh_cfg);
+    assert_eq!(a.len(), b.len());
+    for (step, (ba, bb)) in a.iter().zip(&b).enumerate() {
+        let scale = ba
+            .iter()
+            .chain(bb.iter())
+            .fold(0.0f32, |m, &v| m.max(v.abs()))
+            .max(1e-3) as f64;
+        let mut max_diff = 0.0f64;
+        for (x, y) in ba.iter().zip(bb) {
+            max_diff = max_diff.max((x - y).abs() as f64);
+        }
+        assert!(
+            max_diff <= 0.02 * scale,
+            "step {step}: max |β_cached − β_refreshed| = {max_diff} (scale {scale})"
+        );
+    }
+
+    // Runner statistics stay in the usual borderline-coordinate budget,
+    // and the runner agrees with the coefficient walk under refresh (the
+    // lockstep property that cv::path_coefficients mirrors every step-size
+    // decision).
+    let ra = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &refresh_cfg);
+    assert_eq!(ra.steps.len(), b.len());
+    for (bi, s) in b.iter().zip(&ra.steps) {
+        let nnz = bi.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nnz, s.nonzeros, "runner/coefficient-walk lockstep broke at λ={}", s.lambda);
+    }
+}
+
+#[test]
+fn refresh_cadence_amortizes_power_iterations() {
+    // Power-iteration accounting across the three modes, same grid:
+    //   cached   — grid-length-independent (existing test);
+    //   refresh  — grows with the grid, but slower than exact for K > 1;
+    //   exact    — one estimation per λ (the ceiling).
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 120, 12), 2718);
+    let base = PathConfig {
+        alpha: 1.0,
+        n_lambda: 16,
+        lambda_min_ratio: 0.05,
+        tol: 1e-6,
+        ..Default::default()
+    };
+
+    let c0 = spectral_call_count();
+    run_tlfre_path(&ds.x, &ds.y, &ds.groups, &base);
+    let cached_calls = spectral_call_count() - c0;
+
+    let refresh = PathConfig { lipschitz_refresh_every: Some(4), ..base.clone() };
+    let c1 = spectral_call_count();
+    run_tlfre_path(&ds.x, &ds.y, &ds.groups, &refresh);
+    let refresh_calls = spectral_call_count() - c1;
+
+    let exact = PathConfig { exact_view_lipschitz: true, ..base.clone() };
+    let c2 = spectral_call_count();
+    run_tlfre_path(&ds.x, &ds.y, &ds.groups, &exact);
+    let exact_calls = spectral_call_count() - c2;
+
+    assert!(
+        refresh_calls > cached_calls,
+        "refresh mode must run per-view estimations ({refresh_calls} vs cached {cached_calls})"
+    );
+    assert!(
+        refresh_calls < exact_calls,
+        "refresh every 4 must stay under the exact mode's per-λ cost \
+         ({refresh_calls} vs exact {exact_calls})"
+    );
+
+    // Exact mode wins precedence when both knobs are set.
+    let both = PathConfig {
+        exact_view_lipschitz: true,
+        lipschitz_refresh_every: Some(4),
+        ..base
+    };
+    let c3 = spectral_call_count();
+    run_tlfre_path(&ds.x, &ds.y, &ds.groups, &both);
+    let both_calls = spectral_call_count() - c3;
+    assert_eq!(both_calls, exact_calls, "exact_view_lipschitz must supersede the refresh cadence");
+}
+
+#[test]
 fn default_path_runs_zero_power_iterations_per_lambda() {
     // The spectral-call counter is thread-local, so the deltas below see
     // only this test's own work. If the per-λ loop ran any power
