@@ -131,6 +131,12 @@ fn ratio_at(i: usize, k: usize, min_ratio: f64) -> f64 {
 }
 
 /// Re-run a screened path, returning the coefficient vector at every λ.
+///
+/// Dispatches on [`PathConfig::solver`] through the same
+/// [`super::runner::solve`] match the runner uses — a BCD-configured CV
+/// walks a BCD path, with the per-group Lipschitz constants cached once
+/// per path (and the amortized [`GroupRefresher`] schedule) exactly as
+/// `run_tlfre_path` supplies them.
 pub fn path_coefficients<M: DesignMatrix>(
     x: &M,
     y: &[f32],
@@ -139,10 +145,12 @@ pub fn path_coefficients<M: DesignMatrix>(
 ) -> Vec<Vec<f32>> {
     use crate::coordinator::path::log_lambda_grid;
     use crate::coordinator::reduce::ReducedProblem;
-    use crate::coordinator::refresh::ScalarRefresher;
+    use crate::coordinator::refresh::{GroupRefresher, ScalarRefresher};
+    use crate::coordinator::runner::{solve, SolverKind, SpectralCache};
     use crate::screening::lambda_max::sgl_lambda_max;
     use crate::screening::tlfre::{tlfre_screen_inexact, TlfreContext};
-    use crate::sgl::fista::{lipschitz, lipschitz_of, solve_fista, FistaOptions};
+    use crate::sgl::bcd::bcd_group_lipschitz;
+    use crate::sgl::fista::lipschitz_of;
     use crate::sgl::problem::{SglParams, SglProblem};
 
     let prob = SglProblem::new(x, y, groups);
@@ -150,20 +158,19 @@ pub fn path_coefficients<M: DesignMatrix>(
     let lmax = sgl_lambda_max(&prob, cfg.alpha);
     let ctx = TlfreContext::precompute(&prob);
     let grid = log_lambda_grid(lmax.lambda_max, cfg.lambda_min_ratio, cfg.n_lambda);
-    // Same path-level Lipschitz cache — and the same amortized per-view
+    // Same path-level spectral cache — and the same amortized per-view
     // refresh schedule — as `run_tlfre_path`: the two walks must stay in
     // numerical lockstep (the integration tests compare their per-step
     // sparsity exactly), so every step-size decision is mirrored here.
-    let path_lip = if cfg.exact_view_lipschitz { None } else { Some(lipschitz(&prob)) };
-    let mut refresher = match cfg.lipschitz_refresh_every {
-        Some(k) if !cfg.exact_view_lipschitz => Some(ScalarRefresher::new(k, p)),
+    let spectral = SpectralCache::for_path(&prob, cfg);
+    let refresh_every = if cfg.exact_view_lipschitz { None } else { cfg.lipschitz_refresh_every };
+    let mut scalar_refresh = match (refresh_every, cfg.solver) {
+        (Some(k), SolverKind::Fista) => Some(ScalarRefresher::new(k, p)),
         _ => None,
     };
-    let opts = FistaOptions {
-        tol: cfg.tol,
-        max_iter: cfg.max_iter,
-        lipschitz: path_lip,
-        ..Default::default()
+    let mut group_refresh = match (refresh_every, cfg.solver) {
+        (Some(k), SolverKind::Bcd) => Some(GroupRefresher::new(k, p, groups.n_groups())),
+        _ => None,
     };
 
     let mut betas = Vec::with_capacity(grid.len());
@@ -194,21 +201,35 @@ pub fn path_coefficients<M: DesignMatrix>(
         match ReducedProblem::build(x, groups, &outcome) {
             None => beta.fill(0.0),
             Some(red) => {
-                let step_lip = match &mut refresher {
+                let step_lip = match &mut scalar_refresh {
                     Some(rf) => Some(rf.step(
                         red.feature_map(),
-                        path_lip.expect("cached full-matrix bound exists in refresh mode"),
+                        spectral.lip.expect("cached full-matrix bound exists in refresh mode"),
                         || lipschitz_of(&red.x),
                     )),
-                    None => path_lip,
+                    None => spectral.lip,
                 };
+                let step_group_l = match &mut group_refresh {
+                    Some(rf) => Some(rf.step(
+                        red.feature_map(),
+                        &red.groups.ranges(),
+                        &red.group_map,
+                        spectral.group_l.as_deref().expect("cached full-matrix bounds exist"),
+                        || bcd_group_lipschitz(&red.x, &red.groups.ranges()),
+                    )),
+                    None => spectral.reduced_group_l(&red),
+                };
+                let red_coloring = spectral.reduced_coloring(&red);
                 let rp = SglProblem::new(&red.x, y, &red.groups);
                 let warm = red.gather(&beta);
-                let res = solve_fista(
+                let res = solve(
                     &rp,
                     &params,
                     Some(&warm),
-                    &FistaOptions { lipschitz: step_lip, ..opts.clone() },
+                    cfg,
+                    step_lip,
+                    step_group_l.as_deref(),
+                    red_coloring.as_ref(),
                 );
                 red.scatter(&res.beta, &mut beta);
             }
@@ -266,6 +287,39 @@ mod tests {
         for (b, s) in betas.iter().zip(&out.steps) {
             let nnz = b.len() - ops::count_zeros(b);
             assert_eq!(nnz, s.nonzeros, "λ={}", s.lambda);
+        }
+    }
+
+    #[test]
+    fn path_coefficients_honors_bcd_solver() {
+        // Regression: `path_coefficients` used to hardcode FISTA while the
+        // runner dispatched on `cfg.solver`, so a BCD-configured CV
+        // silently evaluated a different solver's path than the one the
+        // runner reported. The BCD walk must now stay in per-step sparsity
+        // lockstep with `run_tlfre_path` under the same config.
+        use crate::coordinator::runner::SolverKind;
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 120, 12), 403);
+        let cfg = PathConfig {
+            solver: SolverKind::Bcd,
+            n_lambda: 8,
+            lambda_min_ratio: 0.05,
+            tol: 1e-6,
+            ..Default::default()
+        };
+        let betas = path_coefficients(&ds.x, &ds.y, &ds.groups, &cfg);
+        let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+        assert_eq!(betas.len(), out.steps.len());
+        for (b, s) in betas.iter().zip(&out.steps) {
+            let nnz = b.len() - ops::count_zeros(b);
+            assert_eq!(nnz, s.nonzeros, "BCD lockstep broke at λ={}", s.lambda);
+        }
+        // The refresh schedule must stay mirrored for BCD too.
+        let refresh_cfg = PathConfig { lipschitz_refresh_every: Some(2), ..cfg };
+        let betas_r = path_coefficients(&ds.x, &ds.y, &ds.groups, &refresh_cfg);
+        let out_r = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &refresh_cfg);
+        for (b, s) in betas_r.iter().zip(&out_r.steps) {
+            let nnz = b.len() - ops::count_zeros(b);
+            assert_eq!(nnz, s.nonzeros, "BCD refresh lockstep broke at λ={}", s.lambda);
         }
     }
 }

@@ -178,7 +178,11 @@ impl PathOutput {
     }
 }
 
-fn solve<M: DesignMatrix>(
+/// Dispatch one reduced (or full) solve on [`PathConfig::solver`]. Shared
+/// by every path walker — the runner, the baseline, and the CV coefficient
+/// walk all route through this single match, so a new `SolverKind` cannot
+/// be wired into one walker and forgotten in another.
+pub(crate) fn solve<M: DesignMatrix>(
     prob: &SglProblem<'_, M>,
     params: &SglParams,
     warm: Option<&[f32]>,
@@ -220,16 +224,16 @@ fn solve<M: DesignMatrix>(
 /// screened subproblem — by default no power iteration runs inside the
 /// per-λ loop. Its construction cost is counted as screening time, exactly
 /// like the paper's one-off `‖X_g‖₂` power-method accounting.
-struct SpectralCache {
+pub(crate) struct SpectralCache {
     /// `‖X‖₂²·1.02²` — the FISTA step bound (see [`lipschitz`]).
-    lip: Option<f64>,
+    pub(crate) lip: Option<f64>,
     /// Per-group `‖X_g‖₂²` in original group order — the BCD step bounds.
-    group_l: Option<Vec<f64>>,
+    pub(crate) group_l: Option<Vec<f64>>,
     /// Red-black group coloring for pool-parallel BCD sweeps, computed
     /// once per path from the full matrix's storage pattern and projected
     /// per reduced problem (reduced supports are subsets, so full-matrix
     /// classes stay conflict-free on every survivor view).
-    coloring: Option<GroupColoring>,
+    pub(crate) coloring: Option<GroupColoring>,
 }
 
 impl SpectralCache {
@@ -241,7 +245,10 @@ impl SpectralCache {
     /// `run_baseline_path` supplies). The BCD coloring rides along when
     /// `cfg.parallel_bcd_groups` asks for it (orthogonal to the Lipschitz
     /// mode, so it is cached even under `exact_view_lipschitz`).
-    fn for_path<M: DesignMatrix>(prob: &SglProblem<'_, M>, cfg: &PathConfig) -> SpectralCache {
+    pub(crate) fn for_path<M: DesignMatrix>(
+        prob: &SglProblem<'_, M>,
+        cfg: &PathConfig,
+    ) -> SpectralCache {
         let coloring = match cfg.solver {
             SolverKind::Bcd if cfg.parallel_bcd_groups => {
                 Some(GroupColoring::compute(prob.x, prob.groups))
@@ -264,12 +271,15 @@ impl SpectralCache {
     }
 
     /// Project the per-group constants onto a reduced problem's groups.
-    fn reduced_group_l<M: DesignMatrix>(&self, red: &ReducedProblem<'_, M>) -> Option<Vec<f64>> {
+    pub(crate) fn reduced_group_l<M: DesignMatrix>(
+        &self,
+        red: &ReducedProblem<'_, M>,
+    ) -> Option<Vec<f64>> {
         self.group_l.as_ref().map(|gl| red.group_map.iter().map(|&g| gl[g]).collect())
     }
 
     /// Project the coloring onto a reduced problem's groups.
-    fn reduced_coloring<M: DesignMatrix>(
+    pub(crate) fn reduced_coloring<M: DesignMatrix>(
         &self,
         red: &ReducedProblem<'_, M>,
     ) -> Option<GroupColoring> {
