@@ -19,10 +19,18 @@
 //!   `BENCH_solver_path.json`);
 //! * the whole-path before/after of the spectral cache — `run_tlfre_path`
 //!   with cached full-matrix Lipschitz constants vs exact per-view power
-//!   iteration (written to `BENCH_solver_path.json`).
+//!   iteration (written to `BENCH_solver_path.json`);
+//! * fold-parallel cross-validation — the serial reference sweep vs
+//!   sharding fold×α path tasks across the persistent pool (single-pass
+//!   spectral accounting and bitwise serial/sharded equality asserted
+//!   before publishing; feeds `cv_fold_parallel` in
+//!   `BENCH_solver_path.json`).
 
 use tlfre::bench_harness::BenchArgs;
-use tlfre::coordinator::{run_tlfre_path, PathConfig};
+use tlfre::coordinator::{
+    cross_validate, cross_validate_serial, make_folds, run_tlfre_path, PathConfig,
+};
+use tlfre::linalg::SelectRows;
 use tlfre::data::synthetic::{
     generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec,
 };
@@ -420,6 +428,88 @@ fn main() {
         red_black_speedup,
     );
 
+    // Fold-parallel cross-validation: the serial reference sweep vs
+    // sharding fold×α path tasks across the persistent pool. Three
+    // published properties, the first two asserted before the numbers go
+    // out: `single_pass` (the spectral-call accounting shows exactly one
+    // screened walk per fold×α — the pre-driver CV walked every path
+    // twice), `bitwise_equal` (sharded output == serial output, bit for
+    // bit), and the serial/sharded wall-clock ratio.
+    println!(
+        "\n== cross-validation: serial vs fold-parallel sharding ({} workers) ==",
+        pool::num_threads()
+    );
+    let cv_n = 60usize;
+    let cv_ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(cv_n, 240, 24), args.seed);
+    let cv_folds = args.k_folds();
+    let cv_alphas = [0.5f64, 1.0];
+    let cv_seed = args.seed ^ 0xCF;
+    let cv_cfg = PathConfig {
+        alpha: 1.0,
+        n_lambda: path_n_lambda.min(8),
+        lambda_min_ratio: 0.05,
+        tol: 1e-5,
+        ..Default::default()
+    };
+    // Expected one-walk cost: one runner path per fold×α over the same
+    // splits (thread-local counter; everything below runs on this thread).
+    let folds = make_folds(cv_n, cv_folds, cv_seed);
+    let c0 = tlfre::linalg::power::spectral_call_count();
+    for fold in &folds {
+        let in_fold: std::collections::BTreeSet<usize> = fold.iter().copied().collect();
+        let train_rows: Vec<usize> = (0..cv_n).filter(|i| !in_fold.contains(i)).collect();
+        let x_train = cv_ds.x.select_rows(&train_rows);
+        let y_train: Vec<f32> = train_rows.iter().map(|&i| cv_ds.y[i]).collect();
+        for &alpha in &cv_alphas {
+            let pc = PathConfig { alpha, ..cv_cfg.clone() };
+            run_tlfre_path(&x_train, &y_train, &cv_ds.groups, &pc);
+        }
+    }
+    let one_walk_cost = tlfre::linalg::power::spectral_call_count() - c0;
+    let c1 = tlfre::linalg::power::spectral_call_count();
+    let serial_cv = cross_validate_serial(
+        &cv_ds.x, &cv_ds.y, &cv_ds.groups, &cv_alphas, cv_folds, &cv_cfg, cv_seed,
+    );
+    let cv_calls = tlfre::linalg::power::spectral_call_count() - c1;
+    let cv_single_pass = cv_calls == one_walk_cost;
+    assert!(
+        cv_single_pass,
+        "cross_validate must perform one screened walk per fold×α \
+         ({cv_calls} spectral calls vs {one_walk_cost} for the runner paths)"
+    );
+    let cvcfg = BenchConfig { warmup: 1, runs: 3, max_seconds: 300.0 };
+    let r_cv_serial = bench("serial", &cvcfg, || {
+        black_box(cross_validate_serial(
+            &cv_ds.x, &cv_ds.y, &cv_ds.groups, &cv_alphas, cv_folds, &cv_cfg, cv_seed,
+        ));
+    });
+    let mut sharded_cv = None;
+    let r_cv_sharded = bench("sharded", &cvcfg, || {
+        sharded_cv = Some(cross_validate(
+            &cv_ds.x, &cv_ds.y, &cv_ds.groups, &cv_alphas, cv_folds, &cv_cfg, cv_seed,
+        ));
+    });
+    let sharded_cv = sharded_cv.expect("sharded CV ran");
+    let cv_bitwise_equal = serial_cv.points.len() == sharded_cv.points.len()
+        && serial_cv.points.iter().zip(&sharded_cv.points).all(|(a, b)| {
+            a.alpha.to_bits() == b.alpha.to_bits()
+                && a.lambda_ratio.to_bits() == b.lambda_ratio.to_bits()
+                && a.mse.to_bits() == b.mse.to_bits()
+                && a.mean_nnz.to_bits() == b.mean_nnz.to_bits()
+        })
+        && serial_cv.nonfinite_points == sharded_cv.nonfinite_points;
+    assert!(cv_bitwise_equal, "fold-parallel CV diverged from the serial sweep");
+    let cv_speedup = r_cv_serial.seconds.median / r_cv_sharded.seconds.median.max(1e-12);
+    println!(
+        "  {} folds × {} α × {} λ   serial {:8.2} ms   sharded {:8.2} ms   ({:4.2}x, single pass, bitwise equal)",
+        cv_folds,
+        cv_alphas.len(),
+        cv_cfg.n_lambda,
+        r_cv_serial.seconds.median * 1e3,
+        r_cv_sharded.seconds.median * 1e3,
+        cv_speedup,
+    );
+
     let path_json = |out: &tlfre::coordinator::PathOutput, wall_s: f64| {
         Json::obj()
             .set("wall_s", wall_s)
@@ -474,6 +564,19 @@ fn main() {
                 .set("colored_ms", r_rb_par.seconds.median * 1e3)
                 .set("colored_speedup_vs_sequential", red_black_speedup)
                 .set("bitwise_equal", rb_bitwise_equal),
+        )
+        .set(
+            "cv_fold_parallel",
+            Json::obj()
+                .set("k_folds", cv_folds)
+                .set("n_alphas", cv_alphas.len())
+                .set("n_lambda", cv_cfg.n_lambda)
+                .set("workers", pool::num_threads())
+                .set("serial_s", r_cv_serial.seconds.median)
+                .set("sharded_s", r_cv_sharded.seconds.median)
+                .set("sharded_speedup_vs_serial", cv_speedup)
+                .set("single_pass", cv_single_pass)
+                .set("bitwise_equal", cv_bitwise_equal),
         );
     // Workspace root for the same reason as BENCH_backends.json above.
     let path_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_solver_path.json");

@@ -23,13 +23,23 @@ pub struct BenchArgs {
     pub n_alpha: Option<usize>,
     /// Override the simulated-real-data feature scale.
     pub scale: Option<f64>,
+    /// Override the CV fold count.
+    pub k_folds: Option<usize>,
     /// Emit a machine-readable JSON report to this path.
     pub json_out: Option<String>,
 }
 
 impl Default for BenchArgs {
     fn default() -> Self {
-        BenchArgs { full: false, seed: 42, n_lambda: None, n_alpha: None, scale: None, json_out: None }
+        BenchArgs {
+            full: false,
+            seed: 42,
+            n_lambda: None,
+            n_alpha: None,
+            scale: None,
+            k_folds: None,
+            json_out: None,
+        }
     }
 }
 
@@ -46,6 +56,7 @@ impl BenchArgs {
                 "--n-lambda" => a.n_lambda = args.next().and_then(|v| v.parse().ok()),
                 "--n-alpha" => a.n_alpha = args.next().and_then(|v| v.parse().ok()),
                 "--scale" => a.scale = args.next().and_then(|v| v.parse().ok()),
+                "--k-folds" => a.k_folds = args.next().and_then(|v| v.parse().ok()),
                 "--json-out" => a.json_out = args.next(),
                 _ => {} // cargo bench passes --bench etc.
             }
@@ -91,6 +102,11 @@ impl BenchArgs {
     /// Simulated-real-set feature scale.
     pub fn scale(&self) -> f64 {
         self.scale.unwrap_or(if self.full { 1.0 } else { 0.02 })
+    }
+
+    /// CV fold count for this profile (paper-style model selection: 5).
+    pub fn k_folds(&self) -> usize {
+        self.k_folds.unwrap_or(if self.full { 5 } else { 3 })
     }
 
     /// Synthetic data set dimensions `(n, p, groups)` for this profile.

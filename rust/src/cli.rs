@@ -5,6 +5,8 @@
 //! tlfre solve-path --dataset synthetic1|synthetic2|sparse1|adni-gmv|... [--alpha 1.0]
 //!                  [--n-lambda 100] [--no-screening] [--verify] [--config cfg.json]
 //!                  [--backend dense|csc] [--density 0.05]
+//! tlfre cv         --dataset ... [--k-folds 5] [--alpha 1.0] [--solver bcd]
+//!                  [--cv-serial] [--backend dense|csc]
 //! tlfre dpc-path   --dataset mnist|pie|... [--n-lambda 100] [--no-screening]
 //! tlfre lambda-max --dataset ... [--alpha 1.0]
 //! tlfre runtime-info
@@ -12,14 +14,17 @@
 
 use crate::bail;
 use crate::config::Config;
-use crate::coordinator::runner::{PathConfig, PathOutput};
-use crate::coordinator::{run_baseline_path, run_dpc_path, run_nonneg_baseline, run_tlfre_path, DpcPathConfig};
+use crate::coordinator::runner::{PathConfig, PathOutput, SolverKind};
+use crate::coordinator::{
+    cross_validate, cross_validate_serial, run_baseline_path, run_dpc_path, run_nonneg_baseline,
+    run_tlfre_path, CvOutput, DpcPathConfig,
+};
 use crate::data::registry::RealDataset;
 use crate::data::synthetic::{generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec};
 use crate::data::Dataset;
 use crate::error::{Context, Result};
 use crate::groups::GroupStructure;
-use crate::linalg::{CscMatrix, DesignMatrix};
+use crate::linalg::{CscMatrix, DesignMatrix, SelectRows};
 use crate::util::{fmt_duration, Timer};
 use std::collections::HashMap;
 
@@ -126,6 +131,9 @@ USAGE: tlfre <command> [flags]
 
 COMMANDS:
   solve-path    run a TLFre-screened SGL λ-path on a dataset
+  cv            k-fold cross-validation over the (α, λ) grid — one
+                screened path walk per fold×α, sharded across the
+                worker pool (bitwise identical to the serial sweep)
   dpc-path      run a DPC-screened nonnegative-Lasso λ-path
   generate      generate a dataset and save it to disk
   lambda-max    print λmax^α and the Corollary 10 curve sample
@@ -144,7 +152,11 @@ COMMON FLAGS:
   --n-lambda <usize>   λ grid size (default 100)
   --min-ratio <f64>    λmin/λmax (default 0.01)
   --tol <f64>          relative duality-gap tolerance (default 1e-6)
+  --solver <name>      path solver: fista (default) | bcd
   --config <path>      JSON config (overridden by explicit flags)
+  --k-folds <usize>    CV fold count (cv command; default 5)
+  --cv-serial          run CV folds serially on one thread (reference
+                       sweep; output is bitwise identical either way)
   --no-screening       baseline path without screening
   --verify             re-solve unscreened each step and assert safety
   --refresh-every <K>  re-estimate survivor-view Lipschitz data every K
@@ -172,6 +184,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         }
         "generate" => cmd_generate(&args),
         "solve-path" => cmd_solve_path(&args),
+        "cv" => cmd_cv(&args),
         "dpc-path" => cmd_dpc_path(&args),
         "lambda-max" => cmd_lambda_max(&args),
         "runtime-info" => cmd_runtime_info(),
@@ -201,6 +214,13 @@ fn common_config(args: &Args) -> Result<Config> {
     }
     if let Some(v) = args.get_parsed::<f64>("scale")? {
         cfg.scale = v;
+    }
+    if let Some(v) = args.get("solver") {
+        cfg.solver = match v {
+            "fista" => SolverKind::Fista,
+            "bcd" => SolverKind::Bcd,
+            other => bail!("unknown solver '{other}' (fista|bcd)"),
+        };
     }
     Ok(cfg)
 }
@@ -294,6 +314,87 @@ fn run_sgl_path<M: DesignMatrix>(
         println!("json written to {path}");
     }
     Ok(0)
+}
+
+fn cmd_cv(args: &Args) -> Result<i32> {
+    let cfg = common_config(args)?;
+    let name = args.get("dataset").context("--dataset is required")?;
+    let k_folds = args.get_parsed::<usize>("k-folds")?.unwrap_or(cfg.k_folds);
+    if k_folds < 2 {
+        bail!("--k-folds must be ≥ 2");
+    }
+    // `--alpha` narrows the grid to a single α; otherwise the config's α
+    // grid (default: the paper's seven tan(ψ) values) is cross-validated.
+    let alphas: Vec<f64> = match args.get_parsed::<f64>("alpha")? {
+        Some(a) => vec![a],
+        None => cfg.alphas.clone(),
+    };
+    let mut pc = cfg.path_config(alphas[0]);
+    if let Some(k) = args.get_parsed::<usize>("refresh-every")? {
+        pc.lipschitz_refresh_every = if k == 0 { None } else { Some(k) };
+    }
+    if args.has("parallel-bcd") {
+        pc.parallel_bcd_groups = true;
+    }
+
+    let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
+    println!("{}", ds.describe());
+    let backend = args.get("backend").unwrap_or("dense");
+    let t = Timer::start();
+    let out = match backend {
+        "dense" => run_cv(&ds.x, &ds.y, &ds.groups, &alphas, k_folds, &pc, cfg.seed, args),
+        "csc" => {
+            let xs = CscMatrix::from_dense(&ds.x);
+            println!("csc backend: nnz {} ({:.2}% dense)", xs.nnz(), xs.density() * 100.0);
+            run_cv(&xs, &ds.y, &ds.groups, &alphas, k_folds, &pc, cfg.seed, args)
+        }
+        other => bail!("unknown backend '{other}' (dense|csc)"),
+    };
+    let wall = t.elapsed_s();
+    println!(
+        "cv: {k_folds} folds × {} α × {} λ = {} fold-paths ({} grid points){}",
+        alphas.len(),
+        pc.n_lambda,
+        k_folds * alphas.len(),
+        out.points.len(),
+        if args.has("cv-serial") { ", serial sweep" } else { "" },
+    );
+    if out.nonfinite_points > 0 {
+        println!(
+            "warning: {} grid point(s) with non-finite MSE skipped in model selection",
+            out.nonfinite_points
+        );
+    }
+    println!(
+        "best: α={:.4}  λ/λmax={:.4}  mse={:.6}  mean nnz={:.1}",
+        out.best.alpha, out.best.lambda_ratio, out.best.mse, out.best.mean_nnz
+    );
+    println!(
+        "screen {}  solve {}  wall {}",
+        fmt_duration(out.screen_total_s),
+        fmt_duration(out.solve_total_s),
+        fmt_duration(wall)
+    );
+    Ok(0)
+}
+
+/// Dispatch CV on the sharded or serial sweep (same output bitwise).
+#[allow(clippy::too_many_arguments)]
+fn run_cv<M: DesignMatrix + SelectRows>(
+    x: &M,
+    y: &[f32],
+    groups: &GroupStructure,
+    alphas: &[f64],
+    k_folds: usize,
+    pc: &PathConfig,
+    seed: u64,
+    args: &Args,
+) -> CvOutput {
+    if args.has("cv-serial") {
+        cross_validate_serial(x, y, groups, alphas, k_folds, pc, seed)
+    } else {
+        cross_validate(x, y, groups, alphas, k_folds, pc, seed)
+    }
 }
 
 fn cmd_dpc_path(args: &Args) -> Result<i32> {

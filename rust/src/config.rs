@@ -29,6 +29,8 @@ pub struct Config {
     pub seed: u64,
     /// Feature-dimension scale for simulated real data sets.
     pub scale: f64,
+    /// Fold count for the `cv` command / [`crate::coordinator::cv`].
+    pub k_folds: usize,
     /// Amortized per-view Lipschitz refresh cadence (path steps); `None`
     /// (default) reuses the full-matrix constants for the whole path. See
     /// [`crate::coordinator::runner::PathConfig::lipschitz_refresh_every`].
@@ -51,6 +53,7 @@ impl Default for Config {
             max_iter: 20_000,
             seed: 42,
             scale: 0.1,
+            k_folds: 5,
             lipschitz_refresh_every: None,
             parallel_bcd_groups: false,
         }
@@ -71,6 +74,9 @@ impl Config {
                         .iter()
                         .map(|x| x.as_f64().context("alpha must be a number"))
                         .collect::<Result<_>>()?;
+                    if cfg.alphas.is_empty() {
+                        bail!("alphas must be non-empty");
+                    }
                     if cfg.alphas.iter().any(|&a| a <= 0.0) {
                         bail!("alphas must be positive");
                     }
@@ -117,11 +123,19 @@ impl Config {
                         bail!("scale must be in (0, 1]");
                     }
                 }
+                "k_folds" => {
+                    cfg.k_folds = val.as_usize().context("k_folds must be an integer")?;
+                    if cfg.k_folds < 2 {
+                        bail!("k_folds must be ≥ 2");
+                    }
+                }
                 other => bail!("unknown config key '{other}'"),
             }
         }
-        if cfg.n_lambda < 2 {
-            bail!("n_lambda must be ≥ 2");
+        // n_lambda == 1 is the legal single-point grid (λmax alone); only
+        // an empty grid is rejected (matches PathConfig::validate).
+        if cfg.n_lambda < 1 {
+            bail!("n_lambda must be ≥ 1");
         }
         Ok(cfg)
     }
@@ -150,6 +164,7 @@ impl Config {
             .set("max_iter", self.max_iter)
             .set("seed", self.seed as usize)
             .set("scale", self.scale)
+            .set("k_folds", self.k_folds)
             .set(
                 "lipschitz_refresh_every",
                 match self.lipschitz_refresh_every {
@@ -209,12 +224,23 @@ mod tests {
         assert!(Config::from_json(r#"{"solver": "adam"}"#).is_err());
         assert!(Config::from_json(r#"{"lambda_min_ratio": 2.0}"#).is_err());
         assert!(Config::from_json(r#"{"alphas": [1.0, -2.0]}"#).is_err());
-        assert!(Config::from_json(r#"{"n_lambda": 1}"#).is_err());
+        assert!(Config::from_json(r#"{"alphas": []}"#).is_err());
+        assert!(Config::from_json(r#"{"n_lambda": 0}"#).is_err());
         assert!(Config::from_json(r#"{"scale": 0.0}"#).is_err());
+        assert!(Config::from_json(r#"{"k_folds": 1}"#).is_err());
         assert!(Config::from_json(r#"{"lipschitz_refresh_every": 0}"#).is_err());
         assert!(Config::from_json(r#"{"lipschitz_refresh_every": "often"}"#).is_err());
         assert!(Config::from_json(r#"{"parallel_bcd_groups": 1}"#).is_err());
         assert!(Config::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn single_point_grid_and_cv_folds_parse() {
+        // n_lambda == 1 is the legal degenerate grid (the λmax endpoint).
+        let cfg = Config::from_json(r#"{"n_lambda": 1, "k_folds": 3}"#).unwrap();
+        assert_eq!(cfg.n_lambda, 1);
+        assert_eq!(cfg.k_folds, 3);
+        cfg.path_config(1.0).validate();
     }
 
     #[test]

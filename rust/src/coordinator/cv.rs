@@ -6,12 +6,37 @@
 //! values". This module runs k-fold CV where every fold×α path is a
 //! TLFre-screened path — the end-to-end setting in which screening's
 //! speedup multiplies across the whole model-selection procedure.
+//!
+//! ## One walk per fold×α
+//!
+//! Each fold×α grid is walked **exactly once**: the streaming driver
+//! ([`super::driver`]) screens/solves the path and a
+//! [`HoldoutSink`] folds every step's β into held-out predictions on the
+//! spot. (The pre-driver implementation walked every path twice — once in
+//! `run_tlfre_path` for stats, once in a hand-mirrored `path_coefficients`
+//! for β — and the mirror had drifted: it hardcoded FISTA while the runner
+//! dispatched on `cfg.solver`.) The single-walk property is observable:
+//! the power-iteration counter delta of a CV run equals the sum of the
+//! per-path deltas, asserted in `tests/cv_parallel.rs`.
+//!
+//! ## Fold-parallel sharding, bitwise deterministic
+//!
+//! Fold×α path tasks are sharded across the persistent
+//! [`crate::util::pool`] ([`pool::parallel_map_with_workers`]). Each path
+//! stays internally serial from the pool's point of view (nested sweeps
+//! degrade to serial loops on pool workers — which are bitwise identical
+//! to the parallel sweeps by the pool's determinism guarantee), tasks run
+//! in fold-major order-preserving chunks, and the fold accumulation below
+//! replays exactly the serial sweep's addition order. Consequence: CV
+//! output is **bitwise identical** to [`cross_validate_serial`] at every
+//! `TLFRE_THREADS` / worker count (enforced by `tests/cv_parallel.rs` and
+//! the CI thread matrix).
 
-use super::runner::{run_tlfre_path, PathConfig};
+use super::driver::{drive_tlfre_path, CoefficientSink, HoldoutSink};
+use super::runner::PathConfig;
 use crate::groups::GroupStructure;
-use crate::linalg::ops;
 use crate::linalg::{DesignMatrix, SelectRows};
-use crate::util::Rng;
+use crate::util::{pool, Rng};
 
 /// One grid point's cross-validated error.
 #[derive(Debug, Clone)]
@@ -34,6 +59,11 @@ pub struct CvOutput {
     /// Total screening / solving time across all folds (seconds).
     pub screen_total_s: f64,
     pub solve_total_s: f64,
+    /// Grid points whose cross-fold mean MSE came out non-finite (diverged
+    /// solve, degenerate fold). They are skipped in the [`Self::best`]
+    /// selection instead of poisoning it; a nonzero count is the caller's
+    /// cue to inspect the grid.
+    pub nonfinite_points: usize,
 }
 
 /// Split `n` samples into `k` folds (seeded permutation).
@@ -49,8 +79,30 @@ pub fn make_folds(n: usize, k: usize, seed: u64) -> Vec<Vec<usize>> {
     folds
 }
 
-/// Run k-fold CV over `alphas` with TLFre-screened paths. Works over any
+/// Per-task result of one fold×α screened path walk.
+struct FoldAlphaResult {
+    /// Held-out MSE per λ grid point.
+    mse: Vec<f64>,
+    /// Nonzero count per λ grid point.
+    nnz: Vec<f64>,
+    screen_s: f64,
+    solve_s: f64,
+}
+
+/// Train/test split of one fold, extracted once before the fan-out.
+struct FoldData<M> {
+    x_train: M,
+    y_train: Vec<f32>,
+    x_test: M,
+    y_test: Vec<f32>,
+}
+
+/// Run k-fold CV over `alphas` with TLFre-screened paths, sharding the
+/// fold×α path tasks across the persistent worker pool. Works over any
 /// backend that supports fold extraction ([`SelectRows`]: dense and CSC).
+///
+/// Output is bitwise identical to [`cross_validate_serial`] at every
+/// worker count (see the module docs for why).
 pub fn cross_validate<M: DesignMatrix + SelectRows>(
     x: &M,
     y: &[f32],
@@ -60,53 +112,110 @@ pub fn cross_validate<M: DesignMatrix + SelectRows>(
     base_cfg: &PathConfig,
     seed: u64,
 ) -> CvOutput {
+    cross_validate_with_workers(x, y, groups, alphas, k_folds, base_cfg, seed, pool::num_threads())
+}
+
+/// The serial reference sweep: identical output, one fold×α path at a
+/// time on the calling thread. Kept public for A/B parity tests and the
+/// `perf_kernels` before/after bench.
+pub fn cross_validate_serial<M: DesignMatrix + SelectRows>(
+    x: &M,
+    y: &[f32],
+    groups: &GroupStructure,
+    alphas: &[f64],
+    k_folds: usize,
+    base_cfg: &PathConfig,
+    seed: u64,
+) -> CvOutput {
+    cross_validate_with_workers(x, y, groups, alphas, k_folds, base_cfg, seed, 1)
+}
+
+/// [`cross_validate`] with an explicit worker count (the parity tests
+/// sweep it; production callers use the `TLFRE_THREADS`-derived default).
+#[allow(clippy::too_many_arguments)]
+pub fn cross_validate_with_workers<M: DesignMatrix + SelectRows>(
+    x: &M,
+    y: &[f32],
+    groups: &GroupStructure,
+    alphas: &[f64],
+    k_folds: usize,
+    base_cfg: &PathConfig,
+    seed: u64,
+    workers: usize,
+) -> CvOutput {
+    base_cfg.validate();
+    assert!(!alphas.is_empty(), "need at least one alpha");
     let n = x.rows();
+    // k > n would leave empty folds (and 0/0 NaN fold MSEs downstream);
+    // make_folds holds the same invariant, re-asserted here so the message
+    // names the CV entry point's arguments.
+    assert!(
+        k_folds >= 2 && k_folds <= n,
+        "need 2 ≤ k_folds ≤ n samples (got k_folds={k_folds}, n={n})"
+    );
     let folds = make_folds(n, k_folds, seed);
     let n_lambda = base_cfg.n_lambda;
 
-    // mse[alpha_idx][lambda_idx] accumulated over folds
+    // Fold extraction runs once, serially, before the fan-out — each
+    // fold's train/test split is shared by all of its α tasks (and by
+    // concurrently running workers, which is why all k splits are
+    // materialized upfront: peak memory is ~k× the design matrix for the
+    // duration of the CV run, the price of sharing splits across the
+    // fold×α fan-out without re-extracting per task).
+    let fold_data: Vec<FoldData<M>> = folds
+        .iter()
+        .map(|fold| {
+            let in_fold: std::collections::BTreeSet<usize> = fold.iter().copied().collect();
+            let train_rows: Vec<usize> = (0..n).filter(|i| !in_fold.contains(i)).collect();
+            FoldData {
+                x_train: x.select_rows(&train_rows),
+                y_train: train_rows.iter().map(|&i| y[i]).collect(),
+                x_test: x.select_rows(fold),
+                y_test: fold.iter().map(|&i| y[i]).collect(),
+            }
+        })
+        .collect();
+
+    // Fold-major task order — the serial sweep's loop order. The pooled
+    // map preserves item order and the accumulation below replays it, so
+    // the sharded output is bitwise identical to the serial sweep.
+    let tasks: Vec<(usize, usize)> = (0..folds.len())
+        .flat_map(|fi| (0..alphas.len()).map(move |ai| (fi, ai)))
+        .collect();
+    let results: Vec<FoldAlphaResult> =
+        pool::parallel_map_with_workers(&tasks, workers, |&(fi, ai)| {
+            let fd = &fold_data[fi];
+            let cfg = PathConfig { alpha: alphas[ai], ..base_cfg.clone() };
+            // ONE screened walk: per-task spectral/coloring caches are
+            // built once inside the engine (projected per reduced problem)
+            // and the holdout sink consumes each step's β as it streams.
+            let mut sink = HoldoutSink::new(&fd.x_test, &fd.y_test[..]);
+            let totals = drive_tlfre_path(&fd.x_train, &fd.y_train, groups, &cfg, &mut sink);
+            FoldAlphaResult {
+                mse: sink.mse,
+                nnz: sink.nnz,
+                screen_s: totals.screen_total_s,
+                solve_s: totals.solve_total_s,
+            }
+        });
+
+    // mse[alpha_idx][lambda_idx] accumulated over folds, in task order.
     let mut mse = vec![vec![0.0f64; n_lambda]; alphas.len()];
     let mut nnz = vec![vec![0.0f64; n_lambda]; alphas.len()];
-    let mut screen_total = 0.0;
-    let mut solve_total = 0.0;
-
-    for fold in &folds {
-        // Train rows = complement of the fold.
-        let in_fold: std::collections::BTreeSet<usize> = fold.iter().copied().collect();
-        let train_rows: Vec<usize> = (0..n).filter(|i| !in_fold.contains(i)).collect();
-        let x_train = x.select_rows(&train_rows);
-        let y_train: Vec<f32> = train_rows.iter().map(|&i| y[i]).collect();
-        let x_test = x.select_rows(fold);
-        let y_test: Vec<f32> = fold.iter().map(|&i| y[i]).collect();
-
-        for (ai, &alpha) in alphas.iter().enumerate() {
-            let cfg = PathConfig { alpha, ..base_cfg.clone() };
-            let out = run_tlfre_path(&x_train, &y_train, groups, &cfg);
-            screen_total += out.screen_total_s;
-            solve_total += out.solve_total_s;
-            // Held-out MSE per path step requires β per step; the runner
-            // reports stats only, so re-walk the path cheaply: we re-run
-            // predictions from the final coefficients of each step by
-            // recomputing them here. To keep the runner lean we instead
-            // evaluate only the *reported* sparsity and recompute β via a
-            // second screened pass storing coefficients.
-            let betas = path_coefficients(&x_train, &y_train, groups, &cfg);
-            for (li, beta) in betas.iter().enumerate() {
-                let mut pred = vec![0.0f32; fold.len()];
-                x_test.matvec(beta, &mut pred);
-                let mut e = 0.0f64;
-                for (p, t) in pred.iter().zip(&y_test) {
-                    let d = (p - t) as f64;
-                    e += d * d;
-                }
-                mse[ai][li] += e / fold.len() as f64;
-                nnz[ai][li] += (beta.len() - ops::count_zeros(beta)) as f64;
-            }
+    let mut screen_total = 0.0f64;
+    let mut solve_total = 0.0f64;
+    for (&(_, ai), res) in tasks.iter().zip(&results) {
+        debug_assert_eq!(res.mse.len(), n_lambda);
+        screen_total += res.screen_s;
+        solve_total += res.solve_s;
+        for li in 0..n_lambda {
+            mse[ai][li] += res.mse[li];
+            nnz[ai][li] += res.nnz[li];
         }
     }
 
     let kf = folds.len() as f64;
-    let mut points = Vec::new();
+    let mut points = Vec::with_capacity(alphas.len() * n_lambda);
     for (ai, &alpha) in alphas.iter().enumerate() {
         for li in 0..n_lambda {
             points.push(CvPoint {
@@ -117,133 +226,72 @@ pub fn cross_validate<M: DesignMatrix + SelectRows>(
             });
         }
     }
-    let best = points
-        .iter()
-        .min_by(|a, b| a.mse.partial_cmp(&b.mse).unwrap())
-        .expect("nonempty grid")
-        .clone();
-    CvOutput { points, best, screen_total_s: screen_total, solve_total_s: solve_total }
+    let (best, nonfinite_points) = select_best(&points);
+    CvOutput {
+        points,
+        best,
+        screen_total_s: screen_total,
+        solve_total_s: solve_total,
+        nonfinite_points,
+    }
 }
 
-/// λ/λmax at grid index `i` for a log grid with the given floor.
+/// Model selection over the grid: minimum mean MSE among **finite** points
+/// (ordered by [`f64::total_cmp`]), with the count of skipped non-finite
+/// points surfaced. A single NaN fold MSE used to panic the old
+/// `partial_cmp(..).unwrap()` selection; now it can only cost its own grid
+/// point. Falls back to the first grid point if nothing is finite.
+fn select_best(points: &[CvPoint]) -> (CvPoint, usize) {
+    assert!(!points.is_empty(), "nonempty grid");
+    let nonfinite = points.iter().filter(|p| !p.mse.is_finite()).count();
+    if nonfinite > 0 {
+        crate::util::logger::warn(
+            "cv",
+            &format!("{nonfinite}/{} grid points have non-finite MSE; skipped", points.len()),
+        );
+    }
+    let finite_min =
+        points.iter().filter(|p| p.mse.is_finite()).min_by(|a, b| a.mse.total_cmp(&b.mse));
+    let best = match finite_min {
+        Some(p) => p.clone(),
+        None => points[0].clone(),
+    };
+    (best, nonfinite)
+}
+
+/// λ/λmax at grid index `i` for a log grid with the given floor. The
+/// single-point grid (`k == 1`) is the λmax endpoint alone — ratio 1.0
+/// (the old `(k − 1)`-denominator form divided by zero there and returned
+/// NaN).
 fn ratio_at(i: usize, k: usize, min_ratio: f64) -> f64 {
+    if k <= 1 {
+        return 1.0;
+    }
     (min_ratio.ln() * i as f64 / (k - 1) as f64).exp()
 }
 
 /// Re-run a screened path, returning the coefficient vector at every λ.
 ///
-/// Dispatches on [`PathConfig::solver`] through the same
-/// [`super::runner::solve`] match the runner uses — a BCD-configured CV
-/// walks a BCD path, with the per-group Lipschitz constants cached once
-/// per path (and the amortized [`GroupRefresher`] schedule) exactly as
-/// `run_tlfre_path` supplies them.
+/// A [`CoefficientSink`] over the same streaming driver the runner uses —
+/// per-step lockstep with `run_tlfre_path` (solver dispatch, spectral
+/// cache, refresh schedule, everything) holds by construction.
 pub fn path_coefficients<M: DesignMatrix>(
     x: &M,
     y: &[f32],
     groups: &GroupStructure,
     cfg: &PathConfig,
 ) -> Vec<Vec<f32>> {
-    use crate::coordinator::path::log_lambda_grid;
-    use crate::coordinator::reduce::ReducedProblem;
-    use crate::coordinator::refresh::{GroupRefresher, ScalarRefresher};
-    use crate::coordinator::runner::{solve, SolverKind, SpectralCache};
-    use crate::screening::lambda_max::sgl_lambda_max;
-    use crate::screening::tlfre::{tlfre_screen_inexact, TlfreContext};
-    use crate::sgl::bcd::bcd_group_lipschitz;
-    use crate::sgl::fista::lipschitz_of;
-    use crate::sgl::problem::{SglParams, SglProblem};
-
-    let prob = SglProblem::new(x, y, groups);
-    let p = prob.n_features();
-    let lmax = sgl_lambda_max(&prob, cfg.alpha);
-    let ctx = TlfreContext::precompute(&prob);
-    let grid = log_lambda_grid(lmax.lambda_max, cfg.lambda_min_ratio, cfg.n_lambda);
-    // Same path-level spectral cache — and the same amortized per-view
-    // refresh schedule — as `run_tlfre_path`: the two walks must stay in
-    // numerical lockstep (the integration tests compare their per-step
-    // sparsity exactly), so every step-size decision is mirrored here.
-    let spectral = SpectralCache::for_path(&prob, cfg);
-    let refresh_every = if cfg.exact_view_lipschitz { None } else { cfg.lipschitz_refresh_every };
-    let mut scalar_refresh = match (refresh_every, cfg.solver) {
-        (Some(k), SolverKind::Fista) => Some(ScalarRefresher::new(k, p)),
-        _ => None,
-    };
-    let mut group_refresh = match (refresh_every, cfg.solver) {
-        (Some(k), SolverKind::Bcd) => Some(GroupRefresher::new(k, p, groups.n_groups())),
-        _ => None,
-    };
-
-    let mut betas = Vec::with_capacity(grid.len());
-    let mut beta = vec![0.0f32; p];
-    betas.push(beta.clone());
-    let mut lambda_bar = grid[0];
-    let mut resid = vec![0.0f32; prob.n_samples()];
-    let mut corr = vec![0.0f32; p];
-    for &lambda in &grid[1..] {
-        crate::sgl::objective::residual(&prob, &beta, &mut resid);
-        let params_bar = SglParams::from_alpha_lambda(cfg.alpha, lambda_bar);
-        prob.x.matvec_t(&resid, &mut corr);
-        let (gap, s_feas) =
-            crate::sgl::dual::duality_gap(&prob, &params_bar, &beta, &resid, &corr);
-        let theta_bar: Vec<f32> =
-            resid.iter().map(|&v| (v as f64 * s_feas / lambda_bar) as f32).collect();
-        let outcome = tlfre_screen_inexact(
-            &prob,
-            cfg.alpha,
-            lambda,
-            lambda_bar,
-            &theta_bar,
-            gap * cfg.gap_inflation,
-            &lmax,
-            &ctx,
-        );
-        let params = SglParams::from_alpha_lambda(cfg.alpha, lambda);
-        match ReducedProblem::build(x, groups, &outcome) {
-            None => beta.fill(0.0),
-            Some(red) => {
-                let step_lip = match &mut scalar_refresh {
-                    Some(rf) => Some(rf.step(
-                        red.feature_map(),
-                        spectral.lip.expect("cached full-matrix bound exists in refresh mode"),
-                        || lipschitz_of(&red.x),
-                    )),
-                    None => spectral.lip,
-                };
-                let step_group_l = match &mut group_refresh {
-                    Some(rf) => Some(rf.step(
-                        red.feature_map(),
-                        &red.groups.ranges(),
-                        &red.group_map,
-                        spectral.group_l.as_deref().expect("cached full-matrix bounds exist"),
-                        || bcd_group_lipschitz(&red.x, &red.groups.ranges()),
-                    )),
-                    None => spectral.reduced_group_l(&red),
-                };
-                let red_coloring = spectral.reduced_coloring(&red);
-                let rp = SglProblem::new(&red.x, y, &red.groups);
-                let warm = red.gather(&beta);
-                let res = solve(
-                    &rp,
-                    &params,
-                    Some(&warm),
-                    cfg,
-                    step_lip,
-                    step_group_l.as_deref(),
-                    red_coloring.as_ref(),
-                );
-                red.scatter(&res.beta, &mut beta);
-            }
-        }
-        betas.push(beta.clone());
-        lambda_bar = lambda;
-    }
-    betas
+    let mut sink = CoefficientSink::new();
+    drive_tlfre_path(x, y, groups, cfg, &mut sink);
+    sink.betas
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::runner::{run_tlfre_path, SolverKind};
     use crate::data::synthetic::{generate_synthetic, SyntheticSpec};
+    use crate::linalg::ops;
 
     #[test]
     fn folds_partition_samples() {
@@ -270,11 +318,42 @@ mod tests {
         };
         let out = cross_validate(&ds.x, &ds.y, &ds.groups, &[0.5, 1.0], 3, &cfg, 7);
         assert_eq!(out.points.len(), 2 * 12);
+        assert_eq!(out.nonfinite_points, 0);
         assert!(out.best.lambda_ratio < 1.0, "best at λmax (underfit)");
         assert!(out.best.mse.is_finite());
         // The best model recovers roughly the planted sparsity order.
         assert!(out.best.mean_nnz >= 1.0);
         assert!(out.best.mean_nnz < 150.0);
+    }
+
+    #[test]
+    fn single_point_grid_has_ratio_one_not_nan() {
+        // n_lambda == 1 used to divide by (k − 1) == 0 in ratio_at.
+        assert_eq!(ratio_at(0, 1, 0.01), 1.0);
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(24, 80, 8), 404);
+        let cfg = PathConfig { n_lambda: 1, lambda_min_ratio: 0.1, ..Default::default() };
+        let out = cross_validate_serial(&ds.x, &ds.y, &ds.groups, &[1.0], 3, &cfg, 5);
+        assert_eq!(out.points.len(), 1);
+        assert_eq!(out.points[0].lambda_ratio, 1.0);
+        assert!(out.points[0].mse.is_finite(), "λmax MSE is the null-model MSE");
+        assert_eq!(out.points[0].mean_nnz, 0.0, "β ≡ 0 at λmax");
+        assert_eq!(out.nonfinite_points, 0);
+    }
+
+    #[test]
+    fn non_finite_points_do_not_poison_selection() {
+        let mk = |mse: f64| CvPoint { alpha: 1.0, lambda_ratio: 0.5, mse, mean_nnz: 1.0 };
+        // NaN and +inf points are skipped, not selected — and not panicked
+        // on (the old partial_cmp(..).unwrap() died here).
+        let pts = vec![mk(f64::NAN), mk(0.25), mk(f64::INFINITY), mk(0.75)];
+        let (best, nonfinite) = select_best(&pts);
+        assert_eq!(best.mse, 0.25);
+        assert_eq!(nonfinite, 2);
+        // All-non-finite grid: fall back to the first point, count = all.
+        let pts = vec![mk(f64::NAN), mk(f64::NAN)];
+        let (best, nonfinite) = select_best(&pts);
+        assert!(best.mse.is_nan());
+        assert_eq!(nonfinite, 2);
     }
 
     #[test]
@@ -297,7 +376,6 @@ mod tests {
         // silently evaluated a different solver's path than the one the
         // runner reported. The BCD walk must now stay in per-step sparsity
         // lockstep with `run_tlfre_path` under the same config.
-        use crate::coordinator::runner::SolverKind;
         let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 120, 12), 403);
         let cfg = PathConfig {
             solver: SolverKind::Bcd,

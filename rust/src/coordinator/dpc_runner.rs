@@ -1,11 +1,12 @@
 //! DPC pathwise runner for nonnegative Lasso (Section 6.2's protocol).
+//!
+//! Like the SGL runner, this is a thin façade since the streaming-driver
+//! refactor: the per-λ loop lives in [`super::driver`] (the
+//! `DpcEngine`/`DpcBaselineEngine` families) and the two entry points here
+//! attach a [`super::driver::StepSink`] to it.
 
-use super::path::log_lambda_grid;
-use super::refresh::ScalarRefresher;
-use crate::linalg::ops;
-use crate::linalg::{DesignMatrix, ScreenedView};
-use crate::nonneg::{lambda_max, nonneg_lipschitz, solve_nonneg, NonnegOptions, NonnegProblem};
-use crate::util::Timer;
+use super::driver::{drive_dpc_path, drive_nonneg_baseline, StepSink};
+use crate::linalg::DesignMatrix;
 
 /// Configuration for a DPC path run.
 #[derive(Debug, Clone)]
@@ -34,6 +35,19 @@ impl Default for DpcPathConfig {
             gap_inflation: 0.0,
             lipschitz_refresh_every: None,
         }
+    }
+}
+
+impl DpcPathConfig {
+    /// Validate the grid invariants (see
+    /// [`super::runner::PathConfig::validate`]).
+    pub fn validate(&self) {
+        assert!(self.n_lambda >= 1, "n_lambda must be ≥ 1");
+        assert!(
+            self.lambda_min_ratio > 0.0 && self.lambda_min_ratio < 1.0,
+            "lambda_min_ratio must be in (0, 1), got {}",
+            self.lambda_min_ratio
+        );
     }
 }
 
@@ -77,194 +91,32 @@ impl DpcPathOutput {
 
 /// Run the DPC-screened nonnegative-Lasso path.
 pub fn run_dpc_path<M: DesignMatrix>(x: &M, y: &[f32], cfg: &DpcPathConfig) -> DpcPathOutput {
-    let prob = NonnegProblem::new(x, y);
-    let p = x.cols();
-    let n = x.rows();
-
-    let mut screen_total = 0.0f64;
-    let t = Timer::start();
-    let col_norms = x.col_norms();
-    let (lmax, argmax_col) = lambda_max(&prob);
-    // Path-level Lipschitz cache (counted as screening time): `‖X‖₂²` is a
-    // valid step bound for every survivor view (`σmax(X[:,S]) ≤ σmax(X)`),
-    // so no reduced solve re-runs power iteration. `nonneg_lipschitz` is
-    // the solver's own recipe — exact for the full problem.
-    let path_lip = crate::nonneg::nonneg_lipschitz(x);
-    screen_total += t.elapsed_s();
-
-    let grid = log_lambda_grid(lmax, cfg.lambda_min_ratio, cfg.n_lambda);
-    let mut steps = Vec::with_capacity(grid.len());
-    steps.push(DpcStep {
-        lambda: grid[0],
-        rejection: 1.0,
-        screen_s: 0.0,
-        solve_s: 0.0,
-        active_features: 0,
-        iters: 0,
-        zeros: p,
-    });
-
-    let mut beta = vec![0.0f32; p];
-    let mut lambda_bar = lmax;
-    let mut solve_total = 0.0f64;
-    let mut resid = vec![0.0f32; n];
-
-    // Amortized per-view refresh of the solver's step bound (subset-
-    // validity rule in `coordinator::refresh`).
-    let mut refresher =
-        cfg.lipschitz_refresh_every.map(|k| ScalarRefresher::new(k, p));
-
-    let mut corr = vec![0.0f32; p];
-    for &lambda in &grid[1..] {
-        // Feasibility-scaled dual point + gap-based radius inflation (see
-        // the SGL runner for the rationale).
-        let ts = Timer::start();
-        x.residual(&beta, y, &mut resid);
-        x.matvec_t(&resid, &mut corr);
-        let (gap_raw, s_feas) =
-            crate::nonneg::duality_gap(&prob, lambda_bar, &beta, &resid, &corr);
-        let gap_bar = gap_raw * cfg.gap_inflation;
-        let theta_bar: Vec<f32> =
-            resid.iter().map(|&v| (v as f64 * s_feas / lambda_bar) as f32).collect();
-        let out = crate::screening::dpc::dpc_screen_inexact(
-            &prob, lambda, lambda_bar, &theta_bar, gap_bar, lmax, argmax_col, &col_norms,
-        );
-        let active: Vec<usize> = out.active_features();
-        // Refresh inside the screening timer: the amortized power
-        // iteration is spectral preamble work, attributed to screen_s so
-        // solve-time comparisons against the cached mode stay fair.
-        let step_lip = match (&mut refresher, active.is_empty()) {
-            (Some(rf), false) => rf.step(&active, path_lip, || {
-                nonneg_lipschitz(&ScreenedView::new(x, active.clone()))
-            }),
-            _ => path_lip,
-        };
-        let screen_s = ts.elapsed_s();
-        screen_total += screen_s;
-
-        let ts = Timer::start();
-        let (iters, active_n) = if active.is_empty() {
-            beta.fill(0.0);
-            (0usize, 0usize)
-        } else {
-            // Zero-copy survivor view — no per-λ column gather.
-            let xr = ScreenedView::new(x, active.clone());
-            let rp = NonnegProblem::new(&xr, y);
-            let warm: Vec<f32> = active.iter().map(|&j| beta[j]).collect();
-            let res = solve_nonneg(
-                &rp,
-                lambda,
-                Some(&warm),
-                &NonnegOptions {
-                    tol: cfg.tol,
-                    max_iter: cfg.max_iter,
-                    lipschitz: Some(step_lip),
-                    ..Default::default()
-                },
-            );
-            beta.fill(0.0);
-            for (k, &j) in active.iter().enumerate() {
-                beta[j] = res.beta[k];
-            }
-            (res.iters, active.len())
-        };
-        let solve_s = ts.elapsed_s();
-        solve_total += solve_s;
-
-        if cfg.verify_safety {
-            // Exact cached constant for the full problem.
-            let full = solve_nonneg(
-                &prob,
-                lambda,
-                None,
-                &NonnegOptions {
-                    tol: cfg.tol,
-                    max_iter: cfg.max_iter,
-                    lipschitz: Some(path_lip),
-                    ..Default::default()
-                },
-            );
-            for j in 0..p {
-                if !out.feature_kept[j] {
-                    assert!(
-                        full.beta[j].abs() < 1e-4,
-                        "DPC SAFETY VIOLATION at λ={lambda}: feature {j} β={}",
-                        full.beta[j]
-                    );
-                }
-            }
-        }
-
-        let zeros = ops::count_zeros(&beta);
-        steps.push(DpcStep {
-            lambda,
-            rejection: out.rejected as f64 / zeros.max(1) as f64,
-            screen_s,
-            solve_s,
-            active_features: active_n,
-            iters,
-            zeros,
-        });
-        lambda_bar = lambda;
+    let mut sink = StepSink::new();
+    let totals = drive_dpc_path(x, y, cfg, &mut sink);
+    DpcPathOutput {
+        lambda_max: totals.lambda_max,
+        steps: sink.steps,
+        screen_total_s: totals.screen_total_s,
+        solve_total_s: totals.solve_total_s,
     }
-
-    DpcPathOutput { lambda_max: lmax, steps, screen_total_s: screen_total, solve_total_s: solve_total }
 }
 
 /// The no-screening nonnegative-Lasso baseline path (Table 3's "solver").
 pub fn run_nonneg_baseline<M: DesignMatrix>(x: &M, y: &[f32], cfg: &DpcPathConfig) -> DpcPathOutput {
-    let prob = NonnegProblem::new(x, y);
-    let p = x.cols();
-    let (lmax, _) = lambda_max(&prob);
-    let grid = log_lambda_grid(lmax, cfg.lambda_min_ratio, cfg.n_lambda);
-
-    // The solver's canonical step-bound recipe (2% from-below inflation).
-    let lip = crate::nonneg::nonneg_lipschitz(x);
-
-    let mut steps = Vec::with_capacity(grid.len());
-    steps.push(DpcStep {
-        lambda: grid[0],
-        rejection: 0.0,
-        screen_s: 0.0,
-        solve_s: 0.0,
-        active_features: p,
-        iters: 0,
-        zeros: p,
-    });
-    let mut beta = vec![0.0f32; p];
-    let mut solve_total = 0.0f64;
-    for &lambda in &grid[1..] {
-        let ts = Timer::start();
-        let res = solve_nonneg(
-            &prob,
-            lambda,
-            Some(&beta),
-            &NonnegOptions {
-                tol: cfg.tol,
-                max_iter: cfg.max_iter,
-                lipschitz: Some(lip),
-                ..Default::default()
-            },
-        );
-        let solve_s = ts.elapsed_s();
-        solve_total += solve_s;
-        beta = res.beta;
-        steps.push(DpcStep {
-            lambda,
-            rejection: 0.0,
-            screen_s: 0.0,
-            solve_s,
-            active_features: p,
-            iters: res.iters,
-            zeros: ops::count_zeros(&beta),
-        });
+    let mut sink = StepSink::new();
+    let totals = drive_nonneg_baseline(x, y, cfg, &mut sink);
+    DpcPathOutput {
+        lambda_max: totals.lambda_max,
+        steps: sink.steps,
+        screen_total_s: totals.screen_total_s,
+        solve_total_s: totals.solve_total_s,
     }
-    DpcPathOutput { lambda_max: lmax, steps, screen_total_s: 0.0, solve_total_s: solve_total }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::ops;
     use crate::linalg::DenseMatrix;
     use crate::util::Rng;
 

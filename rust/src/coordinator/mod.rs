@@ -7,19 +7,39 @@
 //! matrix handed to the solver. The coordinator owns:
 //!
 //! * grid construction ([`path`]),
+//! * **the streaming path driver** ([`driver`]) — the *single* per-λ loop
+//!   (screen → reduce → refresh → solver dispatch → scatter) behind every
+//!   pathwise workload, streaming each step to a caller-supplied
+//!   [`PathSink`]. The runners and cross-validation are thin sink
+//!   configurations over this one loop, so they cannot diverge (the
+//!   pre-driver CV mirror once hardcoded FISTA while the runner dispatched
+//!   on [`SolverKind`] — that class of bug is now structurally impossible),
 //! * the screening ↔ solver interlock and reduced-problem extraction
 //!   ([`runner`], [`reduce`]),
 //! * the nonnegative-Lasso / DPC equivalent ([`dpc_runner`]),
+//! * k-fold cross-validation ([`cv`]) — **one** screened walk per fold×α
+//!   (a [`HoldoutSink`] folds β into held-out MSE as the path streams),
+//!   sharded across the persistent worker pool with output bitwise
+//!   identical to the serial sweep at every `TLFRE_THREADS`,
 //! * per-step statistics — the paper's rejection ratios r₁/r₂, timings and
 //!   speedups consumed by the bench harness.
 
 pub mod cv;
 pub mod dpc_runner;
+pub mod driver;
 pub mod path;
 pub mod reduce;
 pub(crate) mod refresh;
 pub mod runner;
 
-pub use dpc_runner::{run_dpc_path, run_nonneg_baseline, DpcPathConfig, DpcPathOutput};
+pub use cv::{
+    cross_validate, cross_validate_serial, cross_validate_with_workers, make_folds,
+    path_coefficients, CvOutput, CvPoint,
+};
+pub use dpc_runner::{run_dpc_path, run_nonneg_baseline, DpcPathConfig, DpcPathOutput, DpcStep};
+pub use driver::{
+    drive_baseline_path, drive_dpc_path, drive_nonneg_baseline, drive_tlfre_path,
+    CoefficientSink, HoldoutSink, PathSink, PathTotals, StepSink,
+};
 pub use path::{alpha_grid_from_angles, log_lambda_grid, PAPER_ALPHA_ANGLES};
 pub use runner::{run_baseline_path, run_tlfre_path, PathConfig, PathOutput, PathStep, SolverKind};

@@ -13,10 +13,16 @@ pub fn alpha_grid_from_angles(angles_deg: &[f64]) -> Vec<f64> {
 }
 
 /// Descending log-spaced grid of `k` values from `lambda_max` to
-/// `min_ratio·lambda_max` (inclusive on both ends).
+/// `min_ratio·lambda_max` (inclusive on both ends). `k == 1` is the
+/// degenerate single-point grid: just `[lambda_max]` (the floor is
+/// unreachable with one point, so `min_ratio` only needs to be a valid
+/// ratio, not attained).
 pub fn log_lambda_grid(lambda_max: f64, min_ratio: f64, k: usize) -> Vec<f64> {
-    assert!(k >= 2, "need at least the two endpoints");
+    assert!(k >= 1, "need at least one grid point");
     assert!(lambda_max > 0.0 && min_ratio > 0.0 && min_ratio < 1.0);
+    if k == 1 {
+        return vec![lambda_max];
+    }
     let log_min = min_ratio.ln();
     (0..k)
         .map(|i| {
@@ -39,6 +45,11 @@ mod tests {
         for w in g.windows(2) {
             assert!(w[0] > w[1]);
         }
+    }
+
+    #[test]
+    fn single_point_grid_is_lambda_max() {
+        assert_eq!(log_lambda_grid(2.5, 0.01, 1), vec![2.5]);
     }
 
     #[test]

@@ -11,20 +11,16 @@
 //! Every step records the paper's measurements: rejection ratios
 //! `r₁ = (Σ_{g∈Ḡ} n_g)/m` and `r₂ = |p̄|/m` (m = zero coefficients in the
 //! solution), screening time, solver time, iterations and duality gap.
+//!
+//! Since the streaming-driver refactor, this module is a thin façade: the
+//! per-λ loop lives **once** in [`super::driver`], and `run_tlfre_path` /
+//! `run_baseline_path` are that loop with a [`super::driver::StepSink`]
+//! attached. Cross-validation attaches a different sink to the *same*
+//! loop, so runner/CV divergence is impossible by construction.
 
-use super::path::log_lambda_grid;
-use super::reduce::ReducedProblem;
-use super::refresh::{GroupRefresher, ScalarRefresher};
+use super::driver::{drive_baseline_path, drive_tlfre_path, StepSink};
 use crate::groups::GroupStructure;
-use crate::linalg::ops;
 use crate::linalg::DesignMatrix;
-use crate::screening::lambda_max::sgl_lambda_max;
-use crate::screening::tlfre::TlfreContext;
-use crate::sgl::bcd::{bcd_group_lipschitz, solve_bcd, BcdOptions};
-use crate::sgl::fista::{lipschitz, lipschitz_of, solve_fista, FistaOptions};
-use crate::sgl::problem::{SglParams, SglProblem};
-use crate::sgl::GroupColoring;
-use crate::util::Timer;
 
 /// Which solver backs the path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,7 +34,9 @@ pub enum SolverKind {
 pub struct PathConfig {
     /// The α of problem (3) (λ₁ = αλ).
     pub alpha: f64,
-    /// Number of λ grid points (paper: 100).
+    /// Number of λ grid points (paper: 100). `1` is the degenerate
+    /// single-point grid — just the λmax endpoint (β ≡ 0); see
+    /// [`Self::validate`].
     pub n_lambda: usize,
     /// λ_min / λ_max ratio (paper: 0.01).
     pub lambda_min_ratio: f64,
@@ -117,6 +115,24 @@ impl Default for PathConfig {
     }
 }
 
+impl PathConfig {
+    /// Validate the invariants every path walker relies on. Called by all
+    /// driver entry points (runners and CV); panics with a descriptive
+    /// message on violation. In particular `n_lambda ≥ 1`: a single-point
+    /// grid is the λmax endpoint alone — a legal (if degenerate) path
+    /// whose one solution is identically zero, which used to slip through
+    /// and divide by `n_lambda − 1 = 0` in CV's `lambda_ratio`.
+    pub fn validate(&self) {
+        assert!(self.n_lambda >= 1, "n_lambda must be ≥ 1");
+        assert!(
+            self.lambda_min_ratio > 0.0 && self.lambda_min_ratio < 1.0,
+            "lambda_min_ratio must be in (0, 1), got {}",
+            self.lambda_min_ratio
+        );
+        assert!(self.alpha > 0.0, "alpha must be positive, got {}", self.alpha);
+    }
+}
+
 /// Per-λ statistics.
 #[derive(Debug, Clone)]
 pub struct PathStep {
@@ -178,306 +194,22 @@ impl PathOutput {
     }
 }
 
-/// Dispatch one reduced (or full) solve on [`PathConfig::solver`]. Shared
-/// by every path walker — the runner, the baseline, and the CV coefficient
-/// walk all route through this single match, so a new `SolverKind` cannot
-/// be wired into one walker and forgotten in another.
-pub(crate) fn solve<M: DesignMatrix>(
-    prob: &SglProblem<'_, M>,
-    params: &SglParams,
-    warm: Option<&[f32]>,
-    cfg: &PathConfig,
-    lip: Option<f64>,
-    group_lip: Option<&[f64]>,
-    coloring: Option<&GroupColoring>,
-) -> crate::sgl::fista::SolveResult {
-    match cfg.solver {
-        SolverKind::Fista => solve_fista(
-            prob,
-            params,
-            warm,
-            &FistaOptions {
-                tol: cfg.tol,
-                max_iter: cfg.max_iter,
-                lipschitz: lip,
-                ..Default::default()
-            },
-        ),
-        SolverKind::Bcd => solve_bcd(
-            prob,
-            params,
-            warm,
-            &BcdOptions {
-                tol: cfg.tol,
-                max_sweeps: cfg.max_iter,
-                group_lipschitz: group_lip,
-                parallel_groups: cfg.parallel_bcd_groups,
-                coloring,
-                ..Default::default()
-            },
-        ),
-    }
-}
-
-/// The path-level spectral cache: Lipschitz data computed **once** per path
-/// from the full matrix and reused (as valid upper bounds) for every
-/// screened subproblem — by default no power iteration runs inside the
-/// per-λ loop. Its construction cost is counted as screening time, exactly
-/// like the paper's one-off `‖X_g‖₂` power-method accounting.
-pub(crate) struct SpectralCache {
-    /// `‖X‖₂²·1.02²` — the FISTA step bound (see [`lipschitz`]).
-    pub(crate) lip: Option<f64>,
-    /// Per-group `‖X_g‖₂²` in original group order — the BCD step bounds.
-    pub(crate) group_l: Option<Vec<f64>>,
-    /// Red-black group coloring for pool-parallel BCD sweeps, computed
-    /// once per path from the full matrix's storage pattern and projected
-    /// per reduced problem (reduced supports are subsets, so full-matrix
-    /// classes stay conflict-free on every survivor view).
-    pub(crate) coloring: Option<GroupColoring>,
-}
-
-impl SpectralCache {
-    /// Build for a TLFre path run. Each solver only pays for the constants
-    /// it uses: FISTA the full-matrix `‖X‖₂²` ([`lipschitz`]'s recipe), BCD
-    /// the per-group `‖X_g‖₂²` via [`bcd_group_lipschitz`] — the solver's
-    /// own recipe, so the cached constants are identical to what
-    /// `solve_bcd` would self-compute for the full problem (and what
-    /// `run_baseline_path` supplies). The BCD coloring rides along when
-    /// `cfg.parallel_bcd_groups` asks for it (orthogonal to the Lipschitz
-    /// mode, so it is cached even under `exact_view_lipschitz`).
-    pub(crate) fn for_path<M: DesignMatrix>(
-        prob: &SglProblem<'_, M>,
-        cfg: &PathConfig,
-    ) -> SpectralCache {
-        let coloring = match cfg.solver {
-            SolverKind::Bcd if cfg.parallel_bcd_groups => {
-                Some(GroupColoring::compute(prob.x, prob.groups))
-            }
-            _ => None,
-        };
-        if cfg.exact_view_lipschitz {
-            return SpectralCache { lip: None, group_l: None, coloring };
-        }
-        match cfg.solver {
-            SolverKind::Fista => {
-                SpectralCache { lip: Some(lipschitz(prob)), group_l: None, coloring }
-            }
-            SolverKind::Bcd => SpectralCache {
-                lip: None,
-                group_l: Some(bcd_group_lipschitz(prob.x, &prob.groups.ranges())),
-                coloring,
-            },
-        }
-    }
-
-    /// Project the per-group constants onto a reduced problem's groups.
-    pub(crate) fn reduced_group_l<M: DesignMatrix>(
-        &self,
-        red: &ReducedProblem<'_, M>,
-    ) -> Option<Vec<f64>> {
-        self.group_l.as_ref().map(|gl| red.group_map.iter().map(|&g| gl[g]).collect())
-    }
-
-    /// Project the coloring onto a reduced problem's groups.
-    pub(crate) fn reduced_coloring<M: DesignMatrix>(
-        &self,
-        red: &ReducedProblem<'_, M>,
-    ) -> Option<GroupColoring> {
-        self.coloring.as_ref().map(|c| c.project(&red.group_map))
-    }
-}
-
-/// Run the full TLFre-screened path.
+/// Run the full TLFre-screened path: the streaming driver with a
+/// [`StepSink`] collecting the per-λ statistics.
 pub fn run_tlfre_path<M: DesignMatrix>(
     x: &M,
     y: &[f32],
     groups: &GroupStructure,
     cfg: &PathConfig,
 ) -> PathOutput {
-    let prob = SglProblem::new(x, y, groups);
-    let p = prob.n_features();
-    let n = prob.n_samples();
-
-    // Screening-side precomputation (counted as screening time, like the
-    // paper's ‖X_g‖₂ power-method accounting). The spectral cache lives
-    // here too: after this block the per-λ loop runs zero power iterations
-    // unless `cfg.exact_view_lipschitz` opts back into per-view estimates.
-    let mut screen_total = 0.0f64;
-    let t = Timer::start();
-    let ctx = TlfreContext::precompute(&prob);
-    let lmax = sgl_lambda_max(&prob, cfg.alpha);
-    let spectral = SpectralCache::for_path(&prob, cfg);
-    screen_total += t.elapsed_s();
-
-    let grid = log_lambda_grid(lmax.lambda_max, cfg.lambda_min_ratio, cfg.n_lambda);
-    let mut steps = Vec::with_capacity(grid.len());
-    let mut solve_total = 0.0f64;
-
-    // λ^(0) = λmax: exact zero solution, zero cost.
-    steps.push(PathStep {
-        lambda: grid[0],
-        r1: 1.0,
-        r2: 0.0,
-        screen_s: 0.0,
-        solve_s: 0.0,
-        active_features: 0,
-        iters: 0,
-        gap: 0.0,
-        zeros: p,
-        nonzeros: 0,
-    });
-
-    let mut beta = vec![0.0f32; p];
-    let mut lambda_bar = lmax.lambda_max;
-    let mut gap_bar; // recomputed at every step from the full residual
-    let mut resid = vec![0.0f32; n];
-    let mut corr = vec![0.0f32; p];
-
-    // Amortized per-view Lipschitz refresh trackers (subset-validity rule
-    // in `coordinator::refresh`); the exact mode supersedes them.
-    let refresh_every = if cfg.exact_view_lipschitz { None } else { cfg.lipschitz_refresh_every };
-    let mut scalar_refresh = match (refresh_every, cfg.solver) {
-        (Some(k), SolverKind::Fista) => Some(ScalarRefresher::new(k, p)),
-        _ => None,
-    };
-    let mut group_refresh = match (refresh_every, cfg.solver) {
-        (Some(k), SolverKind::Bcd) => Some(GroupRefresher::new(k, p, groups.n_groups())),
-        _ => None,
-    };
-
-    for &lambda in &grid[1..] {
-        // θ̄ from the previous step: the *feasibility-scaled* residual
-        // s·(y − Xβ̄)/λ̄ (guaranteed dual feasible even for an inexact β̄),
-        // with the radius inflated by the √(2·gap) optimum-distance bound
-        // (see `tlfre_screen_inexact`).
-        let ts = Timer::start();
-        crate::sgl::objective::residual(&prob, &beta, &mut resid);
-        let params_bar = SglParams::from_alpha_lambda(cfg.alpha, lambda_bar);
-        prob.x.matvec_t(&resid, &mut corr);
-        let (gap_bar_full, s_feas) =
-            crate::sgl::dual::duality_gap(&prob, &params_bar, &beta, &resid, &corr);
-        gap_bar = gap_bar_full * cfg.gap_inflation;
-        let theta_bar: Vec<f32> =
-            resid.iter().map(|&v| (v as f64 * s_feas / lambda_bar) as f32).collect();
-        let outcome = crate::screening::tlfre::tlfre_screen_inexact(
-            &prob, cfg.alpha, lambda, lambda_bar, &theta_bar, gap_bar, &lmax, &ctx,
-        );
-        let reduced = ReducedProblem::build(x, groups, &outcome);
-        // Amortized Lipschitz refresh runs inside the screening timer —
-        // the refresh is spectral preamble work, exactly like the
-        // once-per-path cache, so cached-vs-refreshed-vs-exact `solve_s`
-        // comparisons stay apples-to-apples.
-        let (step_lip, step_group_l) = match &reduced {
-            Some(red) => (
-                match &mut scalar_refresh {
-                    Some(rf) => Some(rf.step(
-                        red.feature_map(),
-                        spectral.lip.expect("cached full-matrix bound exists in refresh mode"),
-                        || lipschitz_of(&red.x),
-                    )),
-                    None => spectral.lip,
-                },
-                match &mut group_refresh {
-                    Some(rf) => Some(rf.step(
-                        red.feature_map(),
-                        &red.groups.ranges(),
-                        &red.group_map,
-                        spectral.group_l.as_deref().expect("cached full-matrix bounds exist"),
-                        || bcd_group_lipschitz(&red.x, &red.groups.ranges()),
-                    )),
-                    // Cached full-matrix Lipschitz data: σmax over a column
-                    // subset never exceeds σmax over the full matrix, so the
-                    // path-level constants are valid steps for every reduced
-                    // problem — no per-λ power iteration.
-                    None => spectral.reduced_group_l(red),
-                },
-            ),
-            None => (spectral.lip, None),
-        };
-        let screen_s = ts.elapsed_s();
-        screen_total += screen_s;
-
-        let params = SglParams::from_alpha_lambda(cfg.alpha, lambda);
-        let ts = Timer::start();
-        let (active, iters, gap) = match &reduced {
-            None => {
-                beta.fill(0.0);
-                (0usize, 0usize, 0.0f64)
-            }
-            Some(red) => {
-                let warm = red.gather(&beta);
-                let res = if cfg.materialize_reduced {
-                    // Seed behaviour: physical column gather per λ. The
-                    // projected coloring is NOT handed down here: its
-                    // conflict analysis saw the original backend's storage,
-                    // and a dense gathered copy touches every row — the
-                    // solver recomputes its own (trivially sequential)
-                    // schedule instead.
-                    let xd = red.materialize();
-                    let rp = SglProblem::new(&xd, y, &red.groups);
-                    solve(&rp, &params, Some(&warm), cfg, step_lip, step_group_l.as_deref(), None)
-                } else {
-                    // Zero-copy: the solver runs on the survivor view.
-                    let red_coloring = spectral.reduced_coloring(red);
-                    let rp = SglProblem::new(&red.x, y, &red.groups);
-                    solve(
-                        &rp,
-                        &params,
-                        Some(&warm),
-                        cfg,
-                        step_lip,
-                        step_group_l.as_deref(),
-                        red_coloring.as_ref(),
-                    )
-                };
-                red.scatter(&res.beta, &mut beta);
-                (red.n_features(), res.iters, res.gap)
-            }
-        };
-        let solve_s = ts.elapsed_s();
-        solve_total += solve_s;
-
-        if cfg.verify_safety {
-            // Independent full solve; every screened coordinate must be 0.
-            // The cached constants are exact for the full problem.
-            let full = solve(
-                &prob,
-                &params,
-                None,
-                cfg,
-                spectral.lip,
-                spectral.group_l.as_deref(),
-                spectral.coloring.as_ref(),
-            );
-            for j in 0..p {
-                if !outcome.feature_kept[j] {
-                    assert!(
-                        full.beta[j].abs() < 1e-4,
-                        "SAFETY VIOLATION at λ={lambda}: feature {j} screened but β={}",
-                        full.beta[j]
-                    );
-                }
-            }
-        }
-
-        let zeros = ops::count_zeros(&beta);
-        let m = zeros.max(1);
-        steps.push(PathStep {
-            lambda,
-            r1: outcome.stats.features_in_rejected_groups as f64 / m as f64,
-            r2: outcome.stats.features_rejected_l2 as f64 / m as f64,
-            screen_s,
-            solve_s,
-            active_features: active,
-            iters,
-            gap,
-            zeros,
-            nonzeros: p - zeros,
-        });
-        lambda_bar = lambda;
+    let mut sink = StepSink::new();
+    let totals = drive_tlfre_path(x, y, groups, cfg, &mut sink);
+    PathOutput {
+        lambda_max: totals.lambda_max,
+        steps: sink.steps,
+        screen_total_s: totals.screen_total_s,
+        solve_total_s: totals.solve_total_s,
     }
-
-    PathOutput { lambda_max: lmax.lambda_max, steps, screen_total_s: screen_total, solve_total_s: solve_total }
 }
 
 /// The no-screening baseline: identical grid and warm starts, full matrix
@@ -488,69 +220,14 @@ pub fn run_baseline_path<M: DesignMatrix>(
     groups: &GroupStructure,
     cfg: &PathConfig,
 ) -> PathOutput {
-    let prob = SglProblem::new(x, y, groups);
-    let p = prob.n_features();
-    let lmax = sgl_lambda_max(&prob, cfg.alpha);
-    let grid = log_lambda_grid(lmax.lambda_max, cfg.lambda_min_ratio, cfg.n_lambda);
-
-    // One set of Lipschitz constants reused across the path — the full
-    // matrix never changes. Each solver pays only for its own: the
-    // recipes match the solvers' self-computing fallbacks exactly, so the
-    // baseline's steps are identical to the seed behaviour.
-    let lip: Option<f64> = match cfg.solver {
-        SolverKind::Fista => Some(lipschitz(&prob)),
-        SolverKind::Bcd => None,
-    };
-    let group_l: Option<Vec<f64>> = match cfg.solver {
-        SolverKind::Bcd => Some(bcd_group_lipschitz(x, &groups.ranges())),
-        SolverKind::Fista => None,
-    };
-    // One coloring for the whole baseline path — the full matrix never
-    // changes, so neither does the conflict graph.
-    let coloring: Option<GroupColoring> = match cfg.solver {
-        SolverKind::Bcd if cfg.parallel_bcd_groups => Some(GroupColoring::compute(x, groups)),
-        _ => None,
-    };
-
-    let mut steps = Vec::with_capacity(grid.len());
-    steps.push(PathStep {
-        lambda: grid[0],
-        r1: 0.0,
-        r2: 0.0,
-        screen_s: 0.0,
-        solve_s: 0.0,
-        active_features: p,
-        iters: 0,
-        gap: 0.0,
-        zeros: p,
-        nonzeros: 0,
-    });
-
-    let mut beta = vec![0.0f32; p];
-    let mut solve_total = 0.0f64;
-    for &lambda in &grid[1..] {
-        let params = SglParams::from_alpha_lambda(cfg.alpha, lambda);
-        let ts = Timer::start();
-        let res =
-            solve(&prob, &params, Some(&beta), cfg, lip, group_l.as_deref(), coloring.as_ref());
-        let solve_s = ts.elapsed_s();
-        solve_total += solve_s;
-        beta = res.beta;
-        let zeros = ops::count_zeros(&beta);
-        steps.push(PathStep {
-            lambda,
-            r1: 0.0,
-            r2: 0.0,
-            screen_s: 0.0,
-            solve_s,
-            active_features: p,
-            iters: res.iters,
-            gap: res.gap,
-            zeros,
-            nonzeros: p - zeros,
-        });
+    let mut sink = StepSink::new();
+    let totals = drive_baseline_path(x, y, groups, cfg, &mut sink);
+    PathOutput {
+        lambda_max: totals.lambda_max,
+        steps: sink.steps,
+        screen_total_s: totals.screen_total_s,
+        solve_total_s: totals.solve_total_s,
     }
-    PathOutput { lambda_max: lmax.lambda_max, steps, screen_total_s: 0.0, solve_total_s: solve_total }
 }
 
 #[cfg(test)]
@@ -679,6 +356,23 @@ mod tests {
         for (sf, sb) in f.steps.iter().zip(&b.steps) {
             let diff = (sf.nonzeros as i64 - sb.nonzeros as i64).abs();
             assert!(diff <= 2, "λ={}: {} vs {}", sf.lambda, sf.nonzeros, sb.nonzeros);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_configs() {
+        let ok = PathConfig { n_lambda: 1, ..Default::default() };
+        ok.validate(); // single-point grid is legal
+        for bad in [
+            PathConfig { n_lambda: 0, ..Default::default() },
+            PathConfig { lambda_min_ratio: 0.0, ..Default::default() },
+            PathConfig { lambda_min_ratio: 1.0, ..Default::default() },
+            PathConfig { alpha: 0.0, ..Default::default() },
+        ] {
+            assert!(
+                std::panic::catch_unwind(|| bad.validate()).is_err(),
+                "validate must reject {bad:?}"
+            );
         }
     }
 }

@@ -4,12 +4,14 @@
 //! Sparse-Group Lasso via Decomposition of Convex Sets"* (Wang & Ye,
 //! NIPS 2014), built as a three-layer Rust + JAX + Pallas stack:
 //!
-//! * **Layer 3 (this crate)** — the pathwise coordinator: a warm-started
-//!   regularization-path driver that interleaves exact (safe) screening with
-//!   SGL / nonnegative-Lasso solvers, plus every substrate the paper's
-//!   evaluation depends on (multi-backend linear algebra, data generators,
-//!   solvers, an optional PJRT runtime for AOT-compiled artifacts, metrics,
-//!   CLI, bench harness).
+//! * **Layer 3 (this crate)** — the pathwise coordinator: a single
+//!   streaming path driver ([`coordinator::driver`]) that interleaves exact
+//!   (safe) screening with SGL / nonnegative-Lasso solvers and streams each
+//!   warm-started step to pluggable sinks (per-λ statistics, dense
+//!   coefficients, fold-parallel cross-validation), plus every substrate
+//!   the paper's evaluation depends on (multi-backend linear algebra, data
+//!   generators, solvers, an optional PJRT runtime for AOT-compiled
+//!   artifacts, metrics, CLI, bench harness).
 //! * **Layer 2 (python/compile/model.py)** — the full-matrix screening graph
 //!   in JAX, lowered once to HLO text via `python/compile/aot.py`.
 //! * **Layer 1 (python/compile/kernels/)** — the fused screening kernel

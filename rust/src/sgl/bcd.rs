@@ -184,6 +184,13 @@ pub fn bcd_group_lipschitz<M: DesignMatrix>(x: &M, ranges: &[(usize, usize)]) ->
 }
 
 /// Solve SGL by cyclic block coordinate descent.
+///
+/// Pathwise consumers never call this directly: the streaming driver's
+/// [`crate::coordinator::driver`] solver dispatch owns the
+/// `SolverKind::Bcd` arm (per-group Lipschitz cache, projected coloring),
+/// so runner and CV paths are guaranteed to construct identical
+/// [`BcdOptions`] — the divergence that motivated the driver (CV
+/// hardcoding FISTA) cannot recur per-solver either.
 pub fn solve_bcd<M: DesignMatrix>(
     prob: &SglProblem<'_, M>,
     params: &SglParams,

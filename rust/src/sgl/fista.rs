@@ -45,6 +45,13 @@ impl Default for FistaOptions {
 }
 
 /// Solver output.
+///
+/// This is the record the streaming path driver
+/// ([`crate::coordinator::driver`]) folds into each per-λ step it emits to
+/// a `PathSink`: `beta` is scattered into the full-space vector handed to
+/// sinks, `iters`/`gap` land in the step statistics. Solver options are
+/// constructed by the driver's single `SolverKind` dispatch — there is no
+/// per-consumer solver wiring to drift.
 #[derive(Debug, Clone)]
 pub struct SolveResult {
     /// The solution β.

@@ -44,7 +44,12 @@
 //! A dispatch issued *from a pool worker* (e.g. a `matvec_t` inside a task
 //! that itself runs on the pool) falls back to the serial loop instead of
 //! re-entering the pool — identical results, and no possibility of the
-//! pool waiting on itself.
+//! pool waiting on itself. The same rule applies to the dispatching
+//! thread's **own chunk**: while a round is in flight, the caller executes
+//! chunk 0 flagged as a worker, so nested dispatches from inside it also
+//! degrade to serial loops instead of queuing behind the busy workers the
+//! round is waiting on (load-bearing for coarse-grained sharding like
+//! fold-parallel CV, where the caller's chunk is itself a whole path task).
 
 use std::any::Any;
 use std::cell::Cell;
@@ -179,7 +184,19 @@ fn dispatch_round<'a>(
         // so every borrow the task carries outlives its execution.
         p.send(i, unsafe { erase(wrapped) });
     }
+    // The dispatcher's own chunk runs flagged like a pool worker: a
+    // *nested* dispatch issued from inside `own` must degrade to the
+    // serial loop rather than queue behind the very workers this round is
+    // waiting on. Without this, a coarse-grained own-chunk task (e.g. a CV
+    // fold-path on the caller's thread) that internally sweeps `matvec_t`
+    // would enqueue fill-chunks behind multi-second tasks and stall in
+    // their latch — a self-inflicted convoy, not a deadlock, but it
+    // serializes the caller's share of the round. Serial nested execution
+    // is bitwise identical by the module's determinism guarantee.
+    let prev = IS_POOL_WORKER.get();
+    IS_POOL_WORKER.set(true);
     let own_res = catch_unwind(AssertUnwindSafe(own));
+    IS_POOL_WORKER.set(prev);
     round.wait();
     if let Some(payload) = round.take_panic() {
         resume_unwind(payload);
@@ -362,6 +379,52 @@ where
         })
         .collect();
     dispatch_round(p, tasks, || f(0, first));
+}
+
+/// Map a function over items **on the persistent pool**, preserving order,
+/// with an explicit chunking worker count.
+///
+/// This is the coarse-grained sharding primitive behind fold-parallel
+/// cross-validation: each item is a whole screened path (milliseconds to
+/// seconds), chunked contiguously over the pool exactly like
+/// [`parallel_chunks_mut`] chunks a row range. Three properties matter to
+/// its callers:
+///
+/// * **Order-preserving**: `out[i] = f(&items[i])` for every `i`, whatever
+///   the worker count — so a caller that folds the results in index order
+///   gets the same floating-point accumulation order as a serial loop, and
+///   therefore bitwise identical output.
+/// * **Nesting degrades serial**: a task that itself dispatches
+///   fine-grained sweeps (`matvec_t` etc.) from a pool worker runs those
+///   sweeps serially (the pool never waits on itself). That is the right
+///   trade for CV: with `folds × alphas ≥ workers` the coarse tasks
+///   already saturate the pool, and the fine-grained results are bitwise
+///   identical either way.
+/// * `workers <= 1` (or `TLFRE_THREADS=1`, or a call from inside a pool
+///   worker) is the plain serial loop — the reference the parity tests
+///   compare against.
+///
+/// Unlike [`parallel_map`] (scoped threads, spawn per call) this rides the
+/// parked workers, so repeated CV sweeps pay no spawn tax.
+pub fn parallel_map_with_workers<T, U, F>(items: &[T], workers: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    let workers = workers.max(1).min(n.max(1));
+    if workers <= 1 || n == 0 || in_pool_worker() {
+        return items.iter().map(f).collect();
+    }
+    let mut out: Vec<Option<U>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    parallel_chunks_mut(&mut out, workers, |start, chunk| {
+        for (k, slot) in chunk.iter_mut().enumerate() {
+            *slot = Some(f(&items[start + k]));
+        }
+    });
+    out.into_iter().map(|o| o.expect("every chunk filled its slots")).collect()
 }
 
 /// The legacy per-call `std::thread::scope` fill, kept as the reference
@@ -606,6 +669,33 @@ mod tests {
         parallel_for_chunks(0, |_, s, e| assert_eq!(s, e));
         let ys: Vec<usize> = parallel_map(&Vec::<usize>::new(), |&x| x);
         assert!(ys.is_empty());
+        let zs: Vec<usize> = parallel_map_with_workers(&Vec::<usize>::new(), 4, |&x| x);
+        assert!(zs.is_empty());
+    }
+
+    #[test]
+    fn pooled_map_preserves_order_at_every_worker_count() {
+        let xs: Vec<usize> = (0..101).collect();
+        let serial: Vec<usize> = xs.iter().map(|&x| x * 3 + 1).collect();
+        for workers in [1usize, 2, 3, 5, 8, 40] {
+            let ys = parallel_map_with_workers(&xs, workers, |&x| x * 3 + 1);
+            assert_eq!(ys, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn pooled_map_tasks_can_dispatch_nested_fills() {
+        // The CV usage pattern: coarse tasks on the pool, each internally
+        // running fine-grained fills. Nested dispatches from pool workers
+        // degrade to serial loops; results must be exact either way.
+        let xs: Vec<usize> = (0..12).collect();
+        let ys = parallel_map_with_workers(&xs, 4, |&x| {
+            let mut inner = vec![0usize; 40];
+            parallel_fill(&mut inner, |i| i * x);
+            inner.iter().sum::<usize>()
+        });
+        let expect: Vec<usize> = xs.iter().map(|&x| (0..40).map(|i| i * x).sum()).collect();
+        assert_eq!(ys, expect);
     }
 
     #[test]

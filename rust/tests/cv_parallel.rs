@@ -1,0 +1,178 @@
+//! Fold-parallel cross-validation: bitwise parity with the serial sweep,
+//! the single-screened-walk-per-fold×α guarantee, and solver-dispatch
+//! lockstep through the public CV API.
+//!
+//! The determinism claim under test: `cross_validate` shards fold×α path
+//! tasks across the persistent pool, but its output is **bitwise
+//! identical** to `cross_validate_serial` at every worker count — the
+//! pooled map preserves item order, the accumulation replays the serial
+//! fold-major order, and every kernel inside a path is worker-count
+//! invariant. The CI `TLFRE_THREADS ∈ {1,2,4,8}` matrix runs this whole
+//! file under each process-level thread count on top of the explicit
+//! worker sweep below.
+
+use tlfre::coordinator::{
+    cross_validate_serial, cross_validate_with_workers, make_folds, run_tlfre_path, CvOutput,
+    PathConfig, SolverKind,
+};
+use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
+use tlfre::linalg::power::spectral_call_count;
+use tlfre::linalg::{CscMatrix, SelectRows};
+
+fn assert_cv_bitwise_eq(a: &CvOutput, b: &CvOutput, ctx: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{ctx}: grid size");
+    for (i, (pa, pb)) in a.points.iter().zip(&b.points).enumerate() {
+        assert_eq!(pa.alpha.to_bits(), pb.alpha.to_bits(), "{ctx}: alpha at point {i}");
+        assert_eq!(
+            pa.lambda_ratio.to_bits(),
+            pb.lambda_ratio.to_bits(),
+            "{ctx}: lambda_ratio at point {i}"
+        );
+        assert_eq!(pa.mse.to_bits(), pb.mse.to_bits(), "{ctx}: mse at point {i}");
+        assert_eq!(pa.mean_nnz.to_bits(), pb.mean_nnz.to_bits(), "{ctx}: nnz at point {i}");
+    }
+    assert_eq!(a.best.mse.to_bits(), b.best.mse.to_bits(), "{ctx}: best.mse");
+    assert_eq!(a.best.alpha.to_bits(), b.best.alpha.to_bits(), "{ctx}: best.alpha");
+    assert_eq!(a.nonfinite_points, b.nonfinite_points, "{ctx}: nonfinite count");
+}
+
+#[test]
+fn fold_parallel_cv_bitwise_matches_serial_at_every_worker_count() {
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(36, 120, 12), 901);
+    let cfg = PathConfig {
+        n_lambda: 6,
+        lambda_min_ratio: 0.05,
+        tol: 1e-5,
+        ..Default::default()
+    };
+    let alphas = [0.5, 1.0];
+    let serial = cross_validate_serial(&ds.x, &ds.y, &ds.groups, &alphas, 3, &cfg, 7);
+    for workers in [1usize, 2, 4, 8] {
+        let sharded =
+            cross_validate_with_workers(&ds.x, &ds.y, &ds.groups, &alphas, 3, &cfg, 7, workers);
+        assert_cv_bitwise_eq(&serial, &sharded, &format!("dense, workers={workers}"));
+    }
+}
+
+#[test]
+fn fold_parallel_cv_bitwise_matches_serial_on_csc_backend() {
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 90, 9), 902);
+    let xs = CscMatrix::from_dense(&ds.x);
+    let cfg = PathConfig {
+        n_lambda: 5,
+        lambda_min_ratio: 0.1,
+        tol: 1e-5,
+        ..Default::default()
+    };
+    let serial = cross_validate_serial(&xs, &ds.y, &ds.groups, &[1.0], 3, &cfg, 11);
+    for workers in [2usize, 4, 8] {
+        let sharded =
+            cross_validate_with_workers(&xs, &ds.y, &ds.groups, &[1.0], 3, &cfg, 11, workers);
+        assert_cv_bitwise_eq(&serial, &sharded, &format!("csc, workers={workers}"));
+    }
+}
+
+#[test]
+fn cv_performs_exactly_one_screened_walk_per_fold_alpha() {
+    // The power-iteration counter is thread-local, so the serial sweep
+    // (everything on this thread) gives an exact accounting. One screened
+    // walk per fold×α means the CV delta equals the sum of the per-path
+    // deltas of `run_tlfre_path` on the same fold data — the old
+    // two-walk implementation (stats pass + coefficient pass) spent
+    // exactly double.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 100, 10), 903);
+    let cfg = PathConfig {
+        n_lambda: 5,
+        lambda_min_ratio: 0.1,
+        tol: 1e-5,
+        ..Default::default()
+    };
+    let alphas = [0.5, 1.0];
+    let (k_folds, seed) = (3usize, 13u64);
+
+    // Expected cost: one runner path per fold×α over the same splits.
+    let n = 30;
+    let folds = make_folds(n, k_folds, seed);
+    let c0 = spectral_call_count();
+    for fold in &folds {
+        let in_fold: std::collections::BTreeSet<usize> = fold.iter().copied().collect();
+        let train_rows: Vec<usize> = (0..n).filter(|i| !in_fold.contains(i)).collect();
+        let x_train = ds.x.select_rows(&train_rows);
+        let y_train: Vec<f32> = train_rows.iter().map(|&i| ds.y[i]).collect();
+        for &alpha in &alphas {
+            let pc = PathConfig { alpha, ..cfg.clone() };
+            run_tlfre_path(&x_train, &y_train, &ds.groups, &pc);
+        }
+    }
+    let one_walk_cost = spectral_call_count() - c0;
+    assert!(one_walk_cost > 0, "paths must pay their spectral preamble");
+
+    let c1 = spectral_call_count();
+    cross_validate_serial(&ds.x, &ds.y, &ds.groups, &alphas, k_folds, &cfg, seed);
+    let cv_cost = spectral_call_count() - c1;
+    assert_eq!(
+        cv_cost, one_walk_cost,
+        "cross_validate must perform exactly one screened walk per fold×α \
+         (a second coefficient pass would double the spectral accounting)"
+    );
+}
+
+#[test]
+fn cv_honors_bcd_solver_through_the_public_api() {
+    // End-to-end solver dispatch: per-grid-point mean nnz reported by a
+    // BCD-configured CV must equal the fold-average of the BCD runner's
+    // per-step nonzero counts on the same splits — exactly (integer
+    // counts, identical accumulation order).
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(28, 96, 8), 904);
+    let cfg = PathConfig {
+        solver: SolverKind::Bcd,
+        n_lambda: 6,
+        lambda_min_ratio: 0.05,
+        tol: 1e-5,
+        ..Default::default()
+    };
+    let (k_folds, seed) = (2usize, 17u64);
+    let out = cross_validate_serial(&ds.x, &ds.y, &ds.groups, &[1.0], k_folds, &cfg, seed);
+    assert_eq!(out.points.len(), cfg.n_lambda);
+
+    let n = 28;
+    let folds = make_folds(n, k_folds, seed);
+    let mut fold_nnz = vec![0.0f64; cfg.n_lambda];
+    for fold in &folds {
+        let in_fold: std::collections::BTreeSet<usize> = fold.iter().copied().collect();
+        let train_rows: Vec<usize> = (0..n).filter(|i| !in_fold.contains(i)).collect();
+        let x_train = ds.x.select_rows(&train_rows);
+        let y_train: Vec<f32> = train_rows.iter().map(|&i| ds.y[i]).collect();
+        let path = run_tlfre_path(&x_train, &y_train, &ds.groups, &cfg);
+        assert_eq!(path.steps.len(), cfg.n_lambda);
+        for (li, s) in path.steps.iter().enumerate() {
+            fold_nnz[li] += s.nonzeros as f64;
+        }
+    }
+    for (li, point) in out.points.iter().enumerate() {
+        let want = fold_nnz[li] / k_folds as f64;
+        assert_eq!(
+            point.mean_nnz, want,
+            "BCD CV nnz diverged from the BCD runner at grid point {li}"
+        );
+    }
+}
+
+#[test]
+fn single_point_grid_cv_smoke() {
+    // n_lambda == 1: the λmax endpoint alone. Used to NaN the
+    // lambda_ratio (division by n_lambda − 1 == 0).
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(24, 60, 6), 905);
+    let cfg = PathConfig { n_lambda: 1, lambda_min_ratio: 0.1, ..Default::default() };
+    for workers in [1usize, 4] {
+        let out =
+            cross_validate_with_workers(&ds.x, &ds.y, &ds.groups, &[0.5, 1.0], 3, &cfg, 3, workers);
+        assert_eq!(out.points.len(), 2);
+        for p in &out.points {
+            assert_eq!(p.lambda_ratio, 1.0);
+            assert!(p.mse.is_finite());
+            assert_eq!(p.mean_nnz, 0.0);
+        }
+        assert_eq!(out.nonfinite_points, 0);
+    }
+}
