@@ -3,11 +3,15 @@
 //! allele-count columns with within-gene LD, quantitative imaging response.
 //!
 //! Demonstrates the part of TLFre the synthetic benches don't: ragged
-//! group structures (2–20 SNPs per gene) and the α sweep over the paper's
-//! seven tan(ψ) values.
+//! group structures (2–20 SNPs per gene), the α sweep over the paper's
+//! seven tan(ψ) values, and screening-pipeline selection through the JSON
+//! config's `screen` key (`--screen tlfre|tlfre+gap|gap|strong+kkt|none`
+//! forwards into it).
 //!
-//! Run with: `cargo run --release --example genomics_path [--scale 0.02]`
+//! Run with: `cargo run --release --example genomics_path [--scale 0.02]
+//! [--screen tlfre+gap]`
 
+use tlfre::config::Config;
 use tlfre::coordinator::path::{alpha_grid_from_angles, PAPER_ALPHA_ANGLES};
 use tlfre::coordinator::{run_tlfre_path, PathConfig};
 use tlfre::data::registry::RealDataset;
@@ -20,6 +24,15 @@ fn main() {
         .nth(1)
         .and_then(|v| v.parse::<f64>().ok())
         .unwrap_or(0.01);
+    // Pipeline selection through the config layer (the `screen` key) —
+    // the same JSON a `--config` file would carry.
+    let screen = std::env::args()
+        .skip_while(|a| a != "--screen")
+        .nth(1)
+        .unwrap_or_else(|| "tlfre+gap".to_string());
+    let base_cfg = Config::from_json(&format!(r#"{{"screen": "{screen}"}}"#))
+        .expect("valid screen pipeline (tlfre|tlfre+gap|gap|strong+kkt|none)");
+    println!("screening pipeline: {}", base_cfg.screen.as_str());
 
     for (name, ds) in [
         ("GMV", RealDataset::AdniGmv.generate(scale, 2026)),
@@ -42,11 +55,13 @@ fn main() {
                 n_lambda: 50,
                 lambda_min_ratio: 0.01,
                 tol: 1e-5,
+                screen: base_cfg.screen,
                 ..Default::default()
             };
             let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+            let evicted: usize = out.steps.iter().map(|s| s.dynamic_evicted).sum();
             println!(
-                "   α=tan({:2}°)  λmax={:8.2}  mean r1={:.3}  mean r1+r2={:.3}  screen {}  solve {}",
+                "   α=tan({:2}°)  λmax={:8.2}  mean r1={:.3}  mean r1+r2={:.3}  dyn evict={evicted}  screen {}  solve {}",
                 PAPER_ALPHA_ANGLES[i],
                 out.lambda_max,
                 out.mean_r1(),

@@ -1,9 +1,13 @@
 //! Quickstart: generate a small Synthetic-1 problem, run the TLFre-screened
 //! λ-path and the no-screening baseline, and print rejection ratios and the
-//! speedup — the paper's headline workflow in ~40 lines.
+//! speedup — the paper's headline workflow in ~40 lines. Then swap the
+//! screening pipeline via the JSON config's `screen` key to `tlfre+gap`,
+//! which layers GAP-safe screening on top of TLFre and keeps evicting
+//! features *inside* the solver as the duality gap shrinks.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
+use tlfre::config::Config;
 use tlfre::coordinator::{run_baseline_path, run_tlfre_path, PathConfig};
 use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
 use tlfre::util::fmt_duration;
@@ -52,5 +56,24 @@ fn main() {
         "\nspeedup = {:.2}x  (screening itself cost {:.2}% of baseline)",
         speedup,
         100.0 * screened.screen_total_s / baseline.total_s()
+    );
+
+    // Pipeline selection via the `screen` config key (exactly what
+    // `tlfre solve-path --config cfg.json` would load): `tlfre+gap` adds
+    // the GAP-safe static rule plus dynamic in-solver eviction; the per-λ
+    // `dyn` counts show features certified zero while the solve ran.
+    let json_cfg = Config::from_json(
+        r#"{"screen": "tlfre+gap", "n_lambda": 50, "tol": 1e-6, "alphas": [1.0]}"#,
+    )
+    .expect("valid config");
+    let gap_cfg = json_cfg.path_config(1.0);
+    println!("\n== tlfre+gap pipeline (screen config key) ==");
+    let dynamic = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &gap_cfg);
+    let evicted: usize = dynamic.steps.iter().map(|s| s.dynamic_evicted).sum();
+    println!(
+        "  mean rejection = {:.3}   dynamic evictions = {evicted}   screen {}  solve {}",
+        dynamic.mean_total_rejection(),
+        fmt_duration(dynamic.screen_total_s),
+        fmt_duration(dynamic.solve_total_s),
     );
 }

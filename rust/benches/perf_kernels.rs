@@ -28,8 +28,10 @@
 
 use tlfre::bench_harness::BenchArgs;
 use tlfre::coordinator::{
-    cross_validate, cross_validate_serial, make_folds, run_tlfre_path, PathConfig,
+    cross_validate, cross_validate_serial, make_folds, path_coefficients, run_tlfre_path,
+    PathConfig,
 };
+use tlfre::screening::ScreenKind;
 use tlfre::linalg::SelectRows;
 use tlfre::data::synthetic::{
     generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec,
@@ -510,6 +512,55 @@ fn main() {
         cv_speedup,
     );
 
+    // Dynamic GAP-safe screening: static TLFre vs the tlfre+gap pipeline
+    // (same grid, same tolerance; the dynamic half keeps shrinking the
+    // live problem inside the solver at gap-check cadence). Three
+    // published properties, the first asserted before the numbers go out:
+    // `support_equal` (final supports at solver resolution match at every
+    // λ — dynamic evictions are certificates, not guesses),
+    // `evicted_total` (the dynamic layer actually fired), and the
+    // solver-iteration / wall-clock ratios vs the static pipeline.
+    println!("\n== dynamic screening: static tlfre vs tlfre+gap ==");
+    let static_cfg = cached_cfg.clone();
+    let dynamic_cfg = PathConfig { screen: ScreenKind::TlfreGap, ..cached_cfg.clone() };
+    let static_betas = path_coefficients(&ds.x, &ds.y, &ds.groups, &static_cfg);
+    let dynamic_betas = path_coefficients(&ds.x, &ds.y, &ds.groups, &dynamic_cfg);
+    // The shared hysteresis comparator (see its docs for why single-cut
+    // thresholds would misread borderline coordinates as support changes).
+    let dyn_support_equal = static_betas.len() == dynamic_betas.len()
+        && static_betas
+            .iter()
+            .zip(&dynamic_betas)
+            .all(|(a, b)| tlfre::screening::same_support_at_resolution(a, b));
+    assert!(
+        dyn_support_equal,
+        "dynamic screening changed a final support — bench numbers would be meaningless"
+    );
+    let mut static_path = None;
+    let r_dyn_static = bench("static", &pcfg, || {
+        static_path = Some(run_tlfre_path(&ds.x, &ds.y, &ds.groups, &static_cfg));
+    });
+    let mut dynamic_path = None;
+    let r_dyn_dynamic = bench("dynamic", &pcfg, || {
+        dynamic_path = Some(run_tlfre_path(&ds.x, &ds.y, &ds.groups, &dynamic_cfg));
+    });
+    let static_path = static_path.expect("static path ran");
+    let dynamic_path = dynamic_path.expect("dynamic path ran");
+    let static_iters: usize = static_path.steps.iter().map(|s| s.iters).sum();
+    let dynamic_iters: usize = dynamic_path.steps.iter().map(|s| s.iters).sum();
+    let evicted_total: usize = dynamic_path.steps.iter().map(|s| s.dynamic_evicted).sum();
+    assert!(evicted_total > 0, "dynamic screening never fired on the bench problem");
+    let dyn_iter_ratio = dynamic_iters as f64 / static_iters.max(1) as f64;
+    let dyn_wall_ratio =
+        r_dyn_dynamic.seconds.median / r_dyn_static.seconds.median.max(1e-12);
+    println!(
+        "  static {:8.2} ms ({static_iters} iters)   tlfre+gap {:8.2} ms ({dynamic_iters} iters, {evicted_total} evicted)   iter ratio {:.3}  wall ratio {:.3}  (supports equal)",
+        r_dyn_static.seconds.median * 1e3,
+        r_dyn_dynamic.seconds.median * 1e3,
+        dyn_iter_ratio,
+        dyn_wall_ratio,
+    );
+
     let path_json = |out: &tlfre::coordinator::PathOutput, wall_s: f64| {
         Json::obj()
             .set("wall_s", wall_s)
@@ -577,6 +628,19 @@ fn main() {
                 .set("sharded_speedup_vs_serial", cv_speedup)
                 .set("single_pass", cv_single_pass)
                 .set("bitwise_equal", cv_bitwise_equal),
+        )
+        .set(
+            "dynamic_screening",
+            Json::obj()
+                .set("n_lambda", path_n_lambda)
+                .set("static_wall_s", r_dyn_static.seconds.median)
+                .set("dynamic_wall_s", r_dyn_dynamic.seconds.median)
+                .set("wall_ratio_dynamic_over_static", dyn_wall_ratio)
+                .set("static_iters", static_iters)
+                .set("dynamic_iters", dynamic_iters)
+                .set("iter_ratio_dynamic_over_static", dyn_iter_ratio)
+                .set("evicted_total", evicted_total)
+                .set("support_equal", dyn_support_equal),
         );
     // Workspace root for the same reason as BENCH_backends.json above.
     let path_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_solver_path.json");

@@ -47,18 +47,25 @@ pub fn render_speedup_table(dataset: &str, cols: &[SpeedupColumn]) -> String {
 }
 
 /// Render a rejection-ratio series (one figure panel) as text:
-/// `λ/λmax  r1  r2  r1+r2` rows, plus a coarse text sparkline.
+/// `λ/λmax  r1  r2  r1+r2` rows plus the per-layer screening counts —
+/// layer-1 rejected groups (`L1grp`), layer-2 rejected features (`L2feat`),
+/// in-solver dynamic evictions (`dyn`) and KKT re-admissions (`kkt`,
+/// heuristic pipelines only).
 pub fn render_rejection_series(title: &str, out: &PathOutput) -> String {
     let mut s = format!("-- {title} (λmax = {:.4}) --\n", out.lambda_max);
-    s.push_str("  λ/λmax      r1      r2   r1+r2  active\n");
+    s.push_str("  λ/λmax      r1      r2   r1+r2  active   L1grp  L2feat     dyn     kkt\n");
     for st in &out.steps {
         s.push_str(&format!(
-            "  {:8.4}  {:6.3}  {:6.3}  {:6.3}  {:6}\n",
+            "  {:8.4}  {:6.3}  {:6.3}  {:6.3}  {:6}  {:6}  {:6}  {:6}  {:6}\n",
             st.lambda / out.lambda_max,
             st.r1,
             st.r2,
             st.r1 + st.r2,
-            st.active_features
+            st.active_features,
+            st.groups_rejected,
+            st.features_rejected,
+            st.dynamic_evicted,
+            st.kkt_readmitted,
         ));
     }
     s.push_str(&format!(
@@ -66,22 +73,49 @@ pub fn render_rejection_series(title: &str, out: &PathOutput) -> String {
         out.mean_r1(),
         out.mean_total_rejection()
     ));
+    let dyn_total: usize = out.steps.iter().map(|st| st.dynamic_evicted).sum();
+    let kkt_total: usize = out.steps.iter().map(|st| st.kkt_readmitted).sum();
+    s.push_str(&format!(
+        "  dynamic evictions = {dyn_total}, kkt re-admissions = {kkt_total}\n"
+    ));
+    // Per-rule efficacy (marginal rejections in pipeline order), summed
+    // over the path — the ablation view of a composed pipeline.
+    let mut rules: Vec<(&'static str, usize, usize)> = Vec::new();
+    for st in &out.steps {
+        for l in &st.layers {
+            match rules.iter_mut().find(|(name, _, _)| *name == l.rule) {
+                Some((_, g, f)) => {
+                    *g += l.groups;
+                    *f += l.features;
+                }
+                None => rules.push((l.rule, l.groups, l.features)),
+            }
+        }
+    }
+    for (name, g, f) in &rules {
+        s.push_str(&format!("  rule {name:>8}: {g} groups, {f} features rejected\n"));
+    }
     s
 }
 
 /// Render a DPC rejection series (Fig. 5 panel).
 pub fn render_dpc_series(title: &str, out: &DpcPathOutput) -> String {
     let mut s = format!("-- {title} (λmax = {:.4}) --\n", out.lambda_max);
-    s.push_str("  λ/λmax  rejection  active\n");
+    s.push_str("  λ/λmax  rejection  active     dyn\n");
     for st in &out.steps {
         s.push_str(&format!(
-            "  {:8.4}  {:9.3}  {:6}\n",
+            "  {:8.4}  {:9.3}  {:6}  {:6}\n",
             st.lambda / out.lambda_max,
             st.rejection,
-            st.active_features
+            st.active_features,
+            st.dynamic_evicted,
         ));
     }
     s.push_str(&format!("  mean rejection = {:.3}\n", out.mean_rejection()));
+    let dyn_total: usize = out.steps.iter().map(|st| st.dynamic_evicted).sum();
+    if dyn_total > 0 {
+        s.push_str(&format!("  dynamic evictions = {dyn_total}\n"));
+    }
     s
 }
 
@@ -93,6 +127,22 @@ pub fn series_to_json(out: &PathOutput) -> Json {
         .set("r1", out.steps.iter().map(|s| s.r1).collect::<Vec<_>>())
         .set("r2", out.steps.iter().map(|s| s.r2).collect::<Vec<_>>())
         .set("active", out.steps.iter().map(|s| s.active_features as f64).collect::<Vec<_>>())
+        .set(
+            "groups_rejected",
+            out.steps.iter().map(|s| s.groups_rejected as f64).collect::<Vec<_>>(),
+        )
+        .set(
+            "features_rejected",
+            out.steps.iter().map(|s| s.features_rejected as f64).collect::<Vec<_>>(),
+        )
+        .set(
+            "dynamic_evicted",
+            out.steps.iter().map(|s| s.dynamic_evicted as f64).collect::<Vec<_>>(),
+        )
+        .set(
+            "kkt_readmitted",
+            out.steps.iter().map(|s| s.kkt_readmitted as f64).collect::<Vec<_>>(),
+        )
         .set("screen_total_s", out.screen_total_s)
         .set("solve_total_s", out.solve_total_s)
 }

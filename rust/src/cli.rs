@@ -153,6 +153,10 @@ COMMON FLAGS:
   --min-ratio <f64>    λmin/λmax (default 0.01)
   --tol <f64>          relative duality-gap tolerance (default 1e-6)
   --solver <name>      path solver: fista (default) | bcd
+  --screen <name>      screening pipeline: tlfre (default, the paper's
+                       exact two-layer rule) | tlfre+gap | gap (GAP-safe
+                       static rules + dynamic in-solver screening) |
+                       strong+kkt (heuristic + KKT recovery) | none
   --config <path>      JSON config (overridden by explicit flags)
   --k-folds <usize>    CV fold count (cv command; default 5)
   --cv-serial          run CV folds serially on one thread (reference
@@ -165,6 +169,8 @@ COMMON FLAGS:
   --parallel-bcd       red-black pool-parallel BCD group sweeps (bcd
                        solver, sparse backends; bitwise identical to the
                        sequential sweep)
+  --dynamic            dpc-path: GAP-safe dynamic screening inside the
+                       nonneg solver (evictions per λ in the 'dyn' column)
   --out <path>         output file (generate / JSON reports)
 ";
 
@@ -221,6 +227,11 @@ fn common_config(args: &Args) -> Result<Config> {
             "bcd" => SolverKind::Bcd,
             other => bail!("unknown solver '{other}' (fista|bcd)"),
         };
+    }
+    if let Some(v) = args.get("screen") {
+        cfg.screen = crate::screening::ScreenKind::parse(v).with_context(|| {
+            format!("unknown screening pipeline '{v}' (tlfre|tlfre+gap|gap|strong+kkt|none)")
+        })?;
     }
     Ok(cfg)
 }
@@ -410,6 +421,7 @@ fn cmd_dpc_path(args: &Args) -> Result<i32> {
         verify_safety: args.has("verify"),
         gap_inflation: 0.0,
         lipschitz_refresh_every: args.get_parsed::<usize>("refresh-every")?.filter(|&k| k > 0),
+        dynamic_screening: args.has("dynamic"),
     };
     let backend = args.get("backend").unwrap_or("dense");
     let out = match backend {

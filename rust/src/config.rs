@@ -6,6 +6,7 @@
 //! config — and unknown keys are rejected to catch typos.
 
 use crate::coordinator::runner::SolverKind;
+use crate::screening::rule::ScreenKind;
 use crate::util::json::Json;
 use crate::bail;
 use crate::error::{Context, Result};
@@ -38,6 +39,10 @@ pub struct Config {
     /// Pool-parallel red-black BCD group sweeps (no effect under FISTA).
     /// See [`crate::coordinator::runner::PathConfig::parallel_bcd_groups`].
     pub parallel_bcd_groups: bool,
+    /// Screening pipeline: "tlfre" (default) | "tlfre+gap" | "gap" |
+    /// "strong+kkt" | "none". See
+    /// [`crate::coordinator::runner::PathConfig::screen`].
+    pub screen: ScreenKind,
 }
 
 impl Default for Config {
@@ -56,6 +61,7 @@ impl Default for Config {
             k_folds: 5,
             lipschitz_refresh_every: None,
             parallel_bcd_groups: false,
+            screen: ScreenKind::Tlfre,
         }
     }
 }
@@ -116,6 +122,15 @@ impl Config {
                     cfg.parallel_bcd_groups =
                         val.as_bool().context("parallel_bcd_groups must be a boolean")?;
                 }
+                "screen" => {
+                    let s = val.as_str().context("screen must be a string")?;
+                    cfg.screen = ScreenKind::parse(s).with_context(|| {
+                        format!(
+                            "unknown screen pipeline '{s}' \
+                             (tlfre|tlfre+gap|gap|strong+kkt|none)"
+                        )
+                    })?;
+                }
                 "seed" => cfg.seed = val.as_usize().context("seed must be an integer")? as u64,
                 "scale" => {
                     cfg.scale = val.as_f64().context("scale must be a number")?;
@@ -173,6 +188,7 @@ impl Config {
                 },
             )
             .set("parallel_bcd_groups", self.parallel_bcd_groups)
+            .set("screen", self.screen.as_str())
     }
 
     /// Per-α path configuration.
@@ -190,6 +206,7 @@ impl Config {
             exact_view_lipschitz: false,
             lipschitz_refresh_every: self.lipschitz_refresh_every,
             parallel_bcd_groups: self.parallel_bcd_groups,
+            screen: self.screen,
         }
     }
 }
@@ -231,7 +248,29 @@ mod tests {
         assert!(Config::from_json(r#"{"lipschitz_refresh_every": 0}"#).is_err());
         assert!(Config::from_json(r#"{"lipschitz_refresh_every": "often"}"#).is_err());
         assert!(Config::from_json(r#"{"parallel_bcd_groups": 1}"#).is_err());
+        assert!(Config::from_json(r#"{"screen": "magic"}"#).is_err());
+        assert!(Config::from_json(r#"{"screen": 3}"#).is_err());
         assert!(Config::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn screen_key_parses_and_threads_into_path_config() {
+        for (text, kind) in [
+            (r#"{"screen": "tlfre"}"#, ScreenKind::Tlfre),
+            (r#"{"screen": "tlfre+gap"}"#, ScreenKind::TlfreGap),
+            (r#"{"screen": "gap"}"#, ScreenKind::Gap),
+            (r#"{"screen": "strong+kkt"}"#, ScreenKind::StrongKkt),
+            (r#"{"screen": "none"}"#, ScreenKind::None),
+        ] {
+            let cfg = Config::from_json(text).unwrap();
+            assert_eq!(cfg.screen, kind);
+            assert_eq!(cfg.path_config(1.0).screen, kind);
+        }
+        // Roundtrip through to_json.
+        let mut cfg = Config::default();
+        cfg.screen = ScreenKind::TlfreGap;
+        let back = Config::from_json(&cfg.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back.screen, ScreenKind::TlfreGap);
     }
 
     #[test]

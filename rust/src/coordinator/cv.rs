@@ -31,6 +31,16 @@
 //! output is **bitwise identical** to [`cross_validate_serial`] at every
 //! `TLFRE_THREADS` / worker count (enforced by `tests/cv_parallel.rs` and
 //! the CI thread matrix).
+//!
+//! ## Screening pipelines compose with CV
+//!
+//! `PathConfig::screen` flows through unchanged: every fold×α walk uses
+//! the configured [`crate::screening::rule::ScreenPipeline`], including
+//! in-solver dynamic GAP screening (`tlfre+gap` / `gap`) — eviction
+//! decisions ride the solver's own worker-count-invariant gap checks, so
+//! the bitwise serial/sharded equality above holds for every pipeline,
+//! and a `strong+kkt` fold path still runs its KKT recovery inside the
+//! engine before the sink ever sees β.
 
 use super::driver::{drive_tlfre_path, CoefficientSink, HoldoutSink};
 use super::runner::PathConfig;

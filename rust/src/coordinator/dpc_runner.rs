@@ -22,6 +22,12 @@ pub struct DpcPathConfig {
     /// same semantics (cadence, subset-validity fallback, screening-time
     /// accounting) as [`super::runner::PathConfig::lipschitz_refresh_every`].
     pub lipschitz_refresh_every: Option<usize>,
+    /// In-solver dynamic GAP-safe screening for the reduced nonneg solves
+    /// (the Theorem 22 sphere on the solver's shrinking duality gap; see
+    /// [`crate::screening::gap_safe::GapSafeDynamicNonneg`]). The nonneg
+    /// analogue of the SGL `tlfre+gap` pipeline's dynamic half; per-step
+    /// evictions land in [`DpcStep::dynamic_evicted`]. CLI: `--dynamic`.
+    pub dynamic_screening: bool,
 }
 
 impl Default for DpcPathConfig {
@@ -34,6 +40,7 @@ impl Default for DpcPathConfig {
             verify_safety: false,
             gap_inflation: 0.0,
             lipschitz_refresh_every: None,
+            dynamic_screening: false,
         }
     }
 }
@@ -62,6 +69,9 @@ pub struct DpcStep {
     pub active_features: usize,
     pub iters: usize,
     pub zeros: usize,
+    /// Features evicted by in-solver dynamic GAP screening (0 unless
+    /// [`DpcPathConfig::dynamic_screening`] is on).
+    pub dynamic_evicted: usize,
 }
 
 /// Whole-path output.
@@ -170,6 +180,26 @@ mod tests {
             let diff = (sa.zeros as i64 - sb.zeros as i64).abs();
             assert!(diff <= 2, "λ={}: zeros {} vs {}", sa.lambda, sa.zeros, sb.zeros);
         }
+    }
+
+    #[test]
+    fn dynamic_screening_path_matches_default() {
+        // In-solver evictions are GAP-safe: per-step sparsity must track
+        // the static-only path within borderline coords, and evictions
+        // must actually fire somewhere along the path.
+        let (x, y) = nonneg_dataset(205, 25, 120);
+        let a = run_dpc_path(&x, &y, &cfg());
+        let b = run_dpc_path(&x, &y, &DpcPathConfig { dynamic_screening: true, ..cfg() });
+        assert_eq!(a.steps.len(), b.steps.len());
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            let diff = (sa.zeros as i64 - sb.zeros as i64).abs();
+            assert!(diff <= 2, "λ={}: zeros {} vs {}", sa.lambda, sa.zeros, sb.zeros);
+        }
+        assert!(
+            b.steps.iter().any(|s| s.dynamic_evicted > 0),
+            "dynamic screening never fired along the DPC path"
+        );
+        assert!(a.steps.iter().all(|s| s.dynamic_evicted == 0));
     }
 
     #[test]

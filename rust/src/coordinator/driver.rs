@@ -43,6 +43,25 @@
 //! `linalg/README.md`), so for a fixed input the streamed steps and β are
 //! bitwise identical at every `TLFRE_THREADS` — this is what makes the
 //! fold-parallel CV in [`super::cv`] bitwise reproducible.
+//!
+//! ## Screening pipelines
+//!
+//! Since the composable-screening refactor the SGL engine does not call a
+//! specific rule: it runs the [`ScreenPipeline`] named by
+//! `PathConfig::screen` (`tlfre` by default — the paper's protocol —,
+//! `tlfre+gap`, `gap`, `strong+kkt`, `none`), with three structural
+//! guarantees owned *here* rather than by each rule:
+//!
+//! * every rule in a step shares one dual preamble (residual, correlation
+//!   sweep; the feasibility-scaled θ̄ and its gap only when a rule
+//!   declares `needs_previous_dual`) — composing rules adds no matvec;
+//! * any pipeline containing a [`crate::screening::rule::Safety::Heuristic`]
+//!   rule runs the KKT recovery loop after each solve: violated discarded
+//!   coordinates are re-admitted and the reduced problem re-solved (KKT
+//!   check time charged to screening, re-solves to solving);
+//! * GAP pipelines attach a [`GapSafeDynamic`] state to each reduced
+//!   solve, so the solver itself keeps shrinking the problem at gap-check
+//!   cadence; per-step eviction counts land in `PathStep::dynamic_evicted`.
 
 use super::dpc_runner::{DpcPathConfig, DpcStep};
 use super::path::log_lambda_grid;
@@ -55,13 +74,17 @@ use crate::linalg::{DesignMatrix, ScreenedView};
 use crate::nonneg::{
     lambda_max as nonneg_lambda_max, nonneg_lipschitz, solve_nonneg, NonnegOptions, NonnegProblem,
 };
+use crate::screening::gap_safe::{GapSafeDynamic, GapSafeDynamicNonneg};
 use crate::screening::lambda_max::{sgl_lambda_max, LambdaMaxInfo};
-use crate::screening::tlfre::TlfreContext;
+use crate::screening::rule::{stats_from_masks, ScreenInput, ScreenPipeline};
+use crate::screening::strong_rule::kkt_violations;
+use crate::screening::tlfre::{ScreenStats, TlfreContext, TlfreOutcome};
 use crate::sgl::bcd::{bcd_group_lipschitz, solve_bcd, BcdOptions};
 use crate::sgl::fista::{lipschitz, lipschitz_of, solve_fista, FistaOptions};
 use crate::sgl::problem::{SglParams, SglProblem};
 use crate::sgl::GroupColoring;
 use crate::util::Timer;
+use std::cell::RefCell;
 
 /// Receiver of a streamed path walk (see the module docs for the exact
 /// call contract). `Step` is [`PathStep`] for SGL paths and [`DpcStep`]
@@ -321,6 +344,7 @@ impl SpectralCache {
 /// **single** solver match shared by every path walker — a new
 /// [`SolverKind`] cannot be wired into one walker and forgotten in
 /// another.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn solve<M: DesignMatrix>(
     prob: &SglProblem<'_, M>,
     params: &SglParams,
@@ -329,6 +353,7 @@ pub(crate) fn solve<M: DesignMatrix>(
     lip: Option<f64>,
     group_lip: Option<&[f64]>,
     coloring: Option<&GroupColoring>,
+    dynamic: Option<&RefCell<GapSafeDynamic>>,
 ) -> crate::sgl::fista::SolveResult {
     match cfg.solver {
         SolverKind::Fista => solve_fista(
@@ -339,6 +364,7 @@ pub(crate) fn solve<M: DesignMatrix>(
                 tol: cfg.tol,
                 max_iter: cfg.max_iter,
                 lipschitz: lip,
+                dynamic_screen: dynamic,
                 ..Default::default()
             },
         ),
@@ -352,6 +378,7 @@ pub(crate) fn solve<M: DesignMatrix>(
                 group_lipschitz: group_lip,
                 parallel_groups: cfg.parallel_bcd_groups,
                 coloring,
+                dynamic_screen: dynamic,
                 ..Default::default()
             },
         ),
@@ -362,7 +389,16 @@ pub(crate) fn solve<M: DesignMatrix>(
 // SGL engines
 // ---------------------------------------------------------------------------
 
-/// The TLFre-screened SGL path engine (the paper's Section 6.1 protocol).
+/// Upper bound on KKT recovery rounds for heuristic pipelines (matches
+/// `strong_rule::solve_with_strong_rule`'s historical cap).
+const MAX_KKT_ROUNDS: usize = 16;
+
+/// The screened SGL path engine (the paper's Section 6.1 protocol),
+/// parameterized by a composable [`ScreenPipeline`]. The default pipeline
+/// ([`crate::screening::rule::ScreenKind::Tlfre`]) reproduces the paper's
+/// exact two-layer protocol; GAP pipelines additionally shrink the live
+/// problem *inside* the solver, and heuristic pipelines run behind the
+/// KKT recovery loop in [`PathEngine::step`].
 pub(crate) struct TlfreEngine<'a, M: DesignMatrix> {
     x: &'a M,
     y: &'a [f32],
@@ -372,6 +408,7 @@ pub(crate) struct TlfreEngine<'a, M: DesignMatrix> {
     ctx: TlfreContext,
     lmax: LambdaMaxInfo,
     spectral: SpectralCache,
+    pipeline: ScreenPipeline<M>,
     scalar_refresh: Option<ScalarRefresher>,
     group_refresh: Option<GroupRefresher>,
     beta: Vec<f32>,
@@ -386,6 +423,18 @@ impl<'a, M: DesignMatrix> TlfreEngine<'a, M> {
         y: &'a [f32],
         groups: &'a GroupStructure,
         cfg: &'a PathConfig,
+    ) -> TlfreEngine<'a, M> {
+        Self::with_pipeline(x, y, groups, cfg, ScreenPipeline::for_kind(cfg.screen))
+    }
+
+    /// Build with an explicit (possibly custom) pipeline — the seam behind
+    /// [`drive_tlfre_path_with_pipeline`].
+    pub(crate) fn with_pipeline(
+        x: &'a M,
+        y: &'a [f32],
+        groups: &'a GroupStructure,
+        cfg: &'a PathConfig,
+        pipeline: ScreenPipeline<M>,
     ) -> TlfreEngine<'a, M> {
         cfg.validate();
         let prob = SglProblem::new(x, y, groups);
@@ -422,12 +471,24 @@ impl<'a, M: DesignMatrix> TlfreEngine<'a, M> {
             ctx,
             lmax,
             spectral,
+            pipeline,
             scalar_refresh,
             group_refresh,
             beta: vec![0.0; p],
             resid: vec![0.0; n],
             corr: vec![0.0; p],
             preamble_s,
+        }
+    }
+
+    /// Survivor mask that keeps everything — the `none` pipeline's
+    /// "outcome" (the solver then sees the full problem through the same
+    /// reduced-problem plumbing).
+    fn keep_all(&self) -> TlfreOutcome {
+        TlfreOutcome {
+            group_kept: vec![true; self.prob.n_groups()],
+            feature_kept: vec![true; self.prob.n_features()],
+            stats: ScreenStats::default(),
         }
     }
 }
@@ -448,17 +509,27 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
     }
 
     fn zero_step(&self, lambda: f64) -> PathStep {
+        // At λmax the rejection is the λmax theorem's, not any rule's —
+        // but an *empty* pipeline performs no screening at all and must
+        // report none (its λmax step is a full-problem solve of β ≡ 0).
+        let screened = !self.pipeline.is_empty();
+        let p = self.prob.n_features();
         PathStep {
             lambda,
-            r1: 1.0,
+            r1: if screened { 1.0 } else { 0.0 },
             r2: 0.0,
             screen_s: 0.0,
             solve_s: 0.0,
-            active_features: 0,
+            active_features: if screened { 0 } else { p },
             iters: 0,
             gap: 0.0,
-            zeros: self.prob.n_features(),
+            zeros: p,
             nonzeros: 0,
+            groups_rejected: if screened { self.prob.n_groups() } else { 0 },
+            features_rejected: 0,
+            layers: Vec::new(),
+            dynamic_evicted: 0,
+            kkt_readmitted: 0,
         }
     }
 
@@ -469,35 +540,56 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
     fn step(&mut self, lambda: f64, lambda_bar: f64) -> EngineStep<PathStep> {
         let cfg = self.cfg;
         let p = self.prob.n_features();
-        // θ̄ from the previous step: the *feasibility-scaled* residual
-        // s·(y − Xβ̄)/λ̄ (guaranteed dual feasible even for an inexact β̄),
-        // with the radius inflated by the √(2·gap) optimum-distance bound
-        // (see `tlfre_screen_inexact`).
+        // Static screening: the pipeline's rules share one dual preamble —
+        // θ̄ is the *feasibility-scaled* residual s·(y − Xβ̄)/λ̄ (guaranteed
+        // dual feasible even for an inexact β̄), with the TLFre radius
+        // inflated by the √(2·gap) optimum-distance bound (see
+        // `tlfre_screen_inexact`) and the GAP rule consuming the same
+        // residual/correlation sweeps at the new λ.
         let ts = Timer::start();
-        crate::sgl::objective::residual(&self.prob, &self.beta, &mut self.resid);
-        let params_bar = SglParams::from_alpha_lambda(cfg.alpha, lambda_bar);
-        self.prob.x.matvec_t(&self.resid, &mut self.corr);
-        let (gap_bar_full, s_feas) = crate::sgl::dual::duality_gap(
-            &self.prob,
-            &params_bar,
-            &self.beta,
-            &self.resid,
-            &self.corr,
-        );
-        let gap_bar = gap_bar_full * cfg.gap_inflation;
-        let theta_bar: Vec<f32> =
-            self.resid.iter().map(|&v| (v as f64 * s_feas / lambda_bar) as f32).collect();
-        let outcome = crate::screening::tlfre::tlfre_screen_inexact(
-            &self.prob,
-            cfg.alpha,
-            lambda,
-            lambda_bar,
-            &theta_bar,
-            gap_bar,
-            &self.lmax,
-            &self.ctx,
-        );
-        let reduced = ReducedProblem::build(self.x, self.groups, &outcome);
+        let (mut outcome, layers) = if self.pipeline.is_empty() {
+            (self.keep_all(), Vec::new())
+        } else {
+            crate::sgl::objective::residual(&self.prob, &self.beta, &mut self.resid);
+            self.prob.x.matvec_t(&self.resid, &mut self.corr);
+            // The previous-λ dual point (feasibility bisection + θ̄
+            // allocation) is only paid when some rule declares it needs it
+            // — a `gap`-only pipeline screens from the target-λ gap alone.
+            let (gap_bar, theta_bar): (f64, Vec<f32>) =
+                if self.pipeline.needs_previous_dual() {
+                    let params_bar = SglParams::from_alpha_lambda(cfg.alpha, lambda_bar);
+                    let (gap_bar_full, s_feas) = crate::sgl::dual::duality_gap(
+                        &self.prob,
+                        &params_bar,
+                        &self.beta,
+                        &self.resid,
+                        &self.corr,
+                    );
+                    let theta: Vec<f32> = self
+                        .resid
+                        .iter()
+                        .map(|&v| (v as f64 * s_feas / lambda_bar) as f32)
+                        .collect();
+                    (gap_bar_full * cfg.gap_inflation, theta)
+                } else {
+                    (0.0, Vec::new())
+                };
+            let input = ScreenInput {
+                prob: &self.prob,
+                alpha: cfg.alpha,
+                lambda,
+                lambda_bar,
+                beta_bar: &self.beta,
+                resid_bar: &self.resid,
+                corr_bar: &self.corr,
+                theta_bar: &theta_bar,
+                gap_bar,
+                lmax: &self.lmax,
+                ctx: &self.ctx,
+            };
+            self.pipeline.screen(&input)
+        };
+        let mut reduced = ReducedProblem::build(self.x, self.groups, &outcome);
         // Amortized Lipschitz refresh runs inside the screening timer —
         // the refresh is spectral preamble work, exactly like the
         // once-per-path cache, so cached-vs-refreshed-vs-exact `solve_s`
@@ -528,46 +620,132 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                 None => self.spectral.reduced_group_l(red),
             };
         }
-        let screen_s = ts.elapsed_s();
+        let mut screen_s = ts.elapsed_s();
 
         let params = SglParams::from_alpha_lambda(cfg.alpha, lambda);
-        let ts = Timer::start();
-        let (active, iters, gap) = match &reduced {
-            None => {
-                self.beta.fill(0.0);
-                (0usize, 0usize, 0.0f64)
+        // Solve, with the KKT recovery loop for heuristic pipelines:
+        // violators among the discarded coordinates are re-admitted and the
+        // (grown) reduced problem re-solved. Safe pipelines exit after one
+        // round by construction. Re-solve rounds fall back to the
+        // always-valid full-matrix step bounds — the refreshed survivor-set
+        // bounds were measured before re-admission grew the problem.
+        let mut solve_s = 0.0f64;
+        let mut kkt_readmitted = 0usize;
+        let mut dynamic_evicted = 0usize;
+        // Full-space indices of in-solver evictions, for verify_safety.
+        let mut dyn_evicted_full: Vec<usize> = Vec::new();
+        let mut rounds = 0usize;
+        // Total solver iterations across recovery rounds — like solve_s,
+        // re-solves count toward the step's reported work.
+        let mut iters = 0usize;
+        let (active, gap) = loop {
+            rounds += 1;
+            let ts = Timer::start();
+            let round = match &reduced {
+                None => {
+                    self.beta.fill(0.0);
+                    (0usize, 0usize, 0.0f64)
+                }
+                Some(red) => {
+                    let warm = red.gather(&self.beta);
+                    let (round_lip, round_group_l) = if rounds == 1 {
+                        (step_lip, step_group_l.clone())
+                    } else {
+                        (self.spectral.lip, self.spectral.reduced_group_l(red))
+                    };
+                    // Dynamic state rides the first solve only: KKT
+                    // re-solve rounds (heuristic pipelines) rebuild the
+                    // reduced problem, and a fresh state there would
+                    // re-evict (and re-count) coordinates already evicted
+                    // in round 1. It also requires an all-safe static
+                    // pipeline: the GAP sphere certifies zeros of the
+                    // problem the solver is actually solving, so a
+                    // heuristically mis-reduced problem (correct only
+                    // after KKT recovery) could yield evictions that are
+                    // not certificates of the true optimum.
+                    let dyn_state = if rounds == 1
+                        && self.pipeline.dynamic()
+                        && self.pipeline.all_safe()
+                    {
+                        let (cn, gs) = red.project_screen_context(&self.ctx);
+                        Some(RefCell::new(GapSafeDynamic::new(cfg.alpha, cn, gs)))
+                    } else {
+                        None
+                    };
+                    let res = if cfg.materialize_reduced {
+                        // Seed behaviour: physical column gather per λ. The
+                        // projected coloring is NOT handed down here: its
+                        // conflict analysis saw the original backend's
+                        // storage, and a dense gathered copy touches every
+                        // row — the solver recomputes its own (trivially
+                        // sequential) schedule instead.
+                        let xd = red.materialize();
+                        let rp = SglProblem::new(&xd, self.y, &red.groups);
+                        solve(
+                            &rp,
+                            &params,
+                            Some(&warm),
+                            cfg,
+                            round_lip,
+                            round_group_l.as_deref(),
+                            None,
+                            dyn_state.as_ref(),
+                        )
+                    } else {
+                        // Zero-copy: the solver runs on the survivor view.
+                        let red_coloring = self.spectral.reduced_coloring(red);
+                        let rp = SglProblem::new(&red.x, self.y, &red.groups);
+                        solve(
+                            &rp,
+                            &params,
+                            Some(&warm),
+                            cfg,
+                            round_lip,
+                            round_group_l.as_deref(),
+                            red_coloring.as_ref(),
+                            dyn_state.as_ref(),
+                        )
+                    };
+                    red.scatter(&res.beta, &mut self.beta);
+                    if let Some(st) = dyn_state {
+                        let st = st.into_inner();
+                        dynamic_evicted += st.evicted();
+                        if cfg.verify_safety {
+                            dyn_evicted_full
+                                .extend(st.evicted_ids().iter().map(|&k| red.feature_map()[k]));
+                        }
+                    }
+                    (red.n_features(), res.iters, res.gap)
+                }
+            };
+            solve_s += ts.elapsed_s();
+            iters += round.1;
+            if self.pipeline.all_safe() || rounds > MAX_KKT_ROUNDS {
+                break (round.0, round.2);
             }
-            Some(red) => {
-                let warm = red.gather(&self.beta);
-                let res = if cfg.materialize_reduced {
-                    // Seed behaviour: physical column gather per λ. The
-                    // projected coloring is NOT handed down here: its
-                    // conflict analysis saw the original backend's storage,
-                    // and a dense gathered copy touches every row — the
-                    // solver recomputes its own (trivially sequential)
-                    // schedule instead.
-                    let xd = red.materialize();
-                    let rp = SglProblem::new(&xd, self.y, &red.groups);
-                    solve(&rp, &params, Some(&warm), cfg, step_lip, step_group_l.as_deref(), None)
-                } else {
-                    // Zero-copy: the solver runs on the survivor view.
-                    let red_coloring = self.spectral.reduced_coloring(red);
-                    let rp = SglProblem::new(&red.x, self.y, &red.groups);
-                    solve(
-                        &rp,
-                        &params,
-                        Some(&warm),
-                        cfg,
-                        step_lip,
-                        step_group_l.as_deref(),
-                        red_coloring.as_ref(),
-                    )
-                };
-                red.scatter(&res.beta, &mut self.beta);
-                (red.n_features(), res.iters, res.gap)
+            // Heuristic pipeline: check the discarded coordinates' KKT
+            // conditions (a screening-correctness cost, charged to the
+            // screening timer like the rest of the rule work).
+            let tk = Timer::start();
+            let bad = kkt_violations(&self.prob, &params, &self.beta, &outcome);
+            screen_s += tk.elapsed_s();
+            if bad.is_empty() {
+                break (round.0, round.2);
             }
+            kkt_readmitted += bad.len();
+            for &i in &bad {
+                outcome.feature_kept[i] = true;
+                outcome.group_kept[self.groups.group_of(i)] = true;
+            }
+            reduced = ReducedProblem::build(self.x, self.groups, &outcome);
         };
-        let solve_s = ts.elapsed_s();
+        // Final-mask stats (post re-admission) keep r₁/r₂ honest for
+        // heuristic pipelines too.
+        let stats = if kkt_readmitted > 0 {
+            stats_from_masks(self.groups, &outcome.group_kept, &outcome.feature_kept)
+        } else {
+            outcome.stats.clone()
+        };
 
         if cfg.verify_safety {
             // Independent full solve; every screened coordinate must be 0.
@@ -580,6 +758,7 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                 self.spectral.lip,
                 self.spectral.group_l.as_deref(),
                 self.spectral.coloring.as_ref(),
+                None,
             );
             for j in 0..p {
                 if !outcome.feature_kept[j] {
@@ -590,6 +769,17 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                     );
                 }
             }
+            // In-solver dynamic evictions are certificates too: every
+            // coordinate the GAP sphere dropped mid-solve must be zero in
+            // the independent full solve.
+            for &j in &dyn_evicted_full {
+                assert!(
+                    full.beta[j].abs() < 1e-4,
+                    "DYNAMIC SAFETY VIOLATION at λ={lambda}: feature {j} evicted in-solver \
+                     but β={}",
+                    full.beta[j]
+                );
+            }
         }
 
         let zeros = ops::count_zeros(&self.beta);
@@ -597,8 +787,8 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
         EngineStep {
             step: PathStep {
                 lambda,
-                r1: outcome.stats.features_in_rejected_groups as f64 / m as f64,
-                r2: outcome.stats.features_rejected_l2 as f64 / m as f64,
+                r1: stats.features_in_rejected_groups as f64 / m as f64,
+                r2: stats.features_rejected_l2 as f64 / m as f64,
                 screen_s,
                 solve_s,
                 active_features: active,
@@ -606,6 +796,11 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                 gap,
                 zeros,
                 nonzeros: p - zeros,
+                groups_rejected: stats.groups_rejected,
+                features_rejected: stats.features_rejected_l2,
+                layers,
+                dynamic_evicted,
+                kkt_readmitted,
             },
             screen_s,
             solve_s,
@@ -687,6 +882,11 @@ impl<M: DesignMatrix> PathEngine for BaselineEngine<'_, M> {
             gap: 0.0,
             zeros: p,
             nonzeros: 0,
+            groups_rejected: 0,
+            features_rejected: 0,
+            layers: Vec::new(),
+            dynamic_evicted: 0,
+            kkt_readmitted: 0,
         }
     }
 
@@ -706,6 +906,7 @@ impl<M: DesignMatrix> PathEngine for BaselineEngine<'_, M> {
             self.lip,
             self.group_l.as_deref(),
             self.coloring.as_ref(),
+            None,
         );
         let solve_s = ts.elapsed_s();
         self.beta = res.beta;
@@ -722,6 +923,11 @@ impl<M: DesignMatrix> PathEngine for BaselineEngine<'_, M> {
                 gap: res.gap,
                 zeros,
                 nonzeros: p - zeros,
+                groups_rejected: 0,
+                features_rejected: 0,
+                layers: Vec::new(),
+                dynamic_evicted: 0,
+                kkt_readmitted: 0,
             },
             screen_s: 0.0,
             solve_s,
@@ -806,6 +1012,7 @@ impl<M: DesignMatrix> PathEngine for DpcEngine<'_, M> {
             active_features: 0,
             iters: 0,
             zeros: self.x.cols(),
+            dynamic_evicted: 0,
         }
     }
 
@@ -855,14 +1062,23 @@ impl<M: DesignMatrix> PathEngine for DpcEngine<'_, M> {
         let screen_s = ts.elapsed_s();
 
         let ts = Timer::start();
-        let (iters, active_n) = if active.is_empty() {
+        let mut dyn_evicted_full: Vec<usize> = Vec::new();
+        let (iters, active_n, dynamic_evicted) = if active.is_empty() {
             self.beta.fill(0.0);
-            (0usize, 0usize)
+            (0usize, 0usize, 0usize)
         } else {
             // Zero-copy survivor view — no per-λ column gather.
             let xr = ScreenedView::new(x, active.clone());
             let rp = NonnegProblem::new(&xr, self.prob.y);
             let warm: Vec<f32> = active.iter().map(|&j| self.beta[j]).collect();
+            // In-solver dynamic GAP screening (Theorem 22 sphere on the
+            // shrinking duality gap), projected onto the survivor view.
+            let dyn_state = if cfg.dynamic_screening {
+                let cn: Vec<f64> = active.iter().map(|&j| self.col_norms[j]).collect();
+                Some(RefCell::new(GapSafeDynamicNonneg::new(cn)))
+            } else {
+                None
+            };
             let res = solve_nonneg(
                 &rp,
                 lambda,
@@ -871,6 +1087,7 @@ impl<M: DesignMatrix> PathEngine for DpcEngine<'_, M> {
                     tol: cfg.tol,
                     max_iter: cfg.max_iter,
                     lipschitz: Some(step_lip),
+                    dynamic_screen: dyn_state.as_ref(),
                     ..Default::default()
                 },
             );
@@ -878,7 +1095,18 @@ impl<M: DesignMatrix> PathEngine for DpcEngine<'_, M> {
             for (k, &j) in active.iter().enumerate() {
                 self.beta[j] = res.beta[k];
             }
-            (res.iters, active.len())
+            let evicted = match dyn_state {
+                Some(st) => {
+                    let st = st.into_inner();
+                    if cfg.verify_safety {
+                        dyn_evicted_full
+                            .extend(st.evicted_ids().iter().map(|&k| active[k]));
+                    }
+                    st.evicted()
+                }
+                None => 0,
+            };
+            (res.iters, active.len(), evicted)
         };
         let solve_s = ts.elapsed_s();
 
@@ -904,6 +1132,15 @@ impl<M: DesignMatrix> PathEngine for DpcEngine<'_, M> {
                     );
                 }
             }
+            // Dynamic evictions verified against the same reference solve.
+            for &j in &dyn_evicted_full {
+                assert!(
+                    full.beta[j].abs() < 1e-4,
+                    "DPC DYNAMIC SAFETY VIOLATION at λ={lambda}: feature {j} evicted \
+                     in-solver but β={}",
+                    full.beta[j]
+                );
+            }
         }
 
         let zeros = ops::count_zeros(&self.beta);
@@ -916,6 +1153,7 @@ impl<M: DesignMatrix> PathEngine for DpcEngine<'_, M> {
                 active_features: active_n,
                 iters,
                 zeros,
+                dynamic_evicted,
             },
             screen_s,
             solve_s,
@@ -968,6 +1206,7 @@ impl<M: DesignMatrix> PathEngine for DpcBaselineEngine<'_, M> {
             active_features: p,
             iters: 0,
             zeros: p,
+            dynamic_evicted: 0,
         }
     }
 
@@ -1000,6 +1239,7 @@ impl<M: DesignMatrix> PathEngine for DpcBaselineEngine<'_, M> {
                 active_features: p,
                 iters: res.iters,
                 zeros: ops::count_zeros(&self.beta),
+                dynamic_evicted: 0,
             },
             screen_s: 0.0,
             solve_s,
@@ -1022,6 +1262,26 @@ pub fn drive_tlfre_path<M: DesignMatrix, K: PathSink<PathStep>>(
     sink: &mut K,
 ) -> PathTotals {
     drive(TlfreEngine::new(x, y, groups, cfg), sink)
+}
+
+/// [`drive_tlfre_path`] with an explicit, possibly custom,
+/// [`ScreenPipeline`] instead of the one named by `cfg.screen`. This is
+/// the extension seam for user-defined
+/// [`crate::screening::rule::ScreeningRule`]s: heuristic rules compose
+/// automatically with the driver's KKT recovery loop (violators among the
+/// discarded coordinates are re-admitted and the reduced problem
+/// re-solved), so a wrong rejection costs a re-solve, never correctness —
+/// the regression test in `tests/dynamic_screening.rs` drives a
+/// deliberately-wrong rule through this entry point.
+pub fn drive_tlfre_path_with_pipeline<M: DesignMatrix, K: PathSink<PathStep>>(
+    x: &M,
+    y: &[f32],
+    groups: &GroupStructure,
+    cfg: &PathConfig,
+    pipeline: ScreenPipeline<M>,
+    sink: &mut K,
+) -> PathTotals {
+    drive(TlfreEngine::with_pipeline(x, y, groups, cfg, pipeline), sink)
 }
 
 /// Stream the no-screening SGL baseline path into `sink`.

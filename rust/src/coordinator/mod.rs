@@ -39,7 +39,7 @@ pub use cv::{
 pub use dpc_runner::{run_dpc_path, run_nonneg_baseline, DpcPathConfig, DpcPathOutput, DpcStep};
 pub use driver::{
     drive_baseline_path, drive_dpc_path, drive_nonneg_baseline, drive_tlfre_path,
-    CoefficientSink, HoldoutSink, PathSink, PathTotals, StepSink,
+    drive_tlfre_path_with_pipeline, CoefficientSink, HoldoutSink, PathSink, PathTotals, StepSink,
 };
 pub use path::{alpha_grid_from_angles, log_lambda_grid, PAPER_ALPHA_ANGLES};
 pub use runner::{run_baseline_path, run_tlfre_path, PathConfig, PathOutput, PathStep, SolverKind};

@@ -103,6 +103,22 @@ impl<'a, M: DesignMatrix> ReducedProblem<'a, M> {
     pub fn materialize(&self) -> DenseMatrix {
         self.x.to_dense()
     }
+
+    /// Project the path-level screening context onto this reduced problem
+    /// for the in-solver dynamic GAP screen: exact per-column norms (the
+    /// columns are shared with `X`) and the full-matrix per-group spectral
+    /// norms as conservative upper bounds (`σmax(X_g[:,S]) ≤ σmax(X_g)` —
+    /// a larger group ball only weakens, never unsafes, the sphere test).
+    /// Returns `(col_norms, group_spectral)` in reduced index order.
+    pub fn project_screen_context(
+        &self,
+        ctx: &crate::screening::tlfre::TlfreContext,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let col_norms = self.feature_map().iter().map(|&j| ctx.col_norms[j]).collect();
+        let group_spectral =
+            self.group_map.iter().map(|&g| ctx.group_spectral[g]).collect();
+        (col_norms, group_spectral)
+    }
 }
 
 #[cfg(test)]

@@ -26,6 +26,15 @@
 //! [`GroupRefresher`] for BCD's per-group `‖X_g[:,S]‖₂²` bounds (validity
 //! is then per *group*: a group whose surviving columns stayed inside the
 //! refresh-time mask keeps its tight value even if other groups grew).
+//!
+//! Interplay with **dynamic** screening (`PathConfig::screen` GAP modes):
+//! in-solver evictions only *shrink* the survivor set mid-solve, and a
+//! column-subset operator norm never grows, so a bound that was valid for
+//! the reduced problem at solve start stays valid for every dynamically
+//! shrunken view — no feedback from the solver into the refreshers is
+//! needed. KKT re-admission rounds (heuristic pipelines) can *grow* the
+//! set, so the driver's re-solve rounds fall back to the always-valid
+//! full-matrix constants instead of the refreshed ones.
 
 /// Amortized refresher for a single spectral bound.
 pub(crate) struct ScalarRefresher {

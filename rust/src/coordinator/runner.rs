@@ -21,6 +21,7 @@
 use super::driver::{drive_baseline_path, drive_tlfre_path, StepSink};
 use crate::groups::GroupStructure;
 use crate::linalg::DesignMatrix;
+use crate::screening::rule::{LayerCount, ScreenKind};
 
 /// Which solver backs the path.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -94,6 +95,15 @@ pub struct PathConfig {
     /// the sequential sweep at every worker count; only sparse backends
     /// have non-trivial colorings. No effect under [`SolverKind::Fista`].
     pub parallel_bcd_groups: bool,
+    /// Which screening pipeline backs the path (see
+    /// [`crate::screening::rule::ScreenKind`]): `tlfre` (the default, the
+    /// paper's exact two-layer rule), `tlfre+gap` / `gap` (GAP-safe static
+    /// rules plus **dynamic** in-solver screening at gap-check cadence),
+    /// `strong+kkt` (the heuristic strong rule guarded by the driver's
+    /// KKT recovery loop), or `none` (pipeline with zero rules — a full
+    /// solve per λ through the same engine). The JSON config key is
+    /// `"screen"`, the CLI flag `--screen`.
+    pub screen: ScreenKind,
 }
 
 impl Default for PathConfig {
@@ -111,6 +121,7 @@ impl Default for PathConfig {
             exact_view_lipschitz: false,
             lipschitz_refresh_every: None,
             parallel_bcd_groups: false,
+            screen: ScreenKind::Tlfre,
         }
     }
 }
@@ -151,6 +162,20 @@ pub struct PathStep {
     pub zeros: usize,
     /// Nonzeros in the final solution.
     pub nonzeros: usize,
+    /// Groups the static pipeline rejected (layer 1, post-KKT-recovery).
+    pub groups_rejected: usize,
+    /// Features the static pipeline rejected inside kept groups (layer 2,
+    /// post-KKT-recovery).
+    pub features_rejected: usize,
+    /// Per-rule marginal rejections in pipeline order (pre-KKT), so each
+    /// rule's efficacy is visible in runner tables and CV.
+    pub layers: Vec<LayerCount>,
+    /// Features evicted by in-solver dynamic GAP screening during this
+    /// step's solve.
+    pub dynamic_evicted: usize,
+    /// Features re-admitted by the KKT recovery loop (heuristic pipelines
+    /// only; 0 for safe pipelines).
+    pub kkt_readmitted: usize,
 }
 
 /// Whole-path output.
@@ -357,6 +382,64 @@ mod tests {
             let diff = (sf.nonzeros as i64 - sb.nonzeros as i64).abs();
             assert!(diff <= 2, "λ={}: {} vs {}", sf.lambda, sf.nonzeros, sb.nonzeros);
         }
+    }
+
+    #[test]
+    fn screen_none_matches_baseline_sparsity() {
+        // The empty pipeline solves the full problem per λ through the
+        // same engine plumbing — per-step sparsity must track the
+        // dedicated baseline engine.
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(20, 80, 8), 107);
+        let cfg = PathConfig { screen: ScreenKind::None, ..small_cfg(1.0) };
+        let a = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+        let b = run_baseline_path(&ds.x, &ds.y, &ds.groups, &small_cfg(1.0));
+        assert_eq!(a.steps.len(), b.steps.len());
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(sa.nonzeros, sb.nonzeros, "λ={}", sa.lambda);
+            assert_eq!(sa.groups_rejected + sa.features_rejected, 0);
+            assert!(sa.layers.is_empty());
+        }
+        assert_eq!(a.mean_total_rejection(), 0.0);
+    }
+
+    #[test]
+    fn gap_pipelines_match_tlfre_support() {
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 120, 12), 108);
+        let base = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &small_cfg(1.0));
+        for kind in [ScreenKind::TlfreGap, ScreenKind::Gap] {
+            let cfg = PathConfig { screen: kind, ..small_cfg(1.0) };
+            let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+            assert_eq!(out.steps.len(), base.steps.len());
+            for (sa, sb) in out.steps.iter().zip(&base.steps) {
+                let diff = (sa.nonzeros as i64 - sb.nonzeros as i64).abs();
+                assert!(
+                    diff <= 2,
+                    "{kind:?} λ={}: nnz {} vs {}",
+                    sa.lambda,
+                    sa.nonzeros,
+                    sb.nonzeros
+                );
+            }
+            // The dynamic half must actually fire somewhere on the path.
+            assert!(
+                out.steps.iter().any(|s| s.dynamic_evicted > 0),
+                "{kind:?}: dynamic screening never fired"
+            );
+        }
+    }
+
+    #[test]
+    fn strong_kkt_pipeline_is_exact() {
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 120, 12), 109);
+        let cfg = PathConfig { screen: ScreenKind::StrongKkt, ..small_cfg(1.0) };
+        let a = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+        let b = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &small_cfg(1.0));
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            let diff = (sa.nonzeros as i64 - sb.nonzeros as i64).abs();
+            assert!(diff <= 2, "λ={}: nnz {} vs {}", sa.lambda, sa.nonzeros, sb.nonzeros);
+        }
+        // The heuristic typically rejects plenty here.
+        assert!(a.mean_total_rejection() > 0.2);
     }
 
     #[test]

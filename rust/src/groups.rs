@@ -122,6 +122,34 @@ impl GroupStructure {
         }
     }
 
+    /// Restrict the structure to the features where `kept[i]` is true,
+    /// dropping groups that lose every feature. Reduced groups carry the
+    /// **original** penalty weights (dropped features are certified zero,
+    /// so the group norm over the survivors equals the norm over the full
+    /// group — same argument as [`Self::select_groups`]-based reduction).
+    /// Returns `None` when nothing survives, otherwise the reduced
+    /// structure plus the map reduced-group → original group index. Used by
+    /// the solvers' dynamic GAP-safe eviction to compact the live problem
+    /// mid-solve.
+    pub fn compact(&self, kept: &[bool]) -> Option<(GroupStructure, Vec<usize>)> {
+        assert_eq!(kept.len(), self.n_features(), "keep mask must cover every feature");
+        let mut sizes = Vec::new();
+        let mut weights = Vec::new();
+        let mut group_map = Vec::new();
+        for (g, s, e) in self.iter() {
+            let k = kept[s..e].iter().filter(|&&b| b).count();
+            if k > 0 {
+                sizes.push(k);
+                weights.push(self.weight(g));
+                group_map.push(g);
+            }
+        }
+        if sizes.is_empty() {
+            return None;
+        }
+        Some((GroupStructure::from_sizes_weighted(&sizes, &weights), group_map))
+    }
+
     /// Restrict to a subset of groups, producing the reduced structure
     /// (carrying the original weights) and the flat feature indices it
     /// came from (reduced-problem extraction).
@@ -181,6 +209,23 @@ mod tests {
         assert_eq!(red.n_features(), 7);
         assert_eq!(feats, vec![0, 1, 5, 6, 7, 8, 9]);
         assert_eq!(red.range(1), (2, 3));
+    }
+
+    #[test]
+    fn compact_drops_emptied_groups_and_keeps_weights() {
+        let g = GroupStructure::from_sizes(&[2, 3, 1, 4]);
+        // Empty group 1 entirely; shrink group 3 to one feature.
+        let kept = vec![true, true, false, false, false, true, false, true, false, false];
+        let (red, map) = g.compact(&kept).unwrap();
+        assert_eq!(red.n_groups(), 3);
+        assert_eq!(map, vec![0, 2, 3]);
+        assert_eq!(red.size(0), 2);
+        assert_eq!(red.size(1), 1);
+        assert_eq!(red.size(2), 1);
+        // Original weights survive (√4 for the shrunken group 3).
+        assert!((red.weight(2) - 2.0).abs() < 1e-12);
+        // Nothing kept → None.
+        assert!(g.compact(&vec![false; 10]).is_none());
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //! NIPS 2014), built as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **Layer 3 (this crate)** — the pathwise coordinator: a single
-//!   streaming path driver ([`coordinator::driver`]) that interleaves exact
-//!   (safe) screening with SGL / nonnegative-Lasso solvers and streams each
+//!   streaming path driver ([`coordinator::driver`]) that interleaves
+//!   screening with SGL / nonnegative-Lasso solvers and streams each
 //!   warm-started step to pluggable sinks (per-λ statistics, dense
 //!   coefficients, fold-parallel cross-validation), plus every substrate
 //!   the paper's evaluation depends on (multi-backend linear algebra, data
@@ -16,6 +16,26 @@
 //!   in JAX, lowered once to HLO text via `python/compile/aot.py`.
 //! * **Layer 1 (python/compile/kernels/)** — the fused screening kernel
 //!   (`Xᵀθ` → shrink `S₁` → per-group norm reduction) as a Pallas kernel.
+//!
+//! ## The composable screening pipeline
+//!
+//! Screening is a pipeline of [`screening::rule::ScreeningRule`]s, each
+//! marked [`screening::rule::Safety::Safe`] (rejections are certificates:
+//! the paper's TLFre two-layer rule, DPC, and GAP-safe spheres) or
+//! `Heuristic` (the strong rule — automatically guarded by the driver's
+//! KKT-violation recovery loop). `PathConfig::screen` selects a named
+//! pipeline (`tlfre` — the default, the paper's protocol — `tlfre+gap`,
+//! `gap`, `strong+kkt`, `none`); custom rule stacks enter through
+//! [`coordinator::drive_tlfre_path_with_pipeline`].
+//!
+//! The GAP pipelines additionally screen **dynamically, inside the
+//! solvers**: at every duality-gap check the `√(2·gap)/λ` sphere
+//! ([`screening::gap_safe`]) certifies more coordinates zero, and the
+//! solver compacts its live problem (iterate, group maps, cached
+//! Lipschitz data, the BCD coloring projection) and keeps iterating on
+//! the survivor view — screening keeps paying off after the per-λ static
+//! pass, at zero extra matvecs. See `rust/src/screening/README.md` for
+//! the taxonomy and the dynamic-screening contract.
 //!
 //! ## The `DesignMatrix` backend abstraction
 //!

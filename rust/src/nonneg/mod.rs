@@ -14,9 +14,11 @@
 
 use crate::linalg::ops;
 use crate::linalg::power::spectral_norm;
-use crate::linalg::{DenseMatrix, DesignMatrix};
+use crate::linalg::{DenseMatrix, DesignMatrix, ScreenedView};
 use crate::prox::nonneg_l1_prox;
-use crate::util::Rng;
+use crate::screening::gap_safe::{EvictPlan, GapSafeDynamicNonneg};
+use crate::util::{retain_by_mask, Rng};
+use std::cell::RefCell;
 
 /// A borrowed nonnegative-Lasso problem instance, generic over the
 /// [`DesignMatrix`] backend (defaults to [`DenseMatrix`]).
@@ -53,16 +55,29 @@ impl<M: DesignMatrix> std::fmt::Debug for NonnegProblem<'_, M> {
 
 /// Options (same semantics as the SGL FISTA options).
 #[derive(Debug, Clone)]
-pub struct NonnegOptions {
+pub struct NonnegOptions<'a> {
     pub max_iter: usize,
     pub tol: f64,
     pub check_every: usize,
     pub lipschitz: Option<f64>,
+    /// In-solver dynamic GAP-safe screening (Theorem 22 geometry; see
+    /// [`crate::screening::gap_safe::GapSafeDynamicNonneg`]): checked at
+    /// every gap check, certified-zero features drop out of the live
+    /// problem and the solve continues on a survivor view. The result is
+    /// reported in the caller's index space. `None` (default) is the
+    /// plain solve.
+    pub dynamic_screen: Option<&'a RefCell<GapSafeDynamicNonneg>>,
 }
 
-impl Default for NonnegOptions {
+impl Default for NonnegOptions<'_> {
     fn default() -> Self {
-        NonnegOptions { max_iter: 20_000, tol: 1e-6, check_every: 10, lipschitz: None }
+        NonnegOptions {
+            max_iter: 20_000,
+            tol: 1e-6,
+            check_every: 10,
+            lipschitz: None,
+            dynamic_screen: None,
+        }
     }
 }
 
@@ -135,13 +150,48 @@ pub fn duality_gap<M: DesignMatrix>(
     ((p - dual).max(0.0), s)
 }
 
+/// One projected-FISTA iteration — gradient, projected prox, momentum.
+/// The single arithmetic home shared by the static and dynamic-screening
+/// loops (same construction as `sgl::fista::fista_iteration`).
+#[allow(clippy::too_many_arguments)]
+fn nonneg_iteration<M: DesignMatrix>(
+    x: &M,
+    y: &[f32],
+    lambda: f64,
+    step: f64,
+    t_k: &mut f64,
+    beta: &mut Vec<f32>,
+    beta_prev: &mut Vec<f32>,
+    z: &mut [f32],
+    xz: &mut [f32],
+    grad: &mut [f32],
+    w: &mut [f32],
+) {
+    // ∇ = Xᵀ(Xz − y), residual fused into the matvec.
+    x.residual_matvec(z, y, xz);
+    x.matvec_t(xz, grad);
+    ops::add_scaled(z, -(step as f32), grad, w);
+    std::mem::swap(beta, beta_prev);
+    nonneg_l1_prox(w, step * lambda, beta);
+
+    let t_next = 0.5 * (1.0 + (1.0 + 4.0 * *t_k * *t_k).sqrt());
+    let omega = ((*t_k - 1.0) / t_next) as f32;
+    for j in 0..z.len() {
+        z[j] = beta[j] + omega * (beta[j] - beta_prev[j]);
+    }
+    *t_k = t_next;
+}
+
 /// Solve nonnegative Lasso by projected FISTA.
 pub fn solve_nonneg<M: DesignMatrix>(
     prob: &NonnegProblem<'_, M>,
     lambda: f64,
     warm_start: Option<&[f32]>,
-    opts: &NonnegOptions,
+    opts: &NonnegOptions<'_>,
 ) -> NonnegResult {
+    if let Some(state) = opts.dynamic_screen {
+        return solve_nonneg_dynamic(prob, lambda, warm_start, opts, state);
+    }
     let n = prob.x.rows();
     let p = prob.x.cols();
     let l = opts.lipschitz.unwrap_or_else(|| nonneg_lipschitz(prob.x));
@@ -170,19 +220,19 @@ pub fn solve_nonneg<M: DesignMatrix>(
     for k in 0..opts.max_iter {
         iters = k + 1;
         checked_obj = None;
-        // ∇ = Xᵀ(Xz − y), residual fused into the matvec.
-        prob.x.residual_matvec(&z, prob.y, &mut xz);
-        prob.x.matvec_t(&xz, &mut grad);
-        ops::add_scaled(&z, -(step as f32), &grad, &mut w);
-        std::mem::swap(&mut beta, &mut beta_prev);
-        nonneg_l1_prox(&w, step * lambda, &mut beta);
-
-        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t_k * t_k).sqrt());
-        let omega = ((t_k - 1.0) / t_next) as f32;
-        for j in 0..p {
-            z[j] = beta[j] + omega * (beta[j] - beta_prev[j]);
-        }
-        t_k = t_next;
+        nonneg_iteration(
+            prob.x,
+            prob.y,
+            lambda,
+            step,
+            &mut t_k,
+            &mut beta,
+            &mut beta_prev,
+            &mut z,
+            &mut xz,
+            &mut grad,
+            &mut w,
+        );
 
         if (k + 1) % opts.check_every == 0 || k + 1 == opts.max_iter {
             prob.x.residual(&beta, prob.y, &mut r);
@@ -213,6 +263,166 @@ pub fn solve_nonneg<M: DesignMatrix>(
         }
     };
     NonnegResult { beta, iters, gap, objective, converged }
+}
+
+/// Mutable state of a dynamic-screening nonneg solve, shared across
+/// epochs.
+struct NonnegDynCore {
+    beta: Vec<f32>,
+    beta_prev: Vec<f32>,
+    z: Vec<f32>,
+    t_k: f64,
+    xz: Vec<f32>,
+    r: Vec<f32>,
+    grad: Vec<f32>,
+    w: Vec<f32>,
+    c: Vec<f32>,
+    last_obj: f64,
+    gap: f64,
+    converged: bool,
+    iters: usize,
+    objective: Option<f64>,
+}
+
+/// Run dynamic projected-FISTA iterations on the current problem until
+/// convergence or the iteration cap (→ `None`) or a GAP eviction (→ the
+/// plan). Per-iteration arithmetic is [`nonneg_iteration`], identical to
+/// the static loop. Instantiated at exactly two matrix types per caller:
+/// `M` before the first eviction, `ScreenedView<M>` after.
+#[allow(clippy::too_many_arguments)]
+fn nonneg_dynamic_epoch<M: DesignMatrix>(
+    x: &M,
+    y: &[f32],
+    lambda: f64,
+    opts: &NonnegOptions<'_>,
+    step: f64,
+    scale_ref: f64,
+    state: &RefCell<GapSafeDynamicNonneg>,
+    core: &mut NonnegDynCore,
+) -> Option<EvictPlan> {
+    let p = x.cols();
+    core.grad.resize(p, 0.0);
+    core.w.resize(p, 0.0);
+    core.c.resize(p, 0.0);
+    let vprob = NonnegProblem::new(x, y);
+    while core.iters < opts.max_iter {
+        core.iters += 1;
+        nonneg_iteration(
+            x,
+            y,
+            lambda,
+            step,
+            &mut core.t_k,
+            &mut core.beta,
+            &mut core.beta_prev,
+            &mut core.z,
+            &mut core.xz,
+            &mut core.grad,
+            &mut core.w,
+        );
+        if core.iters % opts.check_every == 0 || core.iters == opts.max_iter {
+            x.residual(&core.beta, y, &mut core.r);
+            x.matvec_t(&core.r, &mut core.c);
+            let obj = objective(&vprob, lambda, &core.beta, &core.r);
+            if obj > core.last_obj {
+                core.t_k = 1.0;
+                core.z.copy_from_slice(&core.beta);
+            }
+            core.last_obj = obj;
+            core.objective = Some(obj);
+            let (g, s_feas) = duality_gap(&vprob, lambda, &core.beta, &core.r, &core.c);
+            core.gap = g;
+            if g <= opts.tol * scale_ref {
+                core.converged = true;
+                return None;
+            }
+            if core.iters < opts.max_iter {
+                // Gap floored at the f32 evaluation noise scale (see
+                // `gap_with_noise_floor`).
+                let floored =
+                    crate::screening::gap_safe::gap_with_noise_floor(g, scale_ref);
+                if let Some(plan) = state.borrow_mut().check(lambda, &core.c, floored, s_feas) {
+                    return Some(plan);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// The dynamic-screening nonneg solve: phase 1 iterates on the caller's
+/// matrix directly (no view indirection until an eviction fires), then
+/// continues on survivor views (see `sgl::fista::solve_fista_dynamic`
+/// for the shared design rationale).
+fn solve_nonneg_dynamic<M: DesignMatrix>(
+    prob: &NonnegProblem<'_, M>,
+    lambda: f64,
+    warm_start: Option<&[f32]>,
+    opts: &NonnegOptions<'_>,
+    state: &RefCell<GapSafeDynamicNonneg>,
+) -> NonnegResult {
+    let n = prob.x.rows();
+    let p0 = prob.x.cols();
+    // The caller's (or full-problem) bound stays valid for every survivor
+    // view: subset operator norms only shrink.
+    let l = opts.lipschitz.unwrap_or_else(|| nonneg_lipschitz(prob.x));
+    let step = 1.0 / l;
+    let scale_ref = (0.5 * ops::nrm2_sq(prob.y)).max(1e-10);
+
+    let beta0: Vec<f32> = warm_start.map(|b| b.to_vec()).unwrap_or_else(|| vec![0.0; p0]);
+    let mut core = NonnegDynCore {
+        beta_prev: beta0.clone(),
+        z: beta0.clone(),
+        beta: beta0,
+        t_k: 1.0,
+        xz: vec![0.0; n],
+        r: vec![0.0; n],
+        grad: Vec::new(),
+        w: Vec::new(),
+        c: Vec::new(),
+        last_obj: f64::INFINITY,
+        gap: f64::INFINITY,
+        converged: false,
+        iters: 0,
+        objective: None,
+    };
+    let mut cols: Vec<usize> = (0..p0).collect();
+
+    // Phase 1: the caller's problem, zero overhead vs the static loop.
+    let mut pending =
+        nonneg_dynamic_epoch(prob.x, prob.y, lambda, opts, step, scale_ref, state, &mut core);
+    // Phase 2: compact and continue on survivor views until done.
+    while let Some(plan) = pending.take() {
+        retain_by_mask(&mut core.beta, &plan.feature_kept);
+        retain_by_mask(&mut core.beta_prev, &plan.feature_kept);
+        retain_by_mask(&mut core.z, &plan.feature_kept);
+        retain_by_mask(&mut cols, &plan.feature_kept);
+        if cols.is_empty() {
+            core.gap = 0.0;
+            core.converged = true;
+            core.objective = Some(0.5 * ops::nrm2_sq(prob.y));
+            break;
+        }
+        let view = ScreenedView::new(prob.x, cols.clone());
+        pending =
+            nonneg_dynamic_epoch(&view, prob.y, lambda, opts, step, scale_ref, state, &mut core);
+    }
+
+    let mut full = vec![0.0f32; p0];
+    for (k, &j) in cols.iter().enumerate() {
+        full[j] = core.beta[k];
+    }
+    let objective = core.objective.unwrap_or_else(|| {
+        prob.x.residual(&full, prob.y, &mut core.r);
+        self::objective(prob, lambda, &full, &core.r)
+    });
+    NonnegResult {
+        beta: full,
+        iters: core.iters,
+        gap: core.gap,
+        objective,
+        converged: core.converged,
+    }
 }
 
 #[cfg(test)]
@@ -255,6 +465,38 @@ mod tests {
         // Just below λmax the solution must be nonzero.
         let res2 = solve_nonneg(&prob, lmax * 0.95, None, &NonnegOptions::default());
         assert!(res2.beta.iter().any(|&b| b > 0.0));
+    }
+
+    #[test]
+    fn dynamic_screening_matches_static() {
+        let (x, y) = problem(45, 25, 60);
+        let prob = NonnegProblem::new(&x, &y);
+        let (lmax, _) = lambda_max(&prob);
+        let lambda = 0.3 * lmax;
+        let opts = NonnegOptions { tol: 1e-8, ..Default::default() };
+        let plain = solve_nonneg(&prob, lambda, None, &opts);
+        let state = std::cell::RefCell::new(
+            crate::screening::gap_safe::GapSafeDynamicNonneg::new(x.col_norms()),
+        );
+        let dynamic = solve_nonneg(
+            &prob,
+            lambda,
+            None,
+            &NonnegOptions { dynamic_screen: Some(&state), ..opts },
+        );
+        assert!(dynamic.converged);
+        assert_eq!(dynamic.beta.len(), x.cols());
+        assert!(
+            (plain.objective - dynamic.objective).abs()
+                < 1e-5 * plain.objective.abs().max(1.0)
+        );
+        assert!(
+            crate::screening::gap_safe::same_support_at_resolution(&plain.beta, &dynamic.beta),
+            "support mismatch between static and dynamic solves"
+        );
+        // Anti-correlated / slack columns must get evicted on this
+        // planted-sparse problem.
+        assert!(state.borrow().evicted() > 0, "nonneg dynamic screening never fired");
     }
 
     #[test]

@@ -1,0 +1,458 @@
+//! GAP-safe sphere screening (Ndiaye et al., *GAP Safe Screening Rules for
+//! Sparse-Group Lasso*), adapted to this crate's dual geometry.
+//!
+//! TLFre's Theorem 12 ball needs the **exact** dual optimum at the previous
+//! path point — which warm-started iterative solves never provide. The
+//! GAP-safe construction needs only a primal/dual *pair*: the dual
+//! objective `D(θ) = ½‖y‖² − ½‖y − θ‖²` is 1-strongly concave, so for the
+//! dual optimum `θ*` and any feasible `θ`
+//!
+//! ```text
+//! ½‖θ − θ*‖² ≤ D(θ*) − D(θ) ≤ P(β) − D(θ) = gap(β, θ),
+//! ```
+//!
+//! i.e. `θ*` lies in the sphere of radius `√(2·gap)` around `θ`. In the
+//! normalized θ̃ = θ/λ space every screening rule in this crate operates in
+//! (see [`crate::screening::tlfre`]), the radius is `√(2·gap)/λ` — see
+//! [`gap_sphere_radius`]. The feasible `θ` is exactly the
+//! feasibility-scaled residual the solvers already build for every gap
+//! check ([`crate::sgl::dual::duality_gap`] returns the scale), so a
+//! GAP-safe screen costs **no extra matvec**: the correlation sweep
+//! `c = Xᵀr` from the gap check doubles as the sphere-center correlations
+//! after an `s/λ` rescale.
+//!
+//! Two consumers:
+//!
+//! * the **static** pipeline rule (`screening::rule::GapSafeRule`) screens
+//!   once per path step from the previous solution's gap *at the new λ* —
+//!   safe under inexact warm starts by construction, no exactness caveat;
+//! * the **dynamic** states in this module ([`GapSafeDynamic`],
+//!   [`GapSafeDynamicNonneg`]) ride *inside* the solvers: at every gap
+//!   check the sphere shrinks with the gap, certifying more features zero
+//!   while the solve is still running. The solver compacts its live
+//!   problem on each eviction (see `sgl::fista` / `sgl::bcd` /
+//!   [`crate::nonneg`]), so later iterations run on fewer columns.
+//!
+//! Both apply the *same* closed-form layer tests as TLFre (Theorems 15/16
+//! suprema) — those are valid for **any** ball containing the dual optimum,
+//! which is what makes the rules composable.
+
+use super::supremum::s_star_scaled;
+use crate::groups::GroupStructure;
+use crate::util::retain_by_mask;
+
+/// Radius of the GAP-safe sphere in the normalized dual space θ̃ = θ/λ:
+/// `‖θ̃ − θ̃*‖ ≤ √(2·gap)/λ` (1-strong concavity of the dual in θ).
+#[inline]
+pub fn gap_sphere_radius(gap: f64, lambda: f64) -> f64 {
+    (2.0 * gap.max(0.0)).sqrt() / lambda
+}
+
+/// Guard against the f32 gap-evaluation noise floor: the residual
+/// `r = y − Xβ` is stored in f32, so the measured `P(β) − D(θ)` can
+/// understate the true gap by O(ε_f32·‖y‖²) — in the worst case clamping
+/// to 0 and collapsing the sphere onto the (inexact) dual point, where an
+/// active feature's KKT equality `|x_iᵀθ̃*| = 1` would read as rejectable.
+/// Flooring the gap at a small multiple of the objective scale `½‖y‖²`
+/// keeps the sphere honestly sized; at `1e-7` relative the extra radius
+/// is far below any screening threshold's slack, so evictions near
+/// convergence are unaffected. Every sphere construction (static rule and
+/// dynamic states) routes through this.
+#[inline]
+pub fn gap_with_noise_floor(gap: f64, objective_scale: f64) -> f64 {
+    gap.max(1e-7 * objective_scale.max(0.0))
+}
+
+/// Support equality at solver resolution — the single comparator behind
+/// every dynamic-screening support-equality assertion (solver unit tests,
+/// `tests/dynamic_screening.rs`, and the CI-gated `support_equal` field
+/// of `perf_kernels`' dynamic_screening section). Single-cut thresholds
+/// misread borderline coordinates at finite tolerance as support changes
+/// (two equally valid approximate solutions can land a |β| ≈ noise-floor
+/// coordinate on either side of one cut), so this uses a hysteresis band:
+/// a clearly active coordinate in one solution (|β| > 1e-2, the
+/// planted-signal scale of the test problems) must not be clearly zero in
+/// the other (|β| < 1e-4, the solvers' noise floor).
+pub fn same_support_at_resolution(a: &[f32], b: &[f32]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).all(|(&x, &y)| {
+        !((x.abs() > 1e-2 && y.abs() < 1e-4) || (y.abs() > 1e-2 && x.abs() < 1e-4))
+    })
+}
+
+/// Outcome of one dynamic check: the per-feature keep mask over the
+/// solver's *current* (already reduced) feature space.
+#[derive(Debug, Clone)]
+pub struct EvictPlan {
+    /// `false` ⇒ the feature is certified zero and must be dropped.
+    pub feature_kept: Vec<bool>,
+    /// Number of surviving features.
+    pub kept: usize,
+}
+
+/// Dynamic GAP-safe screening state for an SGL solve (FISTA or BCD).
+///
+/// Built by the path driver per reduced solve (projecting the path-level
+/// [`crate::screening::tlfre::TlfreContext`] onto the survivor view — see
+/// `ReducedProblem::project_screen_context`) and handed to the solver via
+/// `FistaOptions::dynamic_screen` / `BcdOptions::dynamic_screen`. The state
+/// compacts its own per-column/per-group data in lockstep with the solver's
+/// compaction, so the two always agree on the index space.
+///
+/// Safety: every eviction is certified by the sphere bound above with a
+/// *feasible* dual point and conservative (full-matrix) group spectral
+/// norms — `σmax(X_g[:,S]) ≤ σmax(X_g)` only enlarges the group ball, never
+/// the other way. Evictions are therefore exactly as safe as the static
+/// rules, and the tier-1 support-equality tests exercise this end to end.
+#[derive(Debug)]
+pub struct GapSafeDynamic {
+    alpha: f64,
+    /// `‖x_i‖` per current column (exact — columns are shared with `X`).
+    col_norms: Vec<f64>,
+    /// Upper bound on `‖X_g‖₂` per current group.
+    group_spectral: Vec<f64>,
+    /// Current column → index in the state's *construction* space (the
+    /// solver's input problem); compacts in lockstep with everything else
+    /// so evictions can be reported in stable coordinates.
+    ids: Vec<usize>,
+    /// Construction-space indices of every feature evicted so far — the
+    /// driver maps these through the reduced problem's feature map to
+    /// verify dynamic evictions against an independent full solve.
+    evicted_ids: Vec<usize>,
+}
+
+impl GapSafeDynamic {
+    /// `col_norms`/`group_spectral` must be indexed by the solver's current
+    /// (reduced) columns/groups.
+    pub fn new(alpha: f64, col_norms: Vec<f64>, group_spectral: Vec<f64>) -> GapSafeDynamic {
+        let p = col_norms.len();
+        GapSafeDynamic {
+            alpha,
+            col_norms,
+            group_spectral,
+            ids: (0..p).collect(),
+            evicted_ids: Vec::new(),
+        }
+    }
+
+    /// Features evicted so far (the driver reports this per path step).
+    #[inline]
+    pub fn evicted(&self) -> usize {
+        self.evicted_ids.len()
+    }
+
+    /// The evicted features, as indices into the solver's *input* problem
+    /// (the space `col_norms` was constructed over).
+    #[inline]
+    pub fn evicted_ids(&self) -> &[usize] {
+        &self.evicted_ids
+    }
+
+    /// GAP-safe test at a solver gap check.
+    ///
+    /// * `groups` — the solver's current group structure;
+    /// * `lambda` — `params.lambda2` (the λ of the (λ, α) parameterization);
+    /// * `c = Xᵀr` at the current iterate (the gap check's own sweep);
+    /// * `gap`, `s_feas` — the pair returned by
+    ///   [`crate::sgl::dual::duality_gap`] for that same `(β, r, c)`.
+    ///
+    /// Returns `None` when nothing new is certified zero; otherwise the
+    /// keep mask (and this state is already compacted to match it).
+    pub fn check(
+        &mut self,
+        groups: &GroupStructure,
+        lambda: f64,
+        c: &[f32],
+        gap: f64,
+        s_feas: f64,
+    ) -> Option<EvictPlan> {
+        let p = groups.n_features();
+        debug_assert_eq!(c.len(), p);
+        debug_assert_eq!(self.col_norms.len(), p);
+        debug_assert_eq!(self.group_spectral.len(), groups.n_groups());
+        if !gap.is_finite() || s_feas <= 0.0 || lambda <= 0.0 {
+            return None;
+        }
+        let rho = gap_sphere_radius(gap, lambda);
+        // Sphere center in normalized space is s·r/λ, so its correlations
+        // are the gap check's c rescaled by s/λ.
+        let scale = s_feas / lambda;
+        let mut feature_kept = vec![true; p];
+        let mut n_evicted = 0usize;
+        for (g, s_idx, e_idx) in groups.iter() {
+            let r_g = rho * self.group_spectral[g];
+            // s*_g = sup over the group ball of ‖S₁(ξ)‖ (Theorem 15 closed
+            // form, single-sourced in `supremum::s_star_scaled`).
+            let s_g = s_star_scaled(&c[s_idx..e_idx], scale, r_g);
+            if s_g < self.alpha * groups.weight(g) {
+                // Whole group certified zero.
+                feature_kept[s_idx..e_idx].iter_mut().for_each(|k| *k = false);
+                n_evicted += e_idx - s_idx;
+            } else {
+                // Feature layer inside the surviving group (Theorem 16 form).
+                for i in s_idx..e_idx {
+                    if ((c[i] as f64) * scale).abs() + rho * self.col_norms[i] <= 1.0 {
+                        feature_kept[i] = false;
+                        n_evicted += 1;
+                    }
+                }
+            }
+        }
+        if n_evicted == 0 {
+            return None;
+        }
+        // Compact our own projections in lockstep with the solver.
+        for (i, &kept) in feature_kept.iter().enumerate() {
+            if !kept {
+                self.evicted_ids.push(self.ids[i]);
+            }
+        }
+        retain_by_mask(&mut self.ids, &feature_kept);
+        retain_by_mask(&mut self.col_norms, &feature_kept);
+        let mut survivors = Vec::with_capacity(groups.n_groups());
+        for (g, s_idx, e_idx) in groups.iter() {
+            if feature_kept[s_idx..e_idx].iter().any(|&b| b) {
+                survivors.push(self.group_spectral[g]);
+            }
+        }
+        self.group_spectral = survivors;
+        Some(EvictPlan { kept: p - n_evicted, feature_kept })
+    }
+}
+
+/// Dynamic GAP-safe state for the nonnegative Lasso (Theorem 22 geometry).
+///
+/// The dual feasible set is the polytope `{θ : ⟨x_i, θ⟩ ≤ 1}` in the
+/// already-normalized θ-space; [`crate::nonneg::duality_gap`]'s dual
+/// candidate is `θ = s·r/λ` and its objective is λ²-strongly concave in θ,
+/// giving the same `√(2·gap)/λ` sphere radius. The rule is one-sided:
+/// `⟨x_i, o⟩ + ρ‖x_i‖ < 1 ⇒ β*_i = 0`.
+#[derive(Debug)]
+pub struct GapSafeDynamicNonneg {
+    col_norms: Vec<f64>,
+    /// Same stable-identity bookkeeping as [`GapSafeDynamic`].
+    ids: Vec<usize>,
+    evicted_ids: Vec<usize>,
+}
+
+impl GapSafeDynamicNonneg {
+    pub fn new(col_norms: Vec<f64>) -> GapSafeDynamicNonneg {
+        let p = col_norms.len();
+        GapSafeDynamicNonneg { col_norms, ids: (0..p).collect(), evicted_ids: Vec::new() }
+    }
+
+    #[inline]
+    pub fn evicted(&self) -> usize {
+        self.evicted_ids.len()
+    }
+
+    /// Evicted features as indices into the solver's input problem.
+    #[inline]
+    pub fn evicted_ids(&self) -> &[usize] {
+        &self.evicted_ids
+    }
+
+    /// Test at a gap check: `c = Xᵀr` (current columns), `(gap, s_feas)`
+    /// from [`crate::nonneg::duality_gap`].
+    pub fn check(
+        &mut self,
+        lambda: f64,
+        c: &[f32],
+        gap: f64,
+        s_feas: f64,
+    ) -> Option<EvictPlan> {
+        let p = c.len();
+        debug_assert_eq!(self.col_norms.len(), p);
+        if !gap.is_finite() || s_feas <= 0.0 || lambda <= 0.0 {
+            return None;
+        }
+        let rho = gap_sphere_radius(gap, lambda);
+        let scale = s_feas / lambda;
+        let mut feature_kept = vec![true; p];
+        let mut n_evicted = 0usize;
+        for i in 0..p {
+            if (c[i] as f64) * scale + rho * self.col_norms[i] < 1.0 {
+                feature_kept[i] = false;
+                n_evicted += 1;
+            }
+        }
+        if n_evicted == 0 {
+            return None;
+        }
+        for (i, &kept) in feature_kept.iter().enumerate() {
+            if !kept {
+                self.evicted_ids.push(self.ids[i]);
+            }
+        }
+        retain_by_mask(&mut self.ids, &feature_kept);
+        retain_by_mask(&mut self.col_norms, &feature_kept);
+        Some(EvictPlan { kept: p - n_evicted, feature_kept })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::power::group_spectral_norms;
+    use crate::linalg::{DenseMatrix, DesignMatrix};
+    use crate::sgl::dual::duality_gap;
+    use crate::sgl::fista::{solve_fista, FistaOptions};
+    use crate::sgl::problem::{SglParams, SglProblem};
+    use crate::util::Rng;
+
+    fn make_problem(
+        seed: u64,
+        n: usize,
+        p: usize,
+        g: usize,
+    ) -> (DenseMatrix, Vec<f32>, crate::groups::GroupStructure) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let x = DenseMatrix::from_fn(n, p, |_, _| rng.gaussian() as f32);
+        let groups = crate::groups::GroupStructure::uniform(p, g);
+        let mut beta = vec![0.0f32; p];
+        for j in 0..p / 6 {
+            beta[j * 5 % p] = rng.normal(0.0, 1.0) as f32;
+        }
+        let mut y = vec![0.0f32; n];
+        x.matvec(&beta, &mut y);
+        for v in y.iter_mut() {
+            *v += rng.normal(0.0, 0.01) as f32;
+        }
+        (x, y, groups)
+    }
+
+    fn state_for(prob: &SglProblem<'_, DenseMatrix>, alpha: f64) -> GapSafeDynamic {
+        let mut rng = Rng::seed_from_u64(0x6A9);
+        let gs = group_spectral_norms(prob.x, &prob.groups.ranges(), 1e-6, 500, &mut rng);
+        GapSafeDynamic::new(alpha, prob.x.col_norms(), gs)
+    }
+
+    #[test]
+    fn sphere_contains_tight_optimum() {
+        // The normalized dual optimum must lie inside the gap sphere built
+        // from a *loose* iterate's feasible dual point.
+        let (x, y, groups) = make_problem(901, 25, 40, 8);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let lmax = crate::screening::lambda_max::sgl_lambda_max(&prob, 1.0);
+        let lambda = 0.3 * lmax.lambda_max;
+        let params = SglParams::from_alpha_lambda(1.0, lambda);
+        let loose =
+            solve_fista(&prob, &params, None, &FistaOptions { tol: 1e-2, ..Default::default() });
+        let tight =
+            solve_fista(&prob, &params, None, &FistaOptions { tol: 1e-10, ..Default::default() });
+        let n = prob.n_samples();
+        let p = prob.n_features();
+        let mut r = vec![0.0f32; n];
+        let mut c = vec![0.0f32; p];
+        crate::sgl::objective::residual(&prob, &loose.beta, &mut r);
+        prob.x.matvec_t(&r, &mut c);
+        let (gap, s) = duality_gap(&prob, &params, &loose.beta, &r, &c);
+        let rho = gap_sphere_radius(gap, lambda);
+        // θ̃* ≈ (y − Xβ_tight)/λ; θ̃ = s·r/λ.
+        let mut rt = vec![0.0f32; n];
+        crate::sgl::objective::residual(&prob, &tight.beta, &mut rt);
+        let mut dist_sq = 0.0f64;
+        for i in 0..n {
+            let d = (rt[i] as f64 - s * r[i] as f64) / lambda;
+            dist_sq += d * d;
+        }
+        // Small slack for the f32 residual evaluation and the fact that
+        // the "tight" solve is itself only gap-1e-10 accurate.
+        assert!(
+            dist_sq.sqrt() <= rho * 1.05 + 1e-4,
+            "optimum outside gap sphere: dist {} radius {rho}",
+            dist_sq.sqrt()
+        );
+    }
+
+    #[test]
+    fn dynamic_evictions_are_zero_in_tight_solve() {
+        let (x, y, groups) = make_problem(902, 25, 48, 8);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let lmax = crate::screening::lambda_max::sgl_lambda_max(&prob, 1.0);
+        let lambda = 0.4 * lmax.lambda_max;
+        let params = SglParams::from_alpha_lambda(1.0, lambda);
+        // Mid-solve iterate: a loose solve's state stands in for it.
+        let loose =
+            solve_fista(&prob, &params, None, &FistaOptions { tol: 1e-4, ..Default::default() });
+        let n = prob.n_samples();
+        let p = prob.n_features();
+        let mut r = vec![0.0f32; n];
+        let mut c = vec![0.0f32; p];
+        crate::sgl::objective::residual(&prob, &loose.beta, &mut r);
+        prob.x.matvec_t(&r, &mut c);
+        let (gap, s) = duality_gap(&prob, &params, &loose.beta, &r, &c);
+        let mut st = state_for(&prob, 1.0);
+        let plan = st.check(&groups, lambda, &c, gap, s);
+        let tight =
+            solve_fista(&prob, &params, None, &FistaOptions { tol: 1e-10, ..Default::default() });
+        if let Some(plan) = plan {
+            assert_eq!(st.evicted(), p - plan.kept);
+            for (i, &kept) in plan.feature_kept.iter().enumerate() {
+                if !kept {
+                    assert!(
+                        tight.beta[i].abs() < 1e-5,
+                        "evicted feature {i} has β = {}",
+                        tight.beta[i]
+                    );
+                }
+            }
+            // Internal projections compacted in lockstep.
+            assert_eq!(st.col_norms.len(), plan.kept);
+        }
+    }
+
+    #[test]
+    fn huge_gap_evicts_nothing() {
+        let (x, y, groups) = make_problem(903, 10, 12, 4);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let mut st = state_for(&prob, 1.0);
+        let c = vec![0.5f32; 12];
+        assert!(st.check(&groups, 1.0, &c, 1e12, 1.0).is_none());
+        assert_eq!(st.evicted(), 0);
+        // Non-finite gap is a no-op, never a panic.
+        assert!(st.check(&groups, 1.0, &c, f64::NAN, 1.0).is_none());
+    }
+
+    #[test]
+    fn nonneg_dynamic_safe() {
+        let mut rng = Rng::seed_from_u64(904);
+        let n = 20;
+        let p = 50;
+        let x = DenseMatrix::from_fn(n, p, |_, _| rng.gaussian().abs() as f32);
+        let mut beta = vec![0.0f32; p];
+        for k in 0..5 {
+            beta[k * 9 % p] = rng.uniform_range(0.3, 1.0) as f32;
+        }
+        let mut y = vec![0.0f32; n];
+        x.matvec(&beta, &mut y);
+        let prob = crate::nonneg::NonnegProblem::new(&x, &y);
+        let (lmax, _) = crate::nonneg::lambda_max(&prob);
+        let lambda = 0.4 * lmax;
+        let loose = crate::nonneg::solve_nonneg(
+            &prob,
+            lambda,
+            None,
+            &crate::nonneg::NonnegOptions { tol: 1e-3, ..Default::default() },
+        );
+        let mut r = vec![0.0f32; n];
+        let mut c = vec![0.0f32; p];
+        x.residual(&loose.beta, &y, &mut r);
+        x.matvec_t(&r, &mut c);
+        let (gap, s) = crate::nonneg::duality_gap(&prob, lambda, &loose.beta, &r, &c);
+        let mut st = GapSafeDynamicNonneg::new(x.col_norms());
+        let tight = crate::nonneg::solve_nonneg(
+            &prob,
+            lambda,
+            None,
+            &crate::nonneg::NonnegOptions { tol: 1e-10, ..Default::default() },
+        );
+        if let Some(plan) = st.check(lambda, &c, gap, s) {
+            for (i, &kept) in plan.feature_kept.iter().enumerate() {
+                if !kept {
+                    assert!(tight.beta[i].abs() < 1e-5, "evicted {i} has β={}", tight.beta[i]);
+                }
+            }
+        }
+    }
+}

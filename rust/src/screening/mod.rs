@@ -9,19 +9,39 @@
 //!   (Theorems 15 and 16).
 //! * [`tlfre`] — the two-layer rules (L₁)/(L₂) of Theorem 17.
 //! * [`dpc`] — the DPC rule for nonnegative Lasso (Theorem 22).
+//! * [`gap_safe`] — GAP-safe spheres (Ndiaye et al.) built from the duality
+//!   gap of *any* primal/dual pair: the static pipeline rule plus the
+//!   dynamic states the solvers consult at gap-check cadence.
+//! * [`rule`] — the composable [`rule::ScreeningRule`] pipeline unifying
+//!   all of the above, with an explicit [`rule::Safety`] marker so
+//!   heuristic rules ([`strong_rule`]) always compose with a KKT
+//!   post-check in the driver.
 //!
-//! All rules are **exact**: a discarded group/feature is guaranteed to be
-//! zero at the optimum (verified end-to-end by the safety property tests in
-//! `rust/tests/`).
+//! The TLFre/DPC/GAP rules are **exact**: a discarded group/feature is
+//! guaranteed to be zero at the optimum (verified end-to-end by the safety
+//! property tests in `rust/tests/`). The strong rule is heuristic and only
+//! ever runs behind the driver's KKT recovery loop. See
+//! `rust/src/screening/README.md` for the full taxonomy and the dynamic
+//! screening contract.
 
 pub mod dpc;
 pub mod dual_est;
+pub mod gap_safe;
 pub mod lambda_max;
+pub mod rule;
 pub mod strong_rule;
 pub mod supremum;
 pub mod tlfre;
 
 pub use dpc::{dpc_screen, DpcOutcome};
 pub use dual_est::{estimate_ball, Ball};
+pub use gap_safe::{
+    gap_sphere_radius, gap_with_noise_floor, same_support_at_resolution, EvictPlan,
+    GapSafeDynamic, GapSafeDynamicNonneg,
+};
 pub use lambda_max::{sgl_lambda_max, LambdaMaxInfo};
+pub use rule::{
+    stats_from_masks, GapSafeRule, LayerCount, Safety, ScreenInput, ScreenKind, ScreenPipeline,
+    ScreeningRule, StrongRule, SurvivorMask, TlfreRule,
+};
 pub use tlfre::{tlfre_screen, ScreenStats, TlfreContext, TlfreOutcome};

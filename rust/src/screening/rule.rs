@@ -1,0 +1,621 @@
+//! The composable screening pipeline: one trait, many rules.
+//!
+//! Before this module, every screening flavor (TLFre two-layer, strong
+//! rule, DPC) was a bespoke function with its own context plumbing through
+//! the path driver. [`ScreeningRule`] unifies them behind one interface:
+//! each rule *refines* a shared survivor mask (it may only flip
+//! kept → rejected), declares whether it is [`Safety::Safe`] (rejections
+//! are certificates) or [`Safety::Heuristic`] (rejections may be wrong and
+//! must be guarded by a KKT post-check), and reports its marginal
+//! rejections so per-rule efficacy is visible in the path statistics.
+//!
+//! A [`ScreenPipeline`] is an ordered list of rules plus a flag for
+//! in-solver dynamic GAP screening ([`crate::screening::gap_safe`]). The
+//! named pipelines the config/CLI expose ([`ScreenKind`]):
+//!
+//! | kind | static rules | dynamic | KKT loop |
+//! |---|---|---|---|
+//! | `tlfre` (default) | TLFre (L₁)+(L₂) | — | — |
+//! | `tlfre+gap` | TLFre, GAP-safe | ✓ | — |
+//! | `gap` | GAP-safe | ✓ | — |
+//! | `strong+kkt` | strong rule | — | ✓ |
+//! | `none` | — | — | — |
+//!
+//! The driver runs the KKT-violation recovery loop
+//! ([`crate::screening::strong_rule::kkt_violations`]) whenever *any* rule
+//! in the pipeline is heuristic, so heuristic rules always compose into an
+//! exact path — by construction, not by caller discipline.
+
+use super::gap_safe::gap_sphere_radius;
+use super::lambda_max::LambdaMaxInfo;
+use super::strong_rule::strong_rule_screen;
+use super::supremum::s_star_scaled;
+use super::tlfre::{tlfre_screen_inexact, ScreenStats, TlfreContext, TlfreOutcome};
+use crate::groups::GroupStructure;
+use crate::linalg::DesignMatrix;
+use crate::sgl::dual::duality_gap;
+use crate::sgl::problem::{SglParams, SglProblem};
+
+/// Whether a rule's rejections are certificates or guesses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Safety {
+    /// Rejected coordinates are guaranteed zero at the optimum.
+    Safe,
+    /// Rejections may be wrong; the driver must run a KKT post-check and
+    /// re-admit violators.
+    Heuristic,
+}
+
+/// Everything a static (per-λ) rule may consult. All dual-side quantities
+/// are computed **once** per path step by the driver and shared by every
+/// rule in the pipeline — adding a rule adds no matvec.
+pub struct ScreenInput<'s, 'a, M: DesignMatrix> {
+    pub prob: &'s SglProblem<'a, M>,
+    pub alpha: f64,
+    /// Target λ of this step.
+    pub lambda: f64,
+    /// Previous grid point λ̄ (λmax on the first step).
+    pub lambda_bar: f64,
+    /// Previous solution β̄ (zero on the first step).
+    pub beta_bar: &'s [f32],
+    /// Residual `y − Xβ̄`.
+    pub resid_bar: &'s [f32],
+    /// Correlations `c = Xᵀ(y − Xβ̄)`.
+    pub corr_bar: &'s [f32],
+    /// Feasibility-scaled dual point `s·(y − Xβ̄)/λ̄` (normalized θ-space).
+    /// Populated only when some rule in the pipeline declares
+    /// [`ScreeningRule::needs_previous_dual`] — otherwise empty, and rules
+    /// that did not declare the need must not read it (the driver skips
+    /// the feasibility bisection and θ̄ allocation entirely).
+    pub theta_bar: &'s [f32],
+    /// Duality gap of `(β̄, θ̄)` at λ̄, pre-multiplied by the configured
+    /// inflation (the TLFre inexactness guard). Same availability contract
+    /// as [`Self::theta_bar`] (0.0 when not populated).
+    pub gap_bar: f64,
+    pub lmax: &'s LambdaMaxInfo,
+    pub ctx: &'s TlfreContext,
+}
+
+/// Marginal rejections contributed by one rule, in pipeline order.
+#[derive(Debug, Clone)]
+pub struct LayerCount {
+    pub rule: &'static str,
+    pub safety: Safety,
+    /// Groups this rule newly rejected.
+    pub groups: usize,
+    /// Features this rule newly rejected (including those inside its
+    /// newly-rejected groups).
+    pub features: usize,
+}
+
+/// The shared survivor mask a pipeline's rules refine in order.
+#[derive(Debug, Clone)]
+pub struct SurvivorMask {
+    pub group_kept: Vec<bool>,
+    pub feature_kept: Vec<bool>,
+}
+
+impl SurvivorMask {
+    pub fn all_kept(groups: &GroupStructure) -> SurvivorMask {
+        SurvivorMask {
+            group_kept: vec![true; groups.n_groups()],
+            feature_kept: vec![true; groups.n_features()],
+        }
+    }
+
+    /// AND another outcome's masks into this one, returning the marginal
+    /// `(groups, features)` newly rejected. Maintains the invariant that a
+    /// rejected group's features are all rejected.
+    pub fn intersect(&mut self, group_kept: &[bool], feature_kept: &[bool]) -> (usize, usize) {
+        debug_assert_eq!(group_kept.len(), self.group_kept.len());
+        debug_assert_eq!(feature_kept.len(), self.feature_kept.len());
+        let mut g_new = 0usize;
+        for (mine, &theirs) in self.group_kept.iter_mut().zip(group_kept) {
+            if *mine && !theirs {
+                *mine = false;
+                g_new += 1;
+            }
+        }
+        let mut f_new = 0usize;
+        for (mine, &theirs) in self.feature_kept.iter_mut().zip(feature_kept) {
+            if *mine && !theirs {
+                *mine = false;
+                f_new += 1;
+            }
+        }
+        (g_new, f_new)
+    }
+}
+
+/// Recompute [`ScreenStats`] from final masks. Attribution is
+/// rule-order-independent: features in rejected groups count toward the
+/// paper's r₁ numerator, rejected features inside kept groups toward r₂.
+pub fn stats_from_masks(
+    groups: &GroupStructure,
+    group_kept: &[bool],
+    feature_kept: &[bool],
+) -> ScreenStats {
+    let mut stats = ScreenStats::default();
+    for (g, s, e) in groups.iter() {
+        if !group_kept[g] {
+            stats.groups_rejected += 1;
+            stats.features_in_rejected_groups += e - s;
+        } else {
+            stats.features_rejected_l2 +=
+                feature_kept[s..e].iter().filter(|&&k| !k).count();
+        }
+    }
+    stats
+}
+
+/// One composable screening rule. Implementations must be *monotone*: they
+/// may flip mask entries kept → rejected, never the reverse.
+pub trait ScreeningRule<M: DesignMatrix> {
+    fn name(&self) -> &'static str;
+    fn safety(&self) -> Safety;
+    /// Whether this rule reads [`ScreenInput::theta_bar`] /
+    /// [`ScreenInput::gap_bar`] (the previous-λ dual point and its gap).
+    /// The driver pays the feasibility bisection + θ̄ allocation only when
+    /// some rule in the pipeline returns true; rules leaving the default
+    /// `false` must confine themselves to `beta_bar`/`resid_bar`/
+    /// `corr_bar` and the per-dataset context.
+    fn needs_previous_dual(&self) -> bool {
+        false
+    }
+    /// Refine `mask`; return the marginal rejections.
+    fn screen(&self, input: &ScreenInput<'_, '_, M>, mask: &mut SurvivorMask) -> LayerCount;
+}
+
+// ---------------------------------------------------------------------------
+// Concrete rules
+// ---------------------------------------------------------------------------
+
+/// The paper's two-layer rule (Theorem 17), inexactness-robust via the
+/// `√(2·gap)` radius inflation of `tlfre_screen_inexact`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TlfreRule;
+
+impl<M: DesignMatrix> ScreeningRule<M> for TlfreRule {
+    fn name(&self) -> &'static str {
+        "tlfre"
+    }
+
+    fn safety(&self) -> Safety {
+        Safety::Safe
+    }
+
+    fn needs_previous_dual(&self) -> bool {
+        // Theorem 12's ball is anchored at the previous-λ dual optimum.
+        true
+    }
+
+    fn screen(&self, input: &ScreenInput<'_, '_, M>, mask: &mut SurvivorMask) -> LayerCount {
+        let out = tlfre_screen_inexact(
+            input.prob,
+            input.alpha,
+            input.lambda,
+            input.lambda_bar,
+            input.theta_bar,
+            input.gap_bar,
+            input.lmax,
+            input.ctx,
+        );
+        let (groups, features) = mask.intersect(&out.group_kept, &out.feature_kept);
+        LayerCount { rule: "tlfre", safety: Safety::Safe, groups, features }
+    }
+}
+
+/// GAP-safe sphere rule (Ndiaye et al.): sphere of radius `√(2·gap)/λ`
+/// around the feasibility-scaled residual, with the gap evaluated **at the
+/// target λ** — valid for arbitrarily inexact previous solves, no
+/// sequential-exactness assumption at all. Reuses the step's existing
+/// residual/correlation sweeps; the only extra cost is two O(p) probes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GapSafeRule;
+
+impl<M: DesignMatrix> ScreeningRule<M> for GapSafeRule {
+    fn name(&self) -> &'static str {
+        "gap"
+    }
+
+    fn safety(&self) -> Safety {
+        Safety::Safe
+    }
+
+    fn screen(&self, input: &ScreenInput<'_, '_, M>, mask: &mut SurvivorMask) -> LayerCount {
+        let params = SglParams::from_alpha_lambda(input.alpha, input.lambda);
+        let (gap, s_feas) = duality_gap(
+            input.prob,
+            &params,
+            input.beta_bar,
+            input.resid_bar,
+            input.corr_bar,
+        );
+        // Floor at the f32 gap-evaluation noise scale (see
+        // `gap_safe::gap_with_noise_floor`).
+        let gap = super::gap_safe::gap_with_noise_floor(
+            gap,
+            crate::sgl::dual::null_objective(input.prob.y),
+        );
+        let rho = gap_sphere_radius(gap, input.lambda);
+        let scale = s_feas / input.lambda;
+        let groups = input.prob.groups;
+        let ctx = input.ctx;
+        let mut g_new = 0usize;
+        let mut f_new = 0usize;
+        for (g, s_idx, e_idx) in groups.iter() {
+            if !mask.group_kept[g] {
+                continue;
+            }
+            let r_g = rho * ctx.group_spectral[g];
+            // Theorem 15 supremum over the rescaled correlations
+            // (single-sourced in `supremum::s_star_scaled`).
+            let s_g = s_star_scaled(&input.corr_bar[s_idx..e_idx], scale, r_g);
+            if s_g < input.alpha * groups.weight(g) {
+                mask.group_kept[g] = false;
+                g_new += 1;
+                for k in mask.feature_kept[s_idx..e_idx].iter_mut() {
+                    if *k {
+                        *k = false;
+                        f_new += 1;
+                    }
+                }
+            } else {
+                for i in s_idx..e_idx {
+                    if mask.feature_kept[i]
+                        && ((input.corr_bar[i] as f64) * scale).abs() + rho * ctx.col_norms[i]
+                            <= 1.0
+                    {
+                        mask.feature_kept[i] = false;
+                        f_new += 1;
+                    }
+                }
+            }
+        }
+        LayerCount { rule: "gap", safety: Safety::Safe, groups: g_new, features: f_new }
+    }
+}
+
+/// The strong-rule heuristic (Tibshirani et al.) — *not* safe; the driver
+/// pairs it with the KKT recovery loop whenever it appears in a pipeline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StrongRule;
+
+impl<M: DesignMatrix> ScreeningRule<M> for StrongRule {
+    fn name(&self) -> &'static str {
+        "strong"
+    }
+
+    fn safety(&self) -> Safety {
+        Safety::Heuristic
+    }
+
+    fn screen(&self, input: &ScreenInput<'_, '_, M>, mask: &mut SurvivorMask) -> LayerCount {
+        let out = strong_rule_screen(
+            input.prob,
+            input.alpha,
+            input.lambda,
+            input.lambda_bar,
+            input.corr_bar,
+        );
+        let (groups, features) = mask.intersect(&out.group_kept, &out.feature_kept);
+        LayerCount { rule: "strong", safety: Safety::Heuristic, groups, features }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline
+// ---------------------------------------------------------------------------
+
+/// Named pipeline selection for config/CLI (`PathConfig::screen`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ScreenKind {
+    /// The paper's exact two-layer rule (the default; PR-4 behaviour).
+    #[default]
+    Tlfre,
+    /// TLFre + static GAP-safe, plus dynamic GAP screening in the solver.
+    TlfreGap,
+    /// Static GAP-safe only, plus dynamic GAP screening in the solver.
+    Gap,
+    /// Strong-rule heuristic guarded by the KKT recovery loop.
+    StrongKkt,
+    /// No screening: the pipeline keeps everything (full solve per λ
+    /// through the engine's reduced-problem plumbing — a keep-all view).
+    /// For timing-grade no-screening baselines prefer
+    /// `run_baseline_path`, which solves on the raw matrix with zero
+    /// per-step reduction bookkeeping; `none` exists so pipeline
+    /// selection is total and A/B-able through one code path.
+    None,
+}
+
+impl ScreenKind {
+    /// Parse the config/CLI spelling.
+    pub fn parse(s: &str) -> Option<ScreenKind> {
+        match s {
+            "tlfre" => Some(ScreenKind::Tlfre),
+            "tlfre+gap" => Some(ScreenKind::TlfreGap),
+            "gap" => Some(ScreenKind::Gap),
+            "strong+kkt" => Some(ScreenKind::StrongKkt),
+            "none" => Some(ScreenKind::None),
+            _ => Option::None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ScreenKind::Tlfre => "tlfre",
+            ScreenKind::TlfreGap => "tlfre+gap",
+            ScreenKind::Gap => "gap",
+            ScreenKind::StrongKkt => "strong+kkt",
+            ScreenKind::None => "none",
+        }
+    }
+
+    /// Whether this kind turns on in-solver dynamic GAP screening.
+    pub fn dynamic(&self) -> bool {
+        matches!(self, ScreenKind::TlfreGap | ScreenKind::Gap)
+    }
+}
+
+/// An ordered rule list plus the dynamic-screening flag. Build a named one
+/// with [`ScreenPipeline::for_kind`] or compose your own with
+/// [`ScreenPipeline::new`] (the driver exposes
+/// `drive_tlfre_path_with_pipeline` for custom pipelines).
+///
+/// `dynamic` only takes effect when the pipeline is [`Self::all_safe`]:
+/// the in-solver GAP sphere certifies zeros of the problem the solver is
+/// actually given, so a heuristically mis-reduced problem (correct only
+/// after the KKT recovery loop) must not feed it — the driver enforces
+/// this.
+pub struct ScreenPipeline<M: DesignMatrix> {
+    rules: Vec<Box<dyn ScreeningRule<M>>>,
+    dynamic: bool,
+}
+
+impl<M: DesignMatrix> ScreenPipeline<M> {
+    pub fn new(rules: Vec<Box<dyn ScreeningRule<M>>>, dynamic: bool) -> ScreenPipeline<M> {
+        ScreenPipeline { rules, dynamic }
+    }
+
+    pub fn for_kind(kind: ScreenKind) -> ScreenPipeline<M> {
+        let (rules, dynamic): (Vec<Box<dyn ScreeningRule<M>>>, bool) = match kind {
+            ScreenKind::Tlfre => (vec![Box::new(TlfreRule)], false),
+            ScreenKind::TlfreGap => (vec![Box::new(TlfreRule), Box::new(GapSafeRule)], true),
+            ScreenKind::Gap => (vec![Box::new(GapSafeRule)], true),
+            ScreenKind::StrongKkt => (vec![Box::new(StrongRule)], false),
+            ScreenKind::None => (Vec::new(), false),
+        };
+        ScreenPipeline { rules, dynamic }
+    }
+
+    /// No rules at all (the `none` pipeline): the driver skips the dual
+    /// preamble entirely.
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Whether the driver should attach the dynamic GAP state to solves.
+    pub fn dynamic(&self) -> bool {
+        self.dynamic
+    }
+
+    /// True iff every rule's rejections are certificates. The driver runs
+    /// the KKT recovery loop exactly when this is false.
+    pub fn all_safe(&self) -> bool {
+        self.rules.iter().all(|r| r.safety() == Safety::Safe)
+    }
+
+    /// Whether any rule needs the previous-λ dual point (θ̄ + its gap);
+    /// the driver skips that part of the preamble otherwise.
+    pub fn needs_previous_dual(&self) -> bool {
+        self.rules.iter().any(|r| r.needs_previous_dual())
+    }
+
+    /// Run every rule in order over a fresh mask; returns the merged
+    /// outcome (stats recomputed from the final masks) and the per-rule
+    /// marginal rejection counts.
+    pub fn screen(&self, input: &ScreenInput<'_, '_, M>) -> (TlfreOutcome, Vec<LayerCount>) {
+        let groups = input.prob.groups;
+        let mut mask = SurvivorMask::all_kept(groups);
+        let mut layers = Vec::with_capacity(self.rules.len());
+        for rule in &self.rules {
+            layers.push(rule.screen(input, &mut mask));
+        }
+        let stats = stats_from_masks(groups, &mask.group_kept, &mask.feature_kept);
+        (
+            TlfreOutcome {
+                group_kept: mask.group_kept,
+                feature_kept: mask.feature_kept,
+                stats,
+            },
+            layers,
+        )
+    }
+}
+
+impl<M: DesignMatrix> std::fmt::Debug for ScreenPipeline<M> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScreenPipeline")
+            .field("rules", &self.rules.iter().map(|r| r.name()).collect::<Vec<_>>())
+            .field("dynamic", &self.dynamic)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+    use crate::screening::lambda_max::sgl_lambda_max;
+    use crate::util::Rng;
+
+    fn setup(
+        seed: u64,
+    ) -> (DenseMatrix, Vec<f32>, GroupStructure) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n = 25;
+        let p = 48;
+        let x = DenseMatrix::from_fn(n, p, |_, _| rng.gaussian() as f32);
+        let groups = GroupStructure::uniform(p, 8);
+        let mut beta = vec![0.0f32; p];
+        for j in 0..6 {
+            beta[j * 7 % p] = rng.normal(0.0, 1.0) as f32;
+        }
+        let mut y = vec![0.0f32; n];
+        x.matvec(&beta, &mut y);
+        (x, y, groups)
+    }
+
+    /// Build a full ScreenInput for the first path step (from λmax).
+    fn first_step_input<'s, 'a>(
+        prob: &'s SglProblem<'a, DenseMatrix>,
+        alpha: f64,
+        lambda: f64,
+        lmax: &'s LambdaMaxInfo,
+        ctx: &'s TlfreContext,
+        bufs: &'s (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>),
+    ) -> ScreenInput<'s, 'a, DenseMatrix> {
+        ScreenInput {
+            prob,
+            alpha,
+            lambda,
+            lambda_bar: lmax.lambda_max,
+            beta_bar: &bufs.0,
+            resid_bar: &bufs.1,
+            corr_bar: &bufs.2,
+            theta_bar: &bufs.3,
+            gap_bar: 0.0,
+            lmax,
+            ctx,
+        }
+    }
+
+    fn make_bufs(
+        prob: &SglProblem<'_, DenseMatrix>,
+        lambda_bar: f64,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let beta = vec![0.0f32; prob.n_features()];
+        let resid = prob.y.to_vec();
+        let mut corr = vec![0.0f32; prob.n_features()];
+        prob.x.matvec_t(&resid, &mut corr);
+        let theta: Vec<f32> =
+            resid.iter().map(|&v| (v as f64 / lambda_bar) as f32).collect();
+        (beta, resid, corr, theta)
+    }
+
+    #[test]
+    fn tlfre_pipeline_matches_direct_rule() {
+        let (x, y, groups) = setup(911);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let alpha = 1.0;
+        let lmax = sgl_lambda_max(&prob, alpha);
+        let ctx = TlfreContext::precompute(&prob);
+        let lambda = 0.8 * lmax.lambda_max;
+        let bufs = make_bufs(&prob, lmax.lambda_max);
+        let input = first_step_input(&prob, alpha, lambda, &lmax, &ctx, &bufs);
+        let pipe: ScreenPipeline<DenseMatrix> = ScreenPipeline::for_kind(ScreenKind::Tlfre);
+        let (out, layers) = pipe.screen(&input);
+        let direct = crate::screening::tlfre::tlfre_screen(
+            &prob, alpha, lambda, lmax.lambda_max, &bufs.3, &lmax, &ctx,
+        );
+        assert_eq!(out.group_kept, direct.group_kept);
+        assert_eq!(out.feature_kept, direct.feature_kept);
+        assert_eq!(out.stats.groups_rejected, direct.stats.groups_rejected);
+        assert_eq!(
+            out.stats.features_in_rejected_groups,
+            direct.stats.features_in_rejected_groups
+        );
+        assert_eq!(out.stats.features_rejected_l2, direct.stats.features_rejected_l2);
+        assert_eq!(layers.len(), 1);
+        assert_eq!(layers[0].rule, "tlfre");
+        assert_eq!(layers[0].features, direct.total_rejected());
+    }
+
+    #[test]
+    fn composed_pipeline_is_monotone_and_marginal_counts_sum() {
+        let (x, y, groups) = setup(912);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let alpha = 1.0;
+        let lmax = sgl_lambda_max(&prob, alpha);
+        let ctx = TlfreContext::precompute(&prob);
+        let lambda = 0.7 * lmax.lambda_max;
+        let bufs = make_bufs(&prob, lmax.lambda_max);
+        let input = first_step_input(&prob, alpha, lambda, &lmax, &ctx, &bufs);
+        let solo: ScreenPipeline<DenseMatrix> = ScreenPipeline::for_kind(ScreenKind::Tlfre);
+        let combo: ScreenPipeline<DenseMatrix> = ScreenPipeline::for_kind(ScreenKind::TlfreGap);
+        assert!(combo.dynamic() && combo.all_safe());
+        let (a, _) = solo.screen(&input);
+        let (b, layers) = combo.screen(&input);
+        // Adding a safe rule can only reject more.
+        for i in 0..prob.n_features() {
+            if !a.feature_kept[i] {
+                assert!(!b.feature_kept[i], "composition un-rejected feature {i}");
+            }
+        }
+        let total: usize = layers.iter().map(|l| l.features).sum();
+        assert_eq!(total, b.feature_kept.iter().filter(|&&k| !k).count());
+    }
+
+    #[test]
+    fn gap_rule_rejections_are_safe() {
+        let (x, y, groups) = setup(913);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let alpha = 1.0;
+        let lmax = sgl_lambda_max(&prob, alpha);
+        let ctx = TlfreContext::precompute(&prob);
+        let lambda = 0.75 * lmax.lambda_max;
+        let bufs = make_bufs(&prob, lmax.lambda_max);
+        let input = first_step_input(&prob, alpha, lambda, &lmax, &ctx, &bufs);
+        let pipe: ScreenPipeline<DenseMatrix> = ScreenPipeline::for_kind(ScreenKind::Gap);
+        let (out, _) = pipe.screen(&input);
+        let params = SglParams::from_alpha_lambda(alpha, lambda);
+        let sol = crate::sgl::fista::solve_fista(
+            &prob,
+            &params,
+            Option::None,
+            &crate::sgl::fista::FistaOptions { tol: 1e-10, ..Default::default() },
+        );
+        for j in 0..prob.n_features() {
+            if !out.feature_kept[j] {
+                assert!(sol.beta[j].abs() < 1e-5, "gap rule screened live feature {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for kind in [
+            ScreenKind::Tlfre,
+            ScreenKind::TlfreGap,
+            ScreenKind::Gap,
+            ScreenKind::StrongKkt,
+            ScreenKind::None,
+        ] {
+            assert_eq!(ScreenKind::parse(kind.as_str()), Some(kind));
+        }
+        assert_eq!(ScreenKind::parse("magic"), Option::None);
+        assert_eq!(ScreenKind::default(), ScreenKind::Tlfre);
+        assert!(!ScreenKind::Tlfre.dynamic());
+        assert!(ScreenKind::TlfreGap.dynamic() && ScreenKind::Gap.dynamic());
+    }
+
+    #[test]
+    fn strong_pipeline_flags_heuristic() {
+        let pipe: ScreenPipeline<DenseMatrix> = ScreenPipeline::for_kind(ScreenKind::StrongKkt);
+        assert!(!pipe.all_safe());
+        let none: ScreenPipeline<DenseMatrix> = ScreenPipeline::for_kind(ScreenKind::None);
+        assert!(none.is_empty() && none.all_safe() && !none.dynamic());
+    }
+
+    #[test]
+    fn stats_from_masks_attribution() {
+        let groups = GroupStructure::from_sizes(&[2, 3, 1]);
+        // Group 0 rejected entirely; one feature of group 1 rejected.
+        let gk = vec![false, true, true];
+        let fk = vec![false, false, true, false, true, true];
+        let s = stats_from_masks(&groups, &gk, &fk);
+        assert_eq!(s.groups_rejected, 1);
+        assert_eq!(s.features_in_rejected_groups, 2);
+        assert_eq!(s.features_rejected_l2, 1);
+    }
+}

@@ -59,9 +59,16 @@ pub fn strong_rule_screen<M: DesignMatrix>(
 
 /// KKT residual of a *discarded* coordinate set: returns the features whose
 /// optimality condition is violated by the reduced solution (they must be
-/// re-admitted). For feature i of group g the inactive-coordinate condition
-/// is `|c_i| ≤ λ₁√n_g·u_i + λ₂` relaxed to the sufficient check
-/// `|c_i| ≤ λ₂` for zero groups and `|c_i| ≤ λ₂ + λ₁√n_g` otherwise.
+/// re-admitted). Conditions, per group g of the reduced solution β:
+///
+/// * group screened entirely, or kept but solved to `β_g = 0`: the zero
+///   group must satisfy `‖S_{λ₂}(c_g)‖ ≤ λ₁√n_g` (eq. (30));
+/// * feature i screened inside a group with `β_g ≠ 0`: the group-norm
+///   subgradient component at `β_i = 0` is `λ₁√n_g·β_i/‖β_g‖ = 0`, so the
+///   inactive-coordinate condition is `|c_i| ≤ λ₂` — *not* the
+///   `λ₂ + λ₁√n_g` relaxation, which is only valid for zero groups and
+///   would let feature-level mis-rejections inside active groups slip
+///   through the recovery loop undetected.
 pub fn kkt_violations<M: DesignMatrix>(
     prob: &SglProblem<'_, M>,
     params: &SglParams,
@@ -76,16 +83,19 @@ pub fn kkt_violations<M: DesignMatrix>(
     let mut bad = Vec::new();
     for (g, s, e) in prob.groups.iter() {
         let w = prob.groups.weight(g);
-        if !screened.group_kept[g] {
-            // Whole group screened ⇒ β_g = 0 must satisfy
-            // ‖S_{λ₂}(c_g)‖ ≤ λ₁√n_g (eq. (30)).
+        let group_is_zero =
+            !screened.group_kept[g] || beta[s..e].iter().all(|&v| v == 0.0);
+        if group_is_zero {
+            // β_g = 0 must satisfy ‖S_{λ₂}(c_g)‖ ≤ λ₁√n_g (eq. (30));
+            // only the *screened* coordinates need re-admission (kept ones
+            // are already in the solver's problem).
             if crate::prox::shrink_norm(&c[s..e], params.lambda2) > params.lambda1 * w * (1.0 + 1e-6) {
-                bad.extend(s..e);
+                bad.extend((s..e).filter(|&i| !screened.feature_kept[i]));
             }
         } else {
             for i in s..e {
                 if !screened.feature_kept[i]
-                    && (c[i].abs() as f64) > params.lambda2 + params.lambda1 * w + 1e-6
+                    && (c[i].abs() as f64) > params.lambda2 * (1.0 + 1e-6) + 1e-6
                 {
                     bad.push(i);
                 }
@@ -98,13 +108,20 @@ pub fn kkt_violations<M: DesignMatrix>(
 /// Solve at λ using the strong rule with the KKT-correction loop: screen,
 /// solve reduced, check discarded coordinates, re-admit violators, repeat.
 /// Returns the exact solution plus the number of correction rounds.
+///
+/// This is the standalone single-λ reference form (ablation benches,
+/// tests). The **production** recovery loop lives in the path driver
+/// (`coordinator::driver`), which runs this same
+/// screen→solve→[`kkt_violations`]→re-admit cycle for any pipeline
+/// containing a heuristic rule (`--screen strong+kkt`) — changes to the
+/// recovery logic belong there first, with this helper kept in step.
 pub fn solve_with_strong_rule<M: DesignMatrix>(
     prob: &SglProblem<'_, M>,
     alpha: f64,
     lambda: f64,
     lambda_bar: f64,
     beta_bar: &[f32],
-    opts: &FistaOptions,
+    opts: &FistaOptions<'_>,
 ) -> (SolveResult, usize) {
     let params = SglParams::from_alpha_lambda(alpha, lambda);
     let n = prob.n_samples();
@@ -207,6 +224,53 @@ mod tests {
         // Both should reject plenty here; strong usually ≥ exact.
         assert!(strong.total_rejected() > 0);
         assert!(exact.total_rejected() > 0);
+    }
+
+    #[test]
+    fn kkt_flags_feature_violation_inside_active_group() {
+        // Regression: the per-feature check once used the zero-group
+        // relaxation |c_i| ≤ λ₂ + λ₁√n_g for screened features inside
+        // *active* groups, where the correct inactive-coordinate condition
+        // is |c_i| ≤ λ₂ (the group-norm subgradient component vanishes at
+        // β_i = 0 when ‖β_g‖ ≠ 0) — feature-level mis-rejections in active
+        // groups slipped through. Wrongly screen one substantial feature
+        // of a group that stays active and re-solve: the violation must be
+        // flagged.
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 120, 12), 304);
+        let prob = SglProblem::new(&ds.x, &ds.y, &ds.groups);
+        let alpha = 1.0;
+        let lmax = sgl_lambda_max(&prob, alpha);
+        let lambda = 0.2 * lmax.lambda_max;
+        let params = SglParams::from_alpha_lambda(alpha, lambda);
+        let opts = FistaOptions { tol: 1e-9, ..Default::default() };
+        let exact = solve_fista(&prob, &params, None, &opts);
+        // A group with at least two substantial features; screen one.
+        let mut target = None;
+        'outer: for (g, s, e) in prob.groups.iter() {
+            let strong: Vec<usize> =
+                (s..e).filter(|&i| exact.beta[i].abs() > 0.05).collect();
+            if strong.len() >= 2 {
+                target = Some((g, strong[0]));
+                break 'outer;
+            }
+        }
+        let (_, victim) = target.expect("test problem must have a multi-active group");
+        let mut screened = TlfreOutcome {
+            group_kept: vec![true; prob.n_groups()],
+            feature_kept: vec![true; prob.n_features()],
+            stats: ScreenStats::default(),
+        };
+        screened.feature_kept[victim] = false;
+        let red = ReducedProblem::build(prob.x, prob.groups, &screened).unwrap();
+        let rp = SglProblem::new(&red.x, prob.y, &red.groups);
+        let res = solve_fista(&rp, &params, None, &opts);
+        let mut full = vec![0.0f32; prob.n_features()];
+        red.scatter(&res.beta, &mut full);
+        let bad = kkt_violations(&prob, &params, &full, &screened);
+        assert!(
+            bad.contains(&victim),
+            "screened-but-active feature {victim} not flagged (bad = {bad:?})"
+        );
     }
 
     #[test]

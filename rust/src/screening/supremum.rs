@@ -51,6 +51,30 @@ pub fn t_star(c_i: f64, radius: f64, col_norm: f64) -> f64 {
     c_i.abs() + radius * col_norm
 }
 
+/// [`s_star`] evaluated on `scale·c` without materializing the scaled
+/// copy — the GAP-safe rules' form, whose sphere center is the gap
+/// check's correlation sweep rescaled by `s_feas/λ`. Keeping this next to
+/// the canonical accumulation single-sources the Theorem 15 closed form
+/// for every consumer (TLFre, static GAP rule, in-solver dynamic states).
+#[inline]
+pub fn s_star_scaled(c: &[f32], scale: f64, r: f64) -> f64 {
+    let mut cinf = 0.0f64;
+    let mut acc = 0.0f64;
+    for &v in c {
+        let a = ((v as f64) * scale).abs();
+        cinf = cinf.max(a);
+        let t = a - 1.0;
+        if t > 0.0 {
+            acc += t * t;
+        }
+    }
+    if cinf > 1.0 {
+        acc.sqrt() + r
+    } else {
+        (cinf + r - 1.0).max(0.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +144,25 @@ mod tests {
         let mut xi = c.clone();
         xi[0] += r as f32;
         assert!((shrink_norm(&xi, 1.0) - s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn s_star_scaled_matches_s_star_on_scaled_copy() {
+        // The copy-free scaled form must agree with s_star on an
+        // explicitly scaled f64-exact input (scale by powers of two so
+        // the f32 materialization is lossless).
+        let mut rng = Rng::seed_from_u64(62);
+        for _ in 0..40 {
+            let m = 1 + rng.below(6);
+            let c: Vec<f32> = (0..m).map(|_| rng.normal(0.0, 1.5) as f32).collect();
+            let r = rng.uniform_range(0.01, 1.5);
+            for scale in [0.25f64, 0.5, 1.0, 2.0] {
+                let scaled: Vec<f32> = c.iter().map(|&v| (v as f64 * scale) as f32).collect();
+                let a = s_star_scaled(&c, scale, r);
+                let b = s_star(&scaled, r);
+                assert!((a - b).abs() < 1e-12, "scale={scale}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

@@ -9,14 +9,17 @@
 use super::dual::{duality_gap, null_objective};
 use super::objective::objective_with_residual;
 use super::problem::{SglParams, SglProblem};
+use crate::groups::GroupStructure;
 use crate::linalg::power::spectral_norm;
-use crate::linalg::DesignMatrix;
+use crate::linalg::{DesignMatrix, ScreenedView};
 use crate::prox::sgl_prox_group;
-use crate::util::Rng;
+use crate::screening::gap_safe::{EvictPlan, GapSafeDynamic};
+use crate::util::{retain_by_mask, Rng};
+use std::cell::RefCell;
 
 /// Options controlling the FISTA solve.
 #[derive(Debug, Clone)]
-pub struct FistaOptions {
+pub struct FistaOptions<'a> {
     /// Hard iteration cap.
     pub max_iter: usize,
     /// Relative duality-gap tolerance: stop when
@@ -30,9 +33,20 @@ pub struct FistaOptions {
     /// Restart acceleration when the objective increases (adaptive
     /// restart; improves robustness on ill-conditioned reduced problems).
     pub adaptive_restart: bool,
+    /// In-solver dynamic GAP-safe screening
+    /// ([`crate::screening::gap_safe`]). At every gap check the state's
+    /// sphere test runs on the check's own `(c, gap, scale)` — no extra
+    /// matvec — and certified-zero features are **evicted from the live
+    /// problem**: β/momentum state compact, the group structure drops
+    /// emptied groups (original weights kept), and iteration continues on
+    /// a survivor view of the caller's matrix. The returned β is scattered
+    /// back to the caller's index space, and the cumulative eviction count
+    /// is readable from the state afterwards. `None` (default) is the
+    /// plain solve, byte-for-byte the pre-dynamic behaviour.
+    pub dynamic_screen: Option<&'a RefCell<GapSafeDynamic>>,
 }
 
-impl Default for FistaOptions {
+impl Default for FistaOptions<'_> {
     fn default() -> Self {
         FistaOptions {
             max_iter: 20_000,
@@ -40,6 +54,7 @@ impl Default for FistaOptions {
             check_every: 10,
             lipschitz: None,
             adaptive_restart: true,
+            dynamic_screen: None,
         }
     }
 }
@@ -86,13 +101,66 @@ pub fn lipschitz_of<M: DesignMatrix>(x: &M) -> f64 {
     (s * s).max(f64::MIN_POSITIVE)
 }
 
+/// One FISTA iteration — the fused gradient/prox/momentum pass plus the
+/// Beck–Teboulle momentum update. The **single** arithmetic home shared by
+/// the static loop and the dynamic-screening loop, so the two execute
+/// byte-for-byte the same per-iteration operations (the same
+/// construction that keeps BCD's colored/sequential sweeps comparable via
+/// `sweep_once`).
+#[allow(clippy::too_many_arguments)]
+fn fista_iteration<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
+    params: &SglParams,
+    step: f64,
+    stepf: f32,
+    t_l1: f64,
+    t_k: &mut f64,
+    beta: &mut Vec<f32>,
+    beta_prev: &mut Vec<f32>,
+    z: &mut [f32],
+    xz: &mut [f32],
+    grad: &mut [f32],
+    w: &mut [f32],
+) {
+    // Gradient of the smooth part at z: ∇ = Xᵀ(Xz − y), with the
+    // residual fused into the matvec (one pass instead of two).
+    prob.x.residual_matvec(z, prob.y, xz);
+    prob.x.matvec_t(xz, grad);
+    // Fused gradient/prox/momentum pass, group by group: while a
+    // group's slices are cache-hot, compute w_g = z_g − step·∇_g, prox
+    // it into β_g, and immediately extrapolate z_g — two full-p sweeps
+    // of traffic instead of the former four (w, prox, swap, momentum).
+    // Per-element arithmetic is identical to the unfused passes.
+    let t_next = 0.5 * (1.0 + (1.0 + 4.0 * *t_k * *t_k).sqrt());
+    let omega = ((*t_k - 1.0) / t_next) as f32;
+    std::mem::swap(beta, beta_prev);
+    for (g, s_idx, e_idx) in prob.groups.iter() {
+        let t_l2 = step * params.lambda1 * prob.groups.weight(g);
+        for j in s_idx..e_idx {
+            w[j] = z[j] - stepf * grad[j];
+        }
+        sgl_prox_group(&w[s_idx..e_idx], t_l1, t_l2, &mut beta[s_idx..e_idx]);
+        for j in s_idx..e_idx {
+            z[j] = beta[j] + omega * (beta[j] - beta_prev[j]);
+        }
+    }
+    *t_k = t_next;
+}
+
 /// Solve SGL with FISTA. `warm_start` (if given) initializes β.
+///
+/// With [`FistaOptions::dynamic_screen`] set, the solve additionally
+/// shrinks its own problem at gap-check cadence (see the option docs); the
+/// result is still reported in the caller's full index space.
 pub fn solve_fista<M: DesignMatrix>(
     prob: &SglProblem<'_, M>,
     params: &SglParams,
     warm_start: Option<&[f32]>,
-    opts: &FistaOptions,
+    opts: &FistaOptions<'_>,
 ) -> SolveResult {
+    if let Some(state) = opts.dynamic_screen {
+        return solve_fista_dynamic(prob, params, warm_start, opts, state);
+    }
     let n = prob.n_samples();
     let p = prob.n_features();
     let l = opts.lipschitz.unwrap_or_else(|| lipschitz(prob));
@@ -130,29 +198,20 @@ pub fn solve_fista<M: DesignMatrix>(
     for k in 0..opts.max_iter {
         iters = k + 1;
         checked_obj = None;
-        // Gradient of the smooth part at z: ∇ = Xᵀ(Xz − y), with the
-        // residual fused into the matvec (one pass instead of two).
-        prob.x.residual_matvec(&z, prob.y, &mut xz);
-        prob.x.matvec_t(&xz, &mut grad);
-        // Fused gradient/prox/momentum pass, group by group: while a
-        // group's slices are cache-hot, compute w_g = z_g − step·∇_g, prox
-        // it into β_g, and immediately extrapolate z_g — two full-p sweeps
-        // of traffic instead of the former four (w, prox, swap, momentum).
-        // Per-element arithmetic is identical to the unfused passes.
-        let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t_k * t_k).sqrt());
-        let omega = ((t_k - 1.0) / t_next) as f32;
-        std::mem::swap(&mut beta, &mut beta_prev);
-        for (g, s_idx, e_idx) in prob.groups.iter() {
-            let t_l2 = step * params.lambda1 * prob.groups.weight(g);
-            for j in s_idx..e_idx {
-                w[j] = z[j] - stepf * grad[j];
-            }
-            sgl_prox_group(&w[s_idx..e_idx], t_l1, t_l2, &mut beta[s_idx..e_idx]);
-            for j in s_idx..e_idx {
-                z[j] = beta[j] + omega * (beta[j] - beta_prev[j]);
-            }
-        }
-        t_k = t_next;
+        fista_iteration(
+            prob,
+            params,
+            step,
+            stepf,
+            t_l1,
+            &mut t_k,
+            &mut beta,
+            &mut beta_prev,
+            &mut z,
+            &mut xz,
+            &mut grad,
+            &mut w,
+        );
 
         // Convergence check (and optional restart) on a cadence.
         if (k + 1) % opts.check_every == 0 || k + 1 == opts.max_iter {
@@ -185,6 +244,206 @@ pub fn solve_fista<M: DesignMatrix>(
         }
     };
     SolveResult { beta, iters, gap, objective, converged }
+}
+
+/// Mutable state of a dynamic-screening FISTA solve, shared across
+/// screening epochs (an epoch = the iterations between two compactions).
+/// Buffers are resized, not reallocated, as the problem shrinks.
+struct FistaDynCore {
+    beta: Vec<f32>,
+    beta_prev: Vec<f32>,
+    z: Vec<f32>,
+    t_k: f64,
+    xz: Vec<f32>,
+    r: Vec<f32>,
+    grad: Vec<f32>,
+    w: Vec<f32>,
+    c: Vec<f32>,
+    last_obj: f64,
+    gap: f64,
+    converged: bool,
+    iters: usize,
+    objective: Option<f64>,
+}
+
+/// Run dynamic-FISTA iterations on the *current* problem until
+/// convergence or the iteration cap (→ `None`) or a GAP eviction (→ the
+/// plan). Per-iteration arithmetic is [`fista_iteration`], identical to
+/// the static loop; the sphere test rides each check's own `(c, gap, s)`
+/// — no extra sweep — and is skipped on the terminal check (no
+/// iterations left to benefit). Instantiated at exactly two matrix types
+/// per caller: the caller's own `M` (before any eviction fires) and
+/// `ScreenedView<M>` (after).
+#[allow(clippy::too_many_arguments)]
+fn fista_dynamic_epoch<M: DesignMatrix>(
+    vprob: &SglProblem<'_, M>,
+    params: &SglParams,
+    opts: &FistaOptions<'_>,
+    step: f64,
+    stepf: f32,
+    t_l1: f64,
+    scale_ref: f64,
+    state: &RefCell<GapSafeDynamic>,
+    core: &mut FistaDynCore,
+) -> Option<EvictPlan> {
+    let p = vprob.n_features();
+    core.grad.resize(p, 0.0);
+    core.w.resize(p, 0.0);
+    core.c.resize(p, 0.0);
+    while core.iters < opts.max_iter {
+        core.iters += 1;
+        fista_iteration(
+            vprob,
+            params,
+            step,
+            stepf,
+            t_l1,
+            &mut core.t_k,
+            &mut core.beta,
+            &mut core.beta_prev,
+            &mut core.z,
+            &mut core.xz,
+            &mut core.grad,
+            &mut core.w,
+        );
+        if core.iters % opts.check_every == 0 || core.iters == opts.max_iter {
+            super::objective::residual(vprob, &core.beta, &mut core.r);
+            vprob.x.matvec_t(&core.r, &mut core.c);
+            let obj = objective_with_residual(vprob, params, &core.beta, &core.r).total();
+            if opts.adaptive_restart && obj > core.last_obj {
+                core.t_k = 1.0;
+                core.z.copy_from_slice(&core.beta);
+            }
+            core.last_obj = obj;
+            core.objective = Some(obj);
+            let (g, s_feas) = duality_gap(vprob, params, &core.beta, &core.r, &core.c);
+            core.gap = g;
+            if g <= opts.tol * scale_ref {
+                core.converged = true;
+                return None;
+            }
+            if core.iters < opts.max_iter {
+                // Gap floored at the f32 evaluation noise scale — see
+                // `gap_with_noise_floor`.
+                if let Some(plan) = state.borrow_mut().check(
+                    vprob.groups,
+                    params.lambda2,
+                    &core.c,
+                    crate::screening::gap_safe::gap_with_noise_floor(g, scale_ref),
+                    s_feas,
+                ) {
+                    return Some(plan);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// The dynamic-screening FISTA solve. Phase 1 iterates on the caller's
+/// matrix directly (no view indirection until an eviction actually
+/// fires); each eviction compacts the iterate/momentum state and the
+/// group structure, and iteration continues on a survivor
+/// [`ScreenedView`]. Momentum (`t_k`, the extrapolation point `z`)
+/// carries across compactions — evicted coordinates are zero at the
+/// optimum, so restricting the iterate is a projection onto a face
+/// containing the solution, not a restart.
+fn solve_fista_dynamic<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
+    params: &SglParams,
+    warm_start: Option<&[f32]>,
+    opts: &FistaOptions<'_>,
+    state: &RefCell<GapSafeDynamic>,
+) -> SolveResult {
+    let n = prob.n_samples();
+    let p0 = prob.n_features();
+    // The caller-supplied (or full-problem) step bound stays valid for
+    // every survivor view: σmax over a column subset only shrinks.
+    let l = opts.lipschitz.unwrap_or_else(|| lipschitz(prob));
+    let step = 1.0 / l;
+    let stepf = step as f32;
+    let t_l1 = step * params.lambda2;
+    let scale_ref = null_objective(prob.y).max(1e-10);
+
+    let beta0: Vec<f32> = match warm_start {
+        Some(b) => {
+            assert_eq!(b.len(), p0, "warm start dimension mismatch");
+            b.to_vec()
+        }
+        None => vec![0.0; p0],
+    };
+    let mut core = FistaDynCore {
+        beta_prev: beta0.clone(),
+        z: beta0.clone(),
+        beta: beta0,
+        t_k: 1.0,
+        xz: vec![0.0; n],
+        r: vec![0.0; n],
+        grad: Vec::new(),
+        w: Vec::new(),
+        c: Vec::new(),
+        last_obj: f64::INFINITY,
+        gap: f64::INFINITY,
+        converged: false,
+        iters: 0,
+        objective: None,
+    };
+    let mut cols: Vec<usize> = (0..p0).collect();
+
+    // Phase 1: the caller's problem, zero overhead vs the static loop.
+    let mut pending =
+        fista_dynamic_epoch(prob, params, opts, step, stepf, t_l1, scale_ref, state, &mut core);
+    // Phase 2: compact and continue on survivor views until done. The
+    // group structure starts as the caller's and compacts per plan.
+    let mut groups: Option<GroupStructure> = None;
+    while let Some(plan) = pending.take() {
+        retain_by_mask(&mut core.beta, &plan.feature_kept);
+        retain_by_mask(&mut core.beta_prev, &plan.feature_kept);
+        retain_by_mask(&mut core.z, &plan.feature_kept);
+        retain_by_mask(&mut cols, &plan.feature_kept);
+        let compacted = groups
+            .as_ref()
+            .unwrap_or(prob.groups)
+            .compact(&plan.feature_kept);
+        match compacted {
+            Some((g2, _)) => groups = Some(g2),
+            None => {
+                // Everything certified zero: the reduced problem's
+                // optimum is β ≡ 0 with an exactly-zero gap.
+                core.beta.clear();
+                cols.clear();
+                core.gap = 0.0;
+                core.converged = true;
+                core.objective = Some(null_objective(prob.y));
+                break;
+            }
+        }
+        let view = ScreenedView::new(prob.x, cols.clone());
+        let vprob =
+            SglProblem::new(&view, prob.y, groups.as_ref().expect("set above"));
+        pending = fista_dynamic_epoch(
+            &vprob, params, opts, step, stepf, t_l1, scale_ref, state, &mut core,
+        );
+    }
+
+    // Scatter the survivor iterate back to the caller's index space.
+    let mut full = vec![0.0f32; p0];
+    for (k, &j) in cols.iter().enumerate() {
+        full[j] = core.beta[k];
+    }
+    let objective = core.objective.unwrap_or_else(|| {
+        // Degenerate max_iter == 0: no check ever ran.
+        let mut rr = vec![0.0f32; n];
+        super::objective::residual(prob, &full, &mut rr);
+        objective_with_residual(prob, params, &full, &rr).total()
+    });
+    SolveResult {
+        beta: full,
+        iters: core.iters,
+        gap: core.gap,
+        objective,
+        converged: core.converged,
+    }
 }
 
 #[cfg(test)]
@@ -259,6 +518,48 @@ mod tests {
         let res = solve_fista(&prob, &params, None, &FistaOptions::default());
         assert!(res.objective < super::null_objective(&y));
         assert!(res.beta.iter().any(|&b| b != 0.0));
+    }
+
+    #[test]
+    fn dynamic_screening_reaches_same_optimum() {
+        use crate::linalg::power::group_spectral_norms;
+        let (x, y, g) = small_problem(26);
+        let prob = SglProblem::new(&x, &y, &g);
+        let lm = sgl_lambda_max(&prob, 1.0);
+        let params = SglParams::from_alpha_lambda(1.0, 0.35 * lm.lambda_max);
+        let opts = FistaOptions { tol: 1e-8, ..Default::default() };
+        let plain = solve_fista(&prob, &params, None, &opts);
+        let mut rng = Rng::seed_from_u64(0xD7);
+        let gs = group_spectral_norms(&x, &g.ranges(), 1e-6, 500, &mut rng);
+        let state = std::cell::RefCell::new(crate::screening::gap_safe::GapSafeDynamic::new(
+            1.0,
+            x.col_norms(),
+            gs,
+        ));
+        let dynamic = solve_fista(
+            &prob,
+            &params,
+            None,
+            &FistaOptions { dynamic_screen: Some(&state), ..opts },
+        );
+        assert!(dynamic.converged, "gap={}", dynamic.gap);
+        assert_eq!(dynamic.beta.len(), prob.n_features());
+        assert!(
+            (plain.objective - dynamic.objective).abs()
+                < 1e-5 * plain.objective.abs().max(1.0),
+            "objectives diverged: {} vs {}",
+            plain.objective,
+            dynamic.objective
+        );
+        // Same support at solver resolution (the shared hysteresis
+        // comparator).
+        assert!(
+            crate::screening::gap_safe::same_support_at_resolution(&plain.beta, &dynamic.beta),
+            "support mismatch between static and dynamic solves"
+        );
+        // Near the optimum the sphere shrinks below the inactive features'
+        // slack — a mid-path λ on this planted problem must evict.
+        assert!(state.borrow().evicted() > 0, "dynamic screening never fired");
     }
 
     #[test]

@@ -55,6 +55,21 @@ impl Timer {
     }
 }
 
+/// Drop the entries of `v` where `kept[i]` is false, preserving order —
+/// the survivor-compaction primitive shared by the dynamic-screening
+/// solvers (iterate/momentum/column-map vectors) and the GAP-safe states
+/// (their projected norm tables), so every consumer compacts by the exact
+/// same index-tracking rule.
+pub fn retain_by_mask<T>(v: &mut Vec<T>, kept: &[bool]) {
+    assert_eq!(v.len(), kept.len(), "keep mask must cover every entry");
+    let mut k = 0usize;
+    v.retain(|_| {
+        let keep = kept[k];
+        k += 1;
+        keep
+    });
+}
+
 /// Format a duration in seconds with sensible units for log lines.
 pub fn fmt_duration(secs: f64) -> String {
     if secs < 1e-6 {
@@ -81,6 +96,16 @@ mod tests {
         let b = t.elapsed_s();
         assert!(b >= a);
         assert!(a >= 0.0);
+    }
+
+    #[test]
+    fn retain_by_mask_preserves_order() {
+        let mut v = vec![10, 11, 12, 13, 14];
+        retain_by_mask(&mut v, &[true, false, true, false, true]);
+        assert_eq!(v, vec![10, 12, 14]);
+        let mut empty: Vec<f32> = Vec::new();
+        retain_by_mask(&mut empty, &[]);
+        assert!(empty.is_empty());
     }
 
     #[test]

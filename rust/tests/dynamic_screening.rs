@@ -1,0 +1,230 @@
+//! End-to-end tests for the composable screening pipeline and dynamic
+//! GAP-safe screening:
+//!
+//! * **inexact-warm-start safety** — with a deliberately loose solver
+//!   tolerance, `tlfre+gap` / `gap` paths must match the no-screening
+//!   baseline's final supports at every λ on the dense *and* CSC backends
+//!   and keep gap-bounded objectives (runs under the CI
+//!   `TLFRE_THREADS ∈ {1,2,4,8}` matrix, which covers the acceptance
+//!   thread sweep);
+//! * **KKT recovery** — a manufactured heuristic rule that wrongly
+//!   discards live groups must be corrected by the driver's re-admission
+//!   loop, leaving the exact solution.
+
+use tlfre::coordinator::{
+    drive_tlfre_path_with_pipeline, run_tlfre_path, PathConfig, StepSink,
+};
+use tlfre::data::synthetic::{
+    generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec,
+};
+use tlfre::linalg::DesignMatrix;
+use tlfre::screening::{
+    LayerCount, Safety, ScreenInput, ScreenKind, ScreenPipeline, ScreeningRule, SurvivorMask,
+};
+
+// The single support comparator shared with the solver unit tests and the
+// CI-gated perf_kernels section — see its docs for the hysteresis rationale.
+use tlfre::screening::same_support_at_resolution as same_support;
+
+fn loose_cfg(screen: ScreenKind) -> PathConfig {
+    PathConfig {
+        alpha: 1.0,
+        n_lambda: 10,
+        lambda_min_ratio: 0.05,
+        // Deliberately loose: the previous-λ solutions handed to the
+        // sequential rules are visibly inexact.
+        tol: 1e-4,
+        screen,
+        ..Default::default()
+    }
+}
+
+/// βs per λ via the runner's own driver (CoefficientSink equivalent).
+fn path_betas<M: DesignMatrix>(
+    x: &M,
+    y: &[f32],
+    groups: &tlfre::groups::GroupStructure,
+    cfg: &PathConfig,
+) -> Vec<Vec<f32>> {
+    tlfre::coordinator::path_coefficients(x, y, groups, cfg)
+}
+
+fn assert_supports_match<M: DesignMatrix>(
+    x: &M,
+    y: &[f32],
+    groups: &tlfre::groups::GroupStructure,
+    screen: ScreenKind,
+    backend: &str,
+) {
+    use tlfre::sgl::{SglParams, SglProblem};
+    let screened_cfg = loose_cfg(screen);
+    let baseline_cfg = loose_cfg(ScreenKind::None);
+    // Steps (per-λ gaps) and βs come from the same deterministic walk.
+    let sa = run_tlfre_path(x, y, groups, &screened_cfg);
+    let sb = run_tlfre_path(x, y, groups, &baseline_cfg);
+    let a = path_betas(x, y, groups, &screened_cfg);
+    let b = path_betas(x, y, groups, &baseline_cfg);
+    assert_eq!(a.len(), b.len());
+    let prob = SglProblem::new(x, y, groups);
+    let mut r = vec![0.0f32; y.len()];
+    for li in 0..a.len() {
+        assert!(
+            same_support(&a[li], &b[li]),
+            "{backend}/{screen:?}: support diverged from baseline at λ index {li}"
+        );
+        // Gap-bounded objectives: each solve is within its own duality gap
+        // of the shared optimum, so |P(β_a) − P(β_b)| ≤ gap_a + gap_b
+        // (plus f32 objective-evaluation noise).
+        let params = SglParams::from_alpha_lambda(screened_cfg.alpha, sa.steps[li].lambda);
+        tlfre::sgl::objective::residual(&prob, &a[li], &mut r);
+        let pa = tlfre::sgl::objective::objective_with_residual(&prob, &params, &a[li], &r)
+            .total();
+        tlfre::sgl::objective::residual(&prob, &b[li], &mut r);
+        let pb = tlfre::sgl::objective::objective_with_residual(&prob, &params, &b[li], &r)
+            .total();
+        let noise = 1e-5 * pa.abs().max(pb.abs()).max(1.0);
+        let budget = sa.steps[li].gap + sb.steps[li].gap + noise;
+        assert!(
+            (pa - pb).abs() <= budget,
+            "{backend}/{screen:?} λ index {li}: objectives {pa} vs {pb} differ beyond \
+             the gap budget {budget}"
+        );
+    }
+}
+
+#[test]
+fn inexact_warm_start_support_safety_dense() {
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 160, 16), 2031);
+    for screen in [ScreenKind::TlfreGap, ScreenKind::Gap] {
+        assert_supports_match(&ds.x, &ds.y, &ds.groups, screen, "dense");
+    }
+}
+
+#[test]
+fn inexact_warm_start_support_safety_csc() {
+    let ds = generate_sparse_synthetic(&SparseSyntheticSpec::new(40, 160, 16, 0.2), 2032);
+    for screen in [ScreenKind::TlfreGap, ScreenKind::Gap] {
+        assert_supports_match(&ds.x, &ds.y, &ds.groups, screen, "csc");
+    }
+}
+
+#[test]
+fn dynamic_evictions_fire_and_are_counted() {
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 160, 16), 2033);
+    let cfg = PathConfig { tol: 1e-6, ..loose_cfg(ScreenKind::TlfreGap) };
+    let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+    assert!(
+        out.steps.iter().any(|s| s.dynamic_evicted > 0),
+        "dynamic screening never fired along the path"
+    );
+    // Static pipelines must never report evictions.
+    let static_out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &loose_cfg(ScreenKind::Tlfre));
+    assert!(static_out.steps.iter().all(|s| s.dynamic_evicted == 0));
+    // Per-rule marginals are recorded in pipeline order.
+    let with_layers = out.steps.iter().skip(1).find(|s| !s.layers.is_empty()).unwrap();
+    assert_eq!(with_layers.layers[0].rule, "tlfre");
+    assert_eq!(with_layers.layers[1].rule, "gap");
+}
+
+/// A deliberately WRONG heuristic rule: unconditionally discards every
+/// group with index ≥ keep_groups — including live ones. Only the driver's
+/// KKT recovery loop can make a path using it correct.
+struct WronglyAggressiveRule {
+    keep_groups: usize,
+}
+
+impl<M: DesignMatrix> ScreeningRule<M> for WronglyAggressiveRule {
+    fn name(&self) -> &'static str {
+        "wrong"
+    }
+
+    fn safety(&self) -> Safety {
+        Safety::Heuristic
+    }
+
+    fn screen(&self, input: &ScreenInput<'_, '_, M>, mask: &mut SurvivorMask) -> LayerCount {
+        let groups = input.prob.groups;
+        let mut g_new = 0usize;
+        let mut f_new = 0usize;
+        for (g, s, e) in groups.iter() {
+            if g >= self.keep_groups && mask.group_kept[g] {
+                mask.group_kept[g] = false;
+                g_new += 1;
+                for k in mask.feature_kept[s..e].iter_mut() {
+                    if *k {
+                        *k = false;
+                        f_new += 1;
+                    }
+                }
+            }
+        }
+        LayerCount { rule: "wrong", safety: Safety::Heuristic, groups: g_new, features: f_new }
+    }
+}
+
+#[test]
+fn kkt_recovery_readmits_manufactured_violations() {
+    // Plant signal in groups spread across the index range so the "keep
+    // only the first two groups" rule is guaranteed wrong at small λ.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 120, 12), 2034);
+    let cfg = PathConfig {
+        alpha: 1.0,
+        n_lambda: 8,
+        lambda_min_ratio: 0.05,
+        tol: 1e-6,
+        ..Default::default()
+    };
+    let pipeline =
+        ScreenPipeline::new(vec![Box::new(WronglyAggressiveRule { keep_groups: 2 })], false);
+    assert!(!pipeline.all_safe());
+    let mut sink = StepSink::new();
+    drive_tlfre_path_with_pipeline(&ds.x, &ds.y, &ds.groups, &cfg, pipeline, &mut sink);
+    let readmitted: usize = sink.steps.iter().map(|s| s.kkt_readmitted).sum();
+    assert!(readmitted > 0, "the manufactured violation was never detected");
+    // Recovery must leave the exact path: compare against the plain TLFre
+    // runner's supports.
+    let reference = path_betas(&ds.x, &ds.y, &ds.groups, &cfg);
+    let wrong_betas = path_coeffs_with_wrong_rule(&ds, &cfg);
+    for (li, (ba, bb)) in wrong_betas.iter().zip(&reference).enumerate() {
+        assert!(same_support(ba, bb), "KKT recovery left a wrong support at λ {li}");
+    }
+}
+
+fn path_coeffs_with_wrong_rule(
+    ds: &tlfre::data::Dataset,
+    cfg: &PathConfig,
+) -> Vec<Vec<f32>> {
+    let pipeline =
+        ScreenPipeline::new(vec![Box::new(WronglyAggressiveRule { keep_groups: 2 })], false);
+    let mut sink = tlfre::coordinator::CoefficientSink::new();
+    drive_tlfre_path_with_pipeline(&ds.x, &ds.y, &ds.groups, cfg, pipeline, &mut sink);
+    sink.betas
+}
+
+#[test]
+fn strong_kkt_pipeline_reports_layer_stats() {
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 100, 10), 2035);
+    let cfg = PathConfig {
+        screen: ScreenKind::StrongKkt,
+        n_lambda: 8,
+        lambda_min_ratio: 0.05,
+        tol: 1e-6,
+        ..Default::default()
+    };
+    let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+    // The strong rule's marginal rejections are recorded under its name.
+    let busy = out.steps.iter().skip(1).find(|s| !s.layers.is_empty()).unwrap();
+    assert_eq!(busy.layers[0].rule, "strong");
+    assert_eq!(busy.layers[0].safety, Safety::Heuristic);
+    // Final supports match the exact TLFre path.
+    let exact = run_tlfre_path(
+        &ds.x,
+        &ds.y,
+        &ds.groups,
+        &PathConfig { screen: ScreenKind::Tlfre, ..cfg },
+    );
+    for (sa, sb) in out.steps.iter().zip(&exact.steps) {
+        let diff = (sa.nonzeros as i64 - sb.nonzeros as i64).abs();
+        assert!(diff <= 2, "λ={}: nnz {} vs {}", sa.lambda, sa.nonzeros, sb.nonzeros);
+    }
+}
