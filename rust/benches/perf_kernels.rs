@@ -24,7 +24,13 @@
 //!   sharding fold×α path tasks across the persistent pool (single-pass
 //!   spectral accounting and bitwise serial/sharded equality asserted
 //!   before publishing; feeds `cv_fold_parallel` in
-//!   `BENCH_solver_path.json`).
+//!   `BENCH_solver_path.json`);
+//! * the out-of-core scale section — stream-generates a TLFREDS1 file
+//!   whose X payload is ≥ 4× the `--scale-budget` RAM budget, then
+//!   measures blocked column norms, streaming λmax, the mmap-vs-dense
+//!   `Xᵀv` sweep and the end-to-end TLFre path on the mmap backend
+//!   (every number gated on a bitwise-equality assertion against the
+//!   in-RAM dense result; written to `BENCH_scale.json`).
 
 use tlfre::bench_harness::BenchArgs;
 use tlfre::coordinator::{
@@ -34,21 +40,22 @@ use tlfre::coordinator::{
 use tlfre::screening::ScreenKind;
 use tlfre::linalg::SelectRows;
 use tlfre::data::synthetic::{
-    generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec,
+    generate_sparse_synthetic, generate_synthetic, generate_synthetic_streaming,
+    SparseSyntheticSpec, SyntheticSpec,
 };
 use tlfre::groups::GroupStructure;
 use tlfre::linalg::ops;
-use tlfre::linalg::{CscMatrix, DenseMatrix, DesignMatrix, ScreenedView};
+use tlfre::linalg::{col_norms_blocked, CscMatrix, DenseMatrix, DesignMatrix, ScreenedView};
 use tlfre::sgl::GroupColoring;
 use tlfre::prox::shrink_norm_sq;
 use tlfre::screening::tlfre::{apply_rules, TlfreContext};
 use tlfre::sgl::bcd::{solve_bcd, BcdOptions};
 use tlfre::sgl::{solve_fista, FistaOptions, SglParams, SglProblem};
-use tlfre::screening::lambda_max::sgl_lambda_max;
+use tlfre::screening::lambda_max::{sgl_lambda_max, sgl_lambda_max_streaming};
 use tlfre::util::harness::{bench, black_box, BenchConfig};
 use tlfre::util::pool;
 use tlfre::util::json::Json;
-use tlfre::util::Rng;
+use tlfre::util::{Rng, Timer};
 
 fn naive_dot(a: &[f32], b: &[f32]) -> f64 {
     let mut s = 0.0f64;
@@ -648,4 +655,193 @@ fn main() {
         Ok(()) => println!("  solver-path results written to {path_out}"),
         Err(e) => eprintln!("  warning: could not write {path_out}: {e}"),
     }
+
+    // Out-of-core scale section. Stream-generate a TLFREDS1 file whose X
+    // payload is at least 4× the configured RAM budget (`--scale-budget`,
+    // MiB), then drive the out-of-core machinery against it: blocked
+    // column norms, streaming λmax, the mmap-vs-dense Xᵀv sweep, and the
+    // end-to-end TLFre path on the mmap backend. The dense in-RAM copy is
+    // the reference for every bitwise gate — the budget bounds what the
+    // *out-of-core* path is allowed to keep resident, not this process.
+    let budget_mib = args.scale_budget_mib();
+    let budget_bytes = budget_mib as u64 * (1 << 20);
+    let sc_n = 500usize;
+    // p: smallest multiple of 10 (uniform groups of 10) putting the f32
+    // col-major X payload at ≥ 4× the budget.
+    let sc_p = (4 * budget_bytes as usize).div_ceil(4 * sc_n).div_ceil(10) * 10;
+    let sc_spec = SyntheticSpec::synthetic1_scaled(sc_n, sc_p, sc_p / 10);
+    println!(
+        "\n== out-of-core scale ({sc_n}×{sc_p}, budget {budget_mib} MiB, {} workers) ==",
+        pool::num_threads()
+    );
+    let sc_path = std::env::temp_dir().join(format!("tlfre-scale-{}.bin", std::process::id()));
+    let t_gen = Timer::start();
+    generate_synthetic_streaming(&sc_spec, args.seed, &sc_path, 1024).expect("stream generate");
+    let stream_generate_s = t_gen.elapsed_s();
+    let file_bytes = std::fs::metadata(&sc_path).expect("stat streamed file").len();
+    let mds = tlfre::data::io::open_mmap(&sc_path).expect("open mmap");
+    let x_bytes = mds.x.x_payload_bytes();
+    let budget_to_file_ratio = x_bytes as f64 / budget_bytes as f64;
+    assert!(
+        budget_to_file_ratio >= 4.0,
+        "streamed X payload ({x_bytes} B) is under 4× the {budget_mib} MiB budget"
+    );
+    println!(
+        "  streamed {} B file in {:.2} s ({} backend, X payload {:.1}× budget)",
+        file_bytes,
+        stream_generate_s,
+        tlfre::linalg::MmapDenseMatrix::backend_kind(),
+        budget_to_file_ratio,
+    );
+
+    let sc_cfg = BenchConfig { warmup: 1, runs: 3, max_seconds: 300.0 };
+
+    // Blocked column norms over the mapped payload, vs the unblocked sweep.
+    let norm_block_cols = 2048usize;
+    let mut blocked_norms: Vec<f64> = Vec::new();
+    let r_norms = bench("blocked col_norms", &sc_cfg, || {
+        blocked_norms = col_norms_blocked(&mds.x, norm_block_cols);
+        black_box(&blocked_norms);
+    });
+    let full_norms = mds.x.col_norms();
+    let norms_equal = full_norms.len() == blocked_norms.len()
+        && full_norms.iter().zip(&blocked_norms).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(norms_equal, "blocked col_norms diverged from the unblocked sweep");
+    let norms_gbs = x_bytes as f64 / r_norms.seconds.median / 1e9;
+
+    // Streaming λmax in group blocks, vs the in-RAM Xᵀy materialization.
+    let sc_prob = SglProblem::new(&mds.x, &mds.y, &mds.groups);
+    let mut lm_stream = None;
+    let r_lmax = bench("streaming λmax", &sc_cfg, || {
+        lm_stream = Some(sgl_lambda_max_streaming(&sc_prob, 1.0, 64));
+    });
+    let lm_stream = lm_stream.expect("streaming λmax ran");
+    let lm_full = sgl_lambda_max(&sc_prob, 1.0);
+    let lmax_equal = lm_full.lambda_max.to_bits() == lm_stream.lambda_max.to_bits()
+        && lm_full.argmax_group == lm_stream.argmax_group;
+    assert!(lmax_equal, "streaming λmax diverged from the in-RAM value");
+    let lmax_gbs = x_bytes as f64 / r_lmax.seconds.median / 1e9;
+    println!(
+        "  blocked col_norms {:8.2} ms ({:5.2} GB/s)   streaming λmax {:8.2} ms ({:5.2} GB/s)   both bitwise equal",
+        r_norms.seconds.median * 1e3,
+        norms_gbs,
+        r_lmax.seconds.median * 1e3,
+        lmax_gbs,
+    );
+
+    // Same file loaded fully into RAM: the dense reference for sweep cost
+    // and for the end-to-end path's bitwise gate.
+    let sc_ds = tlfre::data::io::load(&sc_path).expect("load streamed file");
+    let mut sc_rng = Rng::seed_from_u64(args.seed ^ 0x5CA1E);
+    let sc_v: Vec<f32> = (0..sc_n).map(|_| sc_rng.gaussian() as f32).collect();
+    let mut sc_out = vec![0.0f32; sc_p];
+    let r_sweep_mmap = bench("mmap matvec_t", &sc_cfg, || {
+        mds.x.matvec_t(black_box(&sc_v), &mut sc_out);
+        black_box(&sc_out);
+    });
+    let sweep_mmap = sc_out.clone();
+    let r_sweep_dense = bench("dense matvec_t", &sc_cfg, || {
+        sc_ds.x.matvec_t(black_box(&sc_v), &mut sc_out);
+        black_box(&sc_out);
+    });
+    let sweep_equal =
+        sweep_mmap.iter().zip(&sc_out).all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(sweep_equal, "mmap Xᵀv sweep diverged from the dense sweep");
+    let sweep_ratio = r_sweep_mmap.seconds.median / r_sweep_dense.seconds.median.max(1e-12);
+    println!(
+        "  Xᵀv sweep: mmap {:8.2} ms   dense {:8.2} ms   ({:4.2}x dense cost, bitwise equal)",
+        r_sweep_mmap.seconds.median * 1e3,
+        r_sweep_dense.seconds.median * 1e3,
+        sweep_ratio,
+    );
+
+    // End-to-end TLFre path against the on-disk design, with the in-RAM
+    // dense path as the bitwise reference for every per-step statistic.
+    let sc_path_cfg = PathConfig {
+        alpha: 1.0,
+        n_lambda: args.n_lambda().min(8),
+        lambda_min_ratio: 0.1,
+        tol: 1e-5,
+        ..Default::default()
+    };
+    let t_path_m = Timer::start();
+    let sc_path_mmap = run_tlfre_path(&mds.x, &mds.y, &mds.groups, &sc_path_cfg);
+    let mmap_path_wall_s = t_path_m.elapsed_s();
+    let t_path_d = Timer::start();
+    let sc_path_dense = run_tlfre_path(&sc_ds.x, &sc_ds.y, &sc_ds.groups, &sc_path_cfg);
+    let dense_path_wall_s = t_path_d.elapsed_s();
+    let path_equal = sc_path_mmap.lambda_max.to_bits() == sc_path_dense.lambda_max.to_bits()
+        && sc_path_mmap.steps.len() == sc_path_dense.steps.len()
+        && sc_path_mmap.steps.iter().zip(&sc_path_dense.steps).all(|(a, b)| {
+            a.lambda.to_bits() == b.lambda.to_bits()
+                && a.r1.to_bits() == b.r1.to_bits()
+                && a.r2.to_bits() == b.r2.to_bits()
+                && a.zeros == b.zeros
+                && a.nonzeros == b.nonzeros
+                && a.active_features == b.active_features
+                && a.iters == b.iters
+                && a.gap.to_bits() == b.gap.to_bits()
+        });
+    assert!(path_equal, "mmap TLFre path diverged from the in-RAM dense path");
+    println!(
+        "  end-to-end path ({} λ): mmap {:8.2} ms   dense {:8.2} ms   (bitwise equal, rejection {:.3})",
+        sc_path_cfg.n_lambda,
+        mmap_path_wall_s * 1e3,
+        dense_path_wall_s * 1e3,
+        sc_path_mmap.mean_total_rejection(),
+    );
+
+    let scale_bitwise_equal = norms_equal && lmax_equal && sweep_equal && path_equal;
+    let scale_report = Json::obj()
+        .set("bench", "perf_kernels/scale")
+        .set("budget_mib", budget_mib)
+        .set("n", sc_n)
+        .set("p", sc_p)
+        .set("threads", pool::num_threads())
+        .set("backend_kind", tlfre::linalg::MmapDenseMatrix::backend_kind())
+        .set("file_bytes", file_bytes as f64)
+        .set("x_payload_bytes", x_bytes as f64)
+        .set("budget_to_file_ratio", budget_to_file_ratio)
+        .set("stream_generate_s", stream_generate_s)
+        .set(
+            "blocked_col_norms",
+            Json::obj()
+                .set("block_cols", norm_block_cols)
+                .set("seconds", r_norms.seconds.median)
+                .set("gb_per_s", norms_gbs)
+                .set("bitwise_equal", norms_equal),
+        )
+        .set(
+            "streaming_lambda_max",
+            Json::obj()
+                .set("block_groups", 64)
+                .set("seconds", r_lmax.seconds.median)
+                .set("gb_per_s", lmax_gbs)
+                .set("bitwise_equal", lmax_equal),
+        )
+        .set(
+            "sweep_matvec_t",
+            Json::obj()
+                .set("mmap_ms", r_sweep_mmap.seconds.median * 1e3)
+                .set("dense_ms", r_sweep_dense.seconds.median * 1e3)
+                .set("mmap_over_dense", sweep_ratio)
+                .set("bitwise_equal", sweep_equal),
+        )
+        .set(
+            "path_end_to_end",
+            Json::obj()
+                .set("n_lambda", sc_path_cfg.n_lambda)
+                .set("mmap_wall_s", mmap_path_wall_s)
+                .set("dense_wall_s", dense_path_wall_s)
+                .set("mean_rejection", sc_path_mmap.mean_total_rejection())
+                .set("bitwise_equal", path_equal),
+        )
+        .set("bitwise_equal", scale_bitwise_equal);
+    let scale_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_scale.json");
+    match std::fs::write(scale_out, scale_report.to_string_pretty()) {
+        Ok(()) => println!("  scale results written to {scale_out}"),
+        Err(e) => eprintln!("  warning: could not write {scale_out}: {e}"),
+    }
+    drop(mds);
+    let _ = std::fs::remove_file(&sc_path);
 }

@@ -27,6 +27,9 @@ pub struct BenchArgs {
     pub k_folds: Option<usize>,
     /// Emit a machine-readable JSON report to this path.
     pub json_out: Option<String>,
+    /// RAM budget in MiB for the out-of-core scale section (the streamed
+    /// dataset file is sized to several multiples of this).
+    pub scale_budget_mib: Option<usize>,
 }
 
 impl Default for BenchArgs {
@@ -39,6 +42,7 @@ impl Default for BenchArgs {
             scale: None,
             k_folds: None,
             json_out: None,
+            scale_budget_mib: None,
         }
     }
 }
@@ -58,6 +62,7 @@ impl BenchArgs {
                 "--scale" => a.scale = args.next().and_then(|v| v.parse().ok()),
                 "--k-folds" => a.k_folds = args.next().and_then(|v| v.parse().ok()),
                 "--json-out" => a.json_out = args.next(),
+                "--scale-budget" => a.scale_budget_mib = args.next().and_then(|v| v.parse().ok()),
                 _ => {} // cargo bench passes --bench etc.
             }
         }
@@ -107,6 +112,13 @@ impl BenchArgs {
     /// CV fold count for this profile (paper-style model selection: 5).
     pub fn k_folds(&self) -> usize {
         self.k_folds.unwrap_or(if self.full { 5 } else { 3 })
+    }
+
+    /// RAM budget in MiB for the out-of-core scale section. The streamed
+    /// dataset is sized to ≥ 4× this so the mmap path demonstrably works
+    /// on an X payload that would not fit the budget.
+    pub fn scale_budget_mib(&self) -> usize {
+        self.scale_budget_mib.unwrap_or(if self.full { 64 } else { 16 }).max(1)
     }
 
     /// Synthetic data set dimensions `(n, p, groups)` for this profile.

@@ -2,13 +2,16 @@
 //!
 //! ```text
 //! tlfre generate  --dataset synthetic1 --out ds.bin [--seed 42] [--scale 0.1]
+//!                  [--stream] [--n 250] [--block-cols 256]
 //! tlfre solve-path --dataset synthetic1|synthetic2|sparse1|adni-gmv|... [--alpha 1.0]
 //!                  [--n-lambda 100] [--no-screening] [--verify] [--config cfg.json]
-//!                  [--backend dense|csc] [--density 0.05]
+//!                  [--backend dense|csc|mmap|sharded] [--file ds.bin]
+//!                  [--shards k] [--density 0.05]
 //! tlfre cv         --dataset ... [--k-folds 5] [--alpha 1.0] [--solver bcd]
 //!                  [--cv-serial] [--backend dense|csc]
 //! tlfre dpc-path   --dataset mnist|pie|... [--n-lambda 100] [--no-screening]
-//! tlfre lambda-max --dataset ... [--alpha 1.0]
+//!                  [--backend dense|csc|mmap|sharded]
+//! tlfre lambda-max --dataset ... [--alpha 1.0] [--streaming] [--block-groups 64]
 //! tlfre runtime-info
 //! ```
 
@@ -20,11 +23,14 @@ use crate::coordinator::{
     run_tlfre_path, CvOutput, DpcPathConfig,
 };
 use crate::data::registry::RealDataset;
-use crate::data::synthetic::{generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec};
+use crate::data::synthetic::{
+    generate_sparse_synthetic, generate_synthetic, generate_synthetic_streaming,
+    SparseSyntheticSpec, SyntheticSpec,
+};
 use crate::data::Dataset;
 use crate::error::{Context, Result};
 use crate::groups::GroupStructure;
-use crate::linalg::{CscMatrix, DesignMatrix, SelectRows};
+use crate::linalg::{CscMatrix, DenseMatrix, DesignMatrix, MmapDenseMatrix, SelectRows, ShardedMatrix};
 use crate::util::{fmt_duration, Timer};
 use std::collections::HashMap;
 
@@ -124,6 +130,49 @@ fn scaled(p: usize, scale: f64) -> usize {
     (((p as f64 * scale) / 10.0).round() as usize * 10).max(20)
 }
 
+/// Spec for the streaming generator (`generate --stream`): same scaled
+/// dimensions as [`resolve_dataset`] but with an overridable row count so
+/// files larger than RAM can be produced.
+fn streaming_spec(name: &str, n: usize, scale: f64) -> Result<SyntheticSpec> {
+    let p = scaled(10_000, scale);
+    Ok(match name {
+        "synthetic1" => SyntheticSpec::synthetic1_scaled(n, p, p / 10),
+        "synthetic2" => SyntheticSpec::synthetic2_scaled(n, p, p / 10),
+        other => bail!("--stream supports synthetic1|synthetic2, got '{other}'"),
+    })
+}
+
+/// Resolve the TLFREDS1 file backing the mmap backend. `--file` points at
+/// an existing dataset on disk; otherwise the named dataset is generated
+/// and saved to a temp file. The second tuple field is true when the file
+/// is temporary and should be removed after the run.
+fn mmap_source(args: &Args, name: &str, seed: u64, scale: f64) -> Result<(std::path::PathBuf, bool)> {
+    match args.get("file") {
+        Some(f) => Ok((std::path::PathBuf::from(f), false)),
+        None => {
+            let ds = resolve_dataset(name, seed, scale)?;
+            let path = std::env::temp_dir().join(format!(
+                "tlfre-mmap-{name}-{seed}-{}.bin",
+                std::process::id()
+            ));
+            crate::data::io::save(&ds, &path)?;
+            Ok((path, true))
+        }
+    }
+}
+
+/// Build the row-sharded composite backend from a dense design
+/// (`--shards`, default: one shard per pool worker).
+fn sharded_from(args: &Args, x: &DenseMatrix) -> Result<ShardedMatrix> {
+    let k = args
+        .get_parsed::<usize>("shards")?
+        .unwrap_or_else(crate::util::pool::num_threads)
+        .max(1);
+    let sx = ShardedMatrix::from_dense(x, k);
+    println!("sharded backend: {} row shards over {} rows", sx.n_shards(), sx.rows());
+    Ok(sx)
+}
+
 const HELP: &str = "\
 tlfre — Two-Layer Feature Reduction for Sparse-Group Lasso (NIPS 2014 reproduction)
 
@@ -143,9 +192,23 @@ COMMANDS:
 COMMON FLAGS:
   --dataset <name>     synthetic1|synthetic2|sparse1|adni-gmv|adni-wmv|
                        breast-cancer|leukemia|prostate|pie|mnist|svhn
-  --backend <name>     design-matrix backend: dense (default) | csc
-                       (csc converts dense sets; sparse1 is CSC-native)
+  --backend <name>     design-matrix backend: dense (default) | csc | mmap |
+                       sharded (csc converts dense sets; sparse1 is
+                       CSC-native; mmap pages X from a TLFREDS1 file on
+                       disk; sharded splits rows across the worker pool —
+                       all backends produce bitwise-identical paths)
+  --file <path>        mmap backend: existing TLFREDS1 file to map (without
+                       it the dataset is saved to a temp file first)
+  --shards <usize>     sharded backend: row-shard count (default: one per
+                       pool worker)
   --density <f64>      nonzero fraction for the sparse1 generator (default 0.05)
+  --stream             generate: write X in column blocks with bounded
+                       memory (synthetic1|synthetic2; byte-identical file)
+  --n <usize>          generate --stream: row count override (default 250)
+  --block-cols <usize> generate --stream: columns per block (default 256)
+  --streaming          lambda-max: column-blocked streaming computation
+                       (bitwise identical to the in-RAM value)
+  --block-groups <g>   lambda-max --streaming: groups per block (default 64)
   --seed <u64>         dataset seed (default 42)
   --scale <f64>        feature-dimension scale for simulated sets (default 0.1)
   --alpha <f64>        SGL α (default 1.0)
@@ -240,6 +303,20 @@ fn cmd_generate(args: &Args) -> Result<i32> {
     let cfg = common_config(args)?;
     let name = args.get("dataset").context("--dataset is required")?;
     let out = args.get("out").context("--out is required")?;
+    if args.has("stream") {
+        // Bounded-memory path: X goes to disk in column blocks and is never
+        // resident as a whole; the file is byte-identical to the in-RAM save.
+        let n = args.get_parsed::<usize>("n")?.unwrap_or(250);
+        let block_cols = args.get_parsed::<usize>("block-cols")?.unwrap_or(256).max(1);
+        let spec = streaming_spec(name, n, cfg.scale)?;
+        generate_synthetic_streaming(&spec, cfg.seed, std::path::Path::new(out), block_cols)?;
+        let bytes = std::fs::metadata(out)?.len();
+        println!(
+            "streamed {} ({} groups) to {out}: {bytes} bytes, {block_cols}-column blocks",
+            spec.name, spec.n_groups
+        );
+        return Ok(0);
+    }
     let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
     crate::data::io::save(&ds, std::path::Path::new(out))?;
     println!("wrote {} to {out}", ds.describe());
@@ -273,8 +350,27 @@ fn cmd_solve_path(args: &Args) -> Result<i32> {
                 let xd = ds.x.to_dense();
                 run_sgl_path(args, &xd, &ds.y, &ds.groups, &pc, &ds.name, alpha)
             }
-            other => bail!("unknown backend '{other}' (dense|csc)"),
+            other => bail!("sparse1 supports backend dense|csc, got '{other}'"),
         };
+    }
+
+    if backend == "mmap" {
+        // Out-of-core path: X stays on disk and is paged in per column.
+        let (path, temp) = mmap_source(args, name, cfg.seed, cfg.scale)?;
+        let mds = crate::data::io::open_mmap(&path)?;
+        println!(
+            "{} backend: {}×{} X payload, {} MiB on disk",
+            MmapDenseMatrix::backend_kind(),
+            mds.x.rows(),
+            mds.x.cols(),
+            mds.x.x_payload_bytes() >> 20
+        );
+        let code = run_sgl_path(args, &mds.x, &mds.y, &mds.groups, &pc, &mds.name, alpha);
+        if temp {
+            drop(mds);
+            let _ = std::fs::remove_file(&path);
+        }
+        return code;
     }
 
     let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
@@ -286,7 +382,11 @@ fn cmd_solve_path(args: &Args) -> Result<i32> {
             println!("csc backend: nnz {} ({:.2}% dense)", xs.nnz(), xs.density() * 100.0);
             run_sgl_path(args, &xs, &ds.y, &ds.groups, &pc, &ds.name, alpha)
         }
-        other => bail!("unknown backend '{other}' (dense|csc)"),
+        "sharded" => {
+            let sx = sharded_from(args, &ds.x)?;
+            run_sgl_path(args, &sx, &ds.y, &ds.groups, &pc, &ds.name, alpha)
+        }
+        other => bail!("unknown backend '{other}' (dense|csc|mmap|sharded)"),
     }
 }
 
@@ -411,8 +511,6 @@ fn run_cv<M: DesignMatrix + SelectRows>(
 fn cmd_dpc_path(args: &Args) -> Result<i32> {
     let cfg = common_config(args)?;
     let name = args.get("dataset").context("--dataset is required")?;
-    let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
-    println!("{}", ds.describe());
     let pc = DpcPathConfig {
         n_lambda: cfg.n_lambda,
         lambda_min_ratio: cfg.lambda_min_ratio,
@@ -424,26 +522,61 @@ fn cmd_dpc_path(args: &Args) -> Result<i32> {
         dynamic_screening: args.has("dynamic"),
     };
     let backend = args.get("backend").unwrap_or("dense");
-    let out = match backend {
-        "dense" => {
-            if args.has("no-screening") {
-                run_nonneg_baseline(&ds.x, &ds.y, &pc)
-            } else {
-                run_dpc_path(&ds.x, &ds.y, &pc)
-            }
+    let baseline = args.has("no-screening");
+    let (out, ds_name) = if backend == "mmap" {
+        let (path, temp) = mmap_source(args, name, cfg.seed, cfg.scale)?;
+        let mds = crate::data::io::open_mmap(&path)?;
+        println!(
+            "{} backend: {}×{} X payload, {} MiB on disk",
+            MmapDenseMatrix::backend_kind(),
+            mds.x.rows(),
+            mds.x.cols(),
+            mds.x.x_payload_bytes() >> 20
+        );
+        let out = if baseline {
+            run_nonneg_baseline(&mds.x, &mds.y, &pc)
+        } else {
+            run_dpc_path(&mds.x, &mds.y, &pc)
+        };
+        let ds_name = mds.name.clone();
+        if temp {
+            drop(mds);
+            let _ = std::fs::remove_file(&path);
         }
-        "csc" => {
-            let xs = CscMatrix::from_dense(&ds.x);
-            println!("csc backend: nnz {} ({:.2}% dense)", xs.nnz(), xs.density() * 100.0);
-            if args.has("no-screening") {
-                run_nonneg_baseline(&xs, &ds.y, &pc)
-            } else {
-                run_dpc_path(&xs, &ds.y, &pc)
+        (out, ds_name)
+    } else {
+        let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
+        println!("{}", ds.describe());
+        let out = match backend {
+            "dense" => {
+                if baseline {
+                    run_nonneg_baseline(&ds.x, &ds.y, &pc)
+                } else {
+                    run_dpc_path(&ds.x, &ds.y, &pc)
+                }
             }
-        }
-        other => bail!("unknown backend '{other}' (dense|csc)"),
+            "csc" => {
+                let xs = CscMatrix::from_dense(&ds.x);
+                println!("csc backend: nnz {} ({:.2}% dense)", xs.nnz(), xs.density() * 100.0);
+                if baseline {
+                    run_nonneg_baseline(&xs, &ds.y, &pc)
+                } else {
+                    run_dpc_path(&xs, &ds.y, &pc)
+                }
+            }
+            "sharded" => {
+                let sx = sharded_from(args, &ds.x)?;
+                if baseline {
+                    run_nonneg_baseline(&sx, &ds.y, &pc)
+                } else {
+                    run_dpc_path(&sx, &ds.y, &pc)
+                }
+            }
+            other => bail!("unknown backend '{other}' (dense|csc|mmap|sharded)"),
+        };
+        (out, ds.name.clone())
     };
-    println!("{}", crate::bench_harness::tables::render_dpc_series(&ds.name, &out));
+    println!("{}", crate::bench_harness::tables::render_dpc_series(&ds_name, &out));
     println!(
         "screen {}  solve {}",
         fmt_duration(out.screen_total_s),
@@ -458,7 +591,13 @@ fn cmd_lambda_max(args: &Args) -> Result<i32> {
     let alpha: f64 = args.get_parsed("alpha")?.unwrap_or(1.0);
     let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
     let prob = crate::sgl::SglProblem::new(&ds.x, &ds.y, &ds.groups);
-    let lm = crate::screening::sgl_lambda_max(&prob, alpha);
+    let lm = if args.has("streaming") {
+        // Column-blocked visit of X; bitwise identical to the in-RAM result.
+        let block_groups = args.get_parsed::<usize>("block-groups")?.unwrap_or(64).max(1);
+        crate::screening::sgl_lambda_max_streaming(&prob, alpha, block_groups)
+    } else {
+        crate::screening::sgl_lambda_max(&prob, alpha)
+    };
     println!("{}", ds.describe());
     println!("λmax^α(α={alpha}) = {:.6} (argmax group {})", lm.lambda_max, lm.argmax_group);
     // Corollary 10 curve sample.

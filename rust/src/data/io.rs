@@ -2,20 +2,49 @@
 //!
 //! Simple little-endian container (magic `TLFREDS1`) so generated sets can
 //! be cached on disk by the CLI (`tlfre generate`) and reloaded by benches
-//! without regeneration cost. Layout:
+//! without regeneration cost — and, since the out-of-core work, mapped
+//! directly by [`crate::linalg::MmapDenseMatrix`]. Layout:
 //!
 //! ```text
 //! magic[8] | name_len u32 | name utf-8 | n u64 | p u64 | g u64
-//! | group sizes u64×g | has_beta u8 | X f32×(n·p) col-major
-//! | y f32×n | beta f32×p (if has_beta)
+//! | group sizes u64×g | has_beta u8 | pad 0–3 ×0u8
+//! | X f32×(n·p) col-major | y f32×n | beta f32×p (if has_beta)
 //! ```
+//!
+//! The pad is the minimal run of zero bytes that brings the X payload to a
+//! 4-byte-aligned file offset, so an `mmap` of the file (page-aligned base)
+//! can reinterpret the payload as `&[f32]` directly. Its width is a pure
+//! function of the header (`name_len`, `g`), so reader and writer agree
+//! without storing it. `y` and `beta` follow immediately and inherit the
+//! alignment (`4·n·p` and `4·n` are multiples of 4).
+//!
+//! Two write paths share this layout:
+//!
+//! - [`save`] — one-shot, for an in-RAM [`Dataset`];
+//! - [`DatasetWriter`] — the block writer: `create` emits the header, then
+//!   any number of [`DatasetWriter::write_cols`] calls append column blocks
+//!   (each a col-major `&[f32]` whose length is a multiple of `n`), and
+//!   [`DatasetWriter::finish`] appends `y`/`beta` after validating that
+//!   exactly `p` columns were written. Memory use is bounded by the caller's
+//!   block size, so arbitrarily large files can be produced (see
+//!   [`crate::data::synthetic::generate_synthetic_streaming`]).
+//!
+//! [`load`] validates the header *and* the actual file length against the
+//! dimensions before allocating anything, so a truncated or hand-edited
+//! file fails loudly instead of driving an OOM-sized `Vec` or a short map.
+
+// The f32 payloads are bulk-copied through byte views with no endianness
+// conversion; on a big-endian host that would silently load garbage, so
+// refuse to build there (targets are x86-64 / aarch64 LE).
+#[cfg(target_endian = "big")]
+compile_error!("dataset IO assumes a little-endian target");
 
 use super::Dataset;
-use crate::groups::GroupStructure;
-use crate::linalg::DenseMatrix;
 use crate::bail;
 use crate::error::{Context, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
+use crate::groups::GroupStructure;
+use crate::linalg::{DenseMatrix, MmapDenseMatrix};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"TLFREDS1";
@@ -31,7 +60,7 @@ fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
 }
 
 fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
-    // bulk-copy through a byte view for speed
+    // bulk-copy through a byte view for speed (LE-only; guarded above)
     let bytes = unsafe {
         std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4)
     };
@@ -57,76 +86,258 @@ fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
         std::slice::from_raw_parts_mut(out.as_mut_ptr() as *mut u8, n * 4)
     };
     r.read_exact(bytes)?;
-    // On a big-endian host we'd need a swap; this codebase targets LE
-    // (x86-64 / aarch64 LE), assert it at compile time.
-    #[cfg(target_endian = "big")]
-    compile_error!("dataset IO assumes a little-endian target");
     Ok(out)
 }
 
-/// Save a data set to `path`.
-pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
-    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
-    let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    let name = ds.name.as_bytes();
-    write_u32(&mut w, name.len() as u32)?;
-    w.write_all(name)?;
-    write_u64(&mut w, ds.n() as u64)?;
-    write_u64(&mut w, ds.p() as u64)?;
-    write_u64(&mut w, ds.groups.n_groups() as u64)?;
-    for g in 0..ds.groups.n_groups() {
-        write_u64(&mut w, ds.groups.size(g) as u64)?;
-    }
-    w.write_all(&[ds.beta_star.is_some() as u8])?;
-    write_f32s(&mut w, ds.x.data())?;
-    write_f32s(&mut w, &ds.y)?;
-    if let Some(b) = &ds.beta_star {
-        write_f32s(&mut w, b)?;
-    }
-    w.flush()?;
-    Ok(())
+/// Zero pad after `has_beta` that 4-byte-aligns the X payload. A pure
+/// function of the header prefix length, so both sides compute it.
+fn x_pad(header_bytes: u64) -> u64 {
+    (4 - header_bytes % 4) % 4
 }
 
-/// Load a data set from `path`.
-pub fn load(path: &Path) -> Result<Dataset> {
-    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
-    let mut r = BufReader::new(f);
+/// Parsed `TLFREDS1` header with the byte offsets of each payload.
+#[derive(Debug, Clone)]
+pub struct DatasetHeader {
+    pub name: String,
+    pub n: usize,
+    pub p: usize,
+    pub group_sizes: Vec<usize>,
+    pub has_beta: bool,
+    /// Byte offset of the col-major f32 X payload (always 4-aligned).
+    pub x_offset: u64,
+    /// Byte offset of the y payload.
+    pub y_offset: u64,
+    /// Byte offset of the β* payload, when `has_beta`.
+    pub beta_offset: Option<u64>,
+    /// Total file length implied by the dimensions.
+    pub expected_len: u64,
+}
+
+/// Read and validate the header fields from `r` (positioned at byte 0).
+/// Leaves `r` positioned at `x_offset` (the pad is consumed).
+fn parse_header(r: &mut impl Read, path: &Path) -> Result<DatasetHeader> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
         bail!("{path:?}: not a TLFre dataset (bad magic)");
     }
-    let name_len = read_u32(&mut r)? as usize;
+    let name_len = read_u32(r)? as usize;
     if name_len > 4096 {
         bail!("{path:?}: corrupt header (name length {name_len})");
     }
     let mut name = vec![0u8; name_len];
     r.read_exact(&mut name)?;
     let name = String::from_utf8(name).context("dataset name not utf-8")?;
-    let n = read_u64(&mut r)? as usize;
-    let p = read_u64(&mut r)? as usize;
-    let g = read_u64(&mut r)? as usize;
+    let n = read_u64(r)? as usize;
+    let p = read_u64(r)? as usize;
+    let g = read_u64(r)? as usize;
     if n == 0 || p == 0 || g == 0 || n > 1 << 24 || p > 1 << 28 {
         bail!("{path:?}: implausible dimensions {n}×{p} ({g} groups)");
     }
     let mut sizes = Vec::with_capacity(g);
     for _ in 0..g {
-        sizes.push(read_u64(&mut r)? as usize);
+        sizes.push(read_u64(r)? as usize);
     }
     if sizes.iter().sum::<usize>() != p {
         bail!("{path:?}: group sizes do not sum to p");
     }
     let mut has_beta = [0u8; 1];
     r.read_exact(&mut has_beta)?;
-    let xdata = read_f32s(&mut r, n * p)?;
-    let y = read_f32s(&mut r, n)?;
-    let beta_star = if has_beta[0] != 0 { Some(read_f32s(&mut r, p)?) } else { None };
-    Ok(Dataset {
+    let has_beta = has_beta[0] != 0;
+
+    let header_bytes = 8 + 4 + name_len as u64 + 8 * 3 + 8 * g as u64 + 1;
+    let pad = x_pad(header_bytes);
+    let mut padb = [0u8; 4];
+    r.read_exact(&mut padb[..pad as usize])?;
+    let x_offset = header_bytes + pad;
+    // n ≤ 2²⁴ and p ≤ 2²⁸ keep all of this well inside u64.
+    let y_offset = x_offset + 4 * (n as u64) * (p as u64);
+    let beta_offset = has_beta.then_some(y_offset + 4 * n as u64);
+    let expected_len = y_offset + 4 * n as u64 + if has_beta { 4 * p as u64 } else { 0 };
+    Ok(DatasetHeader {
         name,
-        x: DenseMatrix::from_col_major(n, p, xdata),
+        n,
+        p,
+        group_sizes: sizes,
+        has_beta,
+        x_offset,
+        y_offset,
+        beta_offset,
+        expected_len,
+    })
+}
+
+/// Check the header's implied length against the file's actual length.
+/// Runs before any payload-sized allocation or mapping.
+fn check_len(h: &DatasetHeader, actual: u64, path: &Path) -> Result<()> {
+    if actual != h.expected_len {
+        bail!(
+            "{path:?}: file length {actual} does not match header \
+             ({}×{} groups={} has_beta={} ⇒ {} bytes); truncated or corrupt",
+            h.n,
+            h.p,
+            h.group_sizes.len(),
+            h.has_beta,
+            h.expected_len
+        );
+    }
+    Ok(())
+}
+
+/// Read and length-validate a `TLFREDS1` header without touching payloads.
+pub fn read_header(path: &Path) -> Result<DatasetHeader> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let actual = f.metadata()?.len();
+    let mut r = BufReader::new(f);
+    let h = parse_header(&mut r, path)?;
+    check_len(&h, actual, path)?;
+    Ok(h)
+}
+
+/// Bounded-memory block writer for the `TLFREDS1` layout (see module doc).
+pub struct DatasetWriter {
+    w: BufWriter<std::fs::File>,
+    n: usize,
+    p: usize,
+    has_beta: bool,
+    cols_written: usize,
+}
+
+impl DatasetWriter {
+    /// Create `path` and write the header (including the alignment pad).
+    pub fn create(
+        path: &Path,
+        name: &str,
+        n: usize,
+        p: usize,
+        group_sizes: &[usize],
+        has_beta: bool,
+    ) -> Result<DatasetWriter> {
+        if n == 0 || p == 0 || group_sizes.is_empty() {
+            bail!("DatasetWriter: empty dimensions {n}×{p}");
+        }
+        if group_sizes.iter().sum::<usize>() != p {
+            bail!("DatasetWriter: group sizes do not sum to p={p}");
+        }
+        let name_b = name.as_bytes();
+        if name_b.len() > 4096 {
+            bail!("DatasetWriter: name too long ({} bytes)", name_b.len());
+        }
+        let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        write_u32(&mut w, name_b.len() as u32)?;
+        w.write_all(name_b)?;
+        write_u64(&mut w, n as u64)?;
+        write_u64(&mut w, p as u64)?;
+        write_u64(&mut w, group_sizes.len() as u64)?;
+        for &s in group_sizes {
+            write_u64(&mut w, s as u64)?;
+        }
+        w.write_all(&[has_beta as u8])?;
+        let header_bytes = 8 + 4 + name_b.len() as u64 + 8 * 3 + 8 * group_sizes.len() as u64 + 1;
+        let pad = x_pad(header_bytes);
+        w.write_all(&[0u8; 4][..pad as usize])?;
+        Ok(DatasetWriter { w, n, p, has_beta, cols_written: 0 })
+    }
+
+    /// Append a col-major block of whole columns (`len` multiple of `n`).
+    pub fn write_cols(&mut self, block: &[f32]) -> Result<()> {
+        if block.len() % self.n != 0 {
+            bail!("write_cols: block length {} not a multiple of n={}", block.len(), self.n);
+        }
+        let k = block.len() / self.n;
+        if self.cols_written + k > self.p {
+            bail!("write_cols: {} columns exceed p={}", self.cols_written + k, self.p);
+        }
+        write_f32s(&mut self.w, block)?;
+        self.cols_written += k;
+        Ok(())
+    }
+
+    /// Append `y` (and `beta` when declared) and flush. Fails unless exactly
+    /// `p` columns were streamed.
+    pub fn finish(mut self, y: &[f32], beta: Option<&[f32]>) -> Result<()> {
+        if self.cols_written != self.p {
+            bail!("finish: wrote {} of {} columns", self.cols_written, self.p);
+        }
+        if y.len() != self.n {
+            bail!("finish: y length {} ≠ n={}", y.len(), self.n);
+        }
+        if self.has_beta != beta.is_some() {
+            bail!("finish: beta presence does not match header");
+        }
+        write_f32s(&mut self.w, y)?;
+        if let Some(b) = beta {
+            if b.len() != self.p {
+                bail!("finish: beta length {} ≠ p={}", b.len(), self.p);
+            }
+            write_f32s(&mut self.w, b)?;
+        }
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Save a data set to `path`.
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let sizes: Vec<usize> =
+        (0..ds.groups.n_groups()).map(|g| ds.groups.size(g)).collect();
+    let mut w = DatasetWriter::create(
+        path,
+        &ds.name,
+        ds.n(),
+        ds.p(),
+        &sizes,
+        ds.beta_star.is_some(),
+    )?;
+    w.write_cols(ds.x.data())?;
+    w.finish(&ds.y, ds.beta_star.as_deref())
+}
+
+/// Load a data set from `path` into RAM.
+pub fn load(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let actual = f.metadata()?.len();
+    let mut r = BufReader::new(f);
+    let h = parse_header(&mut r, path)?;
+    check_len(&h, actual, path)?;
+    let xdata = read_f32s(&mut r, h.n * h.p)?;
+    let y = read_f32s(&mut r, h.n)?;
+    let beta_star = if h.has_beta { Some(read_f32s(&mut r, h.p)?) } else { None };
+    Ok(Dataset {
+        name: h.name,
+        x: DenseMatrix::from_col_major(h.n, h.p, xdata),
         y,
-        groups: GroupStructure::from_sizes(&sizes),
+        groups: GroupStructure::from_sizes(&h.group_sizes),
+        beta_star,
+    })
+}
+
+/// A dataset whose X payload stays on disk behind [`MmapDenseMatrix`];
+/// only `y`, the group structure, and (optionally) β* are resident.
+pub struct MmapDataset {
+    pub name: String,
+    pub x: MmapDenseMatrix,
+    pub y: Vec<f32>,
+    pub groups: GroupStructure,
+    pub beta_star: Option<Vec<f32>>,
+}
+
+/// Open `path` with the X payload memory-mapped instead of loaded.
+pub fn open_mmap(path: &Path) -> Result<MmapDataset> {
+    let h = read_header(path)?;
+    let x = MmapDenseMatrix::from_file(path, h.x_offset, h.n, h.p)?;
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    r.seek(SeekFrom::Start(h.y_offset))?;
+    let y = read_f32s(&mut r, h.n)?;
+    let beta_star = if h.has_beta { Some(read_f32s(&mut r, h.p)?) } else { None };
+    Ok(MmapDataset {
+        name: h.name,
+        x,
+        y,
+        groups: GroupStructure::from_sizes(&h.group_sizes),
         beta_star,
     })
 }
@@ -136,12 +347,16 @@ mod tests {
     use super::*;
     use crate::data::synthetic::{generate_synthetic, SyntheticSpec};
 
+    fn tmp(file: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("tlfre_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(file)
+    }
+
     #[test]
     fn roundtrip() {
         let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(10, 40, 8), 5);
-        let dir = std::env::temp_dir().join("tlfre_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("rt.bin");
+        let path = tmp("rt.bin");
         save(&ds, &path).unwrap();
         let back = load(&path).unwrap();
         assert_eq!(back.name, ds.name);
@@ -153,10 +368,20 @@ mod tests {
     }
 
     #[test]
+    fn x_payload_is_four_byte_aligned() {
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(8, 16, 4), 6);
+        let path = tmp("aligned.bin");
+        save(&ds, &path).unwrap();
+        let h = read_header(&path).unwrap();
+        assert_eq!(h.x_offset % 4, 0);
+        assert_eq!(h.y_offset % 4, 0);
+        assert_eq!(h.expected_len, std::fs::metadata(&path).unwrap().len());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
     fn rejects_garbage_file() {
-        let dir = std::env::temp_dir().join("tlfre_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("garbage.bin");
+        let path = tmp("garbage.bin");
         std::fs::write(&path, b"not a dataset at all").unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_file(&path).unwrap();
@@ -165,13 +390,63 @@ mod tests {
     #[test]
     fn rejects_truncated_file() {
         let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(8, 16, 4), 6);
-        let dir = std::env::temp_dir().join("tlfre_io_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("trunc.bin");
+        let path = tmp("trunc.bin");
         save(&ds, &path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
         std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
         assert!(load(&path).is_err());
+        assert!(read_header(&path).is_err());
+        assert!(open_mmap(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_hand_edited_dimensions_before_allocating() {
+        // Inflate `n` in the header of an otherwise valid file: the length
+        // check must fail fast instead of trusting n·p into a huge Vec/map.
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(8, 16, 4), 7);
+        let path = tmp("edited.bin");
+        save(&ds, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n_off = 8 + 4 + ds.name.len(); // magic | name_len | name
+        bytes[n_off..n_off + 8].copy_from_slice(&(1u64 << 23).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("does not match header"));
+        assert!(open_mmap(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn block_writer_matches_one_shot_save() {
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(10, 40, 8), 9);
+        let a = tmp("oneshot.bin");
+        let b = tmp("blocks.bin");
+        save(&ds, &a).unwrap();
+        let sizes: Vec<usize> =
+            (0..ds.groups.n_groups()).map(|g| ds.groups.size(g)).collect();
+        let mut w =
+            DatasetWriter::create(&b, &ds.name, ds.n(), ds.p(), &sizes, true).unwrap();
+        // Stream in uneven blocks: 3 + 3 + … columns.
+        let n = ds.n();
+        let mut j = 0;
+        while j < ds.p() {
+            let k = (ds.p() - j).min(3);
+            w.write_cols(&ds.x.data()[j * n..(j + k) * n]).unwrap();
+            j += k;
+        }
+        w.finish(&ds.y, ds.beta_star.as_deref()).unwrap();
+        assert_eq!(std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+        std::fs::remove_file(&a).unwrap();
+        std::fs::remove_file(&b).unwrap();
+    }
+
+    #[test]
+    fn block_writer_rejects_wrong_column_count() {
+        let path = tmp("short.bin");
+        let mut w = DatasetWriter::create(&path, "t", 4, 6, &[3, 3], false).unwrap();
+        w.write_cols(&vec![0.0; 4 * 2]).unwrap();
+        assert!(w.finish(&[0.0; 4], None).is_err());
         std::fs::remove_file(&path).unwrap();
     }
 }

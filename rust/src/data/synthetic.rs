@@ -11,9 +11,11 @@
 //! percent of the features in each picked group; populate the picked
 //! entries from N(0,1), the rest are 0.
 
+use super::io::DatasetWriter;
 use super::Dataset;
+use crate::error::Result;
 use crate::groups::GroupStructure;
-use crate::linalg::{CscMatrix, DenseMatrix, DesignMatrix};
+use crate::linalg::{ops, CscMatrix, DenseMatrix, DesignMatrix};
 use crate::util::Rng;
 
 /// Column correlation structure.
@@ -153,6 +155,144 @@ pub fn generate_synthetic(spec: &SyntheticSpec, seed: u64) -> Dataset {
         *v += (spec.noise * rng.gaussian()) as f32;
     }
     Dataset { name: spec.name.clone(), x, y, groups, beta_star: Some(beta) }
+}
+
+// ---------------------------------------------------------------------------
+// Streaming generation (out-of-core)
+
+/// Column-block replay of [`fill_design`]'s draw sequence.
+///
+/// Produces the design in col-major blocks while consuming the RNG in
+/// **exactly** the order the in-RAM generator does (Iid: one gaussian per
+/// element in col-major order; AR(1): `n` initial draws, then `n` per
+/// subsequent column with the walk state carried in `prev`), so a streamed
+/// dataset is bit-identical to its in-RAM counterpart. Box–Muller caches a
+/// spare draw inside [`Rng`], which makes the draw *order* load-bearing —
+/// any reordering would shift every later value.
+struct DesignStream {
+    n: usize,
+    p: usize,
+    state: DesignState,
+    next_col: usize,
+}
+
+enum DesignState {
+    Iid,
+    Ar { rho: f64, w: f64, prev: Vec<f64> },
+}
+
+impl DesignStream {
+    fn new(spec: &SyntheticSpec) -> DesignStream {
+        let state = match spec.correlation {
+            Correlation::Iid => DesignState::Iid,
+            Correlation::Ar(rho) => {
+                DesignState::Ar { rho, w: (1.0 - rho * rho).sqrt(), prev: Vec::new() }
+            }
+        };
+        DesignStream { n: spec.n, p: spec.p, state, next_col: 0 }
+    }
+
+    /// Generate the next ≤ `max_cols` columns into `out` (col-major,
+    /// resized to exactly `n·k`); returns `k` (0 when exhausted).
+    fn next_block(&mut self, rng: &mut Rng, out: &mut Vec<f32>, max_cols: usize) -> usize {
+        let n = self.n;
+        let k = max_cols.min(self.p - self.next_col);
+        out.clear();
+        out.resize(n * k, 0.0);
+        match &mut self.state {
+            DesignState::Iid => rng.fill_gaussian_f32(out),
+            DesignState::Ar { rho, w, prev } => {
+                for c in 0..k {
+                    let col = &mut out[c * n..(c + 1) * n];
+                    if self.next_col + c == 0 {
+                        prev.resize(n, 0.0);
+                        for (v, o) in prev.iter_mut().zip(col.iter_mut()) {
+                            *v = rng.gaussian();
+                            *o = *v as f32;
+                        }
+                    } else {
+                        for (v, o) in prev.iter_mut().zip(col.iter_mut()) {
+                            *v = *rho * *v + *w * rng.gaussian();
+                            *o = *v as f32;
+                        }
+                    }
+                }
+            }
+        }
+        self.next_col += k;
+        k
+    }
+}
+
+/// Stream a synthetic dataset straight to a `TLFREDS1` file in bounded
+/// memory — the out-of-core twin of [`generate_synthetic`] + `io::save`.
+///
+/// Peak resident state is one `n·block_cols` column block plus the `n`-dim
+/// response, `p`-dim β* and (for AR) the `n`-dim walk state — independent of
+/// the `n·p` payload size, so arbitrarily large files are producible.
+///
+/// The output is **byte-identical** to
+/// `io::save(&generate_synthetic(spec, seed), path)`:
+///
+/// * pass 1 replays [`fill_design`]'s exact RNG draw order per column block
+///   (see [`DesignStream`]) and appends each block via
+///   [`DatasetWriter::write_cols`];
+/// * β* is then drawn from the post-design RNG state, as in-RAM;
+/// * pass 2 *regenerates* the design from a clone of the starting RNG
+///   (cheaper than re-reading the file, and no flush dance) and folds
+///   `y += β*_j · x_j` per nonzero column in ascending order — the very
+///   accumulation sequence `DesignMatrix::matvec` is contractually bitwise
+///   equal to — before the noise draws complete the stream.
+pub fn generate_synthetic_streaming(
+    spec: &SyntheticSpec,
+    seed: u64,
+    path: &std::path::Path,
+    block_cols: usize,
+) -> Result<()> {
+    assert!(spec.p % spec.n_groups == 0, "p must split into equal groups (paper setup)");
+    let block = block_cols.max(1);
+    let groups = GroupStructure::uniform(spec.p, spec.n_groups);
+    let sizes: Vec<usize> = (0..groups.n_groups()).map(|g| groups.size(g)).collect();
+    let mut rng = Rng::seed_from_u64(seed);
+    let design_rng = rng.clone();
+
+    // Pass 1: stream X to disk block by block.
+    let mut w = DatasetWriter::create(path, &spec.name, spec.n, spec.p, &sizes, true)?;
+    let mut stream = DesignStream::new(spec);
+    let mut buf: Vec<f32> = Vec::new();
+    loop {
+        let k = stream.next_block(&mut rng, &mut buf, block);
+        if k == 0 {
+            break;
+        }
+        w.write_cols(&buf)?;
+    }
+
+    // β* continues from the post-design RNG state (same order as in-RAM).
+    let beta = build_beta_gammas(spec.gamma1, spec.gamma2, &groups, &mut rng);
+
+    // Pass 2: regenerate the design and accumulate y = Xβ* column-ascending.
+    let mut replay = design_rng;
+    let mut stream2 = DesignStream::new(spec);
+    let mut y = vec![0.0f32; spec.n];
+    let mut j0 = 0;
+    loop {
+        let k = stream2.next_block(&mut replay, &mut buf, block);
+        if k == 0 {
+            break;
+        }
+        for c in 0..k {
+            let bj = beta[j0 + c];
+            if bj != 0.0 {
+                ops::axpy(bj, &buf[c * spec.n..(c + 1) * spec.n], &mut y);
+            }
+        }
+        j0 += k;
+    }
+    for v in y.iter_mut() {
+        *v += (spec.noise * rng.gaussian()) as f32;
+    }
+    w.finish(&y, Some(&beta))
 }
 
 // ---------------------------------------------------------------------------
@@ -338,6 +478,31 @@ mod tests {
         // Signal present.
         assert!(a.beta_star.iter().any(|&v| v != 0.0));
         assert!(ops::nrm2(&a.y) > 0.0);
+    }
+
+    #[test]
+    fn streamed_file_is_byte_identical_to_in_ram_save() {
+        for (spec, seed) in [
+            (SyntheticSpec::synthetic1_scaled(12, 60, 6), 21u64),
+            (SyntheticSpec::synthetic2_scaled(9, 40, 4), 22),
+        ] {
+            let dir = std::env::temp_dir().join("tlfre_stream_test");
+            std::fs::create_dir_all(&dir).unwrap();
+            let a = dir.join(format!("ram_{seed}.bin"));
+            let b = dir.join(format!("stream_{seed}.bin"));
+            crate::data::io::save(&generate_synthetic(&spec, seed), &a).unwrap();
+            for block in [1usize, 7, 64, 10_000] {
+                generate_synthetic_streaming(&spec, seed, &b, block).unwrap();
+                assert_eq!(
+                    std::fs::read(&a).unwrap(),
+                    std::fs::read(&b).unwrap(),
+                    "block={block} spec={}",
+                    spec.name
+                );
+            }
+            std::fs::remove_file(&a).unwrap();
+            std::fs::remove_file(&b).unwrap();
+        }
     }
 
     #[test]

@@ -1,0 +1,377 @@
+//! Memory-mapped dense backend: the out-of-core workhorse.
+//!
+//! [`MmapDenseMatrix`] exposes the col-major f32 X payload of a `TLFREDS1`
+//! file (see `crate::data::io`) through the [`DesignMatrix`] trait without
+//! ever loading it: on unix the whole file is `mmap`ed (raw `mmap`/`munmap`
+//! through `extern "C"` declarations — the zero-dependency rule rules out a
+//! memmap crate) and each column is a plain `&[f32]` into the mapping, so
+//! every kernel is the *same* `ops::` call over the same values as
+//! [`super::DenseMatrix`] — results are bitwise identical, and the OS page
+//! cache decides what is resident. Elsewhere a portable positioned-read
+//! fallback stages one column (or row range) at a time through a
+//! thread-local buffer: correct and bounded-memory, but disk-bound —
+//! the mapped path is the one the benches measure.
+//!
+//! ## Safety / aliasing notes
+//!
+//! * The mapping is `PROT_READ` + `MAP_PRIVATE`: nothing in this process
+//!   writes through it, so handing out `&[f32]` slices is sound as long as
+//!   the file is not truncated concurrently by another process (the usual
+//!   mmap caveat; generators write to a tmp path and never rewrite files
+//!   they serve).
+//! * The X payload offset is 4-byte-aligned by construction (the writer
+//!   pads the header — validated here), and `mmap` bases are page-aligned,
+//!   so the `&[f32]` reinterpretation is well-aligned.
+//! * The struct is `Send`/`Sync`: the mapping is immutable shared memory
+//!   for its whole lifetime, released by `munmap` on drop.
+
+use super::ops;
+use super::traits::DesignMatrix;
+use crate::bail;
+use crate::error::{Context, Result};
+use std::path::Path;
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// Read-only mapping of a whole dataset file (unix).
+#[cfg(unix)]
+struct Store {
+    base: *const u8,
+    map_len: usize,
+    x_offset: usize,
+}
+
+// SAFETY: the mapping is PROT_READ and private; the pointed-to memory is
+// immutable shared state for the lifetime of the struct, so concurrent
+// reads from any thread are fine and ownership may move between threads.
+#[cfg(unix)]
+unsafe impl Send for Store {}
+#[cfg(unix)]
+unsafe impl Sync for Store {}
+
+#[cfg(unix)]
+impl Drop for Store {
+    fn drop(&mut self) {
+        // SAFETY: base/map_len are exactly what mmap returned; unmapping
+        // once on drop is the release of that acquisition.
+        unsafe {
+            sys::munmap(self.base as *mut std::ffi::c_void, self.map_len);
+        }
+    }
+}
+
+/// Positioned-read fallback (non-unix): one shared file handle, columns
+/// staged through a thread-local buffer.
+#[cfg(not(unix))]
+struct Store {
+    file: std::sync::Mutex<std::fs::File>,
+    x_offset: u64,
+}
+
+#[cfg(not(unix))]
+thread_local! {
+    static COL_BUF: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Dense col-major design matrix backed by a `TLFREDS1` file on disk.
+///
+/// Construct via [`MmapDenseMatrix::from_file`] (raw offsets) or the
+/// header-aware `crate::data::io::open_mmap`.
+pub struct MmapDenseMatrix {
+    rows: usize,
+    cols: usize,
+    store: Store,
+}
+
+impl MmapDenseMatrix {
+    /// Map `rows × cols` f32 columns starting at byte `x_offset` of `path`.
+    ///
+    /// Validates the alignment contract (`x_offset % 4 == 0`) and that the
+    /// file actually holds the payload before mapping, so a truncated file
+    /// fails here instead of faulting mid-sweep.
+    pub fn from_file(path: &Path, x_offset: u64, rows: usize, cols: usize) -> Result<MmapDenseMatrix> {
+        if rows == 0 || cols == 0 {
+            bail!("mmap backend: empty dimensions {rows}×{cols}");
+        }
+        if x_offset % 4 != 0 {
+            bail!("mmap backend: X offset {x_offset} is not 4-byte aligned");
+        }
+        let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let file_len = f.metadata()?.len();
+        let need = x_offset + 4 * (rows as u64) * (cols as u64);
+        if file_len < need {
+            bail!(
+                "mmap backend: {path:?} holds {file_len} bytes but the X payload \
+                 needs {need} ({rows}×{cols} f32 at offset {x_offset})"
+            );
+        }
+        let store = Self::open_store(&f, file_len, x_offset, path)?;
+        Ok(MmapDenseMatrix { rows, cols, store })
+    }
+
+    #[cfg(unix)]
+    fn open_store(f: &std::fs::File, file_len: u64, x_offset: u64, path: &Path) -> Result<Store> {
+        use std::os::unix::io::AsRawFd;
+        let map_len = file_len as usize;
+        // SAFETY: fd is a live handle to a regular file of length file_len;
+        // we map it read-only/private from offset 0 (page-aligned by
+        // definition). The kernel keeps the mapping valid after the fd is
+        // closed.
+        let base = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                map_len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if base as isize == -1 {
+            bail!("mmap {path:?} failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Store { base: base as *const u8, map_len, x_offset: x_offset as usize })
+    }
+
+    #[cfg(not(unix))]
+    fn open_store(f: &std::fs::File, _file_len: u64, x_offset: u64, path: &Path) -> Result<Store> {
+        // Keep an independent handle so the caller's `f` can drop.
+        let file = std::fs::File::open(path).with_context(|| format!("reopen {path:?}"))?;
+        let _ = f;
+        Ok(Store { file: std::sync::Mutex::new(file), x_offset })
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Bytes of X payload served from disk.
+    pub fn x_payload_bytes(&self) -> u64 {
+        4 * self.rows as u64 * self.cols as u64
+    }
+
+    /// `"mmap"` when the payload is memory-mapped, `"pread"` on the
+    /// positioned-read fallback — benches record which path they measured.
+    pub fn backend_kind() -> &'static str {
+        if cfg!(unix) {
+            "mmap"
+        } else {
+            "pread"
+        }
+    }
+
+    /// Run `f` on column `j` as a contiguous `&[f32]`.
+    ///
+    /// Mapped path: a zero-copy slice into the mapping (reads may fault
+    /// pages in). Fallback: the column is read into a thread-local buffer.
+    #[cfg(unix)]
+    #[inline]
+    fn with_col<R>(&self, j: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        f(self.mapped_col(j))
+    }
+
+    /// [`Self::with_col`] restricted to rows `[rs, re)`.
+    #[cfg(unix)]
+    #[inline]
+    fn with_col_rows<R>(&self, j: usize, rs: usize, re: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        f(&self.mapped_col(j)[rs..re])
+    }
+
+    #[cfg(unix)]
+    #[inline]
+    fn mapped_col(&self, j: usize) -> &[f32] {
+        debug_assert!(j < self.cols);
+        // SAFETY: from_file validated that the mapping covers
+        // x_offset + 4·rows·cols bytes and that x_offset is 4-aligned;
+        // j < cols keeps the slice inside the payload. The memory is
+        // immutable for self's lifetime (PROT_READ).
+        unsafe {
+            let ptr = self.store.base.add(self.store.x_offset + 4 * j * self.rows);
+            std::slice::from_raw_parts(ptr as *const f32, self.rows)
+        }
+    }
+
+    #[cfg(not(unix))]
+    fn with_col<R>(&self, j: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        self.with_col_rows(j, 0, self.rows, f)
+    }
+
+    #[cfg(not(unix))]
+    fn with_col_rows<R>(&self, j: usize, rs: usize, re: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        use std::io::{Read, Seek, SeekFrom};
+        debug_assert!(j < self.cols && rs <= re && re <= self.rows);
+        COL_BUF.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            buf.resize(re - rs, 0.0);
+            {
+                let mut file = self.store.file.lock().expect("mmap fallback: poisoned lock");
+                let off = self.store.x_offset + 4 * (j as u64 * self.rows as u64 + rs as u64);
+                file.seek(SeekFrom::Start(off)).expect("mmap fallback: seek");
+                let bytes = unsafe {
+                    std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, buf.len() * 4)
+                };
+                file.read_exact(bytes).expect("mmap fallback: short read");
+            }
+            f(&buf)
+        })
+    }
+}
+
+impl std::fmt::Debug for MmapDenseMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MmapDenseMatrix")
+            .field("rows", &self.rows)
+            .field("cols", &self.cols)
+            .field("kind", &Self::backend_kind())
+            .finish()
+    }
+}
+
+impl DesignMatrix for MmapDenseMatrix {
+    #[inline]
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    fn col_dot(&self, j: usize, v: &[f32]) -> f32 {
+        self.with_col(j, |c| ops::dot_f32(c, v))
+    }
+
+    #[inline]
+    fn col_dot_f64(&self, j: usize, v: &[f32]) -> f64 {
+        self.with_col(j, |c| ops::dot(c, v))
+    }
+
+    #[inline]
+    fn col_axpy(&self, j: usize, alpha: f32, out: &mut [f32]) {
+        self.with_col(j, |c| ops::axpy(alpha, c, out));
+    }
+
+    #[inline]
+    fn col_norm(&self, j: usize) -> f64 {
+        self.with_col(j, ops::nrm2)
+    }
+
+    fn col_to_dense(&self, j: usize, out: &mut [f32]) {
+        self.with_col(j, |c| out.copy_from_slice(c));
+    }
+
+    #[inline]
+    fn col_axpy_rows(&self, j: usize, alpha: f32, rs: usize, re: usize, out: &mut [f32]) {
+        self.with_col_rows(j, rs, re, |c| ops::axpy(alpha, c, out));
+    }
+
+    // col_touched_rows: the trait default (all rows) is exact — the payload
+    // is dense storage, so col_axpy writes every row.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::io;
+    use crate::data::synthetic::{generate_synthetic, SyntheticSpec};
+
+    fn tmp(file: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("tlfre_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(file)
+    }
+
+    #[test]
+    fn kernels_bitwise_match_dense() {
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(16, 40, 8), 11);
+        let path = tmp("kernels.bin");
+        io::save(&ds, &path).unwrap();
+        let m = io::open_mmap(&path).unwrap();
+        assert_eq!(m.x.rows(), ds.n());
+        assert_eq!(m.x.cols(), ds.p());
+        assert_eq!(m.y, ds.y);
+        assert_eq!(m.groups, ds.groups);
+
+        let v: Vec<f32> = (0..ds.n()).map(|i| (i as f32 * 0.3).sin()).collect();
+        for j in 0..ds.p() {
+            assert_eq!(m.x.col_dot(j, &v).to_bits(), ds.x.col_dot(j, &v).to_bits());
+            assert_eq!(
+                m.x.col_dot_f64(j, &v).to_bits(),
+                ds.x.col_dot_f64(j, &v).to_bits()
+            );
+            assert_eq!(m.x.col_norm(j).to_bits(), ds.x.col_norm(j).to_bits());
+            let mut a = v.clone();
+            let mut b = v.clone();
+            m.x.col_axpy(j, -0.7, &mut a);
+            ds.x.col_axpy(j, -0.7, &mut b);
+            assert_eq!(a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                       b.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+            let mut pa = vec![0.1f32; 7];
+            let mut pb = vec![0.1f32; 7];
+            m.x.col_axpy_rows(j, 1.3, 5, 12, &mut pa);
+            ds.x.col_axpy_rows(j, 1.3, 5, 12, &mut pb);
+            assert_eq!(pa.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                       pb.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+        }
+        let mut col = vec![0.0f32; ds.n()];
+        m.x.col_to_dense(3, &mut col);
+        assert_eq!(&col[..], ds.x.col(3));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn matvec_with_workers_bitwise_matches_serial() {
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(32, 60, 12), 12);
+        let path = tmp("workers.bin");
+        io::save(&ds, &path).unwrap();
+        let m = io::open_mmap(&path).unwrap();
+        let beta: Vec<f32> =
+            (0..ds.p()).map(|j| if j % 3 == 0 { (j as f32 * 0.1).cos() } else { 0.0 }).collect();
+        let mut serial = vec![0.0f32; ds.n()];
+        ds.x.matvec_serial(&beta, &mut serial);
+        for workers in [1usize, 2, 3, 4, 8] {
+            let mut par = vec![0.0f32; ds.n()];
+            m.x.matvec_with_workers(&beta, &mut par, workers);
+            for i in 0..ds.n() {
+                assert_eq!(par[i].to_bits(), serial[i].to_bits(), "i={i} workers={workers}");
+            }
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn from_file_rejects_unaligned_offset_and_short_file() {
+        let path = tmp("bad.bin");
+        std::fs::write(&path, vec![0u8; 64]).unwrap();
+        assert!(MmapDenseMatrix::from_file(&path, 2, 2, 2).is_err());
+        assert!(MmapDenseMatrix::from_file(&path, 0, 100, 100).is_err());
+        assert!(MmapDenseMatrix::from_file(&path, 0, 4, 4).is_ok());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

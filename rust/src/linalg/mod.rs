@@ -13,6 +13,11 @@
 //! * [`dense`] — [`DenseMatrix`], column-major dense storage.
 //! * [`sparse`] — [`CscMatrix`], compressed sparse column storage for
 //!   one-hot / n-gram / dictionary workloads.
+//! * [`mmap`] — [`MmapDenseMatrix`], the out-of-core backend: a `TLFREDS1`
+//!   file's X payload memory-mapped (or positioned-read on non-unix) and
+//!   served column-by-column without ever loading it.
+//! * [`sharded`] — [`ShardedMatrix`], a row-sharded composite of boxed
+//!   backends whose forward sweeps dispatch one shard per pool worker.
 //! * [`view`] — [`ScreenedView`], the zero-copy survivor-column view that
 //!   reduced problems are built on after screening.
 //! * [`ops`] — vector kernels: dot, axpy, nrm2, scale, …
@@ -23,13 +28,17 @@
 //! `TLFRE_THREADS` parallelism knob.
 
 pub mod dense;
+pub mod mmap;
 pub mod ops;
 pub mod power;
+pub mod sharded;
 pub mod sparse;
 pub mod traits;
 pub mod view;
 
 pub use dense::DenseMatrix;
+pub use mmap::MmapDenseMatrix;
+pub use sharded::ShardedMatrix;
 pub use sparse::CscMatrix;
-pub use traits::{DesignMatrix, SelectRows};
+pub use traits::{col_norms_blocked, DesignMatrix, SelectRows};
 pub use view::ScreenedView;

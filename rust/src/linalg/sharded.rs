@@ -1,0 +1,422 @@
+//! Row-sharded composite backend.
+//!
+//! [`ShardedMatrix`] stacks any number of [`DesignMatrix`] shards vertically
+//! (`X = [X₁; X₂; …]`, row offsets recording where each shard starts) and
+//! implements the full backend contract over them. Shards are trait objects,
+//! so a composite can mix storage — dense blocks next to CSC blocks next to
+//! mmapped files — which is the shape a future distributed split needs: each
+//! worker owns the rows it can serve cheaply.
+//!
+//! ## Bitwise contract
+//!
+//! The repo invariant (results bitwise identical to the serial dense sweep
+//! at every worker count) constrains the kernels in two different ways:
+//!
+//! * **Reductions** (`col_dot`, `col_dot_f64`, `col_norm`): summing per
+//!   shard and combining would re-associate the lane-blocked accumulation
+//!   in [`ops`], changing the last bits. Instead the full column is
+//!   materialized into a thread-local scratch (one `col_to_dense` per
+//!   shard, disjoint ranges) and the *identical* whole-column kernel runs
+//!   over it — same sequence of adds as [`super::DenseMatrix`], bitwise
+//!   equal results, at the cost of one column copy per call.
+//! * **Accumulations** (`col_axpy`, `col_axpy_rows`, the forward sweeps):
+//!   element-wise, so they delegate per shard into disjoint sub-ranges of
+//!   the output with no cross-shard arithmetic — bitwise equality is free.
+//!
+//! Forward sweeps (`matvec` / `residual*`) dispatch **one shard per pool
+//! worker** via [`pool::parallel_chunks_mut_at`] with the shard row offsets
+//! as chunk boundaries: a worker's chunk is exactly one shard's row range,
+//! so each `col_axpy_rows` stays inside a single shard (no straddled
+//! calls, good locality when a shard is an mmapped file). Boundary choice
+//! never affects results — only which thread owns a row.
+
+use super::dense::DenseMatrix;
+use super::ops;
+use super::traits::{DesignMatrix, PAR_MIN_WORK};
+use crate::util::pool;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Scratch for whole-column materialization (reduction kernels).
+    static COL_SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Vertical concatenation of [`DesignMatrix`] shards (see module doc).
+pub struct ShardedMatrix {
+    shards: Vec<Box<dyn DesignMatrix + Send>>,
+    /// `row_offsets[s]..row_offsets[s+1]` is shard `s`'s global row range.
+    row_offsets: Vec<usize>,
+    cols: usize,
+}
+
+impl ShardedMatrix {
+    /// Stack `shards` vertically. All shards must share the column count
+    /// and be nonempty.
+    pub fn new(shards: Vec<Box<dyn DesignMatrix + Send>>) -> ShardedMatrix {
+        assert!(!shards.is_empty(), "ShardedMatrix needs at least one shard");
+        let cols = shards[0].cols();
+        let mut row_offsets = Vec::with_capacity(shards.len() + 1);
+        row_offsets.push(0usize);
+        for s in &shards {
+            assert_eq!(s.cols(), cols, "all shards must share the column count");
+            assert!(s.rows() > 0, "empty shard");
+            row_offsets.push(row_offsets.last().unwrap() + s.rows());
+        }
+        ShardedMatrix { shards, row_offsets, cols }
+    }
+
+    /// Split a dense matrix into `n_shards` contiguous row blocks (the last
+    /// may be smaller). Clamped to at least 1 and at most `rows` shards.
+    pub fn from_dense(x: &DenseMatrix, n_shards: usize) -> ShardedMatrix {
+        let n = x.rows();
+        assert!(n > 0, "cannot shard an empty matrix");
+        let chunk = n.div_ceil(n_shards.clamp(1, n));
+        let mut shards: Vec<Box<dyn DesignMatrix + Send>> = Vec::new();
+        let mut r0 = 0;
+        while r0 < n {
+            let r1 = (r0 + chunk).min(n);
+            let mut data = Vec::with_capacity((r1 - r0) * x.cols());
+            for j in 0..x.cols() {
+                data.extend_from_slice(&x.col(j)[r0..r1]);
+            }
+            shards.push(Box::new(DenseMatrix::from_col_major(r1 - r0, x.cols(), data)));
+            r0 = r1;
+        }
+        ShardedMatrix::new(shards)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Global row offsets, length `n_shards() + 1`.
+    pub fn row_offsets(&self) -> &[usize] {
+        &self.row_offsets
+    }
+
+    #[inline]
+    fn shard_range(&self, s: usize) -> (usize, usize) {
+        (self.row_offsets[s], self.row_offsets[s + 1])
+    }
+
+    /// Materialize column `j` (all shards, disjoint ranges) into the
+    /// thread-local scratch and run `f` over it — the reduction-kernel path
+    /// of the bitwise contract (module doc).
+    fn with_full_col<R>(&self, j: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        COL_SCRATCH.with(|cell| {
+            let mut buf = cell.borrow_mut();
+            let n = self.rows();
+            buf.resize(n, 0.0);
+            for (s, shard) in self.shards.iter().enumerate() {
+                let (lo, hi) = self.shard_range(s);
+                shard.col_to_dense(j, &mut buf[lo..hi]);
+            }
+            f(&buf)
+        })
+    }
+
+    /// Shared forward-sweep core: `out[i] += sign·Σ_j β_j x_{ij}` with
+    /// shard-aligned pool dispatch (or the plain serial loop under the
+    /// [`PAR_MIN_WORK`] threshold). Bitwise identical either way.
+    fn accumulate(&self, beta: &[f32], sign: f32, out: &mut [f32], force_workers: Option<usize>) {
+        assert_eq!(beta.len(), self.cols());
+        assert_eq!(out.len(), self.rows());
+        let nnz_b = beta.iter().filter(|&&b| b != 0.0).count();
+        let cols = self.cols().max(1);
+        let parallel = match force_workers {
+            Some(w) => w > 1,
+            None => {
+                (self.sweep_work() / cols).saturating_mul(nnz_b) >= PAR_MIN_WORK
+                    && pool::num_threads() > 1
+            }
+        };
+        if !parallel {
+            for (j, &bj) in beta.iter().enumerate() {
+                if bj != 0.0 {
+                    self.col_axpy(j, sign * bj, out);
+                }
+            }
+            return;
+        }
+        let interior = &self.row_offsets[1..self.row_offsets.len() - 1];
+        pool::parallel_chunks_mut_at(out, interior, |start, chunk| {
+            let end = start + chunk.len();
+            if start == 0 && end == self.rows() {
+                // Serial fallback inside the pool primitive: whole-range
+                // kernel, identical accumulation order.
+                for (j, &bj) in beta.iter().enumerate() {
+                    if bj != 0.0 {
+                        self.col_axpy(j, sign * bj, chunk);
+                    }
+                }
+            } else {
+                for (j, &bj) in beta.iter().enumerate() {
+                    if bj != 0.0 {
+                        self.col_axpy_rows(j, sign * bj, start, end, chunk);
+                    }
+                }
+            }
+        });
+    }
+}
+
+impl std::fmt::Debug for ShardedMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedMatrix")
+            .field("rows", &self.rows())
+            .field("cols", &self.cols)
+            .field("shards", &self.shards.len())
+            .finish()
+    }
+}
+
+impl DesignMatrix for ShardedMatrix {
+    #[inline]
+    fn rows(&self) -> usize {
+        *self.row_offsets.last().unwrap()
+    }
+
+    #[inline]
+    fn cols(&self) -> usize {
+        self.cols
+    }
+
+    fn col_dot(&self, j: usize, v: &[f32]) -> f32 {
+        self.with_full_col(j, |c| ops::dot_f32(c, v))
+    }
+
+    fn col_dot_f64(&self, j: usize, v: &[f32]) -> f64 {
+        self.with_full_col(j, |c| ops::dot(c, v))
+    }
+
+    fn col_axpy(&self, j: usize, alpha: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.rows());
+        for (s, shard) in self.shards.iter().enumerate() {
+            let (lo, hi) = self.shard_range(s);
+            shard.col_axpy(j, alpha, &mut out[lo..hi]);
+        }
+    }
+
+    fn col_norm(&self, j: usize) -> f64 {
+        self.with_full_col(j, ops::nrm2)
+    }
+
+    fn col_to_dense(&self, j: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.rows());
+        for (s, shard) in self.shards.iter().enumerate() {
+            let (lo, hi) = self.shard_range(s);
+            shard.col_to_dense(j, &mut out[lo..hi]);
+        }
+    }
+
+    fn col_axpy_rows(&self, j: usize, alpha: f32, rs: usize, re: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), re - rs);
+        for (s, shard) in self.shards.iter().enumerate() {
+            let (lo, hi) = self.shard_range(s);
+            let a = rs.max(lo);
+            let b = re.min(hi);
+            if a < b {
+                shard.col_axpy_rows(j, alpha, a - lo, b - lo, &mut out[a - rs..b - rs]);
+            }
+        }
+    }
+
+    fn col_touched_rows(&self, j: usize, bits: &mut [u64]) {
+        for (s, shard) in self.shards.iter().enumerate() {
+            let (lo, hi) = self.shard_range(s);
+            let local_rows = hi - lo;
+            let mut local = vec![0u64; local_rows.div_ceil(64)];
+            shard.col_touched_rows(j, &mut local);
+            or_shifted(bits, &local, lo, local_rows);
+        }
+    }
+
+    fn sweep_work(&self) -> usize {
+        self.shards.iter().map(|s| s.sweep_work()).fold(0usize, usize::saturating_add)
+    }
+
+    fn matvec(&self, beta: &[f32], out: &mut [f32]) {
+        out.fill(0.0);
+        self.accumulate(beta, 1.0, out, None);
+    }
+
+    fn matvec_with_workers(&self, beta: &[f32], out: &mut [f32], workers: usize) {
+        out.fill(0.0);
+        self.accumulate(beta, 1.0, out, Some(workers));
+    }
+
+    fn residual_matvec(&self, beta: &[f32], y: &[f32], out: &mut [f32]) {
+        assert_eq!(y.len(), self.rows());
+        assert_eq!(out.len(), self.rows());
+        for (o, &yi) in out.iter_mut().zip(y) {
+            *o = -yi;
+        }
+        self.accumulate(beta, 1.0, out, None);
+    }
+
+    fn residual(&self, beta: &[f32], y: &[f32], out: &mut [f32]) {
+        assert_eq!(y.len(), self.rows());
+        assert_eq!(out.len(), self.rows());
+        out.copy_from_slice(y);
+        self.accumulate(beta, -1.0, out, None);
+    }
+}
+
+/// OR the first `n_bits` bits of `src` into `dst`, shifted left by
+/// `offset` bit positions (shard-local row bits → global row bits).
+fn or_shifted(dst: &mut [u64], src: &[u64], offset: usize, n_bits: usize) {
+    let word_off = offset / 64;
+    let bit_off = offset % 64;
+    for (w, &raw) in src.iter().enumerate() {
+        let base = w * 64;
+        if base >= n_bits {
+            break;
+        }
+        let mut word = raw;
+        if n_bits - base < 64 {
+            word &= (1u64 << (n_bits - base)) - 1;
+        }
+        if word == 0 {
+            continue;
+        }
+        dst[word_off + w] |= word << bit_off;
+        if bit_off != 0 {
+            let hi = word >> (64 - bit_off);
+            if hi != 0 {
+                dst[word_off + w + 1] |= hi;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::CscMatrix;
+
+    fn sample(n: usize, p: usize) -> DenseMatrix {
+        DenseMatrix::from_fn(n, p, |i, j| {
+            if (i * 7 + j * 3) % 5 == 0 {
+                0.0
+            } else {
+                ((i * 13 + j * 11) % 17) as f32 * 0.21 - 1.6
+            }
+        })
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn reduction_kernels_bitwise_match_dense() {
+        let dense = sample(37, 12);
+        let v: Vec<f32> = (0..37).map(|i| (i as f32 * 0.4).sin()).collect();
+        for n_shards in [1usize, 2, 3, 5, 37] {
+            let sh = ShardedMatrix::from_dense(&dense, n_shards);
+            assert_eq!(DesignMatrix::rows(&sh), 37);
+            for j in 0..12 {
+                assert_eq!(sh.col_dot(j, &v).to_bits(), dense.col_dot(j, &v).to_bits());
+                assert_eq!(
+                    sh.col_dot_f64(j, &v).to_bits(),
+                    dense.col_dot_f64(j, &v).to_bits()
+                );
+                assert_eq!(sh.col_norm(j).to_bits(), dense.col_norm(j).to_bits());
+            }
+            let mut a = vec![0.0f32; 12];
+            let mut b = vec![0.0f32; 12];
+            DesignMatrix::matvec_t(&sh, &v, &mut a);
+            DesignMatrix::matvec_t(&dense, &v, &mut b);
+            assert_eq!(bits(&a), bits(&b), "n_shards={n_shards}");
+        }
+    }
+
+    #[test]
+    fn accumulation_kernels_bitwise_match_dense() {
+        let dense = sample(41, 9);
+        let beta: Vec<f32> =
+            (0..9).map(|j| if j % 2 == 0 { (j as f32 * 0.7).cos() } else { 0.0 }).collect();
+        let y: Vec<f32> = (0..41).map(|i| (i as f32 * 0.9).sin()).collect();
+        for n_shards in [2usize, 3, 4] {
+            let sh = ShardedMatrix::from_dense(&dense, n_shards);
+            let mut serial = vec![0.0f32; 41];
+            dense.matvec_serial(&beta, &mut serial);
+            for workers in [1usize, 2, 3, 4, 8] {
+                let mut par = vec![0.0f32; 41];
+                sh.matvec_with_workers(&beta, &mut par, workers);
+                assert_eq!(bits(&par), bits(&serial), "shards={n_shards} workers={workers}");
+            }
+            let mut ra = vec![0.0f32; 41];
+            let mut rb = vec![0.0f32; 41];
+            sh.residual(&beta, &y, &mut ra);
+            DesignMatrix::residual(&dense, &beta, &y, &mut rb);
+            assert_eq!(bits(&ra), bits(&rb));
+            sh.residual_matvec(&beta, &y, &mut ra);
+            DesignMatrix::residual_matvec(&dense, &beta, &y, &mut rb);
+            assert_eq!(bits(&ra), bits(&rb));
+            // Row-restricted accumulation across shard boundaries.
+            for (rs, re) in [(0usize, 41usize), (5, 30), (13, 14), (20, 41)] {
+                let mut full = vec![0.5f32; 41];
+                dense.col_axpy(4, 1.1, &mut full);
+                let mut part = vec![0.5f32; re - rs];
+                sh.col_axpy_rows(4, 1.1, rs, re, &mut part);
+                assert_eq!(bits(&part), bits(&full[rs..re]), "rows {rs}..{re}");
+            }
+        }
+    }
+
+    #[test]
+    fn touched_rows_exact_for_mixed_shards() {
+        // CSC shards report only stored rows; the composite must shift the
+        // shard-local bits to global positions exactly.
+        let dense = sample(70, 6);
+        let n_words = 70usize.div_ceil(64);
+        for n_shards in [2usize, 3, 7] {
+            let top = ShardedMatrix::from_dense(&dense, n_shards);
+            let csc_shards: Vec<Box<dyn DesignMatrix + Send>> = {
+                let chunk = 70usize.div_ceil(n_shards);
+                let mut v: Vec<Box<dyn DesignMatrix + Send>> = Vec::new();
+                let mut r0 = 0;
+                while r0 < 70 {
+                    let r1 = (r0 + chunk).min(70);
+                    let mut data = Vec::new();
+                    for j in 0..6 {
+                        data.extend_from_slice(&dense.col(j)[r0..r1]);
+                    }
+                    let block = DenseMatrix::from_col_major(r1 - r0, 6, data);
+                    v.push(Box::new(CscMatrix::from_dense(&block)));
+                    r0 = r1;
+                }
+                v
+            };
+            let sparse_sh = ShardedMatrix::new(csc_shards);
+            for j in 0..6 {
+                // Reference: per-row scan of the dense column.
+                let mut expect = vec![0u64; n_words];
+                for i in 0..70 {
+                    if dense.get(i, j) != 0.0 {
+                        expect[i / 64] |= 1u64 << (i % 64);
+                    }
+                }
+                let mut got = vec![0u64; n_words];
+                sparse_sh.col_touched_rows(j, &mut got);
+                assert_eq!(got, expect, "j={j} shards={n_shards}");
+                // Dense shards: every row touched.
+                let mut all = vec![0u64; n_words];
+                top.col_touched_rows(j, &mut all);
+                let mut full = vec![u64::MAX; n_words];
+                full[70 / 64] = (1u64 << (70 % 64)) - 1;
+                assert_eq!(all, full);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn mismatched_shard_cols_panic() {
+        ShardedMatrix::new(vec![
+            Box::new(DenseMatrix::zeros(3, 4)),
+            Box::new(DenseMatrix::zeros(3, 5)),
+        ]);
+    }
+}

@@ -293,6 +293,31 @@ pub fn accumulate_cols_with_workers<M: DesignMatrix + ?Sized>(
     });
 }
 
+/// Per-column norms computed in **column blocks** of at most `block_cols`
+/// columns — the out-of-core form of [`DesignMatrix::col_norms`].
+///
+/// Each block's entries are filled over the pool (per-column `col_norm`
+/// calls are independent), then the sweep advances to the next block, so
+/// the working set at any instant is one block of columns. Over an
+/// [`super::MmapDenseMatrix`] that bounds the resident X pages to
+/// `rows · block_cols · 4` bytes per block and lets the kernel reclaim the
+/// previous block's pages; the in-RAM backends just get the same answer.
+/// Every entry is the same independent `col_norm(j)` the unblocked default
+/// computes, so the result is **exactly** equal (bitwise) for every
+/// `block_cols` and worker count.
+pub fn col_norms_blocked<M: DesignMatrix + ?Sized>(x: &M, block_cols: usize) -> Vec<f64> {
+    let p = x.cols();
+    let block = block_cols.max(1);
+    let mut out = vec![0.0f64; p];
+    let mut j0 = 0;
+    while j0 < p {
+        let j1 = (j0 + block).min(p);
+        pool::parallel_fill(&mut out[j0..j1], |k| x.col_norm(j0 + k));
+        j0 = j1;
+    }
+    out
+}
+
 /// Row subsetting — needed by cross-validation fold extraction. Implemented
 /// by the owning backends ([`super::DenseMatrix`], [`super::CscMatrix`]);
 /// views re-run screening on the fold instead.

@@ -20,6 +20,7 @@
 use crate::linalg::DesignMatrix;
 use crate::prox::shrink_norm_sq;
 use crate::sgl::problem::SglProblem;
+use crate::util::pool;
 
 /// λ_max computation output.
 #[derive(Debug, Clone)]
@@ -157,6 +158,56 @@ pub fn lambda_max_from_correlations<M: DesignMatrix>(
     LambdaMaxInfo { lambda_max: best, argmax_group: arg, rho }
 }
 
+/// Streaming λ_max^α: visits X in **blocks of `block_groups` groups**
+/// without ever materializing the full correlation vector `Xᵀy`.
+///
+/// The out-of-core form of [`sgl_lambda_max`]: each group's correlations
+/// `X_gᵀy` are computed column-by-column (`col_dot`, the same kernel the
+/// `matvec_t` sweep applies per column), sorted, and root-solved in place —
+/// the transient working set is one group's magnitudes plus one block of X
+/// columns, so over an [`crate::linalg::MmapDenseMatrix`] the kernel only
+/// keeps `rows · Σ_{g∈block} n_g · 4` payload bytes hot at a time. Groups
+/// within a block fan out over the pool (per-group roots are independent),
+/// and the final max folds in ascending group order with the same strict
+/// comparison as [`lambda_max_from_correlations`] — so the result
+/// (`lambda_max`, `argmax_group`, every `rho[g]`) is **exactly** equal,
+/// bitwise, for every `block_groups` and worker count.
+pub fn sgl_lambda_max_streaming<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
+    alpha: f64,
+    block_groups: usize,
+) -> LambdaMaxInfo {
+    let g_cnt = prob.n_groups();
+    let block = block_groups.max(1);
+    let bounds: Vec<(usize, usize)> = prob.groups.iter().map(|(_, s, e)| (s, e)).collect();
+    let mut rho = vec![0.0f64; g_cnt];
+    let mut g0 = 0;
+    while g0 < g_cnt {
+        let g1 = (g0 + block).min(g_cnt);
+        pool::parallel_fill(&mut rho[g0..g1], |k| {
+            let (s, e) = bounds[g0 + k];
+            let mut z: Vec<f64> =
+                (s..e).map(|j| (prob.x.col_dot(j, prob.y) as f64).abs()).collect();
+            z.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            if z[0] <= 0.0 {
+                0.0
+            } else {
+                rho_group(&z, alpha, e - s)
+            }
+        });
+        g0 = g1;
+    }
+    let mut best = f64::NEG_INFINITY;
+    let mut arg = 0usize;
+    for (g, &r) in rho.iter().enumerate() {
+        if r > best {
+            best = r;
+            arg = g;
+        }
+    }
+    LambdaMaxInfo { lambda_max: best, argmax_group: arg, rho }
+}
+
 /// Corollary 10's boundary `λ₁^max(λ₂) = max_g ‖S_{λ₂}(X_gᵀy)‖/√n_g`.
 pub fn lambda1_max<M: DesignMatrix>(prob: &SglProblem<'_, M>, lambda2: f64) -> f64 {
     let mut c = vec![0.0f32; prob.n_features()];
@@ -273,6 +324,31 @@ mod tests {
         let linf = c.iter().fold(0.0f64, |m, &v| m.max((v as f64).abs()));
         assert_eq!(lambda1_max(&prob, linf * 1.001), 0.0);
         assert!(lambda1_max(&prob, linf * 0.9) > 0.0);
+    }
+
+    #[test]
+    fn streaming_lambda_max_bitwise_matches_in_ram() {
+        let mut rng = Rng::seed_from_u64(56);
+        let x = DenseMatrix::from_fn(20, 30, |_, _| rng.gaussian() as f32);
+        let y: Vec<f32> = (0..20).map(|_| rng.gaussian() as f32).collect();
+        let g = GroupStructure::from_sizes(&[4, 6, 5, 7, 3, 5]);
+        let prob = SglProblem::new(&x, &y, &g);
+        for alpha in [0.3, 1.0, 2.5] {
+            let full = sgl_lambda_max(&prob, alpha);
+            for block in [1usize, 2, 4, 100] {
+                let st = sgl_lambda_max_streaming(&prob, alpha, block);
+                assert_eq!(
+                    st.lambda_max.to_bits(),
+                    full.lambda_max.to_bits(),
+                    "alpha={alpha} block={block}"
+                );
+                assert_eq!(st.argmax_group, full.argmax_group);
+                assert_eq!(st.rho.len(), full.rho.len());
+                for (a, b) in st.rho.iter().zip(&full.rho) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
     }
 
     #[test]

@@ -39,7 +39,7 @@ pub use gap_safe::{
     gap_sphere_radius, gap_with_noise_floor, same_support_at_resolution, EvictPlan,
     GapSafeDynamic, GapSafeDynamicNonneg,
 };
-pub use lambda_max::{sgl_lambda_max, LambdaMaxInfo};
+pub use lambda_max::{sgl_lambda_max, sgl_lambda_max_streaming, LambdaMaxInfo};
 pub use rule::{
     stats_from_masks, GapSafeRule, LayerCount, Safety, ScreenInput, ScreenKind, ScreenPipeline,
     ScreeningRule, StrongRule, SurvivorMask, TlfreRule,

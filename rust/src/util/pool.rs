@@ -381,6 +381,60 @@ where
     dispatch_round(p, tasks, || f(0, first));
 }
 
+/// [`parallel_chunks_mut`] with **caller-chosen chunk boundaries** instead
+/// of an even split: `out` is cut at the interior split points in `bounds`
+/// (strictly ascending, each in `(0, out.len())`) and `f(chunk_start,
+/// chunk_slice)` runs on each piece — chunks 1.. on the pool, chunk 0 on the
+/// calling thread.
+///
+/// This exists for storage-aligned sweeps: `ShardedMatrix` passes its shard
+/// row offsets so each pool worker accumulates into exactly one shard's row
+/// range and never splits a shard's `col_axpy_rows` across workers. The
+/// determinism contract of [`parallel_chunks_mut`] carries over unchanged —
+/// boundaries decide which thread owns a row, never the order of additions
+/// into it — so results stay bitwise identical to the serial loop for every
+/// boundary choice. Serial fallbacks (no pool, nested dispatch, empty
+/// `bounds`) invoke `f(0, out)` once; `f` must stay partition-agnostic.
+pub fn parallel_chunks_mut_at<U, F>(out: &mut [U], bounds: &[usize], f: F)
+where
+    U: Send,
+    F: Fn(usize, &mut [U]) + Sync,
+{
+    let n = out.len();
+    debug_assert!(
+        bounds.windows(2).all(|w| w[0] < w[1])
+            && bounds.first().map_or(true, |&b| b > 0)
+            && bounds.last().map_or(true, |&b| b < n),
+        "bounds must be strictly ascending interior split points"
+    );
+    if bounds.is_empty() || n == 0 || num_threads() <= 1 || in_pool_worker() {
+        f(0, out);
+        return;
+    }
+    let p = pool();
+    if p.senders.is_empty() {
+        f(0, out);
+        return;
+    }
+    let mut pieces: Vec<(usize, &mut [U])> = Vec::with_capacity(bounds.len() + 1);
+    let mut rest = out;
+    let mut start = 0;
+    for &b in bounds {
+        let (head, tail) = rest.split_at_mut(b - start);
+        pieces.push((start, head));
+        start = b;
+        rest = tail;
+    }
+    pieces.push((start, rest));
+    let mut pieces = pieces.into_iter();
+    let (_, first) = pieces.next().expect("bounds nonempty ⇒ ≥ 2 pieces");
+    let f_ref = &f;
+    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = pieces
+        .map(|(s, slice)| Box::new(move || f_ref(s, slice)) as Box<dyn FnOnce() + Send + '_>)
+        .collect();
+    dispatch_round(p, tasks, || f(0, first));
+}
+
 /// Map a function over items **on the persistent pool**, preserving order,
 /// with an explicit chunking worker count.
 ///
@@ -660,6 +714,45 @@ mod tests {
             parallel_chunks_mut(&mut par, workers, accumulate);
             for i in 0..513 {
                 assert_eq!(par[i].to_bits(), serial[i].to_bits(), "i={i} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunks_mut_at_covers_disjointly_with_correct_starts() {
+        for bounds in [vec![], vec![1], vec![500], vec![1, 2, 3], vec![100, 400, 1000]] {
+            let mut out = vec![usize::MAX; 1001];
+            parallel_chunks_mut_at(&mut out, &bounds, |start, chunk| {
+                for (k, o) in chunk.iter_mut().enumerate() {
+                    *o = start + k;
+                }
+            });
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, i, "bounds={bounds:?}");
+            }
+        }
+        let mut empty: Vec<usize> = Vec::new();
+        parallel_chunks_mut_at(&mut empty, &[], |_, chunk| assert!(chunk.is_empty()));
+    }
+
+    #[test]
+    fn chunks_mut_at_accumulation_matches_even_partition_bitwise() {
+        let terms: Vec<f32> = (0..29).map(|t| (t as f32 * 0.417).cos()).collect();
+        let accumulate = |start: usize, chunk: &mut [f32]| {
+            for (k, o) in chunk.iter_mut().enumerate() {
+                let i = start + k;
+                for &t in &terms {
+                    *o += t * (i as f32 + 1.0);
+                }
+            }
+        };
+        let mut serial = vec![0.0f32; 257];
+        accumulate(0, &mut serial);
+        for bounds in [vec![7usize], vec![64, 128], vec![1, 2, 200, 256]] {
+            let mut par = vec![0.0f32; 257];
+            parallel_chunks_mut_at(&mut par, &bounds, accumulate);
+            for i in 0..257 {
+                assert_eq!(par[i].to_bits(), serial[i].to_bits(), "i={i} bounds={bounds:?}");
             }
         }
     }

@@ -12,13 +12,18 @@
 //!   materialized gathered copies (the seed behaviour);
 //! * pool parity — the persistent worker pool's `matvec_t` sweep is
 //!   bitwise identical to the serial sweep and to the legacy per-call
-//!   `std::thread::scope` implementation at multiple worker counts.
+//!   `std::thread::scope` implementation at multiple worker counts;
+//! * out-of-core parity — whole TLFre and DPC paths on the mmap-backed
+//!   and row-sharded backends are **bitwise identical** (per-step stats
+//!   AND per-λ coefficient vectors) to the in-RAM dense backend, and the
+//!   streaming λmax / blocked column norms equal the in-RAM values bit
+//!   for bit. These run under the CI `TLFRE_THREADS` ∈ {1,2,4,8} matrix.
 
-use tlfre::coordinator::{run_tlfre_path, PathConfig};
+use tlfre::coordinator::{path_coefficients, run_dpc_path, run_tlfre_path, DpcPathConfig, PathConfig};
 use tlfre::data::synthetic::{
     generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec,
 };
-use tlfre::linalg::{CscMatrix, DenseMatrix, DesignMatrix, ScreenedView};
+use tlfre::linalg::{col_norms_blocked, CscMatrix, DenseMatrix, DesignMatrix, ScreenedView, ShardedMatrix};
 use tlfre::screening::lambda_max::sgl_lambda_max;
 use tlfre::screening::tlfre::{tlfre_screen, TlfreContext};
 use tlfre::sgl::{solve_fista, FistaOptions, SglParams, SglProblem};
@@ -407,6 +412,173 @@ fn screened_view_path_bitwise_matches_gathered_copy_path() {
         assert_eq!(sv.active_features, sc.active_features, "active differ at λ={}", sv.lambda);
         assert_eq!(sv.iters, sc.iters, "solver iters differ at λ={}", sv.lambda);
         assert_eq!(sv.gap.to_bits(), sc.gap.to_bits(), "gap not bitwise equal at λ={}", sv.lambda);
+    }
+}
+
+/// Per-step statistics of two TLFre paths must agree bit for bit.
+fn assert_paths_bitwise_equal(
+    a: &tlfre::coordinator::PathOutput,
+    b: &tlfre::coordinator::PathOutput,
+    tag: &str,
+) {
+    assert_eq!(a.lambda_max.to_bits(), b.lambda_max.to_bits(), "{tag}: λmax diverged");
+    assert_eq!(a.steps.len(), b.steps.len(), "{tag}: step counts diverged");
+    for (sa, sb) in a.steps.iter().zip(&b.steps) {
+        assert_eq!(sa.lambda.to_bits(), sb.lambda.to_bits(), "{tag}: λ grids diverged");
+        assert_eq!(sa.r1.to_bits(), sb.r1.to_bits(), "{tag}: r1 at λ={}", sa.lambda);
+        assert_eq!(sa.r2.to_bits(), sb.r2.to_bits(), "{tag}: r2 at λ={}", sa.lambda);
+        assert_eq!(sa.zeros, sb.zeros, "{tag}: zeros at λ={}", sa.lambda);
+        assert_eq!(sa.nonzeros, sb.nonzeros, "{tag}: nonzeros at λ={}", sa.lambda);
+        assert_eq!(sa.active_features, sb.active_features, "{tag}: active at λ={}", sa.lambda);
+        assert_eq!(sa.iters, sb.iters, "{tag}: iters at λ={}", sa.lambda);
+        assert_eq!(sa.gap.to_bits(), sb.gap.to_bits(), "{tag}: gap at λ={}", sa.lambda);
+    }
+}
+
+/// Per-λ coefficient vectors from [`path_coefficients`] must agree bit
+/// for bit.
+fn assert_coefficients_bitwise_equal(a: &[Vec<f32>], b: &[Vec<f32>], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: path lengths diverged");
+    for (k, (ca, cb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ca.len(), cb.len(), "{tag}: β dims at step {k}");
+        for j in 0..ca.len() {
+            assert_eq!(
+                ca[j].to_bits(),
+                cb[j].to_bits(),
+                "{tag}: β[{j}] at step {k}: {} vs {}",
+                ca[j],
+                cb[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn mmap_backend_whole_path_bitwise_matches_dense() {
+    // The tentpole acceptance test: save a dataset to TLFREDS1, map its X
+    // payload from disk, and run the full TLFre-screened path on the
+    // mmap-backed matrix. Every per-step statistic and every per-λ
+    // coefficient must be bitwise identical to the in-RAM dense backend —
+    // the mmap backend runs the same kernels over the same bytes.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(40, 400, 40), 2014);
+    let path = std::env::temp_dir().join(format!("tlfre-parity-mmap-{}.bin", std::process::id()));
+    tlfre::data::io::save(&ds, &path).unwrap();
+    let mds = tlfre::data::io::open_mmap(&path).unwrap();
+    assert_eq!(mds.x.rows(), ds.x.rows());
+    assert_eq!(mds.x.cols(), ds.x.cols());
+
+    let cfg = PathConfig {
+        alpha: 1.0,
+        n_lambda: 12,
+        lambda_min_ratio: 0.05,
+        tol: 1e-7,
+        ..Default::default()
+    };
+    let dense = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+    let mapped = run_tlfre_path(&mds.x, &mds.y, &mds.groups, &cfg);
+    assert_paths_bitwise_equal(&dense, &mapped, "mmap");
+
+    let cd = path_coefficients(&ds.x, &ds.y, &ds.groups, &cfg);
+    let cm = path_coefficients(&mds.x, &mds.y, &mds.groups, &cfg);
+    assert_coefficients_bitwise_equal(&cd, &cm, "mmap");
+
+    drop(mds);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn sharded_backend_whole_path_bitwise_matches_dense() {
+    // Row-sharded composite over 1/2/3/5 shards (including shard counts
+    // that do not divide n): per-step stats and per-λ coefficients must be
+    // bitwise identical to the unsharded dense backend at every worker
+    // count in the CI matrix.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(40, 400, 40), 2014);
+    let cfg = PathConfig {
+        alpha: 1.0,
+        n_lambda: 12,
+        lambda_min_ratio: 0.05,
+        tol: 1e-7,
+        ..Default::default()
+    };
+    let dense = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
+    let cd = path_coefficients(&ds.x, &ds.y, &ds.groups, &cfg);
+    for shards in [1usize, 2, 3, 5] {
+        let sx = ShardedMatrix::from_dense(&ds.x, shards);
+        let tag = format!("sharded×{shards}");
+        let sp = run_tlfre_path(&sx, &ds.y, &ds.groups, &cfg);
+        assert_paths_bitwise_equal(&dense, &sp, &tag);
+        let cs = path_coefficients(&sx, &ds.y, &ds.groups, &cfg);
+        assert_coefficients_bitwise_equal(&cd, &cs, &tag);
+    }
+}
+
+#[test]
+fn mmap_and_sharded_dpc_paths_bitwise_match_dense() {
+    // Same contract for the nonnegative-Lasso DPC path: per-λ rejection,
+    // support size and iteration counts move by zero bits across backends.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic2_scaled(30, 200, 20), 7);
+    let cfg = DpcPathConfig {
+        n_lambda: 10,
+        lambda_min_ratio: 0.05,
+        tol: 1e-7,
+        ..Default::default()
+    };
+    let dense = run_dpc_path(&ds.x, &ds.y, &cfg);
+
+    let path = std::env::temp_dir().join(format!("tlfre-parity-dpc-{}.bin", std::process::id()));
+    tlfre::data::io::save(&ds, &path).unwrap();
+    let mds = tlfre::data::io::open_mmap(&path).unwrap();
+    let mapped = run_dpc_path(&mds.x, &mds.y, &cfg);
+    drop(mds);
+    let _ = std::fs::remove_file(&path);
+
+    let sx = ShardedMatrix::from_dense(&ds.x, 3);
+    let sharded = run_dpc_path(&sx, &ds.y, &cfg);
+
+    for (tag, other) in [("mmap", &mapped), ("sharded", &sharded)] {
+        assert_eq!(dense.lambda_max.to_bits(), other.lambda_max.to_bits(), "{tag}: λmax");
+        assert_eq!(dense.steps.len(), other.steps.len(), "{tag}: step counts");
+        for (sa, sb) in dense.steps.iter().zip(&other.steps) {
+            assert_eq!(sa.lambda.to_bits(), sb.lambda.to_bits(), "{tag}: λ grid");
+            assert_eq!(sa.rejection.to_bits(), sb.rejection.to_bits(), "{tag}: rejection");
+            assert_eq!(sa.active_features, sb.active_features, "{tag}: active");
+            assert_eq!(sa.iters, sb.iters, "{tag}: iters");
+            assert_eq!(sa.zeros, sb.zeros, "{tag}: zeros");
+        }
+    }
+}
+
+#[test]
+fn streaming_lambda_max_and_blocked_norms_bitwise_match_in_ram() {
+    // The streaming λmax visits X in column blocks and the blocked norm
+    // sweep bounds resident pages; both must reproduce the in-RAM values
+    // exactly (same per-column kernels, same fold order).
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(35, 300, 30), 11);
+    let prob = SglProblem::new(&ds.x, &ds.y, &ds.groups);
+    for alpha in [0.5, 1.0, 2.0] {
+        let full = sgl_lambda_max(&prob, alpha);
+        for block_groups in [1usize, 4, 7, 1000] {
+            let st = tlfre::screening::sgl_lambda_max_streaming(&prob, alpha, block_groups);
+            assert_eq!(
+                full.lambda_max.to_bits(),
+                st.lambda_max.to_bits(),
+                "λmax α={alpha} blocks={block_groups}"
+            );
+            assert_eq!(full.argmax_group, st.argmax_group, "argmax α={alpha}");
+        }
+    }
+
+    let full_norms = ds.x.col_norms();
+    for block_cols in [1usize, 17, 64, 10_000] {
+        let blocked = col_norms_blocked(&ds.x, block_cols);
+        assert_eq!(full_norms.len(), blocked.len());
+        for j in 0..full_norms.len() {
+            assert_eq!(
+                full_norms[j].to_bits(),
+                blocked[j].to_bits(),
+                "col_norms[{j}] blocks={block_cols}"
+            );
+        }
     }
 }
 
