@@ -25,6 +25,11 @@
 //!   spectral accounting and bitwise serial/sharded equality asserted
 //!   before publishing; feeds `cv_fold_parallel` in
 //!   `BENCH_solver_path.json`);
+//! * the checkpointed path driver vs the plain coefficient-collecting run —
+//!   sidecar overhead at every-2-steps cadence, with a stop-mid-grid +
+//!   resume round trip asserted bitwise equal to the uninterrupted path
+//!   before publishing (feeds `checkpoint_overhead` in
+//!   `BENCH_solver_path.json`);
 //! * the out-of-core scale section — stream-generates a TLFREDS1 file
 //!   whose X payload is ≥ 4× the `--scale-budget` RAM budget, then
 //!   measures blocked column norms, streaming λmax, the mmap-vs-dense
@@ -35,7 +40,7 @@
 use tlfre::bench_harness::BenchArgs;
 use tlfre::coordinator::{
     cross_validate, cross_validate_serial, make_folds, path_coefficients, run_tlfre_path,
-    PathConfig,
+    run_tlfre_path_checkpointed, run_tlfre_path_with_coefficients, CheckpointOptions, PathConfig,
 };
 use tlfre::screening::ScreenKind;
 use tlfre::linalg::SelectRows;
@@ -568,6 +573,84 @@ fn main() {
         dyn_wall_ratio,
     );
 
+    // Checkpoint overhead: the kill-safe checkpointed driver (sidecar
+    // rewritten every 2 completed grid points) vs the plain
+    // coefficient-collecting path on the identical problem and config.
+    // Before any number is published, a stop-at-mid-grid + resume round
+    // trip is asserted bitwise identical — stats and per-λ coefficients —
+    // to the uninterrupted run, so the published overhead is the cost of a
+    // *verified* recovery mechanism, not of a lookalike.
+    println!("\n== checkpoint overhead (sidecar every 2 steps) ==");
+    let ck_every = 2usize;
+    let ck_sidecar =
+        std::env::temp_dir().join(format!("tlfre-bench-ck-{}.bin", std::process::id()));
+    let mut ck_plain = None;
+    let r_ck_plain = bench("plain", &pcfg, || {
+        ck_plain = Some(run_tlfre_path_with_coefficients(&ds.x, &ds.y, &ds.groups, &cached_cfg));
+    });
+    let mut ck_opts = CheckpointOptions::new(&ck_sidecar);
+    ck_opts.every = ck_every;
+    let mut ck_full = None;
+    let r_ck = bench("checkpointed", &pcfg, || {
+        ck_full = Some(
+            run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &cached_cfg, &ck_opts)
+                .expect("checkpointed path"),
+        );
+    });
+    let (plain_path, plain_coefs) = ck_plain.expect("plain path ran");
+    let (ck_path_out, ck_coefs) = ck_full.expect("checkpointed path ran");
+
+    // Kill-and-resume round trip: stop mid-grid (off a save boundary so
+    // resume actually recomputes lost steps), then resume from the sidecar.
+    let ck_stop = (cached_cfg.n_lambda / 2).max(1) | 1;
+    let mut stop_opts = CheckpointOptions::new(&ck_sidecar);
+    stop_opts.every = ck_every;
+    stop_opts.stop_after = Some(ck_stop);
+    let (stopped, _) =
+        run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &cached_cfg, &stop_opts)
+            .expect("stopped checkpointed path");
+    assert!(stopped.truncated, "stop_after={ck_stop} must truncate the {path_n_lambda}-point grid");
+    let mut resume_opts = CheckpointOptions::new(&ck_sidecar);
+    resume_opts.every = ck_every;
+    resume_opts.resume = true;
+    let (resumed, resumed_coefs) =
+        run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &cached_cfg, &resume_opts)
+            .expect("resumed checkpointed path");
+    let path_eq = |a: &tlfre::coordinator::PathOutput, b: &tlfre::coordinator::PathOutput| {
+        a.lambda_max.to_bits() == b.lambda_max.to_bits()
+            && a.steps.len() == b.steps.len()
+            && a.steps.iter().zip(&b.steps).all(|(sa, sb)| {
+                sa.lambda.to_bits() == sb.lambda.to_bits()
+                    && sa.iters == sb.iters
+                    && sa.gap.to_bits() == sb.gap.to_bits()
+                    && sa.nonzeros == sb.nonzeros
+            })
+    };
+    let coefs_eq = |a: &[Vec<f32>], b: &[Vec<f32>]| {
+        a.len() == b.len()
+            && a.iter()
+                .zip(b)
+                .all(|(ba, bb)| ba.iter().zip(bb).all(|(x, y)| x.to_bits() == y.to_bits()))
+    };
+    let resume_bitwise_equal = path_eq(&ck_path_out, &plain_path)
+        && coefs_eq(&ck_coefs, &plain_coefs)
+        && path_eq(&resumed, &plain_path)
+        && coefs_eq(&resumed_coefs, &plain_coefs);
+    assert!(
+        resume_bitwise_equal,
+        "checkpointed/resumed path diverged from the plain run — overhead numbers would be meaningless"
+    );
+    let _ = std::fs::remove_file(&ck_sidecar);
+    let checkpoint_overhead_ratio =
+        r_ck.seconds.median / r_ck_plain.seconds.median.max(1e-12);
+    println!(
+        "  plain {:8.2} ms   checkpointed {:8.2} ms   ({:4.3}x, resume @ step {} bitwise equal)",
+        r_ck_plain.seconds.median * 1e3,
+        r_ck.seconds.median * 1e3,
+        checkpoint_overhead_ratio,
+        ck_stop,
+    );
+
     let path_json = |out: &tlfre::coordinator::PathOutput, wall_s: f64| {
         Json::obj()
             .set("wall_s", wall_s)
@@ -648,6 +731,17 @@ fn main() {
                 .set("iter_ratio_dynamic_over_static", dyn_iter_ratio)
                 .set("evicted_total", evicted_total)
                 .set("support_equal", dyn_support_equal),
+        )
+        .set(
+            "checkpoint_overhead",
+            Json::obj()
+                .set("every_k", ck_every)
+                .set("steps", path_n_lambda)
+                .set("resume_stop_after", ck_stop)
+                .set("plain_wall_s", r_ck_plain.seconds.median)
+                .set("checkpointed_wall_s", r_ck.seconds.median)
+                .set("overhead_ratio", checkpoint_overhead_ratio)
+                .set("resume_bitwise_equal", resume_bitwise_equal),
         );
     // Workspace root for the same reason as BENCH_backends.json above.
     let path_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_solver_path.json");

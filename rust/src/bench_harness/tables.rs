@@ -143,6 +143,15 @@ pub fn series_to_json(out: &PathOutput) -> Json {
             "kkt_readmitted",
             out.steps.iter().map(|s| s.kkt_readmitted as f64).collect::<Vec<_>>(),
         )
+        .set(
+            "budget_exhausted",
+            out.steps.iter().map(|s| s.budget_exhausted).collect::<Vec<_>>(),
+        )
+        .set(
+            "certified_suboptimality",
+            out.steps.iter().map(|s| s.certified_suboptimality).collect::<Vec<_>>(),
+        )
+        .set("truncated", out.truncated)
         .set("screen_total_s", out.screen_total_s)
         .set("solve_total_s", out.solve_total_s)
 }

@@ -7,6 +7,9 @@
 //!                  [--n-lambda 100] [--no-screening] [--verify] [--config cfg.json]
 //!                  [--backend dense|csc|mmap|sharded] [--file ds.bin]
 //!                  [--shards k] [--density 0.05]
+//!                  [--checkpoint ck.tlfreck [--resume] [--checkpoint-every 5]
+//!                   [--stop-after 7]] [--max-seconds 60]
+//!                  [--validate-data|--no-validate] [--coef-out coefs.hex]
 //! tlfre cv         --dataset ... [--k-folds 5] [--alpha 1.0] [--solver bcd]
 //!                  [--cv-serial] [--backend dense|csc]
 //! tlfre dpc-path   --dataset mnist|pie|... [--n-lambda 100] [--no-screening]
@@ -20,7 +23,8 @@ use crate::config::Config;
 use crate::coordinator::runner::{PathConfig, PathOutput, SolverKind};
 use crate::coordinator::{
     cross_validate, cross_validate_serial, run_baseline_path, run_dpc_path, run_nonneg_baseline,
-    run_tlfre_path, CvOutput, DpcPathConfig,
+    run_tlfre_path, run_tlfre_path_checkpointed, run_tlfre_path_with_coefficients,
+    CheckpointOptions, CvOutput, DpcPathConfig,
 };
 use crate::data::registry::RealDataset;
 use crate::data::synthetic::{
@@ -234,6 +238,30 @@ COMMON FLAGS:
                        sequential sweep)
   --dynamic            dpc-path: GAP-safe dynamic screening inside the
                        nonneg solver (evictions per λ in the 'dyn' column)
+  --checkpoint <path>  solve-path: record completed λ steps to an atomic
+                       TLFRECK1 sidecar every K steps so a killed run can
+                       continue (screened engine only)
+  --resume             solve-path: continue the run recorded in the
+                       --checkpoint sidecar; the continuation is bitwise
+                       identical to the uninterrupted path at every
+                       TLFRE_THREADS (a problem/config mismatch is a typed
+                       error, never a silent restart)
+  --checkpoint-every K checkpoint save cadence in completed λ steps
+                       (default 5; a kill loses at most K-1 steps)
+  --stop-after <K>     solve-path --checkpoint: stop cleanly after K total
+                       completed λ steps (deterministic stand-in for a
+                       mid-path kill; used by the CI resume smoke)
+  --max-seconds <S>    wall-clock budget for the whole path; an expiring
+                       solve returns its best iterate with a certified
+                       suboptimality bound, and the path truncates to a
+                       clean completed prefix
+  --validate-data      pre-solve scan of X/y: NaN/Inf entries, zero-norm
+                       columns, empty groups → typed error naming the
+                       coordinate (default for --file-backed inputs)
+  --no-validate        skip the pre-solve data scan
+  --coef-out <path>    solve-path (screened): per-λ coefficient dump, one
+                       line per step, each f32 as its 8-hex-digit bit
+                       pattern — byte-stable for diffing runs/backends
   --out <path>         output file (generate / JSON reports)
 ";
 
@@ -336,6 +364,12 @@ fn cmd_solve_path(args: &Args) -> Result<i32> {
     if args.has("parallel-bcd") {
         pc.parallel_bcd_groups = true;
     }
+    if let Some(s) = args.get_parsed::<f64>("max-seconds")? {
+        if !(s.is_finite() && s > 0.0) {
+            bail!("--max-seconds must be positive and finite, got {s}");
+        }
+        pc.max_seconds = Some(s);
+    }
 
     if name == "sparse1" || name == "sparse" {
         // CSC-native sparse synthetic workload.
@@ -400,23 +434,85 @@ fn run_sgl_path<M: DesignMatrix>(
     name: &str,
     alpha: f64,
 ) -> Result<i32> {
+    // Pre-solve validation: on by default when the bytes came from outside
+    // the process (`--file`), opt-in (`--validate-data`) for generated
+    // data, and `--no-validate` always wins.
+    let file_backed = args.get("file").is_some();
+    if (args.has("validate-data") || file_backed) && !args.has("no-validate") {
+        let vt = Timer::start();
+        crate::data::validate::validate_problem(x, y, groups)
+            .context("input validation failed (--no-validate skips this scan)")?;
+        println!(
+            "validated X/y: all entries finite, no zero-norm columns, no empty groups ({})",
+            fmt_duration(vt.elapsed_s())
+        );
+    }
+
+    let want_coefs = args.get("coef-out").is_some();
+    if want_coefs && args.has("no-screening") {
+        bail!("--coef-out requires the screened path (drop --no-screening)");
+    }
     let t = Timer::start();
-    let out: PathOutput = if args.has("no-screening") {
-        run_baseline_path(x, y, groups, pc)
-    } else {
-        run_tlfre_path(x, y, groups, pc)
+    let (out, betas): (PathOutput, Option<Vec<Vec<f32>>>) = match args.get("checkpoint") {
+        Some(ck) => {
+            if args.has("no-screening") {
+                bail!("--checkpoint requires the screened TLFre engine (drop --no-screening)");
+            }
+            let mut opts = CheckpointOptions::new(ck);
+            if let Some(k) = args.get_parsed::<usize>("checkpoint-every")? {
+                if k == 0 {
+                    bail!("--checkpoint-every must be ≥ 1");
+                }
+                opts.every = k;
+            }
+            opts.resume = args.has("resume");
+            opts.stop_after = args.get_parsed::<usize>("stop-after")?;
+            let (out, betas) = run_tlfre_path_checkpointed(x, y, groups, pc, &opts)?;
+            (out, Some(betas))
+        }
+        None if args.has("no-screening") => (run_baseline_path(x, y, groups, pc), None),
+        None if want_coefs => {
+            let (out, betas) = run_tlfre_path_with_coefficients(x, y, groups, pc);
+            (out, Some(betas))
+        }
+        None => (run_tlfre_path(x, y, groups, pc), None),
     };
     let wall = t.elapsed_s();
     println!(
         "{}",
         crate::bench_harness::tables::render_rejection_series(&format!("{name} α={alpha}"), &out)
     );
+    if out.truncated {
+        println!(
+            "path truncated: {} of {} grid points completed (--max-seconds / --stop-after)",
+            out.steps.len(),
+            pc.n_lambda
+        );
+    }
+    let exhausted = out.steps.iter().filter(|s| s.budget_exhausted).count();
+    if exhausted > 0 {
+        let worst = out
+            .steps
+            .iter()
+            .filter(|s| s.budget_exhausted)
+            .map(|s| s.certified_suboptimality)
+            .fold(0.0f64, f64::max);
+        println!(
+            "{exhausted} step(s) stopped before convergence; worst certified suboptimality {worst:.3e}"
+        );
+    }
     println!(
         "screen {}  solve {}  wall {}",
         fmt_duration(out.screen_total_s),
         fmt_duration(out.solve_total_s),
         fmt_duration(wall)
     );
+    if let Some(path) = args.get("coef-out") {
+        let betas = betas.expect("coefficients are captured whenever --coef-out is set");
+        std::fs::write(path, coef_hex_dump(&betas))
+            .with_context(|| format!("writing --coef-out {path}"))?;
+        println!("coefficient bit dump ({} steps) written to {path}", betas.len());
+    }
     if let Some(path) = args.get("out") {
         std::fs::write(
             path,
@@ -425,6 +521,25 @@ fn run_sgl_path<M: DesignMatrix>(
         println!("json written to {path}");
     }
     Ok(0)
+}
+
+/// Per-λ coefficient dump for bitwise comparison: one line per grid point,
+/// each f32 rendered as its 8-hex-digit bit pattern. Text-stable across
+/// platforms and backends, so CI can `cmp` a resumed run against an
+/// uninterrupted one.
+fn coef_hex_dump(betas: &[Vec<f32>]) -> String {
+    let per_line = betas.first().map_or(0, |b| b.len() * 9 + 1);
+    let mut s = String::with_capacity(betas.len() * per_line);
+    for b in betas {
+        for (i, v) in b.iter().enumerate() {
+            if i > 0 {
+                s.push(' ');
+            }
+            s.push_str(&format!("{:08x}", v.to_bits()));
+        }
+        s.push('\n');
+    }
+    s
 }
 
 fn cmd_cv(args: &Args) -> Result<i32> {
@@ -470,12 +585,7 @@ fn cmd_cv(args: &Args) -> Result<i32> {
         out.points.len(),
         if args.has("cv-serial") { ", serial sweep" } else { "" },
     );
-    if out.nonfinite_points > 0 {
-        println!(
-            "warning: {} grid point(s) with non-finite MSE skipped in model selection",
-            out.nonfinite_points
-        );
-    }
+    check_cv_grid(&out)?;
     println!(
         "best: α={:.4}  λ/λmax={:.4}  mse={:.6}  mean nnz={:.1}",
         out.best.alpha, out.best.lambda_ratio, out.best.mse, out.best.mean_nnz
@@ -487,6 +597,27 @@ fn cmd_cv(args: &Args) -> Result<i32> {
         fmt_duration(wall)
     );
     Ok(0)
+}
+
+/// Post-CV grid verdict: a partially non-finite grid is a warning (those
+/// points are skipped in model selection), but a grid with *no* finite
+/// point means `best` is meaningless — fail loudly with a nonzero exit
+/// instead of reporting a garbage model.
+fn check_cv_grid(out: &CvOutput) -> Result<()> {
+    if out.nonfinite_points > 0 {
+        println!(
+            "warning: {} grid point(s) with non-finite MSE skipped in model selection",
+            out.nonfinite_points
+        );
+    }
+    if !out.points.is_empty() && out.nonfinite_points == out.points.len() {
+        bail!(
+            "cross-validation failed: all {} (α, λ) grid points have non-finite held-out MSE — \
+             the data or solves are degenerate, there is no model to select",
+            out.points.len()
+        );
+    }
+    Ok(())
 }
 
 /// Dispatch CV on the sharded or serial sweep (same output bitwise).
@@ -694,5 +825,40 @@ mod tests {
             assert_eq!(scaled(10_000, s) % 10, 0);
         }
         assert_eq!(scaled(10_000, 1.0), 10_000);
+    }
+
+    #[test]
+    fn coef_hex_dump_is_bit_exact() {
+        let betas = vec![vec![0.0f32, 1.0, -2.5], vec![f32::MIN_POSITIVE, 0.0, 0.0]];
+        let dump = coef_hex_dump(&betas);
+        // 1.0f32 = 0x3f800000, -2.5f32 = 0xc0200000, MIN_POSITIVE = 0x00800000.
+        assert_eq!(dump, "00000000 3f800000 c0200000\n00800000 00000000 00000000\n");
+        // Bit patterns round-trip: the dump distinguishes -0.0 from 0.0.
+        assert!(coef_hex_dump(&[vec![-0.0f32]]).starts_with("80000000"));
+    }
+
+    #[test]
+    fn cv_all_nonfinite_grid_is_an_error() {
+        use crate::coordinator::cross_validate_serial;
+        // One +∞ response poisons every grid point's cross-fold MSE sum
+        // (each fold holds row 0 out exactly once). n_lambda = 1 keeps the
+        // path at the analytic β ≡ 0 step, so no solver runs on the
+        // poisoned training folds; all-nonzero X keeps λmax at +∞ (not
+        // NaN) in the folds that train on row 0.
+        let (n, p) = (12, 40);
+        let x = DenseMatrix::from_fn(n, p, |i, j| 0.1 + ((i * p + j) % 7) as f32 * 0.05);
+        let mut y: Vec<f32> = (0..n).map(|i| i as f32 * 0.3 - 1.0).collect();
+        y[0] = f32::INFINITY;
+        let g = GroupStructure::uniform(p, 4);
+        let pc = PathConfig { n_lambda: 1, lambda_min_ratio: 0.5, ..Default::default() };
+        let out = cross_validate_serial(&x, &y, &g, &[1.0], 3, &pc, 9);
+        assert_eq!(out.nonfinite_points, out.points.len());
+        assert!(!out.points.is_empty());
+        let err = check_cv_grid(&out).unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite held-out MSE"), "{err:#}");
+        // A partially finite grid is only a warning, not an error.
+        let mut partial = out.clone();
+        partial.nonfinite_points = partial.points.len() - 1;
+        assert!(check_cv_grid(&partial).is_ok());
     }
 }

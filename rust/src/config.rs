@@ -207,6 +207,7 @@ impl Config {
             lipschitz_refresh_every: self.lipschitz_refresh_every,
             parallel_bcd_groups: self.parallel_bcd_groups,
             screen: self.screen,
+            max_seconds: None,
         }
     }
 }

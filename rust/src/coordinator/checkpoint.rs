@@ -1,0 +1,824 @@
+//! Kill-safe checkpoint/resume for TLFre path runs (`TLFRECK1` sidecar).
+//!
+//! [`run_tlfre_path_checkpointed`] walks the same grid as
+//! `run_tlfre_path`, but every K completed grid points it atomically
+//! writes a sidecar file capturing everything a fresh process needs to
+//! continue the walk **bitwise identically**: the completed per-λ step
+//! records, one full-space β per completed λ, and the engine's mutable
+//! state (the warm-started β is the last per-λ β; the Lipschitz
+//! refreshers' cadence counters, masks and cached values ride along — see
+//! `coordinator::driver::EngineSnapshot` for why that is the complete
+//! list). A run relaunched with [`CheckpointOptions::resume`] replays the
+//! recorded prefix, restores the engine, and continues from the next grid
+//! point; `tests/checkpoint_resume.rs` asserts the continuation equals an
+//! uninterrupted run coefficient-for-coefficient at every worker count.
+//!
+//! ## Format
+//!
+//! Little-endian, same header-validation discipline as the `TLFREDS1`
+//! dataset container (`data::io`): magic and version first, then a
+//! fixed-size header whose every field is range-checked — and checked
+//! against the resuming run's problem/config fingerprint — before any
+//! payload allocation, then a length-validated payload parsed by a
+//! bounds-checked cursor. A truncated, corrupt, or wrong-config file
+//! yields a typed error, never garbage state.
+//!
+//! ```text
+//! magic[8]=TLFRECK1 | version u32
+//! | n u64 | p u64 | g u64 | n_lambda u64 | completed u64
+//! | alpha f64 | lambda_min_ratio f64 | tol f64 | gap_inflation f64
+//! | lambda_max f64 | solver u8 | screen u8 | flags u8 | has_scalar u8
+//! | has_group u8 | pad[3] | refresh u64 | max_iter u64
+//! | screen_total_s f64 | solve_total_s f64 | payload_len u64
+//! ```
+//!
+//! The payload holds the optional refresher snapshots followed by
+//! `completed` step records, each a fixed-field `PathStep` plus its
+//! per-rule layer counts and that step's full-space β (`p × f32`).
+//! Floats round-trip by bit pattern (NaN refresher slots mean "never
+//! computed" and are preserved exactly).
+//!
+//! ## Atomicity and crash windows
+//!
+//! Checkpoints are written to a `.tmp` sibling and renamed into place, so
+//! a kill mid-write leaves either the previous complete checkpoint or
+//! none — never a partial file at the target path. A kill *between*
+//! checkpoints loses at most `every − 1` completed grid points; resume
+//! recomputes them from the restored state, and because every kernel in
+//! the path is deterministic the recomputed steps are bitwise identical
+//! to the lost ones. See the "Failure modes & recovery" notes in
+//! [`super`] (the coordinator module docs).
+
+use super::driver::{Checkpointable, EngineSnapshot, PathEngine, TlfreEngine};
+use super::path::log_lambda_grid;
+use super::runner::{PathConfig, PathOutput, PathStep, SolverKind};
+use crate::bail;
+use crate::error::{Context, Result};
+use crate::groups::GroupStructure;
+use crate::linalg::DesignMatrix;
+use crate::screening::rule::{LayerCount, Safety, ScreenKind};
+use crate::sgl::fista::deadline_passed;
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"TLFRECK1";
+const VERSION: u32 = 1;
+/// Upper bound on per-step layer records — the built-in pipelines hold at
+/// most two rules; anything larger in a file is corruption.
+const MAX_LAYERS: usize = 64;
+
+/// How a checkpointed path run writes and (optionally) resumes its sidecar.
+#[derive(Debug, Clone)]
+pub struct CheckpointOptions {
+    /// Sidecar file path. Written atomically (temp sibling + rename); the
+    /// temp sibling is `<file_name>.tmp` next to it.
+    pub path: PathBuf,
+    /// Save cadence in completed grid points (clamped to ≥ 1). A final
+    /// checkpoint is always written when the grid completes.
+    pub every: usize,
+    /// Load `path` and continue the recorded run instead of starting over.
+    /// The file's problem/config fingerprint must match this run exactly;
+    /// a mismatch is a typed error, not a silent restart.
+    pub resume: bool,
+    /// Stop cleanly once this many total grid points are completed — the
+    /// fault-injection hook behind the kill-and-resume tests and the
+    /// checkpoint-overhead bench (a deterministic stand-in for `kill -9`
+    /// that still exercises the exact save/restore path). `None` runs the
+    /// whole grid.
+    pub stop_after: Option<usize>,
+}
+
+impl CheckpointOptions {
+    /// Options for a fresh checkpointed run with the default cadence
+    /// (every 5 grid points).
+    pub fn new(path: impl Into<PathBuf>) -> CheckpointOptions {
+        CheckpointOptions { path: path.into(), every: 5, resume: false, stop_after: None }
+    }
+}
+
+/// The problem/config fingerprint stored in every checkpoint and required
+/// to match bit-for-bit on resume. λmax is part of it: it is a
+/// deterministic function of (X, y, α), so it doubles as a cheap content
+/// check on the dataset itself.
+#[derive(Debug)]
+struct CheckpointKey {
+    n: u64,
+    p: u64,
+    n_groups: u64,
+    n_lambda: u64,
+    alpha: f64,
+    lambda_min_ratio: f64,
+    tol: f64,
+    gap_inflation: f64,
+    lambda_max: f64,
+    solver: u8,
+    screen: u8,
+    /// Bit 0 `verify_safety`, 1 `materialize_reduced`, 2
+    /// `exact_view_lipschitz`, 3 `parallel_bcd_groups`.
+    flags: u8,
+    /// `lipschitz_refresh_every` (0 = disabled).
+    refresh: u64,
+    max_iter: u64,
+}
+
+fn solver_id(s: SolverKind) -> u8 {
+    match s {
+        SolverKind::Fista => 0,
+        SolverKind::Bcd => 1,
+    }
+}
+
+fn screen_id(s: ScreenKind) -> u8 {
+    match s {
+        ScreenKind::Tlfre => 0,
+        ScreenKind::TlfreGap => 1,
+        ScreenKind::Gap => 2,
+        ScreenKind::StrongKkt => 3,
+        ScreenKind::None => 4,
+    }
+}
+
+fn rule_id(name: &str) -> Result<u8> {
+    match name {
+        "tlfre" => Ok(0),
+        "gap" => Ok(1),
+        "strong" => Ok(2),
+        other => Err(crate::anyhow!(
+            "checkpointing supports the built-in screening rules only (got rule {other:?})"
+        )),
+    }
+}
+
+fn rule_name(id: u8) -> Result<&'static str> {
+    match id {
+        0 => Ok("tlfre"),
+        1 => Ok("gap"),
+        2 => Ok("strong"),
+        other => Err(crate::anyhow!("corrupt checkpoint: unknown rule id {other}")),
+    }
+}
+
+impl CheckpointKey {
+    fn new(
+        n: usize,
+        p: usize,
+        n_groups: usize,
+        cfg: &PathConfig,
+        lambda_max: f64,
+    ) -> CheckpointKey {
+        CheckpointKey {
+            n: n as u64,
+            p: p as u64,
+            n_groups: n_groups as u64,
+            n_lambda: cfg.n_lambda as u64,
+            alpha: cfg.alpha,
+            lambda_min_ratio: cfg.lambda_min_ratio,
+            tol: cfg.tol,
+            gap_inflation: cfg.gap_inflation,
+            lambda_max,
+            solver: solver_id(cfg.solver),
+            screen: screen_id(cfg.screen),
+            flags: (cfg.verify_safety as u8)
+                | (cfg.materialize_reduced as u8) << 1
+                | (cfg.exact_view_lipschitz as u8) << 2
+                | (cfg.parallel_bcd_groups as u8) << 3,
+            refresh: cfg.lipschitz_refresh_every.map_or(0, |k| k as u64),
+            max_iter: cfg.max_iter as u64,
+        }
+    }
+
+    /// Compare against a loaded key; f64 fields compare by bit pattern
+    /// (resume parity needs the exact same grid, not an approximately
+    /// equal one).
+    fn matches(&self, other: &CheckpointKey) -> bool {
+        self.n == other.n
+            && self.p == other.p
+            && self.n_groups == other.n_groups
+            && self.n_lambda == other.n_lambda
+            && self.alpha.to_bits() == other.alpha.to_bits()
+            && self.lambda_min_ratio.to_bits() == other.lambda_min_ratio.to_bits()
+            && self.tol.to_bits() == other.tol.to_bits()
+            && self.gap_inflation.to_bits() == other.gap_inflation.to_bits()
+            && self.lambda_max.to_bits() == other.lambda_max.to_bits()
+            && self.solver == other.solver
+            && self.screen == other.screen
+            && self.flags == other.flags
+            && self.refresh == other.refresh
+            && self.max_iter == other.max_iter
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary encode/decode
+// ---------------------------------------------------------------------------
+
+/// Little-endian append-only encoder (checkpoints are built in RAM and
+/// written in one atomic pass).
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f32s(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn bools(&mut self, bs: &[bool]) {
+        self.buf.extend(bs.iter().map(|&b| b as u8));
+    }
+}
+
+/// Bounds-checked little-endian cursor: every read is validated against
+/// the remaining buffer, so a truncated file fails with a typed error at
+/// the exact field — and nothing is allocated past what the buffer can
+/// actually back.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!(
+                "corrupt checkpoint: truncated while reading {what} \
+                 (need {n} bytes at offset {}, have {})",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let bytes = self.take(n * 4, what)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f64s(&mut self, n: usize, what: &str) -> Result<Vec<f64>> {
+        let bytes = self.take(n * 8, what)?;
+        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn bools(&mut self, n: usize, what: &str) -> Result<Vec<bool>> {
+        let bytes = self.take(n, what)?;
+        let mut out = Vec::with_capacity(n);
+        for &b in bytes {
+            match b {
+                0 => out.push(false),
+                1 => out.push(true),
+                other => bail!("corrupt checkpoint: invalid boolean byte {other} in {what}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn enc_step(e: &mut Enc, s: &PathStep) -> Result<()> {
+    e.f64(s.lambda);
+    e.f64(s.r1);
+    e.f64(s.r2);
+    e.f64(s.screen_s);
+    e.f64(s.solve_s);
+    e.u64(s.active_features as u64);
+    e.u64(s.iters as u64);
+    e.f64(s.gap);
+    e.u64(s.zeros as u64);
+    e.u64(s.nonzeros as u64);
+    e.u64(s.groups_rejected as u64);
+    e.u64(s.features_rejected as u64);
+    e.u64(s.dynamic_evicted as u64);
+    e.u64(s.kkt_readmitted as u64);
+    e.u8(s.budget_exhausted as u8);
+    e.f64(s.certified_suboptimality);
+    e.u64(s.layers.len() as u64);
+    for l in &s.layers {
+        e.u8(rule_id(l.rule)?);
+        e.u8(match l.safety {
+            Safety::Safe => 0,
+            Safety::Heuristic => 1,
+        });
+        e.u64(l.groups as u64);
+        e.u64(l.features as u64);
+    }
+    Ok(())
+}
+
+fn dec_step(d: &mut Dec<'_>) -> Result<PathStep> {
+    let lambda = d.f64("step.lambda")?;
+    let r1 = d.f64("step.r1")?;
+    let r2 = d.f64("step.r2")?;
+    let screen_s = d.f64("step.screen_s")?;
+    let solve_s = d.f64("step.solve_s")?;
+    let active_features = d.u64("step.active_features")? as usize;
+    let iters = d.u64("step.iters")? as usize;
+    let gap = d.f64("step.gap")?;
+    let zeros = d.u64("step.zeros")? as usize;
+    let nonzeros = d.u64("step.nonzeros")? as usize;
+    let groups_rejected = d.u64("step.groups_rejected")? as usize;
+    let features_rejected = d.u64("step.features_rejected")? as usize;
+    let dynamic_evicted = d.u64("step.dynamic_evicted")? as usize;
+    let kkt_readmitted = d.u64("step.kkt_readmitted")? as usize;
+    let budget_exhausted = match d.u8("step.budget_exhausted")? {
+        0 => false,
+        1 => true,
+        other => bail!("corrupt checkpoint: invalid budget flag {other}"),
+    };
+    let certified_suboptimality = d.f64("step.certified_suboptimality")?;
+    let n_layers = d.u64("step.n_layers")? as usize;
+    if n_layers > MAX_LAYERS {
+        bail!("corrupt checkpoint: implausible layer count {n_layers}");
+    }
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let rule = rule_name(d.u8("layer.rule")?)?;
+        let safety = match d.u8("layer.safety")? {
+            0 => Safety::Safe,
+            1 => Safety::Heuristic,
+            other => bail!("corrupt checkpoint: invalid safety byte {other}"),
+        };
+        let groups = d.u64("layer.groups")? as usize;
+        let features = d.u64("layer.features")? as usize;
+        layers.push(LayerCount { rule, safety, groups, features });
+    }
+    Ok(PathStep {
+        lambda,
+        r1,
+        r2,
+        screen_s,
+        solve_s,
+        active_features,
+        iters,
+        gap,
+        zeros,
+        nonzeros,
+        groups_rejected,
+        features_rejected,
+        layers,
+        dynamic_evicted,
+        kkt_readmitted,
+        budget_exhausted,
+        certified_suboptimality,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Save / load
+// ---------------------------------------------------------------------------
+
+/// Everything a resume needs, exactly as recorded.
+struct LoadedState {
+    scalar: Option<(usize, Vec<bool>, Option<f64>)>,
+    group: Option<(usize, Vec<bool>, Vec<f64>)>,
+    steps: Vec<PathStep>,
+    betas: Vec<Vec<f32>>,
+    screen_total_s: f64,
+    solve_total_s: f64,
+}
+
+fn temp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_else(|| "checkpoint".as_ref()).to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+fn save_checkpoint(
+    path: &Path,
+    key: &CheckpointKey,
+    snap: &EngineSnapshot,
+    steps: &[PathStep],
+    betas: &[Vec<f32>],
+    screen_total_s: f64,
+    solve_total_s: f64,
+) -> Result<()> {
+    debug_assert_eq!(steps.len(), betas.len());
+    // The engine's live β is by construction the last per-step β (the sink
+    // contract streams it after every scatter), so only the per-step βs are
+    // stored and restore rehydrates the engine from the last one.
+    debug_assert!(betas.last().is_some_and(|b| b == &snap.beta));
+    let p = key.p as usize;
+    let mut body = Enc { buf: Vec::new() };
+    match &snap.scalar {
+        Some((since, mask, value)) => {
+            body.u8(1);
+            body.u64(*since as u64);
+            body.bools(mask);
+            body.u8(value.is_some() as u8);
+            body.f64(value.unwrap_or(0.0));
+        }
+        None => body.u8(0),
+    }
+    match &snap.group {
+        Some((since, mask, values)) => {
+            body.u8(1);
+            body.u64(*since as u64);
+            body.bools(mask);
+            for &v in values {
+                body.f64(v);
+            }
+        }
+        None => body.u8(0),
+    }
+    for (s, b) in steps.iter().zip(betas) {
+        debug_assert_eq!(b.len(), p);
+        enc_step(&mut body, s)?;
+        body.f32s(b);
+    }
+
+    let mut e = Enc { buf: Vec::with_capacity(128 + body.buf.len()) };
+    e.buf.extend_from_slice(MAGIC);
+    e.u32(VERSION);
+    e.u64(key.n);
+    e.u64(key.p);
+    e.u64(key.n_groups);
+    e.u64(key.n_lambda);
+    e.u64(steps.len() as u64);
+    e.f64(key.alpha);
+    e.f64(key.lambda_min_ratio);
+    e.f64(key.tol);
+    e.f64(key.gap_inflation);
+    e.f64(key.lambda_max);
+    e.u8(key.solver);
+    e.u8(key.screen);
+    e.u8(key.flags);
+    e.u8(snap.scalar.is_some() as u8);
+    e.u8(snap.group.is_some() as u8);
+    e.u8(0);
+    e.u8(0);
+    e.u8(0);
+    e.u64(key.refresh);
+    e.u64(key.max_iter);
+    e.f64(screen_total_s);
+    e.f64(solve_total_s);
+    e.u64(body.buf.len() as u64);
+    e.buf.extend_from_slice(&body.buf);
+
+    let tmp = temp_sibling(path);
+    std::fs::write(&tmp, &e.buf).with_context(|| format!("writing checkpoint {tmp:?}"))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing checkpoint {tmp:?} -> {path:?}"))?;
+    Ok(())
+}
+
+fn load_checkpoint(path: &Path, key: &CheckpointKey) -> Result<LoadedState> {
+    let buf =
+        std::fs::read(path).with_context(|| format!("reading checkpoint {path:?}"))?;
+    let mut d = Dec { buf: &buf, pos: 0 };
+    if d.take(8, "magic")? != MAGIC {
+        bail!("{path:?}: not a TLFre checkpoint (bad magic)");
+    }
+    let version = d.u32("version")?;
+    if version != VERSION {
+        bail!("{path:?}: unsupported checkpoint version {version}");
+    }
+    let n = d.u64("n")?;
+    let p = d.u64("p")?;
+    let n_groups = d.u64("n_groups")?;
+    let n_lambda = d.u64("n_lambda")?;
+    let completed = d.u64("completed")? as usize;
+    // Same plausibility envelope as the dataset loader: reject absurd
+    // dimensions before they can size any allocation.
+    if n == 0 || p == 0 || n_groups == 0 || n > 1 << 24 || p > 1 << 28 || n_groups > p {
+        bail!("{path:?}: implausible checkpoint dimensions {n}×{p} ({n_groups} groups)");
+    }
+    let stored = CheckpointKey {
+        n,
+        p,
+        n_groups,
+        n_lambda,
+        alpha: d.f64("alpha")?,
+        lambda_min_ratio: d.f64("lambda_min_ratio")?,
+        tol: d.f64("tol")?,
+        gap_inflation: d.f64("gap_inflation")?,
+        lambda_max: d.f64("lambda_max")?,
+        solver: d.u8("solver")?,
+        screen: d.u8("screen")?,
+        flags: d.u8("flags")?,
+        refresh: 0,
+        max_iter: 0,
+    };
+    let has_scalar = d.u8("has_scalar")? != 0;
+    let has_group = d.u8("has_group")? != 0;
+    d.take(3, "pad")?;
+    let stored =
+        CheckpointKey { refresh: d.u64("refresh")?, max_iter: d.u64("max_iter")?, ..stored };
+    if !key.matches(&stored) {
+        bail!(
+            "{path:?}: checkpoint was written for a different problem or config \
+             (stored {stored:?}, this run {key:?}); refusing to resume"
+        );
+    }
+    if completed == 0 || completed > key.n_lambda as usize {
+        bail!("{path:?}: corrupt checkpoint (completed={completed} of {})", key.n_lambda);
+    }
+    let screen_total_s = d.f64("screen_total_s")?;
+    let solve_total_s = d.f64("solve_total_s")?;
+    let payload_len = d.u64("payload_len")? as usize;
+    if buf.len() - d.pos != payload_len {
+        bail!(
+            "{path:?}: corrupt checkpoint (payload length {} recorded, {} present)",
+            payload_len,
+            buf.len() - d.pos
+        );
+    }
+    let p = p as usize;
+    let scalar = if has_scalar {
+        let since = d.u64("scalar.since")? as usize;
+        let mask = d.bools(p, "scalar.mask")?;
+        let has_value = d.u8("scalar.has_value")? != 0;
+        let value = d.f64("scalar.value")?;
+        Some((since, mask, has_value.then_some(value)))
+    } else {
+        None
+    };
+    let group = if has_group {
+        let since = d.u64("group.since")? as usize;
+        let mask = d.bools(p, "group.mask")?;
+        let values = d.f64s(n_groups as usize, "group.values")?;
+        Some((since, mask, values))
+    } else {
+        None
+    };
+    let mut steps = Vec::with_capacity(completed);
+    let mut betas = Vec::with_capacity(completed);
+    for _ in 0..completed {
+        steps.push(dec_step(&mut d)?);
+        betas.push(d.f32s(p, "step.beta")?);
+    }
+    if d.pos != buf.len() {
+        bail!("{path:?}: corrupt checkpoint ({} trailing bytes)", buf.len() - d.pos);
+    }
+    Ok(LoadedState { scalar, group, steps, betas, screen_total_s, solve_total_s })
+}
+
+// ---------------------------------------------------------------------------
+// The checkpointed driver loop
+// ---------------------------------------------------------------------------
+
+fn drive_checkpointed<E>(
+    mut engine: E,
+    key: CheckpointKey,
+    opts: &CheckpointOptions,
+) -> Result<(PathOutput, Vec<Vec<f32>>)>
+where
+    E: PathEngine<Step = PathStep> + Checkpointable,
+{
+    let every = opts.every.max(1);
+    let lambda_max = engine.lambda_max();
+    let (min_ratio, n_lambda) = engine.grid_shape();
+    let grid = log_lambda_grid(lambda_max, min_ratio, n_lambda);
+
+    let mut steps: Vec<PathStep>;
+    let mut betas: Vec<Vec<f32>>;
+    let mut screen_total: f64;
+    let mut solve_total: f64;
+    if opts.resume {
+        let st = load_checkpoint(&opts.path, &key)
+            .with_context(|| format!("resuming from {:?}", opts.path))?;
+        let beta = st.betas.last().expect("load_checkpoint guarantees completed ≥ 1").clone();
+        engine.restore(EngineSnapshot { beta, scalar: st.scalar, group: st.group });
+        steps = st.steps;
+        betas = st.betas;
+        // Recorded prefix wall time plus this process's reconstruction
+        // preamble (both were really spent; timings are not parity fields).
+        screen_total = st.screen_total_s + engine.preamble_s();
+        solve_total = st.solve_total_s;
+    } else {
+        steps = Vec::with_capacity(grid.len());
+        betas = Vec::with_capacity(grid.len());
+        let first = engine.zero_step(grid[0]);
+        betas.push(engine.beta().to_vec());
+        steps.push(first);
+        screen_total = engine.preamble_s();
+        solve_total = 0.0;
+    }
+
+    let deadline = engine.deadline();
+    let mut truncated = false;
+    let mut completed = steps.len();
+    let mut lambda_bar = grid[completed - 1];
+    while completed < grid.len() {
+        if opts.stop_after.is_some_and(|k| completed >= k) {
+            truncated = true;
+            break;
+        }
+        if deadline_passed(deadline) {
+            truncated = true;
+            break;
+        }
+        let lambda = grid[completed];
+        let es = engine.step(lambda, lambda_bar);
+        screen_total += es.screen_s;
+        solve_total += es.solve_s;
+        steps.push(es.step);
+        betas.push(engine.beta().to_vec());
+        lambda_bar = lambda;
+        completed += 1;
+        if completed % every == 0 || completed == grid.len() {
+            save_checkpoint(
+                &opts.path,
+                &key,
+                &engine.snapshot(),
+                &steps,
+                &betas,
+                screen_total,
+                solve_total,
+            )?;
+        }
+    }
+
+    Ok((
+        PathOutput {
+            lambda_max,
+            steps,
+            screen_total_s: screen_total,
+            solve_total_s: solve_total,
+            truncated,
+        },
+        betas,
+    ))
+}
+
+/// `run_tlfre_path` with kill-safe checkpointing: atomically saves a
+/// resumable sidecar every [`CheckpointOptions::every`] completed grid
+/// points, and with [`CheckpointOptions::resume`] continues a previously
+/// killed run — bitwise identical, per-step stats and per-λ coefficients
+/// both, to the run never having been interrupted (see the module docs
+/// for what the sidecar captures and why that list is sufficient).
+/// Returns the path output plus one full-space β per completed λ.
+pub fn run_tlfre_path_checkpointed<M: DesignMatrix>(
+    x: &M,
+    y: &[f32],
+    groups: &GroupStructure,
+    cfg: &PathConfig,
+    opts: &CheckpointOptions,
+) -> Result<(PathOutput, Vec<Vec<f32>>)> {
+    let engine = TlfreEngine::new(x, y, groups, cfg);
+    let key =
+        CheckpointKey::new(x.rows(), x.cols(), groups.n_groups(), cfg, engine.lambda_max());
+    drive_checkpointed(engine, key, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate_synthetic, SyntheticSpec};
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("tlfre_ckpt_{}_{}", std::process::id(), name));
+        p
+    }
+
+    fn cfg() -> PathConfig {
+        PathConfig {
+            alpha: 1.0,
+            n_lambda: 8,
+            lambda_min_ratio: 0.05,
+            tol: 1e-6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn full_run_then_resume_is_a_replay() {
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 100, 10), 711);
+        let path = tmp("replay.ck");
+        let opts = CheckpointOptions { every: 3, ..CheckpointOptions::new(&path) };
+        let (a, ab) =
+            run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &cfg(), &opts).unwrap();
+        assert!(!a.truncated);
+        assert_eq!(a.steps.len(), 8);
+        // Resuming a *completed* run replays the recorded path verbatim.
+        let ropts = CheckpointOptions { resume: true, ..opts };
+        let (b, bb) =
+            run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &cfg(), &ropts).unwrap();
+        assert_eq!(a.steps.len(), b.steps.len());
+        for (x, y) in ab.iter().zip(&bb) {
+            assert_eq!(x, y);
+        }
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(sa.lambda.to_bits(), sb.lambda.to_bits());
+            assert_eq!(sa.gap.to_bits(), sb.gap.to_bits());
+            assert_eq!(sa.nonzeros, sb.nonzeros);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stop_and_resume_matches_uninterrupted() {
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 100, 10), 712);
+        let reference = crate::coordinator::runner::run_tlfre_path_with_coefficients(
+            &ds.x, &ds.y, &ds.groups, &cfg(),
+        );
+        let path = tmp("kill.ck");
+        let opts = CheckpointOptions {
+            every: 2,
+            stop_after: Some(5),
+            ..CheckpointOptions::new(&path)
+        };
+        let (first, _) =
+            run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &cfg(), &opts).unwrap();
+        assert!(first.truncated);
+        assert_eq!(first.steps.len(), 5);
+        // stop_after=5, every=2 → last save held 4 steps; the resume must
+        // recompute the lost 5th bitwise identically and run to the end.
+        let ropts = CheckpointOptions { resume: true, stop_after: None, ..opts };
+        let (out, betas) =
+            run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &cfg(), &ropts).unwrap();
+        assert!(!out.truncated);
+        assert_eq!(out.steps.len(), reference.0.steps.len());
+        for (a, b) in betas.iter().zip(&reference.1) {
+            assert_eq!(a, b, "resumed β diverged from uninterrupted run");
+        }
+        for (sa, sb) in out.steps.iter().zip(&reference.0.steps) {
+            assert_eq!(sa.lambda.to_bits(), sb.lambda.to_bits());
+            assert_eq!(sa.iters, sb.iters);
+            assert_eq!(sa.gap.to_bits(), sb.gap.to_bits());
+            assert_eq!(sa.active_features, sb.active_features);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn config_mismatch_is_a_typed_error() {
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(20, 60, 6), 713);
+        let path = tmp("mismatch.ck");
+        let opts =
+            CheckpointOptions { every: 2, stop_after: Some(4), ..CheckpointOptions::new(&path) };
+        run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &cfg(), &opts).unwrap();
+        let other = PathConfig { tol: 1e-4, ..cfg() };
+        let ropts = CheckpointOptions { resume: true, stop_after: None, ..opts };
+        let err = run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &other, &ropts)
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("different problem or config"),
+            "unexpected error: {err:#}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_file_is_a_typed_error() {
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(20, 60, 6), 714);
+        let path = tmp("trunc.ck");
+        let opts =
+            CheckpointOptions { every: 2, stop_after: Some(4), ..CheckpointOptions::new(&path) };
+        run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &cfg(), &opts).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+        let ropts = CheckpointOptions { resume: true, stop_after: None, ..opts };
+        let err = run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &cfg(), &ropts)
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("corrupt checkpoint"), "unexpected error: {msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_is_a_typed_error() {
+        let path = tmp("magic.ck");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxx").unwrap();
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(20, 60, 6), 715);
+        let ropts = CheckpointOptions { resume: true, ..CheckpointOptions::new(&path) };
+        let err = run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &cfg(), &ropts)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("bad magic"));
+        std::fs::remove_file(&path).ok();
+    }
+}

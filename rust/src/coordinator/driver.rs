@@ -106,6 +106,11 @@ pub struct PathTotals {
     pub screen_total_s: f64,
     /// Total solver time.
     pub solve_total_s: f64,
+    /// True when the engine's wall-clock budget
+    /// ([`PathConfig::max_seconds`]) stopped the grid walk before the last
+    /// grid point: the sink saw a clean completed prefix of the path and
+    /// nothing half-done.
+    pub truncated: bool,
 }
 
 /// One engine step: the family-specific record plus its timings.
@@ -138,6 +143,17 @@ pub(crate) trait PathEngine {
 
     /// Advance from λ̄ to λ: screen, reduce, solve, scatter.
     fn step(&mut self, lambda: f64, lambda_bar: f64) -> EngineStep<Self::Step>;
+
+    /// Path-level wall-clock deadline, derived once at engine construction
+    /// from the config's budget. The driver refuses to *start* a step past
+    /// it (the completed prefix is returned with
+    /// [`PathTotals::truncated`]); engines additionally hand the same
+    /// deadline to their solvers so a single over-budget solve degrades to
+    /// best-so-far instead of running long. `None` (the default) disables
+    /// both checks.
+    fn deadline(&self) -> Option<std::time::Instant> {
+        None
+    }
 }
 
 /// The single per-λ loop. Streams every step to `sink` and accumulates the
@@ -155,14 +171,23 @@ pub(crate) fn drive<E: PathEngine, K: PathSink<E::Step>>(
     let mut screen_total = engine.preamble_s();
     let mut solve_total = 0.0f64;
     let mut lambda_bar = grid[0];
+    let deadline = engine.deadline();
+    let mut truncated = false;
     for &lambda in &grid[1..] {
+        // Budget check *between* steps: a step either runs to its own
+        // (budget-degraded) completion or does not start, so the sink only
+        // ever sees finished records.
+        if crate::sgl::fista::deadline_passed(deadline) {
+            truncated = true;
+            break;
+        }
         let es = engine.step(lambda, lambda_bar);
         screen_total += es.screen_s;
         solve_total += es.solve_s;
         sink.on_step(&es.step, engine.beta());
         lambda_bar = lambda;
     }
-    PathTotals { lambda_max, screen_total_s: screen_total, solve_total_s: solve_total }
+    PathTotals { lambda_max, screen_total_s: screen_total, solve_total_s: solve_total, truncated }
 }
 
 // ---------------------------------------------------------------------------
@@ -354,6 +379,7 @@ pub(crate) fn solve<M: DesignMatrix>(
     group_lip: Option<&[f64]>,
     coloring: Option<&GroupColoring>,
     dynamic: Option<&RefCell<GapSafeDynamic>>,
+    deadline: Option<std::time::Instant>,
 ) -> crate::sgl::fista::SolveResult {
     match cfg.solver {
         SolverKind::Fista => solve_fista(
@@ -365,6 +391,7 @@ pub(crate) fn solve<M: DesignMatrix>(
                 max_iter: cfg.max_iter,
                 lipschitz: lip,
                 dynamic_screen: dynamic,
+                deadline,
                 ..Default::default()
             },
         ),
@@ -379,6 +406,7 @@ pub(crate) fn solve<M: DesignMatrix>(
                 parallel_groups: cfg.parallel_bcd_groups,
                 coloring,
                 dynamic_screen: dynamic,
+                deadline,
                 ..Default::default()
             },
         ),
@@ -392,6 +420,13 @@ pub(crate) fn solve<M: DesignMatrix>(
 /// Upper bound on KKT recovery rounds for heuristic pipelines (matches
 /// `strong_rule::solve_with_strong_rule`'s historical cap).
 const MAX_KKT_ROUNDS: usize = 16;
+
+/// Resolve a `PathConfig::max_seconds` budget into a wall-clock deadline,
+/// anchored at engine construction (so screening preamble time counts
+/// against the budget too).
+fn path_deadline(max_seconds: Option<f64>) -> Option<std::time::Instant> {
+    max_seconds.map(|s| std::time::Instant::now() + std::time::Duration::from_secs_f64(s))
+}
 
 /// The screened SGL path engine (the paper's Section 6.1 protocol),
 /// parameterized by a composable [`ScreenPipeline`]. The default pipeline
@@ -415,6 +450,8 @@ pub(crate) struct TlfreEngine<'a, M: DesignMatrix> {
     resid: Vec<f32>,
     corr: Vec<f32>,
     preamble_s: f64,
+    /// Wall-clock deadline from `cfg.max_seconds`, fixed at construction.
+    deadline: Option<std::time::Instant>,
 }
 
 impl<'a, M: DesignMatrix> TlfreEngine<'a, M> {
@@ -478,6 +515,7 @@ impl<'a, M: DesignMatrix> TlfreEngine<'a, M> {
             resid: vec![0.0; n],
             corr: vec![0.0; p],
             preamble_s,
+            deadline: path_deadline(cfg.max_seconds),
         }
     }
 
@@ -530,11 +568,17 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
             layers: Vec::new(),
             dynamic_evicted: 0,
             kkt_readmitted: 0,
+            budget_exhausted: false,
+            certified_suboptimality: 0.0,
         }
     }
 
     fn beta(&self) -> &[f32] {
         &self.beta
+    }
+
+    fn deadline(&self) -> Option<std::time::Instant> {
+        self.deadline
     }
 
     fn step(&mut self, lambda: f64, lambda_bar: f64) -> EngineStep<PathStep> {
@@ -638,13 +682,13 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
         // Total solver iterations across recovery rounds — like solve_s,
         // re-solves count toward the step's reported work.
         let mut iters = 0usize;
-        let (active, gap) = loop {
+        let (active, gap, budget_exhausted) = loop {
             rounds += 1;
             let ts = Timer::start();
             let round = match &reduced {
                 None => {
                     self.beta.fill(0.0);
-                    (0usize, 0usize, 0.0f64)
+                    (0usize, 0usize, 0.0f64, false)
                 }
                 Some(red) => {
                     let warm = red.gather(&self.beta);
@@ -690,6 +734,7 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                             round_group_l.as_deref(),
                             None,
                             dyn_state.as_ref(),
+                            self.deadline,
                         )
                     } else {
                         // Zero-copy: the solver runs on the survivor view.
@@ -704,6 +749,7 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                             round_group_l.as_deref(),
                             red_coloring.as_ref(),
                             dyn_state.as_ref(),
+                            self.deadline,
                         )
                     };
                     red.scatter(&res.beta, &mut self.beta);
@@ -715,13 +761,13 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                                 .extend(st.evicted_ids().iter().map(|&k| red.feature_map()[k]));
                         }
                     }
-                    (red.n_features(), res.iters, res.gap)
+                    (red.n_features(), res.iters, res.gap, res.budget_exhausted)
                 }
             };
             solve_s += ts.elapsed_s();
             iters += round.1;
             if self.pipeline.all_safe() || rounds > MAX_KKT_ROUNDS {
-                break (round.0, round.2);
+                break (round.0, round.2, round.3);
             }
             // Heuristic pipeline: check the discarded coordinates' KKT
             // conditions (a screening-correctness cost, charged to the
@@ -730,7 +776,7 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
             let bad = kkt_violations(&self.prob, &params, &self.beta, &outcome);
             screen_s += tk.elapsed_s();
             if bad.is_empty() {
-                break (round.0, round.2);
+                break (round.0, round.2, round.3);
             }
             kkt_readmitted += bad.len();
             for &i in &bad {
@@ -750,6 +796,8 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
         if cfg.verify_safety {
             // Independent full solve; every screened coordinate must be 0.
             // The cached constants are exact for the full problem.
+            // No deadline on the verification solve: a budget-truncated
+            // reference would turn the safety assertions into noise.
             let full = solve(
                 &self.prob,
                 &params,
@@ -758,6 +806,7 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                 self.spectral.lip,
                 self.spectral.group_l.as_deref(),
                 self.spectral.coloring.as_ref(),
+                None,
                 None,
             );
             for j in 0..p {
@@ -801,10 +850,25 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                 layers,
                 dynamic_evicted,
                 kkt_readmitted,
+                budget_exhausted,
+                certified_suboptimality: certify(gap),
             },
             screen_s,
             solve_s,
         }
+    }
+}
+
+/// Map a solver's final duality gap to the step's certified absolute
+/// suboptimality bound: the gap itself when it is a number (clamped at 0 —
+/// tiny negative values are f32 evaluation noise on a converged solve),
+/// `+∞` when the gap evaluation went non-finite (poisoned input; the β the
+/// solver returned then certifies nothing).
+fn certify(gap: f64) -> f64 {
+    if gap.is_finite() {
+        gap.max(0.0)
+    } else {
+        f64::INFINITY
     }
 }
 
@@ -821,6 +885,7 @@ pub(crate) struct BaselineEngine<'a, M: DesignMatrix> {
     group_l: Option<Vec<f64>>,
     coloring: Option<GroupColoring>,
     beta: Vec<f32>,
+    deadline: Option<std::time::Instant>,
 }
 
 impl<'a, M: DesignMatrix> BaselineEngine<'a, M> {
@@ -848,7 +913,16 @@ impl<'a, M: DesignMatrix> BaselineEngine<'a, M> {
             }
             _ => None,
         };
-        BaselineEngine { cfg, prob, lambda_max, lip, group_l, coloring, beta: vec![0.0; p] }
+        BaselineEngine {
+            cfg,
+            prob,
+            lambda_max,
+            lip,
+            group_l,
+            coloring,
+            beta: vec![0.0; p],
+            deadline: path_deadline(cfg.max_seconds),
+        }
     }
 }
 
@@ -887,11 +961,17 @@ impl<M: DesignMatrix> PathEngine for BaselineEngine<'_, M> {
             layers: Vec::new(),
             dynamic_evicted: 0,
             kkt_readmitted: 0,
+            budget_exhausted: false,
+            certified_suboptimality: 0.0,
         }
     }
 
     fn beta(&self) -> &[f32] {
         &self.beta
+    }
+
+    fn deadline(&self) -> Option<std::time::Instant> {
+        self.deadline
     }
 
     fn step(&mut self, lambda: f64, _lambda_bar: f64) -> EngineStep<PathStep> {
@@ -907,6 +987,7 @@ impl<M: DesignMatrix> PathEngine for BaselineEngine<'_, M> {
             self.group_l.as_deref(),
             self.coloring.as_ref(),
             None,
+            self.deadline,
         );
         let solve_s = ts.elapsed_s();
         self.beta = res.beta;
@@ -928,6 +1009,8 @@ impl<M: DesignMatrix> PathEngine for BaselineEngine<'_, M> {
                 layers: Vec::new(),
                 dynamic_evicted: 0,
                 kkt_readmitted: 0,
+                budget_exhausted: res.budget_exhausted,
+                certified_suboptimality: certify(res.gap),
             },
             screen_s: 0.0,
             solve_s,
@@ -1243,6 +1326,60 @@ impl<M: DesignMatrix> PathEngine for DpcBaselineEngine<'_, M> {
             },
             screen_s: 0.0,
             solve_s,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpointing seam
+// ---------------------------------------------------------------------------
+
+/// The mutable engine state a checkpoint must capture for bitwise resume
+/// parity: the warm-started β plus the Lipschitz refreshers' cadence
+/// counters, masks and cached values. Everything else an engine holds is
+/// either borrowed input (X, y, groups, config), a pure function of that
+/// input recomputed identically at reconstruction (λmax, screening
+/// context, spectral cache, coloring), or per-step scratch rebuilt from β
+/// at the top of every step (residual, correlation sweep). Dynamic GAP
+/// state is created fresh per reduced solve and never crosses steps.
+pub(crate) struct EngineSnapshot {
+    pub beta: Vec<f32>,
+    /// [`ScalarRefresher::snapshot`] when the engine runs one (FISTA +
+    /// `lipschitz_refresh_every`).
+    pub scalar: Option<(usize, Vec<bool>, Option<f64>)>,
+    /// [`GroupRefresher::snapshot`] when the engine runs one (BCD +
+    /// `lipschitz_refresh_every`).
+    pub group: Option<(usize, Vec<bool>, Vec<f64>)>,
+}
+
+/// Engines that can round-trip their mutable state through an
+/// [`EngineSnapshot`] — the seam `coordinator::checkpoint` builds
+/// kill-and-resume on. Restoring a snapshot taken after grid step *i* and
+/// continuing from step *i + 1* must be bitwise identical to never having
+/// stopped; the snapshot/restore pair here and the refresher contract in
+/// [`super::refresh`] carry that guarantee.
+pub(crate) trait Checkpointable {
+    fn snapshot(&self) -> EngineSnapshot;
+    fn restore(&mut self, snap: EngineSnapshot);
+}
+
+impl<M: DesignMatrix> Checkpointable for TlfreEngine<'_, M> {
+    fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            beta: self.beta.clone(),
+            scalar: self.scalar_refresh.as_ref().map(|r| r.snapshot()),
+            group: self.group_refresh.as_ref().map(|r| r.snapshot()),
+        }
+    }
+
+    fn restore(&mut self, snap: EngineSnapshot) {
+        assert_eq!(snap.beta.len(), self.beta.len(), "checkpoint β dimension mismatch");
+        self.beta = snap.beta;
+        if let (Some(rf), Some((since, mask, value))) = (&mut self.scalar_refresh, snap.scalar) {
+            rf.restore(since, mask, value);
+        }
+        if let (Some(rf), Some((since, mask, values))) = (&mut self.group_refresh, snap.group) {
+            rf.restore(since, mask, values);
         }
     }
 }

@@ -22,8 +22,46 @@
 //!   sharded across the persistent worker pool with output bitwise
 //!   identical to the serial sweep at every `TLFRE_THREADS`,
 //! * per-step statistics — the paper's rejection ratios r₁/r₂, timings and
-//!   speedups consumed by the bench harness.
+//!   speedups consumed by the bench harness,
+//! * fault tolerance for long paths ([`checkpoint`]): kill-safe
+//!   checkpoint/resume sidecars and wall-clock solve budgets
+//!   ([`PathConfig::max_seconds`]).
+//!
+//! ## Failure modes & recovery
+//!
+//! The path engine is built so that every failure an out-of-core path run
+//! can realistically hit has a defined, tested outcome — a typed error or
+//! a documented degradation, never silent garbage:
+//!
+//! * **Process killed mid-path** — run with a [`checkpoint`] sidecar;
+//!   checkpoints are written atomically (temp sibling + rename), so a kill
+//!   leaves either the previous complete checkpoint or none. Resume loses
+//!   at most `every − 1` completed grid points and recomputes them
+//!   **bitwise identically** (every kernel is deterministic at every
+//!   worker count; the sidecar captures the engine's full mutable state —
+//!   see `driver::EngineSnapshot`).
+//! * **Run over time budget** — [`PathConfig::max_seconds`] derives one
+//!   deadline at engine construction. Solvers check it at gap-check
+//!   cadence and return their best-so-far iterate with `converged = false`
+//!   plus the last measured duality gap; the driver refuses to start a
+//!   step past the deadline. The output is a clean completed prefix
+//!   ([`PathOutput::truncated`]), each step carrying
+//!   [`PathStep::budget_exhausted`] and a finite
+//!   [`PathStep::certified_suboptimality`] bound.
+//! * **Corrupt/mismatched checkpoint** — magic, version, dimensions and
+//!   the full problem/config fingerprint are validated before any
+//!   payload allocation; truncation or edits fail with a typed error
+//!   naming the field.
+//! * **Non-finite data** — [`crate::data::validate`] screens X/y for
+//!   NaN/Inf, zero-norm columns and degenerate groups before any solve;
+//!   if garbage still reaches a solver (e.g. poisoned mid-run), the gap
+//!   check can never satisfy the stopping rule on a NaN, and the solvers
+//!   abort the solve at the next check rather than iterate on it.
+//! * **I/O faults in out-of-core backends** — see `linalg/README.md`
+//!   ("Failure modes & recovery"): short reads and `EINTR` are retried,
+//!   truncation and hard errors are loud.
 
+pub mod checkpoint;
 pub mod cv;
 pub mod dpc_runner;
 pub mod driver;
@@ -41,5 +79,9 @@ pub use driver::{
     drive_baseline_path, drive_dpc_path, drive_nonneg_baseline, drive_tlfre_path,
     drive_tlfre_path_with_pipeline, CoefficientSink, HoldoutSink, PathSink, PathTotals, StepSink,
 };
+pub use checkpoint::{run_tlfre_path_checkpointed, CheckpointOptions};
 pub use path::{alpha_grid_from_angles, log_lambda_grid, PAPER_ALPHA_ANGLES};
-pub use runner::{run_baseline_path, run_tlfre_path, PathConfig, PathOutput, PathStep, SolverKind};
+pub use runner::{
+    run_baseline_path, run_tlfre_path, run_tlfre_path_with_coefficients, PathConfig, PathOutput,
+    PathStep, SolverKind,
+};

@@ -83,6 +83,25 @@ impl ScalarRefresher {
             _ => fallback,
         }
     }
+
+    /// Snapshot for checkpointing: `(since, mask, value)`. Restoring this
+    /// exact tuple makes every subsequent [`Self::step`] decision —
+    /// refresh-due cadence and subset-validity — identical to the
+    /// uninterrupted run, which the bitwise resume-parity guarantee
+    /// depends on.
+    pub fn snapshot(&self) -> (usize, Vec<bool>, Option<f64>) {
+        (self.since, self.mask.clone(), self.value)
+    }
+
+    /// Restore a [`Self::snapshot`] (see there). `every` is not part of
+    /// the snapshot: it is re-derived from `PathConfig`, and a config
+    /// mismatch is rejected before restore by the checkpoint fingerprint.
+    pub fn restore(&mut self, since: usize, mask: Vec<bool>, value: Option<f64>) {
+        assert_eq!(mask.len(), self.mask.len(), "refresher mask dimension mismatch");
+        self.since = since;
+        self.mask = mask;
+        self.value = value;
+    }
 }
 
 /// Amortized refresher for per-group spectral bounds (BCD paths).
@@ -150,6 +169,22 @@ impl GroupRefresher {
                 }
             })
             .collect()
+    }
+
+    /// Snapshot for checkpointing: `(since, mask, values)` — same
+    /// resume-parity contract as [`ScalarRefresher::snapshot`]. NaN
+    /// entries in `values` mean "never computed" and round-trip as NaN.
+    pub fn snapshot(&self) -> (usize, Vec<bool>, Vec<f64>) {
+        (self.since, self.mask.clone(), self.values.clone())
+    }
+
+    /// Restore a [`Self::snapshot`].
+    pub fn restore(&mut self, since: usize, mask: Vec<bool>, values: Vec<f64>) {
+        assert_eq!(mask.len(), self.mask.len(), "refresher mask dimension mismatch");
+        assert_eq!(values.len(), self.values.len(), "refresher group dimension mismatch");
+        self.since = since;
+        self.mask = mask;
+        self.values = values;
     }
 }
 

@@ -18,7 +18,7 @@
 //! attached. Cross-validation attaches a different sink to the *same*
 //! loop, so runner/CV divergence is impossible by construction.
 
-use super::driver::{drive_baseline_path, drive_tlfre_path, StepSink};
+use super::driver::{drive_baseline_path, drive_tlfre_path, PathSink, StepSink};
 use crate::groups::GroupStructure;
 use crate::linalg::DesignMatrix;
 use crate::screening::rule::{LayerCount, ScreenKind};
@@ -104,6 +104,18 @@ pub struct PathConfig {
     /// solve per λ through the same engine). The JSON config key is
     /// `"screen"`, the CLI flag `--screen`.
     pub screen: ScreenKind,
+    /// Wall-clock budget for the whole path, in seconds (`None` = no
+    /// budget, the default). When set, the engine derives one deadline at
+    /// construction and (a) hands it to every solver dispatch, so an
+    /// over-budget solve returns its best-so-far iterate with
+    /// `converged = false` and the last measured duality gap (see
+    /// [`crate::sgl::fista::FistaOptions::deadline`]), and (b) the driver
+    /// stops the grid walk before starting a step past the deadline — the
+    /// output is then a clean completed prefix with
+    /// [`PathOutput::truncated`] set. Budget checks run at the solvers'
+    /// gap-check cadence; bitwise-parity comparisons must leave this
+    /// `None` (wall-clock truncation points are machine-dependent).
+    pub max_seconds: Option<f64>,
 }
 
 impl Default for PathConfig {
@@ -122,6 +134,7 @@ impl Default for PathConfig {
             lipschitz_refresh_every: None,
             parallel_bcd_groups: false,
             screen: ScreenKind::Tlfre,
+            max_seconds: None,
         }
     }
 }
@@ -141,6 +154,9 @@ impl PathConfig {
             self.lambda_min_ratio
         );
         assert!(self.alpha > 0.0, "alpha must be positive, got {}", self.alpha);
+        if let Some(s) = self.max_seconds {
+            assert!(s > 0.0 && s.is_finite(), "max_seconds must be positive, got {s}");
+        }
     }
 }
 
@@ -176,6 +192,18 @@ pub struct PathStep {
     /// Features re-admitted by the KKT recovery loop (heuristic pipelines
     /// only; 0 for safe pipelines).
     pub kkt_readmitted: usize,
+    /// True when this step's solve stopped on a budget — the iteration cap
+    /// or the [`PathConfig::max_seconds`] deadline — instead of reaching
+    /// the gap tolerance. The reported β is the best-so-far iterate and
+    /// [`Self::certified_suboptimality`] bounds how far it can be from the
+    /// optimum.
+    pub budget_exhausted: bool,
+    /// Certified absolute suboptimality bound: the last measured duality
+    /// gap, which upper-bounds `P(β) − P(β*)` for the returned β whether or
+    /// not the solve converged. `0.0` at the exact λmax step; `+∞` when
+    /// the gap evaluation itself went non-finite (poisoned input — the
+    /// solve aborts rather than iterate on garbage, see the solver docs).
+    pub certified_suboptimality: f64,
 }
 
 /// Whole-path output.
@@ -188,6 +216,12 @@ pub struct PathOutput {
     pub screen_total_s: f64,
     /// Total solver time.
     pub solve_total_s: f64,
+    /// True when the path-level wall-clock budget
+    /// ([`PathConfig::max_seconds`]) stopped the grid walk early (or a
+    /// checkpointed run stopped at its configured `stop_after` point):
+    /// `steps` is then a clean completed prefix of the grid — every record
+    /// in it is a finished solve, nothing half-done.
+    pub truncated: bool,
 }
 
 impl PathOutput {
@@ -234,6 +268,51 @@ pub fn run_tlfre_path<M: DesignMatrix>(
         steps: sink.steps,
         screen_total_s: totals.screen_total_s,
         solve_total_s: totals.solve_total_s,
+        truncated: totals.truncated,
+    }
+}
+
+/// [`run_tlfre_path`] that additionally collects one full-space coefficient
+/// vector per completed λ (the CLI's `--coef-out` path, and the reference
+/// side of the kill-and-resume parity checks — β dumps are what make
+/// "bitwise identical" checkable from outside the process).
+pub fn run_tlfre_path_with_coefficients<M: DesignMatrix>(
+    x: &M,
+    y: &[f32],
+    groups: &GroupStructure,
+    cfg: &PathConfig,
+) -> (PathOutput, Vec<Vec<f32>>) {
+    let mut sink = StepAndCoefSink { steps: Vec::new(), betas: Vec::new() };
+    let totals = drive_tlfre_path(x, y, groups, cfg, &mut sink);
+    (
+        PathOutput {
+            lambda_max: totals.lambda_max,
+            steps: sink.steps,
+            screen_total_s: totals.screen_total_s,
+            solve_total_s: totals.solve_total_s,
+            truncated: totals.truncated,
+        },
+        sink.betas,
+    )
+}
+
+/// Collects step records *and* per-λ coefficient vectors in one walk —
+/// the sink behind [`run_tlfre_path_with_coefficients`] and the
+/// checkpointed runner (whose sidecar stores both).
+pub(crate) struct StepAndCoefSink {
+    pub(crate) steps: Vec<PathStep>,
+    pub(crate) betas: Vec<Vec<f32>>,
+}
+
+impl PathSink<PathStep> for StepAndCoefSink {
+    fn on_grid(&mut self, _lambda_max: f64, grid: &[f64]) {
+        self.steps.reserve(grid.len());
+        self.betas.reserve(grid.len());
+    }
+
+    fn on_step(&mut self, step: &PathStep, beta: &[f32]) {
+        self.steps.push(step.clone());
+        self.betas.push(beta.to_vec());
     }
 }
 
@@ -252,6 +331,7 @@ pub fn run_baseline_path<M: DesignMatrix>(
         steps: sink.steps,
         screen_total_s: totals.screen_total_s,
         solve_total_s: totals.solve_total_s,
+        truncated: totals.truncated,
     }
 }
 

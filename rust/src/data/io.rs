@@ -29,6 +29,12 @@
 //!   block size, so arbitrarily large files can be produced (see
 //!   [`crate::data::synthetic::generate_synthetic_streaming`]).
 //!
+//! Both paths write to a `<name>.tmp` sibling and **atomically rename into
+//! place on `finish`**: a crashed or killed write can never leave a partial
+//! file at the target path (a partial file whose length happened to match
+//! some header would otherwise pass [`check_len`] by accident). A writer
+//! dropped without `finish` removes its temp file best-effort.
+//!
 //! [`load`] validates the header *and* the actual file length against the
 //! dimensions before allocating anything, so a truncated or hand-edited
 //! file fails loudly instead of driving an OOM-sized `Vec` or a short map.
@@ -194,17 +200,36 @@ pub fn read_header(path: &Path) -> Result<DatasetHeader> {
     Ok(h)
 }
 
+/// Temp sibling `<name>.tmp` in the target's directory — same filesystem,
+/// so the `finish` rename is atomic.
+fn temp_sibling(path: &Path) -> std::path::PathBuf {
+    let mut name = path
+        .file_name()
+        .map(|s| s.to_os_string())
+        .unwrap_or_else(|| std::ffi::OsString::from("dataset"));
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
 /// Bounded-memory block writer for the `TLFREDS1` layout (see module doc).
+///
+/// Writes stream to a temp sibling; the target path only comes into
+/// existence — complete and length-consistent — at the atomic rename in
+/// [`Self::finish`].
 pub struct DatasetWriter {
     w: BufWriter<std::fs::File>,
     n: usize,
     p: usize,
     has_beta: bool,
     cols_written: usize,
+    tmp_path: std::path::PathBuf,
+    final_path: std::path::PathBuf,
+    finished: bool,
 }
 
 impl DatasetWriter {
-    /// Create `path` and write the header (including the alignment pad).
+    /// Create the temp sibling of `path` and write the header (including
+    /// the alignment pad). `path` itself is untouched until [`Self::finish`].
     pub fn create(
         path: &Path,
         name: &str,
@@ -223,7 +248,9 @@ impl DatasetWriter {
         if name_b.len() > 4096 {
             bail!("DatasetWriter: name too long ({} bytes)", name_b.len());
         }
-        let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        let tmp_path = temp_sibling(path);
+        let f = std::fs::File::create(&tmp_path)
+            .with_context(|| format!("create {tmp_path:?}"))?;
         let mut w = BufWriter::new(f);
         w.write_all(MAGIC)?;
         write_u32(&mut w, name_b.len() as u32)?;
@@ -238,7 +265,16 @@ impl DatasetWriter {
         let header_bytes = 8 + 4 + name_b.len() as u64 + 8 * 3 + 8 * group_sizes.len() as u64 + 1;
         let pad = x_pad(header_bytes);
         w.write_all(&[0u8; 4][..pad as usize])?;
-        Ok(DatasetWriter { w, n, p, has_beta, cols_written: 0 })
+        Ok(DatasetWriter {
+            w,
+            n,
+            p,
+            has_beta,
+            cols_written: 0,
+            tmp_path,
+            final_path: path.to_path_buf(),
+            finished: false,
+        })
     }
 
     /// Append a col-major block of whole columns (`len` multiple of `n`).
@@ -255,8 +291,9 @@ impl DatasetWriter {
         Ok(())
     }
 
-    /// Append `y` (and `beta` when declared) and flush. Fails unless exactly
-    /// `p` columns were streamed.
+    /// Append `y` (and `beta` when declared), flush, and atomically rename
+    /// the temp file onto the target path. Fails unless exactly `p` columns
+    /// were streamed; on failure the target path is never created.
     pub fn finish(mut self, y: &[f32], beta: Option<&[f32]>) -> Result<()> {
         if self.cols_written != self.p {
             bail!("finish: wrote {} of {} columns", self.cols_written, self.p);
@@ -275,7 +312,21 @@ impl DatasetWriter {
             write_f32s(&mut self.w, b)?;
         }
         self.w.flush()?;
+        std::fs::rename(&self.tmp_path, &self.final_path)
+            .with_context(|| format!("rename {:?} into place", self.tmp_path))?;
+        self.finished = true;
         Ok(())
+    }
+}
+
+impl Drop for DatasetWriter {
+    fn drop(&mut self) {
+        // Abandoned (or errored) write: best-effort cleanup of the temp
+        // file. A hard kill skips this, but then only the `.tmp` sibling
+        // is left behind — the target path never holds a partial file.
+        if !self.finished {
+            let _ = std::fs::remove_file(&self.tmp_path);
+        }
     }
 }
 
@@ -444,9 +495,31 @@ mod tests {
     #[test]
     fn block_writer_rejects_wrong_column_count() {
         let path = tmp("short.bin");
+        let _ = std::fs::remove_file(&path);
         let mut w = DatasetWriter::create(&path, "t", 4, 6, &[3, 3], false).unwrap();
         w.write_cols(&vec![0.0; 4 * 2]).unwrap();
         assert!(w.finish(&[0.0; 4], None).is_err());
-        std::fs::remove_file(&path).unwrap();
+        // A failed finish never creates the target, and the errored
+        // writer's drop removed its temp sibling.
+        assert!(!path.exists());
+        assert!(!temp_sibling(&path).exists());
+    }
+
+    #[test]
+    fn unfinished_writer_leaves_no_readable_file() {
+        let path = tmp("killed.bin");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut w = DatasetWriter::create(&path, "t", 4, 6, &[3, 3], false).unwrap();
+            w.write_cols(&vec![0.0; 4 * 3]).unwrap();
+            // Mid-write, the target path must not exist yet — a reader
+            // (or a kill) at this instant can never observe a partial
+            // file there.
+            assert!(!path.exists());
+            assert!(read_header(&path).is_err());
+            // Simulated crash: drop without finish.
+        }
+        assert!(!path.exists(), "abandoned write must not create the target");
+        assert!(!temp_sibling(&path).exists(), "abandoned temp file not cleaned up");
     }
 }

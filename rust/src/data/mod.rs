@@ -7,10 +7,14 @@
 //! equivalents* with matching dimensions and matched screening-relevant
 //! geometry (column-norm spread, correlation structure, group layout,
 //! response construction). DESIGN.md §5 documents each substitution.
+//!
+//! [`validate`] screens inputs (non-finite entries, zero-norm columns,
+//! degenerate groups) with typed errors before any solve touches them.
 
 pub mod io;
 pub mod registry;
 pub mod synthetic;
+pub mod validate;
 
 use crate::groups::GroupStructure;
 use crate::linalg::DenseMatrix;

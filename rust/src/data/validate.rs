@@ -1,0 +1,224 @@
+//! Pre-solve input validation with typed errors.
+//!
+//! A long-running engine cannot let one NaN row poison a whole path solve
+//! (every duality gap goes NaN, every screening radius is garbage, and the
+//! output *looks* like a model), and a zero column or an empty group makes
+//! the screening geometry degenerate (TLFre divides by `‖x_j‖` and
+//! `‖X_g‖`). This module runs **before any solve** and rejects such inputs
+//! with a typed [`DataError`] naming the exact offending coordinate —
+//! never a panic, never silent garbage downstream.
+//!
+//! The X scan is blocked over columns and fanned out on the worker pool
+//! ([`crate::util::pool::parallel_map`]); every chunk is scanned
+//! regardless of where faults sit, and the reported error is the one with
+//! the **lowest column index** (then lowest row), so the outcome is
+//! deterministic at every worker count — the same invariant the solvers
+//! keep for their arithmetic.
+//!
+//! The CLI runs this by default for file-backed inputs (`--file`, where
+//! bytes arrive from outside the process) and on request (`--validate-data`)
+//! for generated ones; `--no-validate` opts out.
+
+use crate::groups::GroupStructure;
+use crate::linalg::DesignMatrix;
+use crate::util::pool;
+
+/// Typed validation failure. Converts into [`crate::error::Error`] via the
+/// blanket `From<E: std::error::Error + Send + Sync>` impl, so call sites
+/// can `?` it straight into the CLI's error chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataError {
+    /// `X[row, col]` is NaN or ±∞.
+    NonFiniteX { col: usize, row: usize },
+    /// `y[row]` is NaN or ±∞.
+    NonFiniteY { row: usize },
+    /// Column `col` of X is identically zero — screening rules divide by
+    /// per-column norms, so the geometry is undefined.
+    ZeroNormColumn { col: usize },
+    /// Group `group` contains no features — group weights `√n_g` and the
+    /// group-level dual norms are undefined.
+    EmptyGroup { group: usize },
+    /// `X` has `x_rows` rows but `y` has `y_len` entries.
+    DimensionMismatch { x_rows: usize, y_len: usize },
+}
+
+impl std::fmt::Display for DataError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            DataError::NonFiniteX { col, row } => {
+                write!(f, "design matrix has a non-finite entry at column {col}, row {row}")
+            }
+            DataError::NonFiniteY { row } => {
+                write!(f, "response vector has a non-finite entry at row {row}")
+            }
+            DataError::ZeroNormColumn { col } => {
+                write!(f, "design-matrix column {col} is identically zero (zero norm)")
+            }
+            DataError::EmptyGroup { group } => {
+                write!(f, "group {group} is empty (zero features)")
+            }
+            DataError::DimensionMismatch { x_rows, y_len } => {
+                write!(f, "design matrix has {x_rows} rows but y has {y_len} entries")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DataError {}
+
+/// Columns per scan chunk. Small enough to spread work across the pool on
+/// mid-size problems, large enough that per-chunk buffer allocation
+/// (`rows` floats) is amortized over many column sweeps.
+const SCAN_BLOCK_COLS: usize = 256;
+
+/// Scan one contiguous column range, returning the lowest-(col, row)
+/// finding inside it (non-finite beats zero-norm within a column — the
+/// non-finite entry is the root cause).
+fn scan_cols<M: DesignMatrix>(x: &M, j0: usize, j1: usize) -> Option<DataError> {
+    let n = x.rows();
+    let mut buf = vec![0.0f32; n];
+    for j in j0..j1 {
+        x.col_to_dense(j, &mut buf);
+        let mut all_zero = true;
+        for (i, &v) in buf.iter().enumerate() {
+            if !v.is_finite() {
+                return Some(DataError::NonFiniteX { col: j, row: i });
+            }
+            if v != 0.0 {
+                all_zero = false;
+            }
+        }
+        if all_zero && n > 0 {
+            return Some(DataError::ZeroNormColumn { col: j });
+        }
+    }
+    None
+}
+
+/// Validate `y` alone: finite everywhere.
+pub fn validate_y(y: &[f32]) -> Result<(), DataError> {
+    match y.iter().position(|v| !v.is_finite()) {
+        Some(row) => Err(DataError::NonFiniteY { row }),
+        None => Ok(()),
+    }
+}
+
+/// Validate a design matrix / response pair: dimensions agree, every entry
+/// of X and y is finite, and no column of X is identically zero. The X
+/// scan is pool-parallel over column blocks; the reported error is
+/// deterministic (lowest column, then lowest row) at every worker count.
+pub fn validate_xy<M: DesignMatrix>(x: &M, y: &[f32]) -> Result<(), DataError> {
+    if x.rows() != y.len() {
+        return Err(DataError::DimensionMismatch { x_rows: x.rows(), y_len: y.len() });
+    }
+    validate_y(y)?;
+    let p = x.cols();
+    let blocks: Vec<(usize, usize)> = (0..p)
+        .step_by(SCAN_BLOCK_COLS.max(1))
+        .map(|j0| (j0, (j0 + SCAN_BLOCK_COLS).min(p)))
+        .collect();
+    // Every block is scanned; the blocks vector is in ascending column
+    // order and parallel_map preserves order, so the first Some is the
+    // lowest-column finding regardless of thread count.
+    let findings = pool::parallel_map(&blocks, |&(j0, j1)| scan_cols(x, j0, j1));
+    match findings.into_iter().flatten().next() {
+        Some(err) => Err(err),
+        None => Ok(()),
+    }
+}
+
+/// [`validate_xy`] plus group-structure degeneracy checks: every group must
+/// contain at least one feature (the structure's covering of `p` columns
+/// is already asserted by construction in [`GroupStructure`]).
+pub fn validate_problem<M: DesignMatrix>(
+    x: &M,
+    y: &[f32],
+    groups: &GroupStructure,
+) -> Result<(), DataError> {
+    for (g, (s, e)) in groups.ranges().iter().enumerate() {
+        if e <= s {
+            return Err(DataError::EmptyGroup { group: g });
+        }
+    }
+    validate_xy(x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+    use crate::util::Rng;
+
+    fn clean(n: usize, p: usize, seed: u64) -> (DenseMatrix, Vec<f32>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let x = DenseMatrix::from_fn(n, p, |_, _| rng.gaussian() as f32);
+        let y: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn clean_data_passes() {
+        let (x, y) = clean(20, 600, 7);
+        let g = GroupStructure::uniform(600, 60);
+        assert_eq!(validate_problem(&x, &y, &g), Ok(()));
+    }
+
+    #[test]
+    fn nan_in_x_reports_lowest_coordinate() {
+        let (x, y) = clean(10, 520, 8);
+        let mut x = x;
+        // Two faults; the lower column must win at every worker count.
+        x.set(3, 500, f32::NAN);
+        x.set(7, 137, f32::INFINITY);
+        assert_eq!(validate_xy(&x, &y), Err(DataError::NonFiniteX { col: 137, row: 7 }));
+    }
+
+    #[test]
+    fn nan_in_y_reported() {
+        let (x, mut y) = clean(12, 30, 9);
+        y[5] = f32::NEG_INFINITY;
+        assert_eq!(validate_xy(&x, &y), Err(DataError::NonFiniteY { row: 5 }));
+    }
+
+    #[test]
+    fn zero_column_reported() {
+        let (x, y) = clean(9, 40, 10);
+        let mut x = x;
+        for i in 0..9 {
+            x.set(i, 17, 0.0);
+        }
+        assert_eq!(validate_xy(&x, &y), Err(DataError::ZeroNormColumn { col: 17 }));
+    }
+
+    #[test]
+    fn nonfinite_beats_zero_norm_in_same_column() {
+        let (x, y) = clean(9, 40, 11);
+        let mut x = x;
+        for i in 0..9 {
+            x.set(i, 17, 0.0);
+        }
+        x.set(4, 17, f32::NAN);
+        assert_eq!(validate_xy(&x, &y), Err(DataError::NonFiniteX { col: 17, row: 4 }));
+    }
+
+    #[test]
+    fn dimension_mismatch_reported() {
+        let (x, y) = clean(10, 20, 12);
+        assert_eq!(
+            validate_xy(&x, &y[..9]),
+            Err(DataError::DimensionMismatch { x_rows: 10, y_len: 9 })
+        );
+    }
+
+    #[test]
+    fn error_converts_into_crate_error() {
+        let (x, mut y) = clean(6, 10, 13);
+        y[0] = f32::NAN;
+        let run = || -> crate::error::Result<()> {
+            validate_xy(&x, &y)?;
+            Ok(())
+        };
+        let err = run().unwrap_err();
+        assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
+    }
+}

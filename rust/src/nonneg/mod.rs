@@ -67,6 +67,12 @@ pub struct NonnegOptions<'a> {
     /// reported in the caller's index space. `None` (default) is the
     /// plain solve.
     pub dynamic_screen: Option<&'a RefCell<GapSafeDynamicNonneg>>,
+    /// Wall-clock deadline for graceful degradation (same contract as
+    /// [`crate::sgl::fista::FistaOptions::deadline`]): checked at gap-check
+    /// cadence after the gap is measured; once past it the solve returns
+    /// best-so-far with `converged = false` and `budget_exhausted = true`.
+    /// `None` (default) never times out.
+    pub deadline: Option<std::time::Instant>,
 }
 
 impl Default for NonnegOptions<'_> {
@@ -77,6 +83,7 @@ impl Default for NonnegOptions<'_> {
             check_every: 10,
             lipschitz: None,
             dynamic_screen: None,
+            deadline: None,
         }
     }
 }
@@ -89,6 +96,11 @@ pub struct NonnegResult {
     pub gap: f64,
     pub objective: f64,
     pub converged: bool,
+    /// True when the solve stopped on an exhausted budget (iteration cap
+    /// or wall-clock [`NonnegOptions::deadline`]) rather than meeting the
+    /// gap tolerance; `beta`/`gap` are the best completed iterate and its
+    /// last measured (certified) suboptimality.
+    pub budget_exhausted: bool,
 }
 
 /// Primal objective ½‖y−Xβ‖² + λ‖β‖₁ (β assumed ≥ 0).
@@ -211,6 +223,7 @@ pub fn solve_nonneg<M: DesignMatrix>(
 
     let mut gap = f64::INFINITY;
     let mut converged = false;
+    let mut deadline_hit = false;
     let mut iters = 0;
     let mut last_obj = f64::INFINITY;
     // Objective from a gap check at the current β, reused on exit (see
@@ -236,6 +249,7 @@ pub fn solve_nonneg<M: DesignMatrix>(
 
         if (k + 1) % opts.check_every == 0 || k + 1 == opts.max_iter {
             prob.x.residual(&beta, prob.y, &mut r);
+            crate::util::fault::maybe_poison_residual(&mut r);
             prob.x.matvec_t(&r, &mut c);
             let obj = objective(prob, lambda, &beta, &r);
             if obj > last_obj {
@@ -250,6 +264,15 @@ pub fn solve_nonneg<M: DesignMatrix>(
                 converged = true;
                 break;
             }
+            if !gap.is_finite() {
+                // A non-finite gap can never satisfy the stopping rule —
+                // stop and surface `converged = false`.
+                break;
+            }
+            if crate::sgl::fista::deadline_passed(opts.deadline) {
+                deadline_hit = true;
+                break;
+            }
         }
     }
 
@@ -262,7 +285,8 @@ pub fn solve_nonneg<M: DesignMatrix>(
             objective(prob, lambda, &beta, &r)
         }
     };
-    NonnegResult { beta, iters, gap, objective, converged }
+    let budget_exhausted = deadline_hit || (!converged && iters == opts.max_iter);
+    NonnegResult { beta, iters, gap, objective, converged, budget_exhausted }
 }
 
 /// Mutable state of a dynamic-screening nonneg solve, shared across
@@ -280,6 +304,7 @@ struct NonnegDynCore {
     last_obj: f64,
     gap: f64,
     converged: bool,
+    deadline_hit: bool,
     iters: usize,
     objective: Option<f64>,
 }
@@ -322,6 +347,7 @@ fn nonneg_dynamic_epoch<M: DesignMatrix>(
         );
         if core.iters % opts.check_every == 0 || core.iters == opts.max_iter {
             x.residual(&core.beta, y, &mut core.r);
+            crate::util::fault::maybe_poison_residual(&mut core.r);
             x.matvec_t(&core.r, &mut core.c);
             let obj = objective(&vprob, lambda, &core.beta, &core.r);
             if obj > core.last_obj {
@@ -334,6 +360,15 @@ fn nonneg_dynamic_epoch<M: DesignMatrix>(
             core.gap = g;
             if g <= opts.tol * scale_ref {
                 core.converged = true;
+                return None;
+            }
+            if !g.is_finite() {
+                // Same recovery as the static loop: stop on a poisoned
+                // evaluation, report `converged = false`.
+                return None;
+            }
+            if crate::sgl::fista::deadline_passed(opts.deadline) {
+                core.deadline_hit = true;
                 return None;
             }
             if core.iters < opts.max_iter {
@@ -383,6 +418,7 @@ fn solve_nonneg_dynamic<M: DesignMatrix>(
         last_obj: f64::INFINITY,
         gap: f64::INFINITY,
         converged: false,
+        deadline_hit: false,
         iters: 0,
         objective: None,
     };
@@ -422,6 +458,8 @@ fn solve_nonneg_dynamic<M: DesignMatrix>(
         gap: core.gap,
         objective,
         converged: core.converged,
+        budget_exhausted: core.deadline_hit
+            || (!core.converged && core.iters == opts.max_iter),
     }
 }
 

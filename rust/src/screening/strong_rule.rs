@@ -141,6 +141,7 @@ pub fn solve_with_strong_rule<M: DesignMatrix>(
                 gap: 0.0,
                 objective: crate::sgl::dual::null_objective(prob.y),
                 converged: true,
+                budget_exhausted: false,
             },
             Some(red) => {
                 let rp = SglProblem::new(&red.x, prob.y, &red.groups);

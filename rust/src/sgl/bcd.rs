@@ -63,6 +63,12 @@ pub struct BcdOptions<'a> {
     /// class invariant on the shrunken problem. `None` (default) is the
     /// plain solve.
     pub dynamic_screen: Option<&'a RefCell<GapSafeDynamic>>,
+    /// Wall-clock deadline for graceful degradation (same contract as
+    /// [`crate::sgl::fista::FistaOptions::deadline`]): checked at gap-check
+    /// cadence after the gap is measured; once past it the solve returns
+    /// best-so-far with `converged = false` and `budget_exhausted = true`.
+    /// `None` (default) never times out.
+    pub deadline: Option<std::time::Instant>,
 }
 
 impl Default for BcdOptions<'_> {
@@ -76,6 +82,7 @@ impl Default for BcdOptions<'_> {
             parallel_groups: false,
             coloring: None,
             dynamic_screen: None,
+            deadline: None,
         }
     }
 }
@@ -415,6 +422,7 @@ pub fn solve_bcd<M: DesignMatrix>(
 
     let mut gap = f64::INFINITY;
     let mut converged = false;
+    let mut deadline_hit = false;
     let mut sweeps = 0;
 
     for sweep in 0..opts.max_sweeps {
@@ -436,6 +444,7 @@ pub fn solve_bcd<M: DesignMatrix>(
         );
 
         if (sweep + 1) % opts.check_every == 0 || sweep + 1 == opts.max_sweeps {
+            crate::util::fault::maybe_poison_residual(&mut r);
             prob.x.matvec_t(&r, &mut c);
             let (g, _) = duality_gap(prob, params, &beta, &r, &c);
             gap = g;
@@ -443,12 +452,23 @@ pub fn solve_bcd<M: DesignMatrix>(
                 converged = true;
                 break;
             }
+            if !gap.is_finite() {
+                // A non-finite gap can never satisfy the stopping rule —
+                // stop and surface `converged = false` instead of
+                // sweeping (and propagating NaN) to the cap.
+                break;
+            }
+            if super::fista::deadline_passed(opts.deadline) {
+                deadline_hit = true;
+                break;
+            }
         }
     }
 
     residual(prob, &beta, &mut r);
     let objective = objective_with_residual(prob, params, &beta, &r).total();
-    super::fista::SolveResult { beta, iters: sweeps, gap, objective, converged }
+    let budget_exhausted = deadline_hit || (!converged && sweeps == opts.max_sweeps);
+    super::fista::SolveResult { beta, iters: sweeps, gap, objective, converged, budget_exhausted }
 }
 
 /// Mutable state of a dynamic-screening BCD solve, shared across epochs.
@@ -460,6 +480,7 @@ struct BcdDynCore {
     worker_scratch: Option<Vec<Mutex<GroupScratch>>>,
     gap: f64,
     converged: bool,
+    deadline_hit: bool,
     sweeps: usize,
     max_group: usize,
     n: usize,
@@ -510,11 +531,21 @@ fn bcd_dynamic_epoch<M: DesignMatrix>(
             core.n,
         );
         if core.sweeps % opts.check_every == 0 || core.sweeps == opts.max_sweeps {
+            crate::util::fault::maybe_poison_residual(&mut core.r);
             x.matvec_t(&core.r, &mut core.c);
             let (g, s_feas) = duality_gap(&vprob, params, &core.beta, &core.r, &core.c);
             core.gap = g;
             if g <= opts.tol * scale_ref {
                 core.converged = true;
+                return None;
+            }
+            if !g.is_finite() {
+                // Same recovery as the static loop: stop on a poisoned
+                // evaluation, report `converged = false`.
+                return None;
+            }
+            if super::fista::deadline_passed(opts.deadline) {
+                core.deadline_hit = true;
                 return None;
             }
             if core.sweeps < opts.max_sweeps {
@@ -595,6 +626,7 @@ fn solve_bcd_dynamic<M: DesignMatrix>(
         worker_scratch: None,
         gap: f64::INFINITY,
         converged: false,
+        deadline_hit: false,
         sweeps: 0,
         max_group,
         n,
@@ -676,6 +708,8 @@ fn solve_bcd_dynamic<M: DesignMatrix>(
         gap: core.gap,
         objective,
         converged: core.converged,
+        budget_exhausted: core.deadline_hit
+            || (!core.converged && core.sweeps == opts.max_sweeps),
     }
 }
 

@@ -44,6 +44,14 @@ pub struct FistaOptions<'a> {
     /// is readable from the state afterwards. `None` (default) is the
     /// plain solve, byte-for-byte the pre-dynamic behaviour.
     pub dynamic_screen: Option<&'a RefCell<GapSafeDynamic>>,
+    /// Wall-clock deadline for graceful degradation. Checked at gap-check
+    /// cadence *after* the gap is measured: once past the deadline the
+    /// solver returns best-so-far with `converged = false`, the last
+    /// measured gap as a certified suboptimality bound, and
+    /// `budget_exhausted = true`. `None` (default) never times out.
+    /// Bitwise-parity paths must leave this unset — wall-clock varies by
+    /// machine and worker count.
+    pub deadline: Option<std::time::Instant>,
 }
 
 impl Default for FistaOptions<'_> {
@@ -55,8 +63,18 @@ impl Default for FistaOptions<'_> {
             lipschitz: None,
             adaptive_restart: true,
             dynamic_screen: None,
+            deadline: None,
         }
     }
+}
+
+/// True when a configured deadline has passed. Shared by all three solver
+/// families; called only at gap-check cadence, so budget granularity is
+/// `check_every` iterations (never mid-iteration — the returned iterate is
+/// always a completed prox step).
+#[inline]
+pub(crate) fn deadline_passed(deadline: Option<std::time::Instant>) -> bool {
+    deadline.is_some_and(|dl| std::time::Instant::now() >= dl)
 }
 
 /// Solver output.
@@ -79,6 +97,12 @@ pub struct SolveResult {
     pub objective: f64,
     /// Whether the gap tolerance was met within `max_iter`.
     pub converged: bool,
+    /// True when the solve stopped on an exhausted budget — the iteration
+    /// cap or the wall-clock [`FistaOptions::deadline`] — rather than
+    /// meeting the gap tolerance. `beta` is still the best completed
+    /// iterate and `gap` its last measured (certified) suboptimality;
+    /// never garbage.
+    pub budget_exhausted: bool,
 }
 
 /// Lipschitz constant of the smooth part: `‖X‖₂²`.
@@ -188,6 +212,7 @@ pub fn solve_fista<M: DesignMatrix>(
     let mut last_obj = f64::INFINITY;
     let mut gap = f64::INFINITY;
     let mut converged = false;
+    let mut deadline_hit = false;
     let mut iters = 0;
     // Objective from a gap check at the *current* β — reused on exit so a
     // converged solve never re-runs the residual/objective it just computed.
@@ -216,6 +241,7 @@ pub fn solve_fista<M: DesignMatrix>(
         // Convergence check (and optional restart) on a cadence.
         if (k + 1) % opts.check_every == 0 || k + 1 == opts.max_iter {
             super::objective::residual(prob, &beta, &mut r);
+            crate::util::fault::maybe_poison_residual(&mut r);
             prob.x.matvec_t(&r, &mut c);
             let obj = objective_with_residual(prob, params, &beta, &r).total();
             if opts.adaptive_restart && obj > last_obj {
@@ -228,6 +254,16 @@ pub fn solve_fista<M: DesignMatrix>(
             gap = g;
             if gap <= opts.tol * scale_ref {
                 converged = true;
+                break;
+            }
+            if !gap.is_finite() {
+                // Poisoned/overflowed evaluation: no stopping rule can
+                // ever fire on a NaN gap, so surface `converged = false`
+                // with the non-finite gap instead of spinning to the cap.
+                break;
+            }
+            if deadline_passed(opts.deadline) {
+                deadline_hit = true;
                 break;
             }
         }
@@ -243,7 +279,8 @@ pub fn solve_fista<M: DesignMatrix>(
             objective_with_residual(prob, params, &beta, &r).total()
         }
     };
-    SolveResult { beta, iters, gap, objective, converged }
+    let budget_exhausted = deadline_hit || (!converged && iters == opts.max_iter);
+    SolveResult { beta, iters, gap, objective, converged, budget_exhausted }
 }
 
 /// Mutable state of a dynamic-screening FISTA solve, shared across
@@ -262,6 +299,7 @@ struct FistaDynCore {
     last_obj: f64,
     gap: f64,
     converged: bool,
+    deadline_hit: bool,
     iters: usize,
     objective: Option<f64>,
 }
@@ -308,6 +346,7 @@ fn fista_dynamic_epoch<M: DesignMatrix>(
         );
         if core.iters % opts.check_every == 0 || core.iters == opts.max_iter {
             super::objective::residual(vprob, &core.beta, &mut core.r);
+            crate::util::fault::maybe_poison_residual(&mut core.r);
             vprob.x.matvec_t(&core.r, &mut core.c);
             let obj = objective_with_residual(vprob, params, &core.beta, &core.r).total();
             if opts.adaptive_restart && obj > core.last_obj {
@@ -320,6 +359,16 @@ fn fista_dynamic_epoch<M: DesignMatrix>(
             core.gap = g;
             if g <= opts.tol * scale_ref {
                 core.converged = true;
+                return None;
+            }
+            if !g.is_finite() {
+                // Same recovery as the static loop: a non-finite gap can
+                // never satisfy the stopping rule (and the sphere test
+                // would be meaningless) — stop, report `converged = false`.
+                return None;
+            }
+            if deadline_passed(opts.deadline) {
+                core.deadline_hit = true;
                 return None;
             }
             if core.iters < opts.max_iter {
@@ -385,6 +434,7 @@ fn solve_fista_dynamic<M: DesignMatrix>(
         last_obj: f64::INFINITY,
         gap: f64::INFINITY,
         converged: false,
+        deadline_hit: false,
         iters: 0,
         objective: None,
     };
@@ -443,6 +493,8 @@ fn solve_fista_dynamic<M: DesignMatrix>(
         gap: core.gap,
         objective,
         converged: core.converged,
+        budget_exhausted: core.deadline_hit
+            || (!core.converged && core.iters == opts.max_iter),
     }
 }
 
@@ -560,6 +612,41 @@ mod tests {
         // Near the optimum the sphere shrinks below the inactive features'
         // slack — a mid-path λ on this planted problem must evict.
         assert!(state.borrow().evicted() > 0, "dynamic screening never fired");
+    }
+
+    #[test]
+    fn expired_deadline_returns_best_so_far() {
+        let (x, y, g) = small_problem(27);
+        let prob = SglProblem::new(&x, &y, &g);
+        let lm = sgl_lambda_max(&prob, 1.0);
+        let params = SglParams::from_alpha_lambda(1.0, 0.3 * lm.lambda_max);
+        let opts = FistaOptions {
+            deadline: Some(std::time::Instant::now()),
+            ..Default::default()
+        };
+        let res = solve_fista(&prob, &params, None, &opts);
+        // First gap check sees the expired deadline: best-so-far comes
+        // back with a finite certified gap, never garbage.
+        assert!(!res.converged);
+        assert!(res.budget_exhausted);
+        assert!(res.gap.is_finite());
+        assert!(res.objective.is_finite());
+        assert_eq!(res.iters, opts.check_every);
+        assert_eq!(res.beta.len(), prob.n_features());
+    }
+
+    #[test]
+    fn iteration_cap_marks_budget_exhausted() {
+        let (x, y, g) = small_problem(28);
+        let prob = SglProblem::new(&x, &y, &g);
+        let lm = sgl_lambda_max(&prob, 1.0);
+        let params = SglParams::from_alpha_lambda(1.0, 0.2 * lm.lambda_max);
+        let opts = FistaOptions { max_iter: 3, tol: 1e-14, ..Default::default() };
+        let res = solve_fista(&prob, &params, None, &opts);
+        assert!(!res.converged);
+        assert!(res.budget_exhausted);
+        assert_eq!(res.iters, 3);
+        assert!(res.gap.is_finite());
     }
 
     #[test]

@@ -1,0 +1,211 @@
+//! Deterministic fault injection for robustness tests.
+//!
+//! Compiled to real hooks only under the `fault-inject` cargo feature; in
+//! normal builds every probe below is an inlined constant-`false` no-op, so
+//! production call sites carry zero cost and no `cfg` noise. The hooks are
+//! process-global countdown counters: a test arms a fault point with "fire
+//! at the Nth event" (or "affect the next N events"), runs the workload,
+//! and the fault fires at a deterministic, worker-count-independent point
+//! in the *I/O or dispatch* stream — never in solver arithmetic, so the
+//! bitwise-parity invariants stay meaningful even under injection.
+//!
+//! Fault points:
+//! * **positioned reads** (`linalg::mmap` pread fallback): short reads
+//!   ([`take_short_read`]), spurious `EINTR` ([`take_eintr`]), and hard
+//!   I/O errors ([`take_read_error`]);
+//! * **pool dispatch** ([`take_pool_panic`]): panic inside the Nth task a
+//!   pool round executes — exercises the single panic-propagation home in
+//!   `pool::dispatch_round` and the scoped fallbacks;
+//! * **residual poisoning** ([`take_nan_poison`]): overwrite one residual
+//!   entry with NaN mid-solve — exercises the solvers' "never silent
+//!   garbage" contract (non-finite gap ⇒ `converged = false`).
+//!
+//! Tests must call [`reset`] (or arm exactly what they consume) — the
+//! counters are process-global and `cargo test` shares one process per
+//! target. The fault-injection integration tests therefore serialize on a
+//! private mutex.
+
+#[cfg(feature = "fault-inject")]
+mod armed {
+    use std::sync::atomic::{AtomicIsize, Ordering};
+
+    /// Disarmed sentinel: negative counters never fire.
+    const OFF: isize = -1;
+
+    pub(super) static SHORT_READS: AtomicIsize = AtomicIsize::new(OFF);
+    pub(super) static EINTRS: AtomicIsize = AtomicIsize::new(OFF);
+    pub(super) static READ_ERROR_AT: AtomicIsize = AtomicIsize::new(OFF);
+    pub(super) static POOL_PANIC_AT: AtomicIsize = AtomicIsize::new(OFF);
+    pub(super) static NAN_POISON_AT: AtomicIsize = AtomicIsize::new(OFF);
+
+    /// Consume one event from a "next N events" counter: true while the
+    /// counter is positive.
+    pub(super) fn consume(cell: &AtomicIsize) -> bool {
+        if cell.load(Ordering::Acquire) <= 0 {
+            return false;
+        }
+        cell.fetch_sub(1, Ordering::AcqRel) > 0
+    }
+
+    /// Fire exactly once at the Nth event of a countdown counter
+    /// (`arm(1)` = the very next event).
+    pub(super) fn countdown(cell: &AtomicIsize) -> bool {
+        if cell.load(Ordering::Acquire) <= 0 {
+            return false;
+        }
+        cell.fetch_sub(1, Ordering::AcqRel) == 1
+    }
+}
+
+#[cfg(feature = "fault-inject")]
+mod api {
+    use super::armed::*;
+    use std::sync::atomic::Ordering;
+
+    /// Disarm every fault point (call between tests).
+    pub fn reset() {
+        for cell in [&SHORT_READS, &EINTRS, &READ_ERROR_AT, &POOL_PANIC_AT, &NAN_POISON_AT] {
+            cell.store(-1, Ordering::Release);
+        }
+    }
+
+    /// The next `n` positioned reads return only half the requested bytes.
+    pub fn arm_short_reads(n: usize) {
+        SHORT_READS.store(n as isize, Ordering::Release);
+    }
+
+    /// Probe: should this positioned read come up short?
+    pub fn take_short_read() -> bool {
+        consume(&SHORT_READS)
+    }
+
+    /// The next `n` positioned reads fail with `ErrorKind::Interrupted`.
+    pub fn arm_eintrs(n: usize) {
+        EINTRS.store(n as isize, Ordering::Release);
+    }
+
+    /// Probe: should this positioned read be interrupted?
+    pub fn take_eintr() -> bool {
+        consume(&EINTRS)
+    }
+
+    /// The `nth` positioned read (1-based) fails with a hard I/O error.
+    pub fn arm_read_error(nth: usize) {
+        READ_ERROR_AT.store(nth as isize, Ordering::Release);
+    }
+
+    /// Probe: should this positioned read fail hard?
+    pub fn take_read_error() -> bool {
+        countdown(&READ_ERROR_AT)
+    }
+
+    /// The `nth` pool task executed (1-based, across all rounds from now)
+    /// panics.
+    pub fn arm_pool_panic(nth: usize) {
+        POOL_PANIC_AT.store(nth as isize, Ordering::Release);
+    }
+
+    /// Probe: should this pool task panic?
+    pub fn take_pool_panic() -> bool {
+        countdown(&POOL_PANIC_AT)
+    }
+
+    /// The `nth` residual evaluation (1-based) gets one entry overwritten
+    /// with NaN.
+    pub fn arm_nan_poison(nth: usize) {
+        NAN_POISON_AT.store(nth as isize, Ordering::Release);
+    }
+
+    /// Probe: should this residual be poisoned?
+    pub fn take_nan_poison() -> bool {
+        countdown(&NAN_POISON_AT)
+    }
+}
+
+#[cfg(not(feature = "fault-inject"))]
+mod api {
+    //! No-op stubs: every probe is a constant `false` the optimizer erases.
+
+    /// Disarm every fault point (no-op without `fault-inject`).
+    pub fn reset() {}
+
+    /// Arm short positioned reads (no-op without `fault-inject`).
+    pub fn arm_short_reads(_n: usize) {}
+
+    /// Probe: should this positioned read come up short?
+    #[inline(always)]
+    pub fn take_short_read() -> bool {
+        false
+    }
+
+    /// Arm interrupted positioned reads (no-op without `fault-inject`).
+    pub fn arm_eintrs(_n: usize) {}
+
+    /// Probe: should this positioned read be interrupted?
+    #[inline(always)]
+    pub fn take_eintr() -> bool {
+        false
+    }
+
+    /// Arm a hard positioned-read error (no-op without `fault-inject`).
+    pub fn arm_read_error(_nth: usize) {}
+
+    /// Probe: should this positioned read fail hard?
+    #[inline(always)]
+    pub fn take_read_error() -> bool {
+        false
+    }
+
+    /// Arm a pool-task panic (no-op without `fault-inject`).
+    pub fn arm_pool_panic(_nth: usize) {}
+
+    /// Probe: should this pool task panic?
+    #[inline(always)]
+    pub fn take_pool_panic() -> bool {
+        false
+    }
+
+    /// Arm residual NaN poisoning (no-op without `fault-inject`).
+    pub fn arm_nan_poison(_nth: usize) {}
+
+    /// Probe: should this residual be poisoned?
+    #[inline(always)]
+    pub fn take_nan_poison() -> bool {
+        false
+    }
+}
+
+pub use api::*;
+
+/// Poison one entry of a residual buffer when armed (no-op otherwise).
+/// Centralized here so the solver call sites stay one line.
+#[inline]
+pub fn maybe_poison_residual(r: &mut [f32]) {
+    if take_nan_poison() {
+        if let Some(slot) = r.first_mut() {
+            *slot = f32::NAN;
+        }
+    }
+}
+
+#[cfg(all(test, feature = "fault-inject"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_fire_deterministically() {
+        reset();
+        assert!(!take_short_read());
+        arm_short_reads(2);
+        assert!(take_short_read());
+        assert!(take_short_read());
+        assert!(!take_short_read());
+
+        arm_pool_panic(3);
+        assert!(!take_pool_panic());
+        assert!(!take_pool_panic());
+        assert!(take_pool_panic());
+        assert!(!take_pool_panic());
+        reset();
+    }
+}

@@ -14,7 +14,10 @@
 //! * [`logger`] — a tiny `log`-facade backend with env-based filtering.
 //! * [`pool`] — persistent parked-worker pool for chunked parallel-for
 //!   (sized to available cores, spawn-free after first use).
+//! * [`fault`] — deterministic fault-injection hooks (real only under the
+//!   `fault-inject` feature; inlined-`false` no-ops otherwise).
 
+pub mod fault;
 pub mod harness;
 pub mod json;
 pub mod logger;

@@ -175,7 +175,15 @@ fn dispatch_round<'a>(
     for (i, task) in tasks.into_iter().enumerate() {
         let round_c = Arc::clone(&round);
         let wrapped: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-            let res = catch_unwind(AssertUnwindSafe(task));
+            let res = catch_unwind(AssertUnwindSafe(move || {
+                // Fault-injection probe (constant false in normal builds):
+                // the Nth dispatched task panics, exercising exactly the
+                // propagation path a real task panic would take.
+                if crate::util::fault::take_pool_panic() {
+                    panic!("fault-inject: pool task panic");
+                }
+                task()
+            }));
             round_c.finish_one(res.err());
         });
         // SAFETY: `round.wait()` below runs before this function returns,
@@ -535,6 +543,13 @@ where
         return items.iter().map(f).collect();
     }
     let chunk = n.div_ceil(workers);
+    // Join every handle and carry the first panic payload out, re-raising
+    // only after the scope has reaped all threads — the same contract as
+    // `dispatch_round`. The former `join().expect(...)` here panicked
+    // *inside* the scope with the payload discarded; with a second
+    // panicked (and then unjoined) thread, the scope's own unwind check
+    // turned that into a double panic and aborted the whole process.
+    let mut first_panic: Option<Box<dyn Any + Send>> = None;
     let parts: Vec<Vec<U>> = std::thread::scope(|s| {
         let handles: Vec<_> = items
             .chunks(chunk)
@@ -543,8 +558,22 @@ where
                 s.spawn(move || part.iter().map(f).collect::<Vec<U>>())
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("parallel_map worker panicked")).collect()
+        let mut parts = Vec::with_capacity(handles.len());
+        for h in handles {
+            match h.join() {
+                Ok(part) => parts.push(part),
+                Err(payload) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(payload);
+                    }
+                }
+            }
+        }
+        parts
     });
+    if let Some(payload) = first_panic {
+        resume_unwind(payload);
+    }
     let mut out = Vec::with_capacity(n);
     for p in parts {
         out.extend(p);
@@ -658,6 +687,31 @@ mod tests {
         let mut out = vec![0usize; 100];
         parallel_fill_with_workers(&mut out, 4, |i| i + 1);
         assert_eq!(out[99], 100);
+    }
+
+    #[test]
+    fn parallel_map_worker_panic_propagates_with_payload() {
+        // Regression: the fallback join path must propagate a worker panic
+        // to the caller (payload intact) instead of double-panicking inside
+        // the scope — which aborted the process when two chunks panicked.
+        let xs: Vec<usize> = (0..100).collect();
+        let result = std::panic::catch_unwind(|| {
+            parallel_map(&xs, |&x| {
+                // Panic in (at least) two different chunks at 2+ workers.
+                assert!(x != 10 && x != 90, "injected failure");
+                x
+            })
+        });
+        let payload = result.expect_err("panic must propagate to the caller");
+        let msg = payload
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| payload.downcast_ref::<&str>().copied())
+            .unwrap_or("");
+        assert!(msg.contains("injected failure"), "payload lost: {msg:?}");
+        // Scoped threads must all be reaped; later maps still work.
+        let ys = parallel_map(&xs, |&x| x + 1);
+        assert_eq!(ys[99], 100);
     }
 
     #[test]

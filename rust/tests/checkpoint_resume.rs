@@ -1,0 +1,212 @@
+//! Checkpoint/resume fault tolerance: a path run stopped mid-grid and
+//! resumed from its sidecar must be **bitwise identical** — per-step stats
+//! and per-λ coefficient vectors both — to the run never having been
+//! interrupted. Exercised on the dense and mmap backends, both solvers,
+//! with the amortized Lipschitz refresher on (its `since`/mask/value state
+//! is part of the snapshot, so a resume that dropped it would change
+//! step sizes bit-for-bit detectably). Stop points cover both the
+//! checkpoint-boundary case (nothing to recompute on resume) and the
+//! mid-cadence case (the steps since the last save are recomputed).
+//!
+//! These run under the CI `TLFRE_THREADS` ∈ {1,2,4,8} matrix: the resumed
+//! path must agree with the uninterrupted one at every worker count.
+
+use tlfre::coordinator::{
+    run_tlfre_path_checkpointed, run_tlfre_path_with_coefficients, CheckpointOptions, PathConfig,
+    PathOutput, SolverKind,
+};
+use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
+use tlfre::screening::ScreenKind;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("tlfre-ckresume-{name}-{}.bin", std::process::id()))
+}
+
+fn cfg(solver: SolverKind) -> PathConfig {
+    PathConfig {
+        alpha: 1.0,
+        n_lambda: 12,
+        lambda_min_ratio: 0.05,
+        tol: 1e-7,
+        solver,
+        screen: ScreenKind::TlfreGap,
+        // Stateful across steps — the part of the engine a naive resume
+        // would silently lose.
+        lipschitz_refresh_every: Some(2),
+        ..Default::default()
+    }
+}
+
+/// Both stats and coefficients must agree bit for bit.
+fn assert_bitwise_equal(
+    (oa, ca): (&PathOutput, &[Vec<f32>]),
+    (ob, cb): (&PathOutput, &[Vec<f32>]),
+    tag: &str,
+) {
+    assert_eq!(oa.lambda_max.to_bits(), ob.lambda_max.to_bits(), "{tag}: λmax");
+    assert_eq!(oa.steps.len(), ob.steps.len(), "{tag}: step counts");
+    for (sa, sb) in oa.steps.iter().zip(&ob.steps) {
+        assert_eq!(sa.lambda.to_bits(), sb.lambda.to_bits(), "{tag}: λ grid");
+        assert_eq!(sa.r1.to_bits(), sb.r1.to_bits(), "{tag}: r1 at λ={}", sa.lambda);
+        assert_eq!(sa.r2.to_bits(), sb.r2.to_bits(), "{tag}: r2 at λ={}", sa.lambda);
+        assert_eq!(sa.active_features, sb.active_features, "{tag}: active at λ={}", sa.lambda);
+        assert_eq!(sa.iters, sb.iters, "{tag}: iters at λ={}", sa.lambda);
+        assert_eq!(sa.gap.to_bits(), sb.gap.to_bits(), "{tag}: gap at λ={}", sa.lambda);
+        assert_eq!(sa.zeros, sb.zeros, "{tag}: zeros at λ={}", sa.lambda);
+        assert_eq!(sa.nonzeros, sb.nonzeros, "{tag}: nonzeros at λ={}", sa.lambda);
+        assert_eq!(sa.budget_exhausted, sb.budget_exhausted, "{tag}: budget flag");
+        assert_eq!(
+            sa.certified_suboptimality.to_bits(),
+            sb.certified_suboptimality.to_bits(),
+            "{tag}: certified bound at λ={}",
+            sa.lambda
+        );
+    }
+    assert_eq!(ca.len(), cb.len(), "{tag}: coefficient path lengths");
+    for (k, (ba, bb)) in ca.iter().zip(cb).enumerate() {
+        assert_eq!(ba.len(), bb.len(), "{tag}: β dims at step {k}");
+        for j in 0..ba.len() {
+            assert_eq!(ba[j].to_bits(), bb[j].to_bits(), "{tag}: β[{j}] at step {k}");
+        }
+    }
+}
+
+/// Stop a checkpointed run after `stop_after` completed grid points, then
+/// resume it from the sidecar and compare the stitched result against the
+/// plain uninterrupted runner.
+fn stop_resume_roundtrip<M: tlfre::linalg::DesignMatrix>(
+    x: &M,
+    y: &[f32],
+    groups: &tlfre::groups::GroupStructure,
+    pc: &PathConfig,
+    every: usize,
+    stop_after: usize,
+    tag: &str,
+) {
+    let (ref_out, ref_coefs) = run_tlfre_path_with_coefficients(x, y, groups, pc);
+    assert!(!ref_out.truncated);
+    assert_eq!(ref_out.steps.len(), pc.n_lambda);
+
+    let path = tmp(tag);
+    let mut opts = CheckpointOptions::new(&path);
+    opts.every = every;
+    opts.stop_after = Some(stop_after);
+    let (stopped, stopped_coefs) = run_tlfre_path_checkpointed(x, y, groups, pc, &opts).unwrap();
+    assert!(stopped.truncated, "{tag}: stopped run must report truncation");
+    assert_eq!(stopped.steps.len(), stop_after, "{tag}: stopped prefix length");
+    // The stopped prefix itself is already bitwise equal to the reference.
+    for (k, (sa, sb)) in stopped.steps.iter().zip(&ref_out.steps).enumerate() {
+        assert_eq!(sa.lambda.to_bits(), sb.lambda.to_bits(), "{tag}: prefix λ at {k}");
+        assert_eq!(sa.gap.to_bits(), sb.gap.to_bits(), "{tag}: prefix gap at {k}");
+    }
+    for (k, (ba, bb)) in stopped_coefs.iter().zip(&ref_coefs).enumerate() {
+        for j in 0..ba.len() {
+            assert_eq!(ba[j].to_bits(), bb[j].to_bits(), "{tag}: prefix β[{j}] at step {k}");
+        }
+    }
+
+    let mut resume = CheckpointOptions::new(&path);
+    resume.every = every;
+    resume.resume = true;
+    let (resumed, resumed_coefs) = run_tlfre_path_checkpointed(x, y, groups, pc, &resume).unwrap();
+    assert!(!resumed.truncated, "{tag}: resumed run completes the grid");
+    assert_bitwise_equal(
+        (&resumed, &resumed_coefs),
+        (&ref_out, &ref_coefs),
+        &format!("{tag} resume"),
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn dense_fista_resume_is_bitwise_identical() {
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(40, 400, 40), 2014);
+    let pc = cfg(SolverKind::Fista);
+    // 5 is mid-cadence for every=2 (the 5th step is recomputed on resume);
+    // 4 is exactly a save boundary (resume recomputes nothing).
+    for (stop_after, tag) in [(5usize, "dense-fista-mid"), (4, "dense-fista-boundary")] {
+        stop_resume_roundtrip(&ds.x, &ds.y, &ds.groups, &pc, 2, stop_after, tag);
+    }
+}
+
+#[test]
+fn dense_bcd_resume_is_bitwise_identical() {
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(40, 400, 40), 2015);
+    let pc = cfg(SolverKind::Bcd);
+    stop_resume_roundtrip(&ds.x, &ds.y, &ds.groups, &pc, 3, 7, "dense-bcd-mid");
+}
+
+#[test]
+fn mmap_resume_is_bitwise_identical_to_dense_uninterrupted() {
+    // Out-of-core variant: the checkpointed/resumed run on the mmap-backed
+    // matrix must reproduce the *dense in-RAM* uninterrupted path bit for
+    // bit — resume safety and backend parity in one assertion.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(40, 400, 40), 2016);
+    let data = tmp("mmap-dataset");
+    tlfre::data::io::save(&ds, &data).unwrap();
+    let mds = tlfre::data::io::open_mmap(&data).unwrap();
+    let pc = cfg(SolverKind::Fista);
+
+    let (ref_out, ref_coefs) = run_tlfre_path_with_coefficients(&ds.x, &ds.y, &ds.groups, &pc);
+
+    let ck = tmp("mmap-sidecar");
+    let mut opts = CheckpointOptions::new(&ck);
+    opts.every = 2;
+    opts.stop_after = Some(5);
+    let (stopped, _) =
+        run_tlfre_path_checkpointed(&mds.x, &mds.y, &mds.groups, &pc, &opts).unwrap();
+    assert!(stopped.truncated);
+
+    let mut resume = CheckpointOptions::new(&ck);
+    resume.every = 2;
+    resume.resume = true;
+    let (resumed, resumed_coefs) =
+        run_tlfre_path_checkpointed(&mds.x, &mds.y, &mds.groups, &pc, &resume).unwrap();
+    assert_bitwise_equal((&resumed, &resumed_coefs), (&ref_out, &ref_coefs), "mmap resume");
+
+    drop(mds);
+    let _ = std::fs::remove_file(&data);
+    let _ = std::fs::remove_file(&ck);
+}
+
+#[test]
+fn max_seconds_budget_truncates_to_a_clean_prefix() {
+    // A microscopic wall-clock budget: the driver must stop the grid walk
+    // at a step boundary, mark the output truncated, and any step that ran
+    // out mid-solve must carry `converged`-failure markers with a
+    // *certified* (finite, non-negative) suboptimality bound. With ~50 μs
+    // the preamble alone blows the budget, so only the analytic λmax step
+    // is guaranteed; the invariants below hold for whatever prefix ran.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 200, 20), 77);
+    let pc = PathConfig {
+        alpha: 1.0,
+        n_lambda: 40,
+        lambda_min_ratio: 0.01,
+        tol: 1e-9,
+        max_seconds: Some(50e-6),
+        ..Default::default()
+    };
+    let out = tlfre::coordinator::run_tlfre_path(&ds.x, &ds.y, &ds.groups, &pc);
+    assert!(out.truncated, "50 μs cannot fit a 40-point path");
+    assert!(!out.steps.is_empty(), "the λmax step is analytic and always emitted");
+    assert!(out.steps.len() < 40);
+    for st in &out.steps {
+        assert!(
+            st.certified_suboptimality >= 0.0,
+            "certified bound must be non-negative, got {}",
+            st.certified_suboptimality
+        );
+        if st.budget_exhausted {
+            assert!(
+                st.certified_suboptimality.is_finite(),
+                "an exhausted step still certifies a finite gap bound"
+            );
+        }
+    }
+
+    // No budget ⇒ no truncation, and no step reports exhaustion.
+    let pc_free = PathConfig { max_seconds: None, n_lambda: 8, tol: 1e-6, ..pc };
+    let free = tlfre::coordinator::run_tlfre_path(&ds.x, &ds.y, &ds.groups, &pc_free);
+    assert!(!free.truncated);
+    assert!(free.steps.iter().all(|s| !s.budget_exhausted));
+}
