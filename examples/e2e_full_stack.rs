@@ -16,7 +16,7 @@
 
 use tlfre::coordinator::path::log_lambda_grid;
 use tlfre::coordinator::reduce::ReducedProblem;
-use tlfre::coordinator::{run_baseline_path, PathConfig};
+use tlfre::coordinator::{run_baseline_path, PathConfig, SolveControls};
 use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
 use tlfre::linalg::ops;
 use tlfre::runtime::{artifacts_dir, ArtifactManifest, Runtime, ScreenEngine};
@@ -120,7 +120,16 @@ fn main() -> tlfre::error::Result<()> {
     tlfre::ensure!(max_xla_native_err < 1e-4, "XLA and native sweeps disagree");
 
     // ---- Baseline -------------------------------------------------------
-    let cfg = PathConfig { alpha, n_lambda: 40, lambda_min_ratio: 0.01, tol: 1e-6, ..Default::default() };
+    let cfg = PathConfig {
+        alpha,
+        controls: SolveControls {
+            n_lambda: 40,
+            lambda_min_ratio: 0.01,
+            tol: 1e-6,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
     let t = Timer::start();
     let baseline = run_baseline_path(&ds.x, &ds.y, &ds.groups, &cfg);
     let base_s = t.elapsed_s();

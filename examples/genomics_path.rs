@@ -13,7 +13,7 @@
 
 use tlfre::config::Config;
 use tlfre::coordinator::path::{alpha_grid_from_angles, PAPER_ALPHA_ANGLES};
-use tlfre::coordinator::{run_tlfre_path, PathConfig};
+use tlfre::coordinator::{run_tlfre_path, PathConfig, SolveControls};
 use tlfre::data::registry::RealDataset;
 use tlfre::util::fmt_duration;
 
@@ -52,10 +52,13 @@ fn main() {
         for (i, &alpha) in [0usize, 3, 6].iter().map(|&i| (i, &alphas[i])) {
             let cfg = PathConfig {
                 alpha,
-                n_lambda: 50,
-                lambda_min_ratio: 0.01,
-                tol: 1e-5,
                 screen: base_cfg.screen,
+                controls: SolveControls {
+                    n_lambda: 50,
+                    lambda_min_ratio: 0.01,
+                    tol: 1e-5,
+                    ..Default::default()
+                },
                 ..Default::default()
             };
             let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);

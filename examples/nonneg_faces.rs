@@ -6,7 +6,7 @@
 //!
 //! Run with: `cargo run --release --example nonneg_faces [--scale 0.05]`
 
-use tlfre::coordinator::{run_dpc_path, run_nonneg_baseline, DpcPathConfig};
+use tlfre::coordinator::{run_dpc_path, run_nonneg_baseline, DpcPathConfig, SolveControls};
 use tlfre::data::registry::RealDataset;
 use tlfre::nonneg::{lambda_max, NonnegProblem};
 use tlfre::util::fmt_duration;
@@ -29,10 +29,13 @@ fn main() {
     // screened and baseline paths use identical settings so the speedup
     // comparison is apples-to-apples.
     let cfg = DpcPathConfig {
-        n_lambda: 40,
-        lambda_min_ratio: 0.01,
-        tol: 1e-4,
-        max_iter: 3000,
+        controls: SolveControls {
+            n_lambda: 40,
+            lambda_min_ratio: 0.01,
+            tol: 1e-4,
+            max_iter: 3000,
+            ..Default::default()
+        },
         ..Default::default()
     };
 

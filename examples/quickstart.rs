@@ -8,7 +8,7 @@
 //! Run with: `cargo run --release --example quickstart`
 
 use tlfre::config::Config;
-use tlfre::coordinator::{run_baseline_path, run_tlfre_path, PathConfig};
+use tlfre::coordinator::{run_baseline_path, run_tlfre_path, PathConfig, SolveControls};
 use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
 use tlfre::util::fmt_duration;
 
@@ -22,9 +22,12 @@ fn main() {
 
     let cfg = PathConfig {
         alpha: 1.0, // tan(45°)
-        n_lambda: 50,
-        lambda_min_ratio: 0.01,
-        tol: 1e-6,
+        controls: SolveControls {
+            n_lambda: 50,
+            lambda_min_ratio: 0.01,
+            tol: 1e-6,
+            ..Default::default()
+        },
         ..Default::default()
     };
 

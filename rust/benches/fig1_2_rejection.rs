@@ -4,7 +4,7 @@
 
 use tlfre::bench_harness::tables::{render_rejection_series, series_to_json};
 use tlfre::bench_harness::BenchArgs;
-use tlfre::coordinator::{run_tlfre_path, PathConfig};
+use tlfre::coordinator::{run_tlfre_path, PathConfig, SolveControls};
 use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
 use tlfre::screening::lambda_max::lambda1_max;
 use tlfre::sgl::SglProblem;
@@ -42,10 +42,13 @@ fn main() {
         for (alpha, label) in alphas.iter().zip(&labels) {
             let cfg = PathConfig {
                 alpha: *alpha,
-                n_lambda: args.n_lambda(),
-                lambda_min_ratio: 0.01,
-                tol: 1e-5,
-                max_iter: 3000,
+                controls: SolveControls {
+                    n_lambda: args.n_lambda(),
+                    lambda_min_ratio: 0.01,
+                    tol: 1e-5,
+                    max_iter: 3000,
+                    ..Default::default()
+                },
                 ..Default::default()
             };
             let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);

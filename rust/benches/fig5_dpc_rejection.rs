@@ -3,7 +3,7 @@
 
 use tlfre::bench_harness::tables::render_dpc_series;
 use tlfre::bench_harness::BenchArgs;
-use tlfre::coordinator::{run_dpc_path, DpcPathConfig};
+use tlfre::coordinator::{run_dpc_path, DpcPathConfig, SolveControls};
 use tlfre::data::registry::RealDataset;
 use tlfre::data::synthetic::SyntheticSpec;
 use tlfre::data::Dataset;
@@ -47,10 +47,13 @@ fn main() {
     for (ds, nl_default) in sets {
         let nl = if args.full { 100 } else { args.n_lambda.unwrap_or(nl_default) };
         let cfg = DpcPathConfig {
-            n_lambda: nl,
-            lambda_min_ratio: if args.full { 0.01 } else { 0.1 },
-            tol: 1e-4,
-            max_iter: 2000,
+            controls: SolveControls {
+                n_lambda: nl,
+                lambda_min_ratio: if args.full { 0.01 } else { 0.1 },
+                tol: 1e-4,
+                max_iter: 2000,
+                ..Default::default()
+            },
             ..Default::default()
         };
         let out = run_dpc_path(&ds.x, &ds.y, &cfg);

@@ -35,12 +35,18 @@
 //!   measures blocked column norms, streaming λmax, the mmap-vs-dense
 //!   `Xᵀv` sweep and the end-to-end TLFre path on the mmap backend
 //!   (every number gated on a bitwise-equality assertion against the
-//!   in-RAM dense result; written to `BENCH_scale.json`).
+//!   in-RAM dense result; written to `BENCH_scale.json`);
+//! * the serve layer — an in-process resident engine on a unix socket:
+//!   cold vs warm full-path and single-point request latency, and
+//!   p50/p95 round-trip latency under 4 concurrent clients, with the
+//!   served coefficient bytes asserted identical to the batch walk
+//!   before publishing (written to `BENCH_serve.json`).
 
 use tlfre::bench_harness::BenchArgs;
 use tlfre::coordinator::{
     cross_validate, cross_validate_serial, make_folds, path_coefficients, run_tlfre_path,
     run_tlfre_path_checkpointed, run_tlfre_path_with_coefficients, CheckpointOptions, PathConfig,
+    SolveControls,
 };
 use tlfre::screening::ScreenKind;
 use tlfre::linalg::SelectRows;
@@ -57,6 +63,12 @@ use tlfre::screening::tlfre::{apply_rules, TlfreContext};
 use tlfre::sgl::bcd::{solve_bcd, BcdOptions};
 use tlfre::sgl::{solve_fista, FistaOptions, SglParams, SglProblem};
 use tlfre::screening::lambda_max::{sgl_lambda_max, sgl_lambda_max_streaming};
+use tlfre::data::registry::resolve_dataset;
+use tlfre::server::wire;
+use tlfre::server::{
+    coef_hex_dump, serve_on, DatasetSpec, RequestKind, SessionRegistry, SolveRequest,
+    SolveResponse,
+};
 use tlfre::util::harness::{bench, black_box, BenchConfig};
 use tlfre::util::pool;
 use tlfre::util::json::Json;
@@ -335,9 +347,12 @@ fn main() {
     let path_n_lambda = args.n_lambda().min(16);
     let cached_cfg = PathConfig {
         alpha: 1.0,
-        n_lambda: path_n_lambda,
-        lambda_min_ratio: 0.05,
-        tol: 1e-5,
+        controls: SolveControls {
+            n_lambda: path_n_lambda,
+            lambda_min_ratio: 0.05,
+            tol: 1e-5,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let exact_cfg = PathConfig { exact_view_lipschitz: true, ..cached_cfg.clone() };
@@ -460,9 +475,12 @@ fn main() {
     let cv_seed = args.seed ^ 0xCF;
     let cv_cfg = PathConfig {
         alpha: 1.0,
-        n_lambda: path_n_lambda.min(8),
-        lambda_min_ratio: 0.05,
-        tol: 1e-5,
+        controls: SolveControls {
+            n_lambda: path_n_lambda.min(8),
+            lambda_min_ratio: 0.05,
+            tol: 1e-5,
+            ..Default::default()
+        },
         ..Default::default()
     };
     // Expected one-walk cost: one runner path per fold×α over the same
@@ -853,9 +871,12 @@ fn main() {
     // dense path as the bitwise reference for every per-step statistic.
     let sc_path_cfg = PathConfig {
         alpha: 1.0,
-        n_lambda: args.n_lambda().min(8),
-        lambda_min_ratio: 0.1,
-        tol: 1e-5,
+        controls: SolveControls {
+            n_lambda: args.n_lambda().min(8),
+            lambda_min_ratio: 0.1,
+            tol: 1e-5,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let t_path_m = Timer::start();
@@ -938,4 +959,152 @@ fn main() {
     }
     drop(mds);
     let _ = std::fs::remove_file(&sc_path);
+
+    // Serve-layer section: an in-process resident engine on a unix socket.
+    // Cold = first request pays the dataset load + full walk; warm = the
+    // resident cache answers with zero solver work. Every published number
+    // is gated on the served bytes matching the batch walk bitwise.
+    println!("\n== serve layer (resident engine on a unix socket) ==");
+    let srv_socket =
+        std::env::temp_dir().join(format!("tlfre-serve-bench-{}.sock", std::process::id()));
+    let srv_reg = std::sync::Arc::new(SessionRegistry::new());
+    let srv_stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let srv_handle = {
+        let (s, r, f) = (srv_socket.clone(), srv_reg.clone(), srv_stop.clone());
+        std::thread::spawn(move || serve_on(&s, r, f))
+    };
+    for _ in 0..500 {
+        if std::os::unix::net::UnixStream::connect(&srv_socket).is_ok() {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let serve_call = |req: &SolveRequest| -> SolveResponse {
+        let (status, body) =
+            wire::call(&srv_socket, &req.to_json().to_string_compact()).expect("serve call");
+        assert_eq!(status, 200, "{body}");
+        let resp = SolveResponse::parse(&body).expect("serve response");
+        assert!(resp.ok, "{:?}", resp.error);
+        resp
+    };
+    let serve_req = |alpha: f64| -> SolveRequest {
+        let mut req = SolveRequest::new(RequestKind::SolvePath);
+        let mut spec = DatasetSpec::new("synthetic1");
+        spec.seed = args.seed;
+        spec.scale = 0.05;
+        req.dataset = Some(spec);
+        req.alpha = alpha;
+        req.controls.n_lambda = 10;
+        req.controls.lambda_min_ratio = 0.1;
+        req.controls.tol = 1e-5;
+        req
+    };
+
+    let path_req = serve_req(0.5);
+    let t_cold = Timer::start();
+    let cold_resp = serve_call(&path_req);
+    let cold_path_s = t_cold.elapsed_s();
+    assert!(!cold_resp.warm, "first path request must not be warm");
+    let t_warm = Timer::start();
+    let warm_resp = serve_call(&path_req);
+    let warm_path_s = t_warm.elapsed_s();
+    assert!(warm_resp.warm, "second identical path request must be warm");
+
+    // Bitwise gate: served bytes vs the batch walk over the same dataset.
+    let srv_spec = path_req.dataset.as_ref().expect("path request carries a dataset");
+    let srv_ds = resolve_dataset(&srv_spec.name, srv_spec.seed, srv_spec.scale)
+        .expect("resolve serve dataset");
+    let (_srv_out, srv_betas) = run_tlfre_path_with_coefficients(
+        &srv_ds.x,
+        &srv_ds.y,
+        &srv_ds.groups,
+        &path_req.path_config(),
+    );
+    let batch_bytes = coef_hex_dump(&srv_betas);
+    let serve_bitwise_equal =
+        cold_resp.coef_dump() == batch_bytes && warm_resp.coef_dump() == batch_bytes;
+    assert!(serve_bitwise_equal, "served coefficient bytes diverged from the batch walk");
+
+    // Point requests on a fresh cache line (different α → different key):
+    // cold pays the prefix walk to the index, warm answers from the cache.
+    let mut point_req = serve_req(0.75);
+    point_req.kind = RequestKind::SolvePoint;
+    point_req.lambda_index = Some(5);
+    let t_pcold = Timer::start();
+    let pcold = serve_call(&point_req);
+    let cold_point_s = t_pcold.elapsed_s();
+    assert!(!pcold.warm);
+    let t_pwarm = Timer::start();
+    let pwarm = serve_call(&point_req);
+    let warm_point_s = t_pwarm.elapsed_s();
+    assert!(pwarm.warm);
+    assert_eq!(pcold.coef_hex, pwarm.coef_hex, "warm point bytes diverged");
+
+    // Round-trip latency under concurrency: 4 clients × 25 warm point
+    // requests each — measures the wire + engine overhead of a cache hit.
+    let (srv_clients, srv_reps) = (4usize, 25usize);
+    let mut lat_joins = Vec::new();
+    for _ in 0..srv_clients {
+        let (socket, req) = (srv_socket.clone(), point_req.clone());
+        lat_joins.push(std::thread::spawn(move || {
+            let body = req.to_json().to_string_compact();
+            let mut lat_s = Vec::with_capacity(srv_reps);
+            for _ in 0..srv_reps {
+                let t = Timer::start();
+                let (status, text) = wire::call(&socket, &body).expect("latency call");
+                lat_s.push(t.elapsed_s());
+                assert_eq!(status, 200, "{text}");
+            }
+            lat_s
+        }));
+    }
+    let mut lat_ms: Vec<f64> =
+        lat_joins.into_iter().flat_map(|j| j.join().expect("latency client")).collect();
+    lat_ms.iter_mut().for_each(|v| *v *= 1e3);
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let p50_ms = lat_ms[lat_ms.len() / 2];
+    let p95_ms = lat_ms[(lat_ms.len() * 95 / 100).min(lat_ms.len() - 1)];
+
+    let warm_lt_cold = warm_path_s < cold_path_s && warm_point_s < cold_point_s;
+    println!(
+        "  path: cold {:8.2} ms   warm {:8.2} ms   point: cold {:8.2} ms   warm {:8.2} ms",
+        cold_path_s * 1e3,
+        warm_path_s * 1e3,
+        cold_point_s * 1e3,
+        warm_point_s * 1e3,
+    );
+    println!(
+        "  {} clients × {} warm points: p50 {:6.2} ms   p95 {:6.2} ms   (bitwise equal: {})",
+        srv_clients, srv_reps, p50_ms, p95_ms, serve_bitwise_equal,
+    );
+
+    let (shut_status, _) = wire::call(&srv_socket, r#"{"v": 1, "kind": "shutdown"}"#)
+        .expect("shutdown call");
+    assert_eq!(shut_status, 200);
+    srv_handle.join().expect("server thread").expect("server exit");
+
+    let serve_report = Json::obj()
+        .set("bench", "perf_kernels/serve")
+        .set("threads", pool::num_threads())
+        .set("dataset", "synthetic1 @ scale 0.05")
+        .set("n_lambda", 10usize)
+        .set("cold_path_s", cold_path_s)
+        .set("warm_path_s", warm_path_s)
+        .set("cold_point_s", cold_point_s)
+        .set("warm_point_s", warm_point_s)
+        .set(
+            "concurrent",
+            Json::obj()
+                .set("clients", srv_clients)
+                .set("requests_per_client", srv_reps)
+                .set("p50_ms", p50_ms)
+                .set("p95_ms", p95_ms),
+        )
+        .set("warm_lt_cold", warm_lt_cold)
+        .set("bitwise_equal", serve_bitwise_equal);
+    let serve_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+    match std::fs::write(serve_out, serve_report.to_string_pretty()) {
+        Ok(()) => println!("  serve results written to {serve_out}"),
+        Err(e) => eprintln!("  warning: could not write {serve_out}: {e}"),
+    }
 }

@@ -9,7 +9,7 @@
 
 use tlfre::bench_harness::tables::{render_speedup_table, speedup_to_json, SpeedupColumn};
 use tlfre::bench_harness::BenchArgs;
-use tlfre::coordinator::{run_baseline_path, run_tlfre_path, PathConfig};
+use tlfre::coordinator::{run_baseline_path, run_tlfre_path, PathConfig, SolveControls};
 use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
 use tlfre::util::json::Json;
 
@@ -31,10 +31,13 @@ fn main() {
         for (alpha, label) in alphas.iter().zip(&labels) {
             let cfg = PathConfig {
                 alpha: *alpha,
-                n_lambda: args.n_lambda(),
-                lambda_min_ratio: 0.01,
-                tol: 1e-6,
-                max_iter: 20_000,
+                controls: SolveControls {
+                    n_lambda: args.n_lambda(),
+                    lambda_min_ratio: 0.01,
+                    tol: 1e-6,
+                    max_iter: 20_000,
+                    ..Default::default()
+                },
                 ..Default::default()
             };
             let screened = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);

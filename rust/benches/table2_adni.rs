@@ -7,7 +7,7 @@
 
 use tlfre::bench_harness::tables::{render_speedup_table, speedup_to_json, SpeedupColumn};
 use tlfre::bench_harness::BenchArgs;
-use tlfre::coordinator::{run_baseline_path, run_tlfre_path, PathConfig};
+use tlfre::coordinator::{run_baseline_path, run_tlfre_path, PathConfig, SolveControls};
 use tlfre::data::registry::RealDataset;
 use tlfre::util::json::Json;
 
@@ -34,10 +34,13 @@ fn main() {
         for (alpha, label) in alphas.iter().zip(&labels) {
             let cfg = PathConfig {
                 alpha: *alpha,
-                n_lambda: args.n_lambda(),
-                lambda_min_ratio: 0.01,
-                tol: 1e-5,
-                max_iter: 10_000,
+                controls: SolveControls {
+                    n_lambda: args.n_lambda(),
+                    lambda_min_ratio: 0.01,
+                    tol: 1e-5,
+                    max_iter: 10_000,
+                    ..Default::default()
+                },
                 ..Default::default()
             };
             let screened = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);

@@ -5,7 +5,7 @@
 //! per-set λ-grid sized so the whole table completes on one core.
 
 use tlfre::bench_harness::BenchArgs;
-use tlfre::coordinator::{run_dpc_path, run_nonneg_baseline, DpcPathConfig};
+use tlfre::coordinator::{run_dpc_path, run_nonneg_baseline, DpcPathConfig, SolveControls};
 use tlfre::data::registry::RealDataset;
 use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
 use tlfre::data::Dataset;
@@ -58,10 +58,13 @@ fn main() {
     for (ds, nl_default, mi) in jobs {
         let nl = if args.full { 100 } else { args.n_lambda.unwrap_or(nl_default) };
         let cfg = DpcPathConfig {
-            n_lambda: nl,
-            lambda_min_ratio: if args.full { 0.01 } else { 0.1 },
-            tol: 1e-5,
-            max_iter: mi,
+            controls: SolveControls {
+                n_lambda: nl,
+                lambda_min_ratio: if args.full { 0.01 } else { 0.1 },
+                tol: 1e-5,
+                max_iter: mi,
+                ..Default::default()
+            },
             ..Default::default()
         };
         eprintln!("[table3] {} ({} λ values)", ds.describe(), nl);

@@ -1,5 +1,15 @@
 //! Command-line interface (hand-rolled; clap is unavailable offline).
 //!
+//! Every path-solving command translates its flags into the same typed
+//! [`SolveRequest`] the serve-mode wire protocol parses
+//! ([`solve_request_from_args`] / [`dataset_spec_from_args`]), so the
+//! batch CLI and the resident engine cannot drift: same dataset
+//! materialization ([`LoadedData::load`]), same [`PathConfig`]
+//! translation, same defaults ([`crate::config::Config::default`] over
+//! [`crate::coordinator::SolveControls::default`]). Unknown flags are
+//! typed errors naming the flag ([`Args::expect_known`]), like unknown
+//! keys in the `--config` file and in wire requests.
+//!
 //! ```text
 //! tlfre generate  --dataset synthetic1 --out ds.bin [--seed 42] [--scale 0.1]
 //!                  [--stream] [--n 250] [--block-cols 256]
@@ -13,8 +23,11 @@
 //! tlfre cv         --dataset ... [--k-folds 5] [--alpha 1.0] [--solver bcd]
 //!                  [--cv-serial] [--backend dense|csc]
 //! tlfre dpc-path   --dataset mnist|pie|... [--n-lambda 100] [--no-screening]
-//!                  [--backend dense|csc|mmap|sharded]
+//!                  [--backend dense|csc|mmap|sharded] [--max-seconds 60]
 //! tlfre lambda-max --dataset ... [--alpha 1.0] [--streaming] [--block-groups 64]
+//! tlfre serve      --socket /tmp/tlfre.sock
+//! tlfre client     --socket /tmp/tlfre.sock --kind solve-path --dataset ...
+//!                  [--lambda-index 17] [--coef-out coefs.hex]
 //! tlfre runtime-info
 //! ```
 
@@ -26,17 +39,27 @@ use crate::coordinator::{
     run_tlfre_path, run_tlfre_path_checkpointed, run_tlfre_path_with_coefficients,
     CheckpointOptions, CvOutput, DpcPathConfig,
 };
-use crate::data::registry::RealDataset;
-use crate::data::synthetic::{
-    generate_sparse_synthetic, generate_synthetic, generate_synthetic_streaming,
-    SparseSyntheticSpec, SyntheticSpec,
-};
-use crate::data::Dataset;
+use crate::data::registry::scaled;
+use crate::data::synthetic::{generate_synthetic_streaming, SyntheticSpec};
 use crate::error::{Context, Result};
 use crate::groups::GroupStructure;
-use crate::linalg::{CscMatrix, DenseMatrix, DesignMatrix, MmapDenseMatrix, SelectRows, ShardedMatrix};
+use crate::linalg::{CscMatrix, DesignMatrix, MmapDenseMatrix, SelectRows};
+use crate::server::api::{
+    coef_hex_dump, BackendKind, DatasetSpec, RequestKind, SolveRequest, SolveResponse,
+};
+use crate::server::registry::LoadedData;
+use crate::server::wire;
 use crate::util::{fmt_duration, Timer};
 use std::collections::HashMap;
+
+// Re-exported so existing callers of `cli::resolve_dataset` keep working;
+// the CLI itself materializes datasets through [`LoadedData::load`].
+pub use crate::data::registry::resolve_dataset;
+
+/// Flags every config-bearing command accepts (parsed by `common_config`);
+/// [`Args::expect_known`] always allows these.
+const CONFIG_FLAGS: &[&str] =
+    &["config", "n-lambda", "min-ratio", "tol", "seed", "scale", "solver", "screen"];
 
 /// Parsed command line: subcommand + flag map.
 #[derive(Debug, Clone)]
@@ -93,45 +116,23 @@ impl Args {
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
-}
 
-/// Resolve a dataset name to a generated [`Dataset`].
-pub fn resolve_dataset(name: &str, seed: u64, scale: f64) -> Result<Dataset> {
-    let ds = match name {
-        "synthetic1" => generate_synthetic(
-            &SyntheticSpec::synthetic1_scaled(
-                250,
-                scaled(10_000, scale),
-                scaled(10_000, scale) / 10,
-            ),
-            seed,
-        ),
-        "synthetic2" => generate_synthetic(
-            &SyntheticSpec::synthetic2_scaled(
-                250,
-                scaled(10_000, scale),
-                scaled(10_000, scale) / 10,
-            ),
-            seed,
-        ),
-        "adni-gmv" => RealDataset::AdniGmv.generate(scale, seed),
-        "adni-wmv" => RealDataset::AdniWmv.generate(scale, seed),
-        "breast-cancer" => RealDataset::BreastCancer.generate(scale, seed),
-        "leukemia" => RealDataset::Leukemia.generate(scale, seed),
-        "prostate" => RealDataset::Prostate.generate(scale, seed),
-        "pie" => RealDataset::Pie.generate(scale, seed),
-        "mnist" => RealDataset::Mnist.generate(scale, seed),
-        "svhn" => RealDataset::Svhn.generate(scale, seed),
-        other => bail!(
-            "unknown dataset '{other}' (synthetic1|synthetic2|adni-gmv|adni-wmv|breast-cancer|leukemia|prostate|pie|mnist|svhn; 'sparse1' is handled by solve-path directly)"
-        ),
-    };
-    Ok(ds)
-}
-
-/// Round `p·scale` to a multiple of 10 (keeps uniform groups divisible).
-fn scaled(p: usize, scale: f64) -> usize {
-    (((p as f64 * scale) / 10.0).round() as usize * 10).max(20)
+    /// Reject flags/switches this command does not accept: a typo like
+    /// `--n-lamda` becomes a typed error naming the flag instead of a
+    /// silently applied default. [`CONFIG_FLAGS`] are always allowed.
+    pub fn expect_known(&self, flags: &[&str], switches: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !CONFIG_FLAGS.contains(&k.as_str()) && !flags.contains(&k.as_str()) {
+                bail!("unknown flag --{k} for '{}' (see `tlfre help`)", self.command);
+            }
+        }
+        for s in &self.switches {
+            if !switches.contains(&s.as_str()) {
+                bail!("unknown switch --{s} for '{}' (see `tlfre help`)", self.command);
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Spec for the streaming generator (`generate --stream`): same scaled
@@ -144,37 +145,6 @@ fn streaming_spec(name: &str, n: usize, scale: f64) -> Result<SyntheticSpec> {
         "synthetic2" => SyntheticSpec::synthetic2_scaled(n, p, p / 10),
         other => bail!("--stream supports synthetic1|synthetic2, got '{other}'"),
     })
-}
-
-/// Resolve the TLFREDS1 file backing the mmap backend. `--file` points at
-/// an existing dataset on disk; otherwise the named dataset is generated
-/// and saved to a temp file. The second tuple field is true when the file
-/// is temporary and should be removed after the run.
-fn mmap_source(args: &Args, name: &str, seed: u64, scale: f64) -> Result<(std::path::PathBuf, bool)> {
-    match args.get("file") {
-        Some(f) => Ok((std::path::PathBuf::from(f), false)),
-        None => {
-            let ds = resolve_dataset(name, seed, scale)?;
-            let path = std::env::temp_dir().join(format!(
-                "tlfre-mmap-{name}-{seed}-{}.bin",
-                std::process::id()
-            ));
-            crate::data::io::save(&ds, &path)?;
-            Ok((path, true))
-        }
-    }
-}
-
-/// Build the row-sharded composite backend from a dense design
-/// (`--shards`, default: one shard per pool worker).
-fn sharded_from(args: &Args, x: &DenseMatrix) -> Result<ShardedMatrix> {
-    let k = args
-        .get_parsed::<usize>("shards")?
-        .unwrap_or_else(crate::util::pool::num_threads)
-        .max(1);
-    let sx = ShardedMatrix::from_dense(x, k);
-    println!("sharded backend: {} row shards over {} rows", sx.n_shards(), sx.rows());
-    Ok(sx)
 }
 
 const HELP: &str = "\
@@ -190,6 +160,11 @@ COMMANDS:
   dpc-path      run a DPC-screened nonnegative-Lasso λ-path
   generate      generate a dataset and save it to disk
   lambda-max    print λmax^α and the Corollary 10 curve sample
+  serve         start the resident path-serving engine on a unix socket
+                (datasets and completed path prefixes stay loaded across
+                requests; served results are bitwise identical to batch
+                runs — see rust/src/server/README.md)
+  client        send one request to a running serve engine
   runtime-info  probe the PJRT runtime and list artifacts
   help          this text
 
@@ -251,17 +226,23 @@ COMMON FLAGS:
   --stop-after <K>     solve-path --checkpoint: stop cleanly after K total
                        completed λ steps (deterministic stand-in for a
                        mid-path kill; used by the CI resume smoke)
-  --max-seconds <S>    wall-clock budget for the whole path; an expiring
-                       solve returns its best iterate with a certified
+  --max-seconds <S>    wall-clock budget for the whole path (solve-path,
+                       dpc-path, serve requests); an expiring solve
+                       returns its best iterate with a certified
                        suboptimality bound, and the path truncates to a
                        clean completed prefix
   --validate-data      pre-solve scan of X/y: NaN/Inf entries, zero-norm
                        columns, empty groups → typed error naming the
                        coordinate (default for --file-backed inputs)
   --no-validate        skip the pre-solve data scan
-  --coef-out <path>    solve-path (screened): per-λ coefficient dump, one
+  --coef-out <path>    solve-path / client: per-λ coefficient dump, one
                        line per step, each f32 as its 8-hex-digit bit
                        pattern — byte-stable for diffing runs/backends
+  --socket <path>      serve/client: unix socket the engine listens on
+  --kind <name>        client: load-dataset|solve-path|solve-point|cv|
+                       stats|shutdown
+  --lambda-index <i>   client --kind solve-point: 0-based λ grid index
+                       (0 = λmax)
   --out <path>         output file (generate / JSON reports)
 ";
 
@@ -284,6 +265,8 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "cv" => cmd_cv(&args),
         "dpc-path" => cmd_dpc_path(&args),
         "lambda-max" => cmd_lambda_max(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "runtime-info" => cmd_runtime_info(),
         other => {
             eprintln!("unknown command '{other}'\n\n{HELP}");
@@ -313,11 +296,8 @@ fn common_config(args: &Args) -> Result<Config> {
         cfg.scale = v;
     }
     if let Some(v) = args.get("solver") {
-        cfg.solver = match v {
-            "fista" => SolverKind::Fista,
-            "bcd" => SolverKind::Bcd,
-            other => bail!("unknown solver '{other}' (fista|bcd)"),
-        };
+        cfg.solver =
+            SolverKind::parse(v).with_context(|| format!("unknown solver '{v}' (fista|bcd)"))?;
     }
     if let Some(v) = args.get("screen") {
         cfg.screen = crate::screening::ScreenKind::parse(v).with_context(|| {
@@ -327,7 +307,86 @@ fn common_config(args: &Args) -> Result<Config> {
     Ok(cfg)
 }
 
+/// Build the [`DatasetSpec`] a command's flags describe — the same struct
+/// a serve-mode request carries, so CLI and wire dataset resolution are
+/// one code path ([`LoadedData::load`]).
+fn dataset_spec_from_args(args: &Args, cfg: &Config) -> Result<DatasetSpec> {
+    let name = args.get("dataset").context("--dataset is required")?;
+    let mut spec = DatasetSpec::new(name);
+    spec.seed = cfg.seed;
+    spec.scale = cfg.scale;
+    if let Some(b) = args.get("backend") {
+        spec.backend = BackendKind::parse(b)
+            .with_context(|| format!("unknown backend '{b}' (dense|csc|mmap|sharded)"))?;
+    }
+    if let Some(d) = args.get_parsed::<f64>("density")? {
+        if !(d > 0.0 && d <= 1.0) {
+            bail!("--density must be in (0, 1], got {d}");
+        }
+        spec.density = d;
+    }
+    spec.file = args.get("file").map(str::to_string);
+    if let Some(k) = args.get_parsed::<usize>("shards")? {
+        if k == 0 {
+            bail!("--shards must be ≥ 1");
+        }
+        spec.shards = Some(k);
+    }
+    Ok(spec)
+}
+
+/// Translate parsed flags into the typed [`SolveRequest`] the engine
+/// executes — the same struct the wire JSON parses into, so the batch
+/// commands, the `client` command, and serve mode cannot drift.
+fn solve_request_from_args(args: &Args, cfg: &Config, kind: RequestKind) -> Result<SolveRequest> {
+    let mut req = SolveRequest::new(kind);
+    req.solver = cfg.solver;
+    req.screen = cfg.screen;
+    req.controls = cfg.controls;
+    req.parallel_bcd_groups = cfg.parallel_bcd_groups || args.has("parallel-bcd");
+    req.controls.verify_safety = req.controls.verify_safety || args.has("verify");
+    if let Some(k) = args.get_parsed::<usize>("refresh-every")? {
+        req.controls.lipschitz_refresh_every = if k == 0 { None } else { Some(k) };
+    }
+    if let Some(s) = args.get_parsed::<f64>("max-seconds")? {
+        if !(s.is_finite() && s > 0.0) {
+            bail!("--max-seconds must be positive and finite, got {s}");
+        }
+        req.controls.max_seconds = Some(s);
+    }
+    match args.get_parsed::<f64>("alpha")? {
+        Some(a) => {
+            if !(a > 0.0 && a.is_finite()) {
+                bail!("--alpha must be positive and finite, got {a}");
+            }
+            req.alpha = a;
+            req.alphas = vec![a];
+        }
+        None => req.alphas = cfg.alphas.clone(),
+    }
+    match args.get_parsed::<usize>("k-folds")? {
+        Some(k) if k < 2 => bail!("--k-folds must be ≥ 2"),
+        Some(k) => req.k_folds = k,
+        None => req.k_folds = cfg.k_folds,
+    }
+    if kind.needs_dataset() {
+        req.dataset = Some(dataset_spec_from_args(args, cfg)?);
+    }
+    req.lambda_index = args.get_parsed::<usize>("lambda-index")?;
+    if kind == RequestKind::SolvePoint {
+        let idx = req.lambda_index.context("--lambda-index is required for solve-point")?;
+        if idx >= req.controls.n_lambda {
+            bail!(
+                "--lambda-index {idx} out of range for the {}-point grid",
+                req.controls.n_lambda
+            );
+        }
+    }
+    Ok(req)
+}
+
 fn cmd_generate(args: &Args) -> Result<i32> {
+    args.expect_known(&["dataset", "out", "n", "block-cols"], &["stream"])?;
     let cfg = common_config(args)?;
     let name = args.get("dataset").context("--dataset is required")?;
     let out = args.get("out").context("--out is required")?;
@@ -352,75 +411,52 @@ fn cmd_generate(args: &Args) -> Result<i32> {
 }
 
 fn cmd_solve_path(args: &Args) -> Result<i32> {
+    args.expect_known(
+        &[
+            "dataset",
+            "alpha",
+            "backend",
+            "file",
+            "shards",
+            "density",
+            "refresh-every",
+            "max-seconds",
+            "checkpoint",
+            "checkpoint-every",
+            "stop-after",
+            "coef-out",
+            "out",
+        ],
+        &["verify", "parallel-bcd", "no-screening", "resume", "validate-data", "no-validate"],
+    )?;
     let cfg = common_config(args)?;
-    let name = args.get("dataset").context("--dataset is required")?;
-    let alpha: f64 = args.get_parsed("alpha")?.unwrap_or(1.0);
-    let backend = args.get("backend").unwrap_or("dense");
-    let mut pc = cfg.path_config(alpha);
-    pc.verify_safety = args.has("verify");
-    if let Some(k) = args.get_parsed::<usize>("refresh-every")? {
-        pc.lipschitz_refresh_every = if k == 0 { None } else { Some(k) };
-    }
-    if args.has("parallel-bcd") {
-        pc.parallel_bcd_groups = true;
-    }
-    if let Some(s) = args.get_parsed::<f64>("max-seconds")? {
-        if !(s.is_finite() && s > 0.0) {
-            bail!("--max-seconds must be positive and finite, got {s}");
+    let req = solve_request_from_args(args, &cfg, RequestKind::SolvePath)?;
+    let pc = req.path_config();
+    let spec = req.dataset.as_ref().expect("solve-path requests carry a dataset");
+    let data = LoadedData::load(spec)?;
+    println!("{}", data.describe());
+    match &data {
+        LoadedData::Dense(d) => {
+            run_sgl_path(args, &d.x, &d.y, &d.groups, &pc, &d.name, req.alpha)
         }
-        pc.max_seconds = Some(s);
-    }
-
-    if name == "sparse1" || name == "sparse" {
-        // CSC-native sparse synthetic workload.
-        let density: f64 = args.get_parsed("density")?.unwrap_or(0.05);
-        let p = scaled(10_000, cfg.scale);
-        let spec = SparseSyntheticSpec::new(250, p, p / 10, density);
-        let ds = generate_sparse_synthetic(&spec, cfg.seed);
-        println!("{}", ds.describe());
-        return match backend {
-            "csc" => run_sgl_path(args, &ds.x, &ds.y, &ds.groups, &pc, &ds.name, alpha),
-            "dense" => {
-                let xd = ds.x.to_dense();
-                run_sgl_path(args, &xd, &ds.y, &ds.groups, &pc, &ds.name, alpha)
-            }
-            other => bail!("sparse1 supports backend dense|csc, got '{other}'"),
-        };
-    }
-
-    if backend == "mmap" {
-        // Out-of-core path: X stays on disk and is paged in per column.
-        let (path, temp) = mmap_source(args, name, cfg.seed, cfg.scale)?;
-        let mds = crate::data::io::open_mmap(&path)?;
-        println!(
-            "{} backend: {}×{} X payload, {} MiB on disk",
-            MmapDenseMatrix::backend_kind(),
-            mds.x.rows(),
-            mds.x.cols(),
-            mds.x.x_payload_bytes() >> 20
-        );
-        let code = run_sgl_path(args, &mds.x, &mds.y, &mds.groups, &pc, &mds.name, alpha);
-        if temp {
-            drop(mds);
-            let _ = std::fs::remove_file(&path);
+        LoadedData::Csc(d) => {
+            println!("csc backend: nnz {} ({:.2}% dense)", d.x.nnz(), d.x.density() * 100.0);
+            run_sgl_path(args, &d.x, &d.y, &d.groups, &pc, &d.name, req.alpha)
         }
-        return code;
-    }
-
-    let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
-    println!("{}", ds.describe());
-    match backend {
-        "dense" => run_sgl_path(args, &ds.x, &ds.y, &ds.groups, &pc, &ds.name, alpha),
-        "csc" => {
-            let xs = CscMatrix::from_dense(&ds.x);
-            println!("csc backend: nnz {} ({:.2}% dense)", xs.nnz(), xs.density() * 100.0);
-            run_sgl_path(args, &xs, &ds.y, &ds.groups, &pc, &ds.name, alpha)
+        LoadedData::Mmap(m) => {
+            println!(
+                "{} backend: {}×{} X payload, {} MiB on disk",
+                MmapDenseMatrix::backend_kind(),
+                m.ds.x.rows(),
+                m.ds.x.cols(),
+                m.ds.x.x_payload_bytes() >> 20
+            );
+            run_sgl_path(args, &m.ds.x, &m.ds.y, &m.ds.groups, &pc, &m.ds.name, req.alpha)
         }
-        "sharded" => {
-            let sx = sharded_from(args, &ds.x)?;
-            run_sgl_path(args, &sx, &ds.y, &ds.groups, &pc, &ds.name, alpha)
+        LoadedData::Sharded(d) => {
+            println!("sharded backend: {} row shards over {} rows", d.x.n_shards(), d.x.rows());
+            run_sgl_path(args, &d.x, &d.y, &d.groups, &pc, &d.name, req.alpha)
         }
-        other => bail!("unknown backend '{other}' (dense|csc|mmap|sharded)"),
     }
 }
 
@@ -498,7 +534,7 @@ fn run_sgl_path<M: DesignMatrix>(
             .map(|s| s.certified_suboptimality)
             .fold(0.0f64, f64::max);
         println!(
-            "{exhausted} step(s) stopped before convergence; worst certified suboptimality {worst:.3e}"
+            "{exhausted} step(s) stopped early; worst certified suboptimality {worst:.3e}"
         );
     }
     println!(
@@ -523,58 +559,28 @@ fn run_sgl_path<M: DesignMatrix>(
     Ok(0)
 }
 
-/// Per-λ coefficient dump for bitwise comparison: one line per grid point,
-/// each f32 rendered as its 8-hex-digit bit pattern. Text-stable across
-/// platforms and backends, so CI can `cmp` a resumed run against an
-/// uninterrupted one.
-fn coef_hex_dump(betas: &[Vec<f32>]) -> String {
-    let per_line = betas.first().map_or(0, |b| b.len() * 9 + 1);
-    let mut s = String::with_capacity(betas.len() * per_line);
-    for b in betas {
-        for (i, v) in b.iter().enumerate() {
-            if i > 0 {
-                s.push(' ');
-            }
-            s.push_str(&format!("{:08x}", v.to_bits()));
-        }
-        s.push('\n');
-    }
-    s
-}
-
 fn cmd_cv(args: &Args) -> Result<i32> {
+    args.expect_known(
+        &["dataset", "alpha", "backend", "k-folds", "refresh-every"],
+        &["cv-serial", "parallel-bcd"],
+    )?;
     let cfg = common_config(args)?;
-    let name = args.get("dataset").context("--dataset is required")?;
-    let k_folds = args.get_parsed::<usize>("k-folds")?.unwrap_or(cfg.k_folds);
-    if k_folds < 2 {
-        bail!("--k-folds must be ≥ 2");
-    }
-    // `--alpha` narrows the grid to a single α; otherwise the config's α
-    // grid (default: the paper's seven tan(ψ) values) is cross-validated.
-    let alphas: Vec<f64> = match args.get_parsed::<f64>("alpha")? {
-        Some(a) => vec![a],
-        None => cfg.alphas.clone(),
-    };
-    let mut pc = cfg.path_config(alphas[0]);
-    if let Some(k) = args.get_parsed::<usize>("refresh-every")? {
-        pc.lipschitz_refresh_every = if k == 0 { None } else { Some(k) };
-    }
-    if args.has("parallel-bcd") {
-        pc.parallel_bcd_groups = true;
-    }
-
-    let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
-    println!("{}", ds.describe());
-    let backend = args.get("backend").unwrap_or("dense");
+    let req = solve_request_from_args(args, &cfg, RequestKind::Cv)?;
+    let pc = req.path_config();
+    let (alphas, k_folds) = (&req.alphas, req.k_folds);
+    let spec = req.dataset.as_ref().expect("cv requests carry a dataset");
+    let data = LoadedData::load(spec)?;
+    println!("{}", data.describe());
     let t = Timer::start();
-    let out = match backend {
-        "dense" => run_cv(&ds.x, &ds.y, &ds.groups, &alphas, k_folds, &pc, cfg.seed, args),
-        "csc" => {
-            let xs = CscMatrix::from_dense(&ds.x);
-            println!("csc backend: nnz {} ({:.2}% dense)", xs.nnz(), xs.density() * 100.0);
-            run_cv(&xs, &ds.y, &ds.groups, &alphas, k_folds, &pc, cfg.seed, args)
+    let out = match &data {
+        LoadedData::Dense(d) => {
+            run_cv(&d.x, &d.y, &d.groups, alphas, k_folds, &pc, cfg.seed, args)
         }
-        other => bail!("unknown backend '{other}' (dense|csc)"),
+        LoadedData::Csc(d) => {
+            println!("csc backend: nnz {} ({:.2}% dense)", d.x.nnz(), d.x.density() * 100.0);
+            run_cv(&d.x, &d.y, &d.groups, alphas, k_folds, &pc, cfg.seed, args)
+        }
+        other => bail!("cv supports dense|csc backends, got '{}'", other.backend().as_str()),
     };
     let wall = t.elapsed_s();
     println!(
@@ -640,74 +646,68 @@ fn run_cv<M: DesignMatrix + SelectRows>(
 }
 
 fn cmd_dpc_path(args: &Args) -> Result<i32> {
+    args.expect_known(
+        &["dataset", "backend", "file", "shards", "density", "refresh-every", "max-seconds"],
+        &["verify", "dynamic", "no-screening"],
+    )?;
     let cfg = common_config(args)?;
-    let name = args.get("dataset").context("--dataset is required")?;
-    let pc = DpcPathConfig {
-        n_lambda: cfg.n_lambda,
-        lambda_min_ratio: cfg.lambda_min_ratio,
-        tol: cfg.tol,
-        max_iter: cfg.max_iter,
-        verify_safety: args.has("verify"),
-        gap_inflation: 0.0,
-        lipschitz_refresh_every: args.get_parsed::<usize>("refresh-every")?.filter(|&k| k > 0),
-        dynamic_screening: args.has("dynamic"),
-    };
-    let backend = args.get("backend").unwrap_or("dense");
+    let req = solve_request_from_args(args, &cfg, RequestKind::SolvePath)?;
+    let pc = DpcPathConfig { controls: req.controls, dynamic_screening: args.has("dynamic") };
     let baseline = args.has("no-screening");
-    let (out, ds_name) = if backend == "mmap" {
-        let (path, temp) = mmap_source(args, name, cfg.seed, cfg.scale)?;
-        let mds = crate::data::io::open_mmap(&path)?;
-        println!(
-            "{} backend: {}×{} X payload, {} MiB on disk",
-            MmapDenseMatrix::backend_kind(),
-            mds.x.rows(),
-            mds.x.cols(),
-            mds.x.x_payload_bytes() >> 20
-        );
-        let out = if baseline {
-            run_nonneg_baseline(&mds.x, &mds.y, &pc)
-        } else {
-            run_dpc_path(&mds.x, &mds.y, &pc)
-        };
-        let ds_name = mds.name.clone();
-        if temp {
-            drop(mds);
-            let _ = std::fs::remove_file(&path);
+    let spec = req.dataset.as_ref().expect("dpc-path requests carry a dataset");
+    let data = LoadedData::load(spec)?;
+    println!("{}", data.describe());
+    let out = match &data {
+        LoadedData::Dense(d) => {
+            if baseline {
+                run_nonneg_baseline(&d.x, &d.y, &pc)
+            } else {
+                run_dpc_path(&d.x, &d.y, &pc)
+            }
         }
-        (out, ds_name)
-    } else {
-        let ds = resolve_dataset(name, cfg.seed, cfg.scale)?;
-        println!("{}", ds.describe());
-        let out = match backend {
-            "dense" => {
-                if baseline {
-                    run_nonneg_baseline(&ds.x, &ds.y, &pc)
-                } else {
-                    run_dpc_path(&ds.x, &ds.y, &pc)
-                }
+        LoadedData::Csc(d) => {
+            println!("csc backend: nnz {} ({:.2}% dense)", d.x.nnz(), d.x.density() * 100.0);
+            if baseline {
+                run_nonneg_baseline(&d.x, &d.y, &pc)
+            } else {
+                run_dpc_path(&d.x, &d.y, &pc)
             }
-            "csc" => {
-                let xs = CscMatrix::from_dense(&ds.x);
-                println!("csc backend: nnz {} ({:.2}% dense)", xs.nnz(), xs.density() * 100.0);
-                if baseline {
-                    run_nonneg_baseline(&xs, &ds.y, &pc)
-                } else {
-                    run_dpc_path(&xs, &ds.y, &pc)
-                }
+        }
+        LoadedData::Mmap(m) => {
+            println!(
+                "{} backend: {}×{} X payload, {} MiB on disk",
+                MmapDenseMatrix::backend_kind(),
+                m.ds.x.rows(),
+                m.ds.x.cols(),
+                m.ds.x.x_payload_bytes() >> 20
+            );
+            if baseline {
+                run_nonneg_baseline(&m.ds.x, &m.ds.y, &pc)
+            } else {
+                run_dpc_path(&m.ds.x, &m.ds.y, &pc)
             }
-            "sharded" => {
-                let sx = sharded_from(args, &ds.x)?;
-                if baseline {
-                    run_nonneg_baseline(&sx, &ds.y, &pc)
-                } else {
-                    run_dpc_path(&sx, &ds.y, &pc)
-                }
+        }
+        LoadedData::Sharded(d) => {
+            println!("sharded backend: {} row shards over {} rows", d.x.n_shards(), d.x.rows());
+            if baseline {
+                run_nonneg_baseline(&d.x, &d.y, &pc)
+            } else {
+                run_dpc_path(&d.x, &d.y, &pc)
             }
-            other => bail!("unknown backend '{other}' (dense|csc|mmap|sharded)"),
-        };
-        (out, ds.name.clone())
+        }
     };
-    println!("{}", crate::bench_harness::tables::render_dpc_series(&ds_name, &out));
+    println!("{}", crate::bench_harness::tables::render_dpc_series(data.name(), &out));
+    if out.truncated {
+        println!(
+            "path truncated: {} of {} grid points completed (--max-seconds)",
+            out.steps.len(),
+            pc.n_lambda
+        );
+    }
+    let exhausted = out.steps.iter().filter(|s| s.budget_exhausted).count();
+    if exhausted > 0 {
+        println!("{exhausted} step(s) stopped before convergence (wall-clock budget)");
+    }
     println!(
         "screen {}  solve {}",
         fmt_duration(out.screen_total_s),
@@ -716,7 +716,115 @@ fn cmd_dpc_path(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+fn cmd_serve(args: &Args) -> Result<i32> {
+    args.expect_known(&["socket"], &[])?;
+    let socket = args.get("socket").context("--socket is required")?;
+    println!(
+        "tlfre serve: listening on {socket} ({} pool workers); \
+         SIGTERM or a shutdown request stops cleanly",
+        crate::util::pool::num_threads()
+    );
+    crate::server::serve(std::path::Path::new(socket))?;
+    println!("tlfre serve: shut down cleanly");
+    Ok(0)
+}
+
+fn cmd_client(args: &Args) -> Result<i32> {
+    args.expect_known(
+        &[
+            "socket",
+            "kind",
+            "dataset",
+            "backend",
+            "file",
+            "shards",
+            "density",
+            "alpha",
+            "lambda-index",
+            "k-folds",
+            "refresh-every",
+            "max-seconds",
+            "coef-out",
+            "out",
+        ],
+        &["verify", "parallel-bcd"],
+    )?;
+    let socket = args.get("socket").context("--socket is required")?;
+    let kind_s = args
+        .get("kind")
+        .context("--kind is required (load-dataset|solve-path|solve-point|cv|stats|shutdown)")?;
+    let kind = RequestKind::parse(kind_s).with_context(|| {
+        format!("unknown kind '{kind_s}' (load-dataset|solve-path|solve-point|cv|stats|shutdown)")
+    })?;
+    let cfg = common_config(args)?;
+    let req = solve_request_from_args(args, &cfg, kind)?;
+    let body = req.to_json().to_string_compact();
+    let (status, text) = wire::call(std::path::Path::new(socket), &body)?;
+    if status != 200 {
+        bail!("server answered {status}: {text}");
+    }
+    let resp = SolveResponse::parse(&text)?;
+    if !resp.ok {
+        bail!("'{}' request failed: {}", kind.as_str(), resp.error.unwrap_or_default());
+    }
+    render_response(args, &resp)
+}
+
+/// Render a successful serve-mode response (and write `--coef-out` /
+/// `--out` side files).
+fn render_response(args: &Args, resp: &SolveResponse) -> Result<i32> {
+    let warm = if resp.warm { " [warm: served from the resident path cache]" } else { "" };
+    if resp.dataset.is_empty() {
+        println!("{} ok{warm}", resp.kind.as_str());
+    } else {
+        println!("{} ok — {}{warm}", resp.kind.as_str(), resp.dataset);
+    }
+    match resp.kind {
+        RequestKind::SolvePath => {
+            println!(
+                "λmax = {:.6}; {} of {} grid points{}",
+                resp.lambda_max,
+                resp.steps.len(),
+                resp.grid.len(),
+                if resp.truncated { " (truncated: wall-clock budget)" } else { "" }
+            );
+        }
+        RequestKind::SolvePoint => {
+            println!(
+                "λ = {:.6} (grid index {}); certified suboptimality {:.3e}",
+                resp.lambda.unwrap_or(f64::NAN),
+                args.get("lambda-index").unwrap_or("?"),
+                resp.certified_suboptimality.unwrap_or(f64::INFINITY)
+            );
+        }
+        RequestKind::LoadDataset | RequestKind::Cv | RequestKind::Stats => {
+            print!("{}", resp.payload.to_string_pretty());
+        }
+        RequestKind::Shutdown => println!("server is shutting down"),
+    }
+    if resp.screen_total_s > 0.0 || resp.solve_total_s > 0.0 {
+        println!(
+            "screen {}  solve {}{}",
+            fmt_duration(resp.screen_total_s),
+            fmt_duration(resp.solve_total_s),
+            if resp.warm { " (paid by an earlier request)" } else { "" }
+        );
+    }
+    if let Some(path) = args.get("coef-out") {
+        std::fs::write(path, resp.coef_dump())
+            .with_context(|| format!("writing --coef-out {path}"))?;
+        println!("coefficient bit dump ({} line(s)) written to {path}", resp.coef_hex.len());
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, resp.to_json().to_string_pretty())
+            .with_context(|| format!("writing --out {path}"))?;
+        println!("json written to {path}");
+    }
+    Ok(0)
+}
+
 fn cmd_lambda_max(args: &Args) -> Result<i32> {
+    args.expect_known(&["dataset", "alpha", "block-groups"], &["streaming"])?;
     let cfg = common_config(args)?;
     let name = args.get("dataset").context("--dataset is required")?;
     let alpha: f64 = args.get_parsed("alpha")?.unwrap_or(1.0);
@@ -775,6 +883,7 @@ fn cmd_runtime_info() -> Result<i32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::DenseMatrix;
 
     fn sv(xs: &[&str]) -> Vec<String> {
         xs.iter().map(|s| s.to_string()).collect()
@@ -813,6 +922,69 @@ mod tests {
     }
 
     #[test]
+    fn unknown_flags_and_switches_are_typed_errors() {
+        let a =
+            Args::parse(&sv(&["solve-path", "--dataset", "synthetic1", "--n-lamda", "10"]))
+                .unwrap();
+        let err = a.expect_known(&["dataset"], &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("--n-lamda"), "{err:#}");
+        let a = Args::parse(&sv(&["dpc-path", "--dataset", "mnist", "--verfy"])).unwrap();
+        let err = a.expect_known(&["dataset"], &["verify"]).unwrap_err();
+        assert!(format!("{err:#}").contains("--verfy"), "{err:#}");
+        // Config flags are always allowed; known flags/switches pass.
+        let a = Args::parse(&sv(&["cv", "--seed", "7", "--dataset", "x", "--cv-serial"]))
+            .unwrap();
+        assert!(a.expect_known(&["dataset"], &["cv-serial"]).is_ok());
+    }
+
+    #[test]
+    fn cli_flags_translate_into_the_wire_request() {
+        let a = Args::parse(&sv(&[
+            "client",
+            "--dataset",
+            "sparse1",
+            "--backend",
+            "csc",
+            "--alpha",
+            "0.5",
+            "--n-lambda",
+            "12",
+            "--max-seconds",
+            "5",
+            "--lambda-index",
+            "3",
+            "--parallel-bcd",
+        ]))
+        .unwrap();
+        let cfg = common_config(&a).unwrap();
+        let req = solve_request_from_args(&a, &cfg, RequestKind::SolvePoint).unwrap();
+        assert_eq!(req.alpha, 0.5);
+        assert_eq!(req.controls.n_lambda, 12);
+        assert_eq!(req.controls.max_seconds, Some(5.0));
+        assert_eq!(req.lambda_index, Some(3));
+        assert!(req.parallel_bcd_groups);
+        let spec = req.dataset.as_ref().unwrap();
+        assert_eq!(spec.name, "sparse1");
+        assert_eq!(spec.backend, BackendKind::Csc);
+        // The flag translation round-trips through the wire schema.
+        let back = SolveRequest::parse(&req.to_json().to_string_compact()).unwrap();
+        assert_eq!(req, back);
+        // Out-of-range point index is a typed error at translation time.
+        let a = Args::parse(&sv(&[
+            "client",
+            "--dataset",
+            "synthetic1",
+            "--n-lambda",
+            "4",
+            "--lambda-index",
+            "4",
+        ]))
+        .unwrap();
+        let cfg = common_config(&a).unwrap();
+        assert!(solve_request_from_args(&a, &cfg, RequestKind::SolvePoint).is_err());
+    }
+
+    #[test]
     fn resolve_known_datasets() {
         let ds = resolve_dataset("synthetic1", 1, 0.01).unwrap();
         assert_eq!(ds.n(), 250);
@@ -839,7 +1011,7 @@ mod tests {
 
     #[test]
     fn cv_all_nonfinite_grid_is_an_error() {
-        use crate::coordinator::cross_validate_serial;
+        use crate::coordinator::SolveControls;
         // One +∞ response poisons every grid point's cross-fold MSE sum
         // (each fold holds row 0 out exactly once). n_lambda = 1 keeps the
         // path at the analytic β ≡ 0 step, so no solver runs on the
@@ -850,7 +1022,10 @@ mod tests {
         let mut y: Vec<f32> = (0..n).map(|i| i as f32 * 0.3 - 1.0).collect();
         y[0] = f32::INFINITY;
         let g = GroupStructure::uniform(p, 4);
-        let pc = PathConfig { n_lambda: 1, lambda_min_ratio: 0.5, ..Default::default() };
+        let pc = PathConfig {
+            controls: SolveControls { n_lambda: 1, lambda_min_ratio: 0.5, ..Default::default() },
+            ..Default::default()
+        };
         let out = cross_validate_serial(&x, &y, &g, &[1.0], 3, &pc, 9);
         assert_eq!(out.nonfinite_points, out.points.len());
         assert!(!out.points.is_empty());

@@ -5,37 +5,139 @@
 //! `--config`. All fields have defaults — an empty object is a valid
 //! config — and unknown keys are rejected to catch typos.
 
-use crate::coordinator::runner::SolverKind;
+use crate::bail;
+use crate::coordinator::runner::{SolveControls, SolverKind};
+use crate::error::{Context, Result};
 use crate::screening::rule::ScreenKind;
 use crate::util::json::Json;
-use crate::bail;
-use crate::error::{Context, Result};
+
+/// The **single** JSON-parse path for the shared solve-control knobs.
+///
+/// Every JSON surface that carries solve controls — the `--config` file
+/// parsed by [`Config::from_json`] and the serve-mode wire schema parsed
+/// by [`crate::server::api`] — routes unmatched keys through
+/// [`SolveControls::apply_json_key`], so key names, per-key validation,
+/// and error wording cannot drift between the CLI and the server.
+impl SolveControls {
+    /// Apply one JSON key to these controls. Returns `Ok(true)` when the
+    /// key named a control field (value parsed, validated and stored),
+    /// `Ok(false)` when the key is not a control (callers decide whether
+    /// that is a typed unknown-key error), and `Err` on a bad value.
+    pub fn apply_json_key(&mut self, key: &str, val: &Json) -> Result<bool> {
+        match key {
+            "n_lambda" => {
+                self.n_lambda =
+                    val.as_usize().context("n_lambda must be a nonnegative integer")?;
+                // n_lambda == 1 is the legal single-point grid (λmax
+                // alone); only an empty grid is rejected (matches
+                // SolveControls::validate).
+                if self.n_lambda < 1 {
+                    bail!("n_lambda must be ≥ 1");
+                }
+            }
+            "lambda_min_ratio" => {
+                self.lambda_min_ratio =
+                    val.as_f64().context("lambda_min_ratio must be a number")?;
+                if !(self.lambda_min_ratio > 0.0 && self.lambda_min_ratio < 1.0) {
+                    bail!("lambda_min_ratio must be in (0, 1)");
+                }
+            }
+            "tol" => self.tol = val.as_f64().context("tol must be a number")?,
+            "max_iter" => {
+                self.max_iter = val.as_usize().context("max_iter must be an integer")?;
+            }
+            "verify_safety" => {
+                self.verify_safety =
+                    val.as_bool().context("verify_safety must be a boolean")?;
+            }
+            "gap_inflation" => {
+                self.gap_inflation = val.as_f64().context("gap_inflation must be a number")?;
+                if !(self.gap_inflation >= 0.0 && self.gap_inflation.is_finite()) {
+                    bail!("gap_inflation must be a finite number ≥ 0");
+                }
+            }
+            "lipschitz_refresh_every" => {
+                // null = cached mode (the default); K ≥ 1 = refresh cadence.
+                self.lipschitz_refresh_every = match val {
+                    Json::Null => None,
+                    other => {
+                        let k = other.as_usize().context(
+                            "lipschitz_refresh_every must be a positive integer or null",
+                        )?;
+                        if k == 0 {
+                            bail!("lipschitz_refresh_every must be ≥ 1 (or null to disable)");
+                        }
+                        Some(k)
+                    }
+                };
+            }
+            "max_seconds" => {
+                // null = no budget (the default); otherwise a positive
+                // finite wall-clock budget in seconds.
+                self.max_seconds = match val {
+                    Json::Null => None,
+                    other => {
+                        let s = other
+                            .as_f64()
+                            .context("max_seconds must be a positive number or null")?;
+                        if !(s > 0.0 && s.is_finite()) {
+                            bail!("max_seconds must be positive and finite (or null)");
+                        }
+                        Some(s)
+                    }
+                };
+            }
+            _ => return Ok(false),
+        }
+        Ok(true)
+    }
+
+    /// Emit the control fields onto a JSON object — the inverse of
+    /// [`Self::apply_json_key`], shared by [`Config::to_json`] and the
+    /// serve-mode response/manifest writers.
+    pub fn emit_json(&self, obj: Json) -> Json {
+        obj.set("n_lambda", self.n_lambda)
+            .set("lambda_min_ratio", self.lambda_min_ratio)
+            .set("tol", self.tol)
+            .set("max_iter", self.max_iter)
+            .set("verify_safety", self.verify_safety)
+            .set("gap_inflation", self.gap_inflation)
+            .set(
+                "lipschitz_refresh_every",
+                match self.lipschitz_refresh_every {
+                    Some(k) => Json::from(k),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "max_seconds",
+                match self.max_seconds {
+                    Some(s) => Json::from(s),
+                    None => Json::Null,
+                },
+            )
+    }
+}
 
 /// Top-level experiment configuration.
+///
+/// The shared solve-control knobs (grid shape, tolerances, budgets) live
+/// in the embedded [`SolveControls`]; `Config` derefs to it, so
+/// `cfg.n_lambda` / `cfg.tol` read and write through. Defaults are
+/// single-sourced in [`SolveControls::default`] — the CLI, the JSON
+/// config file, and the serve-mode wire schema cannot drift.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Config {
     /// α values (problem (3)); default = paper's seven tan(ψ) values.
     pub alphas: Vec<f64>,
-    /// Number of λ grid points.
-    pub n_lambda: usize,
-    /// λ_min/λ_max.
-    pub lambda_min_ratio: f64,
     /// Solver: "fista" | "bcd".
     pub solver: SolverKind,
-    /// Relative duality-gap tolerance.
-    pub tol: f64,
-    /// Iteration cap per solve.
-    pub max_iter: usize,
     /// Dataset seed.
     pub seed: u64,
     /// Feature-dimension scale for simulated real data sets.
     pub scale: f64,
     /// Fold count for the `cv` command / [`crate::coordinator::cv`].
     pub k_folds: usize,
-    /// Amortized per-view Lipschitz refresh cadence (path steps); `None`
-    /// (default) reuses the full-matrix constants for the whole path. See
-    /// [`crate::coordinator::runner::PathConfig::lipschitz_refresh_every`].
-    pub lipschitz_refresh_every: Option<usize>,
     /// Pool-parallel red-black BCD group sweeps (no effect under FISTA).
     /// See [`crate::coordinator::runner::PathConfig::parallel_bcd_groups`].
     pub parallel_bcd_groups: bool,
@@ -43,6 +145,21 @@ pub struct Config {
     /// "strong+kkt" | "none". See
     /// [`crate::coordinator::runner::PathConfig::screen`].
     pub screen: ScreenKind,
+    /// The shared solve-control knobs — reachable directly via `Deref`.
+    pub controls: SolveControls,
+}
+
+impl std::ops::Deref for Config {
+    type Target = SolveControls;
+    fn deref(&self) -> &SolveControls {
+        &self.controls
+    }
+}
+
+impl std::ops::DerefMut for Config {
+    fn deref_mut(&mut self) -> &mut SolveControls {
+        &mut self.controls
+    }
 }
 
 impl Default for Config {
@@ -51,17 +168,13 @@ impl Default for Config {
             alphas: crate::coordinator::path::alpha_grid_from_angles(
                 &crate::coordinator::path::PAPER_ALPHA_ANGLES,
             ),
-            n_lambda: 100,
-            lambda_min_ratio: 0.01,
             solver: SolverKind::Fista,
-            tol: 1e-6,
-            max_iter: 20_000,
             seed: 42,
             scale: 0.1,
             k_folds: 5,
-            lipschitz_refresh_every: None,
             parallel_bcd_groups: false,
             screen: ScreenKind::Tlfre,
+            controls: SolveControls::default(),
         }
     }
 }
@@ -87,36 +200,13 @@ impl Config {
                         bail!("alphas must be positive");
                     }
                 }
-                "n_lambda" => cfg.n_lambda = val.as_usize().context("n_lambda must be a nonnegative integer")?,
-                "lambda_min_ratio" => {
-                    cfg.lambda_min_ratio = val.as_f64().context("lambda_min_ratio must be a number")?;
-                    if !(cfg.lambda_min_ratio > 0.0 && cfg.lambda_min_ratio < 1.0) {
-                        bail!("lambda_min_ratio must be in (0, 1)");
-                    }
-                }
                 "solver" => {
-                    cfg.solver = match val.as_str() {
-                        Some("fista") => SolverKind::Fista,
-                        Some("bcd") => SolverKind::Bcd,
-                        other => bail!("unknown solver {other:?} (want \"fista\" or \"bcd\")"),
-                    }
-                }
-                "tol" => cfg.tol = val.as_f64().context("tol must be a number")?,
-                "max_iter" => cfg.max_iter = val.as_usize().context("max_iter must be an integer")?,
-                "lipschitz_refresh_every" => {
-                    // null = cached mode (the default); K ≥ 1 = refresh cadence.
-                    cfg.lipschitz_refresh_every = match val {
-                        Json::Null => None,
-                        other => {
-                            let k = other
-                                .as_usize()
-                                .context("lipschitz_refresh_every must be a positive integer or null")?;
-                            if k == 0 {
-                                bail!("lipschitz_refresh_every must be ≥ 1 (or null to disable)");
-                            }
-                            Some(k)
-                        }
-                    };
+                    cfg.solver = val
+                        .as_str()
+                        .and_then(SolverKind::parse)
+                        .with_context(|| {
+                            format!("unknown solver {val:?} (want \"fista\" or \"bcd\")")
+                        })?;
                 }
                 "parallel_bcd_groups" => {
                     cfg.parallel_bcd_groups =
@@ -144,13 +234,12 @@ impl Config {
                         bail!("k_folds must be ≥ 2");
                     }
                 }
-                other => bail!("unknown config key '{other}'"),
+                other => {
+                    if !cfg.controls.apply_json_key(other, val)? {
+                        bail!("unknown config key '{other}'");
+                    }
+                }
             }
-        }
-        // n_lambda == 1 is the legal single-point grid (λmax alone); only
-        // an empty grid is rejected (matches PathConfig::validate).
-        if cfg.n_lambda < 1 {
-            bail!("n_lambda must be ≥ 1");
         }
         Ok(cfg)
     }
@@ -162,52 +251,32 @@ impl Config {
         Self::from_json(&text)
     }
 
-    /// Serialize back to JSON (for run manifests).
+    /// Serialize back to JSON (for run manifests). Control fields are
+    /// emitted by [`SolveControls::emit_json`] — the same single source as
+    /// parsing, so the roundtrip covers every key.
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let obj = Json::obj()
             .set("alphas", self.alphas.clone())
-            .set("n_lambda", self.n_lambda)
-            .set("lambda_min_ratio", self.lambda_min_ratio)
-            .set(
-                "solver",
-                match self.solver {
-                    SolverKind::Fista => "fista",
-                    SolverKind::Bcd => "bcd",
-                },
-            )
-            .set("tol", self.tol)
-            .set("max_iter", self.max_iter)
+            .set("solver", self.solver.as_str())
             .set("seed", self.seed as usize)
             .set("scale", self.scale)
             .set("k_folds", self.k_folds)
-            .set(
-                "lipschitz_refresh_every",
-                match self.lipschitz_refresh_every {
-                    Some(k) => Json::from(k),
-                    None => Json::Null,
-                },
-            )
             .set("parallel_bcd_groups", self.parallel_bcd_groups)
-            .set("screen", self.screen.as_str())
+            .set("screen", self.screen.as_str());
+        self.controls.emit_json(obj)
     }
 
-    /// Per-α path configuration.
+    /// Per-α path configuration: the embedded controls verbatim plus the
+    /// Config-level solver/screen/parallelism choices.
     pub fn path_config(&self, alpha: f64) -> crate::coordinator::runner::PathConfig {
         crate::coordinator::runner::PathConfig {
             alpha,
-            n_lambda: self.n_lambda,
-            lambda_min_ratio: self.lambda_min_ratio,
             solver: self.solver,
-            tol: self.tol,
-            max_iter: self.max_iter,
-            verify_safety: false,
             materialize_reduced: false,
-            gap_inflation: 0.0,
             exact_view_lipschitz: false,
-            lipschitz_refresh_every: self.lipschitz_refresh_every,
             parallel_bcd_groups: self.parallel_bcd_groups,
             screen: self.screen,
-            max_seconds: None,
+            controls: self.controls,
         }
     }
 }
@@ -305,5 +374,41 @@ mod tests {
         assert_eq!(cfg.n_lambda, 25);
         assert_eq!(cfg.alphas, vec![1.0]);
         assert_eq!(cfg.tol, Config::default().tol);
+    }
+
+    #[test]
+    fn budget_and_safety_controls_parse_and_thread_into_path_config() {
+        // The controls that used to be PathConfig-only are now reachable
+        // from every JSON surface through the one shared parse path.
+        let cfg = Config::from_json(
+            r#"{"max_seconds": 2.5, "verify_safety": true, "gap_inflation": 0.5}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.max_seconds, Some(2.5));
+        assert!(cfg.verify_safety);
+        assert_eq!(cfg.gap_inflation, 0.5);
+        let pc = cfg.path_config(1.0);
+        assert_eq!(pc.max_seconds, Some(2.5));
+        assert!(pc.verify_safety);
+        // Explicit null disables the budget; bad values are typed errors.
+        let off = Config::from_json(r#"{"max_seconds": null}"#).unwrap();
+        assert_eq!(off.max_seconds, None);
+        assert!(Config::from_json(r#"{"max_seconds": 0.0}"#).is_err());
+        assert!(Config::from_json(r#"{"max_seconds": -1.0}"#).is_err());
+        assert!(Config::from_json(r#"{"verify_safety": "yes"}"#).is_err());
+        assert!(Config::from_json(r#"{"gap_inflation": -0.5}"#).is_err());
+        // Roundtrip: the new keys are emitted too.
+        let back = Config::from_json(&cfg.to_json().to_string_pretty()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn defaults_are_single_sourced_through_solve_controls() {
+        // Config's control defaults ARE SolveControls::default() — there
+        // is no second copy of the literals to drift.
+        let cfg = Config::default();
+        assert_eq!(cfg.controls, SolveControls::default());
+        let pc = cfg.path_config(1.0);
+        assert_eq!(pc.controls, SolveControls::default());
     }
 }

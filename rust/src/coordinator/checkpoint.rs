@@ -697,6 +697,7 @@ pub fn run_tlfre_path_checkpointed<M: DesignMatrix>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::runner::SolveControls;
     use crate::data::synthetic::{generate_synthetic, SyntheticSpec};
 
     fn tmp(name: &str) -> PathBuf {
@@ -708,9 +709,12 @@ mod tests {
     fn cfg() -> PathConfig {
         PathConfig {
             alpha: 1.0,
-            n_lambda: 8,
-            lambda_min_ratio: 0.05,
-            tol: 1e-6,
+            controls: SolveControls {
+                n_lambda: 8,
+                lambda_min_ratio: 0.05,
+                tol: 1e-6,
+                ..Default::default()
+            },
             ..Default::default()
         }
     }
@@ -782,7 +786,11 @@ mod tests {
         let opts =
             CheckpointOptions { every: 2, stop_after: Some(4), ..CheckpointOptions::new(&path) };
         run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &cfg(), &opts).unwrap();
-        let other = PathConfig { tol: 1e-4, ..cfg() };
+        let other = {
+            let mut c = cfg();
+            c.tol = 1e-4;
+            c
+        };
         let ropts = CheckpointOptions { resume: true, stop_after: None, ..opts };
         let err = run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &other, &ropts)
             .unwrap_err();

@@ -299,7 +299,7 @@ pub fn path_coefficients<M: DesignMatrix>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::runner::{run_tlfre_path, SolverKind};
+    use crate::coordinator::runner::{run_tlfre_path, SolveControls, SolverKind};
     use crate::data::synthetic::{generate_synthetic, SyntheticSpec};
     use crate::linalg::ops;
 
@@ -321,9 +321,12 @@ mod tests {
         // densest end with overfitting noise, not λmax with β = 0).
         let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(60, 200, 20), 401);
         let cfg = PathConfig {
-            n_lambda: 12,
-            lambda_min_ratio: 0.01,
-            tol: 1e-5,
+            controls: SolveControls {
+                n_lambda: 12,
+                lambda_min_ratio: 0.01,
+                tol: 1e-5,
+                ..Default::default()
+            },
             ..Default::default()
         };
         let out = cross_validate(&ds.x, &ds.y, &ds.groups, &[0.5, 1.0], 3, &cfg, 7);
@@ -341,7 +344,14 @@ mod tests {
         // n_lambda == 1 used to divide by (k − 1) == 0 in ratio_at.
         assert_eq!(ratio_at(0, 1, 0.01), 1.0);
         let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(24, 80, 8), 404);
-        let cfg = PathConfig { n_lambda: 1, lambda_min_ratio: 0.1, ..Default::default() };
+        let cfg = PathConfig {
+            controls: SolveControls {
+                n_lambda: 1,
+                lambda_min_ratio: 0.1,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
         let out = cross_validate_serial(&ds.x, &ds.y, &ds.groups, &[1.0], 3, &cfg, 5);
         assert_eq!(out.points.len(), 1);
         assert_eq!(out.points[0].lambda_ratio, 1.0);
@@ -369,7 +379,15 @@ mod tests {
     #[test]
     fn path_coefficients_matches_runner_sparsity() {
         let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 120, 12), 402);
-        let cfg = PathConfig { n_lambda: 8, lambda_min_ratio: 0.05, tol: 1e-6, ..Default::default() };
+        let cfg = PathConfig {
+            controls: SolveControls {
+                n_lambda: 8,
+                lambda_min_ratio: 0.05,
+                tol: 1e-6,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
         let betas = path_coefficients(&ds.x, &ds.y, &ds.groups, &cfg);
         let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
         assert_eq!(betas.len(), out.steps.len());
@@ -389,9 +407,12 @@ mod tests {
         let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 120, 12), 403);
         let cfg = PathConfig {
             solver: SolverKind::Bcd,
-            n_lambda: 8,
-            lambda_min_ratio: 0.05,
-            tol: 1e-6,
+            controls: SolveControls {
+                n_lambda: 8,
+                lambda_min_ratio: 0.05,
+                tol: 1e-6,
+                ..Default::default()
+            },
             ..Default::default()
         };
         let betas = path_coefficients(&ds.x, &ds.y, &ds.groups, &cfg);
@@ -402,7 +423,11 @@ mod tests {
             assert_eq!(nnz, s.nonzeros, "BCD lockstep broke at λ={}", s.lambda);
         }
         // The refresh schedule must stay mirrored for BCD too.
-        let refresh_cfg = PathConfig { lipschitz_refresh_every: Some(2), ..cfg };
+        let refresh_cfg = {
+            let mut c = cfg;
+            c.lipschitz_refresh_every = Some(2);
+            c
+        };
         let betas_r = path_coefficients(&ds.x, &ds.y, &ds.groups, &refresh_cfg);
         let out_r = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &refresh_cfg);
         for (b, s) in betas_r.iter().zip(&out_r.steps) {

@@ -6,22 +6,20 @@
 //! attach a [`super::driver::StepSink`] to it.
 
 use super::driver::{drive_dpc_path, drive_nonneg_baseline, StepSink};
+use super::runner::SolveControls;
 use crate::linalg::DesignMatrix;
 
 /// Configuration for a DPC path run.
+///
+/// The solve-control knobs (grid shape, tolerances, budgets, safety
+/// verification, Lipschitz refresh) are the same [`SolveControls`] struct
+/// the SGL [`super::runner::PathConfig`] embeds — one definition, one
+/// `Default`, one `validate()`, one JSON-parse path. `DpcPathConfig`
+/// derefs to it, so `cfg.tol` / `cfg.max_seconds` read and write through.
 #[derive(Debug, Clone)]
 pub struct DpcPathConfig {
-    pub n_lambda: usize,
-    pub lambda_min_ratio: f64,
-    pub tol: f64,
-    pub max_iter: usize,
-    pub verify_safety: bool,
-    /// See [`super::runner::PathConfig::gap_inflation`].
-    pub gap_inflation: f64,
-    /// Amortized per-view Lipschitz refresh for the reduced nonneg solves —
-    /// same semantics (cadence, subset-validity fallback, screening-time
-    /// accounting) as [`super::runner::PathConfig::lipschitz_refresh_every`].
-    pub lipschitz_refresh_every: Option<usize>,
+    /// The shared solve-control knobs — reachable directly via `Deref`.
+    pub controls: SolveControls,
     /// In-solver dynamic GAP-safe screening for the reduced nonneg solves
     /// (the Theorem 22 sphere on the solver's shrinking duality gap; see
     /// [`crate::screening::gap_safe::GapSafeDynamicNonneg`]). The nonneg
@@ -30,31 +28,30 @@ pub struct DpcPathConfig {
     pub dynamic_screening: bool,
 }
 
+impl std::ops::Deref for DpcPathConfig {
+    type Target = SolveControls;
+    fn deref(&self) -> &SolveControls {
+        &self.controls
+    }
+}
+
+impl std::ops::DerefMut for DpcPathConfig {
+    fn deref_mut(&mut self) -> &mut SolveControls {
+        &mut self.controls
+    }
+}
+
 impl Default for DpcPathConfig {
     fn default() -> Self {
-        DpcPathConfig {
-            n_lambda: 100,
-            lambda_min_ratio: 0.01,
-            tol: 1e-6,
-            max_iter: 20_000,
-            verify_safety: false,
-            gap_inflation: 0.0,
-            lipschitz_refresh_every: None,
-            dynamic_screening: false,
-        }
+        DpcPathConfig { controls: SolveControls::default(), dynamic_screening: false }
     }
 }
 
 impl DpcPathConfig {
-    /// Validate the grid invariants (see
-    /// [`super::runner::PathConfig::validate`]).
+    /// Validate the shared control invariants
+    /// ([`SolveControls::validate`]).
     pub fn validate(&self) {
-        assert!(self.n_lambda >= 1, "n_lambda must be ≥ 1");
-        assert!(
-            self.lambda_min_ratio > 0.0 && self.lambda_min_ratio < 1.0,
-            "lambda_min_ratio must be in (0, 1), got {}",
-            self.lambda_min_ratio
-        );
+        self.controls.validate();
     }
 }
 
@@ -72,6 +69,11 @@ pub struct DpcStep {
     /// Features evicted by in-solver dynamic GAP screening (0 unless
     /// [`DpcPathConfig::dynamic_screening`] is on).
     pub dynamic_evicted: usize,
+    /// True when this step's solve stopped on a budget — the iteration cap
+    /// or the [`SolveControls::max_seconds`] deadline — instead of
+    /// reaching the gap tolerance (same contract as the SGL path's
+    /// `PathStep::budget_exhausted`).
+    pub budget_exhausted: bool,
 }
 
 /// Whole-path output.
@@ -81,6 +83,11 @@ pub struct DpcPathOutput {
     pub steps: Vec<DpcStep>,
     pub screen_total_s: f64,
     pub solve_total_s: f64,
+    /// True when the [`SolveControls::max_seconds`] wall-clock budget
+    /// stopped the grid walk early: `steps` is then a clean completed
+    /// prefix of the grid (same contract as the SGL path's
+    /// `PathOutput::truncated`).
+    pub truncated: bool,
 }
 
 impl DpcPathOutput {
@@ -108,6 +115,7 @@ pub fn run_dpc_path<M: DesignMatrix>(x: &M, y: &[f32], cfg: &DpcPathConfig) -> D
         steps: sink.steps,
         screen_total_s: totals.screen_total_s,
         solve_total_s: totals.solve_total_s,
+        truncated: totals.truncated,
     }
 }
 
@@ -120,6 +128,7 @@ pub fn run_nonneg_baseline<M: DesignMatrix>(x: &M, y: &[f32], cfg: &DpcPathConfi
         steps: sink.steps,
         screen_total_s: totals.screen_total_s,
         solve_total_s: totals.solve_total_s,
+        truncated: totals.truncated,
     }
 }
 
@@ -143,7 +152,15 @@ mod tests {
     }
 
     fn cfg() -> DpcPathConfig {
-        DpcPathConfig { n_lambda: 12, lambda_min_ratio: 0.05, tol: 1e-7, ..Default::default() }
+        DpcPathConfig {
+            controls: SolveControls {
+                n_lambda: 12,
+                lambda_min_ratio: 0.05,
+                tol: 1e-7,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -160,7 +177,12 @@ mod tests {
     #[test]
     fn dpc_path_safe() {
         let (x, y) = nonneg_dataset(202, 20, 80);
-        let out = run_dpc_path(&x, &y, &DpcPathConfig { verify_safety: true, ..cfg() });
+        let verified = {
+            let mut c = cfg();
+            c.verify_safety = true;
+            c
+        };
+        let out = run_dpc_path(&x, &y, &verified);
         assert!(out.mean_rejection() > 0.5, "rejection {}", out.mean_rejection());
     }
 
@@ -170,11 +192,12 @@ mod tests {
         // must track the cached-constant path within borderline coords.
         let (x, y) = nonneg_dataset(204, 25, 120);
         let a = run_dpc_path(&x, &y, &cfg());
-        let b = run_dpc_path(
-            &x,
-            &y,
-            &DpcPathConfig { lipschitz_refresh_every: Some(3), ..cfg() },
-        );
+        let refreshed = {
+            let mut c = cfg();
+            c.lipschitz_refresh_every = Some(3);
+            c
+        };
+        let b = run_dpc_path(&x, &y, &refreshed);
         assert_eq!(a.steps.len(), b.steps.len());
         for (sa, sb) in a.steps.iter().zip(&b.steps) {
             let diff = (sa.zeros as i64 - sb.zeros as i64).abs();

@@ -107,7 +107,7 @@ pub struct PathTotals {
     /// Total solver time.
     pub solve_total_s: f64,
     /// True when the engine's wall-clock budget
-    /// ([`PathConfig::max_seconds`]) stopped the grid walk before the last
+    /// ([`super::SolveControls::max_seconds`]) stopped the grid walk before the last
     /// grid point: the sink saw a clean completed prefix of the path and
     /// nothing half-done.
     pub truncated: bool,
@@ -159,8 +159,23 @@ pub(crate) trait PathEngine {
 /// The single per-λ loop. Streams every step to `sink` and accumulates the
 /// screen/solve totals; sink time is outside both timers by construction.
 pub(crate) fn drive<E: PathEngine, K: PathSink<E::Step>>(
+    engine: E,
+    sink: &mut K,
+) -> PathTotals {
+    drive_prefix(engine, sink, None)
+}
+
+/// [`drive`] that stops after `stop_after` grid points (counting the λmax
+/// zero step), returning the clean completed prefix with
+/// [`PathTotals::truncated`] set when the cut fired before the grid end.
+/// `None` walks the full grid. The serve engine's `solve-point` prefix
+/// solver: a prefix of `drive`'s walk is bitwise identical to the same
+/// prefix of the full walk because the loop body is literally the same
+/// code over the same grid.
+pub(crate) fn drive_prefix<E: PathEngine, K: PathSink<E::Step>>(
     mut engine: E,
     sink: &mut K,
+    stop_after: Option<usize>,
 ) -> PathTotals {
     let lambda_max = engine.lambda_max();
     let (min_ratio, n_lambda) = engine.grid_shape();
@@ -173,7 +188,12 @@ pub(crate) fn drive<E: PathEngine, K: PathSink<E::Step>>(
     let mut lambda_bar = grid[0];
     let deadline = engine.deadline();
     let mut truncated = false;
+    let mut done = 1usize;
     for &lambda in &grid[1..] {
+        if stop_after.is_some_and(|cap| done >= cap) {
+            truncated = true;
+            break;
+        }
         // Budget check *between* steps: a step either runs to its own
         // (budget-degraded) completion or does not start, so the sink only
         // ever sees finished records.
@@ -186,6 +206,7 @@ pub(crate) fn drive<E: PathEngine, K: PathSink<E::Step>>(
         solve_total += es.solve_s;
         sink.on_step(&es.step, engine.beta());
         lambda_bar = lambda;
+        done += 1;
     }
     PathTotals { lambda_max, screen_total_s: screen_total, solve_total_s: solve_total, truncated }
 }
@@ -1037,6 +1058,9 @@ pub(crate) struct DpcEngine<'a, M: DesignMatrix> {
     resid: Vec<f32>,
     corr: Vec<f32>,
     preamble_s: f64,
+    /// Path-level wall-clock deadline derived once from
+    /// `cfg.max_seconds` — same budget contract as the TLFre engine.
+    deadline: Option<std::time::Instant>,
 }
 
 impl<'a, M: DesignMatrix> DpcEngine<'a, M> {
@@ -1067,6 +1091,7 @@ impl<'a, M: DesignMatrix> DpcEngine<'a, M> {
             resid: vec![0.0; n],
             corr: vec![0.0; p],
             preamble_s,
+            deadline: path_deadline(cfg.max_seconds),
         }
     }
 }
@@ -1096,11 +1121,16 @@ impl<M: DesignMatrix> PathEngine for DpcEngine<'_, M> {
             iters: 0,
             zeros: self.x.cols(),
             dynamic_evicted: 0,
+            budget_exhausted: false,
         }
     }
 
     fn beta(&self) -> &[f32] {
         &self.beta
+    }
+
+    fn deadline(&self) -> Option<std::time::Instant> {
+        self.deadline
     }
 
     fn step(&mut self, lambda: f64, lambda_bar: f64) -> EngineStep<DpcStep> {
@@ -1146,9 +1176,9 @@ impl<M: DesignMatrix> PathEngine for DpcEngine<'_, M> {
 
         let ts = Timer::start();
         let mut dyn_evicted_full: Vec<usize> = Vec::new();
-        let (iters, active_n, dynamic_evicted) = if active.is_empty() {
+        let (iters, active_n, dynamic_evicted, budget_exhausted) = if active.is_empty() {
             self.beta.fill(0.0);
-            (0usize, 0usize, 0usize)
+            (0usize, 0usize, 0usize, false)
         } else {
             // Zero-copy survivor view — no per-λ column gather.
             let xr = ScreenedView::new(x, active.clone());
@@ -1171,6 +1201,7 @@ impl<M: DesignMatrix> PathEngine for DpcEngine<'_, M> {
                     max_iter: cfg.max_iter,
                     lipschitz: Some(step_lip),
                     dynamic_screen: dyn_state.as_ref(),
+                    deadline: self.deadline,
                     ..Default::default()
                 },
             );
@@ -1189,7 +1220,7 @@ impl<M: DesignMatrix> PathEngine for DpcEngine<'_, M> {
                 }
                 None => 0,
             };
-            (res.iters, active.len(), evicted)
+            (res.iters, active.len(), evicted, res.budget_exhausted)
         };
         let solve_s = ts.elapsed_s();
 
@@ -1237,6 +1268,7 @@ impl<M: DesignMatrix> PathEngine for DpcEngine<'_, M> {
                 iters,
                 zeros,
                 dynamic_evicted,
+                budget_exhausted,
             },
             screen_s,
             solve_s,
@@ -1252,6 +1284,7 @@ pub(crate) struct DpcBaselineEngine<'a, M: DesignMatrix> {
     /// The solver's canonical step-bound recipe (2% from-below inflation).
     lip: f64,
     beta: Vec<f32>,
+    deadline: Option<std::time::Instant>,
 }
 
 impl<'a, M: DesignMatrix> DpcBaselineEngine<'a, M> {
@@ -1260,7 +1293,14 @@ impl<'a, M: DesignMatrix> DpcBaselineEngine<'a, M> {
         let prob = NonnegProblem::new(x, y);
         let (lmax, _) = nonneg_lambda_max(&prob);
         let lip = nonneg_lipschitz(x);
-        DpcBaselineEngine { cfg, prob, lmax, lip, beta: vec![0.0; x.cols()] }
+        DpcBaselineEngine {
+            cfg,
+            prob,
+            lmax,
+            lip,
+            beta: vec![0.0; x.cols()],
+            deadline: path_deadline(cfg.max_seconds),
+        }
     }
 }
 
@@ -1290,11 +1330,16 @@ impl<M: DesignMatrix> PathEngine for DpcBaselineEngine<'_, M> {
             iters: 0,
             zeros: p,
             dynamic_evicted: 0,
+            budget_exhausted: false,
         }
     }
 
     fn beta(&self) -> &[f32] {
         &self.beta
+    }
+
+    fn deadline(&self) -> Option<std::time::Instant> {
+        self.deadline
     }
 
     fn step(&mut self, lambda: f64, _lambda_bar: f64) -> EngineStep<DpcStep> {
@@ -1308,6 +1353,7 @@ impl<M: DesignMatrix> PathEngine for DpcBaselineEngine<'_, M> {
                 tol: self.cfg.tol,
                 max_iter: self.cfg.max_iter,
                 lipschitz: Some(self.lip),
+                deadline: self.deadline,
                 ..Default::default()
             },
         );
@@ -1323,6 +1369,7 @@ impl<M: DesignMatrix> PathEngine for DpcBaselineEngine<'_, M> {
                 iters: res.iters,
                 zeros: ops::count_zeros(&self.beta),
                 dynamic_evicted: 0,
+                budget_exhausted: res.budget_exhausted,
             },
             screen_s: 0.0,
             solve_s,
@@ -1454,6 +1501,7 @@ pub fn drive_nonneg_baseline<M: DesignMatrix, K: PathSink<DpcStep>>(
 
 #[cfg(test)]
 mod tests {
+    use super::super::runner::SolveControls;
     use super::*;
     use crate::data::synthetic::{generate_synthetic, SyntheticSpec};
 
@@ -1464,9 +1512,12 @@ mod tests {
         let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 100, 10), 611);
         let cfg = PathConfig {
             alpha: 1.0,
-            n_lambda: 7,
-            lambda_min_ratio: 0.1,
-            tol: 1e-6,
+            controls: SolveControls {
+                n_lambda: 7,
+                lambda_min_ratio: 0.1,
+                tol: 1e-6,
+                ..Default::default()
+            },
             ..Default::default()
         };
         let mut steps = StepSink::new();
@@ -1488,9 +1539,12 @@ mod tests {
         let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 100, 10), 612);
         let cfg = PathConfig {
             alpha: 1.0,
-            n_lambda: 6,
-            lambda_min_ratio: 0.1,
-            tol: 1e-6,
+            controls: SolveControls {
+                n_lambda: 6,
+                lambda_min_ratio: 0.1,
+                tol: 1e-6,
+                ..Default::default()
+            },
             ..Default::default()
         };
         // Hold out the same matrix it was trained on (a pure plumbing
@@ -1519,7 +1573,10 @@ mod tests {
     #[test]
     fn single_point_grid_is_the_lambda_max_step() {
         let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(20, 60, 6), 613);
-        let cfg = PathConfig { n_lambda: 1, ..Default::default() };
+        let cfg = PathConfig {
+            controls: SolveControls { n_lambda: 1, ..Default::default() },
+            ..Default::default()
+        };
         let mut sink = StepSink::new();
         let totals = drive_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg, &mut sink);
         assert_eq!(sink.steps.len(), 1);

@@ -25,7 +25,12 @@
 //!   speedups consumed by the bench harness,
 //! * fault tolerance for long paths ([`checkpoint`]): kill-safe
 //!   checkpoint/resume sidecars and wall-clock solve budgets
-//!   ([`PathConfig::max_seconds`]).
+//!   ([`SolveControls::max_seconds`]) — on the SGL *and* DPC paths alike,
+//! * the shared solve-control surface ([`SolveControls`]): one embedded
+//!   struct holding the grid/tolerance/budget knobs for every pathwise
+//!   config ([`PathConfig`], [`DpcPathConfig`], [`crate::config::Config`],
+//!   the serve-mode wire schema), with one `Default`, one `validate()`
+//!   and one JSON-parse path.
 //!
 //! ## Failure modes & recovery
 //!
@@ -40,14 +45,15 @@
 //!   **bitwise identically** (every kernel is deterministic at every
 //!   worker count; the sidecar captures the engine's full mutable state —
 //!   see `driver::EngineSnapshot`).
-//! * **Run over time budget** — [`PathConfig::max_seconds`] derives one
-//!   deadline at engine construction. Solvers check it at gap-check
+//! * **Run over time budget** — [`SolveControls::max_seconds`] derives
+//!   one deadline at engine construction. Solvers check it at gap-check
 //!   cadence and return their best-so-far iterate with `converged = false`
 //!   plus the last measured duality gap; the driver refuses to start a
 //!   step past the deadline. The output is a clean completed prefix
-//!   ([`PathOutput::truncated`]), each step carrying
-//!   [`PathStep::budget_exhausted`] and a finite
-//!   [`PathStep::certified_suboptimality`] bound.
+//!   ([`PathOutput::truncated`] / [`DpcPathOutput::truncated`]), each step
+//!   carrying [`PathStep::budget_exhausted`] (SGL, with a finite
+//!   [`PathStep::certified_suboptimality`] bound) or
+//!   [`DpcStep::budget_exhausted`] (DPC).
 //! * **Corrupt/mismatched checkpoint** — magic, version, dimensions and
 //!   the full problem/config fingerprint are validated before any
 //!   payload allocation; truncation or edits fail with a typed error
@@ -83,5 +89,5 @@ pub use checkpoint::{run_tlfre_path_checkpointed, CheckpointOptions};
 pub use path::{alpha_grid_from_angles, log_lambda_grid, PAPER_ALPHA_ANGLES};
 pub use runner::{
     run_baseline_path, run_tlfre_path, run_tlfre_path_with_coefficients, PathConfig, PathOutput,
-    PathStep, SolverKind,
+    PathStep, SolveControls, SolverKind,
 };

@@ -30,19 +30,43 @@ pub enum SolverKind {
     Bcd,
 }
 
-/// Configuration for a pathwise run at fixed α.
-#[derive(Debug, Clone)]
-pub struct PathConfig {
-    /// The α of problem (3) (λ₁ = αλ).
-    pub alpha: f64,
+impl SolverKind {
+    /// Parse the canonical lowercase name (`"fista"` / `"bcd"`); the single
+    /// name↔variant mapping shared by the `--config` file, the CLI flags,
+    /// and the serve-mode wire schema.
+    pub fn parse(s: &str) -> Option<SolverKind> {
+        match s {
+            "fista" => Some(SolverKind::Fista),
+            "bcd" => Some(SolverKind::Bcd),
+            _ => None,
+        }
+    }
+
+    /// The canonical name [`Self::parse`] accepts.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SolverKind::Fista => "fista",
+            SolverKind::Bcd => "bcd",
+        }
+    }
+}
+
+/// The solve-control knobs shared by every pathwise workload — TLFre/GAP
+/// paths ([`PathConfig`]), the DPC nonnegative-Lasso path
+/// ([`super::dpc_runner::DpcPathConfig`]), CV, the JSON config file, and the
+/// serve-mode wire schema all embed this one struct, so grid shape,
+/// tolerances, budgets, and their defaults cannot drift between entry
+/// points. Parsed from JSON in exactly one place
+/// (`SolveControls::apply_json_key` in `config.rs`) and validated in
+/// exactly one place ([`Self::validate`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SolveControls {
     /// Number of λ grid points (paper: 100). `1` is the degenerate
     /// single-point grid — just the λmax endpoint (β ≡ 0); see
     /// [`Self::validate`].
     pub n_lambda: usize,
     /// λ_min / λ_max ratio (paper: 0.01).
     pub lambda_min_ratio: f64,
-    /// Solver backend.
-    pub solver: SolverKind,
     /// Relative duality-gap tolerance per solve.
     pub tol: f64,
     /// Iteration cap per solve.
@@ -50,12 +74,6 @@ pub struct PathConfig {
     /// Panic if a screened coefficient is nonzero in the solve
     /// (diagnostics; adds one full solve per step — off by default).
     pub verify_safety: bool,
-    /// Solve reduced problems on a gathered dense copy instead of the
-    /// zero-copy [`crate::linalg::ScreenedView`]. The view is the default
-    /// (no per-λ `X` copy); the copy path is kept for A/B equivalence
-    /// testing and for cache-sensitivity experiments. Both produce bitwise
-    /// identical solutions (see `tests/backend_parity.rs`).
-    pub materialize_reduced: bool,
     /// Multiplier on the duality gap fed to the robust radius inflation
     /// (`tlfre_screen_inexact`'s `2√(2·gap)/λ̄` term). `0.0` (default)
     /// reproduces the paper's exact rule on the feasibility-scaled dual
@@ -64,17 +82,6 @@ pub struct PathConfig {
     /// (catastrophic cancellation in P−D at ~1e-4·‖y‖² relative), so
     /// inflation ≥ 1 visibly weakens screening at small λ.
     pub gap_inflation: f64,
-    /// Recompute the reduced problem's Lipschitz data exactly per λ (power
-    /// iteration on each survivor view) instead of reusing the full-matrix
-    /// constants cached once per path. A screened problem's columns are a
-    /// subset of `X`, so `σmax(X[:,S]) ≤ σmax(X)` and (per group)
-    /// `σmax(X_g[:,S]) ≤ σmax(X_g)` — the cached values are always valid
-    /// step bounds. The default (`false`) therefore performs **zero** power
-    /// iterations inside the per-λ loop; this flag is the A/B switch for
-    /// the exact-per-view behaviour (tighter steps, ≤500 matvec pairs of
-    /// setup per λ). See `tests/lipschitz_cache.rs` for the equivalence.
-    /// Takes precedence over [`Self::lipschitz_refresh_every`].
-    pub exact_view_lipschitz: bool,
     /// Amortized middle ground between the cached (`None`, default) and
     /// exact per-view Lipschitz modes: every K path steps, re-estimate the
     /// survivor view's spectral constants (`σmax(X[:,S])`, and per
@@ -86,8 +93,85 @@ pub struct PathConfig {
     /// falls back to the always-valid full-matrix constants until the next
     /// refresh. Tightens steps as the survivor set shrinks at ~1/K of the
     /// exact mode's power-iteration cost. Ignored when
-    /// [`Self::exact_view_lipschitz`] is set.
+    /// [`PathConfig::exact_view_lipschitz`] is set.
     pub lipschitz_refresh_every: Option<usize>,
+    /// Wall-clock budget for the whole path, in seconds (`None` = no
+    /// budget, the default). When set, the engine derives one deadline at
+    /// construction and (a) hands it to every solver dispatch, so an
+    /// over-budget solve returns its best-so-far iterate with
+    /// `converged = false` and the last measured duality gap (see
+    /// [`crate::sgl::fista::FistaOptions::deadline`]), and (b) the driver
+    /// stops the grid walk before starting a step past the deadline — the
+    /// output is then a clean completed prefix with
+    /// [`PathOutput::truncated`] set. Budget checks run at the solvers'
+    /// gap-check cadence; bitwise-parity comparisons must leave this
+    /// `None` (wall-clock truncation points are machine-dependent).
+    pub max_seconds: Option<f64>,
+}
+
+impl Default for SolveControls {
+    fn default() -> Self {
+        SolveControls {
+            n_lambda: 100,
+            lambda_min_ratio: 0.01,
+            tol: 1e-6,
+            max_iter: 20_000,
+            verify_safety: false,
+            gap_inflation: 0.0,
+            lipschitz_refresh_every: None,
+            max_seconds: None,
+        }
+    }
+}
+
+impl SolveControls {
+    /// Validate the control invariants every path walker relies on; panics
+    /// with a descriptive message on violation. In particular
+    /// `n_lambda ≥ 1`: a single-point grid is the λmax endpoint alone — a
+    /// legal (if degenerate) path whose one solution is identically zero,
+    /// which used to slip through and divide by `n_lambda − 1 = 0` in CV's
+    /// `lambda_ratio`.
+    pub fn validate(&self) {
+        assert!(self.n_lambda >= 1, "n_lambda must be ≥ 1");
+        assert!(
+            self.lambda_min_ratio > 0.0 && self.lambda_min_ratio < 1.0,
+            "lambda_min_ratio must be in (0, 1), got {}",
+            self.lambda_min_ratio
+        );
+        if let Some(s) = self.max_seconds {
+            assert!(s > 0.0 && s.is_finite(), "max_seconds must be positive, got {s}");
+        }
+    }
+}
+
+/// Configuration for a pathwise run at fixed α.
+///
+/// The solve-control knobs (grid shape, tolerances, budgets) live in the
+/// embedded [`SolveControls`]; `PathConfig` derefs to it, so
+/// `cfg.n_lambda` / `cfg.tol` read and write through transparently.
+#[derive(Debug, Clone)]
+pub struct PathConfig {
+    /// The α of problem (3) (λ₁ = αλ).
+    pub alpha: f64,
+    /// Solver backend.
+    pub solver: SolverKind,
+    /// Solve reduced problems on a gathered dense copy instead of the
+    /// zero-copy [`crate::linalg::ScreenedView`]. The view is the default
+    /// (no per-λ `X` copy); the copy path is kept for A/B equivalence
+    /// testing and for cache-sensitivity experiments. Both produce bitwise
+    /// identical solutions (see `tests/backend_parity.rs`).
+    pub materialize_reduced: bool,
+    /// Recompute the reduced problem's Lipschitz data exactly per λ (power
+    /// iteration on each survivor view) instead of reusing the full-matrix
+    /// constants cached once per path. A screened problem's columns are a
+    /// subset of `X`, so `σmax(X[:,S]) ≤ σmax(X)` and (per group)
+    /// `σmax(X_g[:,S]) ≤ σmax(X_g)` — the cached values are always valid
+    /// step bounds. The default (`false`) therefore performs **zero** power
+    /// iterations inside the per-λ loop; this flag is the A/B switch for
+    /// the exact-per-view behaviour (tighter steps, ≤500 matvec pairs of
+    /// setup per λ). See `tests/lipschitz_cache.rs` for the equivalence.
+    /// Takes precedence over [`SolveControls::lipschitz_refresh_every`].
+    pub exact_view_lipschitz: bool,
     /// Sweep independent BCD groups concurrently on the worker pool,
     /// scheduled by a red-black conflict-graph coloring computed **once
     /// per path** from the full matrix and projected onto each reduced
@@ -104,37 +188,36 @@ pub struct PathConfig {
     /// solve per λ through the same engine). The JSON config key is
     /// `"screen"`, the CLI flag `--screen`.
     pub screen: ScreenKind,
-    /// Wall-clock budget for the whole path, in seconds (`None` = no
-    /// budget, the default). When set, the engine derives one deadline at
-    /// construction and (a) hands it to every solver dispatch, so an
-    /// over-budget solve returns its best-so-far iterate with
-    /// `converged = false` and the last measured duality gap (see
-    /// [`crate::sgl::fista::FistaOptions::deadline`]), and (b) the driver
-    /// stops the grid walk before starting a step past the deadline — the
-    /// output is then a clean completed prefix with
-    /// [`PathOutput::truncated`] set. Budget checks run at the solvers'
-    /// gap-check cadence; bitwise-parity comparisons must leave this
-    /// `None` (wall-clock truncation points are machine-dependent).
-    pub max_seconds: Option<f64>,
+    /// The shared solve-control knobs (`n_lambda`, `lambda_min_ratio`,
+    /// `tol`, `max_iter`, `verify_safety`, `gap_inflation`,
+    /// `lipschitz_refresh_every`, `max_seconds`) — reachable directly via
+    /// `Deref`, e.g. `cfg.tol`.
+    pub controls: SolveControls,
+}
+
+impl std::ops::Deref for PathConfig {
+    type Target = SolveControls;
+    fn deref(&self) -> &SolveControls {
+        &self.controls
+    }
+}
+
+impl std::ops::DerefMut for PathConfig {
+    fn deref_mut(&mut self) -> &mut SolveControls {
+        &mut self.controls
+    }
 }
 
 impl Default for PathConfig {
     fn default() -> Self {
         PathConfig {
             alpha: 1.0,
-            n_lambda: 100,
-            lambda_min_ratio: 0.01,
             solver: SolverKind::Fista,
-            tol: 1e-6,
-            max_iter: 20_000,
-            verify_safety: false,
             materialize_reduced: false,
-            gap_inflation: 0.0,
             exact_view_lipschitz: false,
-            lipschitz_refresh_every: None,
             parallel_bcd_groups: false,
             screen: ScreenKind::Tlfre,
-            max_seconds: None,
+            controls: SolveControls::default(),
         }
     }
 }
@@ -142,26 +225,16 @@ impl Default for PathConfig {
 impl PathConfig {
     /// Validate the invariants every path walker relies on. Called by all
     /// driver entry points (runners and CV); panics with a descriptive
-    /// message on violation. In particular `n_lambda ≥ 1`: a single-point
-    /// grid is the λmax endpoint alone — a legal (if degenerate) path
-    /// whose one solution is identically zero, which used to slip through
-    /// and divide by `n_lambda − 1 = 0` in CV's `lambda_ratio`.
+    /// message on violation. Delegates the shared control checks to
+    /// [`SolveControls::validate`] and adds the α > 0 requirement.
     pub fn validate(&self) {
-        assert!(self.n_lambda >= 1, "n_lambda must be ≥ 1");
-        assert!(
-            self.lambda_min_ratio > 0.0 && self.lambda_min_ratio < 1.0,
-            "lambda_min_ratio must be in (0, 1), got {}",
-            self.lambda_min_ratio
-        );
+        self.controls.validate();
         assert!(self.alpha > 0.0, "alpha must be positive, got {}", self.alpha);
-        if let Some(s) = self.max_seconds {
-            assert!(s > 0.0 && s.is_finite(), "max_seconds must be positive, got {s}");
-        }
     }
 }
 
 /// Per-λ statistics.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct PathStep {
     pub lambda: f64,
     /// Paper's r₁: features in (L₁)-rejected groups / zero coefficients.
@@ -193,7 +266,7 @@ pub struct PathStep {
     /// only; 0 for safe pipelines).
     pub kkt_readmitted: usize,
     /// True when this step's solve stopped on a budget — the iteration cap
-    /// or the [`PathConfig::max_seconds`] deadline — instead of reaching
+    /// or the [`SolveControls::max_seconds`] deadline — instead of reaching
     /// the gap tolerance. The reported β is the best-so-far iterate and
     /// [`Self::certified_suboptimality`] bounds how far it can be from the
     /// optimum.
@@ -217,7 +290,7 @@ pub struct PathOutput {
     /// Total solver time.
     pub solve_total_s: f64,
     /// True when the path-level wall-clock budget
-    /// ([`PathConfig::max_seconds`]) stopped the grid walk early (or a
+    /// ([`SolveControls::max_seconds`]) stopped the grid walk early (or a
     /// checkpointed run stopped at its configured `stop_after` point):
     /// `steps` is then a clean completed prefix of the grid — every record
     /// in it is a finished solve, nothing half-done.
@@ -343,9 +416,12 @@ mod tests {
     fn small_cfg(alpha: f64) -> PathConfig {
         PathConfig {
             alpha,
-            n_lambda: 12,
-            lambda_min_ratio: 0.05,
-            tol: 1e-7,
+            controls: SolveControls {
+                n_lambda: 12,
+                lambda_min_ratio: 0.05,
+                tol: 1e-7,
+                ..Default::default()
+            },
             ..Default::default()
         }
     }
@@ -385,7 +461,8 @@ mod tests {
     #[test]
     fn screened_path_is_safe() {
         let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 120, 12), 102);
-        let cfg = PathConfig { verify_safety: true, ..small_cfg(1.0) };
+        let mut cfg = small_cfg(1.0);
+        cfg.verify_safety = true;
         // verify_safety asserts internally.
         let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
         assert!(out.mean_total_rejection() > 0.5);
@@ -432,12 +509,12 @@ mod tests {
         for solver in [SolverKind::Fista, SolverKind::Bcd] {
             let base = PathConfig { solver, ..small_cfg(1.0) };
             let a = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &base);
-            let b = run_tlfre_path(
-                &ds.x,
-                &ds.y,
-                &ds.groups,
-                &PathConfig { lipschitz_refresh_every: Some(2), ..base.clone() },
-            );
+            let refreshed = {
+                let mut c = base.clone();
+                c.lipschitz_refresh_every = Some(2);
+                c
+            };
+            let b = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &refreshed);
             assert_eq!(a.steps.len(), b.steps.len());
             for (sa, sb) in a.steps.iter().zip(&b.steps) {
                 let diff = (sa.nonzeros as i64 - sb.nonzeros as i64).abs();
@@ -524,12 +601,15 @@ mod tests {
 
     #[test]
     fn validate_rejects_degenerate_configs() {
-        let ok = PathConfig { n_lambda: 1, ..Default::default() };
+        fn with_controls(c: SolveControls) -> PathConfig {
+            PathConfig { controls: c, ..Default::default() }
+        }
+        let ok = with_controls(SolveControls { n_lambda: 1, ..Default::default() });
         ok.validate(); // single-point grid is legal
         for bad in [
-            PathConfig { n_lambda: 0, ..Default::default() },
-            PathConfig { lambda_min_ratio: 0.0, ..Default::default() },
-            PathConfig { lambda_min_ratio: 1.0, ..Default::default() },
+            with_controls(SolveControls { n_lambda: 0, ..Default::default() }),
+            with_controls(SolveControls { lambda_min_ratio: 0.0, ..Default::default() }),
+            with_controls(SolveControls { lambda_min_ratio: 1.0, ..Default::default() }),
             PathConfig { alpha: 0.0, ..Default::default() },
         ] {
             assert!(

@@ -11,10 +11,64 @@
 //! bench profile (the sample dimension and all recipes are kept); 1.0
 //! reproduces the paper's dimensions exactly.
 
+use super::synthetic::{
+    generate_sparse_synthetic, generate_synthetic, SparseDataset, SparseSyntheticSpec,
+    SyntheticSpec,
+};
 use super::Dataset;
+use crate::bail;
+use crate::error::Result;
 use crate::groups::GroupStructure;
 use crate::linalg::DenseMatrix;
 use crate::util::Rng;
+
+/// Resolve a dataset name to a generated [`Dataset`] — the single name
+/// registry behind the CLI's `--dataset` flag and the serve-mode
+/// [`crate::server::api::DatasetSpec`].
+pub fn resolve_dataset(name: &str, seed: u64, scale: f64) -> Result<Dataset> {
+    let ds = match name {
+        "synthetic1" => generate_synthetic(
+            &SyntheticSpec::synthetic1_scaled(
+                250,
+                scaled(10_000, scale),
+                scaled(10_000, scale) / 10,
+            ),
+            seed,
+        ),
+        "synthetic2" => generate_synthetic(
+            &SyntheticSpec::synthetic2_scaled(
+                250,
+                scaled(10_000, scale),
+                scaled(10_000, scale) / 10,
+            ),
+            seed,
+        ),
+        "adni-gmv" => RealDataset::AdniGmv.generate(scale, seed),
+        "adni-wmv" => RealDataset::AdniWmv.generate(scale, seed),
+        "breast-cancer" => RealDataset::BreastCancer.generate(scale, seed),
+        "leukemia" => RealDataset::Leukemia.generate(scale, seed),
+        "prostate" => RealDataset::Prostate.generate(scale, seed),
+        "pie" => RealDataset::Pie.generate(scale, seed),
+        "mnist" => RealDataset::Mnist.generate(scale, seed),
+        "svhn" => RealDataset::Svhn.generate(scale, seed),
+        other => bail!(
+            "unknown dataset '{other}' (synthetic1|synthetic2|adni-gmv|adni-wmv|breast-cancer|leukemia|prostate|pie|mnist|svhn; 'sparse1' is CSC-native — see resolve_sparse_dataset)"
+        ),
+    };
+    Ok(ds)
+}
+
+/// The CSC-native `sparse1` workload at the same scaled dimensions as
+/// [`resolve_dataset`]'s synthetic sets (deterministic in `seed`).
+pub fn resolve_sparse_dataset(seed: u64, scale: f64, density: f64) -> SparseDataset {
+    let p = scaled(10_000, scale);
+    generate_sparse_synthetic(&SparseSyntheticSpec::new(250, p, p / 10, density), seed)
+}
+
+/// Round `p·scale` to a multiple of 10 (keeps uniform groups divisible).
+pub fn scaled(p: usize, scale: f64) -> usize {
+    (((p as f64 * scale) / 10.0).round() as usize * 10).max(20)
+}
 
 /// The paper's real data sets (Tables 2–3, Figures 3–5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -60,6 +60,22 @@
 //! pay at every grid point. See `rust/src/linalg/README.md` for backend
 //! selection guidance.
 //!
+//! ## The resident serve layer
+//!
+//! `tlfre serve` ([`server`]) keeps everything the batch CLI rebuilds per
+//! invocation — generated datasets on any backend, spectral preambles,
+//! completed path prefixes — resident in one long-running engine behind a
+//! unix socket. Requests are typed [`server::SolveRequest`]s in a
+//! versioned JSON schema (the same schema the CLI flags translate into;
+//! HTTP/1.0-style framing, zero dependencies); `solve-path` streams the
+//! full walk, `solve-point` answers single grid points warm-started from
+//! the longest resident prefix and carries a certified suboptimality
+//! bound, and concurrent clients share one dataset copy and one path
+//! cache. Served results are **bitwise identical** to the equivalent
+//! batch runs — caching only skips work whose output is already known.
+//! See `rust/src/server/README.md` for the schema and the cache/warm-start
+//! contract.
+//!
 //! ## Offline, dependency-free build
 //!
 //! The crate builds with **zero external dependencies**: vendored stand-ins
@@ -87,6 +103,7 @@ pub mod nonneg;
 pub mod prox;
 pub mod runtime;
 pub mod screening;
+pub mod server;
 pub mod sgl;
 pub mod util;
 

@@ -1,0 +1,853 @@
+//! The unified solve-request API: one typed [`SolveRequest`] /
+//! [`SolveResponse`] pair, one versioned JSON schema.
+//!
+//! Every entry point into a path solve — the batch CLI commands, the
+//! `client` command, and the serve-mode wire protocol — translates into
+//! the same [`SolveRequest`] struct, and every result is rendered through
+//! the same [`SolveResponse`]. The shared solve-control knobs parse
+//! through [`SolveControls::apply_json_key`] (the single JSON parse path
+//! in `config.rs`), so key names, validation, and error wording cannot
+//! drift between surfaces. Unknown keys are typed errors everywhere, like
+//! the `--config` file.
+//!
+//! The schema is versioned: every request and response carries `"v"` (see
+//! [`PROTOCOL_VERSION`]); a request without `"v"`, or with a version this
+//! build does not speak, is rejected with a typed error rather than
+//! misinterpreted. `rust/src/server/README.md` documents the full schema.
+//!
+//! Coefficients travel as the same 8-hex-digit bit dump the batch CLI's
+//! `--coef-out` writes ([`coef_hex_dump`] / [`beta_hex`] live here and the
+//! CLI uses them), so a served path can be `cmp`-verified bitwise against
+//! a batch run without any float parsing.
+
+use crate::bail;
+use crate::coordinator::runner::{PathConfig, PathStep, SolveControls, SolverKind};
+use crate::error::{Context, Result};
+use crate::screening::rule::ScreenKind;
+use crate::util::json::Json;
+
+/// Wire-schema version this build speaks. Bump on any incompatible change
+/// to the request or response shape.
+pub const PROTOCOL_VERSION: usize = 1;
+
+// ---------------------------------------------------------------------------
+// Request kinds and dataset specs
+// ---------------------------------------------------------------------------
+
+/// What a [`SolveRequest`] asks the engine to do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestKind {
+    /// Load (or pre-warm) a dataset into the session registry.
+    LoadDataset,
+    /// Solve the full λ path; the response carries per-λ steps and the
+    /// coefficient bit dump.
+    SolvePath,
+    /// Solve a single grid point, warm-started from the longest cached
+    /// path prefix; the response carries `certified_suboptimality`.
+    SolvePoint,
+    /// k-fold cross-validation over an α grid (dense/csc backends).
+    Cv,
+    /// Engine counters: datasets resident, cached paths, hit rates.
+    Stats,
+    /// Ask the engine to exit its accept loop cleanly.
+    Shutdown,
+}
+
+impl RequestKind {
+    /// Parse the canonical kebab-case name.
+    pub fn parse(s: &str) -> Option<RequestKind> {
+        match s {
+            "load-dataset" => Some(RequestKind::LoadDataset),
+            "solve-path" => Some(RequestKind::SolvePath),
+            "solve-point" => Some(RequestKind::SolvePoint),
+            "cv" => Some(RequestKind::Cv),
+            "stats" => Some(RequestKind::Stats),
+            "shutdown" => Some(RequestKind::Shutdown),
+            _ => None,
+        }
+    }
+
+    /// The canonical name [`Self::parse`] accepts.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RequestKind::LoadDataset => "load-dataset",
+            RequestKind::SolvePath => "solve-path",
+            RequestKind::SolvePoint => "solve-point",
+            RequestKind::Cv => "cv",
+            RequestKind::Stats => "stats",
+            RequestKind::Shutdown => "shutdown",
+        }
+    }
+
+    /// Whether this request kind operates on a dataset.
+    pub fn needs_dataset(&self) -> bool {
+        !matches!(self, RequestKind::Stats | RequestKind::Shutdown)
+    }
+}
+
+/// Design-matrix backend the dataset should be materialized behind. The
+/// same names as the CLI's `--backend` flag; every backend produces
+/// bitwise-identical paths (the backend-parity invariant).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Dense,
+    Csc,
+    Mmap,
+    Sharded,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "dense" => Some(BackendKind::Dense),
+            "csc" => Some(BackendKind::Csc),
+            "mmap" => Some(BackendKind::Mmap),
+            "sharded" => Some(BackendKind::Sharded),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Dense => "dense",
+            BackendKind::Csc => "csc",
+            BackendKind::Mmap => "mmap",
+            BackendKind::Sharded => "sharded",
+        }
+    }
+}
+
+/// Everything needed to materialize a dataset deterministically. Carried
+/// by every dataset-touching request, so clients are stateless: the
+/// registry loads on first use and serves the resident copy afterwards.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetSpec {
+    /// Registry name (`synthetic1`, `adni-gmv`, `sparse1`, …) — the same
+    /// names the CLI's `--dataset` flag accepts.
+    pub name: String,
+    /// Storage backend for the design matrix.
+    pub backend: BackendKind,
+    /// Generator seed.
+    pub seed: u64,
+    /// Feature-dimension scale in `(0, 1]` (1.0 = paper dims).
+    pub scale: f64,
+    /// Nonzero fraction for the `sparse1` generator.
+    pub density: f64,
+    /// Mmap backend: an existing `TLFREDS1` file to map instead of
+    /// generating (the CLI's `--file`).
+    pub file: Option<String>,
+    /// Sharded backend: row-shard count (default: one per worker).
+    pub shards: Option<usize>,
+}
+
+impl DatasetSpec {
+    /// Spec for `name` with the same defaults as the batch CLI
+    /// ([`crate::config::Config::default`]'s seed and scale).
+    pub fn new(name: &str) -> DatasetSpec {
+        let defaults = crate::config::Config::default();
+        DatasetSpec {
+            name: name.to_string(),
+            backend: BackendKind::Dense,
+            seed: defaults.seed,
+            scale: defaults.scale,
+            density: 0.05,
+            file: None,
+            shards: None,
+        }
+    }
+
+    /// Parse from the request's `"dataset"` object; unknown keys are
+    /// typed errors.
+    pub fn from_json(v: &Json) -> Result<DatasetSpec> {
+        let obj = v.as_obj().context("\"dataset\" must be a JSON object")?;
+        let name = obj
+            .get("name")
+            .and_then(Json::as_str)
+            .context("dataset spec requires a \"name\" string")?;
+        let mut spec = DatasetSpec::new(name);
+        for (k, val) in obj {
+            match k.as_str() {
+                "name" => {}
+                "backend" => {
+                    let s = val.as_str().context("dataset backend must be a string")?;
+                    spec.backend = BackendKind::parse(s).with_context(|| {
+                        format!("unknown backend '{s}' (dense|csc|mmap|sharded)")
+                    })?;
+                }
+                "seed" => {
+                    spec.seed = val.as_usize().context("dataset seed must be an integer")? as u64;
+                }
+                "scale" => {
+                    spec.scale = val.as_f64().context("dataset scale must be a number")?;
+                    if !(spec.scale > 0.0 && spec.scale <= 1.0) {
+                        bail!("dataset scale must be in (0, 1]");
+                    }
+                }
+                "density" => {
+                    spec.density = val.as_f64().context("dataset density must be a number")?;
+                    if !(spec.density > 0.0 && spec.density <= 1.0) {
+                        bail!("dataset density must be in (0, 1]");
+                    }
+                }
+                "file" => {
+                    spec.file = match val {
+                        Json::Null => None,
+                        other => Some(
+                            other
+                                .as_str()
+                                .context("dataset file must be a string or null")?
+                                .to_string(),
+                        ),
+                    };
+                }
+                "shards" => {
+                    spec.shards = match val {
+                        Json::Null => None,
+                        other => {
+                            let k = other
+                                .as_usize()
+                                .context("dataset shards must be a positive integer or null")?;
+                            if k == 0 {
+                                bail!("dataset shards must be ≥ 1 (or null for the default)");
+                            }
+                            Some(k)
+                        }
+                    };
+                }
+                other => bail!("unknown dataset key '{other}'"),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Emit the spec as the request's `"dataset"` object.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("backend", self.backend.as_str())
+            .set("seed", self.seed as usize)
+            .set("scale", self.scale)
+            .set("density", self.density)
+            .set(
+                "file",
+                match &self.file {
+                    Some(f) => Json::from(f.as_str()),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "shards",
+                match self.shards {
+                    Some(k) => Json::from(k),
+                    None => Json::Null,
+                },
+            )
+    }
+
+    /// Registry key: the canonical compact JSON of the spec (object keys
+    /// sort, so equal specs always produce equal keys).
+    pub fn key(&self) -> String {
+        self.to_json().to_string_compact()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SolveRequest
+// ---------------------------------------------------------------------------
+
+/// One solve request — the typed struct both the CLI flags and the wire
+/// JSON translate into. Solve-control knobs live in the embedded
+/// [`SolveControls`] (reachable via `Deref`); the JSON surface flattens
+/// them into the top-level object exactly like the `--config` file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolveRequest {
+    /// Schema version; must equal [`PROTOCOL_VERSION`].
+    pub v: usize,
+    pub kind: RequestKind,
+    /// Dataset to operate on; required by every kind except
+    /// `stats`/`shutdown`.
+    pub dataset: Option<DatasetSpec>,
+    /// α (problem (3)); paths and points fix one α.
+    pub alpha: f64,
+    pub solver: SolverKind,
+    pub screen: ScreenKind,
+    /// Pool-parallel red-black BCD group sweeps (no effect under FISTA).
+    pub parallel_bcd_groups: bool,
+    /// The shared solve-control knobs — reachable directly via `Deref`.
+    pub controls: SolveControls,
+    /// `solve-point`: 0-based index into the λ grid (0 = λmax).
+    pub lambda_index: Option<usize>,
+    /// `cv`: fold count.
+    pub k_folds: usize,
+    /// `cv`: α grid (default: the paper's seven tan(ψ) values).
+    pub alphas: Vec<f64>,
+}
+
+impl std::ops::Deref for SolveRequest {
+    type Target = SolveControls;
+    fn deref(&self) -> &SolveControls {
+        &self.controls
+    }
+}
+
+impl std::ops::DerefMut for SolveRequest {
+    fn deref_mut(&mut self) -> &mut SolveControls {
+        &mut self.controls
+    }
+}
+
+impl SolveRequest {
+    /// A request of `kind` with the batch CLI's defaults everywhere else.
+    pub fn new(kind: RequestKind) -> SolveRequest {
+        let defaults = crate::config::Config::default();
+        SolveRequest {
+            v: PROTOCOL_VERSION,
+            kind,
+            dataset: None,
+            alpha: 1.0,
+            solver: defaults.solver,
+            screen: defaults.screen,
+            parallel_bcd_groups: defaults.parallel_bcd_groups,
+            controls: defaults.controls,
+            lambda_index: None,
+            k_folds: defaults.k_folds,
+            alphas: defaults.alphas,
+        }
+    }
+
+    /// Parse a request from JSON text. Unknown keys, bad values, a
+    /// missing or unsupported `"v"`, and kind/field mismatches are all
+    /// typed errors — nothing is silently ignored.
+    pub fn parse(text: &str) -> Result<SolveRequest> {
+        let v = Json::parse(text).context("request is not valid JSON")?;
+        let obj = v.as_obj().context("request must be a JSON object")?;
+        let kind_s = obj
+            .get("kind")
+            .and_then(Json::as_str)
+            .context("request requires a \"kind\" string")?;
+        let kind = RequestKind::parse(kind_s).with_context(|| {
+            format!(
+                "unknown request kind '{kind_s}' \
+                 (load-dataset|solve-path|solve-point|cv|stats|shutdown)"
+            )
+        })?;
+        let mut req = SolveRequest::new(kind);
+        let mut saw_version = false;
+        for (k, val) in obj {
+            match k.as_str() {
+                "kind" => {}
+                "v" => {
+                    let ver = val.as_usize().context("\"v\" must be an integer")?;
+                    if ver != PROTOCOL_VERSION {
+                        bail!(
+                            "unsupported protocol version {ver} \
+                             (this build speaks v{PROTOCOL_VERSION})"
+                        );
+                    }
+                    req.v = ver;
+                    saw_version = true;
+                }
+                "dataset" => req.dataset = Some(DatasetSpec::from_json(val)?),
+                "alpha" => {
+                    req.alpha = val.as_f64().context("alpha must be a number")?;
+                    if !(req.alpha > 0.0 && req.alpha.is_finite()) {
+                        bail!("alpha must be positive and finite");
+                    }
+                }
+                "alphas" => {
+                    let arr = val.as_arr().context("alphas must be an array")?;
+                    req.alphas = arr
+                        .iter()
+                        .map(|x| x.as_f64().context("alpha must be a number"))
+                        .collect::<Result<_>>()?;
+                    if req.alphas.is_empty() {
+                        bail!("alphas must be non-empty");
+                    }
+                    if req.alphas.iter().any(|&a| a <= 0.0) {
+                        bail!("alphas must be positive");
+                    }
+                }
+                "solver" => {
+                    req.solver = val
+                        .as_str()
+                        .and_then(SolverKind::parse)
+                        .with_context(|| {
+                            format!("unknown solver {val:?} (want \"fista\" or \"bcd\")")
+                        })?;
+                }
+                "screen" => {
+                    let s = val.as_str().context("screen must be a string")?;
+                    req.screen = ScreenKind::parse(s).with_context(|| {
+                        format!(
+                            "unknown screen pipeline '{s}' \
+                             (tlfre|tlfre+gap|gap|strong+kkt|none)"
+                        )
+                    })?;
+                }
+                "parallel_bcd_groups" => {
+                    req.parallel_bcd_groups =
+                        val.as_bool().context("parallel_bcd_groups must be a boolean")?;
+                }
+                "k_folds" => {
+                    req.k_folds = val.as_usize().context("k_folds must be an integer")?;
+                    if req.k_folds < 2 {
+                        bail!("k_folds must be ≥ 2");
+                    }
+                }
+                "lambda_index" => {
+                    req.lambda_index =
+                        Some(val.as_usize().context("lambda_index must be an integer ≥ 0")?);
+                }
+                other => {
+                    if !req.controls.apply_json_key(other, val)? {
+                        bail!("unknown request key '{other}'");
+                    }
+                }
+            }
+        }
+        if !saw_version {
+            bail!("request is missing protocol version key \"v\" ({PROTOCOL_VERSION} expected)");
+        }
+        if kind.needs_dataset() && req.dataset.is_none() {
+            bail!("'{}' request requires a \"dataset\" object", kind.as_str());
+        }
+        if kind == RequestKind::SolvePoint {
+            let idx = req
+                .lambda_index
+                .context("'solve-point' request requires \"lambda_index\"")?;
+            if idx >= req.controls.n_lambda {
+                bail!(
+                    "lambda_index {idx} out of range for the {}-point grid",
+                    req.controls.n_lambda
+                );
+            }
+        }
+        Ok(req)
+    }
+
+    /// Serialize to the wire JSON (the inverse of [`Self::parse`]; control
+    /// fields are emitted by [`SolveControls::emit_json`], the same single
+    /// source as parsing).
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj()
+            .set("v", self.v)
+            .set("kind", self.kind.as_str())
+            .set("alpha", self.alpha)
+            .set("alphas", self.alphas.clone())
+            .set("solver", self.solver.as_str())
+            .set("screen", self.screen.as_str())
+            .set("parallel_bcd_groups", self.parallel_bcd_groups)
+            .set("k_folds", self.k_folds);
+        if let Some(spec) = &self.dataset {
+            obj = obj.set("dataset", spec.to_json());
+        }
+        if let Some(idx) = self.lambda_index {
+            obj = obj.set("lambda_index", idx);
+        }
+        self.controls.emit_json(obj)
+    }
+
+    /// The per-α path configuration this request describes — the same
+    /// translation [`crate::config::Config::path_config`] performs for the
+    /// batch CLI, so served and batch solves are driven by identical
+    /// configs by construction.
+    pub fn path_config(&self) -> PathConfig {
+        PathConfig {
+            alpha: self.alpha,
+            solver: self.solver,
+            materialize_reduced: false,
+            exact_view_lipschitz: false,
+            parallel_bcd_groups: self.parallel_bcd_groups,
+            screen: self.screen,
+            controls: self.controls,
+        }
+    }
+
+    /// Cache key for completed path prefixes: dataset identity plus every
+    /// field that influences the walk, floats by bit pattern. Two requests
+    /// share a cache entry iff their walks are bitwise identical.
+    pub fn cache_key(&self) -> String {
+        let c = &self.controls;
+        format!(
+            "{}|alpha={:016x}|solver={}|screen={}|pbcd={}|nl={}|ratio={:016x}|tol={:016x}\
+             |mi={}|vs={}|gi={:016x}|lre={:?}|ms={:?}",
+            self.dataset.as_ref().map(DatasetSpec::key).unwrap_or_default(),
+            self.alpha.to_bits(),
+            self.solver.as_str(),
+            self.screen.as_str(),
+            self.parallel_bcd_groups,
+            c.n_lambda,
+            c.lambda_min_ratio.to_bits(),
+            c.tol.to_bits(),
+            c.max_iter,
+            c.verify_safety,
+            c.gap_inflation.to_bits(),
+            c.lipschitz_refresh_every,
+            c.max_seconds.map(f64::to_bits),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SolveResponse
+// ---------------------------------------------------------------------------
+
+/// Per-λ step summary carried by path/point responses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StepSummary {
+    pub lambda: f64,
+    /// Final duality gap of the step's solve.
+    pub gap: f64,
+    pub iters: usize,
+    pub active_features: usize,
+    /// Certified distance to the optimum (max(gap, 0); +∞ when the gap
+    /// never became finite).
+    pub certified_suboptimality: f64,
+    /// True when the step's solver stopped on the wall-clock budget
+    /// rather than the tolerance.
+    pub budget_exhausted: bool,
+}
+
+impl From<&PathStep> for StepSummary {
+    fn from(s: &PathStep) -> StepSummary {
+        StepSummary {
+            lambda: s.lambda,
+            gap: s.gap,
+            iters: s.iters,
+            active_features: s.active_features,
+            certified_suboptimality: s.certified_suboptimality,
+            budget_exhausted: s.budget_exhausted,
+        }
+    }
+}
+
+impl StepSummary {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("lambda", self.lambda)
+            .set("gap", self.gap)
+            .set("iters", self.iters)
+            .set("active_features", self.active_features)
+            .set("certified_suboptimality", self.certified_suboptimality)
+            .set("budget_exhausted", self.budget_exhausted)
+    }
+
+    fn from_json(v: &Json) -> Result<StepSummary> {
+        let get = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("step is missing numeric '{key}'"))
+        };
+        Ok(StepSummary {
+            lambda: get("lambda")?,
+            gap: get("gap")?,
+            iters: get("iters")? as usize,
+            active_features: get("active_features")? as usize,
+            certified_suboptimality: get("certified_suboptimality")?,
+            budget_exhausted: v
+                .get("budget_exhausted")
+                .and_then(Json::as_bool)
+                .context("step is missing 'budget_exhausted'")?,
+        })
+    }
+}
+
+/// The engine's answer to a [`SolveRequest`] — one shape for every kind;
+/// kind-specific extras (dataset dims, the CV table, engine counters) ride
+/// in [`Self::payload`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SolveResponse {
+    /// Schema version (= [`PROTOCOL_VERSION`]).
+    pub v: usize,
+    /// False when the request failed; [`Self::error`] carries the chain.
+    pub ok: bool,
+    pub kind: RequestKind,
+    /// Describe line of the dataset operated on (empty when n/a).
+    pub dataset: String,
+    /// True when the answer came from a resident cached path prefix
+    /// (no solver ran for this request).
+    pub warm: bool,
+    /// True when the walk stopped early (wall-clock budget).
+    pub truncated: bool,
+    pub lambda_max: f64,
+    /// The resolved descending λ grid.
+    pub grid: Vec<f64>,
+    pub steps: Vec<StepSummary>,
+    /// `solve-path`: one [`beta_hex`] line per grid point (identical bytes
+    /// to the batch CLI's `--coef-out`). `solve-point`: exactly one line.
+    pub coef_hex: Vec<String>,
+    /// `solve-point`: the λ value solved.
+    pub lambda: Option<f64>,
+    /// `solve-point`: certified distance to the optimum at that point.
+    pub certified_suboptimality: Option<f64>,
+    pub screen_total_s: f64,
+    pub solve_total_s: f64,
+    /// Kind-specific extras (load-dataset dims, cv table, stats counters).
+    pub payload: Json,
+    /// Error chain when `ok` is false.
+    pub error: Option<String>,
+}
+
+impl SolveResponse {
+    /// An empty successful response of `kind`.
+    pub fn new(kind: RequestKind) -> SolveResponse {
+        SolveResponse {
+            v: PROTOCOL_VERSION,
+            ok: true,
+            kind,
+            dataset: String::new(),
+            warm: false,
+            truncated: false,
+            lambda_max: 0.0,
+            grid: Vec::new(),
+            steps: Vec::new(),
+            coef_hex: Vec::new(),
+            lambda: None,
+            certified_suboptimality: None,
+            screen_total_s: 0.0,
+            solve_total_s: 0.0,
+            payload: Json::Null,
+            error: None,
+        }
+    }
+
+    /// The error response for a failed request ('{e:#}' chain flattened by
+    /// the caller).
+    pub fn failure(kind: RequestKind, error: String) -> SolveResponse {
+        let mut r = SolveResponse::new(kind);
+        r.ok = false;
+        r.error = Some(error);
+        r
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj()
+            .set("v", self.v)
+            .set("ok", self.ok)
+            .set("kind", self.kind.as_str())
+            .set("dataset", self.dataset.as_str())
+            .set("warm", self.warm)
+            .set("truncated", self.truncated)
+            .set("lambda_max", self.lambda_max)
+            .set("grid", self.grid.clone())
+            .set("steps", self.steps.iter().map(StepSummary::to_json).collect::<Vec<_>>())
+            .set("coef_hex", self.coef_hex.iter().map(String::as_str).collect::<Vec<_>>())
+            .set("screen_total_s", self.screen_total_s)
+            .set("solve_total_s", self.solve_total_s)
+            .set("payload", self.payload.clone());
+        if let Some(l) = self.lambda {
+            obj = obj.set("lambda", l);
+        }
+        if let Some(c) = self.certified_suboptimality {
+            obj = obj.set("certified_suboptimality", c);
+        }
+        if let Some(e) = &self.error {
+            obj = obj.set("error", e.as_str());
+        }
+        obj
+    }
+
+    /// Parse a response from JSON text (the client side of the wire).
+    pub fn parse(text: &str) -> Result<SolveResponse> {
+        let v = Json::parse(text).context("response is not valid JSON")?;
+        let ver = v.get("v").and_then(Json::as_usize).context("response is missing \"v\"")?;
+        if ver != PROTOCOL_VERSION {
+            bail!("unsupported response version {ver} (this build speaks v{PROTOCOL_VERSION})");
+        }
+        let kind_s = v
+            .get("kind")
+            .and_then(Json::as_str)
+            .context("response is missing \"kind\"")?;
+        let kind = RequestKind::parse(kind_s)
+            .with_context(|| format!("unknown response kind '{kind_s}'"))?;
+        let mut r = SolveResponse::new(kind);
+        r.ok = v.get("ok").and_then(Json::as_bool).context("response is missing \"ok\"")?;
+        r.error = v.get("error").and_then(Json::as_str).map(str::to_string);
+        r.dataset = v.get("dataset").and_then(Json::as_str).unwrap_or_default().to_string();
+        r.warm = v.get("warm").and_then(Json::as_bool).unwrap_or(false);
+        r.truncated = v.get("truncated").and_then(Json::as_bool).unwrap_or(false);
+        r.lambda_max = v.get("lambda_max").and_then(Json::as_f64).unwrap_or(0.0);
+        if let Some(grid) = v.get("grid").and_then(Json::as_arr) {
+            r.grid = grid
+                .iter()
+                .map(|x| x.as_f64().context("grid entries must be numbers"))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(steps) = v.get("steps").and_then(Json::as_arr) {
+            r.steps = steps.iter().map(StepSummary::from_json).collect::<Result<_>>()?;
+        }
+        if let Some(lines) = v.get("coef_hex").and_then(Json::as_arr) {
+            r.coef_hex = lines
+                .iter()
+                .map(|x| {
+                    x.as_str().map(str::to_string).context("coef_hex entries must be strings")
+                })
+                .collect::<Result<_>>()?;
+        }
+        r.lambda = v.get("lambda").and_then(Json::as_f64);
+        r.certified_suboptimality = v.get("certified_suboptimality").and_then(Json::as_f64);
+        r.screen_total_s = v.get("screen_total_s").and_then(Json::as_f64).unwrap_or(0.0);
+        r.solve_total_s = v.get("solve_total_s").and_then(Json::as_f64).unwrap_or(0.0);
+        r.payload = v.get("payload").cloned().unwrap_or(Json::Null);
+        Ok(r)
+    }
+
+    /// The exact byte stream the batch CLI's `--coef-out` would hold for
+    /// the same walk: coef_hex lines joined with trailing newlines.
+    pub fn coef_dump(&self) -> String {
+        let mut s =
+            String::with_capacity(self.coef_hex.iter().map(|l| l.len() + 1).sum::<usize>());
+        for line in &self.coef_hex {
+            s.push_str(line);
+            s.push('\n');
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coefficient bit dumps
+// ---------------------------------------------------------------------------
+
+/// One coefficient vector as its 8-hex-digit f32 bit patterns, space
+/// separated — one `--coef-out` line. Text-stable across platforms and
+/// backends (and distinguishes `-0.0` from `0.0`), so `cmp` is a bitwise
+/// equality check.
+pub fn beta_hex(beta: &[f32]) -> String {
+    let mut s = String::with_capacity(beta.len() * 9);
+    for (i, v) in beta.iter().enumerate() {
+        if i > 0 {
+            s.push(' ');
+        }
+        s.push_str(&format!("{:08x}", v.to_bits()));
+    }
+    s
+}
+
+/// Per-λ coefficient dump for bitwise comparison: one [`beta_hex`] line
+/// per grid point plus trailing newline — the byte format of the CLI's
+/// `--coef-out` and the serve smoke test's `cmp` target.
+pub fn coef_hex_dump(betas: &[Vec<f32>]) -> String {
+    let per_line = betas.first().map_or(0, |b| b.len() * 9 + 1);
+    let mut s = String::with_capacity(betas.len() * per_line);
+    for b in betas {
+        s.push_str(&beta_hex(b));
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_through_json() {
+        let mut req = SolveRequest::new(RequestKind::SolvePath);
+        req.dataset = Some(DatasetSpec::new("synthetic1"));
+        req.alpha = 0.5;
+        req.solver = SolverKind::Bcd;
+        req.screen = ScreenKind::TlfreGap;
+        req.controls.n_lambda = 17;
+        req.controls.tol = 1e-7;
+        req.controls.max_seconds = Some(2.5);
+        let back = SolveRequest::parse(&req.to_json().to_string_pretty()).unwrap();
+        assert_eq!(req, back);
+        assert_eq!(req.cache_key(), back.cache_key());
+    }
+
+    #[test]
+    fn point_request_roundtrip_and_range_check() {
+        let mut req = SolveRequest::new(RequestKind::SolvePoint);
+        req.dataset = Some(DatasetSpec::new("synthetic2"));
+        req.controls.n_lambda = 10;
+        req.lambda_index = Some(9);
+        let back = SolveRequest::parse(&req.to_json().to_string_pretty()).unwrap();
+        assert_eq!(req, back);
+        req.lambda_index = Some(10); // out of range
+        assert!(SolveRequest::parse(&req.to_json().to_string_pretty()).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_keys_bad_versions_and_missing_fields() {
+        let ds = r#""dataset": {"name": "synthetic1"}"#;
+        // Unknown top-level key (config-key typos included).
+        let bad = format!(r#"{{"v": 1, "kind": "solve-path", {ds}, "n_lamda": 10}}"#);
+        let err = format!("{:#}", SolveRequest::parse(&bad).unwrap_err());
+        assert!(err.contains("unknown request key 'n_lamda'"), "{err}");
+        // Unknown dataset key.
+        let bad = r#"{"v": 1, "kind": "solve-path", "dataset": {"name": "s1", "sede": 3}}"#;
+        assert!(SolveRequest::parse(bad).is_err());
+        // Missing / wrong protocol version.
+        let bad = format!(r#"{{"kind": "solve-path", {ds}}}"#);
+        assert!(SolveRequest::parse(&bad).is_err());
+        let bad = format!(r#"{{"v": 2, "kind": "solve-path", {ds}}}"#);
+        assert!(format!("{:#}", SolveRequest::parse(&bad).unwrap_err())
+            .contains("unsupported protocol version"));
+        // Unknown kind; missing dataset; missing lambda_index.
+        assert!(SolveRequest::parse(r#"{"v": 1, "kind": "solve-everything"}"#).is_err());
+        assert!(SolveRequest::parse(r#"{"v": 1, "kind": "solve-path"}"#).is_err());
+        let bad = format!(r#"{{"v": 1, "kind": "solve-point", {ds}}}"#);
+        assert!(SolveRequest::parse(&bad).is_err());
+        // Control-key validation flows through the shared parse path.
+        let bad = format!(r#"{{"v": 1, "kind": "solve-path", {ds}, "lambda_min_ratio": 2.0}}"#);
+        assert!(SolveRequest::parse(&bad).is_err());
+        // stats/shutdown need no dataset.
+        assert!(SolveRequest::parse(r#"{"v": 1, "kind": "stats"}"#).is_ok());
+        assert!(SolveRequest::parse(r#"{"v": 1, "kind": "shutdown"}"#).is_ok());
+    }
+
+    #[test]
+    fn cache_key_separates_configs_and_floats_bitwise() {
+        let mut a = SolveRequest::new(RequestKind::SolvePath);
+        a.dataset = Some(DatasetSpec::new("synthetic1"));
+        let mut b = a.clone();
+        assert_eq!(a.cache_key(), b.cache_key());
+        b.controls.tol = a.controls.tol * (1.0 + f64::EPSILON); // 1-ulp apart
+        assert_ne!(a.cache_key(), b.cache_key());
+        b = a.clone();
+        b.screen = ScreenKind::Gap;
+        assert_ne!(a.cache_key(), b.cache_key());
+        b = a.clone();
+        b.dataset.as_mut().unwrap().seed += 1;
+        assert_ne!(a.cache_key(), b.cache_key());
+        // A point request at the same config shares the path's cache line.
+        let mut p = a.clone();
+        p.kind = RequestKind::SolvePoint;
+        p.lambda_index = Some(3);
+        assert_eq!(a.cache_key(), p.cache_key());
+    }
+
+    #[test]
+    fn response_roundtrip_and_coef_dump_bytes() {
+        let mut r = SolveResponse::new(RequestKind::SolvePath);
+        r.dataset = "synthetic1: 50×100 (10 groups)".into();
+        r.lambda_max = 3.5;
+        r.grid = vec![3.5, 1.75];
+        r.steps = vec![StepSummary {
+            lambda: 3.5,
+            gap: 0.0,
+            iters: 0,
+            active_features: 0,
+            certified_suboptimality: 0.0,
+            budget_exhausted: false,
+        }];
+        r.coef_hex = vec![beta_hex(&[0.0, -0.0]), beta_hex(&[1.0, 2.0])];
+        let back = SolveResponse::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(r, back);
+        // coef_dump reproduces coef_hex_dump's bytes exactly.
+        assert_eq!(
+            back.coef_dump(),
+            coef_hex_dump(&[vec![0.0, -0.0], vec![1.0, 2.0]])
+        );
+        assert!(back.coef_dump().starts_with("00000000 80000000\n"));
+    }
+
+    #[test]
+    fn failure_responses_carry_the_error() {
+        let r = SolveResponse::failure(RequestKind::SolvePath, "boom: reason".into());
+        let back = SolveResponse::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert!(!back.ok);
+        assert_eq!(back.error.as_deref(), Some("boom: reason"));
+    }
+}

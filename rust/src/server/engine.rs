@@ -1,0 +1,390 @@
+//! Request execution: one [`SolveRequest`] in, one [`SolveResponse`] out,
+//! against the resident [`SessionRegistry`].
+//!
+//! Every solve goes through the same streaming driver as the batch CLI
+//! (`coordinator::driver`), so a served result is bitwise identical to
+//! the equivalent batch run by construction — same engine, same grid,
+//! same loop body. The serve layer adds exactly two things on top:
+//!
+//! * **Path caching.** A completed walk is stored under the request's
+//!   [`SolveRequest::cache_key`]; a later identical `solve-path` answers
+//!   from the cache without running a solver (`warm: true`).
+//! * **Prefix solving.** `solve-point` at grid index `i` runs
+//!   [`drive_prefix`] to index `i` and stops — a prefix of the full walk
+//!   is bitwise identical to the same prefix of the full walk, and the
+//!   cached prefix (each entry warm-started from its predecessor during
+//!   the walk) serves later points at indexes `≤ i` with zero solves.
+//!
+//! Execution never panics a connection thread on bad input: [`execute`]
+//! converts every error chain into a `SolveResponse::failure` envelope.
+
+use super::api::{beta_hex, RequestKind, SolveRequest, SolveResponse, StepSummary};
+use super::registry::{CachedPath, LoadedData, SessionRegistry};
+use crate::bail;
+use crate::coordinator::driver::{drive_prefix, PathSink, TlfreEngine};
+use crate::coordinator::runner::PathStep;
+use crate::coordinator::{cross_validate, CvOutput, CvPoint};
+use crate::error::{Context, Result};
+use crate::util::json::Json;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// Captures everything a walk streams — grid, per-λ step records, and the
+/// full-space coefficient vector per step — so the result can live in the
+/// path cache and be re-served without re-solving.
+struct RecordingSink {
+    lambda_max: f64,
+    grid: Vec<f64>,
+    steps: Vec<PathStep>,
+    betas: Vec<Vec<f32>>,
+}
+
+impl RecordingSink {
+    fn new() -> RecordingSink {
+        RecordingSink { lambda_max: 0.0, grid: Vec::new(), steps: Vec::new(), betas: Vec::new() }
+    }
+}
+
+impl PathSink<PathStep> for RecordingSink {
+    fn on_grid(&mut self, lambda_max: f64, grid: &[f64]) {
+        self.lambda_max = lambda_max;
+        self.grid = grid.to_vec();
+        self.steps.reserve(grid.len());
+        self.betas.reserve(grid.len());
+    }
+
+    fn on_step(&mut self, step: &PathStep, beta: &[f32]) {
+        self.steps.push(step.clone());
+        self.betas.push(beta.to_vec());
+    }
+}
+
+/// Dispatch a body over the concrete design-matrix type behind a
+/// [`LoadedData`] ([`crate::linalg::DesignMatrix`] is not object-safe —
+/// static dispatch per backend, like the CLI's command bodies).
+macro_rules! with_matrix {
+    ($data:expr, |$x:ident| $body:expr) => {
+        match &*$data {
+            LoadedData::Dense(d) => {
+                let $x = &d.x;
+                $body
+            }
+            LoadedData::Csc(d) => {
+                let $x = &d.x;
+                $body
+            }
+            LoadedData::Mmap(d) => {
+                let $x = &d.ds.x;
+                $body
+            }
+            LoadedData::Sharded(d) => {
+                let $x = &d.x;
+                $body
+            }
+        }
+    };
+}
+
+/// Walk the path for `req` on `data`, stopping after `stop_after` grid
+/// points (`None` = the full grid), and package the result for the cache.
+fn walk_prefix(data: &LoadedData, req: &SolveRequest, stop_after: Option<usize>) -> CachedPath {
+    let cfg = req.path_config();
+    let mut sink = RecordingSink::new();
+    let totals = with_matrix!(data, |x| drive_prefix(
+        TlfreEngine::new(x, data.y(), data.groups(), &cfg),
+        &mut sink,
+        stop_after
+    ));
+    let complete = sink.steps.len() == sink.grid.len();
+    CachedPath {
+        lambda_max: totals.lambda_max,
+        grid: sink.grid,
+        steps: sink.steps,
+        betas: sink.betas,
+        screen_total_s: totals.screen_total_s,
+        solve_total_s: totals.solve_total_s,
+        complete,
+    }
+}
+
+/// Execute one request. Never returns an error: failures become a
+/// `SolveResponse::failure` envelope (and bump the error counter), so a
+/// bad request can only ever cost its own connection.
+pub fn execute(reg: &SessionRegistry, req: &SolveRequest) -> SolveResponse {
+    reg.stats.requests.fetch_add(1, Ordering::Relaxed);
+    match run(reg, req) {
+        Ok(resp) => resp,
+        Err(e) => {
+            reg.stats.errors.fetch_add(1, Ordering::Relaxed);
+            SolveResponse::failure(req.kind, format!("{e:#}"))
+        }
+    }
+}
+
+fn run(reg: &SessionRegistry, req: &SolveRequest) -> Result<SolveResponse> {
+    match req.kind {
+        RequestKind::Stats => {
+            let mut r = SolveResponse::new(req.kind);
+            r.payload = reg.stats_json();
+            Ok(r)
+        }
+        RequestKind::Shutdown => {
+            // The accept loop flips its stop flag after answering; the
+            // engine itself has nothing to tear down.
+            let mut r = SolveResponse::new(req.kind);
+            r.payload = Json::obj().set("shutting_down", true);
+            Ok(r)
+        }
+        RequestKind::LoadDataset => {
+            let data = reg.dataset(dataset_spec(req)?)?;
+            let mut r = SolveResponse::new(req.kind);
+            r.dataset = data.describe();
+            r.payload = Json::obj()
+                .set("n", data.n())
+                .set("p", data.p())
+                .set("groups", data.groups().n_groups())
+                .set("backend", data.backend().as_str());
+            Ok(r)
+        }
+        RequestKind::SolvePath => solve_path(reg, req),
+        RequestKind::SolvePoint => solve_point(reg, req),
+        RequestKind::Cv => run_cv(reg, req),
+    }
+}
+
+fn dataset_spec(req: &SolveRequest) -> Result<&super::api::DatasetSpec> {
+    req.dataset
+        .as_ref()
+        .with_context(|| format!("'{}' request requires a dataset", req.kind.as_str()))
+}
+
+fn solve_path(reg: &SessionRegistry, req: &SolveRequest) -> Result<SolveResponse> {
+    let data = reg.dataset(dataset_spec(req)?)?;
+    let key = req.cache_key();
+    let (path, warm) = match reg.cached_path(&key) {
+        Some(p) if p.complete => {
+            reg.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            (p, true)
+        }
+        _ => {
+            reg.stats.cache_misses.fetch_add(1, Ordering::Relaxed);
+            let p = Arc::new(walk_prefix(&data, req, None));
+            reg.stats.paths_solved.fetch_add(1, Ordering::Relaxed);
+            reg.store_path(key, p.clone());
+            (p, false)
+        }
+    };
+    let mut r = SolveResponse::new(req.kind);
+    r.dataset = data.describe();
+    r.warm = warm;
+    r.truncated = !path.complete;
+    fill_path_fields(&mut r, &path);
+    r.steps = path.steps.iter().map(StepSummary::from).collect();
+    r.coef_hex = path.betas.iter().map(|b| beta_hex(b)).collect();
+    Ok(r)
+}
+
+fn solve_point(reg: &SessionRegistry, req: &SolveRequest) -> Result<SolveResponse> {
+    let idx = req.lambda_index.context("'solve-point' request requires \"lambda_index\"")?;
+    if idx >= req.controls.n_lambda {
+        bail!("lambda_index {idx} out of range for the {}-point grid", req.controls.n_lambda);
+    }
+    let data = reg.dataset(dataset_spec(req)?)?;
+    let key = req.cache_key();
+    let (path, warm) = match reg.cached_path(&key) {
+        Some(p) if p.covers(idx) => {
+            reg.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            (p, true)
+        }
+        _ => {
+            reg.stats.cache_misses.fetch_add(1, Ordering::Relaxed);
+            let p = Arc::new(walk_prefix(&data, req, Some(idx + 1)));
+            reg.stats.paths_solved.fetch_add(1, Ordering::Relaxed);
+            reg.store_path(key, p.clone());
+            (p, false)
+        }
+    };
+    if !path.covers(idx) {
+        // Only a wall-clock budget can stop a prefix walk short of its cut.
+        bail!(
+            "wall-clock budget exhausted at grid index {} (requested index {idx})",
+            path.steps.len()
+        );
+    }
+    let step = &path.steps[idx];
+    let mut r = SolveResponse::new(req.kind);
+    r.dataset = data.describe();
+    r.warm = warm;
+    fill_path_fields(&mut r, &path);
+    r.lambda = Some(step.lambda);
+    r.certified_suboptimality = Some(step.certified_suboptimality);
+    r.steps = vec![StepSummary::from(step)];
+    r.coef_hex = vec![beta_hex(&path.betas[idx])];
+    Ok(r)
+}
+
+/// Shared path/point response fields. The timing totals always describe
+/// the walk that *produced* the data — for a warm response that walk ran
+/// on an earlier request, and `warm: true` says so.
+fn fill_path_fields(r: &mut SolveResponse, path: &CachedPath) {
+    r.lambda_max = path.lambda_max;
+    r.grid = path.grid.clone();
+    r.screen_total_s = path.screen_total_s;
+    r.solve_total_s = path.solve_total_s;
+}
+
+fn run_cv(reg: &SessionRegistry, req: &SolveRequest) -> Result<SolveResponse> {
+    let spec = dataset_spec(req)?;
+    let seed = spec.seed;
+    let data = reg.dataset(spec)?;
+    let cfg = req.path_config();
+    // CV needs row selection for fold extraction (`SelectRows`), which the
+    // out-of-core backends deliberately do not implement.
+    let out = match &*data {
+        LoadedData::Dense(d) => {
+            cross_validate(&d.x, &d.y, &d.groups, &req.alphas, req.k_folds, &cfg, seed)
+        }
+        LoadedData::Csc(d) => {
+            cross_validate(&d.x, &d.y, &d.groups, &req.alphas, req.k_folds, &cfg, seed)
+        }
+        other => bail!("cv supports dense|csc backends, got '{}'", other.backend().as_str()),
+    };
+    let mut r = SolveResponse::new(req.kind);
+    r.dataset = data.describe();
+    r.screen_total_s = out.screen_total_s;
+    r.solve_total_s = out.solve_total_s;
+    r.payload = cv_json(&out);
+    Ok(r)
+}
+
+fn cv_json(out: &CvOutput) -> Json {
+    fn point(p: &CvPoint) -> Json {
+        Json::obj()
+            .set("alpha", p.alpha)
+            .set("lambda_ratio", p.lambda_ratio)
+            .set("mse", p.mse)
+            .set("mean_nnz", p.mean_nnz)
+    }
+    Json::obj()
+        .set("best", point(&out.best))
+        .set("points", out.points.iter().map(point).collect::<Vec<_>>())
+        .set("nonfinite_points", out.nonfinite_points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::api::{coef_hex_dump, BackendKind, DatasetSpec};
+    use super::*;
+    use crate::coordinator::run_tlfre_path_with_coefficients;
+    use crate::data::registry::resolve_dataset;
+
+    fn path_request(backend: BackendKind) -> SolveRequest {
+        let mut req = SolveRequest::new(RequestKind::SolvePath);
+        let mut spec = DatasetSpec::new("synthetic1");
+        spec.backend = backend;
+        spec.scale = 0.01;
+        req.dataset = Some(spec);
+        req.alpha = 0.5;
+        req.controls.n_lambda = 8;
+        req.controls.lambda_min_ratio = 0.1;
+        req
+    }
+
+    fn batch_dump(req: &SolveRequest) -> String {
+        let spec = req.dataset.as_ref().unwrap();
+        let ds = resolve_dataset(&spec.name, spec.seed, spec.scale).unwrap();
+        let (out, betas) =
+            run_tlfre_path_with_coefficients(&ds.x, &ds.y, &ds.groups, &req.path_config());
+        assert!(!out.steps.is_empty());
+        coef_hex_dump(&betas)
+    }
+
+    #[test]
+    fn served_path_is_bitwise_identical_to_the_batch_run() {
+        let reg = SessionRegistry::new();
+        for backend in [BackendKind::Dense, BackendKind::Csc, BackendKind::Sharded] {
+            let req = path_request(backend);
+            let resp = execute(&reg, &req);
+            assert!(resp.ok, "{:?}", resp.error);
+            assert!(!resp.warm);
+            assert_eq!(resp.coef_dump(), batch_dump(&req), "{}", backend.as_str());
+            // Second identical request is served warm with the same bytes.
+            let again = execute(&reg, &req);
+            assert!(again.ok && again.warm);
+            assert_eq!(again.coef_hex, resp.coef_hex);
+        }
+    }
+
+    #[test]
+    fn point_prefixes_match_the_full_path_and_warm_from_the_cache() {
+        let reg = SessionRegistry::new();
+        let full = batch_dump(&path_request(BackendKind::Dense));
+        let lines: Vec<&str> = full.lines().collect();
+        // Cold point at index 4 walks the prefix from scratch.
+        let mut point = path_request(BackendKind::Dense);
+        point.kind = RequestKind::SolvePoint;
+        point.lambda_index = Some(4);
+        let resp = execute(&reg, &point);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert!(!resp.warm);
+        assert_eq!(resp.coef_hex, vec![lines[4].to_string()]);
+        assert!(resp.certified_suboptimality.is_some());
+        assert_eq!(resp.steps.len(), 1);
+        // An earlier index is inside the cached prefix: warm, zero solves.
+        point.lambda_index = Some(2);
+        let resp = execute(&reg, &point);
+        assert!(resp.ok && resp.warm);
+        assert_eq!(resp.coef_hex, vec![lines[2].to_string()]);
+        // A later index extends the prefix (cold) and matches the batch walk.
+        point.lambda_index = Some(7);
+        let resp = execute(&reg, &point);
+        assert!(resp.ok && !resp.warm);
+        assert_eq!(resp.coef_hex, vec![lines[7].to_string()]);
+        // The path request now finds the complete prefix resident.
+        let path = execute(&reg, &path_request(BackendKind::Dense));
+        assert!(path.ok && path.warm);
+        assert_eq!(path.coef_dump(), full);
+    }
+
+    #[test]
+    fn errors_become_failure_envelopes_not_panics() {
+        let reg = SessionRegistry::new();
+        let mut req = path_request(BackendKind::Dense);
+        req.dataset.as_mut().unwrap().name = "no-such-dataset".into();
+        let resp = execute(&reg, &req);
+        assert!(!resp.ok);
+        assert!(resp.error.as_deref().unwrap_or("").contains("unknown dataset"));
+        // A point past a budget-stopped walk is a typed error too.
+        let mut req = path_request(BackendKind::Dense);
+        req.kind = RequestKind::SolvePoint;
+        req.lambda_index = Some(3);
+        req.dataset = None;
+        assert!(!execute(&reg, &req).ok);
+    }
+
+    #[test]
+    fn load_stats_and_cv_round_trip() {
+        let reg = SessionRegistry::new();
+        let mut load = path_request(BackendKind::Dense);
+        load.kind = RequestKind::LoadDataset;
+        let resp = execute(&reg, &load);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.payload.get("n").and_then(Json::as_usize), Some(250));
+        let mut cv = path_request(BackendKind::Dense);
+        cv.kind = RequestKind::Cv;
+        cv.alphas = vec![0.5];
+        cv.k_folds = 2;
+        cv.controls.n_lambda = 4;
+        let resp = execute(&reg, &cv);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert!(resp.payload.get("best").is_some());
+        // CV on an out-of-core backend is a typed error.
+        cv.dataset.as_mut().unwrap().backend = BackendKind::Mmap;
+        let resp = execute(&reg, &cv);
+        assert!(!resp.ok);
+        assert!(resp.error.as_deref().unwrap_or("").contains("dense|csc"));
+        let stats = execute(&reg, &SolveRequest::new(RequestKind::Stats));
+        assert!(stats.ok);
+        assert!(stats.payload.get("requests").and_then(Json::as_usize).unwrap() >= 4);
+    }
+}

@@ -1,0 +1,34 @@
+//! L5 serve layer: the resident path-serving engine behind the unified
+//! solve-request API.
+//!
+//! The batch CLI re-generates its dataset, re-runs the spectral preamble,
+//! and re-walks the whole λ path on every invocation. This layer keeps
+//! all of that resident in one long-running process: a unix-socket server
+//! ([`serve`]) over a [`registry::SessionRegistry`] holding loaded
+//! datasets (any backend — dense, CSC, mmap, row-sharded) and completed
+//! path prefixes, executing typed [`api::SolveRequest`]s
+//! ([`engine::execute`]) framed over the wire by [`wire`].
+//!
+//! The load-bearing invariant, inherited from the streaming driver it is
+//! built on: **a served result is bitwise identical to the equivalent
+//! batch CLI run** — same engine, same grid, same loop body; caching and
+//! prefix solving only skip work whose output is already known, never
+//! change it. CI `cmp`s a served coefficient dump against a batch
+//! `--coef-out` file byte for byte, at several `TLFRE_THREADS` settings.
+//!
+//! `README.md` in this directory documents the versioned JSON schema, the
+//! cache-key/warm-start contract, and the failure modes.
+
+pub mod api;
+pub mod engine;
+pub mod registry;
+pub mod serve;
+pub mod wire;
+
+pub use api::{
+    beta_hex, coef_hex_dump, BackendKind, DatasetSpec, RequestKind, SolveRequest, SolveResponse,
+    StepSummary, PROTOCOL_VERSION,
+};
+pub use engine::execute;
+pub use registry::{CachedPath, LoadedData, SessionRegistry};
+pub use serve::{serve, serve_on};

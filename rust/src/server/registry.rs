@@ -1,0 +1,471 @@
+//! The engine's resident state: loaded datasets and completed path
+//! prefixes.
+//!
+//! A [`SessionRegistry`] outlives every connection. Datasets load once per
+//! [`DatasetSpec`] (keyed by the spec's canonical JSON) and are served as
+//! `Arc`s, so concurrent requests share one copy of `X` — including the
+//! mmap backend, whose mapping is immutable shared memory
+//! (`linalg::mmap::Store` is `Send + Sync`). Completed path prefixes are
+//! cached under [`crate::server::api::SolveRequest::cache_key`] — dataset
+//! identity plus every walk-shaping field, floats by bit pattern — so a
+//! cache line is only ever shared between requests whose walks are
+//! bitwise identical, and `solve-point` can answer from a resident prefix
+//! without running a solver.
+//!
+//! Locking discipline: the two maps sit behind plain `Mutex`es held only
+//! for lookups and inserts — loads and solves run outside any lock, so a
+//! slow request never blocks the registry. Poisoned locks are recovered
+//! (`PoisonError::into_inner`): a panicking request must not take the
+//! cache down for every later client (both maps hold only fully
+//! constructed values, inserted after the fallible work succeeded).
+
+use super::api::{BackendKind, DatasetSpec};
+use crate::bail;
+use crate::coordinator::runner::PathStep;
+use crate::data::io::MmapDataset;
+use crate::data::registry::{resolve_dataset, resolve_sparse_dataset};
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::groups::GroupStructure;
+use crate::linalg::{CscMatrix, DesignMatrix, ShardedMatrix};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Loaded datasets
+// ---------------------------------------------------------------------------
+
+/// A dataset behind the CSC or sharded backend (converted from the dense
+/// generator output; `sparse1` is CSC-native).
+pub struct BackedData<M> {
+    pub name: String,
+    pub x: M,
+    pub y: Vec<f32>,
+    pub groups: GroupStructure,
+}
+
+/// An mmap-backed dataset plus the temp file backing it when the engine
+/// generated (rather than was handed) the file. The mapping stays valid
+/// after the unlink in `Drop` — unix keeps the inode alive until unmapped.
+pub struct MmapData {
+    pub ds: MmapDataset,
+    pub(crate) temp_path: Option<PathBuf>,
+}
+
+impl Drop for MmapData {
+    fn drop(&mut self) {
+        if let Some(p) = &self.temp_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// One resident dataset, in whichever backend the spec asked for.
+pub enum LoadedData {
+    Dense(Dataset),
+    Csc(BackedData<CscMatrix>),
+    Mmap(MmapData),
+    Sharded(BackedData<ShardedMatrix>),
+}
+
+/// Monotonic suffix so concurrent loads of the same spec never share a
+/// temp file (each loser cleans up only its own).
+static TEMP_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+impl LoadedData {
+    /// Materialize the dataset a spec describes. Deterministic in the
+    /// spec: equal specs produce bitwise-equal data on every call.
+    pub fn load(spec: &DatasetSpec) -> Result<LoadedData> {
+        if spec.name == "sparse1" || spec.name == "sparse" {
+            let ds = resolve_sparse_dataset(spec.seed, spec.scale, spec.density);
+            return match spec.backend {
+                BackendKind::Csc => Ok(LoadedData::Csc(BackedData {
+                    name: ds.name,
+                    x: ds.x,
+                    y: ds.y,
+                    groups: ds.groups,
+                })),
+                BackendKind::Dense => Ok(LoadedData::Dense(Dataset {
+                    name: ds.name,
+                    x: ds.x.to_dense(),
+                    y: ds.y,
+                    groups: ds.groups,
+                    beta_star: Some(ds.beta_star),
+                })),
+                other => {
+                    bail!("sparse1 supports backend dense|csc, got '{}'", other.as_str())
+                }
+            };
+        }
+        match spec.backend {
+            BackendKind::Dense => {
+                Ok(LoadedData::Dense(resolve_dataset(&spec.name, spec.seed, spec.scale)?))
+            }
+            BackendKind::Csc => {
+                let ds = resolve_dataset(&spec.name, spec.seed, spec.scale)?;
+                Ok(LoadedData::Csc(BackedData {
+                    name: ds.name,
+                    x: CscMatrix::from_dense(&ds.x),
+                    y: ds.y,
+                    groups: ds.groups,
+                }))
+            }
+            BackendKind::Sharded => {
+                let ds = resolve_dataset(&spec.name, spec.seed, spec.scale)?;
+                let k = spec.shards.unwrap_or_else(crate::util::pool::num_threads).max(1);
+                Ok(LoadedData::Sharded(BackedData {
+                    name: ds.name,
+                    x: ShardedMatrix::from_dense(&ds.x, k),
+                    y: ds.y,
+                    groups: ds.groups,
+                }))
+            }
+            BackendKind::Mmap => {
+                let (path, temp) = match &spec.file {
+                    Some(f) => (PathBuf::from(f), false),
+                    None => {
+                        let ds = resolve_dataset(&spec.name, spec.seed, spec.scale)?;
+                        let path = std::env::temp_dir().join(format!(
+                            "tlfre-serve-{}-{}-{}.bin",
+                            std::process::id(),
+                            TEMP_SEQ.fetch_add(1, Ordering::Relaxed),
+                            spec.name
+                        ));
+                        crate::data::io::save(&ds, &path)?;
+                        (path, true)
+                    }
+                };
+                let ds = crate::data::io::open_mmap(&path)?;
+                Ok(LoadedData::Mmap(MmapData { ds, temp_path: temp.then_some(path) }))
+            }
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            LoadedData::Dense(d) => &d.name,
+            LoadedData::Csc(d) => &d.name,
+            LoadedData::Mmap(d) => &d.ds.name,
+            LoadedData::Sharded(d) => &d.name,
+        }
+    }
+
+    pub fn y(&self) -> &[f32] {
+        match self {
+            LoadedData::Dense(d) => &d.y,
+            LoadedData::Csc(d) => &d.y,
+            LoadedData::Mmap(d) => &d.ds.y,
+            LoadedData::Sharded(d) => &d.y,
+        }
+    }
+
+    pub fn groups(&self) -> &GroupStructure {
+        match self {
+            LoadedData::Dense(d) => &d.groups,
+            LoadedData::Csc(d) => &d.groups,
+            LoadedData::Mmap(d) => &d.ds.groups,
+            LoadedData::Sharded(d) => &d.groups,
+        }
+    }
+
+    pub fn backend(&self) -> BackendKind {
+        match self {
+            LoadedData::Dense(_) => BackendKind::Dense,
+            LoadedData::Csc(_) => BackendKind::Csc,
+            LoadedData::Mmap(_) => BackendKind::Mmap,
+            LoadedData::Sharded(_) => BackendKind::Sharded,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            LoadedData::Dense(d) => d.x.rows(),
+            LoadedData::Csc(d) => d.x.rows(),
+            LoadedData::Mmap(d) => d.ds.x.rows(),
+            LoadedData::Sharded(d) => d.x.rows(),
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        match self {
+            LoadedData::Dense(d) => d.x.cols(),
+            LoadedData::Csc(d) => d.x.cols(),
+            LoadedData::Mmap(d) => d.ds.x.cols(),
+            LoadedData::Sharded(d) => d.x.cols(),
+        }
+    }
+
+    /// One stable description line for responses and logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: {}×{} ({} groups) [{}]",
+            self.name(),
+            self.n(),
+            self.p(),
+            self.groups().n_groups(),
+            self.backend().as_str()
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cached path prefixes
+// ---------------------------------------------------------------------------
+
+/// A completed prefix of one path walk: per-λ step records and dense
+/// coefficient vectors, exactly as the driver streamed them. Because a
+/// prefix of `drive`'s walk is bitwise identical to the same prefix of
+/// the full walk, serving entry `i` from this cache is bitwise identical
+/// to re-solving grid points `0..=i` from scratch.
+pub struct CachedPath {
+    pub lambda_max: f64,
+    /// The full resolved grid (even when only a prefix was walked).
+    pub grid: Vec<f64>,
+    pub steps: Vec<PathStep>,
+    pub betas: Vec<Vec<f32>>,
+    pub screen_total_s: f64,
+    pub solve_total_s: f64,
+    /// True when the walk covered the whole grid — neither a
+    /// `solve-point` prefix cut nor the wall-clock budget stopped it.
+    pub complete: bool,
+}
+
+impl CachedPath {
+    /// Whether grid index `idx` is inside the cached prefix.
+    pub fn covers(&self, idx: usize) -> bool {
+        idx < self.steps.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The registry
+// ---------------------------------------------------------------------------
+
+/// Engine counters reported by the `stats` request.
+#[derive(Default)]
+pub struct RegistryStats {
+    pub requests: AtomicUsize,
+    pub errors: AtomicUsize,
+    pub paths_solved: AtomicUsize,
+    pub cache_hits: AtomicUsize,
+    pub cache_misses: AtomicUsize,
+}
+
+/// The resident session state shared by every connection thread.
+pub struct SessionRegistry {
+    datasets: Mutex<HashMap<String, Arc<LoadedData>>>,
+    paths: Mutex<HashMap<String, Arc<CachedPath>>>,
+    pub stats: RegistryStats,
+    started: Instant,
+}
+
+impl Default for SessionRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SessionRegistry {
+    pub fn new() -> SessionRegistry {
+        SessionRegistry {
+            datasets: Mutex::new(HashMap::new()),
+            paths: Mutex::new(HashMap::new()),
+            stats: RegistryStats::default(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Lock with poison recovery: a connection thread that panicked while
+    /// holding the lock left a fully consistent map (values are inserted
+    /// whole), so later requests keep working.
+    fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+        m.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// The resident dataset for `spec`, loading it on first use. The load
+    /// runs outside the lock; when two requests race, the first insert
+    /// wins and the duplicate is dropped (generation is deterministic, so
+    /// both copies are bitwise identical).
+    pub fn dataset(&self, spec: &DatasetSpec) -> Result<Arc<LoadedData>> {
+        let key = spec.key();
+        if let Some(d) = Self::lock(&self.datasets).get(&key) {
+            return Ok(d.clone());
+        }
+        let loaded = Arc::new(LoadedData::load(spec)?);
+        let mut map = Self::lock(&self.datasets);
+        Ok(map.entry(key).or_insert(loaded).clone())
+    }
+
+    /// The cached path prefix for a request's cache key, if any.
+    pub fn cached_path(&self, key: &str) -> Option<Arc<CachedPath>> {
+        Self::lock(&self.paths).get(key).cloned()
+    }
+
+    /// Insert a walked prefix. A shorter prefix never clobbers a longer
+    /// resident one, so concurrent point/path requests can only grow the
+    /// cache line (and every entry of equal index is bitwise identical
+    /// regardless of which request produced it).
+    pub fn store_path(&self, key: String, path: Arc<CachedPath>) {
+        let mut map = Self::lock(&self.paths);
+        match map.get(&key) {
+            Some(old) if old.steps.len() >= path.steps.len() => {}
+            _ => {
+                map.insert(key, path);
+            }
+        }
+    }
+
+    /// Counters and resident-state summary for the `stats` request.
+    pub fn stats_json(&self) -> Json {
+        let datasets: Vec<Json> = Self::lock(&self.datasets)
+            .values()
+            .map(|d| {
+                Json::obj()
+                    .set("describe", d.describe())
+                    .set("n", d.n())
+                    .set("p", d.p())
+                    .set("backend", d.backend().as_str())
+            })
+            .collect();
+        let paths: Vec<Json> = Self::lock(&self.paths)
+            .values()
+            .map(|p| {
+                Json::obj()
+                    .set("steps_cached", p.steps.len())
+                    .set("grid_len", p.grid.len())
+                    .set("complete", p.complete)
+            })
+            .collect();
+        let s = &self.stats;
+        Json::obj()
+            .set("uptime_s", self.started.elapsed().as_secs_f64())
+            .set("requests", s.requests.load(Ordering::Relaxed))
+            .set("errors", s.errors.load(Ordering::Relaxed))
+            .set("paths_solved", s.paths_solved.load(Ordering::Relaxed))
+            .set("cache_hits", s.cache_hits.load(Ordering::Relaxed))
+            .set("cache_misses", s.cache_misses.load(Ordering::Relaxed))
+            .set("datasets", datasets)
+            .set("cached_paths", paths)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec(backend: BackendKind) -> DatasetSpec {
+        let mut spec = DatasetSpec::new("synthetic1");
+        spec.backend = backend;
+        spec.scale = 0.01;
+        spec
+    }
+
+    #[test]
+    fn dataset_loads_once_and_is_shared() {
+        let reg = SessionRegistry::new();
+        let a = reg.dataset(&small_spec(BackendKind::Dense)).unwrap();
+        let b = reg.dataset(&small_spec(BackendKind::Dense)).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the resident copy");
+        assert_eq!(a.n(), 250);
+        assert_eq!(a.p(), 100);
+        // A different backend is a different registry entry.
+        let c = reg.dataset(&small_spec(BackendKind::Csc)).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(c.backend(), BackendKind::Csc);
+        assert_eq!((c.n(), c.p()), (a.n(), a.p()));
+    }
+
+    #[test]
+    fn every_backend_loads_with_matching_dims() {
+        for backend in
+            [BackendKind::Dense, BackendKind::Csc, BackendKind::Mmap, BackendKind::Sharded]
+        {
+            let d = LoadedData::load(&small_spec(backend)).unwrap();
+            assert_eq!(d.backend(), backend);
+            assert_eq!((d.n(), d.p()), (250, 100), "{}", backend.as_str());
+            assert_eq!(d.y().len(), 250);
+            assert_eq!(d.groups().n_groups(), 10);
+            assert!(d.describe().contains(backend.as_str()));
+        }
+    }
+
+    #[test]
+    fn generated_mmap_backing_file_is_cleaned_up_on_drop() {
+        let d = LoadedData::load(&small_spec(BackendKind::Mmap)).unwrap();
+        let path = match &d {
+            LoadedData::Mmap(m) => m.temp_path.clone().expect("generated file is temp"),
+            _ => unreachable!(),
+        };
+        assert!(path.exists());
+        drop(d);
+        assert!(!path.exists(), "temp backing file must be removed with the dataset");
+    }
+
+    #[test]
+    fn sparse_dataset_loads_dense_and_csc_only() {
+        let mut spec = DatasetSpec::new("sparse1");
+        spec.scale = 0.01;
+        spec.backend = BackendKind::Csc;
+        let c = LoadedData::load(&spec).unwrap();
+        spec.backend = BackendKind::Dense;
+        let d = LoadedData::load(&spec).unwrap();
+        assert_eq!((c.n(), c.p()), (d.n(), d.p()));
+        spec.backend = BackendKind::Mmap;
+        assert!(LoadedData::load(&spec).is_err());
+    }
+
+    #[test]
+    fn shorter_prefix_never_clobbers_longer() {
+        let reg = SessionRegistry::new();
+        let mk = |steps: usize| {
+            Arc::new(CachedPath {
+                lambda_max: 1.0,
+                grid: vec![1.0; 10],
+                steps: vec![Default::default(); steps],
+                betas: vec![vec![0.0]; steps],
+                screen_total_s: 0.0,
+                solve_total_s: 0.0,
+                complete: false,
+            })
+        };
+        reg.store_path("k".into(), mk(5));
+        reg.store_path("k".into(), mk(3));
+        assert_eq!(reg.cached_path("k").unwrap().steps.len(), 5);
+        reg.store_path("k".into(), mk(8));
+        assert_eq!(reg.cached_path("k").unwrap().steps.len(), 8);
+        assert!(reg.cached_path("k").unwrap().covers(7));
+        assert!(!reg.cached_path("k").unwrap().covers(8));
+        assert!(reg.cached_path("other").is_none());
+    }
+
+    #[test]
+    fn poisoned_locks_recover() {
+        let reg = Arc::new(SessionRegistry::new());
+        let r2 = reg.clone();
+        // Panic while holding the paths lock: later callers must still
+        // get through (no permanent cache poisoning).
+        let _ = std::thread::spawn(move || {
+            let _guard = r2.paths.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(reg.cached_path("k").is_none());
+        reg.store_path(
+            "k".into(),
+            Arc::new(CachedPath {
+                lambda_max: 1.0,
+                grid: vec![1.0],
+                steps: vec![Default::default()],
+                betas: vec![vec![0.0]],
+                screen_total_s: 0.0,
+                solve_total_s: 0.0,
+                complete: true,
+            }),
+        );
+        assert!(reg.cached_path("k").is_some());
+    }
+}

@@ -1,0 +1,248 @@
+//! The resident accept loop: a unix-socket server over the
+//! [`SessionRegistry`].
+//!
+//! One thread per connection, one request per connection (see
+//! [`super::wire`]). The listener runs non-blocking so the loop can poll
+//! its stop flag between accepts; `SIGTERM`/`SIGINT` flip a static flag
+//! from a minimal async-signal-safe handler (raw `signal(2)` through an
+//! `extern "C"` declaration — same zero-dependency pattern as the mmap
+//! backend), and a `shutdown` request flips the loop's own flag after its
+//! response is written. Either way the loop stops accepting, joins every
+//! in-flight connection thread, removes the socket file, and returns.
+//!
+//! Failure containment: a connection that sends a malformed frame or
+//! unparseable request gets a 400 envelope and costs nothing else; a
+//! client that disconnects mid-request (mid-headers, mid-body, or before
+//! reading its response) aborts only its own thread — the registry locks
+//! recover from panics and are never held across a solve, so later
+//! requests see an intact pool and cache. Rust's runtime ignores
+//! `SIGPIPE`, so writing to a dead peer surfaces as an `EPIPE` error the
+//! handler discards, never process death.
+
+use super::api::{RequestKind, SolveRequest};
+use super::engine::execute;
+use super::registry::SessionRegistry;
+use super::wire;
+use crate::bail;
+use crate::error::{Context, Result};
+use std::io::BufReader;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+/// Flipped by the signal handler; checked by every accept loop in the
+/// process alongside its own stop flag.
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+extern "C" fn on_signal(_signum: i32) {
+    // Only an atomic store: the handler must stay async-signal-safe.
+    SIGNALLED.store(true, Ordering::SeqCst);
+}
+
+fn install_signal_handlers() {
+    type SigHandler = extern "C" fn(i32);
+    extern "C" {
+        fn signal(signum: i32, handler: SigHandler) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        let _ = signal(SIGTERM, on_signal);
+        let _ = signal(SIGINT, on_signal);
+    }
+}
+
+/// Serve on `socket` with a fresh registry until `SIGTERM`/`SIGINT` or a
+/// `shutdown` request — the `tlfre serve` entry point.
+pub fn serve(socket: &Path) -> Result<()> {
+    install_signal_handlers();
+    serve_on(socket, Arc::new(SessionRegistry::new()), Arc::new(AtomicBool::new(false)))
+}
+
+/// [`serve`] with an explicit registry and stop flag — the in-process
+/// seam the concurrency tests drive (no signals involved).
+pub fn serve_on(socket: &Path, reg: Arc<SessionRegistry>, stop: Arc<AtomicBool>) -> Result<()> {
+    if socket.exists() {
+        // A live server answers a connect; a stale file from a killed
+        // process refuses it and is safe to reclaim.
+        if UnixStream::connect(socket).is_ok() {
+            bail!("{} is already being served", socket.display());
+        }
+        let _ = std::fs::remove_file(socket);
+    }
+    let listener =
+        UnixListener::bind(socket).with_context(|| format!("binding {}", socket.display()))?;
+    listener.set_nonblocking(true).context("setting the listener non-blocking")?;
+    let mut handles: Vec<thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) && !SIGNALLED.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                let reg = reg.clone();
+                let stop = stop.clone();
+                handles.push(thread::spawn(move || {
+                    if answer(&stream, &reg) {
+                        stop.store(true, Ordering::SeqCst);
+                    }
+                }));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(10)),
+        }
+        handles.retain(|h| !h.is_finished());
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let _ = std::fs::remove_file(socket);
+    Ok(())
+}
+
+/// Handle one connection end to end; returns true when the request was a
+/// successfully answered `shutdown`. Write failures (peer gone) are
+/// discarded — the work is already done or already abandoned.
+fn answer(stream: &UnixStream, reg: &SessionRegistry) -> bool {
+    // A stalled or half-dead client must not pin a thread forever.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(60)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(60)));
+    let mut reader = BufReader::new(stream);
+    let body = match wire::read_request(&mut reader) {
+        Ok(Some(body)) => body,
+        // Clean disconnect before a request: nothing to answer.
+        Ok(None) => return false,
+        Err(e) => {
+            let _ = wire::write_response(&mut &*stream, 400, &error_envelope(&e));
+            return false;
+        }
+    };
+    let req = match SolveRequest::parse(&body) {
+        Ok(req) => req,
+        Err(e) => {
+            reg.stats.requests.fetch_add(1, Ordering::Relaxed);
+            reg.stats.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = wire::write_response(&mut &*stream, 400, &error_envelope(&e));
+            return false;
+        }
+    };
+    let resp = execute(reg, &req);
+    let shutdown = req.kind == RequestKind::Shutdown && resp.ok;
+    let _ = wire::write_response(&mut &*stream, 200, &resp.to_json().to_string_compact());
+    shutdown
+}
+
+/// Body for 400 answers (frame or request unparseable — no [`RequestKind`]
+/// to build a full [`super::api::SolveResponse`] envelope around).
+fn error_envelope(e: &crate::error::Error) -> String {
+    crate::util::json::Json::obj()
+        .set("v", super::api::PROTOCOL_VERSION)
+        .set("ok", false)
+        .set("error", format!("{e:#}"))
+        .to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::api::{DatasetSpec, SolveResponse};
+    use super::*;
+    use crate::util::json::Json;
+
+    fn temp_socket(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("tlfre-serve-test-{}-{tag}.sock", std::process::id()))
+    }
+
+    fn start(tag: &str) -> (std::path::PathBuf, thread::JoinHandle<Result<()>>) {
+        let socket = temp_socket(tag);
+        let reg = Arc::new(SessionRegistry::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let s = socket.clone();
+        let handle = thread::spawn(move || serve_on(&s, reg, stop));
+        for _ in 0..500 {
+            if socket.exists() && UnixStream::connect(&socket).is_ok() {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        (socket, handle)
+    }
+
+    fn shutdown(socket: &Path) {
+        let (status, _) = wire::call(socket, r#"{"v": 1, "kind": "shutdown"}"#).unwrap();
+        assert_eq!(status, 200);
+    }
+
+    #[test]
+    fn stats_load_and_shutdown_round_trip() {
+        let (socket, handle) = start("stats");
+        let (status, body) = wire::call(&socket, r#"{"v": 1, "kind": "stats"}"#).unwrap();
+        assert_eq!(status, 200);
+        let resp = SolveResponse::parse(&body).unwrap();
+        assert!(resp.ok);
+        let mut req = SolveRequest::new(super::super::api::RequestKind::LoadDataset);
+        let mut spec = DatasetSpec::new("synthetic1");
+        spec.scale = 0.01;
+        req.dataset = Some(spec);
+        let (status, body) =
+            wire::call(&socket, &req.to_json().to_string_compact()).unwrap();
+        assert_eq!(status, 200);
+        let resp = SolveResponse::parse(&body).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.payload.get("n").and_then(Json::as_usize), Some(250));
+        shutdown(&socket);
+        handle.join().unwrap().unwrap();
+        assert!(!socket.exists(), "socket file must be removed on shutdown");
+    }
+
+    #[test]
+    fn malformed_requests_get_400_envelopes_and_do_not_kill_the_server() {
+        let (socket, handle) = start("bad");
+        // Unparseable JSON body.
+        let (status, body) = wire::call(&socket, "this is not json").unwrap();
+        assert_eq!(status, 400);
+        assert!(body.contains("\"ok\":false"), "{body}");
+        // Unknown key → typed error naming the key.
+        let (status, body) =
+            wire::call(&socket, r#"{"v": 1, "kind": "stats", "bogus_key": 3}"#).unwrap();
+        assert_eq!(status, 400);
+        assert!(body.contains("bogus_key"), "{body}");
+        // Mid-request disconnect: write half a frame and hang up.
+        {
+            use std::io::Write;
+            let mut s = UnixStream::connect(&socket).unwrap();
+            s.write_all(b"POST /v1/solve HTTP/1.0\r\nContent-Length: 100\r\n\r\n{").unwrap();
+        }
+        // The server is still alive and correct afterwards.
+        let (status, _) = wire::call(&socket, r#"{"v": 1, "kind": "stats"}"#).unwrap();
+        assert_eq!(status, 200);
+        shutdown(&socket);
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn double_bind_is_a_typed_error_and_stale_sockets_are_reclaimed() {
+        let (socket, handle) = start("bind");
+        let err = serve_on(
+            &socket,
+            Arc::new(SessionRegistry::new()),
+            Arc::new(AtomicBool::new(false)),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("already being served"));
+        shutdown(&socket);
+        handle.join().unwrap().unwrap();
+        // A stale socket file (no listener behind it) is reclaimed.
+        std::fs::write(&socket, b"").unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let reg = Arc::new(SessionRegistry::new());
+        let s = socket.clone();
+        let h = thread::spawn(move || serve_on(&s, reg, stop));
+        for _ in 0..500 {
+            if UnixStream::connect(&socket).is_ok() {
+                break;
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        shutdown(&socket);
+        h.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,222 @@
+//! HTTP/1.0-style framing over unix-domain sockets.
+//!
+//! The engine speaks a deliberately tiny subset of HTTP/1.0 over
+//! `std::os::unix::net` (the crate stays zero-dependency — no HTTP or
+//! async stack):
+//!
+//! ```text
+//! POST /v1/solve HTTP/1.0\r\n          HTTP/1.0 200 OK\r\n
+//! Content-Length: <n>\r\n              Content-Type: application/json\r\n
+//! \r\n                                 Content-Length: <n>\r\n
+//! <request JSON, n bytes>              \r\n
+//!                                      <response JSON, n bytes>
+//! ```
+//!
+//! One request per connection (no keep-alive): the client connects,
+//! writes, reads one response, and the server closes. That keeps the
+//! server's per-connection state machine trivial — a disconnect at any
+//! point aborts exactly one request — and plain `curl --unix-socket` can
+//! poke the engine for debugging.
+//!
+//! Framing is `Content-Length`-based; malformed heads (no POST, missing
+//! or non-numeric length, oversized bodies, over-long header lines) are
+//! typed errors the server answers with a 400 envelope, never a hang or
+//! a partial read.
+
+use crate::bail;
+use crate::error::{Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+
+/// Upper bound on a request/response body. Generous (coefficient dumps of
+/// big paths are tens of MiB) while keeping a malformed length from
+/// driving an OOM-sized allocation.
+pub const MAX_BODY_BYTES: usize = 1 << 30;
+
+/// Upper bound on a single head/header line.
+const MAX_HEAD_BYTES: u64 = 8192;
+
+/// Read one `\n`-terminated line with a length cap. `Ok(None)` is clean
+/// EOF before any byte.
+fn read_line_limited(r: &mut impl BufRead) -> Result<Option<String>> {
+    let mut buf = Vec::new();
+    let n = r.by_ref().take(MAX_HEAD_BYTES).read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if !buf.ends_with(b"\n") && n as u64 >= MAX_HEAD_BYTES {
+        bail!("header line exceeds {MAX_HEAD_BYTES} bytes");
+    }
+    let s = String::from_utf8(buf).context("header line is not utf-8")?;
+    Ok(Some(s.trim_end().to_string()))
+}
+
+/// Read the head line plus headers up to the blank separator; returns the
+/// head line and the parsed `Content-Length`. `Ok(None)` is clean EOF.
+fn read_head(r: &mut impl BufRead) -> Result<Option<(String, usize)>> {
+    let head = match read_line_limited(r)? {
+        None => return Ok(None),
+        Some(h) => h,
+    };
+    let mut content_length: Option<usize> = None;
+    loop {
+        let line = read_line_limited(r)?.context("connection closed mid-headers")?;
+        if line.is_empty() {
+            break;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .with_context(|| format!("malformed header line {line:?}"))?;
+        if name.eq_ignore_ascii_case("content-length") {
+            let v: usize = value
+                .trim()
+                .parse()
+                .with_context(|| format!("bad Content-Length {:?}", value.trim()))?;
+            content_length = Some(v);
+        }
+        // Other headers (Content-Type, User-Agent, …) are ignored.
+    }
+    let len = content_length.context("missing Content-Length header")?;
+    if len > MAX_BODY_BYTES {
+        bail!("body length {len} exceeds the {MAX_BODY_BYTES}-byte cap");
+    }
+    Ok(Some((head, len)))
+}
+
+/// Read exactly `len` body bytes as utf-8 JSON text.
+fn read_body(r: &mut impl BufRead, len: usize) -> Result<String> {
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).context("connection closed mid-body")?;
+    String::from_utf8(buf).context("request body is not utf-8")
+}
+
+/// Server side: read one framed request body. `Ok(None)` means the client
+/// closed the connection cleanly before sending anything.
+pub fn read_request(r: &mut impl BufRead) -> Result<Option<String>> {
+    let (head, len) = match read_head(r)? {
+        None => return Ok(None),
+        Some(h) => h,
+    };
+    let method = head.split_whitespace().next().unwrap_or("");
+    if method != "POST" {
+        bail!("unsupported method '{method}' (the engine only speaks POST)");
+    }
+    Ok(Some(read_body(r, len)?))
+}
+
+/// Server side: frame and write one response.
+pub fn write_response(w: &mut impl Write, status: u16, body: &str) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    };
+    write!(
+        w,
+        "HTTP/1.0 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n",
+        body.len()
+    )?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+/// Client side: frame and write one request.
+pub fn write_request(w: &mut impl Write, body: &str) -> std::io::Result<()> {
+    write!(w, "POST /v1/solve HTTP/1.0\r\nContent-Length: {}\r\n\r\n", body.len())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()
+}
+
+/// Client side: read one framed response as `(status, body)`.
+pub fn read_response(r: &mut impl BufRead) -> Result<(u16, String)> {
+    let (head, len) = read_head(r)?.context("connection closed before the response")?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("malformed status line {head:?}"))?;
+    Ok((status, read_body(r, len)?))
+}
+
+/// One full client round trip on a fresh connection: connect to the unix
+/// socket, send `body`, read `(status, body)` back.
+pub fn call(socket: &Path, body: &str) -> Result<(u16, String)> {
+    let stream =
+        UnixStream::connect(socket).with_context(|| format!("connecting to {socket:?}"))?;
+    write_request(&mut &stream, body)
+        .with_context(|| format!("sending request to {socket:?}"))?;
+    let mut r = BufReader::new(&stream);
+    read_response(&mut r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn request_roundtrip_through_the_framing() {
+        let body = r#"{"v": 1, "kind": "stats"}"#;
+        let mut wire = Vec::new();
+        write_request(&mut wire, body).unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert!(text.starts_with("POST /v1/solve HTTP/1.0\r\n"));
+        assert!(text.contains(&format!("Content-Length: {}\r\n", body.len())));
+        let back = read_request(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(back.as_deref(), Some(body));
+    }
+
+    #[test]
+    fn response_roundtrip_through_the_framing() {
+        let body = r#"{"v": 1, "ok": true}"#;
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, body).unwrap();
+        let (status, back) = read_response(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(back, body);
+        let mut wire = Vec::new();
+        write_response(&mut wire, 400, "{}").unwrap();
+        let (status, _) = read_response(&mut Cursor::new(wire)).unwrap();
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn clean_eof_is_none_not_an_error() {
+        assert!(read_request(&mut Cursor::new(Vec::new())).unwrap().is_none());
+    }
+
+    #[test]
+    fn malformed_frames_are_typed_errors() {
+        // Wrong method.
+        let wire = b"GET /v1/solve HTTP/1.0\r\nContent-Length: 2\r\n\r\n{}".to_vec();
+        let err = format!("{:#}", read_request(&mut Cursor::new(wire)).unwrap_err());
+        assert!(err.contains("unsupported method"), "{err}");
+        // Missing Content-Length.
+        let wire = b"POST /v1/solve HTTP/1.0\r\n\r\n{}".to_vec();
+        let err = format!("{:#}", read_request(&mut Cursor::new(wire)).unwrap_err());
+        assert!(err.contains("missing Content-Length"), "{err}");
+        // Non-numeric Content-Length.
+        let wire = b"POST /x HTTP/1.0\r\nContent-Length: lots\r\n\r\n{}".to_vec();
+        assert!(read_request(&mut Cursor::new(wire)).is_err());
+        // Oversized declared body.
+        let wire =
+            format!("POST /x HTTP/1.0\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        let err =
+            format!("{:#}", read_request(&mut Cursor::new(wire.into_bytes())).unwrap_err());
+        assert!(err.contains("exceeds"), "{err}");
+        // Header line without a colon.
+        let wire = b"POST /x HTTP/1.0\r\nnot a header\r\n\r\n".to_vec();
+        assert!(read_request(&mut Cursor::new(wire)).is_err());
+        // Body shorter than declared (mid-body disconnect).
+        let wire = b"POST /x HTTP/1.0\r\nContent-Length: 10\r\n\r\n{}".to_vec();
+        let err = format!("{:#}", read_request(&mut Cursor::new(wire)).unwrap_err());
+        assert!(err.contains("mid-body"), "{err}");
+        // Truncated headers (disconnect before the blank line).
+        let wire = b"POST /x HTTP/1.0\r\nContent-Length: 2\r\n".to_vec();
+        let err = format!("{:#}", read_request(&mut Cursor::new(wire)).unwrap_err());
+        assert!(err.contains("mid-headers"), "{err}");
+    }
+}

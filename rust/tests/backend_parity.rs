@@ -19,7 +19,9 @@
 //!   streaming λmax / blocked column norms equal the in-RAM values bit
 //!   for bit. These run under the CI `TLFRE_THREADS` ∈ {1,2,4,8} matrix.
 
-use tlfre::coordinator::{path_coefficients, run_dpc_path, run_tlfre_path, DpcPathConfig, PathConfig};
+use tlfre::coordinator::{
+    path_coefficients, run_dpc_path, run_tlfre_path, DpcPathConfig, PathConfig, SolveControls,
+};
 use tlfre::data::synthetic::{
     generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec,
 };
@@ -284,10 +286,13 @@ fn colored_bcd_path_bitwise_matches_sequential_bcd_path() {
     let ds = generate_sparse_synthetic(&spec, 424);
     let base = PathConfig {
         alpha: 1.0,
-        n_lambda: 10,
-        lambda_min_ratio: 0.05,
-        tol: 1e-7,
         solver: tlfre::coordinator::SolverKind::Bcd,
+        controls: SolveControls {
+            n_lambda: 10,
+            lambda_min_ratio: 0.05,
+            tol: 1e-7,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let seq = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &base);
@@ -368,9 +373,12 @@ fn csc_end_to_end_path_matches_dense() {
     let xd = ds.x.to_dense();
     let cfg = PathConfig {
         alpha: 1.0,
-        n_lambda: 10,
-        lambda_min_ratio: 0.05,
-        tol: 1e-7,
+        controls: SolveControls {
+            n_lambda: 10,
+            lambda_min_ratio: 0.05,
+            tol: 1e-7,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let a = run_tlfre_path(&xd, &ds.y, &ds.groups, &cfg);
@@ -393,9 +401,12 @@ fn screened_view_path_bitwise_matches_gathered_copy_path() {
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(40, 400, 40), 2014);
     let base = PathConfig {
         alpha: 1.0,
-        n_lambda: 15,
-        lambda_min_ratio: 0.05,
-        tol: 1e-7,
+        controls: SolveControls {
+            n_lambda: 15,
+            lambda_min_ratio: 0.05,
+            tol: 1e-7,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let view_path = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &base);
@@ -469,9 +480,12 @@ fn mmap_backend_whole_path_bitwise_matches_dense() {
 
     let cfg = PathConfig {
         alpha: 1.0,
-        n_lambda: 12,
-        lambda_min_ratio: 0.05,
-        tol: 1e-7,
+        controls: SolveControls {
+            n_lambda: 12,
+            lambda_min_ratio: 0.05,
+            tol: 1e-7,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let dense = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
@@ -495,9 +509,12 @@ fn sharded_backend_whole_path_bitwise_matches_dense() {
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(40, 400, 40), 2014);
     let cfg = PathConfig {
         alpha: 1.0,
-        n_lambda: 12,
-        lambda_min_ratio: 0.05,
-        tol: 1e-7,
+        controls: SolveControls {
+            n_lambda: 12,
+            lambda_min_ratio: 0.05,
+            tol: 1e-7,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let dense = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
@@ -518,9 +535,12 @@ fn mmap_and_sharded_dpc_paths_bitwise_match_dense() {
     // support size and iteration counts move by zero bits across backends.
     let ds = generate_synthetic(&SyntheticSpec::synthetic2_scaled(30, 200, 20), 7);
     let cfg = DpcPathConfig {
-        n_lambda: 10,
-        lambda_min_ratio: 0.05,
-        tol: 1e-7,
+        controls: SolveControls {
+            n_lambda: 10,
+            lambda_min_ratio: 0.05,
+            tol: 1e-7,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let dense = run_dpc_path(&ds.x, &ds.y, &cfg);

@@ -13,7 +13,7 @@
 
 use tlfre::coordinator::{
     run_tlfre_path_checkpointed, run_tlfre_path_with_coefficients, CheckpointOptions, PathConfig,
-    PathOutput, SolverKind,
+    PathOutput, SolveControls, SolverKind,
 };
 use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
 use tlfre::screening::ScreenKind;
@@ -25,14 +25,17 @@ fn tmp(name: &str) -> std::path::PathBuf {
 fn cfg(solver: SolverKind) -> PathConfig {
     PathConfig {
         alpha: 1.0,
-        n_lambda: 12,
-        lambda_min_ratio: 0.05,
-        tol: 1e-7,
         solver,
         screen: ScreenKind::TlfreGap,
-        // Stateful across steps — the part of the engine a naive resume
-        // would silently lose.
-        lipschitz_refresh_every: Some(2),
+        controls: SolveControls {
+            n_lambda: 12,
+            lambda_min_ratio: 0.05,
+            tol: 1e-7,
+            // Stateful across steps — the part of the engine a naive resume
+            // would silently lose.
+            lipschitz_refresh_every: Some(2),
+            ..Default::default()
+        },
         ..Default::default()
     }
 }
@@ -180,10 +183,13 @@ fn max_seconds_budget_truncates_to_a_clean_prefix() {
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 200, 20), 77);
     let pc = PathConfig {
         alpha: 1.0,
-        n_lambda: 40,
-        lambda_min_ratio: 0.01,
-        tol: 1e-9,
-        max_seconds: Some(50e-6),
+        controls: SolveControls {
+            n_lambda: 40,
+            lambda_min_ratio: 0.01,
+            tol: 1e-9,
+            max_seconds: Some(50e-6),
+            ..Default::default()
+        },
         ..Default::default()
     };
     let out = tlfre::coordinator::run_tlfre_path(&ds.x, &ds.y, &ds.groups, &pc);
@@ -205,7 +211,13 @@ fn max_seconds_budget_truncates_to_a_clean_prefix() {
     }
 
     // No budget ⇒ no truncation, and no step reports exhaustion.
-    let pc_free = PathConfig { max_seconds: None, n_lambda: 8, tol: 1e-6, ..pc };
+    let pc_free = {
+        let mut c = pc;
+        c.max_seconds = None;
+        c.n_lambda = 8;
+        c.tol = 1e-6;
+        c
+    };
     let free = tlfre::coordinator::run_tlfre_path(&ds.x, &ds.y, &ds.groups, &pc_free);
     assert!(!free.truncated);
     assert!(free.steps.iter().all(|s| !s.budget_exhausted));

@@ -13,7 +13,7 @@
 
 use tlfre::coordinator::{
     cross_validate_serial, cross_validate_with_workers, make_folds, run_tlfre_path, CvOutput,
-    PathConfig, SolverKind,
+    PathConfig, SolveControls, SolverKind,
 };
 use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
 use tlfre::linalg::power::spectral_call_count;
@@ -40,9 +40,12 @@ fn assert_cv_bitwise_eq(a: &CvOutput, b: &CvOutput, ctx: &str) {
 fn fold_parallel_cv_bitwise_matches_serial_at_every_worker_count() {
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(36, 120, 12), 901);
     let cfg = PathConfig {
-        n_lambda: 6,
-        lambda_min_ratio: 0.05,
-        tol: 1e-5,
+        controls: SolveControls {
+            n_lambda: 6,
+            lambda_min_ratio: 0.05,
+            tol: 1e-5,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let alphas = [0.5, 1.0];
@@ -59,9 +62,12 @@ fn fold_parallel_cv_bitwise_matches_serial_on_csc_backend() {
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 90, 9), 902);
     let xs = CscMatrix::from_dense(&ds.x);
     let cfg = PathConfig {
-        n_lambda: 5,
-        lambda_min_ratio: 0.1,
-        tol: 1e-5,
+        controls: SolveControls {
+            n_lambda: 5,
+            lambda_min_ratio: 0.1,
+            tol: 1e-5,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let serial = cross_validate_serial(&xs, &ds.y, &ds.groups, &[1.0], 3, &cfg, 11);
@@ -82,9 +88,12 @@ fn cv_performs_exactly_one_screened_walk_per_fold_alpha() {
     // exactly double.
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 100, 10), 903);
     let cfg = PathConfig {
-        n_lambda: 5,
-        lambda_min_ratio: 0.1,
-        tol: 1e-5,
+        controls: SolveControls {
+            n_lambda: 5,
+            lambda_min_ratio: 0.1,
+            tol: 1e-5,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let alphas = [0.5, 1.0];
@@ -126,9 +135,12 @@ fn cv_honors_bcd_solver_through_the_public_api() {
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(28, 96, 8), 904);
     let cfg = PathConfig {
         solver: SolverKind::Bcd,
-        n_lambda: 6,
-        lambda_min_ratio: 0.05,
-        tol: 1e-5,
+        controls: SolveControls {
+            n_lambda: 6,
+            lambda_min_ratio: 0.05,
+            tol: 1e-5,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let (k_folds, seed) = (2usize, 17u64);
@@ -163,7 +175,10 @@ fn single_point_grid_cv_smoke() {
     // n_lambda == 1: the λmax endpoint alone. Used to NaN the
     // lambda_ratio (division by n_lambda − 1 == 0).
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(24, 60, 6), 905);
-    let cfg = PathConfig { n_lambda: 1, lambda_min_ratio: 0.1, ..Default::default() };
+    let cfg = PathConfig {
+        controls: SolveControls { n_lambda: 1, lambda_min_ratio: 0.1, ..Default::default() },
+        ..Default::default()
+    };
     for workers in [1usize, 4] {
         let out =
             cross_validate_with_workers(&ds.x, &ds.y, &ds.groups, &[0.5, 1.0], 3, &cfg, 3, workers);

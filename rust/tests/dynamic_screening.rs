@@ -12,7 +12,7 @@
 //!   loop, leaving the exact solution.
 
 use tlfre::coordinator::{
-    drive_tlfre_path_with_pipeline, run_tlfre_path, PathConfig, StepSink,
+    drive_tlfre_path_with_pipeline, run_tlfre_path, PathConfig, SolveControls, StepSink,
 };
 use tlfre::data::synthetic::{
     generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec,
@@ -29,12 +29,15 @@ use tlfre::screening::same_support_at_resolution as same_support;
 fn loose_cfg(screen: ScreenKind) -> PathConfig {
     PathConfig {
         alpha: 1.0,
-        n_lambda: 10,
-        lambda_min_ratio: 0.05,
-        // Deliberately loose: the previous-λ solutions handed to the
-        // sequential rules are visibly inexact.
-        tol: 1e-4,
         screen,
+        controls: SolveControls {
+            n_lambda: 10,
+            lambda_min_ratio: 0.05,
+            // Deliberately loose: the previous-λ solutions handed to the
+            // sequential rules are visibly inexact.
+            tol: 1e-4,
+            ..Default::default()
+        },
         ..Default::default()
     }
 }
@@ -111,7 +114,11 @@ fn inexact_warm_start_support_safety_csc() {
 #[test]
 fn dynamic_evictions_fire_and_are_counted() {
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 160, 16), 2033);
-    let cfg = PathConfig { tol: 1e-6, ..loose_cfg(ScreenKind::TlfreGap) };
+    let cfg = {
+        let mut c = loose_cfg(ScreenKind::TlfreGap);
+        c.tol = 1e-6;
+        c
+    };
     let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);
     assert!(
         out.steps.iter().any(|s| s.dynamic_evicted > 0),
@@ -169,9 +176,12 @@ fn kkt_recovery_readmits_manufactured_violations() {
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 120, 12), 2034);
     let cfg = PathConfig {
         alpha: 1.0,
-        n_lambda: 8,
-        lambda_min_ratio: 0.05,
-        tol: 1e-6,
+        controls: SolveControls {
+            n_lambda: 8,
+            lambda_min_ratio: 0.05,
+            tol: 1e-6,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let pipeline =
@@ -206,9 +216,12 @@ fn strong_kkt_pipeline_reports_layer_stats() {
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 100, 10), 2035);
     let cfg = PathConfig {
         screen: ScreenKind::StrongKkt,
-        n_lambda: 8,
-        lambda_min_ratio: 0.05,
-        tol: 1e-6,
+        controls: SolveControls {
+            n_lambda: 8,
+            lambda_min_ratio: 0.05,
+            tol: 1e-6,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg);

@@ -15,7 +15,7 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Mutex;
 
-use tlfre::coordinator::{run_tlfre_path, PathConfig};
+use tlfre::coordinator::{run_tlfre_path, PathConfig, SolveControls};
 use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
 use tlfre::screening::lambda_max::sgl_lambda_max;
 use tlfre::sgl::{solve_fista, FistaOptions, SglParams, SglProblem};
@@ -100,9 +100,12 @@ fn poisoned_step_in_a_path_is_contained_to_its_step() {
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 120, 12), 32);
     let pc = PathConfig {
         alpha: 1.0,
-        n_lambda: 8,
-        lambda_min_ratio: 0.05,
-        tol: 1e-6,
+        controls: SolveControls {
+            n_lambda: 8,
+            lambda_min_ratio: 0.05,
+            tol: 1e-6,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let clean = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &pc);

@@ -10,7 +10,7 @@
 //! iterations inside its per-λ loop by default.
 
 use tlfre::coordinator::cv::path_coefficients;
-use tlfre::coordinator::{run_tlfre_path, PathConfig};
+use tlfre::coordinator::{run_tlfre_path, PathConfig, SolveControls};
 use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
 use tlfre::groups::GroupStructure;
 use tlfre::linalg::power::{spectral_call_count, spectral_norm, spectral_norm_block};
@@ -102,9 +102,12 @@ fn cached_and_exact_lipschitz_paths_reach_same_solutions() {
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 160, 16), 314);
     let cached_cfg = PathConfig {
         alpha: 1.0,
-        n_lambda: 10,
-        lambda_min_ratio: 0.05,
-        tol: 1e-7,
+        controls: SolveControls {
+            n_lambda: 10,
+            lambda_min_ratio: 0.05,
+            tol: 1e-7,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let exact_cfg = PathConfig { exact_view_lipschitz: true, ..cached_cfg.clone() };
@@ -158,12 +161,19 @@ fn refreshed_lipschitz_path_matches_cached_and_exact_solutions() {
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 160, 16), 314);
     let cached_cfg = PathConfig {
         alpha: 1.0,
-        n_lambda: 10,
-        lambda_min_ratio: 0.05,
-        tol: 1e-7,
+        controls: SolveControls {
+            n_lambda: 10,
+            lambda_min_ratio: 0.05,
+            tol: 1e-7,
+            ..Default::default()
+        },
         ..Default::default()
     };
-    let refresh_cfg = PathConfig { lipschitz_refresh_every: Some(2), ..cached_cfg.clone() };
+    let refresh_cfg = {
+        let mut c = cached_cfg.clone();
+        c.lipschitz_refresh_every = Some(2);
+        c
+    };
 
     let a = path_coefficients(&ds.x, &ds.y, &ds.groups, &cached_cfg);
     let b = path_coefficients(&ds.x, &ds.y, &ds.groups, &refresh_cfg);
@@ -205,9 +215,12 @@ fn refresh_cadence_amortizes_power_iterations() {
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 120, 12), 2718);
     let base = PathConfig {
         alpha: 1.0,
-        n_lambda: 16,
-        lambda_min_ratio: 0.05,
-        tol: 1e-6,
+        controls: SolveControls {
+            n_lambda: 16,
+            lambda_min_ratio: 0.05,
+            tol: 1e-6,
+            ..Default::default()
+        },
         ..Default::default()
     };
 
@@ -215,7 +228,11 @@ fn refresh_cadence_amortizes_power_iterations() {
     run_tlfre_path(&ds.x, &ds.y, &ds.groups, &base);
     let cached_calls = spectral_call_count() - c0;
 
-    let refresh = PathConfig { lipschitz_refresh_every: Some(4), ..base.clone() };
+    let refresh = {
+        let mut c = base.clone();
+        c.lipschitz_refresh_every = Some(4);
+        c
+    };
     let c1 = spectral_call_count();
     run_tlfre_path(&ds.x, &ds.y, &ds.groups, &refresh);
     let refresh_calls = spectral_call_count() - c1;
@@ -236,10 +253,11 @@ fn refresh_cadence_amortizes_power_iterations() {
     );
 
     // Exact mode wins precedence when both knobs are set.
-    let both = PathConfig {
-        exact_view_lipschitz: true,
-        lipschitz_refresh_every: Some(4),
-        ..base
+    let both = {
+        let mut c = base;
+        c.exact_view_lipschitz = true;
+        c.lipschitz_refresh_every = Some(4);
+        c
     };
     let c3 = spectral_call_count();
     run_tlfre_path(&ds.x, &ds.y, &ds.groups, &both);
@@ -255,10 +273,22 @@ fn default_path_runs_zero_power_iterations_per_lambda() {
     // must be exactly grid-length-independent (the cache is built once, in
     // the screening preamble).
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 120, 12), 2718);
-    let base = PathConfig { alpha: 1.0, lambda_min_ratio: 0.05, tol: 1e-6, ..Default::default() };
+    let base = PathConfig {
+        alpha: 1.0,
+        controls: SolveControls { lambda_min_ratio: 0.05, tol: 1e-6, ..Default::default() },
+        ..Default::default()
+    };
 
-    let short = PathConfig { n_lambda: 4, ..base.clone() };
-    let long = PathConfig { n_lambda: 16, ..base.clone() };
+    let short = {
+        let mut c = base.clone();
+        c.n_lambda = 4;
+        c
+    };
+    let long = {
+        let mut c = base.clone();
+        c.n_lambda = 16;
+        c
+    };
 
     let c0 = spectral_call_count();
     run_tlfre_path(&ds.x, &ds.y, &ds.groups, &short);

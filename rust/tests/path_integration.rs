@@ -4,14 +4,23 @@
 
 use tlfre::coordinator::{
     run_baseline_path, run_dpc_path, run_nonneg_baseline, run_tlfre_path, DpcPathConfig,
-    PathConfig,
+    PathConfig, SolveControls,
 };
 use tlfre::data::registry::RealDataset;
 use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
 use tlfre::util::harness::black_box;
 
 fn cfg(alpha: f64, n_lambda: usize) -> PathConfig {
-    PathConfig { alpha, n_lambda, lambda_min_ratio: 0.05, tol: 1e-6, ..Default::default() }
+    PathConfig {
+        alpha,
+        controls: SolveControls {
+            n_lambda,
+            lambda_min_ratio: 0.05,
+            tol: 1e-6,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
 }
 
 #[test]
@@ -61,7 +70,15 @@ fn adni_sim_path_group_structure_respected() {
 #[test]
 fn dpc_path_on_image_dictionary() {
     let ds = RealDataset::Mnist.generate(0.004, 10);
-    let c = DpcPathConfig { n_lambda: 30, lambda_min_ratio: 0.1, tol: 1e-5, ..Default::default() };
+    let c = DpcPathConfig {
+        controls: SolveControls {
+            n_lambda: 30,
+            lambda_min_ratio: 0.1,
+            tol: 1e-5,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
     let screened = run_dpc_path(&ds.x, &ds.y, &c);
     let baseline = run_nonneg_baseline(&ds.x, &ds.y, &c);
     assert!(screened.mean_rejection() > 0.8, "rejection {}", screened.mean_rejection());
@@ -89,7 +106,12 @@ fn verify_mode_full_paths_small() {
     // verify_safety re-solves unscreened every step and asserts internally.
     let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(25, 150, 15), 12);
     for alpha in [0.3, 1.0, 3.0] {
-        let c = PathConfig { verify_safety: true, tol: 1e-8, ..cfg(alpha, 10) };
+        let c = {
+            let mut c = cfg(alpha, 10);
+            c.verify_safety = true;
+            c.tol = 1e-8;
+            c
+        };
         let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &c);
         assert!(out.steps.len() == 10);
     }
@@ -99,10 +121,13 @@ fn verify_mode_full_paths_small() {
 fn dpc_verify_mode_small() {
     let ds = RealDataset::Pie.generate(0.01, 13);
     let c = DpcPathConfig {
-        n_lambda: 8,
-        lambda_min_ratio: 0.05,
-        tol: 1e-8,
-        verify_safety: true,
+        controls: SolveControls {
+            n_lambda: 8,
+            lambda_min_ratio: 0.05,
+            tol: 1e-8,
+            verify_safety: true,
+            ..Default::default()
+        },
         ..Default::default()
     };
     let out = run_dpc_path(&ds.x, &ds.y, &c);

@@ -1,0 +1,170 @@
+//! The serve layer under concurrent clients: N parallel connections
+//! interleaving `solve-path` and `solve-point` requests get answers that
+//! are **bitwise identical** to in-process batch runs, the shared path
+//! cache only ever helps (warm answers carry the same bytes), and a
+//! client that hangs up mid-request poisons neither the worker pool nor
+//! the cache. The CI `TLFRE_THREADS ∈ {1,2,4,8}` matrix runs this whole
+//! file under each process-level thread count.
+
+use std::io::Write;
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+use tlfre::coordinator::run_tlfre_path_with_coefficients;
+use tlfre::data::registry::resolve_dataset;
+use tlfre::server::wire;
+use tlfre::server::{
+    coef_hex_dump, serve_on, BackendKind, DatasetSpec, RequestKind, SessionRegistry, SolveRequest,
+    SolveResponse,
+};
+
+fn temp_socket(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tlfre-conc-{}-{tag}.sock", std::process::id()))
+}
+
+/// Start an in-process server on a fresh socket and wait until it accepts.
+fn start(tag: &str) -> (PathBuf, thread::JoinHandle<tlfre::error::Result<()>>) {
+    let socket = temp_socket(tag);
+    let reg = Arc::new(SessionRegistry::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let s = socket.clone();
+    let handle = thread::spawn(move || serve_on(&s, reg, stop));
+    for _ in 0..500 {
+        if socket.exists() && UnixStream::connect(&socket).is_ok() {
+            break;
+        }
+        thread::sleep(Duration::from_millis(5));
+    }
+    (socket, handle)
+}
+
+fn shutdown(socket: &Path) {
+    let (status, _) = wire::call(socket, r#"{"v": 1, "kind": "shutdown"}"#).unwrap();
+    assert_eq!(status, 200);
+}
+
+/// An 8-point synthetic1 path request at scale 0.01 (250×100, 10 groups).
+fn path_request(backend: BackendKind) -> SolveRequest {
+    let mut req = SolveRequest::new(RequestKind::SolvePath);
+    let mut spec = DatasetSpec::new("synthetic1");
+    spec.scale = 0.01;
+    spec.backend = backend;
+    req.dataset = Some(spec);
+    req.alpha = 0.5;
+    req.controls.n_lambda = 8;
+    req.controls.lambda_min_ratio = 0.1;
+    req
+}
+
+/// The batch reference: the same walk run in-process through the public
+/// coordinator API, dumped with the same hex encoder.
+fn batch_dump(req: &SolveRequest) -> String {
+    let spec = req.dataset.as_ref().unwrap();
+    let ds = resolve_dataset(&spec.name, spec.seed, spec.scale).unwrap();
+    let (_out, betas) =
+        run_tlfre_path_with_coefficients(&ds.x, &ds.y, &ds.groups, &req.path_config());
+    coef_hex_dump(&betas)
+}
+
+fn send(socket: &Path, req: &SolveRequest) -> SolveResponse {
+    let (status, body) = wire::call(socket, &req.to_json().to_string_compact()).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let resp = SolveResponse::parse(&body).unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    resp
+}
+
+#[test]
+fn parallel_clients_interleaving_paths_and_points_get_bitwise_identical_answers() {
+    let (socket, handle) = start("parallel");
+    let expected = batch_dump(&path_request(BackendKind::Dense));
+    let expected_lines: Vec<&str> = expected.lines().collect();
+    assert_eq!(expected_lines.len(), 8);
+
+    // Four concurrent clients against one registry: a dense full path, a
+    // sharded full path (backend parity: same bytes), and two point
+    // requests racing the path requests on the same dense cache line.
+    let mut joins = Vec::new();
+    for c in 0..4usize {
+        let socket = socket.clone();
+        joins.push(thread::spawn(move || {
+            let req = match c {
+                0 => path_request(BackendKind::Dense),
+                1 => path_request(BackendKind::Sharded),
+                _ => {
+                    let mut r = path_request(BackendKind::Dense);
+                    r.kind = RequestKind::SolvePoint;
+                    r.lambda_index = Some(if c == 2 { 3 } else { 6 });
+                    r
+                }
+            };
+            (c, send(&socket, &req))
+        }));
+    }
+    for j in joins {
+        let (c, resp) = j.join().unwrap();
+        match c {
+            0 | 1 => {
+                assert_eq!(resp.coef_hex.len(), 8, "client {c}");
+                assert_eq!(resp.coef_dump(), expected, "client {c}");
+                assert!(!resp.truncated);
+            }
+            _ => {
+                let idx = if c == 2 { 3 } else { 6 };
+                assert_eq!(resp.coef_hex.len(), 1, "client {c}");
+                assert_eq!(resp.coef_hex[0], expected_lines[idx], "client {c}");
+                assert!(resp.certified_suboptimality.is_some());
+            }
+        }
+    }
+
+    // After the race settles the full dense walk is resident: the same
+    // requests answer warm with identical bytes.
+    let warm_path = send(&socket, &path_request(BackendKind::Dense));
+    assert!(warm_path.warm);
+    assert_eq!(warm_path.coef_dump(), expected);
+    let mut point = path_request(BackendKind::Dense);
+    point.kind = RequestKind::SolvePoint;
+    point.lambda_index = Some(5);
+    let warm_point = send(&socket, &point);
+    assert!(warm_point.warm);
+    assert_eq!(warm_point.coef_hex[0], expected_lines[5]);
+
+    shutdown(&socket);
+    handle.join().unwrap().unwrap();
+    assert!(!socket.exists());
+}
+
+#[test]
+fn mid_request_disconnects_poison_neither_pool_nor_cache() {
+    let (socket, handle) = start("disconnect");
+    let req = path_request(BackendKind::Dense);
+    let body = req.to_json().to_string_compact();
+
+    // Client 1: hangs up mid-frame (headers promise more bytes than sent).
+    {
+        let mut s = UnixStream::connect(&socket).unwrap();
+        s.write_all(b"POST /v1/solve HTTP/1.0\r\nContent-Length: 999\r\n\r\n{\"v\": 1").unwrap();
+    }
+    // Client 2: sends a complete, valid solve-path request but disconnects
+    // before reading the response — the server finishes the walk and keeps
+    // it cached; the EPIPE on write is discarded.
+    {
+        let mut s = UnixStream::connect(&socket).unwrap();
+        let frame =
+            format!("POST /v1/solve HTTP/1.0\r\nContent-Length: {}\r\n\r\n{body}", body.len());
+        s.write_all(frame.as_bytes()).unwrap();
+    }
+    // Client 3: connects and says nothing (EOF) — a clean no-op.
+    drop(UnixStream::connect(&socket).unwrap());
+
+    // The server still answers, and the bytes still match the batch run.
+    let resp = send(&socket, &req);
+    assert_eq!(resp.coef_dump(), batch_dump(&req));
+
+    shutdown(&socket);
+    handle.join().unwrap().unwrap();
+}
