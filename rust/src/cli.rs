@@ -50,7 +50,10 @@ use crate::server::api::{
 use crate::server::registry::LoadedData;
 use crate::server::wire;
 use crate::util::{fmt_duration, Timer};
-use std::collections::HashMap;
+// BTreeMap, not HashMap: `expect_known` iterates the keys to report an
+// unknown flag, and the error must deterministically name the same flag
+// on every run (repo invariant-lint rule `hash-iteration`).
+use std::collections::BTreeMap;
 
 // Re-exported so existing callers of `cli::resolve_dataset` keep working;
 // the CLI itself materializes datasets through [`LoadedData::load`].
@@ -65,7 +68,7 @@ const CONFIG_FLAGS: &[&str] =
 #[derive(Debug, Clone)]
 pub struct Args {
     pub command: String,
-    flags: HashMap<String, String>,
+    flags: BTreeMap<String, String>,
     switches: Vec<String>,
 }
 
@@ -76,7 +79,7 @@ impl Args {
             bail!("no subcommand; try `tlfre help`");
         }
         let command = argv[0].clone();
-        let mut flags = HashMap::new();
+        let mut flags = BTreeMap::new();
         let mut switches = Vec::new();
         let mut i = 1;
         while i < argv.len() {

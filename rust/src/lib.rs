@@ -91,6 +91,8 @@
 //! `perf_kernels`, which includes the dense/CSC/view backend comparison
 //! recorded in `BENCH_backends.json`).
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod bench_harness;
 pub mod cli;
 pub mod config;

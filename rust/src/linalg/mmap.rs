@@ -283,6 +283,10 @@ impl MmapDenseMatrix {
             {
                 let mut file = self.store.file.lock().expect("mmap fallback: poisoned lock");
                 let off = self.store.x_offset + 4 * (j as u64 * self.rows as u64 + rs as u64);
+                // SAFETY: `buf` was just resized to `re - rs` initialized
+                // f32s, so the byte view covers exactly its allocation; u8
+                // has no alignment requirement and the exclusive borrow of
+                // `buf` pins it while `bytes` lives.
                 let bytes = unsafe {
                     std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, buf.len() * 4)
                 };
@@ -368,6 +372,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // mmap FFI (unsupported under Miri)
     fn kernels_bitwise_match_dense() {
         let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(16, 40, 8), 11);
         let path = tmp("kernels.bin");
@@ -406,6 +411,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // mmap FFI (unsupported under Miri)
     fn matvec_with_workers_bitwise_matches_serial() {
         let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(32, 60, 12), 12);
         let path = tmp("workers.bin");
@@ -426,6 +432,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // mmap FFI (unsupported under Miri)
     fn from_file_rejects_unaligned_offset_and_short_file() {
         let path = tmp("bad.bin");
         std::fs::write(&path, vec![0u8; 64]).unwrap();

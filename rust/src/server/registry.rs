@@ -29,10 +29,11 @@ use crate::error::Result;
 use crate::groups::GroupStructure;
 use crate::linalg::{CscMatrix, DesignMatrix, ShardedMatrix};
 use crate::util::json::Json;
+use crate::util::race;
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Mutex, PoisonError};
 use std::time::Instant;
 
 // ---------------------------------------------------------------------------
@@ -255,6 +256,12 @@ pub struct RegistryStats {
     pub cache_misses: AtomicUsize,
 }
 
+/// Lock names fed to the `race-check` lock-order table; every
+/// acquisition of a registry mutex goes through [`SessionRegistry::lock`]
+/// with one of these.
+const DATASETS_LOCK: &str = "registry.datasets";
+const PATHS_LOCK: &str = "registry.paths";
+
 /// The resident session state shared by every connection thread.
 pub struct SessionRegistry {
     datasets: Mutex<HashMap<String, Arc<LoadedData>>>,
@@ -281,9 +288,31 @@ impl SessionRegistry {
 
     /// Lock with poison recovery: a connection thread that panicked while
     /// holding the lock left a fully consistent map (values are inserted
-    /// whole), so later requests keep working.
-    fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-        m.lock().unwrap_or_else(PoisonError::into_inner)
+    /// whole), so later requests keep working. The guard is wrapped in a
+    /// named [`race::OrderedGuard`]: under `--features race-check` every
+    /// acquisition feeds the global lock-order table, so a future code
+    /// path that nests these locks in contradictory orders panics naming
+    /// both locks instead of deadlocking some unlucky pair of requests.
+    #[track_caller]
+    fn lock<'a, T>(name: &'static str, m: &'a Mutex<T>) -> race::OrderedGuard<'a, T> {
+        race::track_guard(name, m.lock().unwrap_or_else(PoisonError::into_inner))
+    }
+
+    /// Snapshot a keyed cache map as `(key, value)` pairs **sorted by
+    /// key**. `HashMap` iteration order varies per map instance, and
+    /// everything rendered from these maps (the `stats` arrays) must be
+    /// byte-identical across equal registries — so this is the only place
+    /// allowed to iterate them (invariant-lint `hash-iteration`
+    /// allowlist), and it sorts before anything downstream can observe
+    /// the order.
+    fn sorted_entries<V: Clone>(
+        name: &'static str,
+        m: &Mutex<HashMap<String, V>>,
+    ) -> Vec<(String, V)> {
+        let mut v: Vec<(String, V)> =
+            Self::lock(name, m).iter().map(|(k, x)| (k.clone(), x.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
     }
 
     /// The resident dataset for `spec`, loading it on first use. The load
@@ -292,17 +321,17 @@ impl SessionRegistry {
     /// both copies are bitwise identical).
     pub fn dataset(&self, spec: &DatasetSpec) -> Result<Arc<LoadedData>> {
         let key = spec.key();
-        if let Some(d) = Self::lock(&self.datasets).get(&key) {
+        if let Some(d) = Self::lock(DATASETS_LOCK, &self.datasets).get(&key) {
             return Ok(d.clone());
         }
         let loaded = Arc::new(LoadedData::load(spec)?);
-        let mut map = Self::lock(&self.datasets);
+        let mut map = Self::lock(DATASETS_LOCK, &self.datasets);
         Ok(map.entry(key).or_insert(loaded).clone())
     }
 
     /// The cached path prefix for a request's cache key, if any.
     pub fn cached_path(&self, key: &str) -> Option<Arc<CachedPath>> {
-        Self::lock(&self.paths).get(key).cloned()
+        Self::lock(PATHS_LOCK, &self.paths).get(key).cloned()
     }
 
     /// Insert a walked prefix. A shorter prefix never clobbers a longer
@@ -310,7 +339,7 @@ impl SessionRegistry {
     /// cache line (and every entry of equal index is bitwise identical
     /// regardless of which request produced it).
     pub fn store_path(&self, key: String, path: Arc<CachedPath>) {
-        let mut map = Self::lock(&self.paths);
+        let mut map = Self::lock(PATHS_LOCK, &self.paths);
         match map.get(&key) {
             Some(old) if old.steps.len() >= path.steps.len() => {}
             _ => {
@@ -319,11 +348,16 @@ impl SessionRegistry {
         }
     }
 
-    /// Counters and resident-state summary for the `stats` request.
+    /// Counters and resident-state summary for the `stats` request. The
+    /// `datasets` / `cached_paths` arrays are rendered in registry-key
+    /// order, so two registries holding equal content serialize them
+    /// byte-identically no matter what order requests arrived in (or how
+    /// each `HashMap` instance hashed its keys).
     pub fn stats_json(&self) -> Json {
-        let datasets: Vec<Json> = Self::lock(&self.datasets)
-            .values()
-            .map(|d| {
+        let dataset_snapshot = Self::sorted_entries(DATASETS_LOCK, &self.datasets);
+        let dataset_arr: Vec<Json> = dataset_snapshot
+            .into_iter()
+            .map(|(_, d)| {
                 Json::obj()
                     .set("describe", d.describe())
                     .set("n", d.n())
@@ -331,9 +365,10 @@ impl SessionRegistry {
                     .set("backend", d.backend().as_str())
             })
             .collect();
-        let paths: Vec<Json> = Self::lock(&self.paths)
-            .values()
-            .map(|p| {
+        let path_snapshot = Self::sorted_entries(PATHS_LOCK, &self.paths);
+        let path_arr: Vec<Json> = path_snapshot
+            .into_iter()
+            .map(|(_, p)| {
                 Json::obj()
                     .set("steps_cached", p.steps.len())
                     .set("grid_len", p.grid.len())
@@ -348,8 +383,8 @@ impl SessionRegistry {
             .set("paths_solved", s.paths_solved.load(Ordering::Relaxed))
             .set("cache_hits", s.cache_hits.load(Ordering::Relaxed))
             .set("cache_misses", s.cache_misses.load(Ordering::Relaxed))
-            .set("datasets", datasets)
-            .set("cached_paths", paths)
+            .set("datasets", dataset_arr)
+            .set("cached_paths", path_arr)
     }
 }
 
@@ -440,6 +475,48 @@ mod tests {
         assert!(reg.cached_path("k").unwrap().covers(7));
         assert!(!reg.cached_path("k").unwrap().covers(8));
         assert!(reg.cached_path("other").is_none());
+    }
+
+    #[test]
+    fn stats_arrays_are_byte_identical_across_equal_registries() {
+        // Two registries, same cached content inserted in opposite orders:
+        // separate `HashMap` instances hash differently (per-instance
+        // RandomState) and would render in different orders — the stats
+        // arrays must come out byte-identical anyway (key-sorted).
+        let mk = |steps: usize| {
+            Arc::new(CachedPath {
+                lambda_max: 1.0,
+                grid: vec![1.0; 16],
+                steps: vec![Default::default(); steps],
+                betas: vec![vec![0.0]; steps],
+                screen_total_s: 0.0,
+                solve_total_s: 0.0,
+                complete: false,
+            })
+        };
+        let keys: Vec<String> = (0..8).map(|i| format!("key-{i}")).collect();
+        let a = SessionRegistry::new();
+        let b = SessionRegistry::new();
+        for (i, k) in keys.iter().enumerate() {
+            a.store_path(k.clone(), mk(i + 1));
+        }
+        for (i, k) in keys.iter().enumerate().rev() {
+            b.store_path(k.clone(), mk(i + 1));
+        }
+        let render = |reg: &SessionRegistry| {
+            let stats = reg.stats_json();
+            stats.get("cached_paths").expect("stats has cached_paths").to_string_compact()
+        };
+        let ra = render(&a);
+        assert_eq!(ra, render(&b), "stats arrays must not depend on insertion order");
+        // Repeated requests against one registry are byte-identical too.
+        assert_eq!(ra, render(&a));
+        // And the order is the sorted key order: steps_cached 1..=8 ascending.
+        let arr = a.stats_json();
+        let arr = arr.get("cached_paths").unwrap().as_arr().unwrap().to_vec();
+        let steps: Vec<usize> =
+            arr.iter().map(|j| j.get("steps_cached").unwrap().as_usize().unwrap()).collect();
+        assert_eq!(steps, (1..=8).collect::<Vec<_>>());
     }
 
     #[test]

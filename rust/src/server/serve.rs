@@ -49,6 +49,10 @@ fn install_signal_handlers() {
     }
     const SIGINT: i32 = 2;
     const SIGTERM: i32 = 15;
+    // SAFETY: libc `signal` is called with valid constant signal numbers
+    // and a handler that is async-signal-safe (a single atomic store, no
+    // allocation or locking). The handler has `extern "C"` ABI and static
+    // lifetime, and replacing a prior disposition is the intended effect.
     unsafe {
         let _ = signal(SIGTERM, on_signal);
         let _ = signal(SIGINT, on_signal);
@@ -172,6 +176,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // unix socket I/O (unsupported under Miri)
     fn stats_load_and_shutdown_round_trip() {
         let (socket, handle) = start("stats");
         let (status, body) = wire::call(&socket, r#"{"v": 1, "kind": "stats"}"#).unwrap();
@@ -194,6 +199,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // unix socket I/O (unsupported under Miri)
     fn malformed_requests_get_400_envelopes_and_do_not_kill_the_server() {
         let (socket, handle) = start("bad");
         // Unparseable JSON body.
@@ -219,6 +225,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // unix socket I/O (unsupported under Miri)
     fn double_bind_is_a_typed_error_and_stale_sockets_are_reclaimed() {
         let (socket, handle) = start("bind");
         let err = serve_on(

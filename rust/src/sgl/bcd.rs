@@ -19,7 +19,7 @@ use crate::linalg::power::group_spectral_norms;
 use crate::linalg::{DesignMatrix, ScreenedView};
 use crate::prox::{sgl_prox_group, shrink_norm};
 use crate::screening::gap_safe::{EvictPlan, GapSafeDynamic};
-use crate::util::{pool, retain_by_mask, Rng};
+use crate::util::{pool, race, retain_by_mask, Rng};
 use std::cell::RefCell;
 use std::sync::Mutex;
 
@@ -187,6 +187,10 @@ struct SweepShared {
     n: usize,
 }
 
+// SAFETY: the raw pointers are only dereferenced inside a colored-class
+// dispatch, where the coloring invariant guarantees that concurrently
+// processed groups touch disjoint β ranges and disjoint residual rows —
+// see the SAFETY comment at the dispatch site in `sweep_once`.
 unsafe impl Sync for SweepShared {}
 
 /// One full sweep over the groups — sequential index order, or the colored
@@ -257,12 +261,54 @@ fn sweep_once<M: DesignMatrix>(
                         .map(|_| Mutex::new(GroupScratch::new(max_group, n)))
                         .collect()
                 });
+                // Shadow-ownership claims (race-check builds only): before
+                // writing, each task claims its group's β range and touched
+                // residual rows under regions keyed by the buffer addresses.
+                // A coloring bug — two concurrent workers sharing a row —
+                // panics naming both claim sites instead of corrupting the
+                // solve. `row_claims[k]` is the touched-row bitset of group
+                // `class[k]`.
+                let beta_key = beta.as_ptr() as usize;
+                let r_key = r.as_ptr() as usize;
+                let _beta_region = race::write_region(beta_key);
+                let _r_region = race::write_region(r_key);
+                let row_claims: Vec<Vec<u64>> = if race::ENABLED {
+                    class
+                        .iter()
+                        .map(|&g| {
+                            let mut bits = vec![0u64; n.div_ceil(64).max(1)];
+                            let (s_idx, e_idx) = ranges[g];
+                            for j in s_idx..e_idx {
+                                x.col_touched_rows(j, &mut bits);
+                            }
+                            bits
+                        })
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                let row_claims_ref = &row_claims;
                 let shared = SweepShared { beta: beta.as_mut_ptr(), r: r.as_mut_ptr(), n };
                 let shared_ref = &shared;
                 pool::parallel_for_chunks(class.len(), |w, cs, ce| {
                     let mut ws = scratches[w].lock().unwrap();
-                    for &g in &class[cs..ce] {
+                    for (k, &g) in class[cs..ce].iter().enumerate() {
                         let (s_idx, e_idx) = ranges[g];
+                        race::claim_range(
+                            beta_key,
+                            w,
+                            s_idx,
+                            e_idx,
+                            "sgl/bcd.rs colored sweep β group range",
+                        );
+                        if race::ENABLED {
+                            race::claim_bits(
+                                r_key,
+                                w,
+                                &row_claims_ref[cs + k],
+                                "sgl/bcd.rs colored sweep residual touched rows",
+                            );
+                        }
                         // SAFETY: groups within one color class have
                         // pairwise-disjoint coefficient ranges and
                         // pairwise-disjoint touched-row sets (the
@@ -850,6 +896,46 @@ mod tests {
             }
         }
         assert!(seq.converged);
+    }
+
+    /// Seed a deliberately *invalid* coloring — two paired-block groups
+    /// that share residual rows forced into one class — and assert the
+    /// `race-check` shadow-ownership checker panics on the overlapping
+    /// cross-worker row claims before any corrupted write lands.
+    #[test]
+    #[cfg(feature = "race-check")]
+    fn race_check_catches_seeded_bad_coloring() {
+        if pool::num_threads() < 2 {
+            // The claims only race under a real pool dispatch; with one
+            // thread the class runs serially (and correctly).
+            return;
+        }
+        let (x, y, g) = paired_block_problem(2, 3, 67);
+        let prob = SglProblem::new(&x, &y, &g);
+        let lm = sgl_lambda_max(&prob, 1.0);
+        let params = SglParams::from_alpha_lambda(1.0, 0.25 * lm.lambda_max);
+        // Groups 0 and 1 share a row band (they are a block pair), so a
+        // class [0, 1] violates the coloring invariant.
+        let bad = GroupColoring::from_classes(vec![vec![0, 1], vec![2], vec![3]], 4);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            solve_bcd(
+                &prob,
+                &params,
+                None,
+                &BcdOptions {
+                    parallel_groups: true,
+                    coloring: Some(&bad),
+                    ..Default::default()
+                },
+            )
+        }))
+        .expect_err("bad coloring must trip the shadow-ownership checker");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string panic>".into());
+        assert!(msg.contains("race-check"), "unexpected panic: {msg}");
+        assert!(msg.contains("residual touched rows"), "unexpected panic: {msg}");
     }
 
     #[test]

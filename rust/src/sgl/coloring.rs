@@ -127,6 +127,26 @@ impl GroupColoring {
         GroupColoring { classes, n_groups: g_count }
     }
 
+    /// Build a coloring from explicit classes — **test/diagnostic only**.
+    /// Validates that the classes partition `0..n_groups` (each group
+    /// exactly once) but takes the conflict-freedom of each class on
+    /// faith. Exists so the `race-check` tests can seed a deliberately
+    /// invalid schedule and assert the shadow-ownership checker rejects
+    /// it; never construct solver input this way.
+    #[doc(hidden)]
+    pub fn from_classes(classes: Vec<Vec<usize>>, n_groups: usize) -> GroupColoring {
+        let mut seen = vec![false; n_groups];
+        for class in &classes {
+            for &g in class {
+                assert!(g < n_groups, "group {g} out of range (n_groups {n_groups})");
+                assert!(!seen[g], "group {g} appears in two classes");
+                seen[g] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "classes must cover every group");
+        GroupColoring { classes, n_groups }
+    }
+
     /// The color classes, in execution order; each class's group indices
     /// are ascending and pairwise conflict-free.
     #[inline]

@@ -16,12 +16,15 @@
 //!   (sized to available cores, spawn-free after first use).
 //! * [`fault`] — deterministic fault-injection hooks (real only under the
 //!   `fault-inject` feature; inlined-`false` no-ops otherwise).
+//! * [`race`] — shadow-ownership write claims + lock-order checking (real
+//!   only under the `race-check` feature; inlined no-ops otherwise).
 
 pub mod fault;
 pub mod harness;
 pub mod json;
 pub mod logger;
 pub mod pool;
+pub mod race;
 pub mod rng;
 pub mod stats;
 

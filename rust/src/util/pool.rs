@@ -51,6 +51,7 @@
 //! round is waiting on (load-bearing for coarse-grained sharding like
 //! fold-parallel CV, where the caller's chunk is itself a whole path task).
 
+use crate::util::race;
 use std::any::Any;
 use std::cell::Cell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
@@ -87,7 +88,10 @@ type Task = Box<dyn FnOnce() + Send + 'static>;
 /// until the task has finished executing — in this module, every dispatcher
 /// blocks on [`Round::wait`] before its borrowed data goes out of scope.
 unsafe fn erase<'a>(task: Box<dyn FnOnce() + Send + 'a>) -> Task {
-    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Task>(task)
+    // SAFETY: only the lifetime is transmuted away (same layout either
+    // side); the caller upholds the contract above — the borrows stay
+    // live because every dispatcher blocks on the round's latch.
+    unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Task>(task) }
 }
 
 /// Count-down latch for one dispatch round, carrying any worker panic back
@@ -378,11 +382,24 @@ where
         return;
     }
     let chunk = n.div_ceil(workers);
+    // Shadow-ownership claims (race-check builds only): each chunk claims
+    // its index range at partition time, so a future partition-math bug
+    // handing two workers overlapping rows panics naming both claims.
+    let region_key = out.as_ptr() as usize;
+    let _region = race::write_region(region_key);
     let mut chunks = out.chunks_mut(chunk).enumerate();
     let (_, first) = chunks.next().expect("n > 0");
+    race::claim_range(region_key, 0, 0, first.len(), "pool::parallel_chunks_mut chunk 0");
     let f_ref = &f;
     let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
         .map(|(w, slice)| {
+            race::claim_range(
+                region_key,
+                w,
+                w * chunk,
+                w * chunk + slice.len(),
+                "pool::parallel_chunks_mut pool chunk",
+            );
             Box::new(move || f_ref(w * chunk, slice)) as Box<dyn FnOnce() + Send + '_>
         })
         .collect();
@@ -424,6 +441,11 @@ where
         f(0, out);
         return;
     }
+    // Shadow-ownership claims (race-check builds only): caller-chosen
+    // boundaries are exactly where a partition bug would slip in, so each
+    // piece claims its range before any task runs.
+    let region_key = out.as_ptr() as usize;
+    let _region = race::write_region(region_key);
     let mut pieces: Vec<(usize, &mut [U])> = Vec::with_capacity(bounds.len() + 1);
     let mut rest = out;
     let mut start = 0;
@@ -434,6 +456,15 @@ where
         rest = tail;
     }
     pieces.push((start, rest));
+    for (w, (s, slice)) in pieces.iter().enumerate() {
+        race::claim_range(
+            region_key,
+            w,
+            *s,
+            *s + slice.len(),
+            "pool::parallel_chunks_mut_at piece",
+        );
+    }
     let mut pieces = pieces.into_iter();
     let (_, first) = pieces.next().expect("bounds nonempty ⇒ ≥ 2 pieces");
     let f_ref = &f;
@@ -650,7 +681,8 @@ mod tests {
         // Many small rounds back-to-back: exercises the parked-worker
         // wake/finish cycle rather than any one-shot path.
         let mut out = vec![0usize; 64];
-        for round in 0..200 {
+        let rounds = if cfg!(miri) { 20 } else { 200 };
+        for round in 0..rounds {
             parallel_fill_with_workers(&mut out, 4, |i| i + round);
             assert_eq!(out[63], 63 + round);
         }
@@ -664,7 +696,8 @@ mod tests {
             for t in 0..4 {
                 s.spawn(move || {
                     let mut out = vec![0usize; 301];
-                    for _ in 0..50 {
+                    let rounds = if cfg!(miri) { 5 } else { 50 };
+                    for _ in 0..rounds {
                         parallel_fill_with_workers(&mut out, 3, |i| i * (t + 1));
                         assert_eq!(out[300], 300 * (t + 1));
                     }

@@ -1,0 +1,359 @@
+//! Runtime concurrency checkers behind the `race-check` cargo feature.
+//!
+//! Two debug-only checkers in the mold of [`crate::util::fault`]: real
+//! implementations under `--features race-check`, inlined no-ops
+//! otherwise, so production call sites carry zero cost and no `cfg`
+//! noise.
+//!
+//! * **Shadow-ownership writes** — the parallel writers
+//!   ([`crate::util::pool::parallel_chunks_mut`] /
+//!   [`crate::util::pool::parallel_chunks_mut_at`] and the colored-BCD
+//!   dispatch in `sgl/bcd.rs`) *claim* the index ranges they are about
+//!   to write, keyed by the destination buffer's address. Two different
+//!   workers claiming overlapping indices of one buffer is a partition
+//!   or coloring bug; the checker panics immediately, naming both claim
+//!   sites and both workers, instead of letting a silent lost update
+//!   skew the solve. Claims validate the *ownership protocol*, not raw
+//!   memory — the cheap deterministic companion to the ThreadSanitizer
+//!   CI job, and it works where TSan cannot go (Miri, single-run CI).
+//! * **Lock order** — named mutexes (the [`crate::server::registry`]
+//!   maps) record every "acquired B while holding A" edge in a global
+//!   table; a later acquisition contradicting a recorded edge panics
+//!   naming both locks and both acquisition sites — a potential
+//!   deadlock caught on the first run that exercises either order, not
+//!   the unlucky run that interleaves into it.
+//!
+//! Keying write regions by buffer address means concurrent solves (CV
+//! folds, serve connections) never cross-talk: each residual/β buffer is
+//! its own claim space, opened by [`write_region`] and cleared when the
+//! returned guard drops.
+
+#[cfg(feature = "race-check")]
+mod armed {
+    use std::collections::HashMap;
+    use std::ops::{Deref, DerefMut};
+    use std::panic::Location;
+    use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+
+    /// Checkers are compiled in (callers may gate claim *preparation*
+    /// work, e.g. building row bitsets, on this).
+    pub const ENABLED: bool = true;
+
+    #[derive(Clone, Copy)]
+    struct Claim {
+        start: usize,
+        end: usize,
+        worker: usize,
+        site: &'static str,
+    }
+
+    /// Claimed half-open ranges per open write region, keyed by the
+    /// destination buffer's address.
+    static CLAIMS: OnceLock<Mutex<HashMap<usize, Vec<Claim>>>> = OnceLock::new();
+
+    fn claims() -> MutexGuard<'static, HashMap<usize, Vec<Claim>>> {
+        // Poison recovery: a claim panic (the checker firing) must not
+        // wedge every later region in the test process.
+        CLAIMS
+            .get_or_init(|| Mutex::new(HashMap::new()))
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// An open shadow-ownership region over one destination buffer;
+    /// claims under its key live no longer than this guard.
+    pub struct WriteRegion {
+        key: usize,
+    }
+
+    impl Drop for WriteRegion {
+        fn drop(&mut self) {
+            claims().remove(&self.key);
+        }
+    }
+
+    /// Open a claim region for the buffer at address `key`, clearing any
+    /// stale claims left under a recycled address.
+    pub fn write_region(key: usize) -> WriteRegion {
+        claims().insert(key, Vec::new());
+        WriteRegion { key }
+    }
+
+    /// Claim `[start, end)` of the buffer at `key` for `worker`; panics
+    /// if a *different* worker holds an overlapping claim.
+    pub fn claim_range(key: usize, worker: usize, start: usize, end: usize, site: &'static str) {
+        if start >= end {
+            return;
+        }
+        let mut map = claims();
+        let list = map.entry(key).or_default();
+        for c in list.iter() {
+            if c.worker != worker && start < c.end && c.start < end {
+                panic!(
+                    "race-check: overlapping write claims on buffer {key:#x}: worker {worker} \
+                     claims [{start}, {end}) at [{site}], but worker {} already claimed \
+                     [{}, {}) at [{}]",
+                    c.worker, c.start, c.end, c.site
+                );
+            }
+        }
+        list.push(Claim { start, end, worker, site });
+    }
+
+    /// Claim every set bit of the bitset `bits` (bit `i` ⇔ index `i`)
+    /// for `worker`, compressing runs of set bits into range claims.
+    pub fn claim_bits(key: usize, worker: usize, bits: &[u64], site: &'static str) {
+        let n = bits.len() * 64;
+        let mut i = 0;
+        while i < n {
+            if (bits[i / 64] >> (i % 64)) & 1 == 1 {
+                let s = i;
+                while i < n && (bits[i / 64] >> (i % 64)) & 1 == 1 {
+                    i += 1;
+                }
+                claim_range(key, worker, s, i, site);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// First-recorded site of every `held(A) → acquire(B)` order edge.
+    type EdgeMap = HashMap<(&'static str, &'static str), &'static Location<'static>>;
+    static EDGES: OnceLock<Mutex<EdgeMap>> = OnceLock::new();
+
+    thread_local! {
+        /// Names of the tracked locks this thread currently holds.
+        static HELD: std::cell::RefCell<Vec<&'static str>> =
+            const { std::cell::RefCell::new(Vec::new()) };
+    }
+
+    /// Record lock `name` acquired on this thread; panics if a recorded
+    /// edge says the opposite order was taken before (deadlock cycle).
+    #[track_caller]
+    pub fn lock_acquired(name: &'static str) {
+        let here = Location::caller();
+        let mut edges = EDGES
+            .get_or_init(|| Mutex::new(HashMap::new()))
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner);
+        HELD.with(|h| {
+            for &held in h.borrow().iter() {
+                if held == name {
+                    continue;
+                }
+                if let Some(prev) = edges.get(&(name, held)) {
+                    panic!(
+                        "race-check: lock-order inversion: '{name}' acquired while holding \
+                         '{held}' at {here}, but '{held}' was previously acquired while \
+                         holding '{name}' at {prev} — potential deadlock"
+                    );
+                }
+                edges.entry((held, name)).or_insert(here);
+            }
+            h.borrow_mut().push(name);
+        });
+    }
+
+    /// Record lock `name` released on this thread.
+    pub fn lock_released(name: &'static str) {
+        HELD.with(|h| {
+            let mut v = h.borrow_mut();
+            if let Some(pos) = v.iter().rposition(|&n| n == name) {
+                v.remove(pos);
+            }
+        });
+    }
+
+    /// A mutex guard whose acquisition order is tracked by name.
+    pub struct OrderedGuard<'a, T> {
+        name: &'static str,
+        guard: MutexGuard<'a, T>,
+    }
+
+    /// Wrap an already-acquired guard under `name` for order tracking
+    /// (acquisition is recorded here, release when the wrapper drops).
+    #[track_caller]
+    pub fn track_guard<'a, T>(name: &'static str, guard: MutexGuard<'a, T>) -> OrderedGuard<'a, T> {
+        lock_acquired(name);
+        OrderedGuard { name, guard }
+    }
+
+    impl<T> Deref for OrderedGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            &self.guard
+        }
+    }
+
+    impl<T> DerefMut for OrderedGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            &mut self.guard
+        }
+    }
+
+    impl<T> Drop for OrderedGuard<'_, T> {
+        fn drop(&mut self) {
+            lock_released(self.name);
+        }
+    }
+}
+
+#[cfg(feature = "race-check")]
+pub use armed::*;
+
+#[cfg(not(feature = "race-check"))]
+mod api {
+    use std::ops::{Deref, DerefMut};
+    use std::sync::MutexGuard;
+
+    /// Checkers are compiled out: every probe below is an inlined no-op.
+    pub const ENABLED: bool = false;
+
+    /// No-op region token.
+    pub struct WriteRegion;
+
+    #[inline(always)]
+    pub fn write_region(_key: usize) -> WriteRegion {
+        WriteRegion
+    }
+
+    #[inline(always)]
+    pub fn claim_range(_key: usize, _worker: usize, _start: usize, _end: usize, _site: &str) {}
+
+    #[inline(always)]
+    pub fn claim_bits(_key: usize, _worker: usize, _bits: &[u64], _site: &str) {}
+
+    #[inline(always)]
+    pub fn lock_acquired(_name: &'static str) {}
+
+    #[inline(always)]
+    pub fn lock_released(_name: &'static str) {}
+
+    /// Transparent guard wrapper (no tracking compiled in).
+    pub struct OrderedGuard<'a, T> {
+        guard: MutexGuard<'a, T>,
+    }
+
+    #[inline(always)]
+    pub fn track_guard<'a, T>(_name: &'static str, guard: MutexGuard<'a, T>) -> OrderedGuard<'a, T> {
+        OrderedGuard { guard }
+    }
+
+    impl<T> Deref for OrderedGuard<'_, T> {
+        type Target = T;
+        #[inline(always)]
+        fn deref(&self) -> &T {
+            &self.guard
+        }
+    }
+
+    impl<T> DerefMut for OrderedGuard<'_, T> {
+        #[inline(always)]
+        fn deref_mut(&mut self) -> &mut T {
+            &mut self.guard
+        }
+    }
+}
+
+#[cfg(not(feature = "race-check"))]
+pub use api::*;
+
+#[cfg(all(test, feature = "race-check"))]
+mod tests {
+    use super::*;
+    use std::panic::catch_unwind;
+    use std::sync::Mutex;
+
+    fn panic_message(err: Box<dyn std::any::Any + Send>) -> String {
+        err.downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "<non-string panic>".into())
+    }
+
+    #[test]
+    fn disjoint_and_same_worker_claims_pass() {
+        let key = 0x1001;
+        let _region = write_region(key);
+        claim_range(key, 0, 0, 64, "a");
+        claim_range(key, 1, 64, 128, "b");
+        // Same worker may overlap itself (sequential re-writes race nothing).
+        claim_range(key, 0, 0, 32, "a again");
+    }
+
+    #[test]
+    fn overlapping_cross_worker_claims_panic_with_both_sites() {
+        let key = 0x1002;
+        let _region = write_region(key);
+        claim_range(key, 0, 0, 70, "site-alpha");
+        let err = catch_unwind(|| claim_range(key, 1, 60, 90, "site-beta"))
+            .expect_err("cross-worker overlap must panic");
+        let msg = panic_message(err);
+        assert!(msg.contains("race-check"), "{msg}");
+        assert!(msg.contains("site-alpha") && msg.contains("site-beta"), "{msg}");
+        assert!(msg.contains("worker 0") && msg.contains("worker 1"), "{msg}");
+    }
+
+    #[test]
+    fn bitset_claims_catch_single_shared_row() {
+        let key = 0x1003;
+        let _region = write_region(key);
+        let mut a = [0u64; 2];
+        a[0] = 0b1111; // rows 0..4
+        a[1] = 1 << 5; // row 69
+        claim_bits(key, 0, &a, "bits-a");
+        let mut b = [0u64; 2];
+        b[1] = 1 << 5; // row 69 again, different worker
+        let err = catch_unwind(|| claim_bits(key, 1, &b, "bits-b"))
+            .expect_err("shared row must panic");
+        let msg = panic_message(err);
+        assert!(msg.contains("[69, 70)"), "{msg}");
+    }
+
+    #[test]
+    fn dropping_a_region_clears_its_claims() {
+        let key = 0x1004;
+        {
+            let _region = write_region(key);
+            claim_range(key, 0, 0, 10, "first run");
+        }
+        // New region over a recycled address: the old claims are gone.
+        let _region = write_region(key);
+        claim_range(key, 1, 0, 10, "second run");
+    }
+
+    #[test]
+    fn lock_order_inversion_panics_naming_both_locks() {
+        let a = Mutex::new(());
+        let b = Mutex::new(());
+        {
+            let _ga = track_guard("race.test.a", a.lock().unwrap());
+            let _gb = track_guard("race.test.b", b.lock().unwrap());
+        }
+        // Same order again is fine.
+        {
+            let _ga = track_guard("race.test.a", a.lock().unwrap());
+            let _gb = track_guard("race.test.b", b.lock().unwrap());
+        }
+        // Opposite order: the recorded a→b edge makes this a cycle.
+        let _gb = track_guard("race.test.b", b.lock().unwrap());
+        let err = catch_unwind(|| {
+            let _ga = track_guard("race.test.a", a.lock().unwrap());
+        })
+        .expect_err("inversion must panic");
+        let msg = panic_message(err);
+        assert!(msg.contains("lock-order inversion"), "{msg}");
+        assert!(msg.contains("race.test.a") && msg.contains("race.test.b"), "{msg}");
+    }
+
+    #[test]
+    fn uncontradicted_nesting_never_fires() {
+        let outer = Mutex::new(());
+        let inner = Mutex::new(());
+        for _ in 0..3 {
+            let _go = track_guard("race.test.outer", outer.lock().unwrap());
+            let _gi = track_guard("race.test.inner", inner.lock().unwrap());
+        }
+    }
+}

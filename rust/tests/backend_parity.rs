@@ -19,6 +19,8 @@
 //!   streaming λmax / blocked column norms equal the in-RAM values bit
 //!   for bit. These run under the CI `TLFRE_THREADS` ∈ {1,2,4,8} matrix.
 
+#![cfg(not(miri))] // real temp files (mmap backend)
+
 use tlfre::coordinator::{
     path_coefficients, run_dpc_path, run_tlfre_path, DpcPathConfig, PathConfig, SolveControls,
 };

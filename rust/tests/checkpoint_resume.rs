@@ -11,6 +11,8 @@
 //! These run under the CI `TLFRE_THREADS` ∈ {1,2,4,8} matrix: the resumed
 //! path must agree with the uninterrupted one at every worker count.
 
+#![cfg(not(miri))] // real dataset + sidecar files
+
 use tlfre::coordinator::{
     run_tlfre_path_checkpointed, run_tlfre_path_with_coefficients, CheckpointOptions, PathConfig,
     PathOutput, SolveControls, SolverKind,

@@ -5,6 +5,8 @@
 //! Requires `make artifacts` to have run (skips gracefully otherwise so
 //! `cargo test` works in a fresh checkout).
 
+#![cfg(not(miri))] // loads AOT artifacts from disk
+
 use tlfre::data::synthetic::{generate_synthetic, SyntheticSpec};
 use tlfre::linalg::DenseMatrix;
 use tlfre::prox::shrink_norm_sq;

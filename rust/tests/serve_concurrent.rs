@@ -6,6 +6,8 @@
 //! the cache. The CI `TLFRE_THREADS ∈ {1,2,4,8}` matrix runs this whole
 //! file under each process-level thread count.
 
+#![cfg(not(miri))] // unix sockets + dataset files
+
 use std::io::Write;
 use std::os::unix::net::UnixStream;
 use std::path::{Path, PathBuf};

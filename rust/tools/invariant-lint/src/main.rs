@@ -1,0 +1,993 @@
+//! Repo-local invariant linter: statically enforces the determinism and
+//! unsafe-memory contracts over `rust/src`. See the README next to this
+//! crate for the rule catalog and the allowlist format.
+//!
+//! Zero dependencies by design — a hand-rolled line lexer (comments,
+//! strings and char literals stripped; `#[cfg(test)] mod` regions
+//! skipped) feeds six token-level rules:
+//!
+//! * `unsafe-safety` — every `unsafe` block/impl needs a `// SAFETY:`
+//!   comment (same line or the contiguous comment block above);
+//! * `hash-iteration` — no iteration over `HashMap`/`HashSet` outside
+//!   allowlisted sites: iteration order is per-instance nondeterministic
+//!   and anything serialized from it would break the bitwise-determinism
+//!   contract;
+//! * `relaxed-ordering` — no `Ordering::Relaxed` outside allowlisted
+//!   sites;
+//! * `float-narrowing` — no `as f32` in the solver dirs (`sgl/`,
+//!   `screening/`, `nonneg/`) outside allowlisted widen-compute-narrow
+//!   kernel sites (a line that also widens `as f64` is the sanctioned
+//!   idiom and passes);
+//! * `thread-spawn` — thread creation only in `util/pool.rs` and
+//!   `server/serve.rs`;
+//! * `solver-timers` — no `Instant::now` / `SystemTime` reads inside
+//!   solver code (wall-clock must never influence numeric output).
+//!
+//! The `hash-iteration` rule joins statement continuation lines upward
+//! (up to 8) before matching, so a builder chain like
+//! `map\n.iter()\n.map(..)` is still caught.
+//!
+//! Exit status: 0 clean, 1 violations or stale allowlist entries, 2 bad
+//! invocation or malformed allowlist.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const SOLVER_DIRS: [&str; 3] = ["/sgl/", "/screening/", "/nonneg/"];
+const SPAWN_OK: [&str; 2] = ["util/pool.rs", "server/serve.rs"];
+const ITER_METHODS: [&str; 7] = [
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".iter()",
+    ".iter_mut()",
+    ".into_iter()",
+    ".drain(",
+];
+
+/// One source line, lexed: `code` has comments stripped and string/char
+/// contents blanked (delimiters kept); `raw` is the original text.
+struct Line {
+    code: String,
+    raw: String,
+}
+
+struct Violation {
+    line: usize,
+    rule: &'static str,
+    msg: String,
+    raw: String,
+}
+
+struct AllowEntry {
+    rule: String,
+    path: String,
+    frag: String,
+    line_no: usize,
+    used: bool,
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+/// First word-bounded occurrence of `word` (ASCII) in `hay` at or after
+/// byte `from`.
+fn find_word_from(hay: &str, from: usize, word: &str) -> Option<usize> {
+    let b = hay.as_bytes();
+    let mut i = from;
+    while let Some(off) = hay[i..].find(word) {
+        let s = i + off;
+        let e = s + word.len();
+        let pre = s == 0 || !is_word_byte(b[s - 1]);
+        let post = e == b.len() || !is_word_byte(b[e]);
+        if pre && post {
+            return Some(s);
+        }
+        i = s + 1;
+    }
+    None
+}
+
+// ---------------------------------------------------------------- lexer
+
+#[derive(Clone, Copy)]
+enum LexState {
+    Normal,
+    Block,
+    Str,
+    RawStr,
+}
+
+/// Match `b?r#*"` at the start of `s`: returns (chars consumed, hash count).
+fn raw_str_open(s: &[char]) -> Option<(usize, usize)> {
+    let mut i = 0;
+    if s.first() == Some(&'b') {
+        i += 1;
+    }
+    if s.get(i) != Some(&'r') {
+        return None;
+    }
+    i += 1;
+    let mut hashes = 0;
+    while s.get(i + hashes) == Some(&'#') {
+        hashes += 1;
+    }
+    if s.get(i + hashes) != Some(&'"') {
+        return None;
+    }
+    Some((i + hashes + 1, hashes))
+}
+
+/// Match a char literal (`'a'`, `'\n'`) at the start of `s` (which begins
+/// with `'`): returns chars consumed, or None for a lifetime.
+fn char_literal(s: &[char]) -> Option<usize> {
+    match *s.get(1)? {
+        '\\' => {
+            s.get(2)?;
+            if *s.get(3)? == '\'' {
+                Some(4)
+            } else {
+                None
+            }
+        }
+        '\'' => None,
+        _ => {
+            if *s.get(2)? == '\'' {
+                Some(3)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+fn lex(text: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut state = LexState::Normal;
+    let mut depth = 0usize;
+    let mut raw_hashes = 0usize;
+    for raw in text.split('\n') {
+        let chars: Vec<char> = raw.chars().collect();
+        let n = chars.len();
+        let mut code = String::new();
+        let mut i = 0;
+        while i < n {
+            let c = chars[i];
+            let nxt = *chars.get(i + 1).unwrap_or(&'\0');
+            match state {
+                LexState::Block => {
+                    if c == '/' && nxt == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if c == '*' && nxt == '/' {
+                        depth -= 1;
+                        i += 2;
+                        if depth == 0 {
+                            state = LexState::Normal;
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+                LexState::Str => {
+                    if c == '\\' {
+                        i += 2;
+                    } else if c == '"' {
+                        state = LexState::Normal;
+                        code.push('"');
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                LexState::RawStr => {
+                    let closes = c == '"'
+                        && i + 1 + raw_hashes <= n
+                        && chars[i + 1..i + 1 + raw_hashes].iter().all(|&h| h == '#');
+                    if closes {
+                        state = LexState::Normal;
+                        code.push('"');
+                        i += 1 + raw_hashes;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                LexState::Normal => {
+                    if c == '/' && nxt == '/' {
+                        break;
+                    }
+                    if c == '/' && nxt == '*' {
+                        state = LexState::Block;
+                        depth = 1;
+                        i += 2;
+                    } else if c == '"' {
+                        state = LexState::Str;
+                        code.push('"');
+                        i += 1;
+                    } else if let Some((consumed, hashes)) = raw_str_open(&chars[i..]) {
+                        state = LexState::RawStr;
+                        raw_hashes = hashes;
+                        code.push('"');
+                        i += consumed;
+                    } else if c == '\'' {
+                        if let Some(consumed) = char_literal(&chars[i..]) {
+                            code.push_str("' '");
+                            i += consumed;
+                        } else {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(Line { code, raw: raw.to_string() });
+    }
+    out
+}
+
+// -------------------------------------------------- test-region skipping
+
+/// `(pub\s+)?mod` at the start of a trimmed code line.
+fn is_mod_decl(t: &str) -> bool {
+    let rest = match t.strip_prefix("pub") {
+        Some(r) if r.starts_with(char::is_whitespace) => r.trim_start(),
+        Some(_) => return false,
+        None => t,
+    };
+    rest.starts_with("mod") && !rest.as_bytes().get(3).is_some_and(|&b| is_word_byte(b))
+}
+
+/// Mark lines inside `#[cfg(..test..)] mod` blocks (brace-counted), so
+/// test-only code is exempt from the rules.
+fn test_regions(lines: &[Line]) -> Vec<bool> {
+    let mut in_test = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        let code = lines[i].code.trim();
+        if code.starts_with("#[cfg(") && find_word_from(code, 0, "test").is_some() {
+            let mut j = i + 1;
+            while j < lines.len() {
+                let t = lines[j].code.trim();
+                if t.is_empty() || t.starts_with("#[") {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            if j < lines.len() && is_mod_decl(lines[j].code.trim()) {
+                let mut depth: i64 = 0;
+                let mut started = false;
+                let mut k = j;
+                while k < lines.len() {
+                    for ch in lines[k].code.chars() {
+                        if ch == '{' {
+                            depth += 1;
+                            started = true;
+                        } else if ch == '}' {
+                            depth -= 1;
+                        }
+                    }
+                    in_test[k] = true;
+                    if started && depth <= 0 {
+                        break;
+                    }
+                    k += 1;
+                }
+                for t in in_test.iter_mut().take(j).skip(i) {
+                    *t = true;
+                }
+                i = k + 1;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    in_test
+}
+
+// ------------------------------------------------ hash-name collection
+
+/// Names declared with a `HashMap`/`HashSet` type annotation
+/// (`name: ..Hash{Map,Set}<..`) — struct fields, fn params, typed lets.
+fn field_decl_names(code: &str, out: &mut BTreeSet<String>) {
+    let b = code.as_bytes();
+    for token in ["HashMap", "HashSet"] {
+        let mut from = 0;
+        while let Some(off) = code[from..].find(token) {
+            let s = from + off;
+            from = s + 1;
+            if s > 0 && is_word_byte(b[s - 1]) {
+                continue;
+            }
+            let mut e = s + token.len();
+            while e < b.len() && b[e].is_ascii_whitespace() {
+                e += 1;
+            }
+            if e >= b.len() || b[e] != b'<' {
+                continue;
+            }
+            // Walk back over the type expression (stop at `=`, `;`, `(`),
+            // then take the word before the first `:` in that segment.
+            let mut st = s;
+            while st > 0 && !matches!(b[st - 1], b'=' | b';' | b'(') {
+                st -= 1;
+            }
+            let mut q = st;
+            while q < s {
+                if b[q] != b':' {
+                    q += 1;
+                    continue;
+                }
+                let mut w = q;
+                while w > st && b[w - 1].is_ascii_whitespace() {
+                    w -= 1;
+                }
+                let mut ws = w;
+                while ws > st && is_word_byte(b[ws - 1]) {
+                    ws -= 1;
+                }
+                if ws < w {
+                    out.insert(code[ws..w].to_string());
+                    break;
+                }
+                q += 1;
+            }
+        }
+    }
+}
+
+/// Names bound with `let [mut] name [: ty] = Hash{Map,Set}::..`.
+fn let_decl_names(code: &str, out: &mut BTreeSet<String>) {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(s) = find_word_from(code, from, "let") {
+        from = s + 1;
+        let mut i = s + 3;
+        let ws0 = i;
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i == ws0 {
+            continue;
+        }
+        if code[i..].starts_with("mut") {
+            let mut k = i + 3;
+            while k < b.len() && b[k].is_ascii_whitespace() {
+                k += 1;
+            }
+            if k > i + 3 {
+                i = k;
+            }
+        }
+        let id0 = i;
+        while i < b.len() && is_word_byte(b[i]) {
+            i += 1;
+        }
+        if i == id0 {
+            continue;
+        }
+        let name = &code[id0..i];
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if b.get(i) == Some(&b':') {
+            while i < b.len() && b[i] != b'=' {
+                i += 1;
+            }
+        }
+        if b.get(i) != Some(&b'=') {
+            continue;
+        }
+        i += 1;
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if !code[i..].starts_with("HashMap") && !code[i..].starts_with("HashSet") {
+            continue;
+        }
+        i += 7;
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if code[i..].starts_with("::") {
+            out.insert(name.to_string());
+        }
+    }
+}
+
+// ------------------------------------------------------- rule matchers
+
+/// `as <ty>` cast on a lexed code line.
+fn has_cast(code: &str, ty: &str) -> bool {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = find_word_from(code, from, "as") {
+        from = p + 1;
+        let mut i = p + 2;
+        let ws0 = i;
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let bounded = code[i..].starts_with(ty)
+            && !b.get(i + ty.len()).is_some_and(|&c| is_word_byte(c));
+        if i > ws0 && bounded {
+            return true;
+        }
+    }
+    false
+}
+
+/// `thread::spawn` / `thread::Builder` / `thread::scope`.
+fn has_thread_spawn(code: &str) -> bool {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = find_word_from(code, from, "thread") {
+        from = p + 1;
+        let mut i = p + 6;
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if !code[i..].starts_with("::") {
+            continue;
+        }
+        i += 2;
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        for w in ["spawn", "Builder", "scope"] {
+            let bounded = !b.get(i + w.len()).is_some_and(|&c| is_word_byte(c));
+            if code[i..].starts_with(w) && bounded {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// `for .. in` somewhere on one lexed code line.
+fn has_for_in(code: &str) -> bool {
+    find_word_from(code, 0, "for").is_some_and(|f| find_word_from(code, f + 3, "in").is_some())
+}
+
+/// `for .. in .. name` within one statement (no `;`/`{` crossed).
+fn for_in_name(hay: &str, name: &str) -> bool {
+    let mut from = 0;
+    while let Some(f) = find_word_from(hay, from, "for") {
+        from = f + 1;
+        let tail = &hay[f + 3..];
+        let stop = tail.find(|c| c == ';' || c == '{').unwrap_or(tail.len());
+        let seg = &tail[..stop];
+        if let Some(p) = find_word_from(seg, 0, "in") {
+            if find_word_from(&seg[p + 2..], 0, name).is_some() {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Did the contiguous comment block (or same line) above `idx` state a
+/// `SAFETY:` justification? Attributes, blank lines and other
+/// `unsafe impl` lines between the comment and the site are skipped.
+fn has_safety_comment(lines: &[Line], idx: usize) -> bool {
+    if lines[idx].raw.contains("SAFETY:") {
+        return true;
+    }
+    let mut j = idx;
+    while j > 0 {
+        j -= 1;
+        let t = lines[j].raw.trim();
+        let tc = lines[j].code.trim();
+        if t.is_empty() || tc.starts_with("#[") || tc.starts_with("#![") {
+            continue;
+        }
+        if lines[j].code.contains("unsafe impl") {
+            continue;
+        }
+        if t.starts_with("//") {
+            let mut k = j + 1;
+            while k > 0 && lines[k - 1].raw.trim().starts_with("//") {
+                k -= 1;
+                if lines[k].raw.contains("SAFETY:") {
+                    return true;
+                }
+            }
+        }
+        return false;
+    }
+    false
+}
+
+/// Join up to 8 continuation lines above `idx` into one statement: a line
+/// whose predecessor ends with `;`, `{` or `}` (or is blank) starts fresh.
+fn joined_statement(lines: &[Line], idx: usize) -> String {
+    let mut stmt: Vec<&str> = vec![&lines[idx].code];
+    let mut j = idx;
+    while j > 0 && stmt.len() < 8 {
+        j -= 1;
+        let prev = lines[j].code.trim_end();
+        let t = prev.trim();
+        if t.is_empty() || t.ends_with(';') || t.ends_with('{') || t.ends_with('}') {
+            break;
+        }
+        stmt.push(prev);
+    }
+    stmt.reverse();
+    stmt.join(" ")
+}
+
+fn hash_iter_msg(name: &str) -> String {
+    format!("iteration over HashMap/HashSet `{name}` (nondeterministic order)")
+}
+
+// ------------------------------------------------------------ lint core
+
+/// Lint one file's source text. `rel` is the forward-slash relative path
+/// (used for the solver-dir and spawn-site checks).
+fn lint_source(rel: &str, text: &str) -> Vec<Violation> {
+    let lines = lex(text);
+    let in_test = test_regions(&lines);
+    let solver = SOLVER_DIRS.iter().any(|d| rel.contains(d));
+    let spawn_ok = SPAWN_OK.iter().any(|p| rel.ends_with(p));
+
+    let mut hash_names = BTreeSet::new();
+    for line in &lines {
+        field_decl_names(&line.code, &mut hash_names);
+        let_decl_names(&line.code, &mut hash_names);
+    }
+    hash_names.remove("self");
+
+    let mut vs = Vec::new();
+    let mut report = |line: usize, rule: &'static str, msg: String, raw: &str| {
+        vs.push(Violation { line, rule, msg, raw: raw.to_string() });
+    };
+
+    for (idx, line) in lines.iter().enumerate() {
+        if in_test[idx] {
+            continue;
+        }
+        let code = &line.code;
+        let ln = idx + 1;
+
+        // unsafe-safety: one report per line; fn/extern decls are exempt
+        // (those carry `# Safety` docs instead).
+        let mut from = 0;
+        while let Some(p) = find_word_from(code, from, "unsafe") {
+            from = p + 1;
+            let after = code[p + 6..].trim_start();
+            if after.starts_with("fn") || after.starts_with("extern") {
+                continue;
+            }
+            if !has_safety_comment(&lines, idx) {
+                report(
+                    ln,
+                    "unsafe-safety",
+                    "`unsafe` block/impl without a preceding `// SAFETY:` comment".to_string(),
+                    &line.raw,
+                );
+            }
+            break;
+        }
+
+        // hash-iteration (statement-level: continuation lines joined)
+        let may_iterate = ITER_METHODS.iter().any(|m| code.contains(m)) || has_for_in(code);
+        if may_iterate {
+            let joined = joined_statement(&lines, idx);
+            for name in &hash_names {
+                if find_word_from(&joined, 0, name).is_none() {
+                    continue;
+                }
+                let hits = ITER_METHODS.iter().any(|m| joined.contains(m))
+                    || for_in_name(&joined, name);
+                if hits {
+                    report(ln, "hash-iteration", hash_iter_msg(name), &line.raw);
+                    break;
+                }
+            }
+        }
+
+        if code.contains("Ordering::Relaxed") {
+            report(
+                ln,
+                "relaxed-ordering",
+                "`Ordering::Relaxed` outside allowlisted sites".to_string(),
+                &line.raw,
+            );
+        }
+
+        if solver && has_cast(code, "f32") && !has_cast(code, "f64") {
+            report(
+                ln,
+                "float-narrowing",
+                "`as f32` narrowing in solver code".to_string(),
+                &line.raw,
+            );
+        }
+
+        if has_thread_spawn(code) && !spawn_ok {
+            report(
+                ln,
+                "thread-spawn",
+                "direct thread creation outside util/pool.rs / server/serve.rs".to_string(),
+                &line.raw,
+            );
+        }
+
+        if solver && (code.contains("Instant::now") || code.contains("SystemTime")) {
+            report(
+                ln,
+                "solver-timers",
+                "wall-clock read inside solver code".to_string(),
+                &line.raw,
+            );
+        }
+    }
+    vs
+}
+
+// ------------------------------------------------------------ allowlist
+
+fn parse_allowlist_text(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut entries = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let s = raw.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = s.split('|').map(str::trim).collect();
+        if parts.len() < 4 {
+            let want = "want `rule | path-suffix | line-fragment | reason`";
+            return Err(format!("allowlist:{}: malformed entry ({want})", idx + 1));
+        }
+        entries.push(AllowEntry {
+            rule: parts[0].to_string(),
+            path: parts[1].to_string(),
+            frag: parts[2].to_string(),
+            line_no: idx + 1,
+            used: false,
+        });
+    }
+    Ok(entries)
+}
+
+fn entry_matches(e: &AllowEntry, rule: &str, rel: &str, raw: &str) -> bool {
+    e.rule == rule && rel.ends_with(&e.path) && (e.frag == "*" || raw.contains(&e.frag))
+}
+
+/// Drop allowlisted violations, marking the entries they matched as used.
+fn filter_with_allowlist(
+    rel: &str,
+    vs: Vec<Violation>,
+    entries: &mut [AllowEntry],
+) -> Vec<Violation> {
+    let mut kept = Vec::new();
+    for v in vs {
+        let mut suppressed = false;
+        for e in entries.iter_mut() {
+            if entry_matches(e, v.rule, rel, &v.raw) {
+                e.used = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            kept.push(v);
+        }
+    }
+    kept
+}
+
+// ----------------------------------------------------------------- main
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            rs_files(&p, out)?;
+        } else if p.extension().and_then(|x| x.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+const USAGE: &str = "usage: invariant-lint [--root DIR] [--allowlist FILE]
+  --root DIR        source tree to lint (default: rust/src)
+  --allowlist FILE  allowlist path (default: rust/tools/invariant-lint/allowlist.txt)";
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from("rust/src");
+    let mut allowlist_path = PathBuf::from("rust/tools/invariant-lint/allowlist.txt");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        let value = |args: &mut dyn Iterator<Item = String>, flag: &str| {
+            args.next().ok_or_else(|| format!("{flag} needs a value"))
+        };
+        let r = match a.as_str() {
+            "--root" => value(&mut args, "--root").map(|v| root = PathBuf::from(v)),
+            "--allowlist" => {
+                value(&mut args, "--allowlist").map(|v| allowlist_path = PathBuf::from(v))
+            }
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => Err(format!("unknown argument `{other}`")),
+        };
+        if let Err(e) = r {
+            eprintln!("invariant-lint: {e}\n{USAGE}");
+            return ExitCode::from(2);
+        }
+    }
+
+    let mut entries = match std::fs::read_to_string(&allowlist_path) {
+        Ok(text) => match parse_allowlist_text(&text) {
+            Ok(entries) => entries,
+            Err(e) => {
+                eprintln!("invariant-lint: {e}");
+                return ExitCode::from(2);
+            }
+        },
+        // No allowlist file: every violation reports.
+        Err(_) => Vec::new(),
+    };
+
+    let mut files = Vec::new();
+    if let Err(e) = rs_files(&root, &mut files) {
+        eprintln!("invariant-lint: cannot walk {}: {e}", root.display());
+        return ExitCode::from(2);
+    }
+
+    let mut n_bad = 0usize;
+    for path in &files {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("invariant-lint: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        let rel = path.to_string_lossy().replace('\\', "/");
+        let vs = filter_with_allowlist(&rel, lint_source(&rel, &text), &mut entries);
+        for v in vs {
+            n_bad += 1;
+            println!("{rel}:{}: [{}] {}\n    {}", v.line, v.rule, v.msg, v.raw.trim());
+        }
+    }
+
+    let stale: Vec<&AllowEntry> = entries.iter().filter(|e| !e.used).collect();
+    for e in &stale {
+        println!(
+            "allowlist:{}: stale entry ({} | {} | {}) matched nothing",
+            e.line_no, e.rule, e.path, e.frag
+        );
+    }
+    if n_bad > 0 || !stale.is_empty() {
+        println!("\n{n_bad} violation(s), {} stale allowlist entr(ies)", stale.len());
+        return ExitCode::FAILURE;
+    }
+    println!("invariant-lint: clean ({} files)", files.len());
+    ExitCode::SUCCESS
+}
+
+// ----------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(rel: &str, src: &str) -> Vec<(usize, &'static str)> {
+        lint_source(rel, src).iter().map(|v| (v.line, v.rule)).collect()
+    }
+
+    #[test]
+    fn unsafe_block_without_safety_comment_is_flagged() {
+        let bad = "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        assert_eq!(rules("rust/src/util/fake.rs", bad), vec![(2, "unsafe-safety")]);
+
+        let good = "pub fn f(p: *const u8) -> u8 {\n\
+                    // SAFETY: caller keeps p valid.\n\
+                    unsafe { *p }\n}\n";
+        assert!(rules("rust/src/util/fake.rs", good).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_is_found_past_attributes_and_sibling_impls() {
+        let src = "// SAFETY: plain shared state, no interior mutation.\n\
+                   #[allow(dead_code)]\n\
+                   unsafe impl Send for S {}\n\
+                   unsafe impl Sync for S {}\n";
+        assert!(rules("rust/src/util/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_declarations_are_exempt() {
+        let src = "pub unsafe fn g() {}\nunsafe extern \"C\" fn h() {}\n";
+        assert!(rules("rust/src/util/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_iteration_is_flagged_for_fields_lets_and_for_loops() {
+        let field = "use std::collections::HashMap;\n\
+                     struct S { cache: HashMap<String, u32> }\n\
+                     impl S {\n\
+                     fn dump(&self) -> Vec<String> {\n\
+                     self.cache.keys().cloned().collect()\n\
+                     }\n\
+                     }\n";
+        assert_eq!(rules("rust/src/util/fake.rs", field), vec![(5, "hash-iteration")]);
+
+        let let_bound = "fn f() -> usize {\n\
+                         let m = HashMap::<u32, u32>::new();\n\
+                         m.iter().count()\n\
+                         }\n";
+        assert_eq!(rules("rust/src/util/fake.rs", let_bound), vec![(3, "hash-iteration")]);
+
+        let for_loop = "use std::collections::HashSet;\n\
+                        fn f(s: HashSet<u32>) -> u32 {\n\
+                        let mut t = 0;\n\
+                        for v in s { t += v; }\n\
+                        t\n\
+                        }\n";
+        assert_eq!(rules("rust/src/util/fake.rs", for_loop), vec![(4, "hash-iteration")]);
+    }
+
+    #[test]
+    fn hash_iteration_catches_builder_chains_across_lines() {
+        let src = "use std::collections::HashMap;\n\
+                   struct S { cache: HashMap<String, u32> }\n\
+                   impl S {\n\
+                   fn dump(&self) -> Vec<String> {\n\
+                   let mut v: Vec<String> = self.cache\n\
+                   .iter()\n\
+                   .map(|(k, _)| k.clone())\n\
+                   .collect();\n\
+                   v.sort();\n\
+                   v\n\
+                   }\n\
+                   }\n";
+        assert_eq!(rules("rust/src/util/fake.rs", src), vec![(6, "hash-iteration")]);
+    }
+
+    #[test]
+    fn btreemap_iteration_is_fine() {
+        let src = "use std::collections::BTreeMap;\n\
+                   fn f(m: &BTreeMap<String, u32>) -> Vec<String> {\n\
+                   m.keys().cloned().collect()\n\
+                   }\n";
+        assert!(rules("rust/src/util/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn relaxed_ordering_is_flagged() {
+        let src = "fn f(x: &std::sync::atomic::AtomicUsize) -> usize {\n\
+                   x.load(std::sync::atomic::Ordering::Relaxed)\n\
+                   }\n";
+        assert_eq!(rules("rust/src/util/fake.rs", src), vec![(2, "relaxed-ordering")]);
+    }
+
+    #[test]
+    fn float_narrowing_only_fires_in_solver_dirs() {
+        let src = "pub fn f(x: f64) -> f32 {\n    x as f32\n}\n";
+        assert_eq!(rules("rust/src/sgl/fake.rs", src), vec![(2, "float-narrowing")]);
+        assert_eq!(rules("rust/src/screening/fake.rs", src), vec![(2, "float-narrowing")]);
+        assert!(rules("rust/src/util/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn widen_compute_narrow_on_one_line_passes() {
+        let src = "pub fn f(x: f32, k: f32) -> f32 {\n    (x as f64 * k as f64) as f32\n}\n";
+        assert!(rules("rust/src/sgl/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn thread_spawn_is_flagged_outside_pool_and_serve() {
+        let src = "fn f() {\n    let h = std::thread::spawn(|| {});\n    h.join().unwrap();\n}\n";
+        assert_eq!(rules("rust/src/sgl/fake.rs", src), vec![(2, "thread-spawn")]);
+        assert!(rules("rust/src/util/pool.rs", src).is_empty());
+        assert!(rules("rust/src/server/serve.rs", src).is_empty());
+    }
+
+    #[test]
+    fn solver_timers_are_flagged() {
+        let src = "fn f() -> std::time::Instant {\n    std::time::Instant::now()\n}\n";
+        assert_eq!(rules("rust/src/screening/fake.rs", src), vec![(2, "solver-timers")]);
+        assert!(rules("rust/src/server/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_regions_are_skipped() {
+        let src = "pub fn run() {}\n\
+                   \n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   use std::sync::atomic::{AtomicUsize, Ordering};\n\
+                   fn helper(x: &AtomicUsize) -> usize {\n\
+                   x.load(Ordering::Relaxed)\n\
+                   }\n\
+                   }\n";
+        assert!(rules("rust/src/util/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn strings_and_comments_never_trigger() {
+        let src = "fn f() -> String {\n\
+                   // unsafe { } and Ordering::Relaxed in a comment\n\
+                   /* thread::spawn in a block comment */\n\
+                   let s = \"unsafe { Ordering::Relaxed }\".to_string();\n\
+                   let r = r#\"thread::spawn(|| {})\"#;\n\
+                   format!(\"{s}{r}\")\n\
+                   }\n";
+        assert!(rules("rust/src/util/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_lex_cleanly() {
+        let src = "fn f<'a>(x: &'a str) -> char {\n\
+                   let c = '\"';\n\
+                   let s = \"as f32\";\n\
+                   if s.is_empty() { ' ' } else { c }\n\
+                   }\n";
+        assert!(rules("rust/src/sgl/fake.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allowlist_suppresses_and_tracks_usage() {
+        let text = "# comment\nrelaxed-ordering | util/fake.rs | * | telemetry counter\n";
+        let mut entries = parse_allowlist_text(text).unwrap();
+        assert_eq!(entries.len(), 1);
+
+        let src = "fn f(x: &std::sync::atomic::AtomicUsize) -> usize {\n\
+                   x.load(std::sync::atomic::Ordering::Relaxed)\n\
+                   }\n";
+        let rel = "rust/src/util/fake.rs";
+        let kept = filter_with_allowlist(rel, lint_source(rel, src), &mut entries);
+        assert!(kept.is_empty());
+        assert!(entries[0].used);
+
+        // The same entry must not leak to other files.
+        let vs2 = lint_source(rel, src);
+        let other = filter_with_allowlist("rust/src/util/other.rs", vs2, &mut entries);
+        assert_eq!(other.len(), 1);
+    }
+
+    #[test]
+    fn stale_allowlist_entries_are_detectable() {
+        let text = "float-narrowing | sgl/gone.rs | x as f32 | removed code\n";
+        let entries = parse_allowlist_text(text).unwrap();
+        assert!(!entries[0].used);
+        assert_eq!(entries[0].line_no, 1);
+    }
+
+    #[test]
+    fn malformed_allowlist_lines_are_rejected_with_position() {
+        let err = parse_allowlist_text("rule-only\n").unwrap_err();
+        assert!(err.contains("allowlist:1"), "{err}");
+        assert!(err.contains("malformed"), "{err}");
+    }
+
+    #[test]
+    fn fragment_matching_is_rule_path_and_line_scoped() {
+        let e = AllowEntry {
+            rule: "float-narrowing".to_string(),
+            path: "sgl/fista.rs".to_string(),
+            frag: "let stepf = step as f32".to_string(),
+            line_no: 1,
+            used: false,
+        };
+        let hit = |rule: &str, rel: &str, raw: &str| entry_matches(&e, rule, rel, raw);
+        assert!(hit("float-narrowing", "rust/src/sgl/fista.rs", "let stepf = step as f32;"));
+        assert!(!hit("float-narrowing", "rust/src/sgl/fista.rs", "let other = x as f32;"));
+        assert!(!hit("float-narrowing", "rust/src/sgl/bcd.rs", "let stepf = step as f32;"));
+        assert!(!hit("solver-timers", "rust/src/sgl/fista.rs", "let stepf = step as f32;"));
+    }
+}
