@@ -25,6 +25,11 @@
 //!   spectral accounting and bitwise serial/sharded equality asserted
 //!   before publishing; feeds `cv_fold_parallel` in
 //!   `BENCH_solver_path.json`);
+//! * the working-set outer loop — the safe `tlfre+gap` pipeline vs the
+//!   celer-style `tlfre+ws` heuristic (supports asserted equal at every λ
+//!   before publishing; wall/iteration ratios, mean outer rounds, and the
+//!   final solved set size vs the safe survivor count; feeds
+//!   `working_set` in `BENCH_solver_path.json`);
 //! * the checkpointed path driver vs the plain coefficient-collecting run —
 //!   sidecar overhead at every-2-steps cadence, with a stop-mid-grid +
 //!   resume round trip asserted bitwise equal to the uninterrupted path
@@ -591,6 +596,64 @@ fn main() {
         dyn_wall_ratio,
     );
 
+    // Working-set outer loop: the fully safe tlfre+gap pipeline vs the
+    // celer-style tlfre+ws heuristic (same grid, same tolerance; ws seeds
+    // a small set from the previous support + strong-rule scores, solves
+    // it loosely, and grows geometrically on full-problem KKT violations
+    // before one tight final solve). `support_equal` is asserted before
+    // any number is published — a working set that changed a final
+    // support would make the ratios meaningless; the set-size column is
+    // the point of the optimization (final solved set vs the safe
+    // pipeline's survivor count).
+    println!("\n== working set: tlfre+gap vs tlfre+ws ==");
+    let ws_cfg = PathConfig { screen: ScreenKind::TlfreWs, ..cached_cfg.clone() };
+    let ws_betas = path_coefficients(&ds.x, &ds.y, &ds.groups, &ws_cfg);
+    let ws_support_equal = dynamic_betas.len() == ws_betas.len()
+        && dynamic_betas
+            .iter()
+            .zip(&ws_betas)
+            .all(|(a, b)| tlfre::screening::same_support_at_resolution(a, b));
+    assert!(
+        ws_support_equal,
+        "working set changed a final support — bench numbers would be meaningless"
+    );
+    let mut ws_path = None;
+    let r_ws = bench("tlfre+ws", &pcfg, || {
+        ws_path = Some(run_tlfre_path(&ds.x, &ds.y, &ds.groups, &ws_cfg));
+    });
+    let ws_path = ws_path.expect("working-set path ran");
+    let ws_iters: usize = ws_path.steps.iter().map(|s| s.iters).sum();
+    let ws_wall_ratio = r_ws.seconds.median / r_dyn_dynamic.seconds.median.max(1e-12);
+    let ws_iter_ratio = ws_iters as f64 / dynamic_iters.max(1) as f64;
+    // Post-λmax means: the zero step never runs the outer loop.
+    let ws_steps = ws_path.steps.len().saturating_sub(1).max(1);
+    let ws_mean_rounds =
+        ws_path.steps.iter().skip(1).map(|s| s.ws_rounds).sum::<usize>() as f64 / ws_steps as f64;
+    let ws_mean_final = ws_path.steps.iter().skip(1).map(|s| s.ws_final_size).sum::<usize>()
+        as f64
+        / ws_steps as f64;
+    // Survivor reference: the static tlfre path's per-step active set.
+    let surv_steps = static_path.steps.len().saturating_sub(1).max(1);
+    let ws_mean_survivors = static_path
+        .steps
+        .iter()
+        .skip(1)
+        .map(|s| s.active_features)
+        .sum::<usize>() as f64
+        / surv_steps as f64;
+    let ws_set_over_survivors = ws_mean_final / ws_mean_survivors.max(1e-12);
+    println!(
+        "  tlfre+gap {:8.2} ms ({dynamic_iters} iters)   tlfre+ws {:8.2} ms ({ws_iters} iters)   iter ratio {:.3}  wall ratio {:.3}",
+        r_dyn_dynamic.seconds.median * 1e3,
+        r_ws.seconds.median * 1e3,
+        ws_iter_ratio,
+        ws_wall_ratio,
+    );
+    println!(
+        "  mean rounds {:.2}   mean final set {:.1} features vs {:.1} tlfre survivors ({:.3}x, supports equal)",
+        ws_mean_rounds, ws_mean_final, ws_mean_survivors, ws_set_over_survivors,
+    );
+
     // Checkpoint overhead: the kill-safe checkpointed driver (sidecar
     // rewritten every 2 completed grid points) vs the plain
     // coefficient-collecting path on the identical problem and config.
@@ -749,6 +812,22 @@ fn main() {
                 .set("iter_ratio_dynamic_over_static", dyn_iter_ratio)
                 .set("evicted_total", evicted_total)
                 .set("support_equal", dyn_support_equal),
+        )
+        .set(
+            "working_set",
+            Json::obj()
+                .set("n_lambda", path_n_lambda)
+                .set("gap_wall_s", r_dyn_dynamic.seconds.median)
+                .set("ws_wall_s", r_ws.seconds.median)
+                .set("wall_ratio_ws_over_gap", ws_wall_ratio)
+                .set("gap_iters", dynamic_iters)
+                .set("ws_iters", ws_iters)
+                .set("iter_ratio_ws_over_gap", ws_iter_ratio)
+                .set("mean_rounds", ws_mean_rounds)
+                .set("mean_final_size", ws_mean_final)
+                .set("mean_survivors", ws_mean_survivors)
+                .set("final_size_over_survivors", ws_set_over_survivors)
+                .set("support_equal", ws_support_equal),
         )
         .set(
             "checkpoint_overhead",

@@ -49,14 +49,18 @@ pub fn render_speedup_table(dataset: &str, cols: &[SpeedupColumn]) -> String {
 /// Render a rejection-ratio series (one figure panel) as text:
 /// `λ/λmax  r1  r2  r1+r2` rows plus the per-layer screening counts —
 /// layer-1 rejected groups (`L1grp`), layer-2 rejected features (`L2feat`),
-/// in-solver dynamic evictions (`dyn`) and KKT re-admissions (`kkt`,
-/// heuristic pipelines only).
+/// in-solver dynamic evictions (`dyn`), KKT re-admissions (`kkt`,
+/// heuristic pipelines only), and the working-set outer loop's round count
+/// (`wsR`) and final set size in features (`wsN`; both 0 outside `ws`
+/// pipelines).
 pub fn render_rejection_series(title: &str, out: &PathOutput) -> String {
     let mut s = format!("-- {title} (λmax = {:.4}) --\n", out.lambda_max);
-    s.push_str("  λ/λmax      r1      r2   r1+r2  active   L1grp  L2feat     dyn     kkt\n");
+    s.push_str(
+        "  λ/λmax      r1      r2   r1+r2  active   L1grp  L2feat     dyn     kkt  wsR     wsN\n",
+    );
     for st in &out.steps {
         s.push_str(&format!(
-            "  {:8.4}  {:6.3}  {:6.3}  {:6.3}  {:6}  {:6}  {:6}  {:6}  {:6}\n",
+            "  {:8.4}  {:6.3}  {:6.3}  {:6.3}  {:6}  {:6}  {:6}  {:6}  {:6}  {:3}  {:6}\n",
             st.lambda / out.lambda_max,
             st.r1,
             st.r2,
@@ -66,6 +70,8 @@ pub fn render_rejection_series(title: &str, out: &PathOutput) -> String {
             st.features_rejected,
             st.dynamic_evicted,
             st.kkt_readmitted,
+            st.ws_rounds,
+            st.ws_final_size,
         ));
     }
     s.push_str(&format!(
@@ -143,6 +149,11 @@ pub fn series_to_json(out: &PathOutput) -> Json {
             "kkt_readmitted",
             out.steps.iter().map(|s| s.kkt_readmitted as f64).collect::<Vec<_>>(),
         )
+        .set("ws_rounds", out.steps.iter().map(|s| s.ws_rounds as f64).collect::<Vec<_>>())
+        .set(
+            "ws_final_size",
+            out.steps.iter().map(|s| s.ws_final_size as f64).collect::<Vec<_>>(),
+        )
         .set(
             "budget_exhausted",
             out.steps.iter().map(|s| s.budget_exhausted).collect::<Vec<_>>(),
@@ -205,5 +216,32 @@ mod tests {
         let cols = j.get("columns").unwrap().as_arr().unwrap();
         assert_eq!(cols.len(), 1);
         assert_eq!(cols[0].get("speedup").unwrap().as_f64(), Some(20.0));
+    }
+
+    #[test]
+    fn working_set_counters_flow_into_table_and_json() {
+        use crate::coordinator::runner::PathStep;
+        let step = PathStep {
+            lambda: 0.5,
+            active_features: 7,
+            ws_rounds: 3,
+            ws_final_size: 42,
+            ..Default::default()
+        };
+        let out = PathOutput {
+            lambda_max: 1.0,
+            steps: vec![step],
+            screen_total_s: 0.0,
+            solve_total_s: 0.0,
+            truncated: false,
+        };
+        let text = render_rejection_series("t", &out);
+        assert!(text.contains("wsR"), "{text}");
+        assert!(text.contains("wsN"), "{text}");
+        assert!(text.contains("  3  "), "{text}");
+        assert!(text.contains("42"), "{text}");
+        let j = series_to_json(&out);
+        assert_eq!(j.get("ws_rounds").unwrap().as_arr().unwrap()[0].as_f64(), Some(3.0));
+        assert_eq!(j.get("ws_final_size").unwrap().as_arr().unwrap()[0].as_f64(), Some(42.0));
     }
 }

@@ -201,7 +201,16 @@ COMMON FLAGS:
   --screen <name>      screening pipeline: tlfre (default, the paper's
                        exact two-layer rule) | tlfre+gap | gap (GAP-safe
                        static rules + dynamic in-solver screening) |
-                       strong+kkt (heuristic + KKT recovery) | none
+                       strong+kkt (heuristic + KKT recovery) | ws |
+                       tlfre+ws | ws+gap (celer-style working sets:
+                       loose solves on a small heuristic set, geometric
+                       growth on KKT violation, one tight final solve;
+                       same support/coefficients as the safe rules) | none
+  --ws-max-rounds <K>  working-set pipelines: outer-round cap before the
+                       set falls back to the full safe survivor set
+                       (default 20, must be ≥ 2)
+  --ws-growth <f64>    working-set geometric growth factor per violating
+                       round (default 2.0, must be > 1)
   --config <path>      JSON config (overridden by explicit flags)
   --k-folds <usize>    CV fold count (cv command; default 5)
   --cv-serial          run CV folds serially on one thread (reference
@@ -304,7 +313,10 @@ fn common_config(args: &Args) -> Result<Config> {
     }
     if let Some(v) = args.get("screen") {
         cfg.screen = crate::screening::ScreenKind::parse(v).with_context(|| {
-            format!("unknown screening pipeline '{v}' (tlfre|tlfre+gap|gap|strong+kkt|none)")
+            format!(
+                "unknown screening pipeline '{v}' \
+                 (tlfre|tlfre+gap|gap|strong+kkt|ws|tlfre+ws|ws+gap|none)"
+            )
         })?;
     }
     Ok(cfg)
@@ -356,6 +368,18 @@ fn solve_request_from_args(args: &Args, cfg: &Config, kind: RequestKind) -> Resu
             bail!("--max-seconds must be positive and finite, got {s}");
         }
         req.controls.max_seconds = Some(s);
+    }
+    if let Some(k) = args.get_parsed::<usize>("ws-max-rounds")? {
+        if k < 2 {
+            bail!("--ws-max-rounds must be ≥ 2, got {k}");
+        }
+        req.controls.ws_max_rounds = k;
+    }
+    if let Some(g) = args.get_parsed::<f64>("ws-growth")? {
+        if !(g > 1.0 && g.is_finite()) {
+            bail!("--ws-growth must be a finite factor > 1, got {g}");
+        }
+        req.controls.ws_growth = g;
     }
     match args.get_parsed::<f64>("alpha")? {
         Some(a) => {
@@ -424,6 +448,8 @@ fn cmd_solve_path(args: &Args) -> Result<i32> {
             "density",
             "refresh-every",
             "max-seconds",
+            "ws-max-rounds",
+            "ws-growth",
             "checkpoint",
             "checkpoint-every",
             "stop-after",
@@ -564,7 +590,7 @@ fn run_sgl_path<M: DesignMatrix>(
 
 fn cmd_cv(args: &Args) -> Result<i32> {
     args.expect_known(
-        &["dataset", "alpha", "backend", "k-folds", "refresh-every"],
+        &["dataset", "alpha", "backend", "k-folds", "refresh-every", "ws-max-rounds", "ws-growth"],
         &["cv-serial", "parallel-bcd"],
     )?;
     let cfg = common_config(args)?;
@@ -747,6 +773,8 @@ fn cmd_client(args: &Args) -> Result<i32> {
             "k-folds",
             "refresh-every",
             "max-seconds",
+            "ws-max-rounds",
+            "ws-growth",
             "coef-out",
             "out",
         ],
@@ -956,6 +984,12 @@ mod tests {
             "5",
             "--lambda-index",
             "3",
+            "--screen",
+            "tlfre+ws",
+            "--ws-max-rounds",
+            "9",
+            "--ws-growth",
+            "1.5",
             "--parallel-bcd",
         ]))
         .unwrap();
@@ -965,6 +999,9 @@ mod tests {
         assert_eq!(req.controls.n_lambda, 12);
         assert_eq!(req.controls.max_seconds, Some(5.0));
         assert_eq!(req.lambda_index, Some(3));
+        assert_eq!(req.screen, crate::screening::ScreenKind::TlfreWs);
+        assert_eq!(req.controls.ws_max_rounds, 9);
+        assert_eq!(req.controls.ws_growth, 1.5);
         assert!(req.parallel_bcd_groups);
         let spec = req.dataset.as_ref().unwrap();
         assert_eq!(spec.name, "sparse1");

@@ -87,6 +87,19 @@ impl SolveControls {
                     }
                 };
             }
+            "ws_max_rounds" => {
+                self.ws_max_rounds =
+                    val.as_usize().context("ws_max_rounds must be an integer")?;
+                if self.ws_max_rounds < 2 {
+                    bail!("ws_max_rounds must be ≥ 2");
+                }
+            }
+            "ws_growth" => {
+                self.ws_growth = val.as_f64().context("ws_growth must be a number")?;
+                if !(self.ws_growth > 1.0 && self.ws_growth.is_finite()) {
+                    bail!("ws_growth must be a finite factor > 1");
+                }
+            }
             _ => return Ok(false),
         }
         Ok(true)
@@ -116,6 +129,8 @@ impl SolveControls {
                     None => Json::Null,
                 },
             )
+            .set("ws_max_rounds", self.ws_max_rounds)
+            .set("ws_growth", self.ws_growth)
     }
 }
 
@@ -142,7 +157,7 @@ pub struct Config {
     /// See [`crate::coordinator::runner::PathConfig::parallel_bcd_groups`].
     pub parallel_bcd_groups: bool,
     /// Screening pipeline: "tlfre" (default) | "tlfre+gap" | "gap" |
-    /// "strong+kkt" | "none". See
+    /// "strong+kkt" | "ws" | "tlfre+ws" | "ws+gap" | "none". See
     /// [`crate::coordinator::runner::PathConfig::screen`].
     pub screen: ScreenKind,
     /// The shared solve-control knobs — reachable directly via `Deref`.
@@ -217,7 +232,7 @@ impl Config {
                     cfg.screen = ScreenKind::parse(s).with_context(|| {
                         format!(
                             "unknown screen pipeline '{s}' \
-                             (tlfre|tlfre+gap|gap|strong+kkt|none)"
+                             (tlfre|tlfre+gap|gap|strong+kkt|ws|tlfre+ws|ws+gap|none)"
                         )
                     })?;
                 }
@@ -300,6 +315,8 @@ mod tests {
         cfg.tol = 1e-8;
         cfg.lipschitz_refresh_every = Some(5);
         cfg.parallel_bcd_groups = true;
+        cfg.ws_max_rounds = 7;
+        cfg.ws_growth = 1.5;
         let text = cfg.to_json().to_string_pretty();
         let back = Config::from_json(&text).unwrap();
         assert_eq!(cfg, back);
@@ -320,6 +337,9 @@ mod tests {
         assert!(Config::from_json(r#"{"parallel_bcd_groups": 1}"#).is_err());
         assert!(Config::from_json(r#"{"screen": "magic"}"#).is_err());
         assert!(Config::from_json(r#"{"screen": 3}"#).is_err());
+        assert!(Config::from_json(r#"{"ws_max_rounds": 1}"#).is_err());
+        assert!(Config::from_json(r#"{"ws_growth": 1.0}"#).is_err());
+        assert!(Config::from_json(r#"{"ws_growth": "fast"}"#).is_err());
         assert!(Config::from_json("not json").is_err());
     }
 
@@ -330,6 +350,9 @@ mod tests {
             (r#"{"screen": "tlfre+gap"}"#, ScreenKind::TlfreGap),
             (r#"{"screen": "gap"}"#, ScreenKind::Gap),
             (r#"{"screen": "strong+kkt"}"#, ScreenKind::StrongKkt),
+            (r#"{"screen": "ws"}"#, ScreenKind::Ws),
+            (r#"{"screen": "tlfre+ws"}"#, ScreenKind::TlfreWs),
+            (r#"{"screen": "ws+gap"}"#, ScreenKind::WsGap),
             (r#"{"screen": "none"}"#, ScreenKind::None),
         ] {
             let cfg = Config::from_json(text).unwrap();

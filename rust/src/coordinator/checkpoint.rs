@@ -29,8 +29,14 @@
 //! | alpha f64 | lambda_min_ratio f64 | tol f64 | gap_inflation f64
 //! | lambda_max f64 | solver u8 | screen u8 | flags u8 | has_scalar u8
 //! | has_group u8 | pad[3] | refresh u64 | max_iter u64
+//! | ws_max_rounds u64 | ws_growth f64
 //! | screen_total_s f64 | solve_total_s f64 | payload_len u64
 //! ```
+//!
+//! The working-set knobs are fingerprint fields (version 2): under a
+//! `ws` pipeline they change the loose-round iterate trajectory and hence
+//! the warm starts every later step inherits, so resuming under different
+//! `ws_growth`/`ws_max_rounds` is a config mismatch, not a continuation.
 //!
 //! The payload holds the optional refresher snapshots followed by
 //! `completed` step records, each a fixed-field `PathStep` plus its
@@ -61,7 +67,7 @@ use crate::sgl::fista::deadline_passed;
 use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"TLFRECK1";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 /// Upper bound on per-step layer records — the built-in pipelines hold at
 /// most two rules; anything larger in a file is corruption.
 const MAX_LAYERS: usize = 64;
@@ -118,6 +124,11 @@ struct CheckpointKey {
     /// `lipschitz_refresh_every` (0 = disabled).
     refresh: u64,
     max_iter: u64,
+    /// Working-set outer-round cap (fingerprint even for non-ws pipelines;
+    /// the stored bytes must round-trip exactly).
+    ws_max_rounds: u64,
+    /// Working-set geometric growth factor.
+    ws_growth: f64,
 }
 
 fn solver_id(s: SolverKind) -> u8 {
@@ -134,6 +145,9 @@ fn screen_id(s: ScreenKind) -> u8 {
         ScreenKind::Gap => 2,
         ScreenKind::StrongKkt => 3,
         ScreenKind::None => 4,
+        ScreenKind::Ws => 5,
+        ScreenKind::TlfreWs => 6,
+        ScreenKind::WsGap => 7,
     }
 }
 
@@ -142,6 +156,7 @@ fn rule_id(name: &str) -> Result<u8> {
         "tlfre" => Ok(0),
         "gap" => Ok(1),
         "strong" => Ok(2),
+        "ws" => Ok(3),
         other => Err(crate::anyhow!(
             "checkpointing supports the built-in screening rules only (got rule {other:?})"
         )),
@@ -153,6 +168,7 @@ fn rule_name(id: u8) -> Result<&'static str> {
         0 => Ok("tlfre"),
         1 => Ok("gap"),
         2 => Ok("strong"),
+        3 => Ok("ws"),
         other => Err(crate::anyhow!("corrupt checkpoint: unknown rule id {other}")),
     }
 }
@@ -183,6 +199,8 @@ impl CheckpointKey {
                 | (cfg.parallel_bcd_groups as u8) << 3,
             refresh: cfg.lipschitz_refresh_every.map_or(0, |k| k as u64),
             max_iter: cfg.max_iter as u64,
+            ws_max_rounds: cfg.ws_max_rounds as u64,
+            ws_growth: cfg.ws_growth,
         }
     }
 
@@ -204,6 +222,8 @@ impl CheckpointKey {
             && self.flags == other.flags
             && self.refresh == other.refresh
             && self.max_iter == other.max_iter
+            && self.ws_max_rounds == other.ws_max_rounds
+            && self.ws_growth.to_bits() == other.ws_growth.to_bits()
     }
 }
 
@@ -326,6 +346,8 @@ fn enc_step(e: &mut Enc, s: &PathStep) -> Result<()> {
     e.u64(s.kkt_readmitted as u64);
     e.u8(s.budget_exhausted as u8);
     e.f64(s.certified_suboptimality);
+    e.u64(s.ws_rounds as u64);
+    e.u64(s.ws_final_size as u64);
     e.u64(s.layers.len() as u64);
     for l in &s.layers {
         e.u8(rule_id(l.rule)?);
@@ -360,6 +382,8 @@ fn dec_step(d: &mut Dec<'_>) -> Result<PathStep> {
         other => bail!("corrupt checkpoint: invalid budget flag {other}"),
     };
     let certified_suboptimality = d.f64("step.certified_suboptimality")?;
+    let ws_rounds = d.u64("step.ws_rounds")? as usize;
+    let ws_final_size = d.u64("step.ws_final_size")? as usize;
     let n_layers = d.u64("step.n_layers")? as usize;
     if n_layers > MAX_LAYERS {
         bail!("corrupt checkpoint: implausible layer count {n_layers}");
@@ -394,6 +418,8 @@ fn dec_step(d: &mut Dec<'_>) -> Result<PathStep> {
         kkt_readmitted,
         budget_exhausted,
         certified_suboptimality,
+        ws_rounds,
+        ws_final_size,
     })
 }
 
@@ -483,6 +509,8 @@ fn save_checkpoint(
     e.u8(0);
     e.u64(key.refresh);
     e.u64(key.max_iter);
+    e.u64(key.ws_max_rounds);
+    e.f64(key.ws_growth);
     e.f64(screen_total_s);
     e.f64(solve_total_s);
     e.u64(body.buf.len() as u64);
@@ -531,12 +559,19 @@ fn load_checkpoint(path: &Path, key: &CheckpointKey) -> Result<LoadedState> {
         flags: d.u8("flags")?,
         refresh: 0,
         max_iter: 0,
+        ws_max_rounds: 0,
+        ws_growth: 0.0,
     };
     let has_scalar = d.u8("has_scalar")? != 0;
     let has_group = d.u8("has_group")? != 0;
     d.take(3, "pad")?;
-    let stored =
-        CheckpointKey { refresh: d.u64("refresh")?, max_iter: d.u64("max_iter")?, ..stored };
+    let stored = CheckpointKey {
+        refresh: d.u64("refresh")?,
+        max_iter: d.u64("max_iter")?,
+        ws_max_rounds: d.u64("ws_max_rounds")?,
+        ws_growth: d.f64("ws_growth")?,
+        ..stored
+    };
     if !key.matches(&stored) {
         bail!(
             "{path:?}: checkpoint was written for a different problem or config \
@@ -798,6 +833,43 @@ mod tests {
             format!("{err:#}").contains("different problem or config"),
             "unexpected error: {err:#}"
         );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn working_set_knob_mismatch_is_a_typed_error() {
+        // ws_growth/ws_max_rounds are fingerprint fields: under a ws
+        // pipeline they steer the loose-round trajectory (and so every
+        // warm start downstream), so a resume under different knobs must
+        // be rejected, not silently continued.
+        let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(20, 60, 6), 716);
+        let base = {
+            let mut c = cfg();
+            c.screen = ScreenKind::TlfreWs;
+            c
+        };
+        let path = tmp("ws_mismatch.ck");
+        let opts =
+            CheckpointOptions { every: 2, stop_after: Some(4), ..CheckpointOptions::new(&path) };
+        run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &base, &opts).unwrap();
+        let ropts = CheckpointOptions { resume: true, stop_after: None, ..opts };
+        for mutate in [
+            (&|c: &mut PathConfig| c.ws_growth = 3.0) as &dyn Fn(&mut PathConfig),
+            &|c: &mut PathConfig| c.ws_max_rounds += 1,
+        ] {
+            let mut other = base.clone();
+            mutate(&mut other);
+            let err = run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &other, &ropts)
+                .unwrap_err();
+            assert!(
+                format!("{err:#}").contains("different problem or config"),
+                "unexpected error: {err:#}"
+            );
+        }
+        // Unchanged knobs resume fine and run to completion.
+        let (out, _) =
+            run_tlfre_path_checkpointed(&ds.x, &ds.y, &ds.groups, &base, &ropts).unwrap();
+        assert!(!out.truncated);
         std::fs::remove_file(&path).ok();
     }
 

@@ -76,8 +76,8 @@ use crate::nonneg::{
 };
 use crate::screening::gap_safe::{GapSafeDynamic, GapSafeDynamicNonneg};
 use crate::screening::lambda_max::{sgl_lambda_max, LambdaMaxInfo};
-use crate::screening::rule::{stats_from_masks, ScreenInput, ScreenPipeline};
-use crate::screening::strong_rule::kkt_violations;
+use crate::screening::rule::{stats_from_masks, ScreenInput, ScreenPipeline, SurvivorMask};
+use crate::screening::strong_rule::kkt_violations_with_resid;
 use crate::screening::tlfre::{ScreenStats, TlfreContext, TlfreOutcome};
 use crate::sgl::bcd::{bcd_group_lipschitz, solve_bcd, BcdOptions};
 use crate::sgl::fista::{lipschitz, lipschitz_of, solve_fista, FistaOptions};
@@ -396,6 +396,7 @@ pub(crate) fn solve<M: DesignMatrix>(
     params: &SglParams,
     warm: Option<&[f32]>,
     cfg: &PathConfig,
+    tol: f64,
     lip: Option<f64>,
     group_lip: Option<&[f64]>,
     coloring: Option<&GroupColoring>,
@@ -408,7 +409,7 @@ pub(crate) fn solve<M: DesignMatrix>(
             params,
             warm,
             &FistaOptions {
-                tol: cfg.tol,
+                tol,
                 max_iter: cfg.max_iter,
                 lipschitz: lip,
                 dynamic_screen: dynamic,
@@ -421,7 +422,7 @@ pub(crate) fn solve<M: DesignMatrix>(
             params,
             warm,
             &BcdOptions {
-                tol: cfg.tol,
+                tol,
                 max_sweeps: cfg.max_iter,
                 group_lipschitz: group_lip,
                 parallel_groups: cfg.parallel_bcd_groups,
@@ -439,8 +440,18 @@ pub(crate) fn solve<M: DesignMatrix>(
 // ---------------------------------------------------------------------------
 
 /// Upper bound on KKT recovery rounds for heuristic pipelines (matches
-/// `strong_rule::solve_with_strong_rule`'s historical cap).
+/// `strong_rule::solve_with_strong_rule`'s historical cap). Working-set
+/// pipelines use `SolveControls::ws_max_rounds` instead (plus slack for
+/// the tight finish).
 const MAX_KKT_ROUNDS: usize = 16;
+
+/// Inner-tolerance relaxation for the working-set outer loop's *grow*
+/// rounds: while the set may still be wrong, solving it tighter than
+/// `WS_LOOSE_FACTOR × tol` is wasted work — the loose solution is only
+/// used to probe full-problem KKT and pick the next growth step. The one
+/// final solve after a clean KKT check runs at the target tolerance, so
+/// the exactness contract is untouched.
+const WS_LOOSE_FACTOR: f64 = 100.0;
 
 /// Resolve a `PathConfig::max_seconds` budget into a wall-clock deadline,
 /// anchored at engine construction (so screening preamble time counts
@@ -591,6 +602,8 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
             kkt_readmitted: 0,
             budget_exhausted: false,
             certified_suboptimality: 0.0,
+            ws_rounds: 0,
+            ws_final_size: 0,
         }
     }
 
@@ -612,8 +625,8 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
         // `tlfre_screen_inexact`) and the GAP rule consuming the same
         // residual/correlation sweeps at the new λ.
         let ts = Timer::start();
-        let (mut outcome, layers) = if self.pipeline.is_empty() {
-            (self.keep_all(), Vec::new())
+        let (mut outcome, layers, safe_mask) = if self.pipeline.is_empty() {
+            (self.keep_all(), Vec::new(), SurvivorMask::all_kept(self.groups))
         } else {
             crate::sgl::objective::residual(&self.prob, &self.beta, &mut self.resid);
             self.prob.x.matvec_t(&self.resid, &mut self.corr);
@@ -652,7 +665,7 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                 lmax: &self.lmax,
                 ctx: &self.ctx,
             };
-            self.pipeline.screen(&input)
+            self.pipeline.screen_full(&input)
         };
         let mut reduced = ReducedProblem::build(self.x, self.groups, &outcome);
         // Amortized Lipschitz refresh runs inside the screening timer —
@@ -694,6 +707,24 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
         // round by construction. Re-solve rounds fall back to the
         // always-valid full-matrix step bounds — the refreshed survivor-set
         // bounds were measured before re-admission grew the problem.
+        //
+        // Working-set pipelines upgrade this into the celer-style
+        // loose-then-tight outer loop: while the set may still be wrong,
+        // each round solves at `WS_LOOSE_FACTOR × tol`; a KKT violation
+        // re-admits the violators AND grows the set geometrically
+        // (`cfg.ws_growth`); a clean KKT check at loose tolerance triggers
+        // one final *tight* solve of the same (small) reduced problem —
+        // the expensive full-accuracy solve happens exactly once. Past
+        // `cfg.ws_max_rounds` the set is restored to the full safe
+        // survivor mask and the loop degenerates to the plain recovery
+        // behaviour, so the heuristic can never compromise exactness.
+        let ws_mode = self.pipeline.has_working_set();
+        // `tight` = this round solves at the target tolerance. Non-ws
+        // heuristic pipelines (strong+kkt) always solve tight, exactly as
+        // before.
+        let mut tight = !ws_mode;
+        let mut ws_fallback = false;
+        let hard_cap = if ws_mode { cfg.ws_max_rounds + 2 } else { MAX_KKT_ROUNDS };
         let mut solve_s = 0.0f64;
         let mut kkt_readmitted = 0usize;
         let mut dynamic_evicted = 0usize;
@@ -705,11 +736,18 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
         let mut iters = 0usize;
         let (active, gap, budget_exhausted) = loop {
             rounds += 1;
+            let round_tol = if tight { cfg.tol } else { cfg.tol * WS_LOOSE_FACTOR };
             let ts = Timer::start();
+            // Per-round dynamic-eviction stats: merged into the step totals
+            // only when the round's result is accepted (the loop breaks).
+            // A round whose KKT check finds violations solved a mis-reduced
+            // problem — its evictions certify nothing and are discarded.
+            let mut round_dyn_evicted = 0usize;
+            let mut round_dyn_ids: Vec<usize> = Vec::new();
             let round = match &reduced {
                 None => {
                     self.beta.fill(0.0);
-                    (0usize, 0usize, 0.0f64, false)
+                    (0usize, 0usize, 0.0f64, false, self.y.to_vec())
                 }
                 Some(red) => {
                     let warm = red.gather(&self.beta);
@@ -718,20 +756,24 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                     } else {
                         (self.spectral.lip, self.spectral.reduced_group_l(red))
                     };
-                    // Dynamic state rides the first solve only: KKT
-                    // re-solve rounds (heuristic pipelines) rebuild the
-                    // reduced problem, and a fresh state there would
-                    // re-evict (and re-count) coordinates already evicted
-                    // in round 1. It also requires an all-safe static
-                    // pipeline: the GAP sphere certifies zeros of the
-                    // problem the solver is actually solving, so a
-                    // heuristically mis-reduced problem (correct only
-                    // after KKT recovery) could yield evictions that are
-                    // not certificates of the true optimum.
-                    let dyn_state = if rounds == 1
-                        && self.pipeline.dynamic()
-                        && self.pipeline.all_safe()
-                    {
+                    // Dynamic state attachment. Safe pipelines: the first
+                    // (only) solve — a fresh state on KKT re-solve rounds
+                    // would re-evict (and re-count) coordinates already
+                    // evicted in round 1, and the sphere certifies zeros of
+                    // the problem the solver is actually given, so a
+                    // heuristically mis-reduced problem must not feed it.
+                    // Working-set pipelines: tight rounds only — the final
+                    // accepted round's reduction is KKT-certified as the
+                    // full problem's optimum, making those evictions
+                    // legitimate certificates; loose grow rounds never
+                    // attach (see the round-stat discard above for tight
+                    // rounds that fail the KKT check).
+                    let attach_dyn = if ws_mode {
+                        tight && self.pipeline.dynamic()
+                    } else {
+                        rounds == 1 && self.pipeline.dynamic() && self.pipeline.all_safe()
+                    };
+                    let dyn_state = if attach_dyn {
                         let (cn, gs) = red.project_screen_context(&self.ctx);
                         Some(RefCell::new(GapSafeDynamic::new(cfg.alpha, cn, gs)))
                     } else {
@@ -751,6 +793,7 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                             &params,
                             Some(&warm),
                             cfg,
+                            round_tol,
                             round_lip,
                             round_group_l.as_deref(),
                             None,
@@ -766,6 +809,7 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                             &params,
                             Some(&warm),
                             cfg,
+                            round_tol,
                             round_lip,
                             round_group_l.as_deref(),
                             red_coloring.as_ref(),
@@ -776,39 +820,82 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                     red.scatter(&res.beta, &mut self.beta);
                     if let Some(st) = dyn_state {
                         let st = st.into_inner();
-                        dynamic_evicted += st.evicted();
+                        round_dyn_evicted = st.evicted();
                         if cfg.verify_safety {
-                            dyn_evicted_full
+                            round_dyn_ids
                                 .extend(st.evicted_ids().iter().map(|&k| red.feature_map()[k]));
                         }
                     }
-                    (red.n_features(), res.iters, res.gap, res.budget_exhausted)
+                    (red.n_features(), res.iters, res.gap, res.budget_exhausted, res.resid)
                 }
             };
             solve_s += ts.elapsed_s();
             iters += round.1;
-            if self.pipeline.all_safe() || rounds > MAX_KKT_ROUNDS {
+            if self.pipeline.all_safe() || rounds > hard_cap {
+                dynamic_evicted += round_dyn_evicted;
+                dyn_evicted_full.extend(round_dyn_ids);
                 break (round.0, round.2, round.3);
             }
             // Heuristic pipeline: check the discarded coordinates' KKT
             // conditions (a screening-correctness cost, charged to the
-            // screening timer like the rest of the rule work).
+            // screening timer like the rest of the rule work). The solver's
+            // own final residual is reused — the reduced residual equals
+            // the full-space one (discarded coordinates are zero) — so the
+            // check costs one matvec_t, not a residual + matvec_t.
             let tk = Timer::start();
-            let bad = kkt_violations(&self.prob, &params, &self.beta, &outcome);
+            let bad =
+                kkt_violations_with_resid(&self.prob, &params, &self.beta, &outcome, &round.4);
             screen_s += tk.elapsed_s();
             if bad.is_empty() {
-                break (round.0, round.2, round.3);
+                if tight {
+                    dynamic_evicted += round_dyn_evicted;
+                    dyn_evicted_full.extend(round_dyn_ids);
+                    break (round.0, round.2, round.3);
+                }
+                // Loose working set is KKT-clean: re-solve the SAME reduced
+                // problem (warm from its own loose solution) to the target
+                // tolerance. This is the one full-accuracy solve.
+                tight = true;
+                continue;
             }
             kkt_readmitted += bad.len();
             for &i in &bad {
                 outcome.feature_kept[i] = true;
                 outcome.group_kept[self.groups.group_of(i)] = true;
             }
+            if ws_mode && !ws_fallback {
+                if rounds >= cfg.ws_max_rounds {
+                    // Safe fallback: restore the full safe survivor set
+                    // (union keeps the KKT re-admissions — a violator may
+                    // be a safely-screened coordinate flagged at loose
+                    // accuracy) and finish at target tolerance like a
+                    // plain heuristic pipeline.
+                    for (k, &s) in
+                        outcome.group_kept.iter_mut().zip(&safe_mask.group_kept)
+                    {
+                        *k = *k || s;
+                    }
+                    for (k, &s) in
+                        outcome.feature_kept.iter_mut().zip(&safe_mask.feature_kept)
+                    {
+                        *k = *k || s;
+                    }
+                    ws_fallback = true;
+                    tight = true;
+                } else {
+                    // Grow the admitted set geometrically past the
+                    // violators and keep probing at loose tolerance.
+                    self.pipeline.grow(self.groups, &mut outcome, &safe_mask, cfg.ws_growth);
+                    tight = false;
+                }
+            }
             reduced = ReducedProblem::build(self.x, self.groups, &outcome);
         };
-        // Final-mask stats (post re-admission) keep r₁/r₂ honest for
-        // heuristic pipelines too.
-        let stats = if kkt_readmitted > 0 {
+        let ws_rounds = if ws_mode { rounds } else { 0 };
+        let ws_final_size = if ws_mode { active } else { 0 };
+        // Final-mask stats (post re-admission/growth) keep r₁/r₂ honest
+        // for heuristic pipelines too.
+        let stats = if kkt_readmitted > 0 || ws_mode {
             stats_from_masks(self.groups, &outcome.group_kept, &outcome.feature_kept)
         } else {
             outcome.stats.clone()
@@ -824,6 +911,7 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                 &params,
                 None,
                 cfg,
+                cfg.tol,
                 self.spectral.lip,
                 self.spectral.group_l.as_deref(),
                 self.spectral.coloring.as_ref(),
@@ -873,6 +961,8 @@ impl<M: DesignMatrix> PathEngine for TlfreEngine<'_, M> {
                 kkt_readmitted,
                 budget_exhausted,
                 certified_suboptimality: certify(gap),
+                ws_rounds,
+                ws_final_size,
             },
             screen_s,
             solve_s,
@@ -984,6 +1074,8 @@ impl<M: DesignMatrix> PathEngine for BaselineEngine<'_, M> {
             kkt_readmitted: 0,
             budget_exhausted: false,
             certified_suboptimality: 0.0,
+            ws_rounds: 0,
+            ws_final_size: 0,
         }
     }
 
@@ -1004,6 +1096,7 @@ impl<M: DesignMatrix> PathEngine for BaselineEngine<'_, M> {
             &params,
             Some(&self.beta),
             self.cfg,
+            self.cfg.tol,
             self.lip,
             self.group_l.as_deref(),
             self.coloring.as_ref(),
@@ -1032,6 +1125,8 @@ impl<M: DesignMatrix> PathEngine for BaselineEngine<'_, M> {
                 kkt_readmitted: 0,
                 budget_exhausted: res.budget_exhausted,
                 certified_suboptimality: certify(res.gap),
+                ws_rounds: 0,
+                ws_final_size: 0,
             },
             screen_s: 0.0,
             solve_s,

@@ -107,6 +107,18 @@ pub struct SolveControls {
     /// gap-check cadence; bitwise-parity comparisons must leave this
     /// `None` (wall-clock truncation points are machine-dependent).
     pub max_seconds: Option<f64>,
+    /// Round cap for the working-set outer loop (`--screen ws` family):
+    /// once a step has run this many solve rounds without clearing the
+    /// full-problem KKT check, the driver falls back to the full safe
+    /// survivor set — from there the loop degenerates to the plain KKT
+    /// recovery behaviour, so the cap bounds heuristic wandering without
+    /// ever compromising exactness. Ignored by non-working-set pipelines.
+    pub ws_max_rounds: usize,
+    /// Geometric growth factor for the working set on KKT violations
+    /// (celer-style doubling by default). Must be > 1 so growth always
+    /// makes progress toward the safe survivor set. Ignored by
+    /// non-working-set pipelines.
+    pub ws_growth: f64,
 }
 
 impl Default for SolveControls {
@@ -120,6 +132,8 @@ impl Default for SolveControls {
             gap_inflation: 0.0,
             lipschitz_refresh_every: None,
             max_seconds: None,
+            ws_max_rounds: 20,
+            ws_growth: 2.0,
         }
     }
 }
@@ -141,6 +155,12 @@ impl SolveControls {
         if let Some(s) = self.max_seconds {
             assert!(s > 0.0 && s.is_finite(), "max_seconds must be positive, got {s}");
         }
+        assert!(self.ws_max_rounds >= 2, "ws_max_rounds must be ≥ 2");
+        assert!(
+            self.ws_growth > 1.0 && self.ws_growth.is_finite(),
+            "ws_growth must be a finite factor > 1, got {}",
+            self.ws_growth
+        );
     }
 }
 
@@ -184,14 +204,16 @@ pub struct PathConfig {
     /// paper's exact two-layer rule), `tlfre+gap` / `gap` (GAP-safe static
     /// rules plus **dynamic** in-solver screening at gap-check cadence),
     /// `strong+kkt` (the heuristic strong rule guarded by the driver's
-    /// KKT recovery loop), or `none` (pipeline with zero rules — a full
-    /// solve per λ through the same engine). The JSON config key is
-    /// `"screen"`, the CLI flag `--screen`.
+    /// KKT recovery loop), `ws` / `tlfre+ws` / `ws+gap` (celer-style
+    /// working sets under the loose-then-tight outer loop), or `none`
+    /// (pipeline with zero rules — a full solve per λ through the same
+    /// engine). The JSON config key is `"screen"`, the CLI flag
+    /// `--screen`.
     pub screen: ScreenKind,
     /// The shared solve-control knobs (`n_lambda`, `lambda_min_ratio`,
     /// `tol`, `max_iter`, `verify_safety`, `gap_inflation`,
-    /// `lipschitz_refresh_every`, `max_seconds`) — reachable directly via
-    /// `Deref`, e.g. `cfg.tol`.
+    /// `lipschitz_refresh_every`, `max_seconds`, `ws_max_rounds`,
+    /// `ws_growth`) — reachable directly via `Deref`, e.g. `cfg.tol`.
     pub controls: SolveControls,
 }
 
@@ -277,6 +299,14 @@ pub struct PathStep {
     /// the gap evaluation itself went non-finite (poisoned input — the
     /// solve aborts rather than iterate on garbage, see the solver docs).
     pub certified_suboptimality: f64,
+    /// Solve rounds the working-set outer loop ran for this step (loose
+    /// rounds + the final tight round). `0` for non-working-set pipelines.
+    pub ws_rounds: usize,
+    /// Features in the final working set the tight solve ran on (compare
+    /// against [`Self::active_features`]-under-`tlfre` to see how much
+    /// smaller the heuristic set is than the safe survivor set). `0` for
+    /// non-working-set pipelines.
+    pub ws_final_size: usize,
 }
 
 /// Whole-path output.

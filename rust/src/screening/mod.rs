@@ -16,6 +16,9 @@
 //!   all of the above, with an explicit [`rule::Safety`] marker so
 //!   heuristic rules ([`strong_rule`]) always compose with a KKT
 //!   post-check in the driver.
+//! * [`working_set`] — celer-style aggressive working sets: a heuristic
+//!   rule the driver pairs with a loose-then-tight outer loop (grow on
+//!   KKT violations, one tight solve at the end).
 //!
 //! The TLFre/DPC/GAP rules are **exact**: a discarded group/feature is
 //! guaranteed to be zero at the optimum (verified end-to-end by the safety
@@ -32,6 +35,7 @@ pub mod rule;
 pub mod strong_rule;
 pub mod supremum;
 pub mod tlfre;
+pub mod working_set;
 
 pub use dpc::{dpc_screen, DpcOutcome};
 pub use dual_est::{estimate_ball, Ball};
@@ -45,3 +49,4 @@ pub use rule::{
     ScreeningRule, StrongRule, SurvivorMask, TlfreRule,
 };
 pub use tlfre::{tlfre_screen, ScreenStats, TlfreContext, TlfreOutcome};
+pub use working_set::WorkingSetRule;

@@ -19,12 +19,20 @@
 //! | `tlfre+gap` | TLFre, GAP-safe | ✓ | — |
 //! | `gap` | GAP-safe | ✓ | — |
 //! | `strong+kkt` | strong rule | — | ✓ |
+//! | `ws` | working set | — | ✓ (outer loop) |
+//! | `tlfre+ws` | TLFre, working set | — | ✓ (outer loop) |
+//! | `ws+gap` | GAP-safe, working set | final solve only | ✓ (outer loop) |
 //! | `none` | — | — | — |
 //!
 //! The driver runs the KKT-violation recovery loop
 //! ([`crate::screening::strong_rule::kkt_violations`]) whenever *any* rule
 //! in the pipeline is heuristic, so heuristic rules always compose into an
-//! exact path — by construction, not by caller discipline.
+//! exact path — by construction, not by caller discipline. Pipelines
+//! containing a *working-set* rule ([`ScreenPipeline::has_working_set`] via
+//! [`ScreeningRule::is_working_set`]) upgrade that loop to the celer-style
+//! loose-then-tight outer loop: loose solves on the working set, geometric
+//! growth on violation ([`ScreeningRule::grow`]), one tight solve at the
+//! end — see `coordinator/driver.rs` and `screening/working_set.rs`.
 
 use super::gap_safe::gap_sphere_radius;
 use super::lambda_max::LambdaMaxInfo;
@@ -164,6 +172,28 @@ pub trait ScreeningRule<M: DesignMatrix> {
     }
     /// Refine `mask`; return the marginal rejections.
     fn screen(&self, input: &ScreenInput<'_, '_, M>, mask: &mut SurvivorMask) -> LayerCount;
+    /// Whether this rule maintains a growable working set
+    /// ([`crate::screening::working_set::WorkingSetRule`]). The driver runs
+    /// such pipelines through the loose-then-tight outer loop and calls
+    /// [`Self::grow`] on KKT violations instead of re-solving immediately
+    /// at full accuracy.
+    fn is_working_set(&self) -> bool {
+        false
+    }
+    /// Working-set growth hook: admit the next tranche of groups (a
+    /// geometric `growth` factor over the currently admitted prefix) into
+    /// `outcome`, honouring `safe_mask` — a feature a *safe* rule certified
+    /// zero stays rejected. Returns the number of groups newly admitted;
+    /// the default (non-working-set rules) admits nothing.
+    fn grow(
+        &self,
+        _groups: &GroupStructure,
+        _outcome: &mut TlfreOutcome,
+        _safe_mask: &SurvivorMask,
+        _growth: f64,
+    ) -> usize {
+        0
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -319,6 +349,14 @@ pub enum ScreenKind {
     Gap,
     /// Strong-rule heuristic guarded by the KKT recovery loop.
     StrongKkt,
+    /// Celer-style working set alone, grown on KKT violations under the
+    /// driver's loose-then-tight outer loop.
+    Ws,
+    /// TLFre safe screening first, working set inside the survivors.
+    TlfreWs,
+    /// Static GAP-safe screening first, working set inside the survivors;
+    /// dynamic GAP eviction rides only the final tight solve.
+    WsGap,
     /// No screening: the pipeline keeps everything (full solve per λ
     /// through the engine's reduced-problem plumbing — a keep-all view).
     /// For timing-grade no-screening baselines prefer
@@ -336,6 +374,9 @@ impl ScreenKind {
             "tlfre+gap" => Some(ScreenKind::TlfreGap),
             "gap" => Some(ScreenKind::Gap),
             "strong+kkt" => Some(ScreenKind::StrongKkt),
+            "ws" => Some(ScreenKind::Ws),
+            "tlfre+ws" => Some(ScreenKind::TlfreWs),
+            "ws+gap" => Some(ScreenKind::WsGap),
             "none" => Some(ScreenKind::None),
             _ => Option::None,
         }
@@ -347,13 +388,17 @@ impl ScreenKind {
             ScreenKind::TlfreGap => "tlfre+gap",
             ScreenKind::Gap => "gap",
             ScreenKind::StrongKkt => "strong+kkt",
+            ScreenKind::Ws => "ws",
+            ScreenKind::TlfreWs => "tlfre+ws",
+            ScreenKind::WsGap => "ws+gap",
             ScreenKind::None => "none",
         }
     }
 
-    /// Whether this kind turns on in-solver dynamic GAP screening.
+    /// Whether this kind turns on in-solver dynamic GAP screening. For
+    /// `ws+gap` the driver attaches it only to tight solve rounds.
     pub fn dynamic(&self) -> bool {
-        matches!(self, ScreenKind::TlfreGap | ScreenKind::Gap)
+        matches!(self, ScreenKind::TlfreGap | ScreenKind::Gap | ScreenKind::WsGap)
     }
 }
 
@@ -383,6 +428,26 @@ impl<M: DesignMatrix> ScreenPipeline<M> {
             ScreenKind::TlfreGap => (vec![Box::new(TlfreRule), Box::new(GapSafeRule)], true),
             ScreenKind::Gap => (vec![Box::new(GapSafeRule)], true),
             ScreenKind::StrongKkt => (vec![Box::new(StrongRule)], false),
+            // Safe rules come first so `screen_full`'s safe-mask snapshot
+            // (the set working-set growth may re-admit into) is exactly the
+            // safe survivor set.
+            ScreenKind::Ws => {
+                (vec![Box::new(super::working_set::WorkingSetRule::new())], false)
+            }
+            ScreenKind::TlfreWs => (
+                vec![
+                    Box::new(TlfreRule),
+                    Box::new(super::working_set::WorkingSetRule::new()),
+                ],
+                false,
+            ),
+            ScreenKind::WsGap => (
+                vec![
+                    Box::new(GapSafeRule),
+                    Box::new(super::working_set::WorkingSetRule::new()),
+                ],
+                true,
+            ),
             ScreenKind::None => (Vec::new(), false),
         };
         ScreenPipeline { rules, dynamic }
@@ -411,16 +476,57 @@ impl<M: DesignMatrix> ScreenPipeline<M> {
         self.rules.iter().any(|r| r.needs_previous_dual())
     }
 
+    /// Whether some rule maintains a growable working set — the driver then
+    /// runs the loose-then-tight outer loop instead of the plain KKT
+    /// recovery loop.
+    pub fn has_working_set(&self) -> bool {
+        self.rules.iter().any(|r| r.is_working_set())
+    }
+
+    /// Forward a growth request to the working-set rule(s); pipelines
+    /// without one admit nothing and return 0.
+    pub fn grow(
+        &self,
+        groups: &GroupStructure,
+        outcome: &mut TlfreOutcome,
+        safe_mask: &SurvivorMask,
+        growth: f64,
+    ) -> usize {
+        self.rules
+            .iter()
+            .map(|r| r.grow(groups, outcome, safe_mask, growth))
+            .sum()
+    }
+
     /// Run every rule in order over a fresh mask; returns the merged
     /// outcome (stats recomputed from the final masks) and the per-rule
     /// marginal rejection counts.
     pub fn screen(&self, input: &ScreenInput<'_, '_, M>) -> (TlfreOutcome, Vec<LayerCount>) {
+        let (outcome, layers, _) = self.screen_full(input);
+        (outcome, layers)
+    }
+
+    /// [`Self::screen`] that additionally returns the mask as the *safe*
+    /// rules left it, snapshotted just before the first heuristic rule runs
+    /// (the built-in pipelines order safe rules first). The driver's
+    /// working-set outer loop grows into exactly this set, so a feature a
+    /// safe rule certified zero is never re-admitted by growth; for
+    /// all-safe pipelines the snapshot equals the final mask.
+    pub fn screen_full(
+        &self,
+        input: &ScreenInput<'_, '_, M>,
+    ) -> (TlfreOutcome, Vec<LayerCount>, SurvivorMask) {
         let groups = input.prob.groups;
         let mut mask = SurvivorMask::all_kept(groups);
+        let mut safe_mask: Option<SurvivorMask> = Option::None;
         let mut layers = Vec::with_capacity(self.rules.len());
         for rule in &self.rules {
+            if safe_mask.is_none() && rule.safety() == Safety::Heuristic {
+                safe_mask = Some(mask.clone());
+            }
             layers.push(rule.screen(input, &mut mask));
         }
+        let safe_mask = safe_mask.unwrap_or_else(|| mask.clone());
         let stats = stats_from_masks(groups, &mask.group_kept, &mask.feature_kept);
         (
             TlfreOutcome {
@@ -429,6 +535,7 @@ impl<M: DesignMatrix> ScreenPipeline<M> {
                 stats,
             },
             layers,
+            safe_mask,
         )
     }
 }
@@ -589,6 +696,9 @@ mod tests {
             ScreenKind::TlfreGap,
             ScreenKind::Gap,
             ScreenKind::StrongKkt,
+            ScreenKind::Ws,
+            ScreenKind::TlfreWs,
+            ScreenKind::WsGap,
             ScreenKind::None,
         ] {
             assert_eq!(ScreenKind::parse(kind.as_str()), Some(kind));
@@ -597,6 +707,45 @@ mod tests {
         assert_eq!(ScreenKind::default(), ScreenKind::Tlfre);
         assert!(!ScreenKind::Tlfre.dynamic());
         assert!(ScreenKind::TlfreGap.dynamic() && ScreenKind::Gap.dynamic());
+        assert!(ScreenKind::WsGap.dynamic());
+        assert!(!ScreenKind::Ws.dynamic() && !ScreenKind::TlfreWs.dynamic());
+    }
+
+    #[test]
+    fn ws_pipelines_flag_working_set_and_snapshot_safe_mask() {
+        for kind in [ScreenKind::Ws, ScreenKind::TlfreWs, ScreenKind::WsGap] {
+            let pipe: ScreenPipeline<DenseMatrix> = ScreenPipeline::for_kind(kind);
+            assert!(pipe.has_working_set(), "{kind:?} should carry a working set");
+            assert!(!pipe.all_safe(), "{kind:?} must be guarded by the KKT loop");
+        }
+        let safe: ScreenPipeline<DenseMatrix> = ScreenPipeline::for_kind(ScreenKind::TlfreGap);
+        assert!(!safe.has_working_set());
+
+        // The safe-mask snapshot from `tlfre+ws` equals the plain `tlfre`
+        // survivor set (what growth may re-admit into), while the outcome
+        // itself is a subset of it.
+        let (x, y, groups) = setup(914);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let alpha = 1.0;
+        let lmax = sgl_lambda_max(&prob, alpha);
+        let ctx = TlfreContext::precompute(&prob);
+        let lambda = 0.7 * lmax.lambda_max;
+        let bufs = make_bufs(&prob, lmax.lambda_max);
+        let input = first_step_input(&prob, alpha, lambda, &lmax, &ctx, &bufs);
+        let solo: ScreenPipeline<DenseMatrix> = ScreenPipeline::for_kind(ScreenKind::Tlfre);
+        let (tlfre_out, _) = solo.screen(&input);
+        let combo: ScreenPipeline<DenseMatrix> = ScreenPipeline::for_kind(ScreenKind::TlfreWs);
+        let (out, layers, safe_mask) = combo.screen_full(&input);
+        assert_eq!(safe_mask.group_kept, tlfre_out.group_kept);
+        assert_eq!(safe_mask.feature_kept, tlfre_out.feature_kept);
+        assert_eq!(layers.len(), 2);
+        assert_eq!(layers[1].rule, "ws");
+        assert_eq!(layers[1].safety, Safety::Heuristic);
+        for i in 0..prob.n_features() {
+            if out.feature_kept[i] {
+                assert!(safe_mask.feature_kept[i], "ws admitted a safely-screened feature");
+            }
+        }
     }
 
     #[test]

@@ -78,8 +78,25 @@ pub fn kkt_violations<M: DesignMatrix>(
     let n = prob.n_samples();
     let mut r = vec![0.0f32; n];
     crate::sgl::objective::residual(prob, beta, &mut r);
+    kkt_violations_with_resid(prob, params, beta, screened, &r)
+}
+
+/// [`kkt_violations`] with the residual `y − Xβ` supplied by the caller —
+/// the driver's outer loop reuses the solver's final residual
+/// ([`crate::sgl::fista::SolveResult::resid`]), skipping one full matvec
+/// per KKT round. The caller owns the invariant that `resid` matches
+/// `beta`; a reduced solve's residual qualifies, since discarded
+/// coordinates are zero.
+pub fn kkt_violations_with_resid<M: DesignMatrix>(
+    prob: &SglProblem<'_, M>,
+    params: &SglParams,
+    beta: &[f32],
+    screened: &TlfreOutcome,
+    resid: &[f32],
+) -> Vec<usize> {
+    debug_assert_eq!(resid.len(), prob.n_samples());
     let mut c = vec![0.0f32; prob.n_features()];
-    prob.x.matvec_t(&r, &mut c);
+    prob.x.matvec_t(resid, &mut c);
     let mut bad = Vec::new();
     for (g, s, e) in prob.groups.iter() {
         let w = prob.groups.weight(g);
@@ -142,6 +159,7 @@ pub fn solve_with_strong_rule<M: DesignMatrix>(
                 objective: crate::sgl::dual::null_objective(prob.y),
                 converged: true,
                 budget_exhausted: false,
+                resid: prob.y.to_vec(),
             },
             Some(red) => {
                 let rp = SglProblem::new(&red.x, prob.y, &red.groups);

@@ -1,0 +1,355 @@
+//! Celer-style aggressive working sets as a composable screening rule.
+//!
+//! The safe rules (TLFre, GAP) certify zeros, but most of what survives
+//! them *still* ends at zero — the inner solver wastes sweeps on it.
+//! [`WorkingSetRule`] is a [`Safety::Heuristic`] rule that keeps only a
+//! small prioritized subset of the mask-kept groups: the previous step's
+//! support plus the top-scoring groups by strong-rule proximity, computed
+//! from the dual preamble the driver already paid for (`corr_bar` — no
+//! extra matvec). Everything else is rejected *heuristically*; the
+//! driver's outer loop (see `coordinator/driver.rs`) solves on the working
+//! set at a loose tolerance, checks full-problem KKT, grows the set
+//! geometrically on violations via [`ScreeningRule::grow`], and runs one
+//! tight solve at the end. The safe fallback is structural: if the set
+//! grows to all safe survivors, the path degenerates to today's behavior.
+//!
+//! Determinism contract: admission order is a total order — previous
+//! support first (ascending group index), then descending score with
+//! ascending-index tie-break — derived only from `beta_bar`/`corr_bar`,
+//! which are worker-count-invariant and restored bitwise by checkpoint
+//! resume. The rule carries **no cross-step mutable state**: the
+//! [`RefCell`] below is recomputed from scratch at every [`screen`] call,
+//! which is what keeps `EngineSnapshot`/checkpoint resume bitwise
+//! identical with working sets enabled.
+//!
+//! [`screen`]: ScreeningRule::screen
+
+use super::rule::{LayerCount, Safety, ScreenInput, ScreeningRule, SurvivorMask};
+use super::tlfre::TlfreOutcome;
+use crate::groups::GroupStructure;
+use crate::linalg::DesignMatrix;
+use crate::prox::shrink_norm;
+use std::cell::RefCell;
+
+/// Minimum number of groups seeded into a fresh working set (beyond the
+/// previous support) — keeps the first reduced solve from being trivially
+/// small on cold steps near λmax.
+const MIN_SEED_GROUPS: usize = 10;
+
+/// Per-step working-set bookkeeping, rebuilt on every screen call.
+#[derive(Default)]
+struct WsState {
+    /// Mask-kept groups in admission order: previous support, then the
+    /// rest by descending strong-rule score (index-ascending ties).
+    order: Vec<usize>,
+    /// Prefix of `order` currently admitted to the working set.
+    admitted: usize,
+}
+
+/// The heuristic working-set rule. Construct with [`WorkingSetRule::new`]
+/// for the real admission order, or [`WorkingSetRule::adversarial`] for a
+/// deliberately reversed one (test seam for the KKT recovery contract).
+pub struct WorkingSetRule {
+    state: RefCell<WsState>,
+    adversarial: bool,
+}
+
+impl WorkingSetRule {
+    pub fn new() -> WorkingSetRule {
+        WorkingSetRule { state: RefCell::new(WsState::default()), adversarial: false }
+    }
+
+    /// Admission order deliberately reversed — worst-scoring groups first,
+    /// previous support last — so the initial working set is as wrong as
+    /// the scoring allows. The driver's KKT loop must still converge to
+    /// the exact path; `tests/working_set.rs` proves it does.
+    pub fn adversarial() -> WorkingSetRule {
+        WorkingSetRule { state: RefCell::new(WsState::default()), adversarial: true }
+    }
+}
+
+impl Default for WorkingSetRule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<M: DesignMatrix> ScreeningRule<M> for WorkingSetRule {
+    fn name(&self) -> &'static str {
+        "ws"
+    }
+
+    fn safety(&self) -> Safety {
+        Safety::Heuristic
+    }
+
+    fn is_working_set(&self) -> bool {
+        true
+    }
+
+    fn screen(&self, input: &ScreenInput<'_, '_, M>, mask: &mut SurvivorMask) -> LayerCount {
+        let groups = input.prob.groups;
+        // Problem-(3) parameterization: λ₁ = αλ on groups, λ₂ = λ on
+        // features (matches `strong_rule_screen` / `kkt_violations`).
+        let lambda2 = input.lambda;
+        let lambda1 = input.alpha * input.lambda;
+        let mut support: Vec<usize> = Vec::new();
+        let mut scored: Vec<(f64, usize)> = Vec::new();
+        for (g, s, e) in groups.iter() {
+            if !mask.group_kept[g] {
+                continue;
+            }
+            if input.beta_bar[s..e].iter().any(|&v| v != 0.0) {
+                support.push(g);
+            } else {
+                // Strong-rule proximity: how close the group's zero-block
+                // KKT margin ‖S_{λ₂}(c̄_g)‖ is to its bound λ₁·w_g. Finite
+                // by construction (weights are positive).
+                let sc = shrink_norm(&input.corr_bar[s..e], lambda2)
+                    / (lambda1 * groups.weight(g)).max(f64::MIN_POSITIVE);
+                scored.push((sc, g));
+            }
+        }
+        // Descending score, ascending index on ties: a deterministic total
+        // order over finite scores.
+        scored.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        });
+        let support_n = support.len();
+        let mut order = support;
+        order.extend(scored.iter().map(|&(_, g)| g));
+        if self.adversarial {
+            order.reverse();
+        }
+        let admitted = order.len().min(support_n.max(MIN_SEED_GROUPS));
+        let mut g_new = 0usize;
+        let mut f_new = 0usize;
+        for &g in &order[admitted..] {
+            mask.group_kept[g] = false;
+            g_new += 1;
+            let (s, e) = groups.range(g);
+            for k in mask.feature_kept[s..e].iter_mut() {
+                if *k {
+                    *k = false;
+                    f_new += 1;
+                }
+            }
+        }
+        *self.state.borrow_mut() = WsState { order, admitted };
+        LayerCount { rule: "ws", safety: Safety::Heuristic, groups: g_new, features: f_new }
+    }
+
+    fn grow(
+        &self,
+        groups: &GroupStructure,
+        outcome: &mut TlfreOutcome,
+        safe_mask: &SurvivorMask,
+        growth: f64,
+    ) -> usize {
+        let mut st = self.state.borrow_mut();
+        // Geometric doubling (configurable factor), always admitting at
+        // least one more group so growth can never stall below the cap.
+        let target = ((st.admitted as f64 * growth).ceil() as usize)
+            .max(st.admitted + 1)
+            .min(st.order.len());
+        let mut added = 0usize;
+        for &g in &st.order[st.admitted..target] {
+            if !outcome.group_kept[g] {
+                outcome.group_kept[g] = true;
+                added += 1;
+                let (s, e) = groups.range(g);
+                for i in s..e {
+                    // Never re-admit a feature a safe rule certified zero.
+                    if safe_mask.feature_kept[i] {
+                        outcome.feature_kept[i] = true;
+                    }
+                }
+            }
+        }
+        st.admitted = target;
+        added
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::DenseMatrix;
+    use crate::screening::lambda_max::sgl_lambda_max;
+    use crate::screening::rule::stats_from_masks;
+    use crate::screening::tlfre::TlfreContext;
+    use crate::sgl::problem::SglProblem;
+    use crate::util::Rng;
+
+    fn setup(seed: u64) -> (DenseMatrix, Vec<f32>, GroupStructure) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let n = 30;
+        let p = 96;
+        let x = DenseMatrix::from_fn(n, p, |_, _| rng.gaussian() as f32);
+        let groups = GroupStructure::uniform(p, 16);
+        let mut beta = vec![0.0f32; p];
+        for j in 0..5 {
+            beta[j * 11 % p] = rng.normal(0.0, 1.0) as f32;
+        }
+        let mut y = vec![0.0f32; n];
+        x.matvec(&beta, &mut y);
+        (x, y, groups)
+    }
+
+    #[test]
+    fn seeds_support_plus_top_scores_and_growth_is_monotone() {
+        // 24 groups of 4; previous support in group 8 (features 32, 33).
+        let (x, y, _) = setup(417);
+        let groups = GroupStructure::uniform(96, 4);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let lmax = sgl_lambda_max(&prob, 1.0);
+        let ctx = TlfreContext::precompute(&prob);
+        let mut beta_bar = vec![0.0f32; 96];
+        beta_bar[32] = 0.5;
+        beta_bar[33] = -0.25;
+        let mut resid = vec![0.0f32; y.len()];
+        crate::sgl::objective::residual(&prob, &beta_bar, &mut resid);
+        let mut corr = vec![0.0f32; 96];
+        prob.x.matvec_t(&resid, &mut corr);
+        let theta: Vec<f32> =
+            resid.iter().map(|&v| (v as f64 / lmax.lambda_max) as f32).collect();
+        let inp = ScreenInput {
+            prob: &prob,
+            alpha: 1.0,
+            lambda: 0.4 * lmax.lambda_max,
+            lambda_bar: lmax.lambda_max,
+            beta_bar: &beta_bar,
+            resid_bar: &resid,
+            corr_bar: &corr,
+            theta_bar: &theta,
+            gap_bar: 0.0,
+            lmax: &lmax,
+            ctx: &ctx,
+        };
+        let rule = WorkingSetRule::new();
+        let mut mask = SurvivorMask::all_kept(&groups);
+        let layer = ScreeningRule::<DenseMatrix>::screen(&rule, &inp, &mut mask);
+        assert_eq!(layer.rule, "ws");
+        assert_eq!(layer.safety, Safety::Heuristic);
+        // Support group always admitted; seed truncates the rest.
+        assert!(mask.group_kept[8], "previous-support group was screened out");
+        assert_eq!(layer.groups, 24 - MIN_SEED_GROUPS);
+
+        // Growth honours the safe mask and is monotone kept-wise.
+        let safe_mask = SurvivorMask::all_kept(&groups);
+        let mut outcome = TlfreOutcome {
+            group_kept: mask.group_kept.clone(),
+            feature_kept: mask.feature_kept.clone(),
+            stats: stats_from_masks(&groups, &mask.group_kept, &mask.feature_kept),
+        };
+        let before: usize = outcome.group_kept.iter().filter(|&&k| k).count();
+        let added =
+            ScreeningRule::<DenseMatrix>::grow(&rule, &groups, &mut outcome, &safe_mask, 2.0);
+        assert!(added > 0);
+        let after: usize = outcome.group_kept.iter().filter(|&&k| k).count();
+        assert_eq!(after, before + added);
+        for i in 0..96 {
+            if mask.feature_kept[i] {
+                assert!(outcome.feature_kept[i], "growth un-kept feature {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn admission_truncates_and_grows_to_cap() {
+        // 24 groups of 4 (p=96, group size 4): MIN_SEED_GROUPS=10 < 24, so
+        // a cold start must heuristically reject 14 groups, and repeated
+        // doubling must reach the full set.
+        let (x, y, _) = setup(418);
+        let groups = GroupStructure::uniform(96, 4);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let lmax = sgl_lambda_max(&prob, 1.0);
+        let ctx = TlfreContext::precompute(&prob);
+        let beta_bar = vec![0.0f32; 96];
+        let resid = y.clone();
+        let mut corr = vec![0.0f32; 96];
+        prob.x.matvec_t(&resid, &mut corr);
+        let theta: Vec<f32> =
+            resid.iter().map(|&v| (v as f64 / lmax.lambda_max) as f32).collect();
+        let inp = ScreenInput {
+            prob: &prob,
+            alpha: 1.0,
+            lambda: 0.5 * lmax.lambda_max,
+            lambda_bar: lmax.lambda_max,
+            beta_bar: &beta_bar,
+            resid_bar: &resid,
+            corr_bar: &corr,
+            theta_bar: &theta,
+            gap_bar: 0.0,
+            lmax: &lmax,
+            ctx: &ctx,
+        };
+        let rule = WorkingSetRule::new();
+        let mut mask = SurvivorMask::all_kept(&groups);
+        let layer = ScreeningRule::<DenseMatrix>::screen(&rule, &inp, &mut mask);
+        assert_eq!(layer.groups, 24 - MIN_SEED_GROUPS);
+        assert_eq!(layer.features, (24 - MIN_SEED_GROUPS) * 4);
+
+        let safe_mask = SurvivorMask::all_kept(&groups);
+        let mut outcome = TlfreOutcome {
+            group_kept: mask.group_kept.clone(),
+            feature_kept: mask.feature_kept.clone(),
+            stats: stats_from_masks(&groups, &mask.group_kept, &mask.feature_kept),
+        };
+        let mut rounds = 0;
+        while outcome.group_kept.iter().any(|&k| !k) {
+            let added = ScreeningRule::<DenseMatrix>::grow(
+                &rule, &groups, &mut outcome, &safe_mask, 2.0,
+            );
+            assert!(added > 0, "growth stalled before reaching the cap");
+            rounds += 1;
+            assert!(rounds < 10, "growth failed to reach all survivors");
+        }
+        // Further growth at the cap is a no-op.
+        assert_eq!(
+            ScreeningRule::<DenseMatrix>::grow(&rule, &groups, &mut outcome, &safe_mask, 2.0),
+            0
+        );
+    }
+
+    #[test]
+    fn adversarial_order_is_reversed_but_same_set_family() {
+        let (x, y, _) = setup(419);
+        let groups = GroupStructure::uniform(96, 4);
+        let prob = SglProblem::new(&x, &y, &groups);
+        let lmax = sgl_lambda_max(&prob, 1.0);
+        let ctx = TlfreContext::precompute(&prob);
+        let beta_bar = vec![0.0f32; 96];
+        let resid = y.clone();
+        let mut corr = vec![0.0f32; 96];
+        prob.x.matvec_t(&resid, &mut corr);
+        let theta: Vec<f32> =
+            resid.iter().map(|&v| (v as f64 / lmax.lambda_max) as f32).collect();
+        let inp = ScreenInput {
+            prob: &prob,
+            alpha: 1.0,
+            lambda: 0.5 * lmax.lambda_max,
+            lambda_bar: lmax.lambda_max,
+            beta_bar: &beta_bar,
+            resid_bar: &resid,
+            corr_bar: &corr,
+            theta_bar: &theta,
+            gap_bar: 0.0,
+            lmax: &lmax,
+            ctx: &ctx,
+        };
+        let real = WorkingSetRule::new();
+        let adv = WorkingSetRule::adversarial();
+        let mut m_real = SurvivorMask::all_kept(&groups);
+        let mut m_adv = SurvivorMask::all_kept(&groups);
+        ScreeningRule::<DenseMatrix>::screen(&real, &inp, &mut m_real);
+        ScreeningRule::<DenseMatrix>::screen(&adv, &inp, &mut m_adv);
+        // Same admitted count, disjoint-leaning membership (reversed order):
+        // the adversarial seed must differ from the real one.
+        assert_eq!(
+            m_real.group_kept.iter().filter(|&&k| k).count(),
+            m_adv.group_kept.iter().filter(|&&k| k).count()
+        );
+        assert_ne!(m_real.group_kept, m_adv.group_kept);
+    }
+}

@@ -380,7 +380,7 @@ impl SolveRequest {
                     req.screen = ScreenKind::parse(s).with_context(|| {
                         format!(
                             "unknown screen pipeline '{s}' \
-                             (tlfre|tlfre+gap|gap|strong+kkt|none)"
+                             (tlfre|tlfre+gap|gap|strong+kkt|ws|tlfre+ws|ws+gap|none)"
                         )
                     })?;
                 }
@@ -470,7 +470,7 @@ impl SolveRequest {
         let c = &self.controls;
         format!(
             "{}|alpha={:016x}|solver={}|screen={}|pbcd={}|nl={}|ratio={:016x}|tol={:016x}\
-             |mi={}|vs={}|gi={:016x}|lre={:?}|ms={:?}",
+             |mi={}|vs={}|gi={:016x}|lre={:?}|ms={:?}|wsr={}|wsg={:016x}",
             self.dataset.as_ref().map(DatasetSpec::key).unwrap_or_default(),
             self.alpha.to_bits(),
             self.solver.as_str(),
@@ -484,6 +484,8 @@ impl SolveRequest {
             c.gap_inflation.to_bits(),
             c.lipschitz_refresh_every,
             c.max_seconds.map(f64::to_bits),
+            c.ws_max_rounds,
+            c.ws_growth.to_bits(),
         )
     }
 }
@@ -754,6 +756,20 @@ mod tests {
         let back = SolveRequest::parse(&req.to_json().to_string_pretty()).unwrap();
         assert_eq!(req, back);
         assert_eq!(req.cache_key(), back.cache_key());
+        // Working-set pipelines and their knobs ride the same wire schema.
+        req.screen = ScreenKind::Ws;
+        req.controls.ws_max_rounds = 9;
+        req.controls.ws_growth = 1.5;
+        let back = SolveRequest::parse(&req.to_json().to_string_pretty()).unwrap();
+        assert_eq!(req, back);
+        assert_eq!(back.screen, ScreenKind::Ws);
+        for kind in ["ws", "tlfre+ws", "ws+gap"] {
+            let txt = format!(
+                r#"{{"v": 1, "kind": "solve-path", "screen": "{kind}",
+                   "dataset": {{"name": "synthetic1"}}}}"#
+            );
+            assert!(SolveRequest::parse(&txt).is_ok(), "{kind} must parse");
+        }
     }
 
     #[test]
@@ -792,6 +808,12 @@ mod tests {
         // Control-key validation flows through the shared parse path.
         let bad = format!(r#"{{"v": 1, "kind": "solve-path", {ds}, "lambda_min_ratio": 2.0}}"#);
         assert!(SolveRequest::parse(&bad).is_err());
+        let bad = format!(r#"{{"v": 1, "kind": "solve-path", {ds}, "ws_growth": 0.5}}"#);
+        assert!(SolveRequest::parse(&bad).is_err());
+        // An unknown screen kind stays a typed error naming the pipeline.
+        let bad = format!(r#"{{"v": 1, "kind": "solve-path", {ds}, "screen": "magic"}}"#);
+        let err = format!("{:#}", SolveRequest::parse(&bad).unwrap_err());
+        assert!(err.contains("unknown screen pipeline 'magic'"), "{err}");
         // stats/shutdown need no dataset.
         assert!(SolveRequest::parse(r#"{"v": 1, "kind": "stats"}"#).is_ok());
         assert!(SolveRequest::parse(r#"{"v": 1, "kind": "shutdown"}"#).is_ok());
@@ -810,6 +832,14 @@ mod tests {
         assert_ne!(a.cache_key(), b.cache_key());
         b = a.clone();
         b.dataset.as_mut().unwrap().seed += 1;
+        assert_ne!(a.cache_key(), b.cache_key());
+        // Working-set knobs change the iterate trajectory (loose rounds
+        // warm-start the tight solve), so they separate cache lines too.
+        b = a.clone();
+        b.controls.ws_max_rounds += 1;
+        assert_ne!(a.cache_key(), b.cache_key());
+        b = a.clone();
+        b.controls.ws_growth *= 1.0 + f64::EPSILON; // 1-ulp apart
         assert_ne!(a.cache_key(), b.cache_key());
         // A point request at the same config shares the path's cache line.
         let mut p = a.clone();

@@ -514,7 +514,15 @@ pub fn solve_bcd<M: DesignMatrix>(
     residual(prob, &beta, &mut r);
     let objective = objective_with_residual(prob, params, &beta, &r).total();
     let budget_exhausted = deadline_hit || (!converged && sweeps == opts.max_sweeps);
-    super::fista::SolveResult { beta, iters: sweeps, gap, objective, converged, budget_exhausted }
+    super::fista::SolveResult {
+        beta,
+        iters: sweeps,
+        gap,
+        objective,
+        converged,
+        budget_exhausted,
+        resid: r,
+    }
 }
 
 /// Mutable state of a dynamic-screening BCD solve, shared across epochs.
@@ -742,11 +750,12 @@ fn solve_bcd_dynamic<M: DesignMatrix>(
     for (k, &j) in cols.iter().enumerate() {
         full[j] = core.beta[k];
     }
-    let objective = if all_zero {
-        null_objective(prob.y)
+    let (objective, resid) = if all_zero {
+        (null_objective(prob.y), prob.y.to_vec())
     } else {
         residual(prob, &full, &mut core.r);
-        objective_with_residual(prob, params, &full, &core.r).total()
+        let obj = objective_with_residual(prob, params, &full, &core.r).total();
+        (obj, core.r)
     };
     super::fista::SolveResult {
         beta: full,
@@ -756,6 +765,7 @@ fn solve_bcd_dynamic<M: DesignMatrix>(
         converged: core.converged,
         budget_exhausted: core.deadline_hit
             || (!core.converged && core.sweeps == opts.max_sweeps),
+        resid,
     }
 }
 

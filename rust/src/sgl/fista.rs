@@ -103,6 +103,12 @@ pub struct SolveResult {
     /// iterate and `gap` its last measured (certified) suboptimality;
     /// never garbage.
     pub budget_exhausted: bool,
+    /// Final residual `y − Xβ` for the returned `beta`, in the problem the
+    /// solver was given. For a reduced problem this equals the full-space
+    /// residual (discarded coordinates are zero), which lets the driver's
+    /// per-round KKT post-checks skip the residual matvec
+    /// ([`crate::screening::strong_rule::kkt_violations_with_resid`]).
+    pub resid: Vec<f32>,
 }
 
 /// Lipschitz constant of the smooth part: `‖X‖₂²`.
@@ -280,7 +286,9 @@ pub fn solve_fista<M: DesignMatrix>(
         }
     };
     let budget_exhausted = deadline_hit || (!converged && iters == opts.max_iter);
-    SolveResult { beta, iters, gap, objective, converged, budget_exhausted }
+    // Every exit path above leaves `r` holding the residual at the final β
+    // (the gap check computed it, or the `checked_obj: None` branch did).
+    SolveResult { beta, iters, gap, objective, converged, budget_exhausted, resid: r }
 }
 
 /// Mutable state of a dynamic-screening FISTA solve, shared across
@@ -465,6 +473,7 @@ fn solve_fista_dynamic<M: DesignMatrix>(
                 core.gap = 0.0;
                 core.converged = true;
                 core.objective = Some(null_objective(prob.y));
+                core.r.copy_from_slice(prob.y);
                 break;
             }
         }
@@ -481,12 +490,19 @@ fn solve_fista_dynamic<M: DesignMatrix>(
     for (k, &j) in cols.iter().enumerate() {
         full[j] = core.beta[k];
     }
-    let objective = core.objective.unwrap_or_else(|| {
-        // Degenerate max_iter == 0: no check ever ran.
-        let mut rr = vec![0.0f32; n];
-        super::objective::residual(prob, &full, &mut rr);
-        objective_with_residual(prob, params, &full, &rr).total()
-    });
+    // `core.r` was recomputed at the last gap check of the final epoch (or
+    // reset to y when everything was evicted), so it is the residual at the
+    // scattered `full`; only the degenerate no-check case recomputes.
+    let (objective, resid) = match core.objective {
+        Some(o) => (o, core.r),
+        None => {
+            // Degenerate max_iter == 0: no check ever ran.
+            let mut rr = vec![0.0f32; n];
+            super::objective::residual(prob, &full, &mut rr);
+            let o = objective_with_residual(prob, params, &full, &rr).total();
+            (o, rr)
+        }
+    };
     SolveResult {
         beta: full,
         iters: core.iters,
@@ -495,6 +511,7 @@ fn solve_fista_dynamic<M: DesignMatrix>(
         converged: core.converged,
         budget_exhausted: core.deadline_hit
             || (!core.converged && core.iters == opts.max_iter),
+        resid,
     }
 }
 

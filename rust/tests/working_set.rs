@@ -1,0 +1,171 @@
+//! End-to-end tests for the celer-style working-set outer loop
+//! (`--screen ws` family):
+//!
+//! * **exactness** — `ws`, `tlfre+ws`, and `ws+gap` paths must match the
+//!   no-screening baseline's and `tlfre+gap`'s final supports at every λ
+//!   on the dense *and* CSC backends, with gap-bounded objectives (runs
+//!   under the CI `TLFRE_THREADS ∈ {1,2,4,8}` matrix, which covers the
+//!   acceptance thread sweep);
+//! * **counters** — ws pipelines report `ws_rounds ≥ 1` and a nonzero
+//!   final set size per step; non-ws pipelines report zeros;
+//! * **adversarial recovery** — a working-set rule seeded in the WORST
+//!   order (support admitted last) must still converge to the exact path
+//!   through KKT-violation-driven growth alone.
+
+use tlfre::coordinator::{
+    drive_tlfre_path_with_pipeline, run_tlfre_path, CoefficientSink, PathConfig, SolveControls,
+    StepSink,
+};
+use tlfre::data::synthetic::{
+    generate_sparse_synthetic, generate_synthetic, SparseSyntheticSpec, SyntheticSpec,
+};
+use tlfre::linalg::DesignMatrix;
+use tlfre::screening::{ScreenKind, ScreenPipeline, WorkingSetRule};
+
+use tlfre::screening::same_support_at_resolution as same_support;
+
+fn cfg(screen: ScreenKind) -> PathConfig {
+    PathConfig {
+        alpha: 1.0,
+        screen,
+        controls: SolveControls {
+            n_lambda: 10,
+            lambda_min_ratio: 0.05,
+            tol: 1e-6,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn path_betas<M: DesignMatrix>(
+    x: &M,
+    y: &[f32],
+    groups: &tlfre::groups::GroupStructure,
+    c: &PathConfig,
+) -> Vec<Vec<f32>> {
+    tlfre::coordinator::path_coefficients(x, y, groups, c)
+}
+
+/// Supports equal at every λ and objectives within the summed duality
+/// gaps — the working-set safety contract against a reference pipeline.
+fn assert_path_matches<M: DesignMatrix>(
+    x: &M,
+    y: &[f32],
+    groups: &tlfre::groups::GroupStructure,
+    screen: ScreenKind,
+    reference: ScreenKind,
+    backend: &str,
+) {
+    use tlfre::sgl::{SglParams, SglProblem};
+    let ws_cfg = cfg(screen);
+    let ref_cfg = cfg(reference);
+    let sa = run_tlfre_path(x, y, groups, &ws_cfg);
+    let sb = run_tlfre_path(x, y, groups, &ref_cfg);
+    let a = path_betas(x, y, groups, &ws_cfg);
+    let b = path_betas(x, y, groups, &ref_cfg);
+    assert_eq!(a.len(), b.len());
+    let prob = SglProblem::new(x, y, groups);
+    let mut r = vec![0.0f32; y.len()];
+    for li in 0..a.len() {
+        assert!(
+            same_support(&a[li], &b[li]),
+            "{backend}/{screen:?} vs {reference:?}: support diverged at λ index {li}"
+        );
+        // Both solves end within their own duality gap of the shared
+        // optimum, so objectives differ by at most the summed gaps (plus
+        // f32 objective-evaluation noise).
+        let params = SglParams::from_alpha_lambda(ws_cfg.alpha, sa.steps[li].lambda);
+        tlfre::sgl::objective::residual(&prob, &a[li], &mut r);
+        let pa =
+            tlfre::sgl::objective::objective_with_residual(&prob, &params, &a[li], &r).total();
+        tlfre::sgl::objective::residual(&prob, &b[li], &mut r);
+        let pb =
+            tlfre::sgl::objective::objective_with_residual(&prob, &params, &b[li], &r).total();
+        let noise = 1e-5 * pa.abs().max(pb.abs()).max(1.0);
+        let budget = sa.steps[li].gap + sb.steps[li].gap + noise;
+        assert!(
+            (pa - pb).abs() <= budget,
+            "{backend}/{screen:?} λ index {li}: objectives {pa} vs {pb} differ beyond \
+             the gap budget {budget}"
+        );
+    }
+}
+
+#[test]
+fn working_set_paths_match_baseline_and_safe_pipelines_dense() {
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 160, 16), 3041);
+    for screen in [ScreenKind::Ws, ScreenKind::TlfreWs, ScreenKind::WsGap] {
+        assert_path_matches(&ds.x, &ds.y, &ds.groups, screen, ScreenKind::None, "dense");
+        assert_path_matches(&ds.x, &ds.y, &ds.groups, screen, ScreenKind::TlfreGap, "dense");
+    }
+}
+
+#[test]
+fn working_set_paths_match_baseline_and_safe_pipelines_csc() {
+    let ds = generate_sparse_synthetic(&SparseSyntheticSpec::new(40, 160, 16, 0.2), 3042);
+    for screen in [ScreenKind::Ws, ScreenKind::TlfreWs, ScreenKind::WsGap] {
+        assert_path_matches(&ds.x, &ds.y, &ds.groups, screen, ScreenKind::None, "csc");
+        assert_path_matches(&ds.x, &ds.y, &ds.groups, screen, ScreenKind::TlfreGap, "csc");
+    }
+}
+
+#[test]
+fn ws_round_counters_are_reported_and_zero_elsewhere() {
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 160, 16), 3043);
+    let out = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg(ScreenKind::TlfreWs));
+    // Every post-λmax step ran the outer loop at least once (one loose
+    // round + the tight finish ⇒ ≥ 2 when any violation fired, ≥ 1 when
+    // the seed was already KKT-clean) and solved a nonempty final set.
+    for (li, s) in out.steps.iter().enumerate().skip(1) {
+        assert!(s.ws_rounds >= 1, "λ index {li}: ws_rounds = {}", s.ws_rounds);
+        // The final solved set always covers the support (an all-zero
+        // step may legitimately have an empty set under tlfre+ws).
+        assert!(
+            s.ws_final_size >= s.nonzeros,
+            "λ index {li}: final set {} smaller than the support {}",
+            s.ws_final_size,
+            s.nonzeros
+        );
+    }
+    assert!(
+        out.steps.iter().any(|s| s.ws_final_size > 0),
+        "the working set never held a feature along the whole path"
+    );
+    // Non-ws pipelines leave both counters at zero.
+    let plain = run_tlfre_path(&ds.x, &ds.y, &ds.groups, &cfg(ScreenKind::TlfreGap));
+    assert!(plain.steps.iter().all(|s| s.ws_rounds == 0 && s.ws_final_size == 0));
+}
+
+#[test]
+fn adversarial_seed_order_is_recovered_by_kkt_growth() {
+    // The adversarial rule reverses the admission order: the known
+    // support and the highest-scored groups are admitted LAST, so the
+    // initial working set is maximally wrong. Only the KKT-violation
+    // growth loop (and, past the round cap, the safe-fallback union) can
+    // make this path exact.
+    let ds = generate_synthetic(&SyntheticSpec::synthetic1_scaled(30, 120, 12), 3044);
+    let c = {
+        let mut c = cfg(ScreenKind::Ws);
+        // A tight round cap forces the safe-fallback path to fire too.
+        c.ws_max_rounds = 3;
+        c
+    };
+    let pipeline =
+        ScreenPipeline::new(vec![Box::new(WorkingSetRule::adversarial())], false);
+    assert!(pipeline.has_working_set());
+    let mut steps = StepSink::new();
+    drive_tlfre_path_with_pipeline(&ds.x, &ds.y, &ds.groups, &c, pipeline, &mut steps);
+    let readmitted: usize = steps.steps.iter().map(|s| s.kkt_readmitted).sum();
+    assert!(readmitted > 0, "the adversarial seed never tripped a KKT violation");
+    // The recovered path matches the exact TLFre walk support-for-support.
+    let pipeline =
+        ScreenPipeline::new(vec![Box::new(WorkingSetRule::adversarial())], false);
+    let mut sink = CoefficientSink::new();
+    drive_tlfre_path_with_pipeline(&ds.x, &ds.y, &ds.groups, &c, pipeline, &mut sink);
+    let reference = path_betas(&ds.x, &ds.y, &ds.groups, &cfg(ScreenKind::Tlfre));
+    assert_eq!(sink.betas.len(), reference.len());
+    for (li, (ba, bb)) in sink.betas.iter().zip(&reference).enumerate() {
+        assert!(same_support(ba, bb), "adversarial ws left a wrong support at λ {li}");
+    }
+}
